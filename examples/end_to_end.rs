@@ -1,0 +1,104 @@
+//! End-to-end driver: the full three-layer system on a real (small)
+//! workload, proving all layers compose.
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end:
+//!
+//! 1. loads the **AOT artifacts** produced by `make artifacts` (Layer 1
+//!    Pallas kernels inside Layer 2 JAX graphs, compiled via PJRT) — this
+//!    example *requires* the artifact backend, it does not fall back;
+//! 2. runs the paper's headline experiment (Fig 7: Flink WordCount,
+//!    two-period sine) with all four approaches at paper scale (6 h
+//!    simulated, override with DURATION/SEEDS);
+//! 3. runs the §4.8 validation pass on the same backend;
+//! 4. prints the paper-vs-measured summary.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! DURATION=21600 SEEDS=1,2,3,4,5 cargo run --release --example end_to_end
+//! ```
+
+use daedalus::autoscaler::DaedalusConfig;
+use daedalus::dsp::EngineProfile;
+use daedalus::experiments::harness::{Approach, Experiment};
+use daedalus::experiments::{export, report, validate};
+use daedalus::jobs::JobProfile;
+use daedalus::runtime::ComputeBackend;
+use daedalus::workload::SineWorkload;
+
+fn main() -> daedalus::Result<()> {
+    // Layer check: artifacts must load and execute.
+    let backend = ComputeBackend::artifact("artifacts")
+        .map_err(|e| anyhow::anyhow!("end_to_end requires `make artifacts` first: {e}"))?;
+    let meta = backend.meta().clone();
+    let t0 = std::time::Instant::now();
+    let fc = backend.forecast(&vec![10_000.0f32; meta.window])?;
+    println!(
+        "[layer check] forecast artifact: {} steps in {:?} (PJRT CPU)",
+        fc.forecast.len(),
+        t0.elapsed()
+    );
+
+    let duration: u64 = std::env::var("DURATION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(21_600);
+    let seeds: Vec<u64> = std::env::var("SEEDS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![1, 2, 3]);
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+
+    println!(
+        "[experiment] Fig-7 protocol: wordcount/flink, {duration} s, seeds {seeds:?}"
+    );
+    let t0 = std::time::Instant::now();
+    let exp = Experiment::paper(
+        "end-to-end",
+        EngineProfile::flink(),
+        job,
+        backend.clone(),
+        duration,
+    )
+    .with_seeds(seeds)
+    .with_approaches(vec![
+        Approach::Daedalus(DaedalusConfig::default()),
+        Approach::Hpa(0.80),
+        Approach::Hpa(0.85),
+        Approach::Static(12),
+    ]);
+    let res = exp.run(&move |_| Box::new(SineWorkload::paper_default(peak, duration)));
+    println!("[experiment] done in {:?}\n", t0.elapsed());
+
+    println!("{}", report::summary_table(&res, "static-12"));
+    println!("{}", report::reduction_lines(&res, "daedalus"));
+
+    // Paper-vs-measured for the headline claims.
+    let d = res.approach("daedalus").unwrap();
+    let s = res.approach("static-12").unwrap();
+    let h80 = res.approach("hpa-80").unwrap();
+    println!("paper (Fig 7 / §4.5.1)       vs  measured");
+    println!(
+        "  -55% vs static               {:+.0}%",
+        (d.worker_seconds / s.worker_seconds - 1.0) * 100.0
+    );
+    println!(
+        "  -31% vs HPA-80               {:+.0}%",
+        (d.worker_seconds / h80.worker_seconds - 1.0) * 100.0
+    );
+    println!(
+        "  latencies comparable         daedalus {:.1}s vs hpa-80 {:.1}s vs static {:.1}s",
+        d.avg_latency_ms() / 1e3,
+        h80.avg_latency_ms() / 1e3,
+        s.avg_latency_ms() / 1e3
+    );
+
+    let dir = export::write_experiment(&res, "results")?;
+    println!("\nCSVs in {}", dir.display());
+
+    // §4.8 validation on the artifact backend.
+    println!("\n[validate] §4.8 pass ({} s)", duration.min(10_800));
+    let v = validate::run(backend, duration.min(10_800), 1)?;
+    println!("{}", v.report());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Daedalus vs Phoebe (paper Fig 11 / §4.7): YSB on a sine workload with a
+//! maximum scale-out of 18 and a 600 s recovery-time target.
+//!
+//! Phoebe first runs profiling jobs at several scale-outs (failure
+//! injection included) to build its QoS models; that resource cost is
+//! reported separately, as in the paper's "when incorporating profiling
+//! time" accounting.
+//!
+//! ```sh
+//! cargo run --release --example phoebe_comparison
+//! DURATION=21600 cargo run --release --example phoebe_comparison
+//! ```
+
+use daedalus::autoscaler::{DaedalusConfig, PhoebeConfig};
+use daedalus::dsp::EngineProfile;
+use daedalus::experiments::harness::{Approach, Experiment};
+use daedalus::experiments::{export, report};
+use daedalus::jobs::JobProfile;
+use daedalus::runtime::ComputeBackend;
+use daedalus::workload::SineWorkload;
+
+fn main() -> daedalus::Result<()> {
+    let backend = ComputeBackend::artifact("artifacts").unwrap_or_else(|e| {
+        eprintln!("note: using native backend ({e})");
+        ComputeBackend::native()
+    });
+    let duration: u64 = std::env::var("DURATION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_800);
+    let job = JobProfile::ysb();
+    let peak = job.reference_peak;
+
+    let mut exp = Experiment::paper(
+        "phoebe-comparison",
+        EngineProfile::flink(),
+        job,
+        backend,
+        duration,
+    )
+    .with_approaches(vec![
+        Approach::Daedalus(DaedalusConfig::default()),
+        Approach::Phoebe(PhoebeConfig::default(), vec![2, 4, 6, 9, 12, 15, 18]),
+    ]);
+    exp.max_replicas = 18;
+    let res = exp.run(&move |_| Box::new(SineWorkload::paper_default(peak, duration)));
+
+    println!("{}", report::summary_table(&res, "daedalus"));
+    let (d, p) = (
+        res.approach("daedalus").unwrap(),
+        res.approach("phoebe").unwrap(),
+    );
+    println!(
+        "resource usage:    daedalus {:.0} ws | phoebe {:.0} ws (+{:.0} ws profiling)",
+        d.worker_seconds, p.worker_seconds, p.profiling_worker_seconds
+    );
+    println!(
+        "daedalus vs phoebe: {:.0}% less resources (excl. profiling), {:.0}% less (incl.)",
+        (1.0 - d.worker_seconds / p.worker_seconds) * 100.0,
+        (1.0 - d.total_worker_seconds() / p.total_worker_seconds()) * 100.0,
+    );
+    println!(
+        "max latency:       daedalus {:.1} s | phoebe {:.1} s (recovery target 600 s)",
+        d.latencies.max() / 1e3,
+        p.latencies.max() / 1e3
+    );
+    let dir = export::write_experiment(&res, "results")?;
+    println!("CSVs in {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: autoscale one simulated Flink WordCount job with Daedalus.
+//!
+//! ```sh
+//! make artifacts            # AOT-compile the Layer-1/2 graphs (once)
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Runs a 1-hour sine workload, prints the MAPE-K decisions as they happen
+//! and a final summary. Uses the AOT artifacts when available, otherwise
+//! the native mirror.
+
+use daedalus::autoscaler::{Autoscaler, Daedalus, DaedalusConfig};
+use daedalus::dsp::{EngineProfile, SimConfig, Simulation};
+use daedalus::jobs::JobProfile;
+use daedalus::runtime::ComputeBackend;
+use daedalus::workload::SineWorkload;
+
+fn main() -> daedalus::Result<()> {
+    let backend = ComputeBackend::artifact("artifacts").unwrap_or_else(|e| {
+        eprintln!("note: using native backend ({e})");
+        ComputeBackend::native()
+    });
+
+    let job = JobProfile::wordcount();
+    let duration = 3_600;
+    let cfg = SimConfig::paper(
+        EngineProfile::flink(),
+        job.clone(),
+        Box::new(SineWorkload::paper_default(job.reference_peak, duration)),
+    );
+    let mut sim = Simulation::new(cfg);
+    let mut daedalus = Daedalus::new(DaedalusConfig::default(), backend);
+
+    println!("t      workload   parallelism  action");
+    for t in 0..duration {
+        sim.step(t);
+        if let Some(n) = daedalus.decide(&sim.view()) {
+            let ev = sim.request_rescale(n);
+            if let Some(ev) = ev {
+                println!(
+                    "{:<6} {:>8.0}   {:>3} -> {:<3}   rescale ({}s downtime)",
+                    t,
+                    sim.tsdb()
+                        .last_at(&daedalus::metrics::SeriesId::global("workload_rate"), t)
+                        .map(|(_, v)| v)
+                        .unwrap_or(0.0),
+                    ev.from,
+                    ev.to,
+                    ev.downtime_secs.round()
+                );
+            }
+        }
+    }
+
+    let mut lat = sim.latencies().clone();
+    println!("\nsummary after {duration} s:");
+    println!("  avg workers      : {:.2}", sim.avg_workers());
+    println!("  rescales         : {}", sim.rescale_log.len());
+    println!("  avg latency      : {:.0} ms", lat.mean());
+    println!("  p95 latency      : {:.0} ms", lat.quantile(0.95));
+    println!("  final backlog    : {:.0} tuples", sim.total_backlog());
+    let k = daedalus.knowledge();
+    println!(
+        "  capacity ledger  : {:?}",
+        k.seen_capacity
+            .iter()
+            .map(|(n, c)| (*n, *c as u64))
+            .collect::<std::collections::BTreeMap<_, _>>()
+    );
+    println!("  forecaster WAPEs : {} measured, median {:.1}%", k.wape_history.len(), {
+        let mut w = k.wape_history.clone();
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if w.is_empty() { 0.0 } else { w[w.len() / 2] * 100.0 }
+    });
+    Ok(())
+}

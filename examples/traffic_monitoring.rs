@@ -1,0 +1,55 @@
+//! Traffic Monitoring comparison (paper Fig 9): the double-spike IoT trace
+//! is the hardest case — the workload rises and falls faster than a
+//! threshold scaler can follow.
+//!
+//! ```sh
+//! cargo run --release --example traffic_monitoring
+//! DURATION=21600 cargo run --release --example traffic_monitoring
+//! ```
+
+use daedalus::autoscaler::DaedalusConfig;
+use daedalus::dsp::EngineProfile;
+use daedalus::experiments::harness::{Approach, Experiment};
+use daedalus::experiments::{export, report};
+use daedalus::jobs::JobProfile;
+use daedalus::runtime::ComputeBackend;
+use daedalus::workload::TrafficWorkload;
+
+fn main() -> daedalus::Result<()> {
+    let backend = ComputeBackend::artifact("artifacts").unwrap_or_else(|e| {
+        eprintln!("note: using native backend ({e})");
+        ComputeBackend::native()
+    });
+    let duration: u64 = std::env::var("DURATION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5_400);
+    let job = JobProfile::traffic();
+    let peak = job.reference_peak;
+
+    let exp = Experiment::paper(
+        "traffic-flink",
+        EngineProfile::flink(),
+        job,
+        backend,
+        duration,
+    )
+    .with_approaches(vec![
+        Approach::Daedalus(DaedalusConfig::default()),
+        Approach::Hpa(0.80),
+        Approach::Hpa(0.85),
+        Approach::Static(12),
+    ]);
+    let res = exp.run(&move |seed| Box::new(TrafficWorkload::new(peak, duration, seed)));
+
+    println!("{}", report::summary_table(&res, "static-12"));
+    println!("{}", report::reduction_lines(&res, "daedalus"));
+
+    // How well did each approach ride the spikes? Report the peak backlog.
+    for a in &res.approaches {
+        println!("{:<10} max consumer lag: {:.0} tuples", a.name, a.lag_max);
+    }
+    let dir = export::write_experiment(&res, "results")?;
+    println!("CSVs in {}", dir.display());
+    Ok(())
+}

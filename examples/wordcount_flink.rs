@@ -1,0 +1,62 @@
+//! Flink WordCount comparison (paper Fig 7): Daedalus vs HPA-80/85 vs
+//! Static-12 on the two-period sine workload.
+//!
+//! ```sh
+//! cargo run --release --example wordcount_flink            # quick (90 min)
+//! DURATION=21600 SEEDS=1,2,3,4,5 cargo run --release --example wordcount_flink
+//! ```
+
+use daedalus::autoscaler::DaedalusConfig;
+use daedalus::dsp::EngineProfile;
+use daedalus::experiments::harness::{Approach, Experiment};
+use daedalus::experiments::{export, report};
+use daedalus::jobs::JobProfile;
+use daedalus::runtime::ComputeBackend;
+use daedalus::workload::SineWorkload;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_seeds(default: Vec<u64>) -> Vec<u64> {
+    std::env::var("SEEDS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or(default)
+}
+
+fn main() -> daedalus::Result<()> {
+    let backend = ComputeBackend::artifact("artifacts").unwrap_or_else(|e| {
+        eprintln!("note: using native backend ({e})");
+        ComputeBackend::native()
+    });
+    let duration = env_u64("DURATION", 5_400);
+    let seeds = env_seeds(vec![1]);
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+
+    let exp = Experiment::paper(
+        "wordcount-flink",
+        EngineProfile::flink(),
+        job,
+        backend,
+        duration,
+    )
+    .with_seeds(seeds)
+    .with_approaches(vec![
+        Approach::Daedalus(DaedalusConfig::default()),
+        Approach::Hpa(0.80),
+        Approach::Hpa(0.85),
+        Approach::Static(12),
+    ]);
+    let res = exp.run(&move |_| Box::new(SineWorkload::paper_default(peak, duration)));
+
+    println!("{}", report::summary_table(&res, "static-12"));
+    println!("{}", report::reduction_lines(&res, "daedalus"));
+    let dir = export::write_experiment(&res, "results")?;
+    println!("CSVs in {}", dir.display());
+    Ok(())
+}

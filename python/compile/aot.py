@@ -1,0 +1,127 @@
+"""AOT-lower the Layer-2 graphs to HLO text + golden vectors.
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  capacity.hlo.txt   — capacity_update(state, xs, ys, mask, cpu_target)
+  forecast.hlo.txt   — forecast(history)
+  meta.json          — static shapes the Rust runtime asserts against
+  golden/*.json      — input/output vectors for the Rust integration tests
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jittable fn to XLA HLO text via stablehlo (0.5.1-safe path)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _golden_capacity(rng):
+    """Deterministic capacity_update test vector (inputs + expected)."""
+    mw, b = model.MAX_WORKERS, model.OBS_BLOCK
+    state = np.zeros((mw, 5), np.float32)
+    # Pre-seed a few workers with prior observations via the model itself so
+    # the golden case covers warm state too.
+    xs = rng.uniform(0.2, 0.95, (mw, b)).astype(np.float32)
+    slope_true = rng.uniform(40e3, 80e3, (mw, 1)).astype(np.float32)
+    ys = (xs * slope_true + rng.normal(0, 200, (mw, b))).astype(np.float32)
+    mask = (rng.uniform(size=(mw, b)) < 0.8).astype(np.float32)
+    mask[:3] = 1.0  # ensure some fully-observed workers
+    mask[3] = 0.0  # and one empty worker
+    cpu_target = rng.uniform(0.7, 1.0, (mw,)).astype(np.float32)
+    new_state, caps = jax.jit(model.capacity_update)(
+        jnp.asarray(state), jnp.asarray(xs), jnp.asarray(ys),
+        jnp.asarray(mask), jnp.asarray(cpu_target),
+    )
+    return {
+        "state": state.ravel().tolist(),
+        "xs": xs.ravel().tolist(),
+        "ys": ys.ravel().tolist(),
+        "mask": mask.ravel().tolist(),
+        "cpu_target": cpu_target.ravel().tolist(),
+        "expect_state": np.asarray(new_state).ravel().tolist(),
+        "expect_caps": np.asarray(caps).ravel().tolist(),
+    }
+
+
+def _golden_forecast(rng):
+    """Deterministic forecast test vector (inputs + expected)."""
+    t = np.arange(model.WINDOW, dtype=np.float32)
+    history = (
+        40_000.0
+        + 15_000.0 * np.sin(2 * np.pi * t / 1200.0)
+        + rng.normal(0, 300.0, model.WINDOW)
+    ).astype(np.float32)
+    fc, coeffs, resid = jax.jit(model.forecast)(jnp.asarray(history))
+    return {
+        "history": history.ravel().tolist(),
+        "expect_forecast": np.asarray(fc).ravel().tolist(),
+        "expect_coeffs": np.asarray(coeffs).ravel().tolist(),
+        "expect_resid_sigma": float(resid),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "golden"), exist_ok=True)
+
+    cap_hlo = to_hlo_text(model.capacity_update, model.capacity_example_args())
+    with open(os.path.join(out, "capacity.hlo.txt"), "w") as f:
+        f.write(cap_hlo)
+    print(f"capacity.hlo.txt: {len(cap_hlo)} chars")
+
+    fc_hlo = to_hlo_text(model.forecast, model.forecast_example_args())
+    with open(os.path.join(out, "forecast.hlo.txt"), "w") as f:
+        f.write(fc_hlo)
+    print(f"forecast.hlo.txt: {len(fc_hlo)} chars")
+
+    meta = {
+        "max_workers": model.MAX_WORKERS,
+        "obs_block": model.OBS_BLOCK,
+        "window": model.WINDOW,
+        "horizon": model.HORIZON,
+        "ar_order": model.AR_ORDER,
+        "ar_lags": list(model.AR_LAGS),
+        "max_lag": max(model.AR_LAGS),
+        "ridge_lam": model.RIDGE_LAM,
+        "cg_iters": model.CG_ITERS,
+        "state_width": 5,
+    }
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+    rng = np.random.default_rng(20240507)
+    with open(os.path.join(out, "golden", "capacity.json"), "w") as f:
+        json.dump(_golden_capacity(rng), f)
+    with open(os.path.join(out, "golden", "forecast.json"), "w") as f:
+        json.dump(_golden_forecast(rng), f)
+    print("golden vectors written")
+
+
+if __name__ == "__main__":
+    main()

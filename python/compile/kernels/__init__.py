@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the Daedalus analyze-phase hot path.
+
+Two kernels, both lowered with ``interpret=True`` so the HLO they produce is
+plain-op HLO executable on the CPU PJRT client (see /opt/xla-example/README):
+
+* :mod:`lag_gram` — tiled Gram-matrix accumulation ``(XᵀX, Xᵀy)`` over the
+  AR lag matrix of the differenced workload series. This is the numeric
+  hot-spot of the per-loop forecast fit.
+* :mod:`welford_batch` — batched one-pass Welford fold of (cpu, throughput)
+  observations into per-worker regression state.
+
+``ref`` holds the pure-jnp oracles the pytest/hypothesis suite compares
+against.
+"""
+
+from .lag_gram import lag_gram, BM, ensure_padded
+from .welford_batch import welford_batch, STATE_WIDTH
+
+__all__ = ["lag_gram", "BM", "ensure_padded", "welford_batch", "STATE_WIDTH"]

@@ -1,0 +1,88 @@
+"""Tiled Gram-matrix Pallas kernel: ``G = XᵀX``, ``b = Xᵀy``.
+
+``X`` is the AR(p) lag (design) matrix of the differenced workload series and
+``y`` the one-step-ahead targets. Fitting the AR model reduces to the normal
+equations ``G a = b``; building ``G`` and ``b`` is the only O(M·p²) work in
+the forecaster and therefore the hot-spot worth a kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks the M axis
+in ``BM``-row tiles, each tile is DMA'd HBM→VMEM by the BlockSpec machinery,
+the ``BM×p`` · ``p×BM`` products hit the MXU, and the tiny ``p×p`` / ``1×p``
+accumulators stay resident in VMEM across all grid steps (revisiting output
+blocks accumulates in place). On CPU we run ``interpret=True`` only — the
+lowered HLO is what the Rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the lag matrix processed per grid step. 128 matches the MXU
+# systolic edge; the VMEM footprint per step is BM·p + p·p + BM + p floats.
+BM = 128
+
+
+def ensure_padded(m: int) -> int:
+    """Smallest multiple of ``BM`` that is >= ``m`` (zero rows are Gram-neutral)."""
+    return ((m + BM - 1) // BM) * BM
+
+
+def _gram_kernel(x_ref, y_ref, g_ref, b_ref):
+    """One grid step: fold a BM-row tile of (X, y) into the accumulators."""
+    step = pl.program_id(0)
+
+    # First visit to the (only) output block: zero the accumulators.
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    x = x_ref[...]  # [BM, p]
+    y = y_ref[...]  # [1, BM]
+    # MXU work: (p×BM)·(BM×p) and (1×BM)·(BM×p).
+    g_ref[...] += jnp.dot(x.T, x, preferred_element_type=g_ref.dtype)
+    b_ref[...] += jnp.dot(y, x, preferred_element_type=b_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lag_gram(x: jax.Array, y: jax.Array, *, interpret: bool = True):
+    """Compute ``(XᵀX, Xᵀy)`` for ``x: [Mp, p]``, ``y: [Mp]``.
+
+    ``Mp`` must be a multiple of :data:`BM` (pad with zero rows — they do not
+    perturb either product). Returns ``(g [p, p], b [p])`` in float32.
+    """
+    mp, p = x.shape
+    if mp % BM != 0:
+        raise ValueError(f"Mp={mp} must be a multiple of BM={BM}")
+    if y.shape != (mp,):
+        raise ValueError(f"y must have shape ({mp},), got {y.shape}")
+    # dtype-generic: float32 on the TPU/MXU path, float64 when the caller
+    # needs bit-stable normal equations (the AOT forecast graph does — the
+    # 900-step rollout amplifies f32 reduction-order differences between
+    # PJRT runtimes).
+    dtype = x.dtype
+    y2 = y.astype(dtype).reshape(1, mp)
+
+    grid = (mp // BM,)
+    g, b = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, p), lambda i: (i, 0)),
+            pl.BlockSpec((1, BM), lambda i: (0, i)),
+        ],
+        out_specs=[
+            # Every grid step maps to the same output block → in-place
+            # accumulation in VMEM, written back to HBM once at the end.
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, p), dtype),
+            jax.ShapeDtypeStruct((1, p), dtype),
+        ],
+        interpret=interpret,
+    )(x, y2)
+    return g, b.reshape(p)

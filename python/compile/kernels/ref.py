@@ -1,0 +1,114 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the specification: slow, obvious implementations of exactly the
+same math. The pytest + hypothesis suite asserts the kernels match these to
+float32 tolerance across shapes, and the AOT test asserts the *lowered HLO*
+(what the Rust runtime actually executes) matches them too.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_gram(x, y):
+    """Oracle for :func:`..lag_gram.lag_gram` — plain dense products."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    return x.T @ x, x.T @ y
+
+
+def ref_welford(state, xs, ys, mask):
+    """Oracle for :func:`..welford_batch.welford_batch` — python-loop fold."""
+    state = np.array(state, dtype=np.float64)
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+    mw, b = xs.shape
+    for w in range(mw):
+        n, mean_x, mean_y, m2x, cxy = state[w]
+        for i in range(b):
+            if mask[w, i] == 0.0:
+                continue
+            x, y = xs[w, i], ys[w, i]
+            n += 1.0
+            dx = x - mean_x
+            dy = y - mean_y
+            mean_x += dx / n
+            mean_y += dy / n
+            m2x += dx * (x - mean_x)
+            cxy += dx * (y - mean_y)
+        state[w] = (n, mean_x, mean_y, m2x, cxy)
+    return state.astype(np.float32)
+
+
+def ref_capacity(state, cpu_target, eps=1e-6):
+    """Oracle for the capacity prediction head in model.capacity_update.
+
+    slope = c_xy / m2_x; capacity = mean_y + slope · (cpu_target − mean_x).
+    Workers with fewer than 2 observations or degenerate x-variance fall back
+    to the paper's simple division estimate throughput/CPU · cpu_target; a
+    worker with no observations predicts 0.
+    """
+    state = np.asarray(state, dtype=np.float64)
+    cpu_target = np.asarray(cpu_target, dtype=np.float64)
+    n, mean_x, mean_y, m2x, _cxy = state.T
+    slope = state[:, 4] / np.maximum(m2x, eps)
+    regression = mean_y + slope * (cpu_target - mean_x)
+    simple = mean_y / np.maximum(mean_x, eps) * cpu_target
+    # Mirrors model.VAR_MIN: regression only with real CPU variance and a
+    # positive slope.
+    use_reg = (n >= 2.0) & (m2x > n * 1e-4) & (slope > 0.0)
+    caps = np.where(use_reg, regression, simple)
+    caps = np.where(n == 0.0, 0.0, caps)
+    return np.maximum(caps, 0.0).astype(np.float32)
+
+
+def ref_ar_fit(d, lags, lam):
+    """Oracle subset-AR ridge fit on a (standardized) differenced series.
+
+    Returns the coefficient vector ``a`` solving
+    ``(XᵀX + λ·(tr(XᵀX)/p + 1)·I) a = Xᵀy`` — identical regularization to the
+    compiled forecaster. Column j of X is the series lagged by ``lags[j]``.
+    """
+    d = np.asarray(d, dtype=np.float64)
+    lags = list(lags)
+    p = len(lags)
+    maxlag = max(lags)
+    m = d.shape[0] - maxlag
+    x = np.stack([d[maxlag - l : maxlag - l + m] for l in lags], axis=1)
+    y = d[maxlag:]
+    g = x.T @ x
+    b = x.T @ y
+    ridge = lam * (np.trace(g) / p + 1.0)
+    return np.linalg.solve(g + ridge * np.eye(p), b)
+
+
+def ref_forecast(history, lags, horizon, lam):
+    """End-to-end oracle for model.forecast: subset-ARI(p,1) fit + rollout.
+
+    Mirrors the compiled graph step by step (standardize diffs, ridge AR fit,
+    scan rollout, cumulative un-difference) with float64 numpy.
+    """
+    h = np.asarray(history, dtype=np.float64)
+    lags = list(lags)
+    maxlag = max(lags)
+    d = np.diff(h)
+    mu = d.mean()
+    sigma = np.sqrt(d.var() + 1e-6)
+    z = (d - mu) / sigma
+    a = ref_ar_fit(z, lags, lam)
+    # Stability guard (mirrors model.MAX_COEF_L1).
+    l1 = np.abs(a).sum()
+    a = a * min(1.0, 4.0 / max(l1, 1e-6))
+    # state: most recent maxlag standardized diffs, state[0] = newest.
+    state = z[::-1][:maxlag].copy()
+    preds = np.empty(horizon)
+    for t in range(horizon):
+        nxt = float(sum(a[j] * state[l - 1] for j, l in enumerate(lags)))
+        preds[t] = nxt
+        state = np.concatenate([[nxt], state[:-1]])
+    diffs = preds * sigma + mu
+    fc = h[-1] + np.cumsum(diffs)
+    # Physical envelope (mirrors model.CLIP_FACTOR).
+    fc = np.clip(fc, 0.0, 8.0 * np.abs(h).max())
+    return fc.astype(np.float32)

@@ -1,0 +1,101 @@
+"""Batched Welford regression-state update as a Pallas kernel.
+
+Daedalus maintains, per worker, the running statistics needed for the simple
+linear regression between CPU utilization (x) and throughput (y):
+
+    state = [n, mean_x, mean_y, m2_x, c_xy]
+
+where ``m2_x`` is the sum of squared deviations of x and ``c_xy`` the sum of
+co-deviations — Welford's one-pass, numerically stable formulation (paper
+§3.1, citing Welford 1962). Slope = c_xy / m2_x, intercept = mean_y −
+slope·mean_x, and the capacity prediction at a desired CPU follows.
+
+This kernel folds a block of ``B`` masked observations per worker into the
+state for all ``MAX_W`` workers at once. The sequential fold over ``B`` is
+inherent (Welford is a left fold); the parallelism is across workers, which
+is VPU-friendly element-wise work. Everything fits in VMEM trivially.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Columns of the per-worker state row: n, mean_x, mean_y, m2_x, c_xy.
+STATE_WIDTH = 5
+
+
+def _welford_kernel(state_ref, xs_ref, ys_ref, mask_ref, out_ref):
+    """Fold B masked (x, y) observations into every worker's state."""
+    n = state_ref[:, 0]
+    mean_x = state_ref[:, 1]
+    mean_y = state_ref[:, 2]
+    m2x = state_ref[:, 3]
+    cxy = state_ref[:, 4]
+
+    b = xs_ref.shape[1]
+
+    def body(i, carry):
+        n, mean_x, mean_y, m2x, cxy = carry
+        m = mask_ref[:, i]
+        x = xs_ref[:, i]
+        y = ys_ref[:, i]
+        n_new = n + m
+        # Guard div-by-zero for fully-masked workers; m=0 rows keep carry.
+        denom = jnp.maximum(n_new, 1.0)
+        dx = x - mean_x
+        dy = y - mean_y
+        mean_x_new = mean_x + m * dx / denom
+        mean_y_new = mean_y + m * dy / denom
+        # Welford cross/self products use the *updated* mean for one factor.
+        m2x_new = m2x + m * dx * (x - mean_x_new)
+        cxy_new = cxy + m * dx * (y - mean_y_new)
+        return (n_new, mean_x_new, mean_y_new, m2x_new, cxy_new)
+
+    n, mean_x, mean_y, m2x, cxy = jax.lax.fori_loop(
+        0, b, body, (n, mean_x, mean_y, m2x, cxy)
+    )
+    out_ref[:, 0] = n
+    out_ref[:, 1] = mean_x
+    out_ref[:, 2] = mean_y
+    out_ref[:, 3] = m2x
+    out_ref[:, 4] = cxy
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def welford_batch(
+    state: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    mask: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fold ``B`` observations per worker into the regression state.
+
+    Args:
+      state: ``[MAX_W, 5]`` float32 — rows ``(n, mean_x, mean_y, m2_x, c_xy)``.
+      xs, ys: ``[MAX_W, B]`` float32 observations (CPU, throughput).
+      mask:   ``[MAX_W, B]`` float32, 1.0 = valid, 0.0 = padding.
+
+    Returns the updated ``[MAX_W, 5]`` state.
+    """
+    mw, width = state.shape
+    if width != STATE_WIDTH:
+        raise ValueError(f"state width must be {STATE_WIDTH}, got {width}")
+    if xs.shape != ys.shape or xs.shape != mask.shape or xs.shape[0] != mw:
+        raise ValueError(
+            f"shape mismatch: state {state.shape} xs {xs.shape} "
+            f"ys {ys.shape} mask {mask.shape}"
+        )
+    state = state.astype(jnp.float32)
+    xs = xs.astype(jnp.float32)
+    ys = ys.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    return pl.pallas_call(
+        _welford_kernel,
+        out_shape=jax.ShapeDtypeStruct((mw, STATE_WIDTH), jnp.float32),
+        interpret=interpret,
+    )(state, xs, ys, mask)

@@ -1,0 +1,228 @@
+"""Layer-2 JAX compute graphs for Daedalus' analyze phase.
+
+Two jitted functions, both calling the Layer-1 Pallas kernels, both AOT-lowered
+once by :mod:`.aot` to HLO text that the Rust coordinator executes via PJRT on
+every MAPE-K iteration. Python never runs at decision time.
+
+* :func:`capacity_update` — fold a block of per-worker (CPU, throughput)
+  observations into the Welford regression state and predict each worker's
+  capacity at a per-worker target CPU utilization (paper §3.1).
+* :func:`forecast` — ARI(p,1) workload forecaster: difference the history,
+  ridge-fit an AR(p) via the lag-Gram kernel + conjugate gradients, roll the
+  model ``HORIZON`` steps out with ``lax.scan``, and un-difference (paper
+  §3.3; the ARIMA class per Gontarska et al. [11]). Forecast-quality gating
+  (WAPE), the linear fallback, and retraining live in Rust (Layer 3) — they
+  are control flow, not compute.
+
+All shapes are static; the Rust side loads them from ``artifacts/meta.json``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lag_gram, welford_batch, ensure_padded
+
+# The AR fit + rollout runs in float64: the 24×24 normal-equation solve and
+# the 900-step recursive rollout amplify float32 rounding enough to make
+# jaxlib-executed and xla_extension-executed graphs visibly diverge. The
+# Pallas Gram kernel stays float32 (the MXU path); only the tiny solve is
+# promoted.
+jax.config.update("jax_enable_x64", True)
+
+# ---------------------------------------------------------------------------
+# Static shape configuration (mirrored into artifacts/meta.json by aot.py).
+# ---------------------------------------------------------------------------
+
+#: Maximum workers the capacity model tracks (paper scales to 18 for Phoebe).
+MAX_WORKERS = 32
+#: Observations folded per capacity_update call (one MAPE-K iteration).
+OBS_BLOCK = 16
+#: Workload history window fed to the forecaster (seconds, 30 min).
+WINDOW = 1800
+#: Forecast horizon (seconds) — paper: 15 minutes at second granularity.
+HORIZON = 900
+#: Subset-AR lag offsets (seconds) on the differenced series. Dense short
+#: lags capture noise structure; the geometric tail (up to 6 min) captures
+#: curvature of slow workload cycles — a dense AR(24) only spans 24 s and
+#: degenerates to linear trend extrapolation on 30-min-period workloads.
+AR_LAGS = (1, 2, 3, 4, 5, 6, 8, 10, 13, 16, 20, 25, 30, 40, 50, 60,
+           80, 100, 130, 160, 200, 250, 300, 360)
+#: Number of AR coefficients.
+AR_ORDER = len(AR_LAGS)
+#: Ridge regularization strength for the AR fit.
+RIDGE_LAM = 1e-3
+#: Conjugate-gradient iterations: CG on the 24×24 ridge-regularized system
+#: reaches machine precision by ~iteration 20 (measured); 24 is safety.
+#: Perf: 48→24 cut the forecast artifact execute time (see EXPERIMENTS §Perf).
+CG_ITERS = 24
+#: Stability guards. Well-behaved fits have Σ|aⱼ| ∈ [1.1, 3.3] (measured on
+#: sine/noisy/noise-only workloads); MAX_COEF_L1 only reins in pathologically
+#: unstable fits. CLIP_FACTOR bounds the output forecast to a physical
+#: envelope — [0, CLIP_FACTOR · max|history|] — so even a bad fit cannot
+#: emit absurd rates (the WAPE gate in Layer 3 then swaps in the fallback).
+MAX_COEF_L1 = 4.0
+CLIP_FACTOR = 8.0
+
+_EPS = 1e-6
+#: Minimum per-observation CPU variance for the regression head to be used
+#: (below this the CPU signal is measurement noise, not workload variation).
+VAR_MIN = 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Capacity model
+# ---------------------------------------------------------------------------
+
+def capacity_update(state, xs, ys, mask, cpu_target):
+    """Update per-worker regression state and predict capacities.
+
+    Args:
+      state: ``[MAX_WORKERS, 5]`` Welford rows ``(n, mean_x, mean_y, m2x, cxy)``.
+      xs, ys, mask: ``[MAX_WORKERS, OBS_BLOCK]`` CPU / throughput / validity.
+      cpu_target: ``[MAX_WORKERS]`` CPU level to predict capacity at — the
+        skew-aware expected maximum CPU of each worker (proportional to the
+        hottest worker, paper §3.1 / Fig 4).
+
+    Returns ``(new_state [MAX_WORKERS,5], capacities [MAX_WORKERS])``.
+    """
+    new_state = welford_batch(state, xs, ys, mask)
+    n = new_state[:, 0]
+    mean_x = new_state[:, 1]
+    mean_y = new_state[:, 2]
+    m2x = new_state[:, 3]
+    cxy = new_state[:, 4]
+
+    slope = cxy / jnp.maximum(m2x, _EPS)
+    regression = mean_y + slope * (cpu_target - mean_x)
+    # The regression is only trustworthy when the CPU observations actually
+    # vary (a constant workload gives noise-only variance and garbage — even
+    # negative — slopes). Below VAR_MIN CPU variance, or with a non-positive
+    # slope, fall back to the paper's quick estimate throughput/CPU · target.
+    simple = mean_y / jnp.maximum(mean_x, _EPS) * cpu_target
+    use_reg = (n >= 2.0) & (m2x > n * VAR_MIN) & (slope > 0.0)
+    caps = jnp.where(use_reg, regression, simple)
+    caps = jnp.where(n == 0.0, 0.0, caps)
+    return new_state, jnp.maximum(caps, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Forecaster
+# ---------------------------------------------------------------------------
+
+def _lag_matrix(d, lags):
+    """Subset-AR design matrix: row i, col j = d[maxlag + i − lags[j]].
+
+    Built from *static* strided slices, not a gather: the pinned
+    xla_extension 0.5.1 CPU runtime miscompiles the gather this would
+    otherwise lower to (observed empirically — XᵀX/Xᵀy came out misaligned),
+    while slice/concatenate round-trip exactly.
+    """
+    maxlag = int(max(AR_LAGS))
+    m = d.shape[0] - maxlag
+    cols = [d[maxlag - l : maxlag - l + m] for l in lags]
+    return jnp.stack(cols, axis=1), d[maxlag:]
+
+
+def _cg_solve(a_mat, b, iters):
+    """Fixed-iteration conjugate gradients for SPD ``a_mat x = b``.
+
+    Avoids LAPACK custom-calls that the pinned xla_extension 0.5.1 CPU
+    runtime cannot execute; plain HLO while-loop instead.
+    """
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    p0 = r0
+    rs0 = jnp.dot(r0, r0)
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = a_mat @ p
+        alpha = rs / jnp.maximum(jnp.dot(p, ap), _EPS)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.maximum(rs, _EPS)
+        p = r + beta * p
+        return (x, r, p, rs_new)
+
+    x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x0, r0, p0, rs0))
+    return x
+
+
+def forecast(history):
+    """ARI(p,1) forecast of the next ``HORIZON`` seconds of workload.
+
+    Args:
+      history: ``[WINDOW]`` float32 workload samples (tuples/s, 1 s apart,
+        oldest first). Short histories are left-padded by the caller.
+
+    Returns:
+      ``(forecast [HORIZON], coeffs [AR_ORDER], resid_sigma [])`` — the
+      forecast in absolute tuples/s, the fitted AR coefficients, and the
+      one-step in-sample residual σ (Rust uses it for diagnostics).
+    """
+    # Everything from the diff onward runs in float64: the normal-equation
+    # solve and the recursive rollout amplify float32 reduction-ordering
+    # differences between PJRT runtimes into visible forecast divergence.
+    h = history.astype(jnp.float64)
+    d = jnp.diff(h)  # [WINDOW-1]
+
+    # Standardize the differenced series so ridge strength is scale-free.
+    mu = jnp.mean(d)
+    sigma = jnp.sqrt(jnp.var(d) + _EPS)
+    z = (d - mu) / sigma
+
+    p = AR_ORDER
+    maxlag = int(max(AR_LAGS))
+    x, y = _lag_matrix(z, AR_LAGS)  # [M, p], [M]
+    m = x.shape[0]
+    mp = ensure_padded(m)
+    x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    y = jnp.pad(y, (0, mp - m))
+
+    g, b = lag_gram(x, y)  # L1 kernel: XᵀX, Xᵀy (f64 here, see above)
+    ridge = RIDGE_LAM * (jnp.trace(g) / p + 1.0)
+    coeffs = _cg_solve(g + ridge * jnp.eye(p, dtype=jnp.float64), b, CG_ITERS)
+
+    # Stability guard (see MAX_COEF_L1).
+    l1 = jnp.sum(jnp.abs(coeffs))
+    coeffs = coeffs * jnp.minimum(1.0, MAX_COEF_L1 / jnp.maximum(l1, _EPS))
+
+    # In-sample one-step residual σ (standardized units → absolute).
+    resid = y - x @ coeffs
+    resid_sigma = jnp.sqrt(jnp.sum(resid**2) / jnp.maximum(m - p, 1)) * sigma
+
+    # Roll out HORIZON steps; state[i] is the diff at t−(i+1) (newest first).
+    # Static slices instead of a lag-index gather (see _lag_matrix).
+    state0 = z[::-1][:maxlag]
+
+    def step(state, _):
+        terms = jnp.stack([state[l - 1] for l in AR_LAGS])
+        nxt = jnp.dot(coeffs, terms)
+        state = jnp.concatenate([nxt[None], state[:-1]])
+        return state, nxt
+
+    _, preds = jax.lax.scan(step, state0, None, length=HORIZON)
+    diffs = preds * sigma + mu
+    fc = h[-1] + jnp.cumsum(diffs)
+    # Physical envelope (see CLIP_FACTOR).
+    hi = CLIP_FACTOR * jnp.max(jnp.abs(h))
+    fc = jnp.clip(fc, 0.0, hi)
+    return fc.astype(jnp.float32), coeffs.astype(jnp.float32), resid_sigma.astype(jnp.float32)
+
+
+def capacity_example_args():
+    """ShapeDtypeStructs for lowering :func:`capacity_update`."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((MAX_WORKERS, 5), f32),
+        jax.ShapeDtypeStruct((MAX_WORKERS, OBS_BLOCK), f32),
+        jax.ShapeDtypeStruct((MAX_WORKERS, OBS_BLOCK), f32),
+        jax.ShapeDtypeStruct((MAX_WORKERS, OBS_BLOCK), f32),
+        jax.ShapeDtypeStruct((MAX_WORKERS,), f32),
+    )
+
+
+def forecast_example_args():
+    """ShapeDtypeStructs for lowering :func:`forecast`."""
+    return (jax.ShapeDtypeStruct((WINDOW,), jnp.float32),)

@@ -1,0 +1,111 @@
+"""AOT path: the lowered HLO text is valid, stable, and golden vectors agree.
+
+These tests exercise exactly what the Rust runtime consumes: lower the Layer-2
+graphs through the same stablehlo→XlaComputation→HLO-text path as aot.py and
+check structure + re-derivable goldens.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_capacity_lowers_to_hlo_text(self):
+        text = aot.to_hlo_text(model.capacity_update, model.capacity_example_args())
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # No TPU Mosaic custom-calls may survive (interpret=True requirement).
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()
+
+    def test_forecast_lowers_to_hlo_text(self):
+        text = aot.to_hlo_text(model.forecast, model.forecast_example_args())
+        assert "HloModule" in text
+        # scan + fori_loop become HLO while loops.
+        assert "while" in text
+        assert "tpu_custom_call" not in text
+        # No LAPACK custom-calls either — xla_extension 0.5.1 cannot run them.
+        assert "lapack" not in text.lower()
+
+    def test_lowering_is_deterministic(self):
+        a = aot.to_hlo_text(model.capacity_update, model.capacity_example_args())
+        b = aot.to_hlo_text(model.capacity_update, model.capacity_example_args())
+        assert a == b
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts` first")
+class TestArtifacts:
+    def test_meta_matches_model_constants(self):
+        with open(os.path.join(ART, "meta.json")) as f:
+            meta = json.load(f)
+        assert meta["max_workers"] == model.MAX_WORKERS
+        assert meta["obs_block"] == model.OBS_BLOCK
+        assert meta["window"] == model.WINDOW
+        assert meta["horizon"] == model.HORIZON
+        assert meta["ar_order"] == model.AR_ORDER
+
+    def test_capacity_golden_reproduces(self):
+        with open(os.path.join(ART, "golden", "capacity.json")) as f:
+            g = json.load(f)
+        mw, b = model.MAX_WORKERS, model.OBS_BLOCK
+        state = np.array(g["state"], np.float32).reshape(mw, 5)
+        xs = np.array(g["xs"], np.float32).reshape(mw, b)
+        ys = np.array(g["ys"], np.float32).reshape(mw, b)
+        mask = np.array(g["mask"], np.float32).reshape(mw, b)
+        tgt = np.array(g["cpu_target"], np.float32)
+        new_state, caps = jax.jit(model.capacity_update)(
+            jnp.asarray(state), jnp.asarray(xs), jnp.asarray(ys),
+            jnp.asarray(mask), jnp.asarray(tgt))
+        np.testing.assert_allclose(
+            np.asarray(new_state).ravel(), np.array(g["expect_state"]), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(caps).ravel(), np.array(g["expect_caps"]), rtol=1e-5)
+
+    def test_forecast_golden_reproduces(self):
+        with open(os.path.join(ART, "golden", "forecast.json")) as f:
+            g = json.load(f)
+        history = np.array(g["history"], np.float32)
+        fc, coeffs, sigma = jax.jit(model.forecast)(jnp.asarray(history))
+        np.testing.assert_allclose(
+            np.asarray(fc), np.array(g["expect_forecast"], np.float32),
+            rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(
+            np.asarray(coeffs), np.array(g["expect_coeffs"], np.float32),
+            rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            float(sigma), g["expect_resid_sigma"], rtol=1e-4)
+
+    def test_artifact_files_are_hlo_text(self):
+        for name in ("capacity.hlo.txt", "forecast.hlo.txt"):
+            with open(os.path.join(ART, name)) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, name
+
+
+class TestLoweringRegressions:
+    """Guards for the xla_extension-0.5.1 interchange bugs found during
+    bring-up (see DESIGN.md §4b)."""
+
+    def test_forecast_hlo_contains_no_gather(self):
+        # The pinned CPU runtime miscompiles the gather a d[idx] lag-matrix
+        # build lowers to; the graph must use static slices only.
+        text = aot.to_hlo_text(model.forecast, model.forecast_example_args())
+        assert "gather(" not in text, "forecast graph regressed to gather"
+
+    def test_capacity_hlo_contains_no_gather(self):
+        text = aot.to_hlo_text(model.capacity_update, model.capacity_example_args())
+        assert "gather(" not in text
+
+    def test_forecast_solve_runs_in_f64(self):
+        text = aot.to_hlo_text(model.forecast, model.forecast_example_args())
+        # The while-loop carries f64 state (rollout + CG).
+        assert "f64" in text

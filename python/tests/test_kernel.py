@@ -1,0 +1,219 @@
+"""Pallas kernels vs pure-jnp/numpy oracles — the core correctness signal.
+
+Hypothesis sweeps shapes and value regimes; fixed-seed cases pin the exact
+configurations the AOT artifacts are lowered with.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import BM, STATE_WIDTH, ensure_padded, lag_gram, welford_batch
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# lag_gram
+# ---------------------------------------------------------------------------
+
+class TestLagGram:
+    @pytest.mark.parametrize("blocks", [1, 2, 7, 14])
+    @pytest.mark.parametrize("p", [4, 24])
+    def test_matches_ref(self, blocks, p):
+        rng = _rng(blocks * 100 + p)
+        m = blocks * BM
+        x = rng.normal(size=(m, p)).astype(F32)
+        y = rng.normal(size=(m,)).astype(F32)
+        g, b = lag_gram(jnp.asarray(x), jnp.asarray(y))
+        rg, rb = ref.ref_gram(x, y)
+        np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(b, rb, rtol=1e-4, atol=1e-3)
+
+    def test_zero_row_padding_is_neutral(self):
+        rng = _rng(7)
+        m, p = 100, 8
+        x = rng.normal(size=(m, p)).astype(F32)
+        y = rng.normal(size=(m,)).astype(F32)
+        mp = ensure_padded(m)
+        xp = np.zeros((mp, p), F32)
+        xp[:m] = x
+        yp = np.zeros((mp,), F32)
+        yp[:m] = y
+        g, b = lag_gram(jnp.asarray(xp), jnp.asarray(yp))
+        rg, rb = ref.ref_gram(x, y)
+        np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(b, rb, rtol=1e-4, atol=1e-3)
+
+    def test_gram_is_symmetric_psd(self):
+        rng = _rng(3)
+        x = rng.normal(size=(2 * BM, 16)).astype(F32)
+        y = rng.normal(size=(2 * BM,)).astype(F32)
+        g, _ = lag_gram(jnp.asarray(x), jnp.asarray(y))
+        g = np.asarray(g)
+        np.testing.assert_allclose(g, g.T, atol=1e-3)
+        eig = np.linalg.eigvalsh(g.astype(np.float64))
+        assert eig.min() > -1e-2
+
+    def test_rejects_unpadded(self):
+        with pytest.raises(ValueError):
+            lag_gram(jnp.zeros((BM + 1, 4)), jnp.zeros((BM + 1,)))
+
+    def test_rejects_mismatched_y(self):
+        with pytest.raises(ValueError):
+            lag_gram(jnp.zeros((BM, 4)), jnp.zeros((2 * BM,)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        p=st.integers(2, 32),
+        scale=st.floats(1e-2, 1e3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, blocks, p, scale, seed):
+        rng = _rng(seed)
+        m = blocks * BM
+        x = (rng.normal(size=(m, p)) * scale).astype(F32)
+        y = (rng.normal(size=(m,)) * scale).astype(F32)
+        g, b = lag_gram(jnp.asarray(x), jnp.asarray(y))
+        rg, rb = ref.ref_gram(x, y)
+        denom = max(float(np.abs(rg).max()), 1e-3)
+        assert float(np.abs(np.asarray(g) - rg).max()) / denom < 1e-4
+        denom_b = max(float(np.abs(rb).max()), 1e-3)
+        assert float(np.abs(np.asarray(b) - rb).max()) / denom_b < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# welford_batch
+# ---------------------------------------------------------------------------
+
+class TestWelfordBatch:
+    def _case(self, mw, b, seed, mask_p=0.8):
+        rng = _rng(seed)
+        state = np.zeros((mw, STATE_WIDTH), F32)
+        xs = rng.uniform(0.05, 1.0, (mw, b)).astype(F32)
+        ys = rng.uniform(0.0, 1e5, (mw, b)).astype(F32)
+        mask = (rng.uniform(size=(mw, b)) < mask_p).astype(F32)
+        return state, xs, ys, mask
+
+    @pytest.mark.parametrize("mw,b", [(1, 1), (4, 8), (32, 16), (32, 1)])
+    def test_matches_ref(self, mw, b):
+        state, xs, ys, mask = self._case(mw, b, seed=mw * 37 + b)
+        out = welford_batch(jnp.asarray(state), jnp.asarray(xs),
+                            jnp.asarray(ys), jnp.asarray(mask))
+        expect = ref.ref_welford(state, xs, ys, mask)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-2)
+
+    def test_incremental_equals_batch(self):
+        """Folding in two chunks must equal folding once (fold associativity)."""
+        state, xs, ys, mask = self._case(8, 16, seed=11, mask_p=1.0)
+        once = welford_batch(jnp.asarray(state), jnp.asarray(xs),
+                             jnp.asarray(ys), jnp.asarray(mask))
+        half = welford_batch(jnp.asarray(state), jnp.asarray(xs[:, :8]),
+                             jnp.asarray(ys[:, :8]), jnp.asarray(mask[:, :8]))
+        twice = welford_batch(half, jnp.asarray(xs[:, 8:]),
+                              jnp.asarray(ys[:, 8:]), jnp.asarray(mask[:, 8:]))
+        np.testing.assert_allclose(once, twice, rtol=1e-4, atol=1e-1)
+
+    def test_fully_masked_rows_unchanged(self):
+        rng = _rng(5)
+        state = rng.normal(size=(6, STATE_WIDTH)).astype(F32)
+        state[:, 0] = np.abs(state[:, 0]) + 1
+        xs = rng.uniform(size=(6, 4)).astype(F32)
+        ys = rng.uniform(size=(6, 4)).astype(F32)
+        mask = np.zeros((6, 4), F32)
+        out = welford_batch(jnp.asarray(state), jnp.asarray(xs),
+                            jnp.asarray(ys), jnp.asarray(mask))
+        np.testing.assert_allclose(out, state, rtol=1e-6, atol=1e-6)
+
+    def test_stats_match_numpy_moments(self):
+        """After many observations the state must encode np.var / np.cov."""
+        rng = _rng(42)
+        n = 512
+        xs = rng.uniform(0.1, 1.0, (1, n))
+        ys = 3.0 * xs + rng.normal(0, 0.01, (1, n))
+        state = np.zeros((1, STATE_WIDTH), F32)
+        out = np.asarray(welford_batch(
+            jnp.asarray(state), jnp.asarray(xs, dtype=F32),
+            jnp.asarray(ys, dtype=F32), jnp.ones((1, n), F32)))
+        n_, mx, my, m2x, cxy = out[0]
+        assert n_ == n
+        np.testing.assert_allclose(mx, xs.mean(), rtol=1e-4)
+        np.testing.assert_allclose(my, ys.mean(), rtol=1e-4)
+        np.testing.assert_allclose(m2x / n, xs.var(), rtol=1e-3)
+        np.testing.assert_allclose(cxy / n, np.cov(xs[0], ys[0], bias=True)[0, 1],
+                                   rtol=1e-3)
+        slope = cxy / m2x
+        np.testing.assert_allclose(slope, 3.0, rtol=1e-2)
+
+    def test_rejects_bad_state_width(self):
+        with pytest.raises(ValueError):
+            welford_batch(jnp.zeros((4, 3)), jnp.zeros((4, 2)),
+                          jnp.zeros((4, 2)), jnp.zeros((4, 2)))
+
+    def test_rejects_shape_mismatch(self):
+        with pytest.raises(ValueError):
+            welford_batch(jnp.zeros((4, STATE_WIDTH)), jnp.zeros((4, 2)),
+                          jnp.zeros((4, 3)), jnp.zeros((4, 2)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        mw=st.integers(1, 32),
+        b=st.integers(1, 24),
+        tput_scale=st.floats(1.0, 1e6),
+        mask_p=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, mw, b, tput_scale, mask_p, seed):
+        rng = _rng(seed)
+        state = np.zeros((mw, STATE_WIDTH), F32)
+        xs = rng.uniform(0.0, 1.0, (mw, b)).astype(F32)
+        ys = (rng.uniform(0.0, 1.0, (mw, b)) * tput_scale).astype(F32)
+        mask = (rng.uniform(size=(mw, b)) < mask_p).astype(F32)
+        out = np.asarray(welford_batch(jnp.asarray(state), jnp.asarray(xs),
+                                       jnp.asarray(ys), jnp.asarray(mask)))
+        expect = ref.ref_welford(state, xs, ys, mask)
+        scale = max(float(np.abs(expect).max()), 1.0)
+        assert float(np.abs(out - expect).max()) / scale < 1e-3
+        # counts are exact
+        np.testing.assert_array_equal(out[:, 0], mask.sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# dtype generality (the forecast graph runs the Gram kernel in float64)
+# ---------------------------------------------------------------------------
+
+class TestLagGramF64:
+    def test_f64_matches_ref_tighter(self):
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        rng = _rng(123)
+        m, p = 2 * BM, 24
+        x = jnp.asarray(rng.normal(size=(m, p)), jnp.float64)
+        y = jnp.asarray(rng.normal(size=(m,)), jnp.float64)
+        g, b = lag_gram(x, y)
+        assert g.dtype == jnp.float64
+        rg = np.asarray(x, np.float64).T @ np.asarray(x, np.float64)
+        rb = np.asarray(x, np.float64).T @ np.asarray(y, np.float64)
+        # f64 path is near-exact, far beyond f32 tolerance.
+        np.testing.assert_allclose(np.asarray(g), rg, rtol=1e-12, atol=1e-10)
+        np.testing.assert_allclose(np.asarray(b), rb, rtol=1e-12, atol=1e-10)
+
+    def test_f32_and_f64_agree_loosely(self):
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        rng = _rng(7)
+        m, p = BM, 8
+        xd = rng.normal(size=(m, p))
+        yd = rng.normal(size=(m,))
+        g32, b32 = lag_gram(jnp.asarray(xd, jnp.float32), jnp.asarray(yd, jnp.float32))
+        g64, b64 = lag_gram(jnp.asarray(xd, jnp.float64), jnp.asarray(yd, jnp.float64))
+        np.testing.assert_allclose(np.asarray(g32), np.asarray(g64), rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(b32), np.asarray(b64), rtol=1e-4, atol=1e-3)

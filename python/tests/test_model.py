@@ -1,0 +1,156 @@
+"""Layer-2 model graphs: shapes, semantics, and agreement with oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _capacity(state, xs, ys, mask, tgt):
+    return jax.jit(model.capacity_update)(
+        jnp.asarray(state, dtype=jnp.float32), jnp.asarray(xs, dtype=jnp.float32),
+        jnp.asarray(ys, dtype=jnp.float32), jnp.asarray(mask, dtype=jnp.float32),
+        jnp.asarray(tgt, dtype=jnp.float32))
+
+
+class TestCapacityUpdate:
+    def _inputs(self, seed=0, mask_p=1.0):
+        rng = np.random.default_rng(seed)
+        mw, b = model.MAX_WORKERS, model.OBS_BLOCK
+        state = np.zeros((mw, 5), F32)
+        xs = rng.uniform(0.2, 0.95, (mw, b)).astype(F32)
+        slope = rng.uniform(40e3, 80e3, (mw, 1)).astype(F32)
+        ys = (xs * slope).astype(F32)
+        mask = (rng.uniform(size=(mw, b)) < mask_p).astype(F32)
+        tgt = rng.uniform(0.7, 1.0, mw).astype(F32)
+        return state, xs, ys, mask, tgt, slope
+
+    def test_shapes(self):
+        state, xs, ys, mask, tgt, _ = self._inputs()
+        new_state, caps = _capacity(state, xs, ys, mask, tgt)
+        assert new_state.shape == (model.MAX_WORKERS, 5)
+        assert caps.shape == (model.MAX_WORKERS,)
+
+    def test_capacity_matches_ref(self):
+        state, xs, ys, mask, tgt, _ = self._inputs(seed=1, mask_p=0.7)
+        new_state, caps = _capacity(state, xs, ys, mask, tgt)
+        expect_state = ref.ref_welford(state, xs, ys, mask)
+        expect_caps = ref.ref_capacity(expect_state, tgt)
+        np.testing.assert_allclose(new_state, expect_state, rtol=1e-3, atol=1e-1)
+        np.testing.assert_allclose(caps, expect_caps, rtol=1e-2, atol=1.0)
+
+    def test_noiseless_linear_recovers_exact_capacity(self):
+        """y = slope·x exactly ⇒ capacity at target = slope·target."""
+        state, xs, ys, mask, tgt, slope = self._inputs(seed=2)
+        _, caps = _capacity(state, xs, ys, mask, tgt)
+        np.testing.assert_allclose(caps, slope[:, 0] * tgt, rtol=1e-2)
+
+    def test_empty_worker_predicts_zero(self):
+        state, xs, ys, mask, tgt, _ = self._inputs(seed=3)
+        mask[5] = 0.0
+        _, caps = _capacity(state, xs, ys, mask, tgt)
+        assert float(caps[5]) == 0.0
+
+    def test_single_observation_uses_simple_estimate(self):
+        """n=1 ⇒ fall back to throughput/CPU · target (paper's quick formula)."""
+        state = np.zeros((model.MAX_WORKERS, 5), F32)
+        xs = np.full((model.MAX_WORKERS, model.OBS_BLOCK), 0.5, F32)
+        ys = np.full((model.MAX_WORKERS, model.OBS_BLOCK), 30_000.0, F32)
+        mask = np.zeros_like(xs)
+        mask[:, 0] = 1.0
+        tgt = np.ones(model.MAX_WORKERS, F32)
+        _, caps = _capacity(state, xs, ys, mask, tgt)
+        np.testing.assert_allclose(caps, 60_000.0, rtol=1e-3)
+
+    def test_capacity_nonnegative(self):
+        rng = np.random.default_rng(9)
+        state = np.zeros((model.MAX_WORKERS, 5), F32)
+        xs = rng.uniform(0, 1, (model.MAX_WORKERS, model.OBS_BLOCK)).astype(F32)
+        ys = -xs * 1e4  # pathological negative relationship
+        mask = np.ones_like(xs)
+        tgt = np.ones(model.MAX_WORKERS, F32)
+        _, caps = _capacity(state, xs, ys, mask, tgt)
+        assert float(np.min(np.asarray(caps))) >= 0.0
+
+
+class TestForecast:
+    def _run(self, history):
+        return jax.jit(model.forecast)(jnp.asarray(history, jnp.float32))
+
+    def test_shapes(self):
+        h = np.linspace(1e4, 2e4, model.WINDOW).astype(F32)
+        fc, coeffs, sigma = self._run(h)
+        assert fc.shape == (model.HORIZON,)
+        assert coeffs.shape == (model.AR_ORDER,)
+        assert sigma.shape == ()
+
+    def test_matches_ref_forecast(self):
+        rng = np.random.default_rng(10)
+        t = np.arange(model.WINDOW)
+        h = 40e3 + 15e3 * np.sin(2 * np.pi * t / 1200) + rng.normal(0, 300, model.WINDOW)
+        fc, _, _ = self._run(h.astype(F32))
+        expect = ref.ref_forecast(h.astype(F32), model.AR_LAGS,
+                                  model.HORIZON, model.RIDGE_LAM)
+        rel = np.abs(np.asarray(fc) - expect) / (np.abs(expect) + 1.0)
+        assert float(rel.max()) < 1e-3
+
+    def test_constant_series_forecasts_constant(self):
+        h = np.full(model.WINDOW, 5_000.0, F32)
+        fc, _, sigma = self._run(h)
+        np.testing.assert_allclose(fc, 5_000.0, rtol=1e-3)
+        assert float(sigma) < 1.0
+
+    def test_linear_trend_extrapolates(self):
+        h = (1e4 + 10.0 * np.arange(model.WINDOW)).astype(F32)
+        fc = np.asarray(self._run(h)[0])
+        # Slope 10/s: after 900 s the level should rise ≈ 9000 (±25 %).
+        rise = fc[-1] - h[-1]
+        assert 0.7 * 9000 < rise < 1.3 * 9000
+
+    def test_sine_tracks_phase(self):
+        """Forecast of a clean sine should beat a flat forecast by a wide margin."""
+        t = np.arange(model.WINDOW + model.HORIZON)
+        full = 40e3 + 15e3 * np.sin(2 * np.pi * t / 1800.0)
+        h = full[: model.WINDOW].astype(F32)
+        truth = full[model.WINDOW :]
+        fc = np.asarray(self._run(h)[0])
+        flat_err = np.abs(truth - h[-1]).mean()
+        ar_err = np.abs(truth - fc).mean()
+        assert ar_err < 0.5 * flat_err
+
+    def test_forecast_is_finite(self):
+        rng = np.random.default_rng(11)
+        h = np.abs(rng.normal(1e4, 5e3, model.WINDOW)).astype(F32)
+        fc, coeffs, sigma = self._run(h)
+        assert np.all(np.isfinite(np.asarray(fc)))
+        assert np.all(np.isfinite(np.asarray(coeffs)))
+        assert np.isfinite(float(sigma))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        level=st.floats(100.0, 1e5),
+        amp_frac=st.floats(0.0, 0.5),
+        period=st.floats(300.0, 3600.0),
+        noise_frac=st.floats(0.0, 0.05),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_finite_and_sane(self, level, amp_frac, period,
+                                        noise_frac, seed):
+        rng = np.random.default_rng(seed)
+        t = np.arange(model.WINDOW)
+        h = (level * (1 + amp_frac * np.sin(2 * np.pi * t / period))
+             + rng.normal(0, noise_frac * level, model.WINDOW)).astype(F32)
+        fc = np.asarray(self._run(h)[0])
+        assert np.all(np.isfinite(fc))
+        # Bounded blow-up: a linear-class model on a bounded series should
+        # stay within a generous envelope of the observed range.
+        lo, hi = h.min(), h.max()
+        span = max(hi - lo, 0.1 * level)
+        assert fc.min() > lo - 20 * span
+        assert fc.max() < hi + 20 * span

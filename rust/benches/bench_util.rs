@@ -1,0 +1,51 @@
+// Minimal bench harness (criterion is unavailable offline): warm-up +
+// timed iterations, criterion-style output. Included into each bench via
+// `include!`.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly and print mean/min/max per iteration.
+#[allow(dead_code)]
+pub fn bench<R>(name: &str, min_iters: u32, mut f: impl FnMut() -> R) {
+    // Warm-up.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let first = t0.elapsed();
+    // Budget: at least `min_iters`, stop early past ~2 s total.
+    let mut times: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed());
+        if times.len() >= min_iters as usize && start.elapsed() > Duration::from_secs(2) {
+            break;
+        }
+        if times.len() >= 10 * min_iters as usize {
+            break;
+        }
+    }
+    let total: Duration = times.iter().sum();
+    let mean = total / times.len() as u32;
+    let min = times.iter().min().unwrap();
+    let max = times.iter().max().unwrap();
+    println!(
+        "{name:<44} {:>12} /iter (min {:>12}, max {:>12}, n={}, first {:?})",
+        fmt(mean),
+        fmt(*min),
+        fmt(*max),
+        times.len(),
+        first,
+    );
+}
+
+#[allow(dead_code)]
+fn fmt(d: Duration) -> String {
+    if d.as_secs() >= 1 {
+        format!("{:.3} s", d.as_secs_f64())
+    } else if d.as_millis() >= 1 {
+        format!("{:.3} ms", d.as_secs_f64() * 1e3)
+    } else {
+        format!("{:.1} µs", d.as_secs_f64() * 1e6)
+    }
+}

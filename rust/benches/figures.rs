@@ -1,0 +1,48 @@
+//! End-to-end benches: one per paper table/figure (DESIGN.md §4).
+//!
+//! Each bench regenerates the corresponding figure at a reduced duration
+//! (the full 6-hour × 5-seed protocol is `daedalus figure <id>`), so this
+//! doubles as a latency budget check for the whole stack: substrate +
+//! autoscalers + harness.
+
+include!("bench_util.rs");
+
+use daedalus::experiments::figures::{self, FigureOptsOwned};
+use daedalus::runtime::ComputeBackend;
+
+fn opts() -> FigureOptsOwned {
+    FigureOptsOwned {
+        duration: 3_600,
+        seeds: vec![1],
+        out_dir: std::env::temp_dir()
+            .join("daedalus-bench-results")
+            .to_string_lossy()
+            .into_owned(),
+    }
+}
+
+fn main() {
+    let backend = ComputeBackend::native();
+    let o = opts();
+    println!("figure benches (1 h simulated, 1 seed, native backend)\n");
+    bench("fig2_metric_relationships", 3, || figures::fig2(&o).unwrap());
+    bench("fig3_per_worker_skew", 3, || figures::fig3(&o).unwrap());
+    bench("fig4_proportional_skew", 3, || figures::fig4(&o).unwrap());
+    bench("fig5_capacity_over_cpu", 3, || figures::fig5(&o).unwrap());
+    bench("fig7_flink_wordcount_4_approaches", 3, || {
+        figures::fig7(backend.clone(), &o).unwrap()
+    });
+    bench("fig8_flink_ysb_4_approaches", 3, || {
+        figures::fig8(backend.clone(), &o).unwrap()
+    });
+    bench("fig9_flink_traffic_4_approaches", 3, || {
+        figures::fig9(backend.clone(), &o).unwrap()
+    });
+    bench("fig10_kstreams_wordcount_4_approaches", 3, || {
+        figures::fig10(backend.clone(), &o).unwrap()
+    });
+    bench("fig11_phoebe_comparison", 3, || {
+        figures::fig11(backend.clone(), &o).unwrap()
+    });
+    std::fs::remove_dir_all(std::env::temp_dir().join("daedalus-bench-results")).ok();
+}

@@ -1,0 +1,64 @@
+//! PJRT runtime benches: compile-once cost and per-call execute latency of
+//! both AOT artifacts, against the native mirror — the numbers behind the
+//! L2/L1 rows of EXPERIMENTS.md §Perf.
+//!
+//! Skips (cleanly) when `artifacts/` is missing.
+
+include!("bench_util.rs");
+
+use daedalus::runtime::{native, ArtifactRuntime, CapacityState, ComputeBackend};
+
+fn main() {
+    let dir = "artifacts";
+    if !std::path::Path::new(dir).join("meta.json").exists() {
+        println!("runtime benches skipped: run `make artifacts` first");
+        return;
+    }
+
+    println!("runtime benches (PJRT CPU vs native mirror)\n");
+    let t0 = std::time::Instant::now();
+    let rt = ArtifactRuntime::load(dir).expect("load artifacts");
+    println!(
+        "{:<44} {:>12?} (client + 2 compiles, once per process)\n",
+        "artifact_load_and_compile",
+        t0.elapsed()
+    );
+    let meta = rt.meta.clone();
+
+    let state = CapacityState::zeros(meta.max_workers);
+    let xs = vec![0.6f32; meta.max_workers * meta.obs_block];
+    let ys = vec![3_000.0f32; meta.max_workers * meta.obs_block];
+    let mask = vec![1.0f32; meta.max_workers * meta.obs_block];
+    let tgt = vec![1.0f32; meta.max_workers];
+    bench("capacity_artifact_execute", 50, || {
+        rt.capacity_update(&state, &xs, &ys, &mask, &tgt)
+            .unwrap()
+            .capacities[0]
+    });
+    bench("capacity_native_execute", 50, || {
+        native::capacity_update(&meta, &state, &xs, &ys, &mask, &tgt)
+            .unwrap()
+            .capacities[0]
+    });
+
+    let hist: Vec<f32> = (0..meta.window)
+        .map(|t| (30e3 + 10e3 * (t as f64 / 250.0).sin()) as f32)
+        .collect();
+    bench("forecast_artifact_execute", 20, || {
+        rt.forecast(&hist).unwrap().forecast[0]
+    });
+    bench("forecast_native_execute", 20, || {
+        native::forecast(&meta, &hist).unwrap().forecast[0]
+    });
+
+    // One full MAPE-K analyze phase through the artifact backend — the
+    // paper reports ~1 s per loop on their testbed; our budget is ≪ that.
+    let backend = ComputeBackend::Artifact(std::sync::Arc::new(rt));
+    bench("analyze_phase_capacity_plus_forecast", 20, || {
+        let c = backend
+            .capacity_update(&state, &xs, &ys, &mask, &tgt)
+            .unwrap();
+        let f = backend.forecast(&hist).unwrap();
+        (c.capacities[0], f.forecast[0])
+    });
+}

@@ -1,0 +1,186 @@
+//! Recovery monitoring with statistical anomaly detection (§3.5).
+//!
+//! Daedalus continuously tracks the difference `workload − throughput` with
+//! Welford statistics. After a scaling action, a background monitor watches
+//! for the difference to return inside one standard deviation of normal —
+//! that moment defines the *actual* recovery time, which also refines the
+//! anticipated-downtime estimates used by recovery prediction (§3.4).
+
+use crate::clock::Timestamp;
+use crate::dsp::engine::SimView;
+use crate::metrics::SeriesId;
+
+use super::knowledge::{Knowledge, ObservedRecovery};
+
+/// Consecutive normal seconds required to declare recovery (debounce).
+const NORMAL_STREAK: usize = 5;
+/// Give up monitoring after this long (seconds).
+const MONITOR_TIMEOUT: u64 = 1_800;
+/// Anomaly threshold in standard deviations (§3.5: one σ).
+const SIGMA_K: f64 = 1.0;
+
+/// Current workload/throughput difference, if both series have a fresh
+/// sample at `now` (the engine only records throughput while serving).
+fn fresh_diff(view: &SimView<'_>) -> Option<f64> {
+    let (tw, w) = view
+        .tsdb
+        .last_at(&SeriesId::global("workload_rate"), view.now)?;
+    let (tt, tp) = view.tsdb.last_at(&SeriesId::global("throughput"), view.now)?;
+    (tw == view.now && tt == view.now).then_some(w - tp)
+}
+
+/// Per-second background tracking of the difference statistics. Runs only
+/// in steady state (outside recovery monitoring) so recovery transients
+/// don't pollute "normal".
+pub fn track(knowledge: &mut Knowledge, view: &SimView<'_>) {
+    if let Some(d) = fresh_diff(view) {
+        knowledge.anomaly.push_scalar(d);
+    }
+}
+
+/// Background monitor started by the execute phase after a rescale.
+#[derive(Debug, Clone)]
+pub struct RecoveryMonitor {
+    started: Timestamp,
+    scale_out: bool,
+    serving_since: Option<Timestamp>,
+    normal_streak: usize,
+}
+
+impl RecoveryMonitor {
+    pub fn start(now: Timestamp, scale_out: bool) -> Self {
+        Self {
+            started: now,
+            scale_out,
+            serving_since: None,
+            normal_streak: 0,
+        }
+    }
+
+    /// One tick of monitoring. Returns `true` when finished (recovered or
+    /// timed out); on recovery the observation is folded into Knowledge.
+    pub fn update(&mut self, knowledge: &mut Knowledge, view: &SimView<'_>) -> bool {
+        let now = view.now;
+        if now.saturating_sub(self.started) > MONITOR_TIMEOUT {
+            return true; // give up
+        }
+        // Downtime observation: first tick the pods serve again.
+        if self.serving_since.is_none() && view.ready {
+            self.serving_since = Some(now);
+            knowledge.observe_downtime(self.scale_out, now.saturating_sub(self.started) as f64);
+        }
+        let Some(_) = self.serving_since else {
+            return false;
+        };
+        // Anomaly check on the fresh difference.
+        let Some(d) = fresh_diff(view) else {
+            return false;
+        };
+        if knowledge.anomaly.is_anomalous(d, SIGMA_K) {
+            self.normal_streak = 0;
+        } else {
+            self.normal_streak += 1;
+        }
+        if self.normal_streak >= NORMAL_STREAK {
+            let recovery = now.saturating_sub(self.started) as f64;
+            knowledge.recoveries.push(ObservedRecovery {
+                rescale_at: self.started,
+                downtime_secs: self
+                    .serving_since
+                    .map(|s| s.saturating_sub(self.started) as f64)
+                    .unwrap_or(0.0),
+                recovery_secs: recovery,
+                scale_out: self.scale_out,
+            });
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Tsdb;
+    use crate::runtime::ArtifactMeta;
+
+    fn knowledge_with_normal() -> Knowledge {
+        let mut k = Knowledge::new(&ArtifactMeta::default(), 30.0, 15.0);
+        // Normal operation: diff ≈ 0 ± 50.
+        for i in 0..600 {
+            k.anomaly.push_scalar(((i % 11) as f64 - 5.0) * 10.0);
+        }
+        k
+    }
+
+    fn view_at(db: &Tsdb, now: Timestamp, ready: bool) -> SimView<'_> {
+        SimView {
+            now,
+            tsdb: db,
+            parallelism: 4,
+            ready,
+            max_replicas: 12,
+        }
+    }
+
+    #[test]
+    fn detects_recovery_after_catchup() {
+        let mut k = knowledge_with_normal();
+        let mut db = Tsdb::new();
+        let mut mon = RecoveryMonitor::start(100, true);
+
+        // 30 s downtime: workload recorded, no throughput.
+        for t in 100..130 {
+            db.record_global("workload_rate", t, 10_000.0);
+            assert!(!mon.update(&mut k, &view_at(&db, t, false)));
+        }
+        // Catch-up: big positive diff (throughput exceeds workload is
+        // negative diff — also anomalous vs N(0,50)).
+        for t in 130..200 {
+            db.record_global("workload_rate", t, 10_000.0);
+            db.record_global("throughput", t, 22_000.0);
+            assert!(!mon.update(&mut k, &view_at(&db, t, true)), "t={t}");
+        }
+        // Normal again.
+        let mut done_at = None;
+        for t in 200..260 {
+            db.record_global("workload_rate", t, 10_000.0);
+            db.record_global("throughput", t, 10_000.0);
+            if mon.update(&mut k, &view_at(&db, t, true)) {
+                done_at = Some(t);
+                break;
+            }
+        }
+        let done = done_at.expect("recovery detected");
+        assert!(done >= 204 && done <= 210, "done at {done}");
+        assert_eq!(k.recoveries.len(), 1);
+        let rec = k.recoveries[0];
+        crate::assert_close!(rec.downtime_secs, 30.0, atol = 1.0);
+        assert!(rec.recovery_secs >= 100.0);
+        // Downtime EMA moved from 30 toward the observed 30 (unchanged).
+        crate::assert_close!(k.downtime_out, 30.0, atol = 0.5);
+    }
+
+    #[test]
+    fn timeout_ends_monitoring() {
+        let mut k = knowledge_with_normal();
+        let db = Tsdb::new();
+        let mut mon = RecoveryMonitor::start(100, true);
+        assert!(!mon.update(&mut k, &view_at(&db, 200, false)));
+        assert!(mon.update(&mut k, &view_at(&db, 100 + 1_801, false)));
+        assert!(k.recoveries.is_empty());
+    }
+
+    #[test]
+    fn track_ignores_stale_throughput() {
+        let mut k = Knowledge::new(&ArtifactMeta::default(), 30.0, 15.0);
+        let mut db = Tsdb::new();
+        db.record_global("workload_rate", 10, 5_000.0);
+        db.record_global("throughput", 5, 5_000.0); // stale
+        track(&mut k, &view_at(&db, 10, false));
+        assert_eq!(k.anomaly.count, 0.0);
+        db.record_global("throughput", 10, 5_000.0);
+        track(&mut k, &view_at(&db, 10, true));
+        assert_eq!(k.anomaly.count, 1.0);
+    }
+}

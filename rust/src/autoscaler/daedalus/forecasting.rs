@@ -1,0 +1,242 @@
+//! Analyze phase, forecasting half (§3.3): run the AOT forecast artifact,
+//! gate its quality with WAPE against realized workload, fall back to a
+//! linear projection when the previous forecast was poor, and count
+//! consecutive poor forecasts toward a retrain.
+
+use crate::clock::Timestamp;
+use crate::runtime::ComputeBackend;
+use crate::stats::{wape, HoltWinters, LinearRegression};
+
+use super::knowledge::{IssuedForecast, Knowledge};
+use super::monitor::MonitorData;
+use super::DaedalusConfig;
+
+/// Which forecaster produces the 15-minute prediction (ablation §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForecastMethod {
+    /// The AOT subset-ARI(p,1) artifact (the paper's ARIMA-class default).
+    ArtifactAr,
+    /// Holt's damped-trend exponential smoothing (native).
+    HoltWinters,
+    /// Linear-regression projection only (the fallback as the main model).
+    Linear,
+    /// No anticipation: flat continuation of the last observation
+    /// (turns Daedalus into a purely reactive scaler).
+    Flat,
+}
+
+/// Seconds of history the linear fallback is fitted on.
+const FALLBACK_FIT_WINDOW: usize = 300;
+/// Minimum overlap before a WAPE evaluation is meaningful.
+const MIN_WAPE_OVERLAP: usize = 30;
+
+/// Forecast handed to the plan phase.
+#[derive(Debug, Clone)]
+pub struct ForecastResult {
+    /// Predicted workload for the next `horizon` seconds (non-negative).
+    pub values: Vec<f64>,
+    /// True if from the ARI artifact, false if the linear fallback.
+    pub from_model: bool,
+    /// WAPE of the previous forecast vs. realized workload, if evaluable.
+    pub prev_wape: Option<f64>,
+}
+
+/// Produce this iteration's forecast (and do the quality bookkeeping).
+pub fn forecast(
+    backend: &ComputeBackend,
+    knowledge: &mut Knowledge,
+    data: &MonitorData,
+    cfg: &DaedalusConfig,
+    now: Timestamp,
+) -> ForecastResult {
+    let meta = backend.meta();
+
+    // 1. Score the previous forecast against what actually happened.
+    let mut prev_wape = None;
+    let mut use_fallback = false;
+    if let Some(prev) = &knowledge.last_forecast {
+        let elapsed = now.saturating_sub(prev.issued_at) as usize;
+        let k = elapsed.min(prev.values.len());
+        if k >= MIN_WAPE_OVERLAP && data.history.len() >= k {
+            let actual = &data.history[data.history.len() - k..];
+            if let Some(w) = wape(actual, &prev.values[..k]) {
+                knowledge.wape_history.push(w);
+                prev_wape = Some(w);
+                if w > cfg.wape_threshold {
+                    use_fallback = true;
+                    knowledge.bad_forecast_streak += 1;
+                    if knowledge.bad_forecast_streak >= cfg.retrain_streak {
+                        // §3.3: retrain in the background. Our subset-AR is
+                        // refit from the full window every loop, so the
+                        // retrain amounts to dropping the streak; we count
+                        // it for §4.8-style reporting.
+                        knowledge.retrain_count += 1;
+                        knowledge.bad_forecast_streak = 0;
+                    }
+                } else {
+                    knowledge.bad_forecast_streak = 0;
+                }
+            }
+        }
+    }
+
+    // 1b. Warm-up gate: with less real history than the AR's longest lag
+    // (the window is left-padded with the first sample), the standardized
+    // differences degenerate and the fit is meaningless — use the linear
+    // fallback until enough history exists (the paper trains the initial
+    // model "with the available workload").
+    if (now as usize) < meta.max_lag + 2 * cfg.loop_interval as usize {
+        use_fallback = true;
+    }
+
+    // 2. Model forecast (method per config; the artifact is the default).
+    let model_values: Option<Vec<f64>> = match cfg.forecast_method {
+        ForecastMethod::ArtifactAr => {
+            let hist32: Vec<f32> = data.history.iter().map(|v| *v as f32).collect();
+            backend.forecast(&hist32).ok().map(|out| out.clamped())
+        }
+        ForecastMethod::HoltWinters => {
+            Some(HoltWinters::default().forecast(&data.history, meta.horizon))
+        }
+        ForecastMethod::Linear => Some(linear_fallback(&data.history, meta.horizon)),
+        ForecastMethod::Flat => Some(vec![
+            data.history.last().copied().unwrap_or(0.0).max(0.0);
+            meta.horizon
+        ]),
+    };
+
+    // 3. Select model vs. fallback (§3.3: the fallback replaces the model
+    //    only when the previous prediction was poor).
+    let (values, from_model) = match (model_values, use_fallback) {
+        (Some(v), false) => (v, true),
+        _ => (linear_fallback(&data.history, meta.horizon), false),
+    };
+
+    knowledge.last_forecast = Some(IssuedForecast {
+        issued_at: now,
+        values: values.clone(),
+        from_model,
+    });
+    ForecastResult {
+        values,
+        from_model,
+        prev_wape,
+    }
+}
+
+/// The paper's fallback: slope of the latest observations projected ahead.
+pub fn linear_fallback(history: &[f64], horizon: usize) -> Vec<f64> {
+    let n = history.len();
+    let fit = &history[n.saturating_sub(FALLBACK_FIT_WINDOW)..];
+    match LinearRegression::fit_series(fit) {
+        Some(lr) => lr.project(fit.len(), horizon),
+        None => vec![history.last().copied().unwrap_or(0.0).max(0.0); horizon],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactMeta;
+
+    fn data(history: Vec<f64>, now: Timestamp) -> MonitorData {
+        MonitorData {
+            now,
+            workers: vec![],
+            history,
+            workload_avg: 0.0,
+            workload_max: 0.0,
+            consumer_lag: 0.0,
+            parallelism: 4,
+        }
+    }
+
+    fn setup() -> (ComputeBackend, Knowledge, DaedalusConfig) {
+        let backend = ComputeBackend::native();
+        let k = Knowledge::new(&ArtifactMeta::default(), 30.0, 15.0);
+        (backend, k, DaedalusConfig::default())
+    }
+
+    #[test]
+    fn model_forecast_used_when_no_history_of_failure() {
+        let (backend, mut k, cfg) = setup();
+        let d = data(vec![20_000.0; 1800], 1800);
+        let f = forecast(&backend, &mut k, &d, &cfg, 1800);
+        assert!(f.from_model);
+        assert_eq!(f.values.len(), 900);
+        // Constant history → roughly constant forecast.
+        assert!((f.values[899] - 20_000.0).abs() < 500.0);
+    }
+
+    #[test]
+    fn bad_previous_forecast_triggers_fallback() {
+        let (backend, mut k, cfg) = setup();
+        // Previous forecast said 50k; reality is 10k → WAPE = 4.
+        k.last_forecast = Some(IssuedForecast {
+            issued_at: 1740,
+            values: vec![50_000.0; 900],
+            from_model: true,
+        });
+        let d = data(vec![10_000.0; 1800], 1800);
+        let f = forecast(&backend, &mut k, &d, &cfg, 1800);
+        assert!(!f.from_model, "should use fallback");
+        assert!(f.prev_wape.unwrap() > 3.0);
+        assert_eq!(k.bad_forecast_streak, 1);
+        // Fallback on a flat series ≈ flat.
+        assert!((f.values[0] - 10_000.0).abs() < 200.0);
+    }
+
+    #[test]
+    fn good_previous_forecast_resets_streak() {
+        let (backend, mut k, cfg) = setup();
+        k.bad_forecast_streak = 7;
+        k.last_forecast = Some(IssuedForecast {
+            issued_at: 1740,
+            values: vec![10_000.0; 900],
+            from_model: true,
+        });
+        let d = data(vec![10_000.0; 1800], 1800);
+        let f = forecast(&backend, &mut k, &d, &cfg, 1800);
+        assert!(f.from_model);
+        assert_eq!(k.bad_forecast_streak, 0);
+        assert!(f.prev_wape.unwrap() < 0.01);
+    }
+
+    #[test]
+    fn retrain_after_streak() {
+        let (backend, mut k, mut cfg) = setup();
+        cfg.retrain_streak = 3;
+        for i in 0..3 {
+            k.last_forecast = Some(IssuedForecast {
+                issued_at: 1740,
+                values: vec![99_000.0; 900],
+                from_model: true,
+            });
+            let d = data(vec![10_000.0; 1800], 1800);
+            forecast(&backend, &mut k, &d, &cfg, 1800);
+            if i < 2 {
+                assert_eq!(k.retrain_count, 0);
+            }
+        }
+        assert_eq!(k.retrain_count, 1);
+        assert_eq!(k.bad_forecast_streak, 0);
+    }
+
+    #[test]
+    fn fallback_projects_trend() {
+        let hist: Vec<f64> = (0..1800).map(|i| 1_000.0 + 10.0 * i as f64).collect();
+        let proj = linear_fallback(&hist, 100);
+        // Slope 10/s continues.
+        assert!((proj[0] - (1_000.0 + 10.0 * 1800.0)).abs() < 50.0);
+        assert!(proj[99] > proj[0]);
+    }
+
+    #[test]
+    fn forecasts_are_nonnegative() {
+        let (backend, mut k, cfg) = setup();
+        let hist: Vec<f64> = (0..1800).map(|i| (3_000.0 - 2.0 * i as f64).max(0.0)).collect();
+        let d = data(hist, 1800);
+        let f = forecast(&backend, &mut k, &d, &cfg, 1800);
+        assert!(f.values.iter().all(|v| *v >= 0.0));
+    }
+}

@@ -1,0 +1,157 @@
+//! The K in MAPE-K: state shared between the phases (§3.6).
+//!
+//! Holds the per-worker regression state (flowing through the AOT capacity
+//! artifact), capacity estimates per seen scale-out, forecast bookkeeping
+//! (for the WAPE gate), the anomaly-detection statistics, the adaptive
+//! downtime estimates, and the scaling-action history.
+
+use std::collections::HashMap;
+
+use crate::clock::Timestamp;
+use crate::runtime::{ArtifactMeta, CapacityState};
+use crate::stats::Welford;
+
+/// A forecast issued at some loop iteration (for later WAPE evaluation).
+#[derive(Debug, Clone)]
+pub struct IssuedForecast {
+    pub issued_at: Timestamp,
+    /// Predicted workload for seconds `issued_at+1 ..= issued_at+horizon`.
+    pub values: Vec<f64>,
+    /// Whether this was the ARI artifact (true) or the linear fallback.
+    pub from_model: bool,
+}
+
+/// An observed recovery after a scaling action (§3.5).
+#[derive(Debug, Clone, Copy)]
+pub struct ObservedRecovery {
+    pub rescale_at: Timestamp,
+    pub downtime_secs: f64,
+    pub recovery_secs: f64,
+    pub scale_out: bool,
+}
+
+/// Shared knowledge base.
+pub struct Knowledge {
+    /// Welford regression state for up to `max_workers` workers (artifact
+    /// layout `[max_workers, 5]`).
+    pub capacity_state: CapacityState,
+    /// Latest capacity estimate per *seen* scale-out (paper §3.1: observed
+    /// estimations are preferred over predicted ones).
+    pub seen_capacity: HashMap<usize, f64>,
+    /// Most recent forecast, for the next loop's WAPE check.
+    pub last_forecast: Option<IssuedForecast>,
+    /// Consecutive poor forecasts (≥ threshold triggers retrain).
+    pub bad_forecast_streak: usize,
+    /// Number of (simulated) model retrains.
+    pub retrain_count: usize,
+    /// Highest per-worker CPU (1-min MA) ever observed — the calibration
+    /// point for "expected maximum CPU utilization" (§3.1): engines like
+    /// Kafka Streams saturate well below 100 % CPU, so extrapolating to
+    /// 1.0 would overestimate capacity by ~30 %.
+    pub max_cpu_seen: f64,
+    /// Running stats of (workload − throughput) for anomaly detection.
+    pub anomaly: Welford,
+    /// Adaptive anticipated downtimes (§3.4), refined from observations.
+    pub downtime_out: f64,
+    pub downtime_in: f64,
+    /// Time of the last executed scaling action.
+    pub last_rescale: Option<Timestamp>,
+    pub rescale_count: usize,
+    /// Completed recovery observations.
+    pub recoveries: Vec<ObservedRecovery>,
+    /// Predicted recovery times at the moment each rescale was executed
+    /// (§4.8: predicted vs. measured comparison).
+    pub predicted_recoveries: Vec<(Timestamp, f64)>,
+    /// WAPE values measured against realized workload (diagnostics, §4.8).
+    pub wape_history: Vec<f64>,
+    /// Capacity-estimate history (t, scale-out, estimate) for validation.
+    pub capacity_history: Vec<(Timestamp, usize, f64)>,
+}
+
+impl Knowledge {
+    pub fn new(meta: &ArtifactMeta, downtime_out: f64, downtime_in: f64) -> Self {
+        Self {
+            capacity_state: CapacityState::zeros(meta.max_workers),
+            seen_capacity: HashMap::new(),
+            last_forecast: None,
+            bad_forecast_streak: 0,
+            retrain_count: 0,
+            max_cpu_seen: 0.0,
+            anomaly: Welford::new(),
+            downtime_out,
+            downtime_in,
+            last_rescale: None,
+            rescale_count: 0,
+            recoveries: Vec::new(),
+            predicted_recoveries: Vec::new(),
+            wape_history: Vec::new(),
+            capacity_history: Vec::new(),
+        }
+    }
+
+    /// Anticipated downtime for a transition `from → to` (worst case for a
+    /// failure is the scale-out path, §3.4).
+    pub fn anticipated_downtime(&self, from: usize, to: usize) -> f64 {
+        if to >= from {
+            self.downtime_out
+        } else {
+            self.downtime_in
+        }
+    }
+
+    /// Fold an observed downtime into the adaptive estimate (EMA; §3.5
+    /// "this generally yields more accurate recovery time predictions over
+    /// time").
+    pub fn observe_downtime(&mut self, scale_out: bool, secs: f64) {
+        const ALPHA: f64 = 0.3;
+        let slot = if scale_out {
+            &mut self.downtime_out
+        } else {
+            &mut self.downtime_in
+        };
+        *slot = (1.0 - ALPHA) * *slot + ALPHA * secs;
+    }
+
+    /// Reset per-worker regression state (on rescale the pods are new and
+    /// the data distribution changed; §3.1 monitors each worker freshly).
+    pub fn reset_capacity_state(&mut self) {
+        self.capacity_state.reset_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knowledge() -> Knowledge {
+        Knowledge::new(&ArtifactMeta::default(), 30.0, 15.0)
+    }
+
+    #[test]
+    fn anticipated_downtime_direction() {
+        let k = knowledge();
+        assert_eq!(k.anticipated_downtime(4, 8), 30.0);
+        assert_eq!(k.anticipated_downtime(8, 4), 15.0);
+        // Failure (same → same) uses the conservative scale-out estimate.
+        assert_eq!(k.anticipated_downtime(4, 4), 30.0);
+    }
+
+    #[test]
+    fn downtime_adapts_toward_observations() {
+        let mut k = knowledge();
+        for _ in 0..20 {
+            k.observe_downtime(true, 50.0);
+        }
+        assert!((k.downtime_out - 50.0).abs() < 1.0, "{}", k.downtime_out);
+        assert_eq!(k.downtime_in, 15.0); // untouched
+    }
+
+    #[test]
+    fn capacity_state_resets() {
+        let mut k = knowledge();
+        // Simulate some accumulated state.
+        k.capacity_state = CapacityState::from_vec(vec![1.0; 32 * 5], 32).unwrap();
+        k.reset_capacity_state();
+        assert!(k.capacity_state.as_slice().iter().all(|v| *v == 0.0));
+    }
+}

@@ -1,0 +1,325 @@
+//! Daedalus — the paper's self-adaptive MAPE-K autoscaling manager (§3).
+//!
+//! Every `loop_interval` seconds (60 s in the paper) the manager runs:
+//!
+//! * **Monitor** ([`monitor`]) — per-worker CPU/throughput (1-min moving
+//!   averages), total consumer lag, current parallelism, and the workload
+//!   observed since the last iteration, all from the TSDB.
+//! * **Analyze** ([`analyze`], [`forecasting`]) — per-worker CPU↔throughput
+//!   regression capacity models updated through the **AOT capacity
+//!   artifact** (Welford fold + prediction at the skew-aware CPU target),
+//!   capacity estimates for every scale-out, and a 15-minute workload
+//!   forecast through the **AOT forecast artifact**, WAPE-gated with a
+//!   linear fallback and retrain counter (§3.3).
+//! * **Plan** ([`plan`]) — Algorithm 1: the smallest scale-out that covers
+//!   the observed and predicted workload and recovers within the target
+//!   recovery time ([`recovery`]), with consumer-lag scale-in protection.
+//! * **Execute** — request the rescale and monitor the actual recovery with
+//!   statistical anomaly detection ([`anomaly`]), adaptively refining the
+//!   assumed downtimes.
+//!
+//! Knowledge ([`knowledge`]) is the state shared between phases.
+
+pub mod analyze;
+pub mod anomaly;
+pub mod forecasting;
+pub mod knowledge;
+pub mod monitor;
+pub mod plan;
+pub mod recovery;
+
+use super::Autoscaler;
+use crate::dsp::engine::SimView;
+use crate::runtime::ComputeBackend;
+
+use analyze::Analyzer;
+use anomaly::RecoveryMonitor;
+use knowledge::Knowledge;
+use monitor::MonitorData;
+
+/// Tunables (paper defaults).
+#[derive(Debug, Clone)]
+pub struct DaedalusConfig {
+    /// MAPE-K loop interval (seconds).
+    pub loop_interval: u64,
+    /// Target recovery time (seconds) — 600 in the evaluation.
+    pub recovery_target: f64,
+    /// Forecast-quality gate: WAPE above this uses the linear fallback.
+    pub wape_threshold: f64,
+    /// Consecutive poor forecasts before a retrain (§3.3).
+    pub retrain_streak: usize,
+    /// Grace period after any scaling action (seconds; 3 min in §3.2).
+    pub grace_period: u64,
+    /// "Long-lived decision" window of Algorithm 1 (600 s).
+    pub long_lived_window: u64,
+    /// CPU level the hottest worker is extrapolated to (1.0 = theoretical
+    /// maximum capacity, §3.1).
+    pub cpu_target: f64,
+    /// Initial anticipated downtime for scale-out / scale-in (§3.4).
+    pub initial_downtime_out: f64,
+    pub initial_downtime_in: f64,
+    /// CPU moving-average window for monitor (seconds).
+    pub cpu_window: u64,
+    /// Don't act before this much history exists.
+    pub warmup: u64,
+    // --- Ablation switches (all true/ArtifactAr = the paper's Daedalus) ---
+    /// Which forecaster feeds the plan phase (§3.3).
+    pub forecast_method: forecasting::ForecastMethod,
+    /// Enforce the recovery-time constraint in Algorithm 1 (§3.4).
+    pub use_recovery_constraint: bool,
+    /// Skew-aware per-worker CPU targets (§3.1, Fig 4); off = every worker
+    /// extrapolated to the same CPU (the assumption most prior work makes).
+    pub skew_aware: bool,
+    /// Consumer-lag scale-in protection (§3.2).
+    pub use_lag_guard: bool,
+}
+
+impl Default for DaedalusConfig {
+    fn default() -> Self {
+        Self {
+            loop_interval: 60,
+            recovery_target: 600.0,
+            wape_threshold: 0.25,
+            retrain_streak: 15,
+            grace_period: 180,
+            long_lived_window: 600,
+            cpu_target: 1.0,
+            initial_downtime_out: 30.0,
+            initial_downtime_in: 15.0,
+            cpu_window: 60,
+            warmup: 120,
+            forecast_method: forecasting::ForecastMethod::ArtifactAr,
+            use_recovery_constraint: true,
+            skew_aware: true,
+            use_lag_guard: true,
+        }
+    }
+}
+
+/// The self-adaptive manager.
+pub struct Daedalus {
+    pub cfg: DaedalusConfig,
+    backend: ComputeBackend,
+    knowledge: Knowledge,
+    analyzer: Analyzer,
+    recovery_monitor: Option<RecoveryMonitor>,
+    next_loop: u64,
+}
+
+impl Daedalus {
+    pub fn new(cfg: DaedalusConfig, backend: ComputeBackend) -> Self {
+        let meta = backend.meta().clone();
+        Self {
+            knowledge: Knowledge::new(&meta, cfg.initial_downtime_out, cfg.initial_downtime_in),
+            analyzer: Analyzer::new(meta),
+            recovery_monitor: None,
+            next_loop: cfg.warmup,
+            cfg,
+            backend,
+        }
+    }
+
+    /// Access to the knowledge base (reports, tests).
+    pub fn knowledge(&self) -> &Knowledge {
+        &self.knowledge
+    }
+
+    /// One full MAPE-K iteration. Returns a desired parallelism if the plan
+    /// phase decided to rescale.
+    fn mape_iteration(&mut self, view: &SimView<'_>) -> Option<usize> {
+        // Monitor.
+        let data = MonitorData::collect(view, &self.cfg, self.backend.meta());
+        if data.workers.is_empty() {
+            return None;
+        }
+
+        // Analyze: capacity models (artifact) + forecast (artifact + gate).
+        let capacities = self.analyzer.update_capacity(
+            &self.backend,
+            &mut self.knowledge,
+            &data,
+            self.cfg.cpu_target,
+            self.cfg.skew_aware,
+        );
+        let forecast = forecasting::forecast(
+            &self.backend,
+            &mut self.knowledge,
+            &data,
+            &self.cfg,
+            view.now,
+        );
+
+        // Plan: Algorithm 1.
+        let decision = plan::plan_scale_out(
+            view.now,
+            &capacities,
+            &data,
+            &forecast,
+            &self.knowledge,
+            &self.cfg,
+            view.max_replicas,
+        );
+
+        // Execute: only if it changes the parallelism.
+        if decision.target != data.parallelism {
+            if let Some(rt) = decision.predicted_recovery {
+                self.knowledge
+                    .predicted_recoveries
+                    .push((view.now, rt));
+            }
+            Some(decision.target)
+        } else {
+            None
+        }
+    }
+}
+
+impl Autoscaler for Daedalus {
+    fn name(&self) -> String {
+        "daedalus".to_string()
+    }
+
+    fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
+        // Continuous background work (the paper's "background threads"):
+        // anomaly statistics and recovery monitoring run every second.
+        anomaly::track(&mut self.knowledge, view);
+        if let Some(mon) = &mut self.recovery_monitor {
+            if mon.update(&mut self.knowledge, view) {
+                self.recovery_monitor = None;
+            }
+        }
+
+        if view.now < self.next_loop {
+            return None;
+        }
+        self.next_loop = view.now + self.cfg.loop_interval;
+
+        // Respect the grace period after a scaling action (§3.2).
+        if let Some(last) = self.knowledge.last_rescale {
+            if view.now < last + self.cfg.grace_period {
+                return None;
+            }
+        }
+        // MAPE-K loop needs a serving job to monitor.
+        if !view.ready {
+            return None;
+        }
+
+        let decision = self.mape_iteration(view)?;
+        // Execute. The pods will be recreated (placement and per-pod speed
+        // may change) — per-worker regression state starts fresh; the
+        // seen-scale-out capacity ledger persists.
+        self.knowledge.reset_capacity_state();
+        self.knowledge.last_rescale = Some(view.now);
+        self.knowledge.rescale_count += 1;
+        let scale_out = decision > view.parallelism;
+        self.recovery_monitor = Some(RecoveryMonitor::start(view.now, scale_out));
+        Some(decision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{EngineProfile, SimConfig, Simulation};
+    use crate::jobs::JobProfile;
+    use crate::workload::{ConstantWorkload, StepWorkload};
+
+    fn run_with_daedalus(
+        workload: Box<dyn crate::workload::Workload>,
+        secs: u64,
+    ) -> (Simulation, Daedalus) {
+        let cfg = SimConfig {
+            profile: EngineProfile::flink(),
+            job: JobProfile::wordcount(),
+            workload,
+            partitions: 36,
+            initial_replicas: 4,
+            max_replicas: 12,
+            seed: 42,
+            rate_noise: 0.01,
+            failures: vec![],
+        };
+        let mut sim = Simulation::new(cfg);
+        let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
+        for t in 0..secs {
+            sim.step(t);
+            if let Some(n) = d.decide(&sim.view()) {
+                sim.request_rescale(n);
+            }
+        }
+        (sim, d)
+    }
+
+    #[test]
+    fn scales_in_when_overprovisioned() {
+        // 4 workers ≈ 22k capacity for a 5k load → should shrink.
+        let (sim, _) = run_with_daedalus(
+            Box::new(ConstantWorkload {
+                rate: 5_000.0,
+                duration: 3_000,
+            }),
+            3_000,
+        );
+        assert!(
+            sim.parallelism() <= 2,
+            "still at {} workers",
+            sim.parallelism()
+        );
+        // And it must still keep up.
+        assert!(sim.total_backlog() < 20_000.0);
+    }
+
+    #[test]
+    fn scales_out_when_underprovisioned() {
+        // 4 workers ≈ 22k capacity, 40k load → must grow.
+        let (sim, _) = run_with_daedalus(
+            Box::new(ConstantWorkload {
+                rate: 35_000.0,
+                duration: 3_000,
+            }),
+            3_000,
+        );
+        assert!(sim.parallelism() >= 8, "only {} workers", sim.parallelism());
+        // Lag must eventually drain.
+        assert!(
+            sim.total_backlog() < 100_000.0,
+            "backlog {}",
+            sim.total_backlog()
+        );
+    }
+
+    #[test]
+    fn reacts_to_step_increase() {
+        let (sim, d) = run_with_daedalus(
+            Box::new(StepWorkload {
+                steps: vec![(0, 8_000.0), (1_500, 38_000.0)],
+                duration: 4_000,
+            }),
+            4_000,
+        );
+        assert!(sim.parallelism() >= 9, "p = {}", sim.parallelism());
+        assert!(d.knowledge().rescale_count >= 1);
+        assert!(sim.total_backlog() < 100_000.0);
+    }
+
+    #[test]
+    fn grace_period_limits_rescale_frequency() {
+        let (sim, _) = run_with_daedalus(
+            Box::new(ConstantWorkload {
+                rate: 30_000.0,
+                duration: 2_000,
+            }),
+            2_000,
+        );
+        // Consecutive rescales must be ≥ grace period apart.
+        let log = &sim.rescale_log;
+        for pair in log.windows(2) {
+            assert!(
+                pair[1].t - pair[0].t >= 180,
+                "rescales too close: {:?}",
+                pair
+            );
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Monitor phase (§3.6): pull everything one MAPE-K iteration needs out of
+//! the metric store.
+
+use crate::clock::Timestamp;
+use crate::dsp::engine::SimView;
+use crate::metrics::query::{self, WorkerSnapshot};
+use crate::runtime::ArtifactMeta;
+
+use super::DaedalusConfig;
+
+/// Everything the analyze/plan phases consume this iteration.
+#[derive(Debug, Clone)]
+pub struct MonitorData {
+    pub now: Timestamp,
+    /// Per-worker CPU/throughput snapshots (1-min moving averages).
+    pub workers: Vec<WorkerSnapshot>,
+    /// Full fixed-size workload history window for the forecaster.
+    pub history: Vec<f64>,
+    /// Workload observed since the last loop iteration: (avg, max).
+    pub workload_avg: f64,
+    pub workload_max: f64,
+    /// Total consumer lag (tuples).
+    pub consumer_lag: f64,
+    pub parallelism: usize,
+}
+
+impl MonitorData {
+    pub fn collect(view: &SimView<'_>, cfg: &DaedalusConfig, meta: &ArtifactMeta) -> Self {
+        let now = view.now;
+        let from = now.saturating_sub(cfg.loop_interval.saturating_sub(1));
+        let (workload_avg, workload_max) =
+            query::workload_stats(view.tsdb, from, now).unwrap_or((0.0, 0.0));
+        // Consumer lag under exactly-once is committed-offset based, so it
+        // saw-tooths up to checkpoint_interval × rate even when fully
+        // caught up. The minimum over one checkpoint interval is the true
+        // outstanding backlog.
+        let lag_id = crate::metrics::SeriesId::global("consumer_lag");
+        let lag_floor = view
+            .tsdb
+            .values_over(&lag_id, now.saturating_sub(15), now)
+            .into_iter()
+            .fold(f64::MAX, f64::min);
+        let consumer_lag = if lag_floor == f64::MAX {
+            query::consumer_lag(view.tsdb, now)
+        } else {
+            lag_floor
+        };
+        Self {
+            now,
+            workers: query::worker_snapshots(view.tsdb, now, cfg.cpu_window),
+            history: query::workload_window(view.tsdb, now, meta.window),
+            workload_avg,
+            workload_max,
+            consumer_lag,
+            parallelism: view.parallelism,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Tsdb;
+
+    #[test]
+    fn collects_full_iteration_view() {
+        let mut db = Tsdb::new();
+        for t in 0..200u64 {
+            db.record_global("workload_rate", t, 10_000.0 + t as f64);
+            db.record_global("consumer_lag", t, 500.0);
+            for w in 0..3 {
+                db.record_worker("worker_cpu", w, t, 0.5);
+                db.record_worker("worker_throughput", w, t, 4_000.0);
+            }
+        }
+        let view = SimView {
+            now: 199,
+            tsdb: &db,
+            parallelism: 3,
+            ready: true,
+            max_replicas: 12,
+        };
+        let cfg = DaedalusConfig::default();
+        let meta = ArtifactMeta::default();
+        let d = MonitorData::collect(&view, &cfg, &meta);
+        assert_eq!(d.workers.len(), 3);
+        assert_eq!(d.history.len(), meta.window);
+        // Last loop interval covers t in [140, 199]: avg = 10_000 + 169.5.
+        crate::assert_close!(d.workload_avg, 10_169.5, atol = 1e-9);
+        crate::assert_close!(d.workload_max, 10_199.0, atol = 1e-9);
+        crate::assert_close!(d.consumer_lag, 500.0, atol = 1e-12);
+        assert_eq!(d.parallelism, 3);
+    }
+}

@@ -1,0 +1,281 @@
+//! Plan phase — Algorithm 1 (§3.2): determine the scale-out.
+//!
+//! Faithful transcription of the paper's pseudocode:
+//!
+//! ```text
+//! if time since last rescale < 600 s:
+//!     if C_current > W_avg and C_current > TSF_max until next loop:
+//!         return current parallelism
+//! for i = 1 to MaxScaleout:
+//!     if C_i > W_avg:
+//!         RT_i ← predict_recovery_time(i)
+//!         if RT_i > RT_target:            continue
+//!         if C_i < TSF_max until RT_i:    continue
+//!         if i == current parallelism:    return i
+//!         if i < current and C_i < consumer lag: continue
+//!         if C_i > TSF_max:               return i
+//! return MaxScaleout
+//! ```
+
+use crate::clock::Timestamp;
+
+use super::analyze::CapacityEstimates;
+use super::forecasting::ForecastResult;
+use super::knowledge::Knowledge;
+use super::monitor::MonitorData;
+use super::recovery::predict_recovery_time;
+use super::DaedalusConfig;
+
+/// Checkpoint interval assumed for replay-backlog worst case (§3.4). The
+/// paper uses the job's configured 10 s interval.
+pub const CHECKPOINT_INTERVAL: u64 = 10;
+
+fn max_until(values: &[f64], secs: usize) -> f64 {
+    values
+        .iter()
+        .take(secs.max(1))
+        .copied()
+        .fold(0.0, f64::max)
+}
+
+/// Outcome of the plan phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanDecision {
+    /// Chosen parallelism (may equal the current one: "no rescale").
+    pub target: usize,
+    /// Predicted recovery time for the chosen scale-out, if one was
+    /// computed (None when the early "long-lived" check short-circuits).
+    pub predicted_recovery: Option<f64>,
+}
+
+/// Algorithm 1. Returns the chosen scale-out and its predicted recovery.
+pub fn plan_scale_out(
+    now: Timestamp,
+    caps: &CapacityEstimates,
+    data: &MonitorData,
+    forecast: &ForecastResult,
+    knowledge: &Knowledge,
+    cfg: &DaedalusConfig,
+    max_scaleout: usize,
+) -> PlanDecision {
+    let current = data.parallelism;
+    let tsf = &forecast.values;
+    let recent = &data.history[data.history.len().saturating_sub(60)..];
+
+    // Long-lived decisions: right after a rescale, only interfere if the
+    // current capacity is insufficient.
+    if let Some(last) = knowledge.last_rescale {
+        if now.saturating_sub(last) < cfg.long_lived_window {
+            let until_next_loop = max_until(tsf, cfg.loop_interval as usize);
+            let c_cur = caps.at(current);
+            if c_cur > data.workload_avg && c_cur > until_next_loop {
+                return PlanDecision { target: current, predicted_recovery: None };
+            }
+        }
+    }
+
+    let tsf_max_full = max_until(tsf, tsf.len());
+    for i in 1..=max_scaleout {
+        let c_i = caps.at(i);
+        // Must cover the *observed* average workload (reactive guard).
+        if c_i <= data.workload_avg {
+            continue;
+        }
+        // Must recover within the target.
+        let downtime = knowledge.anticipated_downtime(current, i);
+        let rt = predict_recovery_time(c_i, recent, tsf, CHECKPOINT_INTERVAL, downtime);
+        if cfg.use_recovery_constraint {
+            if rt > cfg.recovery_target {
+                continue;
+            }
+            // Must handle the workload *while* recovering.
+            if c_i < max_until(tsf, rt.ceil().min(1e9) as usize) {
+                continue;
+            }
+        }
+        // Valid scale-out. Same as current → nothing to do.
+        if i == current {
+            return PlanDecision { target: i, predicted_recovery: Some(rt) };
+        }
+        // Scale-in protection: while the consumer lag exceeds the target
+        // capacity the system is recovering/overloaded — wait (§3.2).
+        if cfg.use_lag_guard && i < current && c_i < data.consumer_lag {
+            continue;
+        }
+        // Long-lived: must also cover the full 15-minute forecast.
+        if c_i > tsf_max_full {
+            return PlanDecision { target: i, predicted_recovery: Some(rt) };
+        }
+    }
+    PlanDecision { target: max_scaleout, predicted_recovery: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn caps_linear(per_worker: f64, parallelism: usize) -> CapacityEstimates {
+        CapacityEstimates {
+            per_worker: vec![per_worker; parallelism],
+            current: per_worker * parallelism as f64,
+            parallelism,
+            avg_per_worker: per_worker,
+            seen: HashMap::new(),
+        }
+    }
+
+    fn data(avg: f64, lag: f64, parallelism: usize) -> MonitorData {
+        MonitorData {
+            now: 1_000,
+            workers: vec![],
+            history: vec![avg; 1800],
+            workload_avg: avg,
+            workload_max: avg * 1.05,
+            consumer_lag: lag,
+            parallelism,
+        }
+    }
+
+    fn fc(vals: Vec<f64>) -> ForecastResult {
+        ForecastResult {
+            values: vals,
+            from_model: true,
+            prev_wape: None,
+        }
+    }
+
+    fn knowledge() -> Knowledge {
+        Knowledge::new(&crate::runtime::ArtifactMeta::default(), 30.0, 15.0)
+    }
+
+    #[test]
+    fn picks_minimum_sufficient_scaleout() {
+        // 5k per worker, 12k steady workload → needs ≥ 3 workers... but
+        // recovery headroom pushes it to the smallest i whose capacity
+        // covers workload AND recovers in 600 s. i=3 gives 15k vs 12k → 3k
+        // spare; backlog ≈ 12k·10 + 12k·30 = 480k → 160 s. Valid.
+        let d = data(12_000.0, 0.0, 8);
+        let decision = plan_scale_out(
+            1_000,
+            &caps_linear(5_000.0, 8),
+            &d,
+            &fc(vec![12_000.0; 900]),
+            &knowledge(),
+            &DaedalusConfig::default(),
+            18,
+        );
+        assert_eq!(decision.target, 3);
+        assert!(decision.predicted_recovery.unwrap() < 600.0);
+    }
+
+    #[test]
+    fn recovery_target_forces_larger_scaleout() {
+        // Same but a tight 60 s recovery target: i=3 takes ~160 s → skip;
+        // i=4 → 20k cap, 8k spare → backlog 480k/8k = 60 s + fits.
+        let mut cfg = DaedalusConfig::default();
+        cfg.recovery_target = 100.0;
+        let d = data(12_000.0, 0.0, 8);
+        let decision = plan_scale_out(
+            1_000,
+            &caps_linear(5_000.0, 8),
+            &d,
+            &fc(vec![12_000.0; 900]),
+            &knowledge(),
+            &cfg,
+            18,
+        );
+        assert!(decision.target > 3, "decision {decision:?}");
+        assert!(decision.target <= 5);
+        assert!(decision.predicted_recovery.unwrap() <= 100.0);
+    }
+
+    #[test]
+    fn consumer_lag_blocks_scale_in() {
+        // Over-provisioned (8 × 5k for 12k load) but a huge lag: the
+        // scale-in candidates (3..7) are all below the lag → wait at 8.
+        let d = data(12_000.0, 10_000_000.0, 8);
+        let decision = plan_scale_out(
+            1_000,
+            &caps_linear(5_000.0, 8),
+            &d,
+            &fc(vec![12_000.0; 900]),
+            &knowledge(),
+            &DaedalusConfig::default(),
+            18,
+        );
+        assert_eq!(decision.target, 8);
+    }
+
+    #[test]
+    fn rising_forecast_provisions_ahead() {
+        // Steady 12k now but forecast ramps to 40k → needs ≥ 9 workers
+        // (45k) to cover the full forecast.
+        let d = data(12_000.0, 0.0, 3);
+        let rising: Vec<f64> = (0..900).map(|s| 12_000.0 + 28_000.0 * s as f64 / 900.0).collect();
+        let decision = plan_scale_out(
+            1_000,
+            &caps_linear(5_000.0, 3),
+            &d,
+            &fc(rising),
+            &knowledge(),
+            &DaedalusConfig::default(),
+            18,
+        );
+        // Forecast max ≈ 40k → needs ≥ 8 workers (40k capacity).
+        assert!(decision.target >= 8, "decision {decision:?}");
+    }
+
+    #[test]
+    fn recent_rescale_short_circuits_when_capacity_sufficient() {
+        let mut k = knowledge();
+        k.last_rescale = Some(900); // 100 s ago < 600 s window
+        let d = data(12_000.0, 0.0, 8);
+        let decision = plan_scale_out(
+            1_000,
+            &caps_linear(5_000.0, 8),
+            &d,
+            &fc(vec![12_000.0; 900]),
+            &k,
+            &DaedalusConfig::default(),
+            18,
+        );
+        // Would otherwise scale in to 3; the long-lived check holds at 8.
+        assert_eq!(decision.target, 8);
+    }
+
+    #[test]
+    fn recent_rescale_does_not_block_needed_scale_out() {
+        let mut k = knowledge();
+        k.last_rescale = Some(900);
+        // Capacity 15k < workload 20k → the short-circuit must NOT trigger.
+        let d = data(20_000.0, 0.0, 3);
+        let decision = plan_scale_out(
+            1_000,
+            &caps_linear(5_000.0, 3),
+            &d,
+            &fc(vec![20_000.0; 900]),
+            &k,
+            &DaedalusConfig::default(),
+            18,
+        );
+        assert!(decision.target > 3, "decision {decision:?}");
+    }
+
+    #[test]
+    fn impossible_demands_return_max_scaleout() {
+        // Workload beyond any capacity → MaxScaleout (the algorithm's
+        // final fallback line).
+        let d = data(500_000.0, 0.0, 4);
+        let decision = plan_scale_out(
+            1_000,
+            &caps_linear(5_000.0, 4),
+            &d,
+            &fc(vec![500_000.0; 900]),
+            &knowledge(),
+            &DaedalusConfig::default(),
+            18,
+        );
+        assert_eq!(decision.target, 18);
+    }
+}

@@ -1,0 +1,129 @@
+//! Recovery-time prediction (§3.4, Fig 6).
+//!
+//! `recovery = downtime + catch-up`: while the system is down, the backlog
+//! is (a) everything after the last completed checkpoint — worst case one
+//! full checkpoint interval of the recent workload — plus (b) whatever
+//! arrives during the anticipated downtime (from the forecast). After the
+//! restart, the target scale-out processes backlog + live workload at full
+//! capacity; recovery ends when the cumulative *extra* capacity
+//! (capacity − forecast) covers the backlog.
+
+use crate::clock::Timestamp;
+
+/// Predict the recovery time (seconds from the moment processing stops) if
+/// the job moves to a scale-out with `capacity` while the workload follows
+/// `forecast` (1 s steps). Returns `f64::INFINITY` when the horizon is too
+/// short for recovery — i.e. the scale-out cannot recover in forecastable
+/// time.
+pub fn predict_recovery_time(
+    capacity: f64,
+    recent_workload: &[f64],
+    forecast: &[f64],
+    checkpoint_interval: u64,
+    downtime_secs: f64,
+) -> f64 {
+    // Worst case: the failure happens right before a checkpoint completes —
+    // a full interval of tuples needs reprocessing (§3.4).
+    let k = (checkpoint_interval as usize).min(recent_workload.len());
+    let ckpt_backlog: f64 = recent_workload[recent_workload.len() - k..].iter().sum();
+
+    let down = downtime_secs.ceil().max(0.0) as usize;
+    let arrive_during_down: f64 = forecast.iter().take(down).sum();
+    let backlog = ckpt_backlog + arrive_during_down;
+
+    let mut extra = 0.0;
+    for (s, rate) in forecast.iter().enumerate().skip(down) {
+        extra += capacity - rate;
+        if extra >= backlog {
+            return (s + 1) as f64;
+        }
+    }
+    f64::INFINITY
+}
+
+/// Convenience: the predicted recovery time for moving `from → to` given
+/// adaptive downtime estimates.
+pub fn predict_for_transition(
+    capacity_at_target: f64,
+    recent_workload: &[f64],
+    forecast: &[f64],
+    checkpoint_interval: u64,
+    downtime: f64,
+    _from: usize,
+    _to: usize,
+) -> f64 {
+    predict_recovery_time(
+        capacity_at_target,
+        recent_workload,
+        forecast,
+        checkpoint_interval,
+        downtime,
+    )
+}
+
+/// Timestamp helper: seconds since `from` (used by callers logging
+/// measured vs. predicted recovery, §4.8).
+pub fn elapsed(from: Timestamp, to: Timestamp) -> f64 {
+    to.saturating_sub(from) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_hand_computed_case() {
+        // Workload steady at 100/s, checkpoint interval 10 s → 1000 tuples
+        // to replay. Downtime 30 s → 3000 more. Backlog = 4000.
+        // Capacity 300/s, forecast 100/s → 200/s extra after restart.
+        // Catch-up = 4000/200 = 20 s → recovery = 30 + 20 = 50 s.
+        let recent = vec![100.0; 60];
+        let forecast = vec![100.0; 900];
+        let rt = predict_recovery_time(300.0, &recent, &forecast, 10, 30.0);
+        crate::assert_close!(rt, 50.0, atol = 1.0);
+    }
+
+    #[test]
+    fn higher_capacity_recovers_faster() {
+        let recent = vec![1_000.0; 60];
+        let forecast = vec![1_000.0; 900];
+        let rt_small = predict_recovery_time(1_500.0, &recent, &forecast, 10, 30.0);
+        let rt_big = predict_recovery_time(4_000.0, &recent, &forecast, 10, 30.0);
+        assert!(rt_big < rt_small, "{rt_big} vs {rt_small}");
+    }
+
+    #[test]
+    fn capacity_below_workload_never_recovers() {
+        let recent = vec![1_000.0; 60];
+        let forecast = vec![1_000.0; 900];
+        let rt = predict_recovery_time(900.0, &recent, &forecast, 10, 30.0);
+        assert!(rt.is_infinite());
+    }
+
+    #[test]
+    fn rising_workload_delays_recovery() {
+        let recent = vec![1_000.0; 60];
+        let flat = vec![1_000.0; 900];
+        let rising: Vec<f64> = (0..900).map(|s| 1_000.0 + s as f64).collect();
+        let rt_flat = predict_recovery_time(2_000.0, &recent, &flat, 10, 30.0);
+        let rt_rise = predict_recovery_time(2_000.0, &recent, &rising, 10, 30.0);
+        assert!(rt_rise > rt_flat);
+    }
+
+    #[test]
+    fn longer_downtime_longer_recovery() {
+        let recent = vec![500.0; 60];
+        let forecast = vec![500.0; 900];
+        let rt15 = predict_recovery_time(1_000.0, &recent, &forecast, 10, 15.0);
+        let rt60 = predict_recovery_time(1_000.0, &recent, &forecast, 10, 60.0);
+        assert!(rt60 > rt15 + 40.0, "{rt60} vs {rt15}");
+    }
+
+    #[test]
+    fn zero_downtime_zero_backlog_recovers_immediately() {
+        let recent = vec![0.0; 60];
+        let forecast = vec![0.0; 900];
+        let rt = predict_recovery_time(1_000.0, &recent, &forecast, 10, 0.0);
+        crate::assert_close!(rt, 1.0, atol = 1e-9);
+    }
+}

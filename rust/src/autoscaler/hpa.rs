@@ -1,0 +1,264 @@
+//! Kubernetes Horizontal Pod Autoscaler semantics (§4.3.2).
+//!
+//! Faithful to the upstream controller's documented behaviour:
+//!
+//! * sync period 15 s;
+//! * `desired = ceil(current · currentMetric / target)` on average CPU;
+//! * 10 % tolerance band around the ratio;
+//! * scale-*down* stabilization window of 300 s (the highest recommendation
+//!   over the window wins — "flapping" protection);
+//! * unready pods are ignored: while the deployment restarts, the
+//!   controller holds its last decision.
+//!
+//! The paper tests HPA-80/HPA-85 against Flink and HPA-60/HPA-80 against
+//! Kafka Streams (Figs 7–10).
+
+use std::collections::VecDeque;
+
+use super::Autoscaler;
+use crate::clock::Timestamp;
+use crate::dsp::engine::SimView;
+use crate::metrics::query::worker_snapshots;
+
+/// HPA tuning (mirrors the upstream defaults).
+#[derive(Debug, Clone)]
+pub struct HpaConfig {
+    /// Target average CPU utilization (0..1), e.g. 0.80.
+    pub target_cpu: f64,
+    /// Controller sync period (seconds).
+    pub sync_period: u64,
+    /// Scale-down stabilization window (seconds).
+    pub stabilization_secs: u64,
+    /// Ratio tolerance: no action if |ratio − 1| ≤ tolerance.
+    pub tolerance: f64,
+    /// CPU moving-average window fed to the controller (metrics-server
+    /// granularity).
+    pub cpu_window: u64,
+    /// `--horizontal-pod-autoscaler-cpu-initialization-period`: CPU samples
+    /// from pods started this recently are not trusted. With Flink reactive
+    /// mode every rescale restarts *all* pods, so the controller
+    /// effectively holds for this long after each restart — without it the
+    /// 100 %-CPU catch-up phase after every restart triggers a scale-up
+    /// cascade.
+    pub cpu_init_period: u64,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+}
+
+impl HpaConfig {
+    /// Upstream defaults at a given CPU target.
+    pub fn at_target(target_cpu: f64, max_replicas: usize) -> Self {
+        Self {
+            target_cpu,
+            sync_period: 15,
+            stabilization_secs: 300,
+            tolerance: 0.10,
+            cpu_window: 60,
+            cpu_init_period: 30,
+            min_replicas: 1,
+            max_replicas,
+        }
+    }
+}
+
+/// The controller.
+pub struct Hpa {
+    cfg: HpaConfig,
+    /// Recent desired-replica recommendations: (time, replicas).
+    recommendations: VecDeque<(Timestamp, usize)>,
+    last_sync: Option<Timestamp>,
+    /// Whether the deployment was ready last tick (restart-edge detection).
+    was_ready: bool,
+    /// When the current pod set became ready (None until the first
+    /// restart — the initial deployment is assumed warmed up).
+    pods_ready_since: Option<Timestamp>,
+}
+
+impl Hpa {
+    pub fn new(cfg: HpaConfig) -> Self {
+        Self {
+            cfg,
+            recommendations: VecDeque::new(),
+            last_sync: None,
+            was_ready: true,
+            pods_ready_since: None,
+        }
+    }
+
+    /// One controller evaluation (called at sync boundaries).
+    fn evaluate(&mut self, view: &SimView<'_>) -> Option<usize> {
+        let snaps = worker_snapshots(view.tsdb, view.now, self.cfg.cpu_window);
+        if snaps.is_empty() {
+            return None;
+        }
+        let avg_cpu = snaps.iter().map(|s| s.cpu).sum::<f64>() / snaps.len() as f64;
+        let current = view.parallelism;
+        let ratio = avg_cpu / self.cfg.target_cpu;
+
+        let raw = if (ratio - 1.0).abs() <= self.cfg.tolerance {
+            current
+        } else {
+            (current as f64 * ratio).ceil() as usize
+        };
+        let raw = raw.clamp(self.cfg.min_replicas, self.cfg.max_replicas);
+
+        // Stabilization: remember this recommendation; scale-down only to
+        // the max recommendation inside the window, scale-up immediately.
+        self.recommendations.push_back((view.now, raw));
+        let horizon = view.now.saturating_sub(self.cfg.stabilization_secs);
+        while let Some((t, _)) = self.recommendations.front() {
+            if *t < horizon {
+                self.recommendations.pop_front();
+            } else {
+                break;
+            }
+        }
+        let stabilized = if raw < current {
+            self.recommendations
+                .iter()
+                .map(|(_, r)| *r)
+                .max()
+                .unwrap_or(raw)
+                .min(current)
+        } else {
+            raw
+        };
+        (stabilized != current).then_some(stabilized)
+    }
+}
+
+impl Autoscaler for Hpa {
+    fn name(&self) -> String {
+        format!("hpa-{:02.0}", self.cfg.target_cpu * 100.0)
+    }
+
+    fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
+        // Track restart edges: a false→true readiness transition means the
+        // whole pod set was just recreated (Flink reactive mode).
+        if view.ready && !self.was_ready {
+            self.pods_ready_since = Some(view.now);
+        }
+        self.was_ready = view.ready;
+        // Unready pods are ignored → controller holds during restarts.
+        if !view.ready {
+            return None;
+        }
+        // CPU of freshly-started pods is not trusted yet.
+        if let Some(since) = self.pods_ready_since {
+            if view.now < since + self.cfg.cpu_init_period {
+                return None;
+            }
+        }
+        let due = self
+            .last_sync
+            .map_or(true, |t| view.now >= t + self.cfg.sync_period);
+        if !due {
+            return None;
+        }
+        self.last_sync = Some(view.now);
+        self.evaluate(view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Tsdb;
+
+    fn db_with_cpu(cpu: f64, workers: usize, upto: Timestamp) -> Tsdb {
+        let mut db = Tsdb::new();
+        for t in 0..=upto {
+            for w in 0..workers {
+                db.record_worker("worker_cpu", w, t, cpu);
+                db.record_worker("worker_throughput", w, t, 1_000.0);
+            }
+        }
+        db
+    }
+
+    fn view<'a>(db: &'a Tsdb, now: Timestamp, parallelism: usize, ready: bool) -> SimView<'a> {
+        SimView {
+            now,
+            tsdb: db,
+            parallelism,
+            ready,
+            max_replicas: 18,
+        }
+    }
+
+    #[test]
+    fn scales_up_proportionally() {
+        let db = db_with_cpu(0.96, 4, 100);
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        // ceil(4 · 0.96/0.80) = ceil(4.8) = 5
+        assert_eq!(hpa.decide(&view(&db, 100, 4, true)), Some(5));
+    }
+
+    #[test]
+    fn tolerance_band_holds() {
+        let db = db_with_cpu(0.82, 4, 100);
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        assert_eq!(hpa.decide(&view(&db, 100, 4, true)), None);
+    }
+
+    #[test]
+    fn sync_period_limits_evaluations() {
+        let db = db_with_cpu(0.96, 4, 200);
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        assert!(hpa.decide(&view(&db, 100, 4, true)).is_some());
+        // 5 seconds later: not due yet.
+        assert_eq!(hpa.decide(&view(&db, 105, 4, true)), None);
+        // 15 seconds later: due again.
+        assert!(hpa.decide(&view(&db, 115, 4, true)).is_some());
+    }
+
+    #[test]
+    fn scale_down_waits_for_stabilization() {
+        // CPU low → raw recommendation is smaller, but a recent high
+        // recommendation inside the window blocks the scale-down.
+        let mut db = Tsdb::new();
+        for t in 0..=400 {
+            let cpu = if t < 100 { 0.95 } else { 0.30 };
+            for w in 0..8 {
+                db.record_worker("worker_cpu", w, t, cpu);
+                db.record_worker("worker_throughput", w, t, 1_000.0);
+            }
+        }
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        // At t=90 CPU is high: recommendation ≥ current (10).
+        assert_eq!(hpa.decide(&view(&db, 90, 8, true)), Some(10));
+        // Shortly after the drop, the old high recommendation still wins.
+        assert_eq!(hpa.decide(&view(&db, 180, 8, true)), None);
+        // Well past the window (old recs expired), scale-down happens.
+        let mut later = None;
+        for t in (195..460).step_by(15) {
+            if let Some(n) = hpa.decide(&view(&db, t, 8, true)) {
+                later = Some((t, n));
+                break;
+            }
+        }
+        let (t, n) = later.expect("eventually scales down");
+        assert!(t >= 390, "scaled down too early at {t}");
+        assert!(n < 8);
+    }
+
+    #[test]
+    fn holds_while_unready() {
+        let db = db_with_cpu(0.99, 4, 100);
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        assert_eq!(hpa.decide(&view(&db, 100, 4, false)), None);
+    }
+
+    #[test]
+    fn respects_max_replicas() {
+        let db = db_with_cpu(1.0, 17, 100);
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.30, 18));
+        assert_eq!(hpa.decide(&view(&db, 100, 17, true)), Some(18));
+    }
+
+    #[test]
+    fn name_formats_target() {
+        assert_eq!(Hpa::new(HpaConfig::at_target(0.8, 18)).name(), "hpa-80");
+        assert_eq!(Hpa::new(HpaConfig::at_target(0.6, 18)).name(), "hpa-60");
+    }
+}

@@ -1,0 +1,44 @@
+//! Autoscalers: Daedalus (the paper's contribution) and the comparison
+//! systems it is evaluated against (§4.3).
+//!
+//! * [`daedalus`] — the self-adaptive MAPE-K manager (§3).
+//! * [`hpa`] — Kubernetes Horizontal Pod Autoscaler semantics (§4.3.2).
+//! * [`ds2`] — DS2-style reactive true-rate scaler (related work, §2).
+//! * [`statik`] — fixed scale-out baseline (§4.3.1).
+//! * [`phoebe`] — profiling-based QoS-model autoscaler (§4.3.3).
+//!
+//! All implement [`Autoscaler`]: once per tick they see the metric store
+//! and may request a replica count; the engine turns requests into
+//! stop-the-world restarts.
+
+pub mod daedalus;
+pub mod ds2;
+pub mod hpa;
+pub mod phoebe;
+pub mod statik;
+
+pub use daedalus::{Daedalus, DaedalusConfig};
+pub use ds2::{Ds2, Ds2Config};
+pub use hpa::{Hpa, HpaConfig};
+pub use phoebe::{Phoebe, PhoebeConfig};
+pub use statik::Static;
+
+use crate::dsp::engine::SimView;
+
+/// A horizontal autoscaling policy.
+pub trait Autoscaler {
+    /// Display name for reports ("daedalus", "hpa-80", …).
+    fn name(&self) -> String;
+
+    /// Called once per simulated second with the current metric view.
+    /// Returning `Some(n)` requests a rescale to `n` replicas; the engine
+    /// ignores requests equal to the current parallelism or mid-restart.
+    fn decide(&mut self, view: &SimView<'_>) -> Option<usize>;
+
+    /// Whether the harness should complete a checkpoint immediately before
+    /// applying this scaler's rescale (Phoebe's manual pre-scale
+    /// checkpoint, §4.8).
+    fn wants_precheckpoint(&self) -> bool {
+        false
+    }
+}

@@ -1,0 +1,123 @@
+//! Phoebe-like autoscaler (§4.3.3) — the paper's state-of-the-art
+//! comparison system (Geldenhuys et al., ICWS '22).
+//!
+//! Differences from Daedalus that the paper calls out, all reproduced here:
+//!
+//! * **Initial profiling runs** ([`profiler`]) build per-scale-out QoS
+//!   models (max throughput, latency, recovery) before the job starts; the
+//!   profiling resource usage is accounted separately (Fig 11 discussion:
+//!   "when incorporating profiling time, Daedalus used 53 % less").
+//! * **Explicit latency model** ([`models`]): the planner targets the
+//!   scale-out with the *lowest predicted latency* among those that satisfy
+//!   capacity and the recovery-time target, rather than the smallest one.
+//! * **Manual checkpoint before rescaling** (minimizes replay): the harness
+//!   honours [`crate::autoscaler::Autoscaler::wants_precheckpoint`].
+//! * TSF (same forecast artifact — Phoebe also uses ARIMA-class forecasts).
+
+pub mod models;
+pub mod planner;
+pub mod profiler;
+
+pub use models::QosModels;
+pub use profiler::{profile_job, ProfilingReport};
+
+use super::Autoscaler;
+use crate::dsp::engine::SimView;
+use crate::metrics::query;
+use crate::runtime::ComputeBackend;
+
+/// Phoebe tuning.
+#[derive(Debug, Clone)]
+pub struct PhoebeConfig {
+    /// Planning interval (seconds).
+    pub loop_interval: u64,
+    /// Target recovery time (600 s in the Fig-11 comparison).
+    pub recovery_target: f64,
+    /// Capacity headroom: chosen scale-out must satisfy
+    /// `capacity ≥ headroom · forecast_max`.
+    pub headroom: f64,
+    /// Grace period between scaling actions.
+    pub grace_period: u64,
+    /// Warm-up before the first decision.
+    pub warmup: u64,
+}
+
+impl Default for PhoebeConfig {
+    fn default() -> Self {
+        Self {
+            loop_interval: 60,
+            recovery_target: 600.0,
+            headroom: 1.1,
+            grace_period: 300,
+            warmup: 120,
+        }
+    }
+}
+
+/// The Phoebe-like manager.
+pub struct Phoebe {
+    pub cfg: PhoebeConfig,
+    pub models: QosModels,
+    backend: ComputeBackend,
+    next_loop: u64,
+    last_rescale: Option<u64>,
+}
+
+impl Phoebe {
+    pub fn new(cfg: PhoebeConfig, models: QosModels, backend: ComputeBackend) -> Self {
+        Self {
+            next_loop: cfg.warmup,
+            cfg,
+            models,
+            backend,
+            last_rescale: None,
+        }
+    }
+}
+
+impl Autoscaler for Phoebe {
+    fn name(&self) -> String {
+        "phoebe".to_string()
+    }
+
+    fn wants_precheckpoint(&self) -> bool {
+        true
+    }
+
+    fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
+        if view.now < self.next_loop || !view.ready {
+            return None;
+        }
+        self.next_loop = view.now + self.cfg.loop_interval;
+        if let Some(last) = self.last_rescale {
+            if view.now < last + self.cfg.grace_period {
+                return None;
+            }
+        }
+
+        // Monitor + forecast (same TSF machinery class as Daedalus).
+        let meta = self.backend.meta();
+        let history = query::workload_window(view.tsdb, view.now, meta.window);
+        let hist32: Vec<f32> = history.iter().map(|v| *v as f32).collect();
+        let forecast = match self.backend.forecast(&hist32) {
+            Ok(f) => f.clamped(),
+            Err(_) => vec![*history.last().unwrap_or(&0.0); meta.horizon],
+        };
+        let from = view.now.saturating_sub(self.cfg.loop_interval - 1);
+        let (w_avg, _) = query::workload_stats(view.tsdb, from, view.now)?;
+
+        let decision = planner::plan(
+            &self.models,
+            &self.cfg,
+            w_avg,
+            &forecast,
+            view.max_replicas,
+        )?;
+        if decision != view.parallelism {
+            self.last_rescale = Some(view.now);
+            Some(decision)
+        } else {
+            None
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Phoebe's QoS models: piecewise-linear interpolation over the profiled
+//! scale-outs for max throughput, latency, and recovery time.
+
+/// Measurements for one profiled scale-out.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleoutProfile {
+    pub n: usize,
+    pub max_throughput: f64,
+    pub latency_ms: f64,
+    pub recovery_secs: f64,
+}
+
+/// Interpolating QoS models built from profiling runs.
+#[derive(Debug, Clone)]
+pub struct QosModels {
+    profiles: Vec<ScaleoutProfile>,
+}
+
+impl QosModels {
+    pub fn from_profiles(mut profiles: Vec<ScaleoutProfile>) -> Self {
+        assert!(!profiles.is_empty(), "need at least one profiled scale-out");
+        profiles.sort_by_key(|p| p.n);
+        Self { profiles }
+    }
+
+    pub fn profiles(&self) -> &[ScaleoutProfile] {
+        &self.profiles
+    }
+
+    fn interp(&self, n: usize, f: impl Fn(&ScaleoutProfile) -> f64) -> f64 {
+        let x = n as f64;
+        let ps = &self.profiles;
+        if ps.len() == 1 {
+            // Single point: scale proportionally with n (capacity-style).
+            return f(&ps[0]) * x / ps[0].n as f64;
+        }
+        // Below/above the profiled range: extrapolate from the end segment.
+        let seg = if n <= ps[0].n {
+            (&ps[0], &ps[1])
+        } else if n >= ps[ps.len() - 1].n {
+            (&ps[ps.len() - 2], &ps[ps.len() - 1])
+        } else {
+            let hi = ps.iter().position(|p| p.n >= n).unwrap();
+            (&ps[hi - 1], &ps[hi])
+        };
+        let (a, b) = seg;
+        let (xa, xb) = (a.n as f64, b.n as f64);
+        let (ya, yb) = (f(a), f(b));
+        ya + (yb - ya) * (x - xa) / (xb - xa)
+    }
+
+    /// Modelled max throughput at scale-out `n` (tuples/s).
+    pub fn capacity(&self, n: usize) -> f64 {
+        self.interp(n, |p| p.max_throughput).max(0.0)
+    }
+
+    /// Modelled steady-state latency at scale-out `n` (ms).
+    pub fn latency(&self, n: usize) -> f64 {
+        self.interp(n, |p| p.latency_ms).max(0.0)
+    }
+
+    /// Modelled recovery time at scale-out `n` (seconds).
+    pub fn recovery(&self, n: usize) -> f64 {
+        self.interp(n, |p| p.recovery_secs).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn models() -> QosModels {
+        QosModels::from_profiles(vec![
+            ScaleoutProfile {
+                n: 2,
+                max_throughput: 10_000.0,
+                latency_ms: 900.0,
+                recovery_secs: 300.0,
+            },
+            ScaleoutProfile {
+                n: 6,
+                max_throughput: 30_000.0,
+                latency_ms: 700.0,
+                recovery_secs: 120.0,
+            },
+            ScaleoutProfile {
+                n: 12,
+                max_throughput: 60_000.0,
+                latency_ms: 1_000.0,
+                recovery_secs: 60.0,
+            },
+        ])
+    }
+
+    #[test]
+    fn interpolates_between_points() {
+        let m = models();
+        crate::assert_close!(m.capacity(4), 20_000.0, atol = 1e-9);
+        crate::assert_close!(m.latency(9), 850.0, atol = 1e-9);
+        crate::assert_close!(m.recovery(9), 90.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn exact_at_profiled_points() {
+        let m = models();
+        crate::assert_close!(m.capacity(6), 30_000.0, atol = 1e-9);
+        crate::assert_close!(m.latency(12), 1_000.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn extrapolates_beyond_range() {
+        let m = models();
+        // Slope of the last segment: +5000/worker.
+        crate::assert_close!(m.capacity(14), 70_000.0, atol = 1e-6);
+        // And below the first: slope 5000/worker downward from (2, 10k).
+        crate::assert_close!(m.capacity(1), 5_000.0, atol = 1e-6);
+    }
+
+    #[test]
+    fn latency_curve_has_interior_minimum() {
+        // The profiled latency dips at 6 then rises (coordination overhead)
+        // — the planner exploits exactly this shape.
+        let m = models();
+        assert!(m.latency(6) < m.latency(2));
+        assert!(m.latency(6) < m.latency(12));
+    }
+
+    #[test]
+    fn single_point_scales_proportionally() {
+        let m = QosModels::from_profiles(vec![ScaleoutProfile {
+            n: 4,
+            max_throughput: 20_000.0,
+            latency_ms: 800.0,
+            recovery_secs: 100.0,
+        }]);
+        crate::assert_close!(m.capacity(8), 40_000.0, atol = 1e-9);
+    }
+}

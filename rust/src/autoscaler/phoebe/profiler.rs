@@ -1,0 +1,140 @@
+//! Phoebe's initial profiling runs.
+//!
+//! For each profiled scale-out the profiler runs a short dedicated job on
+//! the same substrate: a latency phase at moderate load, a saturation phase
+//! (max-throughput measurement), and an injected failure whose recovery is
+//! measured — mirroring Phoebe's "inject failures into profiling runs and
+//! incorporate the measured recovery times into its QoS models". The
+//! worker-seconds consumed are returned so experiments can charge Phoebe
+//! for them (Fig 11).
+
+use crate::dsp::{EngineProfile, SimConfig, Simulation};
+use crate::jobs::JobProfile;
+use crate::metrics::SeriesId;
+use crate::workload::StepWorkload;
+
+use super::models::{QosModels, ScaleoutProfile};
+
+/// Result of profiling one job on one engine.
+#[derive(Debug, Clone)]
+pub struct ProfilingReport {
+    pub models: QosModels,
+    /// Total worker-seconds consumed by all profiling runs.
+    pub worker_seconds: f64,
+}
+
+/// Profile `scaleouts` (e.g. [2, 4, 6, …]) for a job/engine combination.
+pub fn profile_job(
+    profile: &EngineProfile,
+    job: &JobProfile,
+    scaleouts: &[usize],
+    max_replicas: usize,
+    seed: u64,
+) -> ProfilingReport {
+    let mut profiles = Vec::new();
+    let mut worker_seconds = 0.0;
+
+    for (i, &n) in scaleouts.iter().enumerate() {
+        let nominal = job.capacity_at(n);
+        // Phase 1 (0–300 s): 65 % load — latency measurement.
+        // Phase 2 (300–600 s): 130 % load — saturation / max throughput.
+        // Phase 3 (600–1200 s): 60 % load, failure at 700 — recovery.
+        let workload = StepWorkload {
+            steps: vec![
+                (0, 0.65 * nominal),
+                (300, 1.30 * nominal),
+                (600, 0.60 * nominal),
+            ],
+            duration: 1_200,
+        };
+        let cfg = SimConfig {
+            profile: profile.clone(),
+            job: job.clone(),
+            workload: Box::new(workload),
+            partitions: max_replicas,
+            initial_replicas: n,
+            max_replicas,
+            seed: seed.wrapping_add(i as u64 * 7_919),
+            rate_noise: 0.01,
+            failures: vec![700],
+        };
+        let mut sim = Simulation::new(cfg);
+        for t in 0..1_200 {
+            sim.step(t);
+        }
+        worker_seconds += sim.worker_seconds();
+
+        let db = sim.tsdb();
+        let max_tput = db
+            .avg_over(&SeriesId::global("throughput"), 400, 580)
+            .unwrap_or(nominal);
+        let latency_ms = db
+            .avg_over(&SeriesId::global("latency_ms"), 100, 290)
+            .unwrap_or(1_000.0);
+        // Recovery: from the failure until lag returns to pre-failure level.
+        let pre_lag = db
+            .avg_over(&SeriesId::global("consumer_lag"), 650, 699)
+            .unwrap_or(0.0);
+        let mut recovery_secs = 500.0; // pessimistic default
+        for t in 701..1_200 {
+            if let Some((_, lag)) = db.last_at(&SeriesId::global("consumer_lag"), t) {
+                if lag <= pre_lag * 1.5 + 1_000.0 {
+                    recovery_secs = (t - 700) as f64;
+                    break;
+                }
+            }
+        }
+        profiles.push(ScaleoutProfile {
+            n,
+            max_throughput: max_tput,
+            latency_ms,
+            recovery_secs,
+        });
+    }
+
+    ProfilingReport {
+        models: QosModels::from_profiles(profiles),
+        worker_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiling_measures_sane_models() {
+        let report = profile_job(
+            &EngineProfile::flink(),
+            &JobProfile::wordcount(),
+            &[2, 4, 8],
+            18,
+            3,
+        );
+        let m = &report.models;
+        // Max throughput grows with n and is near the nominal capacity.
+        let t2 = m.capacity(2);
+        let t4 = m.capacity(4);
+        let t8 = m.capacity(8);
+        assert!(t2 < t4 && t4 < t8, "{t2} {t4} {t8}");
+        crate::assert_close!(t4, JobProfile::wordcount().capacity_at(4), rtol = 0.15);
+        // Profiling consumed resources.
+        assert!(report.worker_seconds > 0.0);
+        // Recovery was measured and is positive and finite.
+        assert!(m.recovery(4) > 0.0 && m.recovery(4) < 600.0);
+    }
+
+    #[test]
+    fn interpolates_unprofiled_scaleouts() {
+        let report = profile_job(
+            &EngineProfile::flink(),
+            &JobProfile::wordcount(),
+            &[2, 6],
+            18,
+            4,
+        );
+        let m = &report.models;
+        let c4 = m.capacity(4);
+        assert!(c4 > m.capacity(2) && c4 < m.capacity(6));
+    }
+}

@@ -1,0 +1,67 @@
+//! Static deployment baseline (§4.3.1): a fixed scale-out sized for the
+//! peak workload (12 workers in the paper). Never rescales, so it shows
+//! both the resource-saving potential of autoscaling and the latency
+//! stability of never restarting.
+
+use super::Autoscaler;
+use crate::dsp::engine::SimView;
+
+/// Fixed-parallelism "autoscaler".
+#[derive(Debug, Clone)]
+pub struct Static {
+    pub replicas: usize,
+}
+
+impl Static {
+    pub fn new(replicas: usize) -> Self {
+        Self { replicas }
+    }
+}
+
+impl Autoscaler for Static {
+    fn name(&self) -> String {
+        format!("static-{}", self.replicas)
+    }
+
+    fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
+        // Only ever correct the initial deployment size.
+        (view.parallelism != self.replicas).then_some(self.replicas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Tsdb;
+
+    fn view(parallelism: usize) -> (Tsdb, usize) {
+        (Tsdb::new(), parallelism)
+    }
+
+    #[test]
+    fn corrects_initial_size_then_holds() {
+        let (db, _) = view(4);
+        let mut s = Static::new(12);
+        let v = SimView {
+            now: 0,
+            tsdb: &db,
+            parallelism: 4,
+            ready: true,
+            max_replicas: 18,
+        };
+        assert_eq!(s.decide(&v), Some(12));
+        let v = SimView {
+            now: 1,
+            tsdb: &db,
+            parallelism: 12,
+            ready: true,
+            max_replicas: 18,
+        };
+        assert_eq!(s.decide(&v), None);
+    }
+
+    #[test]
+    fn name_includes_size() {
+        assert_eq!(Static::new(12).name(), "static-12");
+    }
+}

@@ -1,0 +1,327 @@
+//! Typed experiment configuration, loadable from JSON files.
+//!
+//! The CLI (`daedalus run --config exp.json`) and the examples build
+//! experiments from these specs; every field has a paper-default. See
+//! `examples/configs/*.json` for ready-made files.
+
+use anyhow::{anyhow, bail};
+
+use crate::autoscaler::{DaedalusConfig, PhoebeConfig};
+use crate::clock::Timestamp;
+use crate::dsp::EngineProfile;
+use crate::experiments::harness::Approach;
+use crate::jobs::JobProfile;
+use crate::util::json::Json;
+use crate::workload::{CtrWorkload, SineWorkload, TrafficWorkload, Workload};
+use crate::Result;
+
+/// Which engine profile to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Flink,
+    KStreams,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "flink" => Ok(Self::Flink),
+            "kstreams" | "kafka-streams" => Ok(Self::KStreams),
+            _ => Err(anyhow!("unknown engine {s:?} (flink|kstreams)")),
+        }
+    }
+
+    pub fn profile(self) -> EngineProfile {
+        match self {
+            Self::Flink => EngineProfile::flink(),
+            Self::KStreams => EngineProfile::kstreams(),
+        }
+    }
+}
+
+/// Which benchmark job to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    WordCount,
+    Ysb,
+    Traffic,
+}
+
+impl JobKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "wordcount" => Ok(Self::WordCount),
+            "ysb" | "yahoo" => Ok(Self::Ysb),
+            "traffic" => Ok(Self::Traffic),
+            _ => Err(anyhow!("unknown job {s:?} (wordcount|ysb|traffic)")),
+        }
+    }
+
+    pub fn profile(self) -> JobProfile {
+        match self {
+            Self::WordCount => JobProfile::wordcount(),
+            Self::Ysb => JobProfile::ysb(),
+            Self::Traffic => JobProfile::traffic(),
+        }
+    }
+
+    /// The paper's workload for this job (§4.2), scaled to `peak`.
+    pub fn workload(self, peak: f64, duration: Timestamp, seed: u64) -> Box<dyn Workload> {
+        match self {
+            Self::WordCount => Box::new(SineWorkload::paper_default(peak, duration)),
+            Self::Ysb => Box::new(CtrWorkload::new(peak, duration, seed)),
+            Self::Traffic => Box::new(TrafficWorkload::new(peak, duration, seed)),
+        }
+    }
+}
+
+/// A fully-specified experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub engine: EngineKind,
+    pub job: JobKind,
+    pub duration: Timestamp,
+    pub seeds: Vec<u64>,
+    pub max_replicas: usize,
+    pub initial_replicas: usize,
+    pub partitions: usize,
+    /// Peak workload; defaults to the job's reference peak.
+    pub peak: Option<f64>,
+    /// Optional recorded trace (CSV, one rate per line or `t,rate`): when
+    /// set it replaces the job's synthetic workload, rescaled to `peak`.
+    pub workload_file: Option<String>,
+    /// Approach descriptors: "daedalus", "hpa-80", "static-12", "phoebe".
+    pub approaches: Vec<String>,
+    pub recovery_target: f64,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            engine: EngineKind::Flink,
+            job: JobKind::WordCount,
+            duration: 21_600,
+            seeds: vec![1, 2, 3, 4, 5],
+            max_replicas: 12,
+            initial_replicas: 4,
+            partitions: 72,
+            peak: None,
+            workload_file: None,
+            approaches: vec![
+                "daedalus".into(),
+                "hpa-80".into(),
+                "hpa-85".into(),
+                "static-12".into(),
+            ],
+            recovery_target: 600.0,
+        }
+    }
+}
+
+impl ExperimentSpec {
+    /// Parse from a JSON document; absent fields keep their defaults.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut spec = Self::default();
+        if let Some(x) = v.opt("name") {
+            spec.name = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.opt("engine") {
+            spec.engine = EngineKind::parse(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("job") {
+            spec.job = JobKind::parse(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("duration") {
+            spec.duration = x.as_usize()? as Timestamp;
+        }
+        if let Some(x) = v.opt("seeds") {
+            spec.seeds = x.as_usize_vec()?.into_iter().map(|s| s as u64).collect();
+        }
+        if let Some(x) = v.opt("max_replicas") {
+            spec.max_replicas = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("initial_replicas") {
+            spec.initial_replicas = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("partitions") {
+            spec.partitions = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("peak") {
+            spec.peak = Some(x.as_f64()?);
+        }
+        if let Some(x) = v.opt("workload_file") {
+            spec.workload_file = Some(x.as_str()?.to_string());
+        }
+        if let Some(x) = v.opt("recovery_target") {
+            spec.recovery_target = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("approaches") {
+            spec.approaches = x
+                .as_arr()?
+                .iter()
+                .map(|a| a.as_str().map(str::to_string))
+                .collect::<Result<_>>()?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.duration < 600 {
+            bail!("duration must be ≥ 600 s");
+        }
+        if self.seeds.is_empty() {
+            bail!("need at least one seed");
+        }
+        if self.initial_replicas < 1 || self.initial_replicas > self.max_replicas {
+            bail!("initial_replicas out of range");
+        }
+        if self.partitions < self.max_replicas {
+            bail!("partitions must be ≥ max_replicas");
+        }
+        if self.approaches.is_empty() {
+            bail!("need at least one approach");
+        }
+        for a in &self.approaches {
+            self.parse_approach(a)?;
+        }
+        Ok(())
+    }
+
+    /// Parse one approach descriptor string.
+    pub fn parse_approach(&self, s: &str) -> Result<Approach> {
+        if s == "daedalus" {
+            let mut cfg = DaedalusConfig::default();
+            cfg.recovery_target = self.recovery_target;
+            return Ok(Approach::Daedalus(cfg));
+        }
+        if s == "phoebe" {
+            let mut cfg = PhoebeConfig::default();
+            cfg.recovery_target = self.recovery_target;
+            let scaleouts: Vec<usize> = (1..=6)
+                .map(|i| (i * self.max_replicas).div_ceil(6))
+                .collect();
+            return Ok(Approach::Phoebe(cfg, scaleouts));
+        }
+        if s == "ds2" {
+            return Ok(Approach::Ds2);
+        }
+        if let Some(t) = s.strip_prefix("hpa-") {
+            let pct: f64 = t.parse().map_err(|_| anyhow!("bad HPA target {s:?}"))?;
+            if !(1.0..=100.0).contains(&pct) {
+                bail!("HPA target must be 1..=100, got {pct}");
+            }
+            return Ok(Approach::Hpa(pct / 100.0));
+        }
+        if let Some(n) = s.strip_prefix("static-") {
+            let n: usize = n.parse().map_err(|_| anyhow!("bad static size {s:?}"))?;
+            return Ok(Approach::Static(n));
+        }
+        Err(anyhow!(
+            "unknown approach {s:?} (daedalus|hpa-<pct>|static-<n>|phoebe|ds2)"
+        ))
+    }
+
+    /// Effective peak workload.
+    pub fn peak(&self) -> f64 {
+        self.peak.unwrap_or(self.job.profile().reference_peak)
+    }
+
+    /// Build the workload for one repetition: the recorded trace when
+    /// `workload_file` is set, otherwise the job's synthetic default.
+    pub fn build_workload(&self, seed: u64) -> Result<Box<dyn Workload>> {
+        if let Some(path) = &self.workload_file {
+            let w = crate::workload::ReplayWorkload::from_csv(path)?.scaled_to_peak(self.peak());
+            return Ok(Box::new(w));
+        }
+        Ok(self.job.workload(self.peak(), self.duration, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_valid() {
+        ExperimentSpec::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_json() {
+        let spec = ExperimentSpec::from_json(
+            r#"{
+                "name": "t", "engine": "kstreams", "job": "ysb",
+                "duration": 7200, "seeds": [1, 2], "max_replicas": 18,
+                "approaches": ["daedalus", "hpa-60", "static-12", "phoebe"],
+                "recovery_target": 300
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.engine, EngineKind::KStreams);
+        assert_eq!(spec.job, JobKind::Ysb);
+        assert_eq!(spec.duration, 7_200);
+        assert_eq!(spec.seeds, vec![1, 2]);
+        assert_eq!(spec.approaches.len(), 4);
+        assert_eq!(spec.recovery_target, 300.0);
+    }
+
+    #[test]
+    fn rejects_bad_approach() {
+        let err = ExperimentSpec::from_json(r#"{"approaches": ["magic"]}"#);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(ExperimentSpec::from_json(r#"{"duration": 10}"#).is_err());
+        assert!(ExperimentSpec::from_json(r#"{"seeds": []}"#).is_err());
+        assert!(ExperimentSpec::from_json(r#"{"partitions": 4}"#).is_err());
+    }
+
+    #[test]
+    fn workload_file_replaces_synthetic_trace() {
+        let path = std::env::temp_dir().join("daedalus-spec-trace.csv");
+        std::fs::write(&path, "rate\n100\n300\n200\n").unwrap();
+        let spec = ExperimentSpec::from_json(&format!(
+            r#"{{"workload_file": "{}", "peak": 60000}}"#,
+            path.display()
+        ))
+        .unwrap();
+        let w = spec.build_workload(1).unwrap();
+        // Peak rescaled to 60k; first sample was 100/300 of the peak.
+        crate::assert_close!(w.rate(0), 20_000.0, rtol = 1e-9);
+        crate::assert_close!(w.rate(1), 60_000.0, rtol = 1e-9);
+        assert_eq!(w.duration(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn default_workload_is_job_specific() {
+        let spec = ExperimentSpec::default();
+        let w = spec.build_workload(1).unwrap();
+        assert_eq!(w.duration(), spec.duration);
+        assert!(w.peak() <= spec.peak() * 1.01);
+    }
+
+    #[test]
+    fn approach_parsing() {
+        let spec = ExperimentSpec::default();
+        assert!(matches!(
+            spec.parse_approach("hpa-85").unwrap(),
+            Approach::Hpa(t) if (t - 0.85).abs() < 1e-9
+        ));
+        assert!(matches!(
+            spec.parse_approach("static-7").unwrap(),
+            Approach::Static(7)
+        ));
+        assert!(matches!(
+            spec.parse_approach("phoebe").unwrap(),
+            Approach::Phoebe(..)
+        ));
+    }
+}

@@ -1,0 +1,166 @@
+//! Kubernetes-like cluster state machine: desired replicas, stop-the-world
+//! restarts, pod readiness.
+//!
+//! Flink reactive mode restarts the whole job when the replica set changes;
+//! the restart takes `EngineProfile::restart_secs` (± noise), during which
+//! no processing happens and no checkpoints complete (paper §3.4, Fig 6).
+
+use crate::clock::Timestamp;
+
+/// Whether the job is processing or mid-restart.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    /// Processing normally with the current worker set.
+    Running,
+    /// Stop-the-world restart until `until`, then `target` replicas.
+    Restarting { until: Timestamp, target: usize },
+}
+
+/// Replica-set controller state.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub phase: Phase,
+    current: usize,
+    max_replicas: usize,
+    /// (time, from, to) log of every restart begun.
+    pub transitions: Vec<(Timestamp, usize, usize)>,
+}
+
+impl Cluster {
+    pub fn new(initial: usize, max_replicas: usize) -> Self {
+        assert!(initial >= 1 && initial <= max_replicas);
+        Self {
+            phase: Phase::Running,
+            current: initial,
+            max_replicas,
+            transitions: Vec::new(),
+        }
+    }
+
+    /// Replicas currently *serving* (0 while restarting).
+    pub fn serving_replicas(&self) -> usize {
+        match self.phase {
+            Phase::Running => self.current,
+            Phase::Restarting { .. } => 0,
+        }
+    }
+
+    /// Current parallelism as reported by the job (during a restart this is
+    /// already the target — pods exist, they're just not ready).
+    pub fn parallelism(&self) -> usize {
+        match self.phase {
+            Phase::Running => self.current,
+            Phase::Restarting { target, .. } => target,
+        }
+    }
+
+    /// Pods allocated for resource accounting (new pods are billed from the
+    /// moment the restart begins).
+    pub fn allocated(&self) -> usize {
+        self.parallelism()
+    }
+
+    /// Whether all pods are ready (HPA ignores unready pods).
+    pub fn ready(&self) -> bool {
+        matches!(self.phase, Phase::Running)
+    }
+
+    pub fn max_replicas(&self) -> usize {
+        self.max_replicas
+    }
+
+    /// Request `target` replicas at time `t` with the given downtime.
+    /// No-op if already at `target` or mid-restart.
+    /// Returns whether a restart began.
+    pub fn request_rescale(&mut self, t: Timestamp, target: usize, downtime_secs: f64) -> bool {
+        let target = target.clamp(1, self.max_replicas);
+        if !matches!(self.phase, Phase::Running) || target == self.current {
+            return false;
+        }
+        self.transitions.push((t, self.current, target));
+        self.phase = Phase::Restarting {
+            until: t + downtime_secs.ceil().max(1.0) as Timestamp,
+            target,
+        };
+        true
+    }
+
+    /// Force a restart at the *same* parallelism (failure recovery).
+    pub fn request_failure_restart(&mut self, t: Timestamp, downtime_secs: f64) -> bool {
+        if !matches!(self.phase, Phase::Running) {
+            return false;
+        }
+        self.transitions.push((t, self.current, self.current));
+        self.phase = Phase::Restarting {
+            until: t + downtime_secs.ceil().max(1.0) as Timestamp,
+            target: self.current,
+        };
+        true
+    }
+
+    /// Advance the state machine to time `t`; returns `Some(new_replicas)`
+    /// when a restart completes this tick.
+    pub fn tick(&mut self, t: Timestamp) -> Option<usize> {
+        if let Phase::Restarting { until, target } = self.phase {
+            if t >= until {
+                self.current = target;
+                self.phase = Phase::Running;
+                return Some(target);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rescale_lifecycle() {
+        let mut c = Cluster::new(4, 18);
+        assert!(c.request_rescale(100, 8, 30.0));
+        assert_eq!(c.serving_replicas(), 0);
+        assert_eq!(c.parallelism(), 8);
+        assert_eq!(c.allocated(), 8);
+        assert!(!c.ready());
+        assert_eq!(c.tick(129), None);
+        assert_eq!(c.tick(130), Some(8));
+        assert!(c.ready());
+        assert_eq!(c.serving_replicas(), 8);
+    }
+
+    #[test]
+    fn rescale_to_same_is_noop() {
+        let mut c = Cluster::new(4, 18);
+        assert!(!c.request_rescale(0, 4, 30.0));
+        assert!(c.ready());
+        assert!(c.transitions.is_empty());
+    }
+
+    #[test]
+    fn rescale_during_restart_ignored() {
+        let mut c = Cluster::new(4, 18);
+        assert!(c.request_rescale(0, 8, 30.0));
+        assert!(!c.request_rescale(5, 12, 30.0));
+        assert_eq!(c.tick(30), Some(8));
+    }
+
+    #[test]
+    fn target_clamped_to_bounds() {
+        let mut c = Cluster::new(4, 12);
+        assert!(c.request_rescale(0, 99, 10.0));
+        assert_eq!(c.tick(10), Some(12));
+        assert!(c.request_rescale(20, 0, 10.0));
+        assert_eq!(c.tick(30), Some(1));
+    }
+
+    #[test]
+    fn failure_restart_keeps_parallelism() {
+        let mut c = Cluster::new(6, 12);
+        assert!(c.request_failure_restart(50, 60.0));
+        assert_eq!(c.parallelism(), 6);
+        assert_eq!(c.serving_replicas(), 0);
+        assert_eq!(c.tick(110), Some(6));
+    }
+}

@@ -1,0 +1,617 @@
+//! The discrete-time simulation engine: one tick per second.
+//!
+//! Each tick: the generator produces tuples into skew-weighted partitions;
+//! if the cluster is serving, each worker drains its assigned partitions
+//! FIFO (oldest chunk first across partitions) up to its capacity; CPU,
+//! throughput, lag and latency are derived and recorded into the TSDB.
+//! Rescales and failures are stop-the-world restarts with exactly-once
+//! replay from the last completed checkpoint (paper §3.4, Fig 6).
+
+use crate::clock::Timestamp;
+use crate::jobs::JobProfile;
+use crate::metrics::tsdb::{SeriesHandle, SeriesId};
+use crate::metrics::Tsdb;
+use crate::stats::{Ecdf, Rng};
+use crate::workload::Workload;
+
+use super::cluster::{Cluster, Phase};
+use super::partition::Partition;
+use super::profile::EngineProfile;
+use super::worker::Worker;
+
+/// Static configuration of one simulated deployment.
+pub struct SimConfig {
+    pub profile: EngineProfile,
+    pub job: JobProfile,
+    pub workload: Box<dyn Workload>,
+    /// Kafka partitions; the paper provisions as many as the max scale-out.
+    pub partitions: usize,
+    pub initial_replicas: usize,
+    pub max_replicas: usize,
+    pub seed: u64,
+    /// Multiplicative per-tick noise on the produced rate (σ).
+    pub rate_noise: f64,
+    /// Seconds at which a worker failure is injected (§4.8 future work —
+    /// implemented here and exercised by tests/benches).
+    pub failures: Vec<Timestamp>,
+}
+
+impl SimConfig {
+    /// Paper-style deployment: partitions = max scale-out, mild rate noise.
+    pub fn paper(profile: EngineProfile, job: JobProfile, workload: Box<dyn Workload>) -> Self {
+        Self {
+            profile,
+            job,
+            workload,
+            partitions: 72,
+            initial_replicas: 4,
+            max_replicas: 18,
+            seed: 1,
+            rate_noise: 0.02,
+            failures: Vec::new(),
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_replicas(mut self, initial: usize, max: usize) -> Self {
+        self.initial_replicas = initial;
+        self.max_replicas = max;
+        self
+    }
+}
+
+/// A rescale/failure event for the experiment log.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RescaleEvent {
+    pub t: Timestamp,
+    pub from: usize,
+    pub to: usize,
+    pub downtime_secs: f64,
+    pub failure: bool,
+}
+
+/// Read-only view handed to autoscalers each tick.
+pub struct SimView<'a> {
+    pub now: Timestamp,
+    pub tsdb: &'a Tsdb,
+    pub parallelism: usize,
+    pub ready: bool,
+    pub max_replicas: usize,
+}
+
+/// One simulated DSP deployment (cluster + job + source).
+pub struct Simulation {
+    pub profile: EngineProfile,
+    pub job: JobProfile,
+    workload: Box<dyn Workload>,
+    partition_weights: Vec<f64>,
+    partitions: Vec<Partition>,
+    workers: Vec<Worker>,
+    cluster: Cluster,
+    tsdb: Tsdb,
+    rng: Rng,
+    now: Timestamp,
+    ticks: u64,
+    last_checkpoint: Timestamp,
+    worker_seconds: f64,
+    latencies: Ecdf,
+    pub rescale_log: Vec<RescaleEvent>,
+    failures: Vec<Timestamp>,
+    rate_noise: f64,
+    started: bool,
+    handles: Handles,
+    /// Reusable per-tick latency sample buffer (avoids per-tick allocs).
+    scratch_lat: Vec<(f64, f64)>,
+}
+
+/// Pre-resolved TSDB handles for the per-tick recording hot path.
+struct Handles {
+    workload: SeriesHandle,
+    lag: SeriesHandle,
+    parallelism: SeriesHandle,
+    allocated: SeriesHandle,
+    throughput: SeriesHandle,
+    latency: SeriesHandle,
+    latency_p95: SeriesHandle,
+    worker_tput: Vec<SeriesHandle>,
+    worker_cpu: Vec<SeriesHandle>,
+}
+
+impl Handles {
+    fn new(db: &mut Tsdb, max_workers: usize) -> Self {
+        Self {
+            workload: db.handle(SeriesId::global("workload_rate")),
+            lag: db.handle(SeriesId::global("consumer_lag")),
+            parallelism: db.handle(SeriesId::global("parallelism")),
+            allocated: db.handle(SeriesId::global("allocated_workers")),
+            throughput: db.handle(SeriesId::global("throughput")),
+            latency: db.handle(SeriesId::global("latency_ms")),
+            latency_p95: db.handle(SeriesId::global("latency_p95_ms")),
+            worker_tput: (0..max_workers)
+                .map(|w| db.handle(SeriesId::worker("worker_throughput", w)))
+                .collect(),
+            worker_cpu: (0..max_workers)
+                .map(|w| db.handle(SeriesId::worker("worker_cpu", w)))
+                .collect(),
+        }
+    }
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let kd = cfg.job.key_distribution(cfg.seed);
+        let partition_weights = kd.partition_weights(cfg.partitions);
+        let partitions = (0..cfg.partitions).map(|_| Partition::new()).collect();
+        let mut worker_rng = rng.fork();
+        let workers = (0..cfg.initial_replicas)
+            .map(|_| Worker::spawn(&mut worker_rng, cfg.profile.speed_jitter))
+            .collect();
+        let mut tsdb = Tsdb::new();
+        let handles = Handles::new(&mut tsdb, cfg.max_replicas);
+        Self {
+            cluster: Cluster::new(cfg.initial_replicas, cfg.max_replicas),
+            profile: cfg.profile,
+            job: cfg.job,
+            workload: cfg.workload,
+            partition_weights,
+            partitions,
+            workers,
+            tsdb,
+            rng,
+            now: 0,
+            ticks: 0,
+            last_checkpoint: 0,
+            worker_seconds: 0.0,
+            latencies: Ecdf::new(),
+            rescale_log: Vec::new(),
+            failures: cfg.failures,
+            rate_noise: cfg.rate_noise,
+            started: false,
+            handles,
+            scratch_lat: Vec::with_capacity(256),
+        }
+    }
+
+    /// The trace length of the configured workload.
+    pub fn duration(&self) -> Timestamp {
+        self.workload.duration()
+    }
+
+    /// Metric store (autoscalers read through this).
+    pub fn tsdb(&self) -> &Tsdb {
+        &self.tsdb
+    }
+
+    /// Pooled end-to-end latency samples (ms, tuple-weighted).
+    pub fn latencies(&self) -> &Ecdf {
+        &self.latencies
+    }
+
+    /// Average allocated workers over the run so far.
+    pub fn avg_workers(&self) -> f64 {
+        if self.ticks == 0 {
+            return self.cluster.allocated() as f64;
+        }
+        self.worker_seconds / self.ticks as f64
+    }
+
+    /// Total worker-seconds consumed (the resource-usage metric of Figs
+    /// 7d–10d, normalized by the caller).
+    pub fn worker_seconds(&self) -> f64 {
+        self.worker_seconds
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.cluster.parallelism()
+    }
+
+    pub fn ready(&self) -> bool {
+        self.cluster.ready()
+    }
+
+    pub fn max_replicas(&self) -> usize {
+        self.cluster.max_replicas()
+    }
+
+    /// Autoscaler-facing view at the current tick.
+    pub fn view(&self) -> SimView<'_> {
+        SimView {
+            now: self.now,
+            tsdb: &self.tsdb,
+            parallelism: self.cluster.parallelism(),
+            ready: self.cluster.ready(),
+            max_replicas: self.cluster.max_replicas(),
+        }
+    }
+
+    /// Complete a checkpoint immediately (Phoebe manually checkpoints right
+    /// before rescaling to minimize replay, §4.8). No-op while restarting.
+    pub fn checkpoint_now(&mut self) {
+        if self.cluster.ready() {
+            for p in &mut self.partitions {
+                p.checkpoint();
+            }
+            self.last_checkpoint = self.now;
+        }
+    }
+
+    /// Request a rescale to `target` replicas (stop-the-world; §3.4).
+    /// Returns the event if a restart actually began.
+    pub fn request_rescale(&mut self, target: usize) -> Option<RescaleEvent> {
+        let from = self.cluster.parallelism();
+        let base = self.profile.restart_secs(from, target.clamp(1, self.max_replicas()));
+        let downtime = base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
+        if self.cluster.request_rescale(self.now, target, downtime) {
+            // Exactly-once: processing stops now; uncommitted reads replay.
+            for p in &mut self.partitions {
+                p.rewind();
+            }
+            let ev = RescaleEvent {
+                t: self.now,
+                from,
+                to: target.clamp(1, self.max_replicas()),
+                downtime_secs: downtime,
+                failure: false,
+            };
+            self.rescale_log.push(ev);
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    fn inject_failure(&mut self) {
+        let from = self.cluster.parallelism();
+        let base = self.profile.restart_secs(from, from).max(self.profile.restart_out_secs);
+        let downtime = self.profile.failure_detection_secs
+            + base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
+        if self.cluster.request_failure_restart(self.now, downtime) {
+            for p in &mut self.partitions {
+                p.rewind();
+            }
+            self.rescale_log.push(RescaleEvent {
+                t: self.now,
+                from,
+                to: from,
+                downtime_secs: downtime,
+                failure: true,
+            });
+        }
+    }
+
+    /// Advance one second of simulated time. `t` must be the next second.
+    pub fn step(&mut self, t: Timestamp) {
+        debug_assert!(!self.started || t == self.now + 1, "non-monotonic step");
+        self.now = t;
+        self.ticks += 1;
+        self.started = true;
+
+        // 0. Failure injection.
+        if self.failures.binary_search(&t).is_ok() {
+            self.inject_failure();
+        }
+
+        // 1. Restart completion → fresh pods (new speed factors), stats
+        //    reset; checkpoint clock restarts.
+        if let Some(n) = self.cluster.tick(t) {
+            let jitter = self.profile.speed_jitter;
+            self.workers = (0..n)
+                .map(|_| Worker::spawn(&mut self.rng, jitter))
+                .collect();
+            self.last_checkpoint = t;
+        }
+
+        // 2. Produce into partitions (skew-weighted, noisy rate).
+        let base_rate = self.workload.rate(t);
+        let noise = (1.0 + self.rng.normal() * self.rate_noise).max(0.0);
+        let rate = base_rate * noise;
+        for (p, w) in self.partitions.iter_mut().zip(&self.partition_weights) {
+            p.produce(t as f64 + 0.5, rate * w);
+        }
+        self.tsdb.record_h(self.handles.workload, t, rate);
+
+        // 3. Serve.
+        let serving = self.cluster.serving_replicas();
+        if serving > 0 {
+            self.serve(t, serving, rate);
+            // 4. Checkpoints complete only while serving.
+            if t - self.last_checkpoint >= self.profile.checkpoint_interval {
+                for p in &mut self.partitions {
+                    p.checkpoint();
+                }
+                self.last_checkpoint = t;
+            }
+        }
+
+        // 5. Global metrics.
+        let lag: f64 = self.partitions.iter().map(|p| p.lag()).sum();
+        self.tsdb.record_h(self.handles.lag, t, lag);
+        self.tsdb
+            .record_h(self.handles.parallelism, t, self.cluster.parallelism() as f64);
+        let allocated = self.cluster.allocated() as f64;
+        self.tsdb.record_h(self.handles.allocated, t, allocated);
+        self.worker_seconds += allocated;
+    }
+
+    /// One serving tick: drain queues worker by worker.
+    fn serve(&mut self, t: Timestamp, n: usize, rate: f64) {
+        let service_ms = self.job.service_latency_ms(n, rate);
+        let mut scratch = std::mem::take(&mut self.scratch_lat);
+        scratch.clear();
+        for w in 0..n {
+            let capacity = self.workers[w].capacity(self.job.base_capacity);
+            let mut budget = capacity;
+            // FIFO merge across this worker's partitions (p % n == w).
+            loop {
+                let mut best: Option<(usize, f64)> = None;
+                let mut idx = w;
+                while idx < self.partitions.len() {
+                    if let Some(ht) = self.partitions[idx].head_time() {
+                        if best.map_or(true, |(_, bt)| ht < bt) {
+                            best = Some((idx, ht));
+                        }
+                    }
+                    idx += n;
+                }
+                let Some((pi, _)) = best else { break };
+                let Some(chunk) = self.partitions[pi].consume_head(budget) else {
+                    break;
+                };
+                budget -= chunk.amount;
+                // Mid-tick completion; latency = wait + service.
+                let wait_ms = ((t as f64 + 0.5 - chunk.t) * 1_000.0).max(0.0);
+                let lat = wait_ms + service_ms;
+                self.latencies.push(lat, chunk.amount);
+                scratch.push((lat, chunk.amount));
+                if budget <= 1e-9 {
+                    break;
+                }
+            }
+            let processed = capacity - budget;
+            let util = processed / capacity;
+            let cpu = (self.profile.cpu_for_utilization(util)
+                * (1.0 + self.rng.normal() * self.profile.cpu_noise))
+                .clamp(0.0, 1.0);
+            self.workers[w].last_throughput = processed;
+            self.workers[w].last_cpu = cpu;
+            self.tsdb.record_h(self.handles.worker_tput[w], t, processed);
+            self.tsdb.record_h(self.handles.worker_cpu[w], t, cpu);
+        }
+        if !scratch.is_empty() {
+            let total_w: f64 = scratch.iter().map(|(_, w)| w).sum();
+            let mean = scratch.iter().map(|(v, w)| v * w).sum::<f64>() / total_w;
+            self.tsdb.record_h(self.handles.latency, t, mean);
+            // Weighted p95 on the (small) per-tick sample set.
+            scratch.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut acc = 0.0;
+            let mut p95 = scratch.last().unwrap().0;
+            for (v, w) in &scratch {
+                acc += w;
+                if acc >= 0.95 * total_w {
+                    p95 = *v;
+                    break;
+                }
+            }
+            self.tsdb.record_h(self.handles.latency_p95, t, p95);
+        }
+        self.scratch_lat = scratch;
+        let tput: f64 = self.workers[..n].iter().map(|w| w.last_throughput).sum();
+        self.tsdb.record_h(self.handles.throughput, t, tput);
+    }
+
+    /// Serving phase (for tests / reporting).
+    pub fn phase(&self) -> Phase {
+        self.cluster.phase
+    }
+
+    /// Total backlog across partitions (unconsumed tuples).
+    pub fn total_backlog(&self) -> f64 {
+        self.partitions.iter().map(|p| p.backlog()).sum()
+    }
+
+    /// Run invariant checks over all partitions (debug/test aid).
+    pub fn check_invariants(&self) {
+        for p in &self.partitions {
+            p.check_invariants();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ConstantWorkload, RampWorkload};
+
+    fn sim_with(rate: f64, replicas: usize, seed: u64) -> Simulation {
+        let cfg = SimConfig {
+            profile: EngineProfile::flink(),
+            job: JobProfile::wordcount(),
+            workload: Box::new(ConstantWorkload {
+                rate,
+                duration: 10_000,
+            }),
+            partitions: 12,
+            initial_replicas: replicas,
+            max_replicas: 12,
+            seed,
+            rate_noise: 0.0,
+            failures: vec![],
+        };
+        Simulation::new(cfg)
+    }
+
+    fn run(sim: &mut Simulation, upto: Timestamp) {
+        let from = if sim.started { sim.now + 1 } else { 0 };
+        for t in from..=upto {
+            sim.step(t);
+        }
+    }
+
+    #[test]
+    fn underloaded_throughput_matches_workload() {
+        // 4 workers ≈ 22k cap, 10k load → keeps up, low lag.
+        let mut sim = sim_with(10_000.0, 4, 1);
+        run(&mut sim, 300);
+        let tput = sim.tsdb().avg_over(
+            &crate::metrics::SeriesId::global("throughput"),
+            100,
+            300,
+        );
+        crate::assert_close!(tput.unwrap(), 10_000.0, rtol = 0.02);
+        assert!(sim.total_backlog() < 1_000.0);
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn overloaded_throughput_caps_and_lag_grows() {
+        // 2 workers ≈ 11k cap, 20k load → saturation.
+        let mut sim = sim_with(20_000.0, 2, 2);
+        run(&mut sim, 300);
+        let tput = sim
+            .tsdb()
+            .avg_over(&crate::metrics::SeriesId::global("throughput"), 100, 300)
+            .unwrap();
+        assert!(tput < 12_500.0, "tput {tput}");
+        // Lag grows ≈ (20k − 11k) · t.
+        let lag = sim
+            .tsdb()
+            .last_at(&crate::metrics::SeriesId::global("consumer_lag"), 300)
+            .unwrap()
+            .1;
+        assert!(lag > 2_000_000.0, "lag {lag}");
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn cpu_tracks_utilization_linearly() {
+        let cfg = SimConfig {
+            profile: EngineProfile::flink(),
+            job: JobProfile::wordcount(),
+            workload: Box::new(RampWorkload {
+                from: 1_000.0,
+                to: 20_000.0,
+                duration: 2_000,
+            }),
+            partitions: 12,
+            initial_replicas: 4,
+            max_replicas: 12,
+            seed: 3,
+            rate_noise: 0.0,
+            failures: vec![],
+        };
+        let mut sim = Simulation::new(cfg);
+        run(&mut sim, 1_500);
+        // Collect (cpu, tput) for worker 0 and fit: must be ~linear.
+        let mut w = crate::stats::Welford::new();
+        for t in 100..1_500 {
+            let cpu = sim
+                .tsdb()
+                .last_at(&crate::metrics::SeriesId::worker("worker_cpu", 0), t)
+                .unwrap()
+                .1;
+            let tput = sim
+                .tsdb()
+                .last_at(&crate::metrics::SeriesId::worker("worker_throughput", 0), t)
+                .unwrap()
+                .1;
+            w.push(cpu, tput);
+        }
+        let r2 = w.cov() * w.cov() / (w.var_x() * w.var_y());
+        assert!(r2 > 0.98, "CPU-throughput r² {r2}");
+    }
+
+    #[test]
+    fn rescale_causes_downtime_then_recovery() {
+        let mut sim = sim_with(10_000.0, 4, 4);
+        run(&mut sim, 100);
+        let ev = sim.request_rescale(8).expect("rescale starts");
+        assert!(!ev.failure);
+        assert_eq!(ev.from, 4);
+        assert_eq!(ev.to, 8);
+        // During downtime nothing serves and lag builds.
+        run(&mut sim, 110);
+        assert_eq!(sim.phase(), Phase::Restarting { until: 100 + ev.downtime_secs.ceil() as u64, target: 8 });
+        let lag_mid = sim.total_backlog();
+        assert!(lag_mid > 50_000.0, "lag {lag_mid}");
+        // After the restart + catch-up, lag drains (8 workers ≈ 44k cap).
+        run(&mut sim, 400);
+        assert!(sim.ready());
+        assert_eq!(sim.parallelism(), 8);
+        assert!(sim.total_backlog() < 5_000.0, "backlog {}", sim.total_backlog());
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn latency_spikes_during_recovery_then_settles() {
+        let mut sim = sim_with(10_000.0, 4, 5);
+        run(&mut sim, 100);
+        let id = crate::metrics::SeriesId::global("latency_ms");
+        let before = sim.tsdb().avg_over(&id, 50, 100).unwrap();
+        sim.request_rescale(6);
+        run(&mut sim, 250);
+        let spike = sim.tsdb().max_over(&id, 100, 250).unwrap();
+        assert!(spike > before + 20_000.0, "spike {spike} vs before {before}");
+        run(&mut sim, 600);
+        let after = sim.tsdb().avg_over(&id, 500, 600).unwrap();
+        assert!(after < before * 2.0, "after {after} vs before {before}");
+    }
+
+    #[test]
+    fn failure_injection_restarts_same_parallelism() {
+        let cfg = SimConfig {
+            profile: EngineProfile::flink(),
+            job: JobProfile::wordcount(),
+            workload: Box::new(ConstantWorkload {
+                rate: 8_000.0,
+                duration: 2_000,
+            }),
+            partitions: 12,
+            initial_replicas: 4,
+            max_replicas: 12,
+            seed: 6,
+            rate_noise: 0.0,
+            failures: vec![500],
+        };
+        let mut sim = Simulation::new(cfg);
+        run(&mut sim, 499);
+        assert!(sim.ready());
+        run(&mut sim, 520);
+        assert!(!sim.ready(), "failure should cause downtime");
+        assert_eq!(sim.rescale_log.len(), 1);
+        assert!(sim.rescale_log[0].failure);
+        assert_eq!(sim.parallelism(), 4);
+        run(&mut sim, 900);
+        assert!(sim.ready());
+    }
+
+    #[test]
+    fn worker_seconds_accounting() {
+        let mut sim = sim_with(5_000.0, 4, 7);
+        run(&mut sim, 1_000);
+        crate::assert_close!(sim.avg_workers(), 4.0, atol = 1e-9);
+        // Ticks 0..=1000 inclusive → 1001 ticks at 4 workers.
+        crate::assert_close!(sim.worker_seconds(), 4_004.0, atol = 1e-6);
+    }
+
+    #[test]
+    fn exactly_once_replay_after_rescale() {
+        // Produce deterministic totals and ensure nothing is lost or
+        // double-counted in offsets across a rescale.
+        let mut sim = sim_with(10_000.0, 4, 8);
+        run(&mut sim, 50);
+        sim.request_rescale(6);
+        run(&mut sim, 300);
+        sim.check_invariants();
+        // All partitions: consumed ≤ produced, committed ≤ consumed.
+        let produced: f64 = sim.partitions.iter().map(|p| p.produced).sum();
+        let consumed: f64 = sim.partitions.iter().map(|p| p.consumed).sum();
+        assert!(consumed <= produced + 1e-3);
+        // Everything should be caught up again.
+        assert!(produced - consumed < 5_000.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! Discrete-time DSP-cluster simulator — the substrate standing in for the
+//! paper's Flink / Kafka Streams on Kubernetes testbed (DESIGN.md §2).
+//!
+//! The simulator reproduces, at 1-second resolution, exactly the observable
+//! behaviour the paper's autoscalers depend on (§3.1, Figs 2–6):
+//!
+//! 1. linear CPU↔throughput below saturation, capacity cap at saturation;
+//! 2. end-to-end latency explosion when workload exceeds capacity;
+//! 3. proportional data skew across workers (Zipf-weighted keys hashed to
+//!    partitions, partitions round-robin-assigned to workers);
+//! 4. stop-the-world rescaling with replay from the last completed
+//!    checkpoint (exactly-once), backlog accumulation, catch-up recovery;
+//! 5. near-homogeneous workers with small speed jitter, re-rolled when pods
+//!    are recreated;
+//! 6. engine profiles ([`EngineProfile::flink`] vs
+//!    [`EngineProfile::kstreams`]) differing in CPU ceiling and restart
+//!    behaviour — the source of HPA-80's under-provisioning on Kafka
+//!    Streams (paper Fig 10).
+
+pub mod cluster;
+pub mod engine;
+pub mod partition;
+pub mod profile;
+pub mod skew;
+pub mod worker;
+
+pub use cluster::{Cluster, Phase};
+pub use engine::{RescaleEvent, SimConfig, Simulation};
+pub use partition::Partition;
+pub use profile::EngineProfile;
+pub use skew::KeyDistribution;
+pub use worker::Worker;

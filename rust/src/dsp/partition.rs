@@ -1,0 +1,247 @@
+//! A Kafka-like partition: fluid FIFO queue with offsets, consumer lag and
+//! exactly-once replay.
+//!
+//! Tuples are modelled as fluid amounts tagged with their arrival second.
+//! Three offsets matter (all in tuples since job start):
+//!
+//! * `produced`  — written by the generator;
+//! * `consumed`  — read by the worker currently assigned to the partition;
+//! * `committed` — covered by the last *completed* checkpoint.
+//!
+//! Consumer lag (what a Kafka exporter reports under exactly-once) is
+//! `produced − committed`; on restart the consumer rewinds to `committed`
+//! and re-reads — [`Partition::rewind`] pushes the uncommitted chunks back
+//! to the queue front with their original arrival timestamps, so replayed
+//! tuples carry their true end-to-end latency.
+
+use std::collections::VecDeque;
+
+/// Fluid chunk: `amount` tuples that arrived at (fractional) time `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Chunk {
+    pub t: f64,
+    pub amount: f64,
+}
+
+/// One source partition.
+#[derive(Debug, Clone, Default)]
+pub struct Partition {
+    /// Unconsumed chunks, oldest first.
+    queue: VecDeque<Chunk>,
+    /// Consumed but not yet committed (checkpointed) chunks, oldest first.
+    pending: VecDeque<Chunk>,
+    pub produced: f64,
+    pub consumed: f64,
+    pub committed: f64,
+}
+
+impl Partition {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Generator writes `amount` tuples at time `t` (mid-tick timestamped).
+    pub fn produce(&mut self, t: f64, amount: f64) {
+        if amount <= 0.0 {
+            return;
+        }
+        self.queue.push_back(Chunk { t, amount });
+        self.produced += amount;
+    }
+
+    /// Oldest unconsumed arrival time, if any.
+    pub fn head_time(&self) -> Option<f64> {
+        self.queue.front().map(|c| c.t)
+    }
+
+    /// Unconsumed backlog in tuples.
+    pub fn backlog(&self) -> f64 {
+        self.produced - self.consumed
+    }
+
+    /// Kafka-reported consumer lag under exactly-once (committed offsets).
+    pub fn lag(&self) -> f64 {
+        self.produced - self.committed
+    }
+
+    /// Consume up to `budget` tuples FIFO. Returns consumed `(t, amount)`
+    /// chunks (possibly splitting the head chunk).
+    pub fn consume(&mut self, mut budget: f64) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        while budget > 1e-9 {
+            let Some(front) = self.queue.front_mut() else {
+                break;
+            };
+            let take = front.amount.min(budget);
+            out.push(Chunk {
+                t: front.t,
+                amount: take,
+            });
+            front.amount -= take;
+            budget -= take;
+            self.consumed += take;
+            let chunk_t = front.t;
+            if front.amount <= 1e-9 {
+                self.queue.pop_front();
+            }
+            // Track for exactly-once replay until the next checkpoint.
+            match self.pending.back_mut() {
+                Some(last) if (last.t - chunk_t).abs() < 1e-9 => last.amount += take,
+                _ => self.pending.push_back(Chunk {
+                    t: chunk_t,
+                    amount: take,
+                }),
+            }
+        }
+        out
+    }
+
+    /// Consume up to `budget` tuples from the *head chunk only* — used by
+    /// the engine's cross-partition FIFO merge (oldest head first).
+    pub fn consume_head(&mut self, budget: f64) -> Option<Chunk> {
+        if budget <= 1e-9 {
+            return None;
+        }
+        let front = self.queue.front_mut()?;
+        let take = front.amount.min(budget);
+        let chunk = Chunk {
+            t: front.t,
+            amount: take,
+        };
+        front.amount -= take;
+        self.consumed += take;
+        let chunk_t = front.t;
+        if front.amount <= 1e-9 {
+            self.queue.pop_front();
+        }
+        match self.pending.back_mut() {
+            Some(last) if (last.t - chunk_t).abs() < 1e-9 => last.amount += take,
+            _ => self.pending.push_back(chunk),
+        }
+        Some(chunk)
+    }
+
+    /// A checkpoint completed: committed catches up to consumed.
+    pub fn checkpoint(&mut self) {
+        self.pending.clear();
+        self.committed = self.consumed;
+    }
+
+    /// Restart from last checkpoint: uncommitted consumption is undone and
+    /// will be re-read (exactly-once replay).
+    pub fn rewind(&mut self) {
+        while let Some(chunk) = self.pending.pop_back() {
+            self.consumed -= chunk.amount;
+            self.queue.push_front(chunk);
+        }
+        debug_assert!((self.consumed - self.committed).abs() < 1e-6);
+        self.consumed = self.committed;
+    }
+
+    /// Invariant check (used by tests and debug assertions).
+    pub fn check_invariants(&self) {
+        assert!(self.committed <= self.consumed + 1e-6);
+        assert!(self.consumed <= self.produced + 1e-6);
+        let queued: f64 = self.queue.iter().map(|c| c.amount).sum();
+        assert!(
+            (queued - self.backlog()).abs() < 1e-4,
+            "queue {queued} != backlog {}",
+            self.backlog()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produce_consume_fifo_order() {
+        let mut p = Partition::new();
+        p.produce(0.5, 100.0);
+        p.produce(1.5, 50.0);
+        let got = p.consume(120.0);
+        assert_eq!(got.len(), 2);
+        crate::assert_close!(got[0].t, 0.5, atol = 1e-12);
+        crate::assert_close!(got[0].amount, 100.0, atol = 1e-12);
+        crate::assert_close!(got[1].amount, 20.0, atol = 1e-12);
+        crate::assert_close!(p.backlog(), 30.0, atol = 1e-9);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn lag_uses_committed_offset() {
+        let mut p = Partition::new();
+        p.produce(0.5, 100.0);
+        p.consume(60.0);
+        // Consumed but not checkpointed: lag still counts it.
+        crate::assert_close!(p.lag(), 100.0, atol = 1e-9);
+        p.checkpoint();
+        crate::assert_close!(p.lag(), 40.0, atol = 1e-9);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn rewind_replays_uncommitted_with_original_times() {
+        let mut p = Partition::new();
+        p.produce(0.5, 100.0);
+        p.consume(100.0);
+        p.checkpoint();
+        p.produce(1.5, 80.0);
+        p.consume(50.0);
+        // Crash: the 50 consumed-but-uncommitted tuples must come back with
+        // arrival time 1.5.
+        p.rewind();
+        crate::assert_close!(p.backlog(), 80.0, atol = 1e-9);
+        let got = p.consume(80.0);
+        // May come back as several chunks (replayed 50 + remaining 30) but
+        // every chunk must carry the original arrival time.
+        assert!(got.iter().all(|c| (c.t - 1.5).abs() < 1e-12));
+        let total: f64 = got.iter().map(|c| c.amount).sum();
+        crate::assert_close!(total, 80.0, atol = 1e-9);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn consume_from_empty_is_empty() {
+        let mut p = Partition::new();
+        assert!(p.consume(10.0).is_empty());
+        assert_eq!(p.head_time(), None);
+    }
+
+    #[test]
+    fn zero_produce_ignored() {
+        let mut p = Partition::new();
+        p.produce(1.0, 0.0);
+        p.produce(1.0, -5.0);
+        assert_eq!(p.backlog(), 0.0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn conservation_through_random_ops() {
+        let mut p = Partition::new();
+        let mut rng = crate::stats::Rng::new(77);
+        let mut produced_total = 0.0;
+        let mut consumed_total = 0.0;
+        for t in 0..500 {
+            let amt = rng.range(0.0, 1_000.0);
+            p.produce(t as f64 + 0.5, amt);
+            produced_total += amt;
+            let got = p.consume(rng.range(0.0, 1_200.0));
+            consumed_total += got.iter().map(|c| c.amount).sum::<f64>();
+            if t % 10 == 0 {
+                p.checkpoint();
+            }
+            if t % 97 == 0 {
+                // Rewind mid-stream; replayed tuples are re-consumable.
+                let before = p.consumed - p.committed;
+                p.rewind();
+                consumed_total -= before;
+            }
+            p.check_invariants();
+        }
+        crate::assert_close!(p.produced, produced_total, rtol = 1e-12);
+        crate::assert_close!(p.consumed, consumed_total, rtol = 1e-9, atol = 1e-6);
+    }
+}

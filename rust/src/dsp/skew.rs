@@ -1,0 +1,131 @@
+//! Data skew: Zipf-weighted keys hashed to partitions.
+//!
+//! The paper (§3.1, Figs 3–4) stresses that real workloads split unevenly
+//! across parallel operators: with 100 random keys over 12 workers, the
+//! observed throughput/CPU spread is wide but stays *proportional* across
+//! load levels. We reproduce the generating process: keys get Zipf-ish
+//! popularity weights, each key hashes to one partition, and a partition's
+//! weight is the sum of its keys' weights. Because the key→partition map is
+//! a hash, re-partitioning (different worker counts consuming the same
+//! partitions) shifts skew exactly the way the paper describes for
+//! WordCount: "the maximum observed capacity at a specific scale-out can
+//! vary after rescaling to that scale-out again".
+
+use crate::stats::Rng;
+
+/// Popularity-weighted key space.
+#[derive(Debug, Clone)]
+pub struct KeyDistribution {
+    /// One weight per key, normalized to sum 1.
+    pub key_weights: Vec<f64>,
+    seed: u64,
+}
+
+impl KeyDistribution {
+    /// `n_keys` keys with Zipf(`s`) popularity in a seeded random order.
+    pub fn zipf(n_keys: usize, s: f64, seed: u64) -> Self {
+        assert!(n_keys > 0);
+        let mut rng = Rng::new(seed ^ 0x5EED_5EED);
+        let mut weights: Vec<f64> = (1..=n_keys).map(|r| 1.0 / (r as f64).powf(s)).collect();
+        // Shuffle so rank order doesn't correlate with key id (Fisher–Yates).
+        for i in (1..weights.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            weights.swap(i, j);
+        }
+        let total: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= total;
+        }
+        Self {
+            key_weights: weights,
+            seed,
+        }
+    }
+
+    /// Uniform keys (no skew) — the assumption most prior work makes.
+    pub fn uniform(n_keys: usize) -> Self {
+        Self {
+            key_weights: vec![1.0 / n_keys as f64; n_keys],
+            seed: 0,
+        }
+    }
+
+    /// Stable key→partition hash (splitmix-style avalanche).
+    fn partition_of(&self, key: usize, n_partitions: usize) -> usize {
+        let mut z = (key as u64 ^ self.seed).wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        (z ^ (z >> 31)) as usize % n_partitions
+    }
+
+    /// Fraction of the stream landing in each of `n_partitions` partitions.
+    pub fn partition_weights(&self, n_partitions: usize) -> Vec<f64> {
+        assert!(n_partitions > 0);
+        let mut w = vec![0.0; n_partitions];
+        for (k, kw) in self.key_weights.iter().enumerate() {
+            w[self.partition_of(k, n_partitions)] += kw;
+        }
+        w
+    }
+
+    /// Skew ratio: max partition weight / mean partition weight.
+    pub fn skew_ratio(&self, n_partitions: usize) -> f64 {
+        let w = self.partition_weights(n_partitions);
+        let mean = 1.0 / n_partitions as f64;
+        w.iter().copied().fold(0.0, f64::max) / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_normalized() {
+        let kd = KeyDistribution::zipf(100, 0.6, 42);
+        let sum: f64 = kd.key_weights.iter().sum();
+        crate::assert_close!(sum, 1.0, atol = 1e-9);
+        let pw = kd.partition_weights(12);
+        crate::assert_close!(pw.iter().sum::<f64>(), 1.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn zipf_produces_visible_skew() {
+        let kd = KeyDistribution::zipf(100, 0.8, 42);
+        let ratio = kd.skew_ratio(12);
+        // Fig 3 shows roughly 1.2–1.6× spread at p=12.
+        assert!(ratio > 1.1, "skew ratio {ratio}");
+        assert!(ratio < 3.0, "skew ratio {ratio}");
+    }
+
+    #[test]
+    fn uniform_keys_still_skew_through_hashing() {
+        // Even uniform key popularity skews because 100 keys don't split
+        // evenly into 12 hash buckets — the paper's "in theory ... eight or
+        // nine keys each" observation.
+        let kd = KeyDistribution::uniform(100);
+        let ratio = kd.skew_ratio(12);
+        assert!(ratio > 1.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = KeyDistribution::zipf(100, 0.6, 7).partition_weights(12);
+        let b = KeyDistribution::zipf(100, 0.6, 7).partition_weights(12);
+        assert_eq!(a, b);
+        let c = KeyDistribution::zipf(100, 0.6, 8).partition_weights(12);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn skew_is_proportional_across_partition_counts() {
+        // Changing the partition count re-deals the keys — weights change
+        // but remain a valid distribution.
+        let kd = KeyDistribution::zipf(100, 0.6, 3);
+        for n in [1, 2, 6, 12, 18, 32] {
+            let w = kd.partition_weights(n);
+            assert_eq!(w.len(), n);
+            crate::assert_close!(w.iter().sum::<f64>(), 1.0, atol = 1e-9);
+        }
+    }
+}

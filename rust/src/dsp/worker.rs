@@ -1,0 +1,68 @@
+//! Worker model: per-pod processing capacity, CPU reading, heterogeneity.
+//!
+//! Paper §3: "homogeneous resources may not provide identical performance"
+//! — pods are identical flavors but carry a small persistent speed factor,
+//! re-rolled whenever the pod is recreated (placement changes).
+
+use crate::stats::Rng;
+
+/// One DSP worker (pod / task manager instance).
+#[derive(Debug, Clone)]
+pub struct Worker {
+    /// Persistent speed multiplier (≈ 1 ± jitter), fixed for pod lifetime.
+    pub speed_factor: f64,
+    /// Tuples/s this worker processed in the last tick.
+    pub last_throughput: f64,
+    /// CPU reading for the last tick (0..1, already noise-adjusted).
+    pub last_cpu: f64,
+}
+
+impl Worker {
+    /// Spawn a pod with jittered speed.
+    pub fn spawn(rng: &mut Rng, jitter: f64) -> Self {
+        Self {
+            speed_factor: (1.0 + rng.normal() * jitter).clamp(0.7, 1.3),
+            last_throughput: 0.0,
+            last_cpu: 0.0,
+        }
+    }
+
+    /// Effective capacity in tuples/s given the job's per-worker base rate.
+    pub fn capacity(&self, base_capacity: f64) -> f64 {
+        base_capacity * self.speed_factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speed_factor_near_one() {
+        let mut rng = Rng::new(42);
+        for _ in 0..1_000 {
+            let w = Worker::spawn(&mut rng, 0.05);
+            assert!(w.speed_factor > 0.7 && w.speed_factor < 1.3);
+        }
+    }
+
+    #[test]
+    fn average_speed_is_unbiased() {
+        let mut rng = Rng::new(43);
+        let mean: f64 = (0..10_000)
+            .map(|_| Worker::spawn(&mut rng, 0.05).speed_factor)
+            .sum::<f64>()
+            / 10_000.0;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn capacity_scales_with_speed() {
+        let w = Worker {
+            speed_factor: 1.1,
+            last_throughput: 0.0,
+            last_cpu: 0.0,
+        };
+        crate::assert_close!(w.capacity(5_000.0), 5_500.0, atol = 1e-9);
+    }
+}

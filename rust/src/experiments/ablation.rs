@@ -1,0 +1,126 @@
+//! Ablation study over Daedalus' design choices (DESIGN.md §4).
+//!
+//! Each variant disables (or swaps) exactly one mechanism the paper argues
+//! for, and runs the Fig-7 protocol; comparing against the full system
+//! quantifies each mechanism's contribution:
+//!
+//! | variant | disables | paper section |
+//! |---|---|---|
+//! | `full`          | —                                | §3 |
+//! | `no-tsf`        | forecasting (flat continuation)  | §3.3 |
+//! | `linear-tsf`    | ARI model (linear projection)    | §3.3 |
+//! | `holt-tsf`      | ARI model (Holt damped trend)    | §3.3 / [11] |
+//! | `no-recovery`   | recovery-time constraint         | §3.4 |
+//! | `no-skew`       | skew-aware capacity targets      | §3.1 |
+//! | `no-lag-guard`  | consumer-lag scale-in protection | §3.2 |
+
+use crate::autoscaler::daedalus::forecasting::ForecastMethod;
+use crate::autoscaler::DaedalusConfig;
+use crate::clock::Timestamp;
+use crate::dsp::EngineProfile;
+use crate::jobs::JobProfile;
+use crate::runtime::ComputeBackend;
+use crate::workload::SineWorkload;
+use crate::Result;
+
+use super::harness::{Approach, Experiment};
+
+/// One ablation variant.
+pub fn variants() -> Vec<(&'static str, DaedalusConfig)> {
+    let base = DaedalusConfig::default;
+    vec![
+        ("full", base()),
+        ("no-tsf", {
+            let mut c = base();
+            c.forecast_method = ForecastMethod::Flat;
+            c
+        }),
+        ("linear-tsf", {
+            let mut c = base();
+            c.forecast_method = ForecastMethod::Linear;
+            c
+        }),
+        ("holt-tsf", {
+            let mut c = base();
+            c.forecast_method = ForecastMethod::HoltWinters;
+            c
+        }),
+        ("no-recovery", {
+            let mut c = base();
+            c.use_recovery_constraint = false;
+            c
+        }),
+        ("no-skew", {
+            let mut c = base();
+            c.skew_aware = false;
+            c
+        }),
+        ("no-lag-guard", {
+            let mut c = base();
+            c.use_lag_guard = false;
+            c
+        }),
+    ]
+}
+
+/// Run all variants on the Fig-7 protocol and return the report table.
+pub fn run(backend: ComputeBackend, duration: Timestamp, seeds: Vec<u64>) -> Result<String> {
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let mut out = String::from(
+        "Daedalus ablation (wordcount/flink, sine ×2)\n\
+         variant        avg lat ms     p95 ms  avg workers  rescales  lag max\n",
+    );
+    for (name, cfg) in variants() {
+        let exp = Experiment::paper(
+            &format!("ablation-{name}"),
+            EngineProfile::flink(),
+            job.clone(),
+            backend.clone(),
+            duration,
+        )
+        .with_seeds(seeds.clone())
+        .with_approaches(vec![Approach::Daedalus(cfg)]);
+        let res = exp.run(&move |_| Box::new(SineWorkload::paper_default(peak, duration)));
+        let a = &res.approaches[0];
+        let mut lat = a.latencies.clone();
+        out.push_str(&format!(
+            "{:<14} {:>10.0} {:>10.0} {:>12.2} {:>9.1} {:>10.0}\n",
+            name,
+            a.avg_latency_ms(),
+            lat.quantile(0.95),
+            a.avg_workers,
+            a.rescales,
+            a.lag_max,
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_variants_run_and_differ_from_full() {
+        let table = run(ComputeBackend::native(), 2_400, vec![1]).unwrap();
+        assert_eq!(table.trim().lines().count(), 2 + variants().len());
+        for (name, _) in variants() {
+            assert!(table.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn variant_configs_toggle_the_right_knob() {
+        let vs = variants();
+        let full = &vs[0].1;
+        assert!(full.use_recovery_constraint && full.skew_aware && full.use_lag_guard);
+        assert_eq!(full.forecast_method, ForecastMethod::ArtifactAr);
+        let by_name = |n: &str| &vs.iter().find(|(name, _)| *name == n).unwrap().1;
+        assert_eq!(by_name("no-tsf").forecast_method, ForecastMethod::Flat);
+        assert_eq!(by_name("holt-tsf").forecast_method, ForecastMethod::HoltWinters);
+        assert!(!by_name("no-recovery").use_recovery_constraint);
+        assert!(!by_name("no-skew").skew_aware);
+        assert!(!by_name("no-lag-guard").use_lag_guard);
+    }
+}

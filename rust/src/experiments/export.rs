@@ -1,0 +1,94 @@
+//! CSV export of experiment artifacts under `results/<experiment>/`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+use super::harness::ExperimentResult;
+use super::report;
+
+/// Write the standard set of CSVs for one experiment. Returns the dir.
+pub fn write_experiment(res: &ExperimentResult, base: &str) -> Result<PathBuf> {
+    let dir = Path::new(base).join(&res.name);
+    fs::create_dir_all(&dir)?;
+    fs::write(dir.join("workload.csv"), report::workload_series(res))?;
+    fs::write(dir.join("parallelism.csv"), report::parallelism_series(res))?;
+    fs::write(dir.join("latency_ecdf.csv"), report::ecdf_table(res, 120))?;
+    let mut summary = String::from(
+        "approach,avg_latency_ms,p95_ms,p99_ms,max_ms,avg_workers,worker_seconds,profiling_worker_seconds,rescales\n",
+    );
+    for a in &res.approaches {
+        let mut lat = a.latencies.clone();
+        summary.push_str(&format!(
+            "{},{:.1},{:.1},{:.1},{:.1},{:.3},{:.0},{:.0},{:.1}\n",
+            a.name,
+            a.avg_latency_ms(),
+            lat.quantile(0.95),
+            lat.quantile(0.99),
+            lat.max(),
+            a.avg_workers,
+            a.worker_seconds,
+            a.profiling_worker_seconds,
+            a.rescales,
+        ));
+    }
+    fs::write(dir.join("summary.csv"), summary)?;
+    Ok(dir)
+}
+
+/// Write arbitrary named series `(x, y)` as a two-column CSV.
+pub fn write_series(path: &Path, header: &str, series: &[(f64, f64)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut out = format!("{header}\n");
+    for (x, y) in series {
+        out.push_str(&format!("{x},{y}\n"));
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::harness::ApproachResult;
+    use crate::stats::Ecdf;
+
+    #[test]
+    fn writes_all_csvs() {
+        let mut e = Ecdf::new();
+        e.push(100.0, 1.0);
+        let res = ExperimentResult {
+            name: "unit-test-export".into(),
+            workload_series: vec![(0, 1.0)],
+            approaches: vec![ApproachResult {
+                name: "static-1".into(),
+                latencies: e,
+                avg_workers: 1.0,
+                worker_seconds: 10.0,
+                profiling_worker_seconds: 0.0,
+                rescales: 0.0,
+                parallelism_series: vec![(0, 1)],
+                final_backlog: 0.0,
+                lag_max: 0.0,
+            }],
+        };
+        let tmp = std::env::temp_dir().join("daedalus-test-results");
+        let dir = write_experiment(&res, tmp.to_str().unwrap()).unwrap();
+        for f in ["workload.csv", "parallelism.csv", "latency_ecdf.csv", "summary.csv"] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn write_series_roundtrip() {
+        let tmp = std::env::temp_dir().join("daedalus-test-series/x.csv");
+        write_series(&tmp, "a,b", &[(1.0, 2.0), (3.0, 4.0)]).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        std::fs::remove_dir_all(tmp.parent().unwrap()).ok();
+    }
+}

@@ -1,0 +1,499 @@
+//! One driver per paper figure. Each returns a printable report and writes
+//! CSV series under `results/` so every table AND figure in the paper's
+//! evaluation can be regenerated (see DESIGN.md §4 for the index).
+
+use crate::autoscaler::{DaedalusConfig, PhoebeConfig};
+use crate::clock::Timestamp;
+use crate::dsp::{EngineProfile, SimConfig, Simulation};
+use crate::jobs::JobProfile;
+use crate::metrics::SeriesId;
+use crate::runtime::ComputeBackend;
+use crate::stats::Welford;
+use crate::workload::{
+    ConstantWorkload, CtrWorkload, RampWorkload, SineWorkload, TrafficWorkload, Workload,
+};
+use crate::Result;
+
+use super::export;
+use super::harness::{Approach, Experiment, ExperimentResult};
+use super::report;
+
+/// Factory for figure-run protocols.
+pub struct FigureOpts;
+
+impl FigureOpts {
+    /// The paper's full protocol.
+    pub fn paper() -> FigureOptsOwned {
+        FigureOptsOwned {
+            duration: 21_600,
+            seeds: vec![1, 2, 3, 4, 5],
+            out_dir: "results".into(),
+        }
+    }
+
+    /// Fast CI-scale protocol (~1/10 duration, 1 seed).
+    pub fn quick() -> FigureOptsOwned {
+        FigureOptsOwned {
+            duration: 5_400,
+            seeds: vec![1],
+            out_dir: "results".into(),
+        }
+    }
+}
+
+/// Owned variant (seeds vector).
+#[derive(Debug, Clone)]
+pub struct FigureOptsOwned {
+    pub duration: Timestamp,
+    pub seeds: Vec<u64>,
+    pub out_dir: String,
+}
+
+fn run_fixed_parallelism(
+    job: JobProfile,
+    workload: Box<dyn Workload>,
+    replicas: usize,
+    seed: u64,
+) -> Simulation {
+    let duration = workload.duration();
+    let cfg = SimConfig {
+        profile: EngineProfile::flink(),
+        job,
+        workload,
+        partitions: 72,
+        initial_replicas: replicas,
+        max_replicas: replicas.max(12),
+        seed,
+        rate_noise: 0.02,
+        failures: vec![],
+    };
+    let mut sim = Simulation::new(cfg);
+    for t in 0..duration {
+        sim.step(t);
+    }
+    sim
+}
+
+/// Fig 2 — relationships between workload, CPU, throughput and latency at a
+/// fixed parallelism: ramp the workload through saturation.
+pub fn fig2(opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::wordcount();
+    let replicas = 4;
+    let duration = 3_600;
+    let peak = job.capacity_at(replicas) * 1.4;
+    let sim = run_fixed_parallelism(
+        job,
+        Box::new(RampWorkload {
+            from: 500.0,
+            to: peak,
+            duration,
+        }),
+        replicas,
+        1,
+    );
+    let db = sim.tsdb();
+    let mut rows = String::from("t,workload,avg_cpu,throughput,latency_ms\n");
+    let mut cap_seen: f64 = 0.0;
+    for t in (60..duration).step_by(30) {
+        let w = db.last_at(&SeriesId::global("workload_rate"), t).unwrap().1;
+        let tput = db.last_at(&SeriesId::global("throughput"), t).unwrap().1;
+        let lat = db
+            .last_at(&SeriesId::global("latency_ms"), t)
+            .map(|(_, v)| v)
+            .unwrap_or(0.0);
+        let mut cpu = 0.0;
+        for wk in 0..replicas {
+            cpu += db
+                .last_at(&SeriesId::worker("worker_cpu", wk), t)
+                .map(|(_, v)| v)
+                .unwrap_or(0.0);
+        }
+        cpu /= replicas as f64;
+        cap_seen = cap_seen.max(tput);
+        rows.push_str(&format!("{t},{w:.0},{cpu:.3},{tput:.0},{lat:.0}\n"));
+    }
+    std::fs::create_dir_all(format!("{}/fig2", opts.out_dir))?;
+    std::fs::write(format!("{}/fig2/metrics.csv", opts.out_dir), &rows)?;
+    Ok(format!(
+        "Fig 2: metric relationships at parallelism {replicas}\n\
+         throughput caps at ≈{cap_seen:.0} tuples/s (nominal {:.0});\n\
+         CSV: {}/fig2/metrics.csv\n",
+        5_500.0 * replicas as f64,
+        opts.out_dir
+    ))
+}
+
+/// Fig 3 — per-worker throughput and CPU at parallelism 12 under
+/// saturation: data skew made visible.
+pub fn fig3(opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::wordcount();
+    let replicas = 12;
+    let eff = job.effective_capacity(replicas, 72, 1);
+    let sim = run_fixed_parallelism(
+        job,
+        Box::new(ConstantWorkload {
+            rate: eff * 1.1, // saturating
+            duration: 900,
+        }),
+        replicas,
+        1,
+    );
+    let db = sim.tsdb();
+    let mut rows = String::from("worker,throughput,cpu\n");
+    let mut report = String::from("Fig 3: per-worker skew at parallelism 12 (saturated)\n");
+    let mut min_t = f64::MAX;
+    let mut max_t: f64 = 0.0;
+    let mut avg_cpu = 0.0;
+    for w in 0..replicas {
+        let tput = db
+            .avg_over(&SeriesId::worker("worker_throughput", w), 600, 899)
+            .unwrap_or(0.0);
+        let cpu = db
+            .avg_over(&SeriesId::worker("worker_cpu", w), 600, 899)
+            .unwrap_or(0.0);
+        min_t = min_t.min(tput);
+        max_t = max_t.max(tput);
+        avg_cpu += cpu / replicas as f64;
+        rows.push_str(&format!("{w},{tput:.0},{cpu:.3}\n"));
+    }
+    std::fs::create_dir_all(format!("{}/fig3", opts.out_dir))?;
+    std::fs::write(format!("{}/fig3/per_worker.csv", opts.out_dir), &rows)?;
+    report.push_str(&format!(
+        "worker throughput spread: {min_t:.0}..{max_t:.0} tuples/s (ratio {:.2});\n\
+         average CPU {avg_cpu:.2} (paper: spectrum of throughput/CPU, avg 0.8)\n\
+         CSV: {}/fig3/per_worker.csv\n",
+        max_t / min_t.max(1.0),
+        opts.out_dir
+    ));
+    Ok(report)
+}
+
+/// Fig 4 — proportional data skew across load levels: per-worker share of
+/// throughput vs. average CPU utilization.
+pub fn fig4(opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::wordcount();
+    let replicas = 12;
+    let eff = job.effective_capacity(replicas, 72, 1);
+    let mut rows = String::from("level,avg_cpu,worker,share\n");
+    // Correlation of shares between lowest and highest level tells us skew
+    // stays proportional.
+    let mut shares_low = Vec::new();
+    let mut shares_high = Vec::new();
+    for (li, level) in [0.3, 0.5, 0.7, 0.9, 1.05].iter().enumerate() {
+        let sim = run_fixed_parallelism(
+            job.clone(),
+            Box::new(ConstantWorkload {
+                rate: eff * level,
+                duration: 600,
+            }),
+            replicas,
+            1,
+        );
+        let db = sim.tsdb();
+        let mut tputs = Vec::new();
+        let mut avg_cpu = 0.0;
+        for w in 0..replicas {
+            tputs.push(
+                db.avg_over(&SeriesId::worker("worker_throughput", w), 300, 599)
+                    .unwrap_or(0.0),
+            );
+            avg_cpu += db
+                .avg_over(&SeriesId::worker("worker_cpu", w), 300, 599)
+                .unwrap_or(0.0)
+                / replicas as f64;
+        }
+        let total: f64 = tputs.iter().sum();
+        for (w, tp) in tputs.iter().enumerate() {
+            let share = tp / total.max(1.0);
+            rows.push_str(&format!("{level},{avg_cpu:.3},{w},{share:.4}\n"));
+            if li == 0 {
+                shares_low.push(share);
+            }
+            if *level == 0.9 {
+                shares_high.push(share);
+            }
+        }
+    }
+    // Pearson correlation between shares at low and high load.
+    let mut wf = Welford::new();
+    for (a, b) in shares_low.iter().zip(&shares_high) {
+        wf.push(*a, *b);
+    }
+    let corr = wf.cov() / (wf.var_x().sqrt() * wf.var_y().sqrt()).max(1e-12);
+    std::fs::create_dir_all(format!("{}/fig4", opts.out_dir))?;
+    std::fs::write(format!("{}/fig4/skew_over_cpu.csv", opts.out_dir), &rows)?;
+    Ok(format!(
+        "Fig 4: proportional data skew over CPU utilization\n\
+         worker-share correlation between 30% and 90% load: {corr:.3}\n\
+         (paper: skew remains proportional across load levels)\n\
+         CSV: {}/fig4/skew_over_cpu.csv\n",
+        opts.out_dir
+    ))
+}
+
+/// Fig 5 — capacity estimation over CPU: the simple division estimate vs.
+/// the regression estimate against the true capacity.
+pub fn fig5(opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::wordcount();
+    let replicas = 4;
+    let duration = 3_600;
+    let sim = run_fixed_parallelism(
+        job.clone(),
+        Box::new(RampWorkload {
+            from: 500.0,
+            to: job.capacity_at(replicas) * 1.3,
+            duration,
+        }),
+        replicas,
+        1,
+    );
+    let db = sim.tsdb();
+    // Track worker 0: simple estimate tput/cpu vs regression prediction.
+    let mut rows = String::from("cpu,throughput,simple_estimate,regression_estimate\n");
+    let mut w = Welford::new();
+    let mut simple_err_hi = Vec::new(); // |err| at cpu > 0.7
+    let mut reg_err_hi = Vec::new();
+    // True capacity of worker 0 = base_capacity × its speed factor; read it
+    // off the saturated tail of the run.
+    let true_cap = db
+        .max_over(&SeriesId::worker("worker_throughput", 0), 0, duration)
+        .unwrap_or(job.base_capacity);
+    for t in (120..duration).step_by(15) {
+        let cpu = db
+            .last_at(&SeriesId::worker("worker_cpu", 0), t)
+            .unwrap()
+            .1;
+        let tput = db
+            .last_at(&SeriesId::worker("worker_throughput", 0), t)
+            .unwrap()
+            .1;
+        if tput <= 0.0 || cpu <= 0.02 {
+            continue;
+        }
+        w.push(cpu, tput);
+        let simple = tput / cpu;
+        let reg = w.predict(1.0).unwrap_or(simple);
+        rows.push_str(&format!("{cpu:.3},{tput:.0},{simple:.0},{reg:.0}\n"));
+        if cpu > 0.7 && w.count > 10.0 {
+            simple_err_hi.push((simple - true_cap).abs() / true_cap);
+            reg_err_hi.push((reg - true_cap).abs() / true_cap);
+        }
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    std::fs::create_dir_all(format!("{}/fig5", opts.out_dir))?;
+    std::fs::write(format!("{}/fig5/capacity_over_cpu.csv", opts.out_dir), &rows)?;
+    Ok(format!(
+        "Fig 5: capacity estimation over CPU (worker 0, true capacity ≈{true_cap:.0})\n\
+         mean |error| above 70% CPU — simple: {:.1}%, regression: {:.1}%\n\
+         (paper: simple estimate reasonable >70% CPU; regression more accurate)\n\
+         CSV: {}/fig5/capacity_over_cpu.csv\n",
+        avg(&simple_err_hi) * 100.0,
+        avg(&reg_err_hi) * 100.0,
+        opts.out_dir
+    ))
+}
+
+fn comparison_approaches(targets: (f64, f64), backend: &ComputeBackend) -> Vec<Approach> {
+    let _ = backend;
+    vec![
+        Approach::Daedalus(DaedalusConfig::default()),
+        Approach::Hpa(targets.0),
+        Approach::Hpa(targets.1),
+        Approach::Static(12),
+    ]
+}
+
+fn autoscaler_figure(
+    name: &str,
+    engine: EngineProfile,
+    job: JobProfile,
+    make_workload: &dyn Fn(u64) -> Box<dyn Workload>,
+    hpa_targets: (f64, f64),
+    backend: ComputeBackend,
+    opts: &FigureOptsOwned,
+) -> Result<(String, ExperimentResult)> {
+    let exp = Experiment::paper(name, engine, job, backend.clone(), opts.duration)
+        .with_seeds(opts.seeds.clone())
+        .with_approaches(comparison_approaches(hpa_targets, &backend));
+    let res = exp.run(make_workload);
+    let dir = export::write_experiment(&res, &opts.out_dir)?;
+    let mut text = report::summary_table(&res, "static-12");
+    text.push_str(&report::reduction_lines(&res, "daedalus"));
+    text.push('\n');
+    text.push_str(&super::plot::experiment_panels(&res));
+    text.push_str(&format!("CSVs: {}\n", dir.display()));
+    Ok((text, res))
+}
+
+/// Fig 7 — Flink WordCount: Daedalus vs HPA-80/85 vs Static-12, sine ×2.
+pub fn fig7(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let duration = opts.duration;
+    let (text, _res) = autoscaler_figure(
+        "fig7-flink-wordcount",
+        EngineProfile::flink(),
+        job,
+        &move |_seed| Box::new(SineWorkload::paper_default(peak, duration)),
+        (0.80, 0.85),
+        backend,
+        opts,
+    )?;
+    Ok(format!("Fig 7: Flink WordCount\n{text}"))
+}
+
+/// Fig 8 — Flink Yahoo Streaming Benchmark on the CTR-like trace.
+pub fn fig8(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::ysb();
+    let peak = job.reference_peak;
+    let duration = opts.duration;
+    let (text, _res) = autoscaler_figure(
+        "fig8-flink-ysb",
+        EngineProfile::flink(),
+        job,
+        &move |seed| Box::new(CtrWorkload::new(peak, duration, seed)),
+        (0.80, 0.85),
+        backend,
+        opts,
+    )?;
+    Ok(format!("Fig 8: Yahoo Streaming Benchmark (Flink)\n{text}"))
+}
+
+/// Fig 9 — Flink Traffic Monitoring on the double-spike trace.
+pub fn fig9(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::traffic();
+    let peak = job.reference_peak;
+    let duration = opts.duration;
+    let (text, _res) = autoscaler_figure(
+        "fig9-flink-traffic",
+        EngineProfile::flink(),
+        job,
+        &move |seed| Box::new(TrafficWorkload::new(peak, duration, seed)),
+        (0.80, 0.85),
+        backend,
+        opts,
+    )?;
+    Ok(format!("Fig 9: Traffic Monitoring (Flink)\n{text}"))
+}
+
+/// Fig 10 — Kafka Streams WordCount: HPA-60/80 (HPA-80 under-provisions
+/// because Kafka Streams saturates below 80 % CPU).
+pub fn fig10(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let duration = opts.duration;
+    let (text, res) = autoscaler_figure(
+        "fig10-kstreams-wordcount",
+        EngineProfile::kstreams(),
+        job,
+        &move |_seed| Box::new(SineWorkload::paper_default(peak, duration)),
+        (0.60, 0.80),
+        backend,
+        opts,
+    )?;
+    // The headline mechanism: HPA-80 must have under-provisioned.
+    let note = match (res.approach("hpa-80"), res.approach("hpa-60")) {
+        (Some(h80), Some(h60)) => format!(
+            "HPA-80 avg latency {:.0} ms vs HPA-60 {:.0} ms (under-provisioning: {})\n",
+            h80.avg_latency_ms(),
+            h60.avg_latency_ms(),
+            h80.avg_latency_ms() > 3.0 * h60.avg_latency_ms()
+        ),
+        _ => String::new(),
+    };
+    Ok(format!("Fig 10: Kafka Streams WordCount\n{text}{note}"))
+}
+
+/// Fig 11 — comparison with Phoebe: YSB on a sine workload, max 18
+/// workers, 600 s recovery target; Phoebe's profiling cost is reported.
+pub fn fig11(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
+    let job = JobProfile::ysb();
+    let peak = job.reference_peak;
+    let duration = opts.duration;
+    let mut exp = Experiment::paper(
+        "fig11-phoebe-comparison",
+        EngineProfile::flink(),
+        job,
+        backend,
+        duration,
+    )
+    .with_seeds(opts.seeds.clone())
+    .with_approaches(vec![
+        Approach::Daedalus(DaedalusConfig::default()),
+        Approach::Phoebe(PhoebeConfig::default(), vec![2, 4, 6, 9, 12, 15, 18]),
+    ]);
+    exp.max_replicas = 18;
+    let res = exp.run(&move |_seed| Box::new(SineWorkload::paper_default(peak, duration)));
+    let dir = export::write_experiment(&res, &opts.out_dir)?;
+    let mut text = String::from("Fig 11: Daedalus vs Phoebe (YSB, sine, max 18)\n");
+    text.push_str(&report::summary_table(&res, "daedalus"));
+    if let (Some(d), Some(p)) = (res.approach("daedalus"), res.approach("phoebe")) {
+        let without = 1.0 - d.worker_seconds / p.worker_seconds.max(1.0);
+        let with = 1.0 - d.total_worker_seconds() / p.total_worker_seconds().max(1.0);
+        text.push_str(&format!(
+            "daedalus vs phoebe resources: {:.0}% less (excl. profiling), {:.0}% less (incl. profiling)\n\
+             phoebe profiling cost: {:.0} worker-seconds\n\
+             max latency — daedalus: {:.1} s, phoebe: {:.1} s\n",
+            without * 100.0,
+            with * 100.0,
+            p.profiling_worker_seconds,
+            d.latencies.max() / 1_000.0,
+            p.latencies.max() / 1_000.0,
+        ));
+    }
+    text.push_str(&format!("CSVs: {}\n", dir.display()));
+    Ok(text)
+}
+
+/// Run every figure (the full evaluation).
+pub fn all(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&fig2(opts)?);
+    out.push('\n');
+    out.push_str(&fig3(opts)?);
+    out.push('\n');
+    out.push_str(&fig4(opts)?);
+    out.push('\n');
+    out.push_str(&fig5(opts)?);
+    out.push('\n');
+    out.push_str(&fig7(backend.clone(), opts)?);
+    out.push('\n');
+    out.push_str(&fig8(backend.clone(), opts)?);
+    out.push('\n');
+    out.push_str(&fig9(backend.clone(), opts)?);
+    out.push('\n');
+    out.push_str(&fig10(backend.clone(), opts)?);
+    out.push('\n');
+    out.push_str(&fig11(backend, opts)?);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> FigureOptsOwned {
+        FigureOptsOwned {
+            duration: 1_500,
+            seeds: vec![1],
+            out_dir: std::env::temp_dir()
+                .join("daedalus-fig-tests")
+                .to_string_lossy()
+                .into_owned()
+                .leak()
+                .to_string(),
+        }
+    }
+
+    #[test]
+    fn fig2_reports_saturation() {
+        let text = fig2(&tiny_opts()).unwrap();
+        assert!(text.contains("caps at"));
+    }
+
+    #[test]
+    fn fig3_shows_skew_spread() {
+        let text = fig3(&tiny_opts()).unwrap();
+        assert!(text.contains("spread"));
+    }
+}

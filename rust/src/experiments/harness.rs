@@ -1,0 +1,335 @@
+//! The multi-approach, multi-repetition experiment runner.
+//!
+//! Mirrors the paper's protocol (§4.4–4.5): all approaches process the same
+//! workload trace (each in its own isolated deployment), each experiment is
+//! repeated with several seeds, latency samples are pooled, and resource
+//! usage is reported normalized against the static baseline.
+
+use crate::autoscaler::{
+    phoebe::profiler, Autoscaler, Daedalus, DaedalusConfig, Ds2, Ds2Config, Hpa, HpaConfig,
+    Phoebe, PhoebeConfig, Static,
+};
+use crate::clock::Timestamp;
+use crate::dsp::{EngineProfile, SimConfig, Simulation};
+use crate::jobs::JobProfile;
+use crate::metrics::SeriesId;
+use crate::runtime::ComputeBackend;
+use crate::stats::Ecdf;
+use crate::workload::Workload;
+
+/// Which autoscaling approach to deploy.
+#[derive(Clone)]
+pub enum Approach {
+    Daedalus(DaedalusConfig),
+    Hpa(f64),
+    Static(usize),
+    /// Phoebe profiles `scaleouts` first; profiling cost is accounted.
+    Phoebe(PhoebeConfig, Vec<usize>),
+    /// DS2-style reactive true-rate scaler.
+    Ds2,
+}
+
+impl Approach {
+    pub fn label(&self) -> String {
+        match self {
+            Approach::Daedalus(_) => "daedalus".into(),
+            Approach::Hpa(t) => format!("hpa-{:02.0}", t * 100.0),
+            Approach::Static(n) => format!("static-{n}"),
+            Approach::Phoebe(..) => "phoebe".into(),
+            Approach::Ds2 => "ds2".into(),
+        }
+    }
+}
+
+/// One experiment: a job on an engine under a workload, with approaches.
+pub struct Experiment {
+    pub name: String,
+    pub engine: EngineProfile,
+    pub job: JobProfile,
+    pub duration: Timestamp,
+    pub partitions: usize,
+    pub initial_replicas: usize,
+    pub max_replicas: usize,
+    pub seeds: Vec<u64>,
+    pub approaches: Vec<Approach>,
+    pub backend: ComputeBackend,
+    /// Per-tick sampling stride for the time-series exports.
+    pub sample_stride: u64,
+}
+
+impl Experiment {
+    /// Paper-style experiment with defaults (max 12 workers, 1 seed).
+    pub fn paper(
+        name: &str,
+        engine: EngineProfile,
+        job: JobProfile,
+        backend: ComputeBackend,
+        duration: Timestamp,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            engine,
+            job,
+            duration,
+            partitions: 72,
+            initial_replicas: 4,
+            max_replicas: 12,
+            seeds: vec![1],
+            approaches: vec![],
+            backend,
+            sample_stride: 30,
+        }
+    }
+
+    pub fn with_approaches(mut self, approaches: Vec<Approach>) -> Self {
+        self.approaches = approaches;
+        self
+    }
+
+    pub fn with_seeds(mut self, seeds: Vec<u64>) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    /// Run every approach × seed. `make_workload(seed)` builds the shared
+    /// trace for one repetition.
+    pub fn run(
+        &self,
+        make_workload: &dyn Fn(u64) -> Box<dyn Workload>,
+    ) -> ExperimentResult {
+        let mut approaches = Vec::new();
+        for approach in &self.approaches {
+            let mut pooled = ApproachResult::empty(approach.label());
+            for &seed in &self.seeds {
+                let run = self.run_single(approach, seed, make_workload(seed));
+                pooled.absorb(run);
+            }
+            pooled.finalize(self.seeds.len());
+            approaches.push(pooled);
+        }
+        // Reference workload series from the first seed.
+        let wl = make_workload(self.seeds[0]);
+        let workload_series: Vec<(Timestamp, f64)> = (0..self.duration)
+            .step_by(self.sample_stride as usize)
+            .map(|t| (t, wl.rate(t)))
+            .collect();
+        ExperimentResult {
+            name: self.name.clone(),
+            workload_series,
+            approaches,
+        }
+    }
+
+    fn build_scaler(&self, approach: &Approach, seed: u64) -> (Box<dyn Autoscaler>, f64) {
+        match approach {
+            Approach::Daedalus(cfg) => (
+                Box::new(Daedalus::new(cfg.clone(), self.backend.clone())),
+                0.0,
+            ),
+            Approach::Hpa(target) => (
+                Box::new(Hpa::new(HpaConfig::at_target(*target, self.max_replicas))),
+                0.0,
+            ),
+            Approach::Static(n) => (Box::new(Static::new(*n)), 0.0),
+            Approach::Ds2 => (
+                Box::new(Ds2::new(Ds2Config::defaults(self.max_replicas))),
+                0.0,
+            ),
+            Approach::Phoebe(cfg, scaleouts) => {
+                let report = profiler::profile_job(
+                    &self.engine,
+                    &self.job,
+                    scaleouts,
+                    self.max_replicas,
+                    seed ^ 0x9F0E_BE00,
+                );
+                (
+                    Box::new(Phoebe::new(cfg.clone(), report.models, self.backend.clone())),
+                    report.worker_seconds,
+                )
+            }
+        }
+    }
+
+    /// One approach, one seed.
+    pub fn run_single(
+        &self,
+        approach: &Approach,
+        seed: u64,
+        workload: Box<dyn Workload>,
+    ) -> RunResult {
+        let (mut scaler, profiling_ws) = self.build_scaler(approach, seed);
+        let cfg = SimConfig {
+            profile: self.engine.clone(),
+            job: self.job.clone(),
+            workload,
+            partitions: self.partitions,
+            initial_replicas: match approach {
+                Approach::Static(n) => *n,
+                _ => self.initial_replicas,
+            },
+            max_replicas: self.max_replicas,
+            seed,
+            rate_noise: 0.02,
+            failures: vec![],
+        };
+        let mut sim = Simulation::new(cfg);
+        let mut parallelism_series = Vec::new();
+        for t in 0..self.duration {
+            sim.step(t);
+            if let Some(n) = scaler.decide(&sim.view()) {
+                if scaler.wants_precheckpoint() {
+                    sim.checkpoint_now();
+                }
+                sim.request_rescale(n);
+            }
+            if t % self.sample_stride == 0 {
+                parallelism_series.push((t, sim.parallelism()));
+            }
+        }
+        let db = sim.tsdb();
+        let lag_max = db
+            .max_over(&SeriesId::global("consumer_lag"), 0, self.duration)
+            .unwrap_or(0.0);
+        RunResult {
+            latencies: sim.latencies().clone(),
+            avg_workers: sim.avg_workers(),
+            worker_seconds: sim.worker_seconds(),
+            profiling_worker_seconds: profiling_ws,
+            rescales: sim.rescale_log.len(),
+            parallelism_series,
+            final_backlog: sim.total_backlog(),
+            lag_max,
+        }
+    }
+}
+
+/// Raw results of a single (approach, seed) run.
+pub struct RunResult {
+    pub latencies: Ecdf,
+    pub avg_workers: f64,
+    pub worker_seconds: f64,
+    pub profiling_worker_seconds: f64,
+    pub rescales: usize,
+    pub parallelism_series: Vec<(Timestamp, usize)>,
+    pub final_backlog: f64,
+    pub lag_max: f64,
+}
+
+/// Results pooled over seeds for one approach.
+pub struct ApproachResult {
+    pub name: String,
+    pub latencies: Ecdf,
+    pub avg_workers: f64,
+    pub worker_seconds: f64,
+    pub profiling_worker_seconds: f64,
+    pub rescales: f64,
+    /// Parallelism over time from the first repetition (for the figures).
+    pub parallelism_series: Vec<(Timestamp, usize)>,
+    pub final_backlog: f64,
+    pub lag_max: f64,
+}
+
+impl ApproachResult {
+    fn empty(name: String) -> Self {
+        Self {
+            name,
+            latencies: Ecdf::new(),
+            avg_workers: 0.0,
+            worker_seconds: 0.0,
+            profiling_worker_seconds: 0.0,
+            rescales: 0.0,
+            parallelism_series: Vec::new(),
+            final_backlog: 0.0,
+            lag_max: 0.0,
+        }
+    }
+
+    fn absorb(&mut self, run: RunResult) {
+        self.latencies.merge(&run.latencies);
+        self.avg_workers += run.avg_workers;
+        self.worker_seconds += run.worker_seconds;
+        self.profiling_worker_seconds += run.profiling_worker_seconds;
+        self.rescales += run.rescales as f64;
+        self.final_backlog += run.final_backlog;
+        self.lag_max = self.lag_max.max(run.lag_max);
+        if self.parallelism_series.is_empty() {
+            self.parallelism_series = run.parallelism_series;
+        }
+    }
+
+    fn finalize(&mut self, reps: usize) {
+        let r = reps.max(1) as f64;
+        self.avg_workers /= r;
+        self.worker_seconds /= r;
+        self.profiling_worker_seconds /= r;
+        self.rescales /= r;
+        self.final_backlog /= r;
+    }
+
+    /// Mean end-to-end latency (ms).
+    pub fn avg_latency_ms(&self) -> f64 {
+        self.latencies.mean()
+    }
+
+    /// Worker-seconds including profiling overhead (Fig 11 accounting).
+    pub fn total_worker_seconds(&self) -> f64 {
+        self.worker_seconds + self.profiling_worker_seconds
+    }
+}
+
+/// A full experiment's pooled output.
+pub struct ExperimentResult {
+    pub name: String,
+    pub workload_series: Vec<(Timestamp, f64)>,
+    pub approaches: Vec<ApproachResult>,
+}
+
+impl ExperimentResult {
+    pub fn approach(&self, name: &str) -> Option<&ApproachResult> {
+        self.approaches.iter().find(|a| a.name == name)
+    }
+
+    /// Resource usage of `name` normalized by `baseline` (Figs 7d–10d).
+    pub fn normalized_usage(&self, name: &str, baseline: &str) -> Option<f64> {
+        let a = self.approach(name)?.worker_seconds;
+        let b = self.approach(baseline)?.worker_seconds;
+        (b > 0.0).then(|| a / b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::SineWorkload;
+
+    #[test]
+    fn two_approach_experiment_runs_and_pools() {
+        let job = JobProfile::wordcount();
+        let exp = Experiment {
+            name: "mini".into(),
+            engine: EngineProfile::flink(),
+            job: job.clone(),
+            duration: 1_200,
+            partitions: 36,
+            initial_replicas: 4,
+            max_replicas: 12,
+            seeds: vec![1, 2],
+            approaches: vec![Approach::Static(6), Approach::Hpa(0.8)],
+            backend: ComputeBackend::native(),
+            sample_stride: 60,
+        };
+        let res = exp.run(&|_seed| {
+            Box::new(SineWorkload::paper_default(20_000.0, 1_200))
+        });
+        assert_eq!(res.approaches.len(), 2);
+        let s = res.approach("static-6").unwrap();
+        crate::assert_close!(s.avg_workers, 6.0, rtol = 0.05);
+        assert!(s.latencies.total_weight() > 0.0);
+        let h = res.approach("hpa-80").unwrap();
+        assert!(h.avg_workers > 0.5);
+        // Normalized usage is defined and positive.
+        let norm = res.normalized_usage("hpa-80", "static-6").unwrap();
+        assert!(norm > 0.0);
+    }
+}

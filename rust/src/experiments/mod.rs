@@ -1,0 +1,27 @@
+//! Experiment harness: everything needed to regenerate the paper's
+//! evaluation (§4) — Figures 2–5 (metric relationships), Figures 7–10
+//! (the three jobs × two engines autoscaler comparisons), Figure 11
+//! (Phoebe), and the §4.8 validation numbers.
+//!
+//! * [`harness`] — run N approaches × M seeds over one workload and pool
+//!   the results (the paper runs 5 repetitions).
+//! * [`figures`] — one driver per paper figure; each returns printable
+//!   series plus the summary rows quoted in the text.
+//! * [`report`] — formatting: summary tables, ECDF curves, time series.
+//! * [`export`] — CSV dumps under `results/`.
+//! * [`validate`] — §4.8: capacity-estimate accuracy, TSF accuracy,
+//!   predicted-vs-actual recovery time.
+//! * [`ablation`] — one-mechanism-off variants of Daedalus quantifying each
+//!   design choice's contribution.
+
+pub mod ablation;
+pub mod export;
+pub mod failures;
+pub mod figures;
+pub mod harness;
+pub mod plot;
+pub mod report;
+pub mod rt_sweep;
+pub mod validate;
+
+pub use harness::{Approach, ApproachResult, Experiment, ExperimentResult};

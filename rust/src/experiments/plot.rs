@@ -1,0 +1,127 @@
+//! Terminal plots: braille-free ASCII renderings of the paper's figure
+//! panels (workload over time, parallelism over time, latency ECDF) so a
+//! headless reproduction run is inspectable without leaving the terminal.
+
+/// Render one or more series into an ASCII chart.
+///
+/// `series`: (label, points); x is assumed shared/monotone per series.
+/// Returns a `height`-row chart with a y-axis scale and an x range footer.
+pub fn ascii_chart(series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    assert!(width >= 16 && height >= 4);
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let (mut x_min, mut x_max) = (f64::MAX, f64::MIN);
+    let (mut y_min, mut y_max) = (f64::MAX, f64::MIN);
+    for (_, pts) in series {
+        for (x, y) in pts.iter() {
+            x_min = x_min.min(*x);
+            x_max = x_max.max(*x);
+            y_min = y_min.min(*y);
+            y_max = y_max.max(*y);
+        }
+    }
+    if x_min > x_max || y_min > y_max {
+        return "(no data)\n".into();
+    }
+    if (y_max - y_min).abs() < 1e-12 {
+        y_max = y_min + 1.0;
+    }
+    if (x_max - x_min).abs() < 1e-12 {
+        x_max = x_min + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (x, y) in pts.iter() {
+            let cx = ((x - x_min) / (x_max - x_min) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y_min) / (y_max - y_min) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    for (ri, row) in grid.iter().enumerate() {
+        let yv = y_max - (y_max - y_min) * ri as f64 / (height - 1) as f64;
+        out.push_str(&format!("{:>10.0} |", yv));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n{:>12}x: {:.0} .. {:.0}   ",
+        "", "-".repeat(width), "", x_min, x_max
+    ));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", marks[si % marks.len()], label));
+    }
+    out.push('\n');
+    out
+}
+
+/// Workload + per-approach parallelism panels for an experiment result —
+/// the (a) and (b) panels of Figs 7–10.
+pub fn experiment_panels(res: &super::harness::ExperimentResult) -> String {
+    let wl: Vec<(f64, f64)> = res
+        .workload_series
+        .iter()
+        .map(|(t, v)| (*t as f64, *v))
+        .collect();
+    let mut out = String::from("workload (tuples/s):\n");
+    out.push_str(&ascii_chart(&[("workload", &wl)], 72, 10));
+    out.push_str("\nparallelism:\n");
+    let series_data: Vec<(String, Vec<(f64, f64)>)> = res
+        .approaches
+        .iter()
+        .map(|a| {
+            (
+                a.name.clone(),
+                a.parallelism_series
+                    .iter()
+                    .map(|(t, p)| (*t as f64, *p as f64))
+                    .collect(),
+            )
+        })
+        .collect();
+    let series_refs: Vec<(&str, &[(f64, f64)])> = series_data
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.as_slice()))
+        .collect();
+    out.push_str(&ascii_chart(&series_refs, 72, 10));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scale_and_legend() {
+        let pts: Vec<(f64, f64)> = (0..100).map(|i| (i as f64, (i * i) as f64)).collect();
+        let chart = ascii_chart(&[("sq", &pts)], 40, 8);
+        assert!(chart.contains('*'));
+        assert!(chart.contains("x: 0 .. 99"));
+        assert!(chart.contains("*=sq"));
+        // 8 data rows + axis + footer.
+        assert_eq!(chart.trim_end().lines().count(), 10);
+    }
+
+    #[test]
+    fn multiple_series_distinct_marks() {
+        let a: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 0.0)).collect();
+        let b: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 100.0)).collect();
+        let chart = ascii_chart(&[("low", &a), ("high", &b)], 40, 6);
+        assert!(chart.contains('*') && chart.contains('+'));
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let a = [(0.0, 5.0), (10.0, 5.0)];
+        let chart = ascii_chart(&[("flat", &a)], 20, 4);
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn empty_series_say_no_data() {
+        let chart = ascii_chart(&[("none", &[])], 20, 4);
+        assert!(chart.contains("no data"));
+    }
+}

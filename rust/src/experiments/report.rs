@@ -1,0 +1,183 @@
+//! Report formatting: the paper-style summary rows and plottable series.
+
+use super::harness::ExperimentResult;
+
+/// Paper-style summary table (§4.5 text numbers): average latency, average
+/// workers, resource usage vs. the static baseline and each other approach.
+pub fn summary_table(res: &ExperimentResult, static_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {} ==\n", res.name));
+    out.push_str(&format!(
+        "{:<12} {:>12} {:>10} {:>10} {:>12} {:>10} {:>9}\n",
+        "approach", "avg lat ms", "p95 ms", "p99 ms", "avg workers", "vs static", "rescales"
+    ));
+    let base = res.approach(static_name).map(|a| a.worker_seconds);
+    for a in &res.approaches {
+        let mut lat = a.latencies.clone();
+        let vs_static = match base {
+            Some(b) if b > 0.0 => format!("{:+.0}%", (a.worker_seconds / b - 1.0) * 100.0),
+            _ => "-".into(),
+        };
+        out.push_str(&format!(
+            "{:<12} {:>12.0} {:>10.0} {:>10.0} {:>12.2} {:>10} {:>9.1}\n",
+            a.name,
+            a.avg_latency_ms(),
+            lat.quantile(0.95),
+            lat.quantile(0.99),
+            a.avg_workers,
+            vs_static,
+            a.rescales,
+        ));
+    }
+    out
+}
+
+/// Resource-reduction sentences like the paper's ("Daedalus used X% less
+/// resources than Y").
+pub fn reduction_lines(res: &ExperimentResult, subject: &str) -> String {
+    let mut out = String::new();
+    let Some(s) = res.approach(subject) else {
+        return out;
+    };
+    for other in &res.approaches {
+        if other.name == subject {
+            continue;
+        }
+        if other.worker_seconds > 0.0 {
+            let pct = (1.0 - s.worker_seconds / other.worker_seconds) * 100.0;
+            out.push_str(&format!(
+                "{subject} used {pct:.0}% {} resources than {}\n",
+                if pct >= 0.0 { "less" } else { "more" },
+                other.name
+            ));
+        }
+    }
+    out
+}
+
+/// ECDF curves on a log grid (Figs 7c–10c): one column per approach.
+pub fn ecdf_table(res: &ExperimentResult, points: usize) -> String {
+    let mut out = String::new();
+    let lo = 10.0_f64;
+    let hi = res
+        .approaches
+        .iter()
+        .map(|a| a.latencies.max())
+        .fold(1_000.0, f64::max)
+        * 1.1;
+    out.push_str("latency_ms");
+    for a in &res.approaches {
+        out.push_str(&format!(",{}", a.name));
+    }
+    out.push('\n');
+    let mut curves: Vec<Vec<(f64, f64)>> = res
+        .approaches
+        .iter()
+        .map(|a| a.latencies.clone().curve_logspace(lo, hi, points))
+        .collect();
+    for i in 0..points {
+        let x = curves[0][i].0;
+        out.push_str(&format!("{x:.1}"));
+        for c in curves.iter_mut() {
+            out.push_str(&format!(",{:.4}", c[i].1));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parallelism-over-time series (Figs 7b–10b) as CSV text.
+pub fn parallelism_series(res: &ExperimentResult) -> String {
+    let mut out = String::from("t");
+    for a in &res.approaches {
+        out.push_str(&format!(",{}", a.name));
+    }
+    out.push('\n');
+    let n = res
+        .approaches
+        .iter()
+        .map(|a| a.parallelism_series.len())
+        .min()
+        .unwrap_or(0);
+    for i in 0..n {
+        let t = res.approaches[0].parallelism_series[i].0;
+        out.push_str(&format!("{t}"));
+        for a in &res.approaches {
+            out.push_str(&format!(",{}", a.parallelism_series[i].1));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Workload series (Figs 7a–10a) as CSV text.
+pub fn workload_series(res: &ExperimentResult) -> String {
+    let mut out = String::from("t,workload\n");
+    for (t, w) in &res.workload_series {
+        out.push_str(&format!("{t},{w:.0}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::harness::ApproachResult;
+    use crate::stats::Ecdf;
+
+    fn fake_result() -> ExperimentResult {
+        let mk = |name: &str, lat: f64, ws: f64| {
+            let mut e = Ecdf::new();
+            for i in 0..100 {
+                e.push(lat + i as f64, 1.0);
+            }
+            ApproachResult {
+                name: name.into(),
+                latencies: e,
+                avg_workers: ws / 1_000.0,
+                worker_seconds: ws,
+                profiling_worker_seconds: 0.0,
+                rescales: 3.0,
+                parallelism_series: vec![(0, 4), (30, 6)],
+                final_backlog: 0.0,
+                lag_max: 0.0,
+            }
+        };
+        ExperimentResult {
+            name: "fake".into(),
+            workload_series: vec![(0, 1_000.0), (30, 2_000.0)],
+            approaches: vec![mk("daedalus", 500.0, 5_000.0), mk("static-12", 700.0, 12_000.0)],
+        }
+    }
+
+    #[test]
+    fn summary_contains_all_approaches() {
+        let t = summary_table(&fake_result(), "static-12");
+        assert!(t.contains("daedalus"));
+        assert!(t.contains("static-12"));
+        assert!(t.contains("-58%")); // 5000/12000 - 1 ≈ -58%
+    }
+
+    #[test]
+    fn reduction_lines_match_manual_math() {
+        let l = reduction_lines(&fake_result(), "daedalus");
+        assert!(l.contains("58% less"), "{l}");
+    }
+
+    #[test]
+    fn ecdf_table_shape() {
+        let t = ecdf_table(&fake_result(), 10);
+        let lines: Vec<&str> = t.trim().lines().collect();
+        assert_eq!(lines.len(), 11);
+        assert!(lines[0].starts_with("latency_ms,daedalus,static-12"));
+    }
+
+    #[test]
+    fn series_tables_well_formed() {
+        let p = parallelism_series(&fake_result());
+        assert!(p.starts_with("t,daedalus,static-12"));
+        assert_eq!(p.trim().lines().count(), 3);
+        let w = workload_series(&fake_result());
+        assert_eq!(w.trim().lines().count(), 3);
+    }
+}

@@ -1,0 +1,204 @@
+//! The paper's three benchmark DSP jobs as simulator cost profiles
+//! (§4.1): WordCount, Yahoo Streaming Benchmark, Traffic Monitoring.
+//!
+//! A job profile captures what the substrate needs to reproduce the paper's
+//! observable behaviour: per-worker processing capacity, the latency
+//! composition (processing base + coordination overhead + tumbling-window
+//! fill time), and the key space that generates data skew.
+
+pub mod topology;
+
+pub use topology::{Operator, Topology};
+
+use crate::dsp::KeyDistribution;
+
+/// Cost/latency profile of a DSP job.
+#[derive(Debug, Clone)]
+pub struct JobProfile {
+    pub name: &'static str,
+    /// Tuples/s one worker at speed 1.0 can process.
+    pub base_capacity: f64,
+    /// Fixed processing latency (ms) — deserialization, operators, sink.
+    pub base_latency_ms: f64,
+    /// Coordination overhead per worker (ms·worker): larger deployments pay
+    /// more for shuffles/sync — why Static-12 doesn't win latency (§4.5.1).
+    pub coord_latency_ms: f64,
+    /// Tumbling window length in seconds (0 = no windowing).
+    pub window_secs: f64,
+    /// Window-fill sensitivity (ms at peak rate): when the workload is low,
+    /// windows take longer to emit — the paper's "highest latencies for the
+    /// static scale-out come from when the workload is lowest" (§4.5.2).
+    pub window_fill_ms: f64,
+    /// Number of distinct keys (partitioning granularity).
+    pub n_keys: usize,
+    /// Zipf exponent of key popularity (0 = uniform; higher = more skew).
+    pub zipf_s: f64,
+    /// Reference peak workload for the 6-h experiments (tuples/s), chosen
+    /// below the 12-worker capacity as in §4.2.
+    pub reference_peak: f64,
+}
+
+impl JobProfile {
+    /// WordCount (§4.1.1): cheap per tuple, running aggregate (no window),
+    /// highly susceptible to data skew (§4.5.1).
+    pub fn wordcount() -> Self {
+        Self {
+            name: "wordcount",
+            base_capacity: 5_500.0,
+            base_latency_ms: 150.0,
+            coord_latency_ms: 25.0,
+            window_secs: 0.0,
+            window_fill_ms: 0.0,
+            n_keys: 400,
+            zipf_s: 0.6,
+            reference_peak: 28_000.0,
+        }
+    }
+
+    /// Yahoo Streaming Benchmark (§4.1.2): JSON deserialize + filter + join
+    /// + 10 s tumbling window. Campaign cache instead of Redis round-trips.
+    pub fn ysb() -> Self {
+        Self {
+            name: "ysb",
+            base_capacity: 6_500.0,
+            base_latency_ms: 900.0,
+            coord_latency_ms: 30.0,
+            window_secs: 10.0,
+            window_fill_ms: 600.0,
+            n_keys: 800,
+            zipf_s: 0.4,
+            reference_peak: 48_000.0,
+        }
+    }
+
+    /// Traffic Monitoring (§4.1.3): geo filter + 10 s window average speed.
+    pub fn traffic() -> Self {
+        Self {
+            name: "traffic",
+            base_capacity: 8_000.0,
+            base_latency_ms: 700.0,
+            coord_latency_ms: 30.0,
+            window_secs: 10.0,
+            window_fill_ms: 700.0,
+            n_keys: 600,
+            zipf_s: 0.3,
+            reference_peak: 56_000.0,
+        }
+    }
+
+    /// All three benchmark jobs.
+    pub fn all() -> Vec<JobProfile> {
+        vec![Self::wordcount(), Self::ysb(), Self::traffic()]
+    }
+
+    /// Capacity of `n` nominal-speed workers.
+    pub fn capacity_at(&self, n: usize) -> f64 {
+        self.base_capacity * n as f64
+    }
+
+    /// The job's key distribution (seeded).
+    pub fn key_distribution(&self, seed: u64) -> KeyDistribution {
+        if self.zipf_s <= 0.0 {
+            KeyDistribution::uniform(self.n_keys)
+        } else {
+            KeyDistribution::zipf(self.n_keys, self.zipf_s, seed)
+        }
+    }
+
+    /// Skew-limited *effective* capacity at `n` workers: the system
+    /// saturates when the hottest worker (by key/partition weight) hits its
+    /// own capacity, not when the nominal sum does (§3.1, Fig 3). Uses
+    /// nominal worker speed; round-robin partition→worker assignment.
+    pub fn effective_capacity(&self, n: usize, partitions: usize, seed: u64) -> f64 {
+        assert!(n >= 1 && partitions >= n);
+        let pw = self.key_distribution(seed).partition_weights(partitions);
+        let mut ww = vec![0.0f64; n];
+        for (p, w) in pw.iter().enumerate() {
+            ww[p % n] += w;
+        }
+        let max_w = ww.iter().copied().fold(0.0, f64::max).max(1e-12);
+        self.base_capacity / max_w
+    }
+
+    /// Latency (ms) added on top of queueing delay for a tuple processed
+    /// while the job runs `n` workers at workload `rate`.
+    pub fn service_latency_ms(&self, n_workers: usize, rate: f64) -> f64 {
+        let mut ms = self.base_latency_ms + self.coord_latency_ms * n_workers as f64;
+        if self.window_secs > 0.0 {
+            // Mean residence in a tumbling window is window/2; emission
+            // slows further when the rate is far below the reference peak.
+            ms += self.window_secs * 500.0;
+            let fill = (self.reference_peak / rate.max(1.0)).clamp(1.0, 8.0);
+            ms += self.window_fill_ms * (fill - 1.0);
+        }
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_workers_cover_reference_peaks_despite_skew() {
+        // §4.2: peaks are scaled below what 12 workers can actually absorb
+        // — which, with skew, is the *effective* capacity, not 12 × base.
+        for job in JobProfile::all() {
+            for seed in 0..5 {
+                let eff = job.effective_capacity(12, 72, seed);
+                assert!(
+                    eff > job.reference_peak * 1.1,
+                    "{} seed {}: eff {} vs peak {}",
+                    job.name,
+                    seed,
+                    eff,
+                    job.reference_peak
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn effective_capacity_below_nominal_and_grows_with_n() {
+        let job = JobProfile::wordcount();
+        let e4 = job.effective_capacity(4, 72, 1);
+        let e8 = job.effective_capacity(8, 72, 1);
+        let e12 = job.effective_capacity(12, 72, 1);
+        assert!(e4 < job.capacity_at(4) * 1.001);
+        assert!(e4 < e8 && e8 < e12, "{e4} {e8} {e12}");
+        // Skew costs something but not everything.
+        assert!(e12 > 0.5 * job.capacity_at(12), "{e12}");
+    }
+
+    #[test]
+    fn windowed_jobs_have_higher_base_latency() {
+        let wc = JobProfile::wordcount();
+        let ysb = JobProfile::ysb();
+        let rate = 30_000.0;
+        assert!(ysb.service_latency_ms(6, rate) > wc.service_latency_ms(6, rate) + 4_000.0);
+    }
+
+    #[test]
+    fn low_rate_inflates_windowed_latency() {
+        let ysb = JobProfile::ysb();
+        let low = ysb.service_latency_ms(12, 5_000.0);
+        let high = ysb.service_latency_ms(12, 60_000.0);
+        assert!(low > high + 1_000.0, "low {low} vs high {high}");
+    }
+
+    #[test]
+    fn coordination_penalizes_large_deployments() {
+        let wc = JobProfile::wordcount();
+        assert!(wc.service_latency_ms(12, 30_000.0) > wc.service_latency_ms(4, 30_000.0));
+    }
+
+    #[test]
+    fn wordcount_no_window_effect() {
+        let wc = JobProfile::wordcount();
+        crate::assert_close!(
+            wc.service_latency_ms(1, 100.0),
+            wc.service_latency_ms(1, 50_000.0),
+            atol = 1e-9
+        );
+    }
+}

@@ -1,0 +1,168 @@
+//! Operator topologies: the benchmark jobs as the pipelines the paper
+//! describes (§4.1), not opaque cost constants.
+//!
+//! Each job is a chain of operators with a per-tuple CPU cost and a
+//! selectivity (output/input ratio). A worker executes the whole chain on
+//! its partition slice (Flink operator-chaining / Kafka Streams topology),
+//! so the per-worker capacity is the reciprocal of the *effective* cost:
+//! cost of each operator weighted by how many tuples survive to reach it.
+//! `JobProfile::base_capacity` is derived from these chains, keeping the
+//! simulator's knob count low while making the job definitions auditable.
+
+/// One streaming operator.
+#[derive(Debug, Clone)]
+pub struct Operator {
+    pub name: &'static str,
+    /// CPU microseconds per *input* tuple on a nominal worker core.
+    pub cost_us: f64,
+    /// Output tuples per input tuple (filter < 1, flat-map > 1).
+    pub selectivity: f64,
+}
+
+impl Operator {
+    pub const fn new(name: &'static str, cost_us: f64, selectivity: f64) -> Self {
+        Self {
+            name,
+            cost_us,
+            selectivity,
+        }
+    }
+}
+
+/// A linear operator chain (the paper's jobs are all linear pipelines).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: &'static str,
+    pub operators: Vec<Operator>,
+}
+
+impl Topology {
+    /// WordCount (§4.1.1): source → split (flat-map ×7 words/line) →
+    /// count (stateful) → console sink.
+    pub fn wordcount() -> Self {
+        Self {
+            name: "wordcount",
+            operators: vec![
+                Operator::new("kafka-source", 18.0, 1.0),
+                Operator::new("split-lines", 40.0, 7.0),
+                Operator::new("count-per-word", 14.0, 1.0),
+                Operator::new("console-sink", 2.0, 1.0),
+            ],
+        }
+    }
+
+    /// Yahoo Streaming Benchmark (§4.1.2): deserialize JSON → filter by
+    /// event type (≈⅓ pass) → project → cached campaign join → 10 s window
+    /// count → Kafka sink.
+    pub fn ysb() -> Self {
+        Self {
+            name: "ysb",
+            operators: vec![
+                Operator::new("kafka-source", 20.0, 1.0),
+                Operator::new("deserialize-json", 80.0, 1.0),
+                Operator::new("filter-event-type", 15.0, 0.33),
+                Operator::new("project-fields", 8.0, 1.0),
+                Operator::new("join-campaign-cache", 60.0, 1.0),
+                Operator::new("window-count-10s", 25.0, 1.0),
+                Operator::new("kafka-sink", 15.0, 1.0),
+            ],
+        }
+    }
+
+    /// Traffic Monitoring (§4.1.3): deserialize → geo filter (≈40 % in
+    /// radius) → 10 s window average speed → enrich → Kafka sink.
+    pub fn traffic() -> Self {
+        Self {
+            name: "traffic",
+            operators: vec![
+                Operator::new("kafka-source", 20.0, 1.0),
+                Operator::new("deserialize-json", 60.0, 1.0),
+                Operator::new("filter-radius", 18.0, 0.40),
+                Operator::new("window-avg-speed-10s", 22.0, 1.0),
+                Operator::new("enrich-vehicle", 18.0, 1.0),
+                Operator::new("kafka-sink", 15.0, 1.0),
+            ],
+        }
+    }
+
+    /// Effective CPU cost per *source* tuple (µs): each operator's cost is
+    /// weighted by the fraction of the stream that reaches it.
+    pub fn cost_per_source_tuple_us(&self) -> f64 {
+        let mut reach = 1.0;
+        let mut total = 0.0;
+        for op in &self.operators {
+            total += op.cost_us * reach;
+            reach *= op.selectivity;
+        }
+        total
+    }
+
+    /// Tuples/s a nominal 1-core worker sustains on this chain.
+    pub fn nominal_capacity(&self) -> f64 {
+        1e6 / self.cost_per_source_tuple_us()
+    }
+
+    /// End-to-end selectivity (output per source tuple).
+    pub fn end_to_end_selectivity(&self) -> f64 {
+        self.operators.iter().map(|o| o.selectivity).product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::JobProfile;
+
+    #[test]
+    fn derived_capacities_match_job_profiles() {
+        // The JobProfile constants must stay consistent with the operator
+        // chains they summarize (±12 %).
+        for (topo, job) in [
+            (Topology::wordcount(), JobProfile::wordcount()),
+            (Topology::ysb(), JobProfile::ysb()),
+            (Topology::traffic(), JobProfile::traffic()),
+        ] {
+            let derived = topo.nominal_capacity();
+            let ratio = derived / job.base_capacity;
+            assert!(
+                (0.88..=1.12).contains(&ratio),
+                "{}: derived {derived:.0} vs profile {:.0} (ratio {ratio:.3})",
+                topo.name,
+                job.base_capacity
+            );
+        }
+    }
+
+    #[test]
+    fn filters_cut_downstream_cost() {
+        let ysb = Topology::ysb();
+        // The join costs 35 µs but only 33 % of tuples reach it.
+        let full: f64 = ysb.operators.iter().map(|o| o.cost_us).sum();
+        assert!(ysb.cost_per_source_tuple_us() < full);
+    }
+
+    #[test]
+    fn wordcount_flatmap_amplifies() {
+        let wc = Topology::wordcount();
+        // 7 words per line: the count operator sees 7× the source tuples.
+        assert!(wc.end_to_end_selectivity() > 6.0);
+        // And its weighted cost dominates the raw cost.
+        assert!(wc.cost_per_source_tuple_us() > 40.0 + 18.0 + 14.0);
+    }
+
+    #[test]
+    fn selectivity_weighting_hand_computed() {
+        let t = Topology {
+            name: "t",
+            operators: vec![
+                Operator::new("a", 10.0, 0.5),
+                Operator::new("b", 20.0, 2.0),
+                Operator::new("c", 30.0, 1.0),
+            ],
+        };
+        // 10·1 + 20·0.5 + 30·1 = 50
+        crate::assert_close!(t.cost_per_source_tuple_us(), 50.0, atol = 1e-9);
+        crate::assert_close!(t.end_to_end_selectivity(), 1.0, atol = 1e-12);
+        crate::assert_close!(t.nominal_capacity(), 20_000.0, atol = 1e-6);
+    }
+}

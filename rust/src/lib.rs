@@ -1,0 +1,37 @@
+//! # Daedalus — self-adaptive horizontal autoscaling for DSP systems
+//!
+//! Reproduction of *"Daedalus: Self-Adaptive Horizontal Autoscaling for
+//! Resource Efficiency of Distributed Stream Processing Systems"*
+//! (Pfister, Scheinert, Geldenhuys, Kao — ICPE '24) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the MAPE-K autoscaling
+//!   loop ([`autoscaler::daedalus`]), the baseline autoscalers
+//!   ([`autoscaler::hpa`], [`autoscaler::statik`], [`autoscaler::phoebe`]),
+//!   a discrete-time DSP-cluster substrate ([`dsp`]) standing in for the
+//!   paper's Flink/Kafka-Streams-on-Kubernetes testbed, a Prometheus-like
+//!   metric store ([`metrics`]), workload generators ([`workload`]), and
+//!   the experiment harness regenerating every figure ([`experiments`]).
+//! * **Layer 2 (python/compile/model.py)** — the JAX compute graphs for
+//!   capacity modeling and workload forecasting, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   Gram-matrix and batched-Welford hot spots, lowered inside Layer 2.
+//!
+//! At run time only Rust executes: [`runtime`] loads the AOT artifacts via
+//! the PJRT CPU client and runs them on every analyze phase. Python is a
+//! build-time tool (`make artifacts`), never on the decision path.
+
+pub mod autoscaler;
+pub mod clock;
+pub mod config;
+pub mod dsp;
+pub mod experiments;
+pub mod jobs;
+pub mod metrics;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type (anyhow for rich error context).
+pub type Result<T> = anyhow::Result<T>;

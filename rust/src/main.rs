@@ -1,0 +1,390 @@
+//! `daedalus` — CLI for the Daedalus reproduction.
+//!
+//! Subcommands:
+//!   figure <fig2|fig3|fig4|fig5|fig7|fig8|fig9|fig10|fig11|all>
+//!          [--quick] [--duration S] [--seeds a,b,c] [--backend artifact|native]
+//!   run    --config <spec.json> [--backend ...]   — run an ExperimentSpec
+//!   validate [--duration S] [--backend ...]       — §4.8 numbers
+//!   selfcheck [--backend ...]                     — load artifacts, run both graphs once
+
+use daedalus::config::ExperimentSpec;
+use daedalus::experiments::figures::{self, FigureOpts, FigureOptsOwned};
+use daedalus::experiments::{ablation, export, failures, harness::Experiment, report, rt_sweep, validate};
+use daedalus::runtime::ComputeBackend;
+use daedalus::Result;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: daedalus <command>\n\
+         \n\
+         commands:\n\
+           figure <id|all> [--quick] [--duration S] [--seeds a,b,c] [--backend artifact|native]\n\
+               regenerate a paper figure (fig2..fig5, fig7..fig11)\n\
+           run --config <spec.json> [--backend ...]\n\
+               run a custom experiment spec (see examples/configs/)\n\
+           validate [--duration S] [--seed N] [--backend ...]\n\
+               report §4.8 validation numbers\n\
+           ablation [--duration S] [--seeds a,b] [--backend ...]\n\
+               one-mechanism-off Daedalus variants (TSF, recovery, skew, lag)\n\
+           failures [--duration S] [--failures N] [--backend ...]\n\
+               failure-injection evaluation (the paper's future work)\n\
+           rt-sweep [--targets 120,600,...] [--duration S] [--backend ...]\n\
+               quantify the recovery-target's influence (open in paper §4.8)\n\
+           selfcheck [--backend ...]\n\
+               compile + execute both AOT artifacts once and print timings\n\
+           live [--speed X] [--duration S] [--backend ...]\n\
+               wall-clock-paced run with a live status line (X sim-secs/sec)"
+    );
+    std::process::exit(2)
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut switches = std::collections::HashSet::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // Known boolean switches take no value.
+            if name == "quick" {
+                switches.insert(name.to_string());
+            } else if i + 1 < argv.len() {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                eprintln!("flag --{name} needs a value");
+                usage();
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Args {
+        positional,
+        flags,
+        switches,
+    }
+}
+
+fn backend_from(args: &Args) -> Result<ComputeBackend> {
+    match args.flags.get("backend").map(String::as_str) {
+        Some("native") => Ok(ComputeBackend::native()),
+        Some("artifact") | None => {
+            let dir = args
+                .flags
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| "artifacts".into());
+            match ComputeBackend::artifact(&dir) {
+                Ok(b) => Ok(b),
+                Err(e) if args.flags.get("backend").is_none() => {
+                    eprintln!(
+                        "note: falling back to native backend ({e}); run `make artifacts` \
+                         for the AOT path"
+                    );
+                    Ok(ComputeBackend::native())
+                }
+                Err(e) => Err(e),
+            }
+        }
+        Some(other) => {
+            eprintln!("unknown backend {other:?}");
+            usage()
+        }
+    }
+}
+
+fn figure_opts(args: &Args) -> FigureOptsOwned {
+    let mut opts = if args.switches.contains("quick") {
+        FigureOpts::quick()
+    } else {
+        FigureOpts::paper()
+    };
+    if let Some(d) = args.flags.get("duration") {
+        opts.duration = d.parse().expect("bad --duration");
+    }
+    if let Some(s) = args.flags.get("seeds") {
+        opts.seeds = s
+            .split(',')
+            .map(|x| x.trim().parse().expect("bad --seeds"))
+            .collect();
+    }
+    if let Some(o) = args.flags.get("out") {
+        opts.out_dir = o.clone();
+    }
+    opts
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let Some(which) = args.positional.first() else {
+        usage()
+    };
+    let opts = figure_opts(args);
+    let backend = backend_from(args)?;
+    let text = match which.as_str() {
+        "fig2" => figures::fig2(&opts)?,
+        "fig3" => figures::fig3(&opts)?,
+        "fig4" => figures::fig4(&opts)?,
+        "fig5" => figures::fig5(&opts)?,
+        "fig7" => figures::fig7(backend, &opts)?,
+        "fig8" => figures::fig8(backend, &opts)?,
+        "fig9" => figures::fig9(backend, &opts)?,
+        "fig10" => figures::fig10(backend, &opts)?,
+        "fig11" => figures::fig11(backend, &opts)?,
+        "all" => figures::all(backend, &opts)?,
+        other => {
+            eprintln!("unknown figure {other:?}");
+            usage()
+        }
+    };
+    println!("{text}");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let Some(path) = args.flags.get("config") else {
+        usage()
+    };
+    let spec = ExperimentSpec::from_json(&std::fs::read_to_string(path)?)?;
+    let backend = backend_from(args)?;
+    let approaches = spec
+        .approaches
+        .iter()
+        .map(|a| spec.parse_approach(a))
+        .collect::<Result<Vec<_>>>()?;
+    let mut exp = Experiment::paper(
+        &spec.name,
+        spec.engine.profile(),
+        spec.job.profile(),
+        backend,
+        spec.duration,
+    )
+    .with_seeds(spec.seeds.clone())
+    .with_approaches(approaches);
+    exp.max_replicas = spec.max_replicas;
+    exp.initial_replicas = spec.initial_replicas;
+    exp.partitions = spec.partitions;
+    let spec2 = spec.clone();
+    let res = exp.run(&move |seed| {
+        spec2
+            .build_workload(seed)
+            .expect("building workload from spec")
+    });
+    let static_name = res
+        .approaches
+        .iter()
+        .map(|a| a.name.clone())
+        .find(|n| n.starts_with("static"))
+        .unwrap_or_else(|| res.approaches[0].name.clone());
+    println!("{}", report::summary_table(&res, &static_name));
+    println!("{}", report::reduction_lines(&res, "daedalus"));
+    let dir = export::write_experiment(&res, "results")?;
+    println!("CSVs: {}", dir.display());
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let duration = args
+        .flags
+        .get("duration")
+        .map(|d| d.parse().expect("bad --duration"))
+        .unwrap_or(21_600);
+    let seeds: Vec<u64> = args
+        .flags
+        .get("seeds")
+        .map(|s| s.split(',').map(|x| x.trim().parse().expect("bad --seeds")).collect())
+        .unwrap_or_else(|| vec![1, 2, 3]);
+    let backend = backend_from(args)?;
+    println!("{}", ablation::run(backend, duration, seeds)?);
+    Ok(())
+}
+
+fn cmd_failures(args: &Args) -> Result<()> {
+    let duration = args
+        .flags
+        .get("duration")
+        .map(|d| d.parse().expect("bad --duration"))
+        .unwrap_or(21_600);
+    let n = args
+        .flags
+        .get("failures")
+        .map(|d| d.parse().expect("bad --failures"))
+        .unwrap_or(6);
+    let seed = args
+        .flags
+        .get("seed")
+        .map(|s| s.parse().expect("bad --seed"))
+        .unwrap_or(1);
+    let backend = backend_from(args)?;
+    let (_, report) = failures::run(backend, duration, n, seed)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_rt_sweep(args: &Args) -> Result<()> {
+    let duration = args
+        .flags
+        .get("duration")
+        .map(|d| d.parse().expect("bad --duration"))
+        .unwrap_or(21_600);
+    let seed = args
+        .flags
+        .get("seed")
+        .map(|s| s.parse().expect("bad --seed"))
+        .unwrap_or(1);
+    let targets: Vec<f64> = args
+        .flags
+        .get("targets")
+        .map(|s| s.split(',').map(|x| x.trim().parse().expect("bad --targets")).collect())
+        .unwrap_or_else(|| vec![120.0, 300.0, 600.0, 1_200.0, 2_400.0]);
+    let backend = backend_from(args)?;
+    let (_, report) = rt_sweep::run(backend, duration, &targets, seed)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let duration = args
+        .flags
+        .get("duration")
+        .map(|d| d.parse().expect("bad --duration"))
+        .unwrap_or(21_600);
+    let seed = args
+        .flags
+        .get("seed")
+        .map(|s| s.parse().expect("bad --seed"))
+        .unwrap_or(1);
+    let backend = backend_from(args)?;
+    let v = validate::run(backend, duration, seed)?;
+    println!("{}", v.report());
+    Ok(())
+}
+
+fn cmd_live(args: &Args) -> Result<()> {
+    use daedalus::autoscaler::{Autoscaler, Daedalus, DaedalusConfig};
+    use daedalus::dsp::{EngineProfile, SimConfig, Simulation};
+    use daedalus::jobs::JobProfile;
+    use daedalus::workload::SineWorkload;
+
+    let speed: u64 = args
+        .flags
+        .get("speed")
+        .map(|s| s.parse().expect("bad --speed"))
+        .unwrap_or(60); // 60 simulated seconds per wall second
+    let duration: u64 = args
+        .flags
+        .get("duration")
+        .map(|d| d.parse().expect("bad --duration"))
+        .unwrap_or(7_200);
+    let backend = backend_from(args)?;
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let mut sim = Simulation::new(SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(SineWorkload::paper_default(peak, duration)),
+    ));
+    let mut d = Daedalus::new(DaedalusConfig::default(), backend);
+    println!("live mode: {speed}× wall speed, ctrl-c to stop");
+    println!("{:>6} {:>10} {:>6} {:>8} {:>12} {:>10}", "t", "workload", "par", "ready", "lag", "lat_ms");
+    let tick_budget = std::time::Duration::from_nanos(1_000_000_000 / speed.max(1));
+    for t in 0..duration {
+        let t0 = std::time::Instant::now();
+        sim.step(t);
+        if let Some(n) = d.decide(&sim.view()) {
+            if let Some(ev) = sim.request_rescale(n) {
+                println!("  -> rescale {} -> {} ({}s downtime)", ev.from, ev.to, ev.downtime_secs.round());
+            }
+        }
+        if t % speed == 0 {
+            let db = sim.tsdb();
+            let get = |n| db.last_at(&daedalus::metrics::SeriesId::global(n), t).map(|(_, v)| v).unwrap_or(0.0);
+            println!(
+                "{:>6} {:>10.0} {:>6} {:>8} {:>12.0} {:>10.0}",
+                t,
+                get("workload_rate"),
+                sim.parallelism(),
+                sim.ready(),
+                get("consumer_lag"),
+                get("latency_ms"),
+            );
+        }
+        if let Some(sleep) = tick_budget.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let backend = backend_from(args)?;
+    let meta = backend.meta().clone();
+    println!(
+        "backend: {}",
+        match &backend {
+            ComputeBackend::Artifact(rt) => format!("artifact ({})", rt.dir.display()),
+            ComputeBackend::Native(_) => "native".into(),
+        }
+    );
+    println!(
+        "meta: max_workers={} window={} horizon={} ar_order={}",
+        meta.max_workers, meta.window, meta.horizon, meta.ar_order
+    );
+    // Capacity graph.
+    let state = daedalus::runtime::CapacityState::zeros(meta.max_workers);
+    let xs = vec![0.5f32; meta.max_workers * meta.obs_block];
+    let ys = vec![2_500.0f32; meta.max_workers * meta.obs_block];
+    let mask = vec![1.0f32; meta.max_workers * meta.obs_block];
+    let tgt = vec![1.0f32; meta.max_workers];
+    let t0 = std::time::Instant::now();
+    let cap = backend.capacity_update(&state, &xs, &ys, &mask, &tgt)?;
+    println!(
+        "capacity_update ok in {:?} (cap[0] = {:.0} tuples/s)",
+        t0.elapsed(),
+        cap.capacities[0]
+    );
+    // Forecast graph.
+    let hist: Vec<f32> = (0..meta.window)
+        .map(|t| (30e3 + 10e3 * (t as f64 / 300.0).sin()) as f32)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let fc = backend.forecast(&hist)?;
+    println!(
+        "forecast ok in {:?} (fc[0] = {:.0}, fc[{}] = {:.0}, sigma = {:.1})",
+        t0.elapsed(),
+        fc.forecast[0],
+        meta.horizon - 1,
+        fc.forecast[meta.horizon - 1],
+        fc.resid_sigma
+    );
+    println!("selfcheck OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "figure" => cmd_figure(&args),
+        "run" => cmd_run(&args),
+        "validate" => cmd_validate(&args),
+        "ablation" => cmd_ablation(&args),
+        "failures" => cmd_failures(&args),
+        "rt-sweep" => cmd_rt_sweep(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        "live" => cmd_live(&args),
+        _ => usage(),
+    }
+}

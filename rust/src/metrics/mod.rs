@@ -1,0 +1,22 @@
+//! Prometheus-like metric store.
+//!
+//! The paper's setup scrapes Kafka and the DSP system into Prometheus and
+//! the autoscalers query it (§3.6 Monitor). This module is the simulated
+//! equivalent: an append-only in-memory time-series DB with the query
+//! operations the autoscalers need (`last`, `avg_over_time`,
+//! `max_over_time`, range extraction). Metric names used by the engine:
+//!
+//! | series                  | labels    | meaning                          |
+//! |-------------------------|-----------|----------------------------------|
+//! | `workload_rate`         | —         | source rate, tuples/s            |
+//! | `worker_throughput`     | worker    | consumed tuples/s per worker     |
+//! | `worker_cpu`            | worker    | CPU utilization 0..1 per worker  |
+//! | `consumer_lag`          | —         | total unconsumed tuples          |
+//! | `parallelism`           | —         | current replica count            |
+//! | `allocated_workers`     | —         | pods allocated (resource usage)  |
+//! | `latency_p95_ms`        | —         | per-tick p95 end-to-end latency  |
+
+pub mod query;
+pub mod tsdb;
+
+pub use tsdb::{SeriesId, Tsdb};

@@ -1,0 +1,138 @@
+//! Higher-level queries over the TSDB — the monitor-phase view the
+//! autoscalers consume (per-worker snapshots, moving averages, workload
+//! history extraction for the forecaster).
+
+use super::tsdb::{SeriesId, Tsdb};
+use crate::clock::Timestamp;
+
+/// Point-in-time view of one worker's metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    /// Moving-average CPU utilization (0..1).
+    pub cpu: f64,
+    /// Moving-average throughput, tuples/s.
+    pub throughput: f64,
+}
+
+/// Per-worker CPU/throughput snapshots using a trailing moving average of
+/// `window` seconds — the paper monitors CPU as a 1-minute moving average
+/// to reduce noise (§3.6).
+pub fn worker_snapshots(db: &Tsdb, now: Timestamp, window: u64) -> Vec<WorkerSnapshot> {
+    let from = now.saturating_sub(window.saturating_sub(1));
+    let mut out = Vec::new();
+    for w in db.workers_for("worker_cpu") {
+        let cpu_id = SeriesId::worker("worker_cpu", w);
+        let tput_id = SeriesId::worker("worker_throughput", w);
+        let (Some(cpu), Some(tput)) = (
+            db.avg_over(&cpu_id, from, now),
+            db.avg_over(&tput_id, from, now),
+        ) else {
+            continue;
+        };
+        out.push(WorkerSnapshot {
+            worker: w,
+            cpu,
+            throughput: tput,
+        });
+    }
+    out
+}
+
+/// Workload rate history over `[now − window + 1, now]`, padded on the left
+/// with the earliest sample so the result always has `window` entries — the
+/// fixed-shape input the forecast artifact expects.
+pub fn workload_window(db: &Tsdb, now: Timestamp, window: usize) -> Vec<f64> {
+    let id = SeriesId::global("workload_rate");
+    let from = (now + 1).saturating_sub(window as u64);
+    let samples = db.range(&id, from, now);
+    let mut out = Vec::with_capacity(window);
+    if samples.is_empty() {
+        return vec![0.0; window];
+    }
+    // Forward-fill over any gaps onto a dense 1 Hz grid.
+    let mut si = 0;
+    let mut last = samples[0].1;
+    for t in from..=now {
+        while si < samples.len() && samples[si].0 <= t {
+            last = samples[si].1;
+            si += 1;
+        }
+        out.push(last);
+    }
+    // Left-pad to the fixed window if the job is younger than `window`.
+    while out.len() < window {
+        out.insert(0, samples[0].1);
+    }
+    debug_assert_eq!(out.len(), window);
+    out
+}
+
+/// Total consumer lag at `now` (latest sample).
+pub fn consumer_lag(db: &Tsdb, now: Timestamp) -> f64 {
+    db.last_at(&SeriesId::global("consumer_lag"), now)
+        .map_or(0.0, |(_, v)| v)
+}
+
+/// Current parallelism at `now` (latest sample).
+pub fn parallelism(db: &Tsdb, now: Timestamp) -> Option<usize> {
+    db.last_at(&SeriesId::global("parallelism"), now)
+        .map(|(_, v)| v as usize)
+}
+
+/// Average / max workload over `[from, to]`.
+pub fn workload_stats(db: &Tsdb, from: Timestamp, to: Timestamp) -> Option<(f64, f64)> {
+    let id = SeriesId::global("workload_rate");
+    Some((db.avg_over(&id, from, to)?, db.max_over(&id, from, to)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db_with(n: u64) -> Tsdb {
+        let mut db = Tsdb::new();
+        for t in 0..n {
+            db.record_global("workload_rate", t, t as f64);
+            db.record_worker("worker_cpu", 0, t, 0.6);
+            db.record_worker("worker_throughput", 0, t, 10_000.0);
+        }
+        db
+    }
+
+    #[test]
+    fn snapshots_average_over_window() {
+        let db = db_with(100);
+        let snaps = worker_snapshots(&db, 99, 60);
+        assert_eq!(snaps.len(), 1);
+        crate::assert_close!(snaps[0].cpu, 0.6, atol = 1e-12);
+        crate::assert_close!(snaps[0].throughput, 10_000.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn workload_window_dense_and_padded() {
+        let db = db_with(10);
+        let w = workload_window(&db, 9, 20);
+        assert_eq!(w.len(), 20);
+        // Left-padded with the earliest value (0.0), then 0..=9.
+        assert_eq!(w[..10], [0.0; 10]);
+        assert_eq!(w[10..], (0..10).map(|v| v as f64).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn workload_window_forward_fills_gaps() {
+        let mut db = Tsdb::new();
+        db.record_global("workload_rate", 0, 5.0);
+        db.record_global("workload_rate", 4, 9.0);
+        let w = workload_window(&db, 5, 6);
+        assert_eq!(w, vec![5.0, 5.0, 5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn empty_db_gives_zero_window() {
+        let db = Tsdb::new();
+        assert_eq!(workload_window(&db, 100, 4), vec![0.0; 4]);
+        assert_eq!(consumer_lag(&db, 100), 0.0);
+        assert!(parallelism(&db, 100).is_none());
+    }
+}

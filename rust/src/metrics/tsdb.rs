@@ -1,0 +1,294 @@
+//! Append-only in-memory time-series database with Prometheus-flavoured
+//! semantics: one sample per (series, timestamp), queries over closed time
+//! ranges `[from, to]` in seconds.
+//!
+//! Storage is a flat `Vec<Series>` with a hash index; the hot path (the
+//! engine recording 2·workers + ~6 globals every simulated second) uses
+//! pre-resolved [`SeriesHandle`]s and never hashes (EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use crate::clock::Timestamp;
+
+/// Identifies a series: metric name + optional worker index label.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SeriesId {
+    pub name: &'static str,
+    pub worker: Option<usize>,
+}
+
+impl SeriesId {
+    pub fn global(name: &'static str) -> Self {
+        Self { name, worker: None }
+    }
+
+    pub fn worker(name: &'static str, worker: usize) -> Self {
+        Self {
+            name,
+            worker: Some(worker),
+        }
+    }
+}
+
+/// FxHash-style multiply-xor hasher. `SeriesId` keys are tiny (static str
+/// pointer + small int); SipHash showed up at ~5 % of the tick loop in
+/// perf, this is effectively free.
+#[derive(Default)]
+pub struct FastHasher(u64);
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0.rotate_left(5) ^ b as u64).wrapping_mul(0x517C_C1B7_2722_0A95);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = (self.0.rotate_left(5) ^ v).wrapping_mul(0x517C_C1B7_2722_0A95);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FastHasher>>;
+
+/// Pre-resolved series slot for hash-free recording.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeriesHandle(usize);
+
+#[derive(Debug, Default, Clone)]
+struct Series {
+    times: Vec<Timestamp>,
+    values: Vec<f64>,
+}
+
+impl Series {
+    #[inline]
+    fn push(&mut self, t: Timestamp, v: f64) {
+        debug_assert!(
+            self.times.last().map_or(true, |last| *last <= t),
+            "samples must be appended in time order"
+        );
+        self.times.push(t);
+        self.values.push(v);
+    }
+
+    /// Index range covering `[from, to]`.
+    fn range_idx(&self, from: Timestamp, to: Timestamp) -> (usize, usize) {
+        let lo = self.times.partition_point(|t| *t < from);
+        let hi = self.times.partition_point(|t| *t <= to);
+        (lo, hi)
+    }
+}
+
+/// The metric store. The engine appends; autoscalers read.
+#[derive(Debug, Default, Clone)]
+pub struct Tsdb {
+    series: Vec<Series>,
+    index: FastMap<SeriesId, usize>,
+}
+
+impl Tsdb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve (creating if needed) a hash-free handle for a series.
+    pub fn handle(&mut self, id: SeriesId) -> SeriesHandle {
+        if let Some(i) = self.index.get(&id) {
+            return SeriesHandle(*i);
+        }
+        let i = self.series.len();
+        self.series.push(Series::default());
+        self.index.insert(id, i);
+        SeriesHandle(i)
+    }
+
+    /// Append via a pre-resolved handle (the engine's per-tick path).
+    #[inline]
+    pub fn record_h(&mut self, h: SeriesHandle, t: Timestamp, value: f64) {
+        self.series[h.0].push(t, value);
+    }
+
+    /// Append one sample (must be in non-decreasing time order per series).
+    pub fn record(&mut self, id: SeriesId, t: Timestamp, value: f64) {
+        let h = self.handle(id);
+        self.record_h(h, t, value);
+    }
+
+    /// Convenience: global series.
+    pub fn record_global(&mut self, name: &'static str, t: Timestamp, value: f64) {
+        self.record(SeriesId::global(name), t, value);
+    }
+
+    /// Convenience: per-worker series.
+    pub fn record_worker(&mut self, name: &'static str, w: usize, t: Timestamp, value: f64) {
+        self.record(SeriesId::worker(name, w), t, value);
+    }
+
+    fn get(&self, id: &SeriesId) -> Option<&Series> {
+        self.index.get(id).map(|i| &self.series[*i])
+    }
+
+    /// Latest sample at or before `t`.
+    pub fn last_at(&self, id: &SeriesId, t: Timestamp) -> Option<(Timestamp, f64)> {
+        let s = self.get(id)?;
+        let i = s.times.partition_point(|x| *x <= t);
+        if i == 0 {
+            None
+        } else {
+            Some((s.times[i - 1], s.values[i - 1]))
+        }
+    }
+
+    /// All samples with `from ≤ t ≤ to`, as (time, value) pairs.
+    pub fn range(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Vec<(Timestamp, f64)> {
+        match self.get(id) {
+            None => vec![],
+            Some(s) => {
+                let (lo, hi) = s.range_idx(from, to);
+                (lo..hi).map(|i| (s.times[i], s.values[i])).collect()
+            }
+        }
+    }
+
+    /// Values only (samples in `[from, to]`).
+    pub fn values_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Vec<f64> {
+        match self.get(id) {
+            None => vec![],
+            Some(s) => {
+                let (lo, hi) = s.range_idx(from, to);
+                s.values[lo..hi].to_vec()
+            }
+        }
+    }
+
+    /// `avg_over_time` over `[from, to]`; `None` if no samples.
+    pub fn avg_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
+        let s = self.get(id)?;
+        let (lo, hi) = s.range_idx(from, to);
+        if lo == hi {
+            return None;
+        }
+        Some(s.values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64)
+    }
+
+    /// `max_over_time` over `[from, to]`; `None` if no samples.
+    pub fn max_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
+        let s = self.get(id)?;
+        let (lo, hi) = s.range_idx(from, to);
+        if lo == hi {
+            return None;
+        }
+        Some(s.values[lo..hi].iter().copied().fold(f64::MIN, f64::max))
+    }
+
+    /// Number of samples in a series.
+    pub fn len(&self, id: &SeriesId) -> usize {
+        self.get(id).map_or(0, |s| s.times.len())
+    }
+
+    /// Whether the store holds any series.
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// Worker indices present for a metric name.
+    pub fn workers_for(&self, name: &'static str) -> Vec<usize> {
+        let mut ws: Vec<usize> = self
+            .index
+            .keys()
+            .filter(|id| id.name == name)
+            .filter_map(|id| id.worker)
+            .collect();
+        ws.sort_unstable();
+        ws
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_db() -> Tsdb {
+        let mut db = Tsdb::new();
+        for t in 0..100 {
+            db.record_global("workload_rate", t, 1_000.0 + t as f64);
+            db.record_worker("worker_cpu", 0, t, 0.5);
+            db.record_worker("worker_cpu", 1, t, 0.8);
+        }
+        db
+    }
+
+    #[test]
+    fn last_at_returns_latest_at_or_before() {
+        let db = sample_db();
+        let id = SeriesId::global("workload_rate");
+        assert_eq!(db.last_at(&id, 50), Some((50, 1_050.0)));
+        assert_eq!(db.last_at(&id, 1_000), Some((99, 1_099.0)));
+        // Before first sample → None (need a fresh series starting later).
+        let mut db2 = Tsdb::new();
+        db2.record_global("x", 10, 1.0);
+        assert_eq!(db2.last_at(&SeriesId::global("x"), 9), None);
+    }
+
+    #[test]
+    fn range_is_closed_interval() {
+        let db = sample_db();
+        let id = SeriesId::global("workload_rate");
+        let r = db.range(&id, 10, 12);
+        assert_eq!(r, vec![(10, 1_010.0), (11, 1_011.0), (12, 1_012.0)]);
+    }
+
+    #[test]
+    fn avg_and_max_over() {
+        let db = sample_db();
+        let id = SeriesId::global("workload_rate");
+        crate::assert_close!(db.avg_over(&id, 0, 99).unwrap(), 1_049.5, atol = 1e-9);
+        crate::assert_close!(db.max_over(&id, 0, 99).unwrap(), 1_099.0, atol = 1e-9);
+        assert!(db.avg_over(&id, 200, 300).is_none());
+    }
+
+    #[test]
+    fn missing_series_queries_are_empty() {
+        let db = Tsdb::new();
+        let id = SeriesId::global("nope");
+        assert!(db.range(&id, 0, 10).is_empty());
+        assert!(db.avg_over(&id, 0, 10).is_none());
+        assert_eq!(db.len(&id), 0);
+    }
+
+    #[test]
+    fn workers_for_lists_sorted_indices() {
+        let db = sample_db();
+        assert_eq!(db.workers_for("worker_cpu"), vec![0, 1]);
+        assert!(db.workers_for("worker_throughput").is_empty());
+    }
+
+    #[test]
+    fn handles_bypass_hashing_but_agree_with_ids() {
+        let mut db = Tsdb::new();
+        let h = db.handle(SeriesId::global("x"));
+        db.record_h(h, 0, 1.0);
+        db.record_h(h, 1, 2.0);
+        db.record_global("x", 2, 3.0); // same series via the slow path
+        assert_eq!(db.len(&SeriesId::global("x")), 3);
+        assert_eq!(db.last_at(&SeriesId::global("x"), 2), Some((2, 3.0)));
+        // Handle is stable across later inserts.
+        let h2 = db.handle(SeriesId::global("y"));
+        db.record_h(h2, 0, 9.0);
+        db.record_h(h, 3, 4.0);
+        assert_eq!(db.last_at(&SeriesId::global("x"), 3), Some((3, 4.0)));
+    }
+}

@@ -1,0 +1,110 @@
+//! Typed view of the capacity artifact's inputs/outputs.
+//!
+//! The regression state lives in the Knowledge base (Layer 3) and is passed
+//! through the compiled graph functionally: state in → state out. Row layout
+//! per worker: `(n, mean_cpu, mean_tput, m2_cpu, c_cpu_tput)` — exactly the
+//! quantities the paper's Welford formulation maintains (§3.1).
+
+use anyhow::anyhow;
+
+use crate::Result;
+
+/// Flattened `[max_workers, 5]` float32 Welford regression state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityState {
+    data: Vec<f32>,
+    max_workers: usize,
+}
+
+/// Result of one capacity_update execution.
+#[derive(Debug, Clone)]
+pub struct CapacityOutput {
+    pub state: CapacityState,
+    /// Predicted per-worker capacity (tuples/s) at the requested CPU target.
+    pub capacities: Vec<f32>,
+}
+
+impl CapacityState {
+    /// Zero state for `max_workers` workers.
+    pub fn zeros(max_workers: usize) -> Self {
+        Self {
+            data: vec![0.0; max_workers * 5],
+            max_workers,
+        }
+    }
+
+    /// Wrap an existing row-major `[max_workers, 5]` buffer.
+    pub fn from_vec(data: Vec<f32>, max_workers: usize) -> Result<Self> {
+        if data.len() != max_workers * 5 {
+            return Err(anyhow!(
+                "state must have {} floats, got {}",
+                max_workers * 5,
+                data.len()
+            ));
+        }
+        Ok(Self { data, max_workers })
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn max_workers(&self) -> usize {
+        self.max_workers
+    }
+
+    /// Observation count for one worker.
+    pub fn count(&self, worker: usize) -> f32 {
+        self.data[worker * 5]
+    }
+
+    /// `(n, mean_x, mean_y, m2x, cxy)` for one worker.
+    pub fn row(&self, worker: usize) -> [f32; 5] {
+        let o = worker * 5;
+        [
+            self.data[o],
+            self.data[o + 1],
+            self.data[o + 2],
+            self.data[o + 3],
+            self.data[o + 4],
+        ]
+    }
+
+    /// Reset one worker's statistics (used when a pod is recreated and its
+    /// placement/underlying resources may have changed).
+    pub fn reset_worker(&mut self, worker: usize) {
+        let o = worker * 5;
+        self.data[o..o + 5].fill(0.0);
+    }
+
+    /// Reset all workers.
+    pub fn reset_all(&mut self) {
+        self.data.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_layout() {
+        let s = CapacityState::zeros(4);
+        assert_eq!(s.as_slice().len(), 20);
+        assert_eq!(s.count(3), 0.0);
+    }
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(CapacityState::from_vec(vec![0.0; 9], 2).is_err());
+        assert!(CapacityState::from_vec(vec![0.0; 10], 2).is_ok());
+    }
+
+    #[test]
+    fn reset_single_worker() {
+        let mut s = CapacityState::from_vec((0..10).map(|i| i as f32).collect(), 2).unwrap();
+        s.reset_worker(0);
+        assert_eq!(s.row(0), [0.0; 5]);
+        assert_eq!(s.row(1), [5.0, 6.0, 7.0, 8.0, 9.0]);
+    }
+}

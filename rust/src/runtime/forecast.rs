@@ -1,0 +1,61 @@
+//! Typed view of the forecast artifact's output.
+
+/// Result of one forecast execution: the next `horizon` seconds of workload.
+#[derive(Debug, Clone)]
+pub struct ForecastOutput {
+    /// Predicted workload, tuples/s, one entry per future second.
+    pub forecast: Vec<f32>,
+    /// Fitted subset-AR coefficients (diagnostics).
+    pub coeffs: Vec<f32>,
+    /// In-sample one-step residual σ in absolute tuples/s (diagnostics).
+    pub resid_sigma: f32,
+}
+
+impl ForecastOutput {
+    /// Forecast clamped to physical (non-negative) rates.
+    pub fn clamped(&self) -> Vec<f64> {
+        self.forecast.iter().map(|v| (*v as f64).max(0.0)).collect()
+    }
+
+    /// Maximum forecast rate over the first `secs` seconds (clamped).
+    pub fn max_until(&self, secs: usize) -> f64 {
+        self.forecast
+            .iter()
+            .take(secs.max(1))
+            .map(|v| (*v as f64).max(0.0))
+            .fold(0.0, f64::max)
+    }
+
+    /// Maximum over the entire horizon.
+    pub fn max(&self) -> f64 {
+        self.max_until(self.forecast.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(v: Vec<f32>) -> ForecastOutput {
+        ForecastOutput {
+            forecast: v,
+            coeffs: vec![],
+            resid_sigma: 0.0,
+        }
+    }
+
+    #[test]
+    fn clamps_negative_rates() {
+        let o = out(vec![-5.0, 3.0]);
+        assert_eq!(o.clamped(), vec![0.0, 3.0]);
+        assert_eq!(o.max(), 3.0);
+    }
+
+    #[test]
+    fn max_until_prefix() {
+        let o = out(vec![1.0, 9.0, 2.0]);
+        assert_eq!(o.max_until(1), 1.0);
+        assert_eq!(o.max_until(2), 9.0);
+        assert_eq!(o.max_until(100), 9.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! PJRT runtime: load and execute the AOT-compiled Layer-2 artifacts.
+//!
+//! `make artifacts` (build time, python) lowers the JAX graphs — which call
+//! the Layer-1 Pallas kernels — to HLO **text** under `artifacts/`. At run
+//! time this module compiles them once on the PJRT CPU client and executes
+//! them from the MAPE-K analyze phase. Python never runs here.
+//!
+//! * [`pjrt`] — client + executable loading, `meta.json` validation.
+//! * [`capacity`] — typed wrapper over `capacity.hlo.txt`
+//!   (batched Welford fold + per-worker capacity prediction).
+//! * [`forecast`] — typed wrapper over `forecast.hlo.txt`
+//!   (subset-ARI(p,1) fit via the lag-Gram kernel + 900-step rollout).
+//! * [`native`] — pure-Rust mirror of both graphs: the cross-check oracle
+//!   for integration tests and a backend for runs where the artifacts are
+//!   not needed (e.g. massively parallel benchmark sweeps).
+
+pub mod capacity;
+pub mod forecast;
+pub mod native;
+pub mod pjrt;
+
+pub use capacity::{CapacityOutput, CapacityState};
+pub use forecast::ForecastOutput;
+pub use pjrt::{ArtifactMeta, ArtifactRuntime};
+
+use crate::Result;
+use std::sync::Arc;
+
+/// Which engine evaluates the Layer-2 graphs.
+#[derive(Clone)]
+pub enum ComputeBackend {
+    /// AOT artifacts via PJRT — the production configuration.
+    Artifact(Arc<ArtifactRuntime>),
+    /// Pure-Rust mirror — same semantics, no PJRT dependency.
+    Native(ArtifactMeta),
+}
+
+impl ComputeBackend {
+    /// Load the artifact backend from a directory (default `artifacts/`).
+    pub fn artifact(dir: &str) -> Result<Self> {
+        Ok(Self::Artifact(Arc::new(ArtifactRuntime::load(dir)?)))
+    }
+
+    /// Native backend with the default shape configuration.
+    pub fn native() -> Self {
+        Self::Native(ArtifactMeta::default())
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        match self {
+            Self::Artifact(rt) => &rt.meta,
+            Self::Native(meta) => meta,
+        }
+    }
+
+    /// Run the capacity graph: fold observations, predict capacities.
+    pub fn capacity_update(
+        &self,
+        state: &CapacityState,
+        xs: &[f32],
+        ys: &[f32],
+        mask: &[f32],
+        cpu_target: &[f32],
+    ) -> Result<CapacityOutput> {
+        match self {
+            Self::Artifact(rt) => rt.capacity_update(state, xs, ys, mask, cpu_target),
+            Self::Native(meta) => native::capacity_update(meta, state, xs, ys, mask, cpu_target),
+        }
+    }
+
+    /// Run the forecast graph over a full window of history.
+    pub fn forecast(&self, history: &[f32]) -> Result<ForecastOutput> {
+        match self {
+            Self::Artifact(rt) => rt.forecast(history),
+            Self::Native(meta) => native::forecast(meta, history),
+        }
+    }
+}

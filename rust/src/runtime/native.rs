@@ -1,0 +1,287 @@
+//! Pure-Rust mirror of the Layer-2 graphs.
+//!
+//! Semantically identical to `python/compile/model.py` (same Welford fold,
+//! same subset-AR ridge fit via normal equations + CG, same rollout). Used
+//! as (a) the cross-check oracle in integration tests — artifact and native
+//! outputs must agree to float32 tolerance — and (b) a PJRT-free backend
+//! for embarrassingly parallel benchmark sweeps.
+
+use anyhow::anyhow;
+
+use super::capacity::{CapacityOutput, CapacityState};
+use super::forecast::ForecastOutput;
+use super::pjrt::ArtifactMeta;
+use crate::Result;
+
+const EPS: f64 = 1e-6;
+
+/// Mirror of `model.capacity_update`.
+pub fn capacity_update(
+    meta: &ArtifactMeta,
+    state: &CapacityState,
+    xs: &[f32],
+    ys: &[f32],
+    mask: &[f32],
+    cpu_target: &[f32],
+) -> Result<CapacityOutput> {
+    let mw = meta.max_workers;
+    let b = meta.obs_block;
+    if xs.len() != mw * b || ys.len() != mw * b || mask.len() != mw * b || cpu_target.len() != mw {
+        return Err(anyhow!("capacity_update input shape mismatch"));
+    }
+    let mut out = vec![0.0f32; mw * 5];
+    let mut caps = vec![0.0f32; mw];
+    for w in 0..mw {
+        let row = state.row(w);
+        let (mut n, mut mx, mut my, mut m2x, mut cxy) = (
+            row[0] as f64,
+            row[1] as f64,
+            row[2] as f64,
+            row[3] as f64,
+            row[4] as f64,
+        );
+        for i in 0..b {
+            let m = mask[w * b + i] as f64;
+            if m == 0.0 {
+                continue;
+            }
+            let x = xs[w * b + i] as f64;
+            let y = ys[w * b + i] as f64;
+            n += 1.0;
+            let dx = x - mx;
+            let dy = y - my;
+            mx += dx / n;
+            my += dy / n;
+            m2x += dx * (x - mx);
+            cxy += dx * (y - my);
+        }
+        out[w * 5] = n as f32;
+        out[w * 5 + 1] = mx as f32;
+        out[w * 5 + 2] = my as f32;
+        out[w * 5 + 3] = m2x as f32;
+        out[w * 5 + 4] = cxy as f32;
+
+        let tgt = cpu_target[w] as f64;
+        // Mirrors model.VAR_MIN: the regression head needs real CPU
+        // variance (not just measurement noise) and a positive slope.
+        let slope = cxy / m2x.max(EPS);
+        let cap = if n == 0.0 {
+            0.0
+        } else if n >= 2.0 && m2x > n * 1e-4 && slope > 0.0 {
+            my + slope * (tgt - mx)
+        } else {
+            my / mx.max(EPS) * tgt
+        };
+        caps[w] = cap.max(0.0) as f32;
+    }
+    Ok(CapacityOutput {
+        state: CapacityState::from_vec(out, mw)?,
+        capacities: caps,
+    })
+}
+
+/// Fixed-iteration conjugate gradients for SPD `a x = b` (dense, row-major).
+fn cg_solve(a: &[f64], b: &[f64], p: usize, iters: usize) -> Vec<f64> {
+    let matvec = |v: &[f64]| -> Vec<f64> {
+        (0..p)
+            .map(|i| (0..p).map(|j| a[i * p + j] * v[j]).sum())
+            .collect()
+    };
+    let mut x = vec![0.0; p];
+    let mut r = b.to_vec();
+    let mut d = r.clone();
+    let mut rs: f64 = r.iter().map(|v| v * v).sum();
+    for _ in 0..iters {
+        let ad = matvec(&d);
+        let dad: f64 = d.iter().zip(&ad).map(|(a, b)| a * b).sum();
+        let alpha = rs / dad.max(EPS);
+        for i in 0..p {
+            x[i] += alpha * d[i];
+            r[i] -= alpha * ad[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        let beta = rs_new / rs.max(EPS);
+        for i in 0..p {
+            d[i] = r[i] + beta * d[i];
+        }
+        rs = rs_new;
+    }
+    x
+}
+
+/// Mirror of `model.forecast` (subset-ARI(p,1) fit + rollout).
+pub fn forecast(meta: &ArtifactMeta, history: &[f32]) -> Result<ForecastOutput> {
+    if history.len() != meta.window {
+        return Err(anyhow!(
+            "history must have {} samples, got {}",
+            meta.window,
+            history.len()
+        ));
+    }
+    let lags = &meta.ar_lags;
+    let p = lags.len();
+    let maxlag = meta.max_lag;
+
+    // First difference.
+    let d: Vec<f64> = history
+        .windows(2)
+        .map(|w| (w[1] - w[0]) as f64)
+        .collect();
+    let n = d.len() as f64;
+    let mu = d.iter().sum::<f64>() / n;
+    let var = d.iter().map(|v| (v - mu).powi(2)).sum::<f64>() / n;
+    let sigma = (var + EPS).sqrt();
+    let z: Vec<f64> = d.iter().map(|v| (v - mu) / sigma).collect();
+
+    // Normal equations via the (implicit) lag design matrix.
+    let m = z.len() - maxlag;
+    let mut g = vec![0.0f64; p * p];
+    let mut bvec = vec![0.0f64; p];
+    for i in 0..m {
+        // row: z[maxlag + i - lag_j]
+        let y = z[maxlag + i];
+        for j in 0..p {
+            let xj = z[maxlag + i - lags[j]];
+            bvec[j] += xj * y;
+            for k in j..p {
+                g[j * p + k] += xj * z[maxlag + i - lags[k]];
+            }
+        }
+    }
+    for j in 0..p {
+        for k in 0..j {
+            g[j * p + k] = g[k * p + j];
+        }
+    }
+    let trace: f64 = (0..p).map(|i| g[i * p + i]).sum();
+    let ridge = meta.ridge_lam * (trace / p as f64 + 1.0);
+    for i in 0..p {
+        g[i * p + i] += ridge;
+    }
+    let mut coeffs = cg_solve(&g, &bvec, p, meta.cg_iters);
+
+    // Stability guard (mirrors model.MAX_COEF_L1 = 4.0): only reins in
+    // pathologically unstable fits; well-behaved fits are untouched.
+    let l1: f64 = coeffs.iter().map(|c| c.abs()).sum();
+    let damp = (4.0 / l1.max(EPS)).min(1.0);
+    for c in &mut coeffs {
+        *c *= damp;
+    }
+
+    // In-sample one-step residual σ.
+    let mut ss = 0.0;
+    for i in 0..m {
+        let pred: f64 = (0..p).map(|j| coeffs[j] * z[maxlag + i - lags[j]]).sum();
+        ss += (z[maxlag + i] - pred).powi(2);
+    }
+    let resid_sigma = (ss / ((m.saturating_sub(p)).max(1)) as f64).sqrt() * sigma;
+
+    // Rollout: state[0] = newest diff.
+    let mut state: Vec<f64> = z.iter().rev().take(maxlag).copied().collect();
+    let mut fc = Vec::with_capacity(meta.horizon);
+    let mut level = *history.last().unwrap() as f64;
+    // Physical envelope (mirrors model.CLIP_FACTOR = 8.0).
+    let hi = 8.0
+        * history
+            .iter()
+            .map(|v| (*v as f64).abs())
+            .fold(0.0, f64::max);
+    for _ in 0..meta.horizon {
+        let nxt: f64 = (0..p).map(|j| coeffs[j] * state[lags[j] - 1]).sum();
+        state.rotate_right(1);
+        state[0] = nxt;
+        level += nxt * sigma + mu;
+        fc.push(level.clamp(0.0, hi) as f32);
+    }
+    Ok(ForecastOutput {
+        forecast: fc,
+        coeffs: coeffs.iter().map(|v| *v as f32).collect(),
+        resid_sigma: resid_sigma as f32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta::default()
+    }
+
+    #[test]
+    fn capacity_linear_recovery() {
+        let m = meta();
+        let mut xs = vec![0.0f32; m.max_workers * m.obs_block];
+        let mut ys = vec![0.0f32; m.max_workers * m.obs_block];
+        let mask = vec![1.0f32; m.max_workers * m.obs_block];
+        for w in 0..m.max_workers {
+            for i in 0..m.obs_block {
+                let x = 0.2 + 0.7 * i as f32 / m.obs_block as f32;
+                xs[w * m.obs_block + i] = x;
+                ys[w * m.obs_block + i] = 50_000.0 * x;
+            }
+        }
+        let tgt = vec![1.0f32; m.max_workers];
+        let out = capacity_update(&m, &CapacityState::zeros(m.max_workers), &xs, &ys, &mask, &tgt)
+            .unwrap();
+        for w in 0..m.max_workers {
+            assert!(
+                (out.capacities[w] - 50_000.0).abs() < 50.0,
+                "worker {w}: {}",
+                out.capacities[w]
+            );
+        }
+    }
+
+    #[test]
+    fn capacity_empty_worker_is_zero() {
+        let m = meta();
+        let z = vec![0.0f32; m.max_workers * m.obs_block];
+        let mask = vec![0.0f32; m.max_workers * m.obs_block];
+        let tgt = vec![1.0f32; m.max_workers];
+        let out =
+            capacity_update(&m, &CapacityState::zeros(m.max_workers), &z, &z, &mask, &tgt).unwrap();
+        assert!(out.capacities.iter().all(|c| *c == 0.0));
+    }
+
+    #[test]
+    fn forecast_constant_series() {
+        let m = meta();
+        let h = vec![5_000.0f32; m.window];
+        let out = forecast(&m, &h).unwrap();
+        for v in &out.forecast {
+            assert!((v - 5_000.0).abs() < 5.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn forecast_tracks_sine_phase() {
+        let m = meta();
+        let period = 1800.0;
+        let full: Vec<f32> = (0..m.window + m.horizon)
+            .map(|t| (40e3 + 15e3 * (2.0 * std::f64::consts::PI * t as f64 / period).sin()) as f32)
+            .collect();
+        let h = &full[..m.window];
+        let truth = &full[m.window..];
+        let out = forecast(&m, h).unwrap();
+        let flat_err: f64 = truth
+            .iter()
+            .map(|v| (v - h[m.window - 1]).abs() as f64)
+            .sum::<f64>();
+        let ar_err: f64 = truth
+            .iter()
+            .zip(&out.forecast)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>();
+        assert!(
+            ar_err < 0.3 * flat_err,
+            "ar {ar_err} vs flat {flat_err} — sine not tracked"
+        );
+    }
+
+    #[test]
+    fn forecast_rejects_wrong_window() {
+        let m = meta();
+        assert!(forecast(&m, &vec![0.0; 10]).is_err());
+    }
+}

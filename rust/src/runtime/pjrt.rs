@@ -1,0 +1,222 @@
+//! PJRT CPU client wrapper: compile the HLO-text artifacts once, execute many.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits 64-bit instruction ids that the pinned xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md). Both
+//! graphs were lowered with `return_tuple=True`, so each execution returns a
+//! single tuple literal that we unpack.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use super::capacity::{CapacityOutput, CapacityState};
+use super::forecast::ForecastOutput;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Static shape configuration shared with the python compile path
+/// (`artifacts/meta.json`). Defaults mirror `python/compile/model.py`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub max_workers: usize,
+    pub obs_block: usize,
+    pub window: usize,
+    pub horizon: usize,
+    pub ar_order: usize,
+    pub ar_lags: Vec<usize>,
+    pub max_lag: usize,
+    pub ridge_lam: f64,
+    pub cg_iters: usize,
+    pub state_width: usize,
+}
+
+impl Default for ArtifactMeta {
+    fn default() -> Self {
+        Self {
+            max_workers: 32,
+            obs_block: 16,
+            window: 1800,
+            horizon: 900,
+            ar_lags: vec![
+                1, 2, 3, 4, 5, 6, 8, 10, 13, 16, 20, 25, 30, 40, 50, 60, 80, 100, 130, 160, 200,
+                250, 300, 360,
+            ],
+            ar_order: 24,
+            max_lag: 360,
+            ridge_lam: 1e-3,
+            cg_iters: 48,
+            state_width: 5,
+        }
+    }
+}
+
+impl ArtifactMeta {
+    /// Parse from the `meta.json` emitted by `python/compile/aot.py`.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        Ok(Self {
+            max_workers: v.get("max_workers")?.as_usize()?,
+            obs_block: v.get("obs_block")?.as_usize()?,
+            window: v.get("window")?.as_usize()?,
+            horizon: v.get("horizon")?.as_usize()?,
+            ar_order: v.get("ar_order")?.as_usize()?,
+            ar_lags: v.get("ar_lags")?.as_usize_vec()?,
+            max_lag: v.get("max_lag")?.as_usize()?,
+            ridge_lam: v.get("ridge_lam")?.as_f64()?,
+            cg_iters: v.get("cg_iters")?.as_usize()?,
+            state_width: v.get("state_width")?.as_usize()?,
+        })
+    }
+}
+
+/// Compiled artifacts + the PJRT client that owns them.
+pub struct ArtifactRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    capacity_exe: xla::PjRtLoadedExecutable,
+    forecast_exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    pub dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Load `meta.json`, `capacity.hlo.txt` and `forecast.hlo.txt` from
+    /// `dir`, compiling both executables on a fresh CPU client.
+    pub fn load(dir: &str) -> Result<Self> {
+        let dir = PathBuf::from(dir);
+        let meta_path = dir.join("meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts`"))?;
+        let meta = ArtifactMeta::from_json(&meta_text).context("parsing meta.json")?;
+        if meta.state_width != 5 {
+            return Err(anyhow!("unsupported state width {}", meta.state_width));
+        }
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let capacity_exe = Self::compile(&client, &dir.join("capacity.hlo.txt"))?;
+        let forecast_exe = Self::compile(&client, &dir.join("forecast.hlo.txt"))?;
+        Ok(Self {
+            client,
+            capacity_exe,
+            forecast_exe,
+            meta,
+            dir,
+        })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("loading HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        if data.len() != rows * cols {
+            return Err(anyhow!(
+                "literal shape mismatch: {} elems for [{rows}, {cols}]",
+                data.len()
+            ));
+        }
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Execute the capacity graph (see `model.capacity_update`).
+    pub fn capacity_update(
+        &self,
+        state: &CapacityState,
+        xs: &[f32],
+        ys: &[f32],
+        mask: &[f32],
+        cpu_target: &[f32],
+    ) -> Result<CapacityOutput> {
+        let mw = self.meta.max_workers;
+        let b = self.meta.obs_block;
+        if cpu_target.len() != mw {
+            return Err(anyhow!("cpu_target must have {mw} entries"));
+        }
+        let args = [
+            Self::literal_2d(state.as_slice(), mw, 5)?,
+            Self::literal_2d(xs, mw, b)?,
+            Self::literal_2d(ys, mw, b)?,
+            Self::literal_2d(mask, mw, b)?,
+            xla::Literal::vec1(cpu_target),
+        ];
+        let result = self
+            .capacity_exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("capacity execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("capacity fetch: {e:?}"))?;
+        let (state_lit, caps_lit) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("capacity tuple: {e:?}"))?;
+        let new_state = state_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("state to_vec: {e:?}"))?;
+        let caps = caps_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("caps to_vec: {e:?}"))?;
+        Ok(CapacityOutput {
+            state: CapacityState::from_vec(new_state, mw)?,
+            capacities: caps,
+        })
+    }
+
+    /// Execute the forecast graph (see `model.forecast`).
+    pub fn forecast(&self, history: &[f32]) -> Result<ForecastOutput> {
+        if history.len() != self.meta.window {
+            return Err(anyhow!(
+                "history must have {} samples, got {}",
+                self.meta.window,
+                history.len()
+            ));
+        }
+        let args = [xla::Literal::vec1(history)];
+        let result = self
+            .forecast_exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("forecast execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("forecast fetch: {e:?}"))?;
+        let (fc_lit, coeff_lit, sigma_lit) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("forecast tuple: {e:?}"))?;
+        let forecast = fc_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("forecast to_vec: {e:?}"))?;
+        let coeffs = coeff_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("coeffs to_vec: {e:?}"))?;
+        let sigma = sigma_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sigma to_vec: {e:?}"))?
+            .first()
+            .copied()
+            .unwrap_or(0.0);
+        Ok(ForecastOutput {
+            forecast,
+            coeffs,
+            resid_sigma: sigma,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_meta_matches_model_py() {
+        let m = ArtifactMeta::default();
+        assert_eq!(m.ar_order, m.ar_lags.len());
+        assert_eq!(m.max_lag, *m.ar_lags.iter().max().unwrap());
+        assert!(m.window > m.max_lag + 128);
+        assert_eq!(m.horizon, 900);
+    }
+}

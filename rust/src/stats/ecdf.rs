@@ -1,0 +1,183 @@
+//! Weighted empirical cumulative distribution function.
+//!
+//! The paper reports end-to-end latencies as an ECDF (Figs 7c, 8c, 9c, 10c,
+//! 11c) plus averages and percentiles. The simulator emits fluid latency
+//! samples weighted by tuple volume, so the ECDF must be weight-aware.
+
+/// Accumulates weighted samples; quantiles/ECDF computed on demand.
+#[derive(Debug, Clone, Default)]
+pub struct Ecdf {
+    samples: Vec<(f64, f64)>, // (value, weight)
+    sorted: bool,
+    total_weight: f64,
+}
+
+impl Ecdf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a sample with weight (e.g. latency, tuple count).
+    pub fn push(&mut self, value: f64, weight: f64) {
+        if weight <= 0.0 || !value.is_finite() {
+            return;
+        }
+        self.samples.push((value, weight));
+        self.total_weight += weight;
+        self.sorted = false;
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            // Unstable sort: no scratch allocation — this runs on the
+            // per-tick latency path (EXPERIMENTS.md §Perf).
+            self.samples
+                .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Weighted mean of the samples.
+    pub fn mean(&self) -> f64 {
+        if self.total_weight == 0.0 {
+            return 0.0;
+        }
+        self.samples.iter().map(|(v, w)| v * w).sum::<f64>() / self.total_weight
+    }
+
+    /// Maximum sample value.
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .map(|(v, _)| *v)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Weighted quantile in [0, 1] (lower interpolation).
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let target = q.clamp(0.0, 1.0) * self.total_weight;
+        let mut acc = 0.0;
+        for (v, w) in &self.samples {
+            acc += w;
+            if acc >= target {
+                return *v;
+            }
+        }
+        self.samples.last().unwrap().0
+    }
+
+    /// P(X ≤ x): the empirical CDF evaluated at `x`.
+    pub fn cdf_at(&mut self, x: f64) -> f64 {
+        if self.total_weight == 0.0 {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let mut acc = 0.0;
+        for (v, w) in &self.samples {
+            if *v > x {
+                break;
+            }
+            acc += w;
+        }
+        acc / self.total_weight
+    }
+
+    /// Evaluate the CDF on a log-spaced grid — the paper's latency plots are
+    /// log-x. Returns `(grid_value, cumulative_probability)` pairs.
+    pub fn curve_logspace(&mut self, lo: f64, hi: f64, points: usize) -> Vec<(f64, f64)> {
+        assert!(lo > 0.0 && hi > lo && points >= 2);
+        let lf = lo.ln();
+        let hf = hi.ln();
+        (0..points)
+            .map(|i| {
+                let x = (lf + (hf - lf) * i as f64 / (points - 1) as f64).exp();
+                (x, self.cdf_at(x))
+            })
+            .collect()
+    }
+
+    /// Merge another ECDF into this one (used to pool repetition runs).
+    pub fn merge(&mut self, other: &Ecdf) {
+        self.samples.extend_from_slice(&other.samples);
+        self.total_weight += other.total_weight;
+        self.sorted = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    #[test]
+    fn unweighted_quantiles() {
+        let mut e = Ecdf::new();
+        for v in 1..=100 {
+            e.push(v as f64, 1.0);
+        }
+        crate::assert_close!(e.quantile(0.5), 50.0, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(e.quantile(0.95), 95.0, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(e.quantile(1.0), 100.0, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(e.mean(), 50.5, rtol = 1e-9, atol = 1e-12);
+    }
+
+    #[test]
+    fn weights_shift_quantiles() {
+        let mut e = Ecdf::new();
+        e.push(1.0, 99.0);
+        e.push(100.0, 1.0);
+        crate::assert_close!(e.quantile(0.5), 1.0, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(e.quantile(0.999), 100.0, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(e.mean(), (99.0 + 100.0) / 100.0, rtol = 1e-9, atol = 1e-12);
+    }
+
+    #[test]
+    fn cdf_is_monotone() {
+        let mut e = Ecdf::new();
+        let vals = [5.0, 1.0, 9.0, 3.0, 3.0, 7.0];
+        for v in vals {
+            e.push(v, 2.0);
+        }
+        let curve = e.curve_logspace(0.5, 20.0, 50);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        crate::assert_close!(curve.last().unwrap().1, 1.0, rtol = 1e-9, atol = 1e-12);
+    }
+
+    #[test]
+    fn ignores_invalid_samples() {
+        let mut e = Ecdf::new();
+        e.push(f64::NAN, 1.0);
+        e.push(1.0, 0.0);
+        e.push(1.0, -5.0);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn merge_pools_runs() {
+        let mut a = Ecdf::new();
+        let mut b = Ecdf::new();
+        a.push(1.0, 1.0);
+        b.push(3.0, 1.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        crate::assert_close!(a.mean(), 2.0, rtol = 1e-9, atol = 1e-12);
+    }
+}

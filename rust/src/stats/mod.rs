@@ -1,0 +1,26 @@
+//! Statistical primitives shared across the coordinator.
+//!
+//! * [`welford`] — the paper's one-pass running (co)variance (§3.1, §3.5),
+//!   used both by the native capacity model fallback and by the anomaly
+//!   detector. The *hot* batched version runs inside the AOT artifact; this
+//!   is the scalar reference/driver implementation.
+//! * [`regression`] — simple linear regression on top of Welford state.
+//! * [`ecdf`] — weighted empirical CDF for the latency plots (Figs 7c–10c).
+//! * [`wape`] — weighted absolute percentage error, the paper's forecast
+//!   quality gate (§3.3).
+//! * [`rng`] — small deterministic PRNG (xoshiro256++) so experiments are
+//!   reproducible without external crates.
+
+pub mod ecdf;
+pub mod holt;
+pub mod regression;
+pub mod rng;
+pub mod wape;
+pub mod welford;
+
+pub use ecdf::Ecdf;
+pub use holt::HoltWinters;
+pub use regression::LinearRegression;
+pub use rng::Rng;
+pub use wape::wape;
+pub use welford::Welford;

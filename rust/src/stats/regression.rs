@@ -1,0 +1,97 @@
+//! Simple linear regression, both over Welford state and over raw windows.
+//!
+//! The windowed fit backs the paper's *fallback forecast* (§3.3): when the
+//! previous TSF prediction was poor (WAPE above threshold), the slope of the
+//! latest workload observations is projected 15 minutes ahead.
+
+use super::welford::Welford;
+
+/// Linear model `y = intercept + slope · x`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearRegression {
+    pub slope: f64,
+    pub intercept: f64,
+}
+
+impl LinearRegression {
+    /// Fit from Welford accumulator state; `None` if x is degenerate.
+    pub fn from_welford(w: &Welford) -> Option<Self> {
+        let slope = w.slope()?;
+        Some(Self {
+            slope,
+            intercept: w.mean_y - slope * w.mean_x,
+        })
+    }
+
+    /// Least-squares fit of `ys` against indices `0..n`; `None` if `n < 2`.
+    pub fn fit_series(ys: &[f64]) -> Option<Self> {
+        if ys.len() < 2 {
+            return None;
+        }
+        let mut w = Welford::new();
+        for (i, y) in ys.iter().enumerate() {
+            w.push(i as f64, *y);
+        }
+        Self::from_welford(&w)
+    }
+
+    /// Evaluate the line at `x`.
+    pub fn predict(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+
+    /// Project `horizon` steps beyond a series of length `n`
+    /// (the fallback forecast: linear continuation, floored at zero).
+    pub fn project(&self, n: usize, horizon: usize) -> Vec<f64> {
+        (0..horizon)
+            .map(|h| self.predict((n + h) as f64).max(0.0))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    #[test]
+    fn fits_exact_line() {
+        let ys: Vec<f64> = (0..50).map(|i| 10.0 + 2.5 * i as f64).collect();
+        let lr = LinearRegression::fit_series(&ys).unwrap();
+        crate::assert_close!(lr.slope, 2.5, atol = 1e-9);
+        crate::assert_close!(lr.intercept, 10.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn projection_continues_trend() {
+        let ys: Vec<f64> = (0..100).map(|i| 1000.0 + 5.0 * i as f64).collect();
+        let lr = LinearRegression::fit_series(&ys).unwrap();
+        let proj = lr.project(ys.len(), 10);
+        assert_eq!(proj.len(), 10);
+        crate::assert_close!(proj[0], 1500.0, atol = 1e-6);
+        crate::assert_close!(proj[9], 1545.0, atol = 1e-6);
+    }
+
+    #[test]
+    fn projection_floors_at_zero() {
+        let ys: Vec<f64> = (0..100).map(|i| 100.0 - 5.0 * i as f64).collect();
+        let lr = LinearRegression::fit_series(&ys).unwrap();
+        let proj = lr.project(ys.len(), 20);
+        assert!(proj.iter().all(|v| *v >= 0.0));
+        assert_eq!(proj[19], 0.0);
+    }
+
+    #[test]
+    fn too_short_series_is_none() {
+        assert!(LinearRegression::fit_series(&[1.0]).is_none());
+        assert!(LinearRegression::fit_series(&[]).is_none());
+    }
+
+    #[test]
+    fn constant_series_is_degenerate_only_in_x() {
+        // x varies (indices), y constant → slope 0, intercept = y.
+        let lr = LinearRegression::fit_series(&[7.0; 10]).unwrap();
+        crate::assert_close!(lr.slope, 0.0, atol = 1e-12);
+        crate::assert_close!(lr.intercept, 7.0, atol = 1e-12);
+    }
+}

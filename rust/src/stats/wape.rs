@@ -1,0 +1,61 @@
+//! Weighted Absolute Percentage Error — the paper's forecast quality gate.
+//!
+//! `WAPE = Σ|actual − forecast| / Σ|actual|` (§3.3). Daedalus compares the
+//! previous loop's forecast against the workload actually observed since;
+//! a WAPE above threshold (25 % in the paper) switches the next forecast to
+//! the linear fallback, and 15 consecutive poor forecasts trigger a model
+//! retrain.
+
+/// Compute WAPE over paired slices. Returns `None` when inputs are empty,
+/// have mismatched lengths, or the actuals sum to zero (undefined metric).
+pub fn wape(actual: &[f64], forecast: &[f64]) -> Option<f64> {
+    if actual.is_empty() || actual.len() != forecast.len() {
+        return None;
+    }
+    let denom: f64 = actual.iter().map(|a| a.abs()).sum();
+    if denom <= 0.0 {
+        return None;
+    }
+    let num: f64 = actual
+        .iter()
+        .zip(forecast)
+        .map(|(a, f)| (a - f).abs())
+        .sum();
+    Some(num / denom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    #[test]
+    fn perfect_forecast_is_zero() {
+        let a = [10.0, 20.0, 30.0];
+        crate::assert_close!(wape(&a, &a).unwrap(), 0.0, rtol = 1e-9, atol = 1e-12);
+    }
+
+    #[test]
+    fn known_value() {
+        // errors: 1+2+3 = 6, actuals: 10+20+30 = 60 → 0.1
+        let a = [10.0, 20.0, 30.0];
+        let f = [11.0, 18.0, 33.0];
+        crate::assert_close!(wape(&a, &f).unwrap(), 0.1, rtol = 1e-9, atol = 1e-12);
+    }
+
+    #[test]
+    fn weights_large_actuals_more() {
+        // Same absolute error at a large actual matters less relatively —
+        // WAPE normalizes by total volume, not per-point.
+        let a = [1000.0, 1.0];
+        let f = [1010.0, 11.0];
+        crate::assert_close!(wape(&a, &f).unwrap(), 20.0 / 1001.0, rtol = 1e-9, atol = 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(wape(&[], &[]).is_none());
+        assert!(wape(&[1.0], &[1.0, 2.0]).is_none());
+        assert!(wape(&[0.0, 0.0], &[1.0, 1.0]).is_none());
+    }
+}

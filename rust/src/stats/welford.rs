@@ -1,0 +1,196 @@
+//! Welford's online algorithm for running mean/variance/covariance.
+//!
+//! The paper (§3.1) maintains, per worker, the running covariance of CPU
+//! utilization and throughput plus the CPU variance — enough to fit the
+//! simple linear regression `y = α + βx` without storing observations. The
+//! same machinery tracks the workload−throughput difference for the
+//! recovery-time anomaly detector (§3.5).
+
+/// One-pass running statistics over paired observations `(x, y)`.
+///
+/// Tracks count, means, `m2x = Σ(x−x̄)²`, `m2y = Σ(y−ȳ)²` and
+/// `cxy = Σ(x−x̄)(y−ȳ)` with Welford's numerically stable updates.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Welford {
+    pub count: f64,
+    pub mean_x: f64,
+    pub mean_y: f64,
+    pub m2x: f64,
+    pub m2y: f64,
+    pub cxy: f64,
+}
+
+impl Welford {
+    /// Fresh, empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one `(x, y)` observation.
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.count += 1.0;
+        let dx = x - self.mean_x;
+        let dy = y - self.mean_y;
+        self.mean_x += dx / self.count;
+        self.mean_y += dy / self.count;
+        // Cross/self products use the *updated* mean for one factor.
+        self.m2x += dx * (x - self.mean_x);
+        self.m2y += dy * (y - self.mean_y);
+        self.cxy += dx * (y - self.mean_y);
+    }
+
+    /// Fold a single scalar (tracked in the `x` channel).
+    pub fn push_scalar(&mut self, x: f64) {
+        self.push(x, 0.0);
+    }
+
+    /// Population variance of `x` (0 when empty).
+    pub fn var_x(&self) -> f64 {
+        if self.count > 0.0 {
+            self.m2x / self.count
+        } else {
+            0.0
+        }
+    }
+
+    /// Population variance of `y`.
+    pub fn var_y(&self) -> f64 {
+        if self.count > 0.0 {
+            self.m2y / self.count
+        } else {
+            0.0
+        }
+    }
+
+    /// Population covariance of `(x, y)`.
+    pub fn cov(&self) -> f64 {
+        if self.count > 0.0 {
+            self.cxy / self.count
+        } else {
+            0.0
+        }
+    }
+
+    /// Standard deviation of `x`.
+    pub fn std_x(&self) -> f64 {
+        self.var_x().sqrt()
+    }
+
+    /// Regression slope β = cov(x,y)/var(x); `None` if x has no variance.
+    pub fn slope(&self) -> Option<f64> {
+        if self.m2x > 1e-12 {
+            Some(self.cxy / self.m2x)
+        } else {
+            None
+        }
+    }
+
+    /// Regression intercept α = ȳ − β·x̄.
+    pub fn intercept(&self) -> Option<f64> {
+        self.slope().map(|b| self.mean_y - b * self.mean_x)
+    }
+
+    /// Predict `y` at a given `x` via the fitted line (paper's capacity
+    /// formula: ȳ − β·x̄ + β·x_desired).
+    pub fn predict(&self, x: f64) -> Option<f64> {
+        self.slope().map(|b| self.mean_y - b * self.mean_x + b * x)
+    }
+
+    /// Whether `|x − x̄|` exceeds `k` standard deviations — the paper's
+    /// statistical anomaly criterion with `k = 1` (§3.5).
+    pub fn is_anomalous(&self, x: f64, k: f64) -> bool {
+        if self.count < 2.0 {
+            return false;
+        }
+        (x - self.mean_x).abs() > k * self.std_x()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    fn batch_stats(xs: &[f64], ys: &[f64]) -> (f64, f64, f64, f64, f64) {
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let vx = xs.iter().map(|x| (x - mx).powi(2)).sum::<f64>() / n;
+        let vy = ys.iter().map(|y| (y - my).powi(2)).sum::<f64>() / n;
+        let cov = xs
+            .iter()
+            .zip(ys)
+            .map(|(x, y)| (x - mx) * (y - my))
+            .sum::<f64>()
+            / n;
+        (mx, my, vx, vy, cov)
+    }
+
+    #[test]
+    fn matches_two_pass_statistics() {
+        let xs = [0.3, 0.5, 0.9, 0.75, 0.62, 0.41, 0.88];
+        let ys = [31.0, 52.0, 88.0, 73.0, 60.5, 42.0, 86.0];
+        let mut w = Welford::new();
+        for (x, y) in xs.iter().zip(&ys) {
+            w.push(*x, *y);
+        }
+        let (mx, my, vx, vy, cov) = batch_stats(&xs, &ys);
+        crate::assert_close!(w.mean_x, mx, atol = 1e-12);
+        crate::assert_close!(w.mean_y, my, atol = 1e-12);
+        crate::assert_close!(w.var_x(), vx, atol = 1e-12);
+        crate::assert_close!(w.var_y(), vy, atol = 1e-12);
+        crate::assert_close!(w.cov(), cov, atol = 1e-12);
+    }
+
+    #[test]
+    fn recovers_exact_linear_relationship() {
+        let mut w = Welford::new();
+        for i in 0..100 {
+            let x = i as f64 / 100.0;
+            w.push(x, 3.0 + 7.0 * x);
+        }
+        crate::assert_close!(w.slope().unwrap(), 7.0, atol = 1e-9);
+        crate::assert_close!(w.intercept().unwrap(), 3.0, atol = 1e-9);
+        crate::assert_close!(w.predict(2.0).unwrap(), 17.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn degenerate_x_has_no_slope() {
+        let mut w = Welford::new();
+        for _ in 0..10 {
+            w.push(0.5, 42.0);
+        }
+        assert!(w.slope().is_none());
+        assert!(w.predict(1.0).is_none());
+    }
+
+    #[test]
+    fn empty_accumulator_is_sane() {
+        let w = Welford::new();
+        assert_eq!(w.var_x(), 0.0);
+        assert_eq!(w.cov(), 0.0);
+        assert!(!w.is_anomalous(100.0, 1.0));
+    }
+
+    #[test]
+    fn anomaly_detection_one_sigma() {
+        let mut w = Welford::new();
+        // Differences hovering around 0 with σ ≈ 1.
+        for i in 0..1000 {
+            w.push_scalar(((i * 2654435761_u64) % 1000) as f64 / 500.0 - 1.0);
+        }
+        assert!(!w.is_anomalous(w.mean_x, 1.0));
+        assert!(w.is_anomalous(w.mean_x + 5.0 * w.std_x(), 1.0));
+    }
+
+    #[test]
+    fn numerically_stable_at_large_offsets() {
+        // Classic catastrophic-cancellation case for naive sum-of-squares.
+        let mut w = Welford::new();
+        for i in 0..1000 {
+            w.push(1e9 + (i % 7) as f64, 1e9 + (i % 3) as f64);
+        }
+        assert!(w.var_x() > 0.0);
+        assert!(w.var_x() < 10.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Small self-contained utilities (the build is fully offline, so the crate
+//! avoids heavyweight dependencies: JSON parsing, CLI parsing and test
+//! assertions are hand-rolled here).
+
+pub mod json;
+
+/// Assert two floats are close: `|a − b| ≤ atol + rtol·|b|`.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr) => {
+        $crate::assert_close!($a, $b, rtol = 1e-9, atol = 1e-9)
+    };
+    ($a:expr, $b:expr, rtol = $rtol:expr) => {
+        $crate::assert_close!($a, $b, rtol = $rtol, atol = 0.0)
+    };
+    ($a:expr, $b:expr, atol = $atol:expr) => {
+        $crate::assert_close!($a, $b, rtol = 0.0, atol = $atol)
+    };
+    ($a:expr, $b:expr, rtol = $rtol:expr, atol = $atol:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        let tol = $atol as f64 + ($rtol as f64) * b.abs();
+        assert!(
+            (a - b).abs() <= tol,
+            "assert_close failed: {} vs {} (diff {}, tol {})",
+            a,
+            b,
+            (a - b).abs(),
+            tol
+        );
+    }};
+}

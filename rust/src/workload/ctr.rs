@@ -1,0 +1,134 @@
+//! CTR-like workload — stand-in for the paper's Avazu click-through-rate
+//! trace (Yahoo Streaming Benchmark, §4.2).
+//!
+//! The Kaggle dataset cannot be shipped; what the autoscalers actually see
+//! is the trace *shape*: an advertising-traffic diurnal cycle (compressed to
+//! the 6-h run), slow correlated wander, and short click bursts. This
+//! generator reproduces those features deterministically from a seed. The
+//! substitution is documented in DESIGN.md §2.
+
+use super::Workload;
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Diurnal baseline + smooth correlated noise + sparse bursts.
+#[derive(Debug, Clone)]
+pub struct CtrWorkload {
+    peak: f64,
+    duration: Timestamp,
+    /// Smooth noise sampled every `NOISE_STEP` seconds, linearly interpolated.
+    noise: Vec<f64>,
+    /// Burst windows: (start, length_secs, relative_height).
+    bursts: Vec<(Timestamp, Timestamp, f64)>,
+}
+
+const NOISE_STEP: usize = 60;
+
+impl CtrWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC7E0_11AD);
+        // Ornstein-Uhlenbeck-style correlated wander, ±8 % of peak.
+        let n = duration as usize / NOISE_STEP + 2;
+        let mut noise = Vec::with_capacity(n);
+        let mut x: f64 = 0.0;
+        for _ in 0..n {
+            x = 0.9 * x + 0.1 * rng.normal();
+            noise.push(x * 0.08);
+        }
+        // A handful of click bursts, 2–6 minutes, up to +25 % of peak.
+        let n_bursts = 4 + rng.below(4);
+        let bursts = (0..n_bursts)
+            .map(|_| {
+                let start = rng.below(duration.saturating_sub(600));
+                let len = 120 + rng.below(240);
+                let height = rng.range(0.10, 0.25);
+                (start, len, height)
+            })
+            .collect();
+        Self {
+            peak,
+            duration,
+            noise,
+            bursts,
+        }
+    }
+
+    fn diurnal(&self, t: Timestamp) -> f64 {
+        // One compressed "day": overnight trough, morning ramp, evening peak
+        // — the canonical ad-traffic profile mapped onto the run duration.
+        let x = t as f64 / self.duration as f64; // 0..1 = one day
+        let morning = (-((x - 0.42) / 0.16).powi(2)).exp() * 0.55;
+        let evening = (-((x - 0.78) / 0.13).powi(2)).exp() * 0.95;
+        let base = 0.22;
+        base + morning + evening
+    }
+
+    fn smooth_noise(&self, t: Timestamp) -> f64 {
+        let i = t as usize / NOISE_STEP;
+        let frac = (t as usize % NOISE_STEP) as f64 / NOISE_STEP as f64;
+        let a = self.noise[i.min(self.noise.len() - 1)];
+        let b = self.noise[(i + 1).min(self.noise.len() - 1)];
+        a + (b - a) * frac
+    }
+}
+
+impl Workload for CtrWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let mut level = self.diurnal(t) + self.smooth_noise(t);
+        for (start, len, height) in &self.bursts {
+            if t >= *start && t < start + len {
+                // Triangular burst envelope.
+                let frac = (t - start) as f64 / *len as f64;
+                level += height * (1.0 - (2.0 * frac - 1.0).abs());
+            }
+        }
+        // Normalize: diurnal max ≈ 1.17 of base scale → map so peak ≈ self.peak.
+        (level / 1.17 * self.peak).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = CtrWorkload::new(50_000.0, 21_600, 7);
+        let b = CtrWorkload::new(50_000.0, 21_600, 7);
+        for t in (0..21_600).step_by(321) {
+            assert_eq!(a.rate(t), b.rate(t));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = CtrWorkload::new(50_000.0, 21_600, 1);
+        let b = CtrWorkload::new(50_000.0, 21_600, 2);
+        let same = (0..21_600)
+            .step_by(600)
+            .filter(|t| (a.rate(*t) - b.rate(*t)).abs() < 1e-9)
+            .count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn has_meaningful_dynamic_range() {
+        let w = CtrWorkload::new(50_000.0, 21_600, 3);
+        let peak = w.peak();
+        let trough = (0..21_600).map(|t| w.rate(t)).fold(f64::MAX, f64::min);
+        assert!(peak > 2.0 * trough, "peak {peak}, trough {trough}");
+        assert!(peak <= 50_000.0 * 1.35, "peak {peak} too high");
+    }
+
+    #[test]
+    fn evening_peak_exceeds_morning() {
+        let w = CtrWorkload::new(50_000.0, 21_600, 9);
+        let morning: f64 = (8_500..9_500).map(|t| w.rate(t)).sum::<f64>() / 1000.0;
+        let evening: f64 = (16_300..17_300).map(|t| w.rate(t)).sum::<f64>() / 1000.0;
+        assert!(evening > morning, "evening {evening} vs morning {morning}");
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic workload shapes for the metric-relationship experiments
+//! (Figs 2–5) and for tests: constant, ramp, step, and trace replay.
+
+use super::Workload;
+use crate::clock::Timestamp;
+
+/// Constant rate.
+#[derive(Debug, Clone)]
+pub struct ConstantWorkload {
+    pub rate: f64,
+    pub duration: Timestamp,
+}
+
+impl Workload for ConstantWorkload {
+    fn rate(&self, _t: Timestamp) -> f64 {
+        self.rate
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+/// Linear ramp from `from` to `to` over the duration — used to sweep the
+/// whole CPU range for Fig 2 (metric relationships) and Fig 5 (capacity
+/// over CPU).
+#[derive(Debug, Clone)]
+pub struct RampWorkload {
+    pub from: f64,
+    pub to: f64,
+    pub duration: Timestamp,
+}
+
+impl Workload for RampWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let frac = (t as f64 / self.duration.max(1) as f64).clamp(0.0, 1.0);
+        (self.from + (self.to - self.from) * frac).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+/// Piecewise-constant steps `(start_second, rate)`, sorted by start.
+#[derive(Debug, Clone)]
+pub struct StepWorkload {
+    pub steps: Vec<(Timestamp, f64)>,
+    pub duration: Timestamp,
+}
+
+impl Workload for StepWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        self.steps
+            .iter()
+            .rev()
+            .find(|(start, _)| *start <= t)
+            .map(|(_, r)| *r)
+            .unwrap_or(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+/// Replay a recorded trace (1 sample per second, clamped to the last value).
+#[derive(Debug, Clone)]
+pub struct ReplayWorkload {
+    pub samples: Vec<f64>,
+}
+
+impl ReplayWorkload {
+    /// Load a trace from a CSV/text file: one rate per line, or `t,rate`
+    /// rows (a header line is skipped automatically). Real traces (e.g. an
+    /// actual Avazu-derived series) can be dropped in via the
+    /// `workload_file` field of an experiment spec.
+    pub fn from_csv(path: &str) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut samples = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let field = line.rsplit(',').next().unwrap_or(line).trim();
+            match field.parse::<f64>() {
+                Ok(v) => samples.push(v.max(0.0)),
+                Err(e) if i == 0 => {
+                    // Header line.
+                    let _ = e;
+                }
+                Err(e) => anyhow::bail!("bad rate on line {}: {e}", i + 1),
+            }
+        }
+        if samples.is_empty() {
+            anyhow::bail!("trace {path:?} contains no samples");
+        }
+        Ok(Self { samples })
+    }
+
+    /// Rescale so the trace peak equals `peak`.
+    pub fn scaled_to_peak(mut self, peak: f64) -> Self {
+        let max = self.samples.iter().copied().fold(0.0, f64::max);
+        if max > 0.0 {
+            let k = peak / max;
+            for s in &mut self.samples {
+                *s *= k;
+            }
+        }
+        self
+    }
+}
+
+impl Workload for ReplayWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let i = (t as usize).min(self.samples.len() - 1);
+        self.samples[i].max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.samples.len() as Timestamp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_endpoints() {
+        let w = RampWorkload {
+            from: 0.0,
+            to: 1_000.0,
+            duration: 100,
+        };
+        assert_eq!(w.rate(0), 0.0);
+        assert_eq!(w.rate(50), 500.0);
+        assert_eq!(w.rate(100), 1_000.0);
+        assert_eq!(w.rate(500), 1_000.0); // clamped past end
+    }
+
+    #[test]
+    fn steps_switch_at_boundaries() {
+        let w = StepWorkload {
+            steps: vec![(0, 10.0), (100, 50.0), (200, 20.0)],
+            duration: 300,
+        };
+        assert_eq!(w.rate(0), 10.0);
+        assert_eq!(w.rate(99), 10.0);
+        assert_eq!(w.rate(100), 50.0);
+        assert_eq!(w.rate(250), 20.0);
+    }
+
+    #[test]
+    fn replay_clamps_and_floors() {
+        let w = ReplayWorkload {
+            samples: vec![1.0, -2.0, 3.0],
+        };
+        assert_eq!(w.rate(0), 1.0);
+        assert_eq!(w.rate(1), 0.0); // negative floored
+        assert_eq!(w.rate(99), 3.0); // clamped to last
+        assert_eq!(w.duration(), 3);
+    }
+
+    #[test]
+    fn empty_replay_is_zero() {
+        let w = ReplayWorkload { samples: vec![] };
+        assert_eq!(w.rate(5), 0.0);
+    }
+
+    #[test]
+    fn replay_from_csv_with_header_and_pairs() {
+        let path = std::env::temp_dir().join("daedalus-trace-test.csv");
+        std::fs::write(&path, "t,rate\n0,100.5\n1,200\n2,-5\n").unwrap();
+        let w = ReplayWorkload::from_csv(path.to_str().unwrap()).unwrap();
+        assert_eq!(w.samples, vec![100.5, 200.0, 0.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_from_csv_single_column() {
+        let path = std::env::temp_dir().join("daedalus-trace-test2.csv");
+        std::fs::write(&path, "10\n20\n30\n").unwrap();
+        let w = ReplayWorkload::from_csv(path.to_str().unwrap()).unwrap();
+        assert_eq!(w.samples, vec![10.0, 20.0, 30.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_rejects_garbage_and_empty() {
+        let path = std::env::temp_dir().join("daedalus-trace-test3.csv");
+        std::fs::write(&path, "header\n1\nnope\n").unwrap();
+        assert!(ReplayWorkload::from_csv(path.to_str().unwrap()).is_err());
+        std::fs::write(&path, "").unwrap();
+        assert!(ReplayWorkload::from_csv(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scaled_to_peak() {
+        let w = ReplayWorkload {
+            samples: vec![1.0, 4.0, 2.0],
+        }
+        .scaled_to_peak(100.0);
+        assert_eq!(w.samples, vec![25.0, 100.0, 50.0]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Sine-wave workload — the paper's WordCount trace (two periods over the
+//! 6-hour run, §4.2) and the Phoebe-comparison trace (§4.7).
+
+use super::Workload;
+use crate::clock::Timestamp;
+
+/// `rate(t) = offset + amplitude · sin(2π · periods · t / duration)`,
+/// floored at `min_rate`.
+#[derive(Debug, Clone)]
+pub struct SineWorkload {
+    pub offset: f64,
+    pub amplitude: f64,
+    pub periods: f64,
+    pub duration: Timestamp,
+    pub min_rate: f64,
+    pub phase: f64,
+}
+
+impl SineWorkload {
+    /// The paper's configuration: two full periods, oscillating between
+    /// ~10 % and 100 % of `peak`.
+    pub fn paper_default(peak: f64, duration: Timestamp) -> Self {
+        let amplitude = 0.45 * peak;
+        Self {
+            offset: peak - amplitude,
+            amplitude,
+            periods: 2.0,
+            duration,
+            min_rate: 0.0,
+            // Start rising from the mean, like the paper's Fig 7a.
+            phase: 0.0,
+        }
+    }
+}
+
+impl Workload for SineWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let x = 2.0 * std::f64::consts::PI * self.periods * t as f64 / self.duration as f64;
+        (self.offset + self.amplitude * (x + self.phase).sin()).max(self.min_rate)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_periods_have_two_peaks() {
+        let w = SineWorkload::paper_default(60_000.0, 21_600);
+        // Peaks at 1/8·T + k/2·T for phase 0 (sin max at π/2).
+        let quarter = 21_600 / 8;
+        let p1 = w.rate(quarter);
+        let p2 = w.rate(quarter + 21_600 / 2);
+        assert!((p1 - 60_000.0).abs() < 1.0, "{p1}");
+        assert!((p2 - 60_000.0).abs() < 1.0, "{p2}");
+    }
+
+    #[test]
+    fn oscillates_within_bounds() {
+        let w = SineWorkload::paper_default(60_000.0, 21_600);
+        for t in (0..21_600).step_by(13) {
+            let r = w.rate(t);
+            assert!(r >= 5_999.0 && r <= 60_001.0, "rate {r} at {t}");
+        }
+    }
+
+    #[test]
+    fn floors_at_min_rate() {
+        let w = SineWorkload {
+            offset: 0.0,
+            amplitude: 100.0,
+            periods: 1.0,
+            duration: 100,
+            min_rate: 10.0,
+            phase: 0.0,
+        };
+        assert_eq!(w.rate(75), 10.0); // trough would be −100
+    }
+}

@@ -1,0 +1,100 @@
+//! Traffic-monitoring workload — stand-in for the paper's TAPASCologne/SUMO
+//! Berlin vehicle trace (§4.2).
+//!
+//! The paper's Fig 9a shows the defining feature this generator reproduces:
+//! a moderate baseline with **two large, sharp spikes** (rush hours) where
+//! the workload rapidly rises and falls — the hardest case for autoscalers.
+//! Deterministic per seed; substitution documented in DESIGN.md §2.
+
+use super::Workload;
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Baseline + two rush-hour spikes + correlated noise.
+#[derive(Debug, Clone)]
+pub struct TrafficWorkload {
+    peak: f64,
+    duration: Timestamp,
+    noise: Vec<f64>,
+}
+
+const NOISE_STEP: usize = 30;
+
+impl TrafficWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7AFF_1C00);
+        let n = duration as usize / NOISE_STEP + 2;
+        let mut noise = Vec::with_capacity(n);
+        let mut x: f64 = 0.0;
+        for _ in 0..n {
+            x = 0.85 * x + 0.15 * rng.normal();
+            noise.push(x * 0.05);
+        }
+        Self {
+            peak,
+            duration,
+            noise,
+        }
+    }
+
+    fn spike(x: f64, center: f64, width: f64) -> f64 {
+        // Sharper-than-Gaussian flanks: |·|^1.5 exponent makes the rise and
+        // fall rapid, as in the paper's trace.
+        (-((x - center).abs() / width).powf(1.5) * 3.0).exp()
+    }
+}
+
+impl Workload for TrafficWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let x = t as f64 / self.duration as f64;
+        let base = 0.18;
+        let morning = Self::spike(x, 0.30, 0.055) * 0.95;
+        let evening = Self::spike(x, 0.70, 0.065) * 0.85;
+        let i = t as usize / NOISE_STEP;
+        let frac = (t as usize % NOISE_STEP) as f64 / NOISE_STEP as f64;
+        let a = self.noise[i.min(self.noise.len() - 1)];
+        let b = self.noise[(i + 1).min(self.noise.len() - 1)];
+        let noise = a + (b - a) * frac;
+        ((base + morning + evening + noise) / 1.13 * self.peak).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_spikes_dominate_baseline() {
+        let w = TrafficWorkload::new(60_000.0, 21_600, 5);
+        let baseline: f64 = (0..2_000).map(|t| w.rate(t)).sum::<f64>() / 2_000.0;
+        let spike1 = w.rate((0.30 * 21_600.0) as u64);
+        let spike2 = w.rate((0.70 * 21_600.0) as u64);
+        assert!(spike1 > 3.0 * baseline, "spike1 {spike1}, base {baseline}");
+        assert!(spike2 > 3.0 * baseline, "spike2 {spike2}, base {baseline}");
+    }
+
+    #[test]
+    fn spikes_rise_and_fall_fast() {
+        let w = TrafficWorkload::new(60_000.0, 21_600, 5);
+        let center = (0.30 * 21_600.0) as u64;
+        let at_center = w.rate(center);
+        let before = w.rate(center - 1_800); // 30 min earlier
+        assert!(
+            before < 0.55 * at_center,
+            "rise not sharp: {before} vs {at_center}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TrafficWorkload::new(60_000.0, 21_600, 11);
+        let b = TrafficWorkload::new(60_000.0, 21_600, 11);
+        for t in (0..21_600).step_by(777) {
+            assert_eq!(a.rate(t), b.rate(t));
+        }
+    }
+}

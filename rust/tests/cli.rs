@@ -1,0 +1,109 @@
+//! CLI end-to-end tests: run the actual `daedalus` binary.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_daedalus"))
+}
+
+#[test]
+fn no_args_prints_usage_and_fails() {
+    let out = bin().output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("usage: daedalus"));
+    assert!(err.contains("figure"));
+}
+
+#[test]
+fn unknown_figure_rejected() {
+    let out = bin()
+        .args(["figure", "fig99", "--backend", "native"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn fig3_quick_runs_and_writes_csv() {
+    let dir = std::env::temp_dir().join("daedalus-cli-test");
+    let out = bin()
+        .args([
+            "figure",
+            "fig3",
+            "--backend",
+            "native",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Fig 3"));
+    assert!(dir.join("fig3/per_worker.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_with_config_file() {
+    let dir = std::env::temp_dir().join("daedalus-cli-run-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("spec.json");
+    std::fs::write(
+        &cfg,
+        r#"{
+            "name": "cli-test",
+            "duration": 1200,
+            "seeds": [1],
+            "approaches": ["daedalus", "static-6"]
+        }"#,
+    )
+    .unwrap();
+    let out = bin()
+        .args(["run", "--config", cfg.to_str().unwrap(), "--backend", "native"])
+        .current_dir(&dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("daedalus"));
+    assert!(text.contains("static-6"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_with_bad_config_fails_cleanly() {
+    let dir = std::env::temp_dir().join("daedalus-cli-bad-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("bad.json");
+    std::fs::write(&cfg, r#"{"approaches": ["wizardry"]}"#).unwrap();
+    let out = bin()
+        .args(["run", "--config", cfg.to_str().unwrap(), "--backend", "native"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("wizardry") || err.contains("unknown approach"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn selfcheck_native_backend() {
+    let out = bin()
+        .args(["selfcheck", "--backend", "native"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("selfcheck OK"));
+    assert!(text.contains("forecast ok"));
+}

@@ -1,0 +1,202 @@
+//! Integration tests over the whole Layer-3 stack: substrate + metric
+//! store + autoscalers + harness, including failure injection.
+
+use daedalus::autoscaler::{Autoscaler, Daedalus, DaedalusConfig, Hpa, HpaConfig, Static};
+use daedalus::dsp::{EngineProfile, SimConfig, Simulation};
+use daedalus::experiments::harness::{Approach, Experiment};
+use daedalus::jobs::JobProfile;
+use daedalus::metrics::SeriesId;
+use daedalus::runtime::ComputeBackend;
+use daedalus::workload::{ConstantWorkload, SineWorkload, StepWorkload};
+
+fn drive(sim: &mut Simulation, scaler: &mut dyn Autoscaler, upto: u64) {
+    for t in 0..upto {
+        sim.step(t);
+        if let Some(n) = scaler.decide(&sim.view()) {
+            if scaler.wants_precheckpoint() {
+                sim.checkpoint_now();
+            }
+            sim.request_rescale(n);
+        }
+        if t % 500 == 0 {
+            sim.check_invariants();
+        }
+    }
+}
+
+#[test]
+fn daedalus_tracks_sine_workload_end_to_end() {
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let mut sim = Simulation::new(SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(SineWorkload::paper_default(peak, 7_200)),
+    ));
+    let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
+    drive(&mut sim, &mut d, 7_200);
+
+    // Economical: well under a static peak-sized deployment.
+    assert!(sim.avg_workers() < 9.0, "avg {}", sim.avg_workers());
+    // But functional: any remaining backlog is a few seconds of workload
+    // at most (a rescale near the end may still be catching up).
+    assert!(
+        sim.total_backlog() < 10.0 * peak,
+        "backlog {}",
+        sim.total_backlog()
+    );
+    // It actually scaled both directions.
+    let ups = sim.rescale_log.iter().filter(|e| e.to > e.from).count();
+    let downs = sim.rescale_log.iter().filter(|e| e.to < e.from).count();
+    assert!(ups >= 1 && downs >= 1, "ups {ups} downs {downs}");
+}
+
+#[test]
+fn daedalus_survives_failure_injection() {
+    let job = JobProfile::wordcount();
+    let mut cfg = SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(ConstantWorkload {
+            rate: 15_000.0,
+            duration: 6_000,
+        }),
+    );
+    cfg.failures = vec![1_000, 2_500];
+    let mut sim = Simulation::new(cfg);
+    let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
+    drive(&mut sim, &mut d, 6_000);
+
+    let failures = sim.rescale_log.iter().filter(|e| e.failure).count();
+    assert_eq!(failures, 2);
+    // Recovered: backlog drained well before the end (recovery target is
+    // 600 s; the last failure was 3 500 s before the end).
+    assert!(
+        sim.total_backlog() < 60_000.0,
+        "backlog {}",
+        sim.total_backlog()
+    );
+    // The anomaly-detection recovery monitor measured at least one
+    // post-rescale recovery across the run.
+    assert!(!d.knowledge().recoveries.is_empty() || d.knowledge().rescale_count == 0);
+}
+
+#[test]
+fn static_deployment_never_rescales_after_setup() {
+    let job = JobProfile::wordcount();
+    let mut sim = Simulation::new(SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(SineWorkload::paper_default(20_000.0, 3_000)),
+    ));
+    let mut s = Static::new(12);
+    drive(&mut sim, &mut s, 3_000);
+    // One initial correction 4 → 12 at most.
+    assert!(sim.rescale_log.len() <= 1);
+    assert_eq!(sim.parallelism(), 12);
+}
+
+#[test]
+fn hpa_follows_step_up() {
+    let job = JobProfile::wordcount();
+    let mut sim = Simulation::new(SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(StepWorkload {
+            steps: vec![(0, 8_000.0), (1_000, 30_000.0)],
+            duration: 4_000,
+        }),
+    ));
+    let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+    drive(&mut sim, &mut hpa, 4_000);
+    // 30k needs ≥ 6 nominal workers at 80 % target (6.8): HPA must have
+    // scaled well beyond the initial 4.
+    assert!(sim.parallelism() >= 6, "p {}", sim.parallelism());
+    assert!(sim.total_backlog() < 100_000.0);
+}
+
+#[test]
+fn experiment_harness_multi_seed_reproducible() {
+    let job = JobProfile::wordcount();
+    let backend = ComputeBackend::native();
+    let make = |duration: u64| {
+        Experiment::paper(
+            "repro-check",
+            EngineProfile::flink(),
+            job.clone(),
+            backend.clone(),
+            duration,
+        )
+        .with_seeds(vec![7])
+        .with_approaches(vec![Approach::Daedalus(DaedalusConfig::default())])
+    };
+    let peak = job.reference_peak;
+    let r1 = make(2_400).run(&move |_| Box::new(SineWorkload::paper_default(peak, 2_400)));
+    let r2 = make(2_400).run(&move |_| Box::new(SineWorkload::paper_default(peak, 2_400)));
+    // Same seed ⇒ byte-identical trajectories.
+    assert_eq!(
+        r1.approaches[0].parallelism_series,
+        r2.approaches[0].parallelism_series
+    );
+    assert_eq!(
+        r1.approaches[0].worker_seconds,
+        r2.approaches[0].worker_seconds
+    );
+    assert_eq!(
+        r1.approaches[0].avg_latency_ms(),
+        r2.approaches[0].avg_latency_ms()
+    );
+}
+
+#[test]
+fn kstreams_hpa80_underprovisions_but_hpa60_keeps_up() {
+    // The Fig-10 mechanism as an integration test.
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let run = |target: f64| {
+        let mut sim = Simulation::new(SimConfig::paper(
+            EngineProfile::kstreams(),
+            job.clone(),
+            Box::new(SineWorkload::paper_default(peak, 5_400)),
+        ));
+        let mut hpa = Hpa::new(HpaConfig::at_target(target, 12));
+        drive(&mut sim, &mut hpa, 5_400);
+        (sim.avg_workers(), sim.latencies().clone().mean())
+    };
+    let (w80, lat80) = run(0.80);
+    let (w60, lat60) = run(0.60);
+    assert!(w80 < w60, "hpa-80 {w80} should allocate less than hpa-60 {w60}");
+    assert!(
+        lat80 > 5.0 * lat60,
+        "hpa-80 latency {lat80} should collapse vs hpa-60 {lat60}"
+    );
+}
+
+#[test]
+fn tsdb_series_are_consistent_during_run() {
+    let job = JobProfile::ysb();
+    let mut sim = Simulation::new(SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(ConstantWorkload {
+            rate: 20_000.0,
+            duration: 1_200,
+        }),
+    ));
+    let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
+    drive(&mut sim, &mut d, 1_200);
+    let db = sim.tsdb();
+    // Workload recorded every tick.
+    assert_eq!(db.len(&SeriesId::global("workload_rate")), 1_200);
+    assert_eq!(db.len(&SeriesId::global("consumer_lag")), 1_200);
+    assert_eq!(db.len(&SeriesId::global("parallelism")), 1_200);
+    // Throughput only while serving — rescales cause gaps.
+    let tput = db.len(&SeriesId::global("throughput"));
+    assert!(tput <= 1_200);
+    let down: u64 = sim
+        .rescale_log
+        .iter()
+        .map(|e| e.downtime_secs.ceil() as u64)
+        .sum();
+    assert!(tput as u64 >= 1_200 - down - 60, "tput {tput}, down {down}");
+}

@@ -1,0 +1,347 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The proptest crate is unavailable in this offline environment, so the
+//! generators are built on the crate's own deterministic PRNG: each
+//! property runs against a few hundred random cases with a fixed seed
+//! sweep — failures print the offending case parameters.
+
+use daedalus::autoscaler::daedalus::analyze::CapacityEstimates;
+use daedalus::autoscaler::daedalus::forecasting::ForecastResult;
+use daedalus::autoscaler::daedalus::knowledge::Knowledge;
+use daedalus::autoscaler::daedalus::monitor::MonitorData;
+use daedalus::autoscaler::daedalus::plan::plan_scale_out;
+use daedalus::autoscaler::DaedalusConfig;
+use daedalus::dsp::Partition;
+use daedalus::runtime::{native, ArtifactMeta, CapacityState};
+use daedalus::stats::{wape, Ecdf, Rng, Welford};
+
+fn caps(per_worker: f64, parallelism: usize) -> CapacityEstimates {
+    CapacityEstimates {
+        per_worker: vec![per_worker; parallelism],
+        current: per_worker * parallelism as f64,
+        parallelism,
+        avg_per_worker: per_worker,
+        seen: Default::default(),
+    }
+}
+
+fn monitor(avg: f64, lag: f64, parallelism: usize) -> MonitorData {
+    MonitorData {
+        now: 5_000,
+        workers: vec![],
+        history: vec![avg; 1800],
+        workload_avg: avg,
+        workload_max: avg,
+        consumer_lag: lag,
+        parallelism,
+    }
+}
+
+/// Property: Algorithm 1 always returns a scale-out in [1, max]; and when
+/// *some* scale-out both covers the workload and recovers in time, the
+/// chosen one covers the observed average workload.
+#[test]
+fn prop_plan_output_in_bounds_and_sufficient() {
+    let cfg = DaedalusConfig::default();
+    let k = Knowledge::new(&ArtifactMeta::default(), 30.0, 15.0);
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..500 {
+        let per_worker = rng.range(500.0, 10_000.0);
+        let max = 1 + rng.below(31) as usize;
+        let current = 1 + rng.below(max as u64) as usize;
+        let avg = rng.range(100.0, per_worker * max as f64 * 1.5);
+        let lag = if rng.f64() < 0.3 {
+            rng.range(0.0, 1e7)
+        } else {
+            0.0
+        };
+        let forecast = ForecastResult {
+            values: vec![avg; 900],
+            from_model: true,
+            prev_wape: None,
+        };
+        let d = monitor(avg, lag, current);
+        let decision = plan_scale_out(5_000, &caps(per_worker, current), &d, &forecast, &k, &cfg, max);
+        assert!(
+            decision.target >= 1 && decision.target <= max,
+            "case {case}: out of bounds {decision:?} (max {max})"
+        );
+        // If even max cannot cover the workload, the algorithm must return
+        // max (the fallback line of Algorithm 1).
+        if per_worker * max as f64 <= avg {
+            assert_eq!(decision.target, max, "case {case}");
+        }
+    }
+}
+
+/// Property: the plan is monotone in workload — more load never yields a
+/// smaller scale-out (all else equal, no lag, fresh knowledge).
+#[test]
+fn prop_plan_monotone_in_workload() {
+    let cfg = DaedalusConfig::default();
+    let k = Knowledge::new(&ArtifactMeta::default(), 30.0, 15.0);
+    let mut rng = Rng::new(0xB0B);
+    for case in 0..200 {
+        let per_worker = rng.range(1_000.0, 8_000.0);
+        let max = 12 + rng.below(7) as usize;
+        let current = 1 + rng.below(max as u64) as usize;
+        let lo = rng.range(500.0, per_worker * 6.0);
+        let hi = lo * rng.range(1.1, 2.0);
+        let plan_for = |w: f64| {
+            let forecast = ForecastResult {
+                values: vec![w; 900],
+                from_model: true,
+                prev_wape: None,
+            };
+            plan_scale_out(
+                5_000,
+                &caps(per_worker, current),
+                &monitor(w, 0.0, current),
+                &forecast,
+                &k,
+                &cfg,
+                max,
+            )
+            .target
+        };
+        let a = plan_for(lo);
+        let b = plan_for(hi);
+        assert!(
+            b >= a,
+            "case {case}: workload {lo}→{hi} but plan {a}→{b} (per_worker {per_worker}, current {current}, max {max})"
+        );
+    }
+}
+
+/// Property: partition offsets are conserved through arbitrary sequences
+/// of produce/consume/checkpoint/rewind.
+#[test]
+fn prop_partition_conservation() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let mut p = Partition::new();
+        for t in 0..400 {
+            match rng.below(10) {
+                0..=4 => p.produce(t as f64, rng.range(0.0, 5_000.0)),
+                5..=7 => {
+                    p.consume(rng.range(0.0, 6_000.0));
+                }
+                8 => p.checkpoint(),
+                _ => p.rewind(),
+            }
+            p.check_invariants();
+            assert!(p.committed <= p.consumed + 1e-6);
+            assert!(p.consumed <= p.produced + 1e-6);
+            assert!(p.lag() >= -1e-6);
+            assert!(p.backlog() >= -1e-6);
+        }
+    }
+}
+
+/// Property: FIFO — chunks come out of a partition in non-decreasing
+/// arrival-time order between rewinds.
+#[test]
+fn prop_partition_fifo_order() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0xF1F0);
+        let mut p = Partition::new();
+        let mut last_t = f64::MIN;
+        for t in 0..300 {
+            p.produce(t as f64, rng.range(1.0, 100.0));
+            for c in p.consume(rng.range(0.0, 120.0)) {
+                assert!(
+                    c.t >= last_t - 1e-9,
+                    "seed {seed}: out of order {} after {}",
+                    c.t,
+                    last_t
+                );
+                last_t = c.t;
+            }
+        }
+    }
+}
+
+/// Property: native capacity model — capacity prediction scales linearly
+/// with throughput scale and is invariant to observation order.
+#[test]
+fn prop_capacity_scale_invariance() {
+    let meta = ArtifactMeta::default();
+    let mut rng = Rng::new(42);
+    for case in 0..100 {
+        let b = meta.obs_block;
+        let mw = meta.max_workers;
+        let mut xs = vec![0.0f32; mw * b];
+        let mut ys = vec![0.0f32; mw * b];
+        let mask = vec![1.0f32; mw * b];
+        let slope = rng.range(1_000.0, 50_000.0);
+        for i in 0..mw * b {
+            let x = rng.range(0.1, 0.95);
+            xs[i] = x as f32;
+            ys[i] = (slope * x) as f32;
+        }
+        let tgt = vec![1.0f32; mw];
+        let state = CapacityState::zeros(mw);
+        let out1 = native::capacity_update(&meta, &state, &xs, &ys, &mask, &tgt).unwrap();
+        // Double the throughputs → double the capacity.
+        let ys2: Vec<f32> = ys.iter().map(|y| y * 2.0).collect();
+        let out2 = native::capacity_update(&meta, &state, &xs, &ys2, &mask, &tgt).unwrap();
+        for w in 0..mw {
+            let (a, b2) = (out1.capacities[w], out2.capacities[w]);
+            assert!(
+                (b2 - 2.0 * a).abs() <= 0.02 * (a.abs() * 2.0) + 1.0,
+                "case {case} worker {w}: {a} vs {b2}"
+            );
+        }
+    }
+}
+
+/// Property: the forecast of any bounded non-negative series stays inside
+/// the physical envelope [0, 8 × max(history)] and is always finite.
+#[test]
+fn prop_forecast_bounded_envelope() {
+    let meta = ArtifactMeta::default();
+    let mut rng = Rng::new(7);
+    for case in 0..60 {
+        let level = rng.range(10.0, 1e5);
+        let hist: Vec<f32> = (0..meta.window)
+            .map(|t| {
+                let base = level * (1.0 + 0.5 * (t as f64 / rng.range(50.0, 2_000.0)).sin());
+                (base + rng.normal() * level * 0.1).max(0.0) as f32
+            })
+            .collect();
+        let out = native::forecast(&meta, &hist).unwrap();
+        let hi = 8.0 * hist.iter().copied().fold(0.0f32, f32::max) as f64 + 1.0;
+        for (i, v) in out.forecast.iter().enumerate() {
+            assert!(v.is_finite(), "case {case} step {i}: not finite");
+            assert!(
+                (*v as f64) >= 0.0 && (*v as f64) <= hi,
+                "case {case} step {i}: {v} outside [0, {hi}]"
+            );
+        }
+    }
+}
+
+/// Property: engine-level conservation under random rescale/failure storms.
+/// At every checkpoint: produced = consumed + backlog (per partition, so in
+/// total), worker-seconds equals the integral of allocated workers, and all
+/// latency samples are non-negative and finite.
+#[test]
+fn prop_engine_conservation_under_random_rescales() {
+    use daedalus::dsp::{EngineProfile, SimConfig, Simulation};
+    use daedalus::jobs::JobProfile;
+    use daedalus::workload::SineWorkload;
+
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0xE46);
+        let failures = if seed % 2 == 0 { vec![700, 1_500] } else { vec![] };
+        let cfg = SimConfig {
+            profile: if seed % 3 == 0 {
+                EngineProfile::kstreams()
+            } else {
+                EngineProfile::flink()
+            },
+            job: JobProfile::wordcount(),
+            workload: Box::new(SineWorkload::paper_default(20_000.0, 2_400)),
+            partitions: 36,
+            initial_replicas: 1 + rng.below(12) as usize,
+            max_replicas: 12,
+            seed,
+            rate_noise: 0.02,
+            failures,
+        };
+        let mut sim = Simulation::new(cfg);
+        let mut alloc_integral = 0.0;
+        for t in 0..2_400 {
+            sim.step(t);
+            alloc_integral += sim
+                .tsdb()
+                .last_at(&daedalus::metrics::SeriesId::global("allocated_workers"), t)
+                .unwrap()
+                .1;
+            // Random rescale storm: ~1 request / 100 s (most are ignored
+            // mid-restart — also exercised).
+            if rng.below(100) == 0 {
+                sim.request_rescale(1 + rng.below(12) as usize);
+            }
+            if t % 240 == 0 {
+                sim.check_invariants();
+            }
+        }
+        sim.check_invariants();
+        assert!(
+            (sim.worker_seconds() - alloc_integral).abs() < 1e-6,
+            "seed {seed}: worker-seconds {} vs integral {alloc_integral}",
+            sim.worker_seconds()
+        );
+        assert!(sim.latencies().total_weight() > 0.0);
+    }
+}
+
+/// Property: Welford fold order-independence (statistics are permutation
+/// invariant up to floating-point tolerance).
+#[test]
+fn prop_welford_permutation_invariant() {
+    let mut rng = Rng::new(99);
+    for _ in 0..50 {
+        let n = 50 + rng.below(200) as usize;
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.range(0.0, 1.0), rng.range(0.0, 1e5)))
+            .collect();
+        let mut fwd = Welford::new();
+        for (x, y) in &pts {
+            fwd.push(*x, *y);
+        }
+        let mut rev = Welford::new();
+        for (x, y) in pts.iter().rev() {
+            rev.push(*x, *y);
+        }
+        assert!((fwd.mean_x - rev.mean_x).abs() < 1e-9);
+        assert!((fwd.cov() - rev.cov()).abs() < 1e-6 * fwd.cov().abs().max(1.0));
+        assert!((fwd.var_x() - rev.var_x()).abs() < 1e-9);
+    }
+}
+
+/// Property: ECDF quantiles are monotone in q and bounded by min/max.
+#[test]
+fn prop_ecdf_quantile_monotone() {
+    let mut rng = Rng::new(1234);
+    for _ in 0..50 {
+        let mut e = Ecdf::new();
+        let n = 1 + rng.below(500);
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for _ in 0..n {
+            let v = rng.range(0.0, 1e6);
+            let w = rng.range(0.01, 10.0);
+            lo = lo.min(v);
+            hi = hi.max(v);
+            e.push(v, w);
+        }
+        let mut prev = f64::MIN;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = e.quantile(q);
+            assert!(v >= prev - 1e-12, "quantile not monotone at q={q}");
+            assert!(v >= lo && v <= hi);
+            prev = v;
+        }
+    }
+}
+
+/// Property: WAPE is shift-sensitive but scale-invariant:
+/// wape(k·a, k·f) == wape(a, f) for k > 0.
+#[test]
+fn prop_wape_scale_invariant() {
+    let mut rng = Rng::new(555);
+    for _ in 0..100 {
+        let n = 1 + rng.below(100) as usize;
+        let a: Vec<f64> = (0..n).map(|_| rng.range(1.0, 1e5)).collect();
+        let f: Vec<f64> = (0..n).map(|_| rng.range(1.0, 1e5)).collect();
+        let k = rng.range(0.1, 100.0);
+        let ka: Vec<f64> = a.iter().map(|v| v * k).collect();
+        let kf: Vec<f64> = f.iter().map(|v| v * k).collect();
+        let w1 = wape(&a, &f).unwrap();
+        let w2 = wape(&ka, &kf).unwrap();
+        assert!((w1 - w2).abs() < 1e-9, "{w1} vs {w2}");
+    }
+}

@@ -1,0 +1,133 @@
+//! End-to-end runtime integration: load the AOT artifacts via PJRT, execute
+//! them, and verify against (a) the golden vectors produced by the python
+//! compile path and (b) the pure-Rust native mirror.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise).
+
+use daedalus::runtime::{native, ArtifactRuntime, CapacityState, ComputeBackend};
+use daedalus::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir.to_string_lossy().into_owned())
+    } else {
+        eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn load_golden(dir: &str, name: &str) -> Json {
+    let path = std::path::Path::new(dir).join("golden").join(name);
+    Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap()
+}
+
+fn max_abs_rel_err(got: &[f32], want: &[f32]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| ((g - w).abs() as f64) / (w.abs() as f64 + 1.0))
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn capacity_artifact_matches_python_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ArtifactRuntime::load(&dir).unwrap();
+    let g = load_golden(&dir, "capacity.json");
+    let mw = rt.meta.max_workers;
+
+    let state =
+        CapacityState::from_vec(g.get("state").unwrap().as_f32_vec().unwrap(), mw).unwrap();
+    let xs = g.get("xs").unwrap().as_f32_vec().unwrap();
+    let ys = g.get("ys").unwrap().as_f32_vec().unwrap();
+    let mask = g.get("mask").unwrap().as_f32_vec().unwrap();
+    let tgt = g.get("cpu_target").unwrap().as_f32_vec().unwrap();
+
+    let out = rt.capacity_update(&state, &xs, &ys, &mask, &tgt).unwrap();
+
+    let expect_state = g.get("expect_state").unwrap().as_f32_vec().unwrap();
+    let expect_caps = g.get("expect_caps").unwrap().as_f32_vec().unwrap();
+    let state_err = max_abs_rel_err(out.state.as_slice(), &expect_state);
+    let caps_err = max_abs_rel_err(&out.capacities, &expect_caps);
+    assert!(state_err < 1e-4, "state err {state_err}");
+    assert!(caps_err < 1e-4, "caps err {caps_err}");
+}
+
+#[test]
+fn forecast_artifact_matches_python_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ArtifactRuntime::load(&dir).unwrap();
+    let g = load_golden(&dir, "forecast.json");
+
+    let history = g.get("history").unwrap().as_f32_vec().unwrap();
+    let out = rt.forecast(&history).unwrap();
+
+    let expect_fc = g.get("expect_forecast").unwrap().as_f32_vec().unwrap();
+    let expect_coeffs = g.get("expect_coeffs").unwrap().as_f32_vec().unwrap();
+    let fc_err = max_abs_rel_err(&out.forecast, &expect_fc);
+    let coeff_err = max_abs_rel_err(&out.coeffs, &expect_coeffs);
+    assert!(fc_err < 1e-3, "forecast err {fc_err}");
+    assert!(coeff_err < 1e-3, "coeff err {coeff_err}");
+    let expect_sigma = g.get("expect_resid_sigma").unwrap().as_f64().unwrap();
+    assert!(((out.resid_sigma as f64) - expect_sigma).abs() / (expect_sigma + 1e-9) < 1e-3);
+}
+
+#[test]
+fn artifact_and_native_backends_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ArtifactRuntime::load(&dir).unwrap();
+    let meta = rt.meta.clone();
+
+    // Capacity: synthetic warm-state update.
+    let mw = meta.max_workers;
+    let b = meta.obs_block;
+    let mut xs = vec![0.0f32; mw * b];
+    let mut ys = vec![0.0f32; mw * b];
+    let mask = vec![1.0f32; mw * b];
+    for w in 0..mw {
+        for i in 0..b {
+            let x = 0.3 + 0.6 * (i as f32 / b as f32);
+            xs[w * b + i] = x;
+            ys[w * b + i] = (45_000.0 + 1_000.0 * w as f32) * x + 13.0 * i as f32;
+        }
+    }
+    let tgt = vec![0.9f32; mw];
+    let state = CapacityState::zeros(mw);
+    let art = rt.capacity_update(&state, &xs, &ys, &mask, &tgt).unwrap();
+    let nat = native::capacity_update(&meta, &state, &xs, &ys, &mask, &tgt).unwrap();
+    let err = max_abs_rel_err(&art.capacities, &nat.capacities);
+    assert!(err < 1e-3, "capacity backend divergence {err}");
+
+    // Forecast: noisy sine history.
+    let hist: Vec<f32> = (0..meta.window)
+        .map(|t| {
+            let t = t as f64;
+            (30e3 + 10e3 * (2.0 * std::f64::consts::PI * t / 1500.0).sin()
+                + 100.0 * ((t * 2654435761.0).sin())) as f32
+        })
+        .collect();
+    let art_fc = rt.forecast(&hist).unwrap();
+    let nat_fc = native::forecast(&meta, &hist).unwrap();
+    let err = max_abs_rel_err(&art_fc.forecast, &nat_fc.forecast);
+    assert!(err < 5e-3, "forecast backend divergence {err}");
+}
+
+#[test]
+fn compute_backend_enum_round_trip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = ComputeBackend::artifact(&dir).unwrap();
+    let meta = backend.meta().clone();
+    let hist = vec![1_000.0f32; meta.window];
+    let out = backend.forecast(&hist).unwrap();
+    assert_eq!(out.forecast.len(), meta.horizon);
+    // A constant series forecasts (approximately) itself.
+    for v in &out.forecast {
+        assert!((v - 1_000.0).abs() < 2.0, "{v}");
+    }
+
+    let native = ComputeBackend::native();
+    let out2 = native.forecast(&hist).unwrap();
+    let err = max_abs_rel_err(&out.forecast, &out2.forecast);
+    assert!(err < 1e-3, "backend divergence {err}");
+}
