@@ -6,13 +6,12 @@
 
 use anyhow::{anyhow, bail};
 
-use crate::autoscaler::{DaedalusConfig, PhoebeConfig};
 use crate::clock::Timestamp;
 use crate::dsp::EngineProfile;
 use crate::experiments::harness::Approach;
 use crate::jobs::JobProfile;
 use crate::util::json::Json;
-use crate::workload::{CtrWorkload, SineWorkload, TrafficWorkload, Workload};
+use crate::workload::{CtrWorkload, ShapeKind, SineWorkload, TrafficWorkload, Workload};
 use crate::Result;
 
 /// Which engine profile to simulate.
@@ -35,6 +34,14 @@ impl EngineKind {
         match self {
             Self::Flink => EngineProfile::flink(),
             Self::KStreams => EngineProfile::kstreams(),
+        }
+    }
+
+    /// Stable name used in scenario ids and spec files.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Flink => "flink",
+            Self::KStreams => "kstreams",
         }
     }
 }
@@ -65,6 +72,24 @@ impl JobKind {
         }
     }
 
+    /// Stable name used in scenario ids and spec files.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::WordCount => "wordcount",
+            Self::Ysb => "ysb",
+            Self::Traffic => "traffic",
+        }
+    }
+
+    /// The paper's workload shape for this job (§4.2).
+    pub fn default_shape(self) -> ShapeKind {
+        match self {
+            Self::WordCount => ShapeKind::Sine,
+            Self::Ysb => ShapeKind::Ctr,
+            Self::Traffic => ShapeKind::Traffic,
+        }
+    }
+
     /// The paper's workload for this job (§4.2), scaled to `peak`.
     pub fn workload(self, peak: f64, duration: Timestamp, seed: u64) -> Box<dyn Workload> {
         match self {
@@ -91,6 +116,10 @@ pub struct ExperimentSpec {
     /// Optional recorded trace (CSV, one rate per line or `t,rate`): when
     /// set it replaces the job's synthetic workload, rescaled to `peak`.
     pub workload_file: Option<String>,
+    /// Optional named workload shape (see [`ShapeKind`]): when set it
+    /// replaces the job's paper-default shape. `workload_file` wins if both
+    /// are given.
+    pub workload_shape: Option<ShapeKind>,
     /// Approach descriptors: "daedalus", "hpa-80", "static-12", "phoebe".
     pub approaches: Vec<String>,
     pub recovery_target: f64,
@@ -109,6 +138,7 @@ impl Default for ExperimentSpec {
             partitions: 72,
             peak: None,
             workload_file: None,
+            workload_shape: None,
             approaches: vec![
                 "daedalus".into(),
                 "hpa-80".into(),
@@ -155,6 +185,9 @@ impl ExperimentSpec {
         if let Some(x) = v.opt("workload_file") {
             spec.workload_file = Some(x.as_str()?.to_string());
         }
+        if let Some(x) = v.opt("workload_shape") {
+            spec.workload_shape = Some(ShapeKind::parse(x.as_str()?)?);
+        }
         if let Some(x) = v.opt("recovery_target") {
             spec.recovery_target = x.as_f64()?;
         }
@@ -192,38 +225,9 @@ impl ExperimentSpec {
         Ok(())
     }
 
-    /// Parse one approach descriptor string.
+    /// Parse one approach descriptor string (see [`Approach::parse`]).
     pub fn parse_approach(&self, s: &str) -> Result<Approach> {
-        if s == "daedalus" {
-            let mut cfg = DaedalusConfig::default();
-            cfg.recovery_target = self.recovery_target;
-            return Ok(Approach::Daedalus(cfg));
-        }
-        if s == "phoebe" {
-            let mut cfg = PhoebeConfig::default();
-            cfg.recovery_target = self.recovery_target;
-            let scaleouts: Vec<usize> = (1..=6)
-                .map(|i| (i * self.max_replicas).div_ceil(6))
-                .collect();
-            return Ok(Approach::Phoebe(cfg, scaleouts));
-        }
-        if s == "ds2" {
-            return Ok(Approach::Ds2);
-        }
-        if let Some(t) = s.strip_prefix("hpa-") {
-            let pct: f64 = t.parse().map_err(|_| anyhow!("bad HPA target {s:?}"))?;
-            if !(1.0..=100.0).contains(&pct) {
-                bail!("HPA target must be 1..=100, got {pct}");
-            }
-            return Ok(Approach::Hpa(pct / 100.0));
-        }
-        if let Some(n) = s.strip_prefix("static-") {
-            let n: usize = n.parse().map_err(|_| anyhow!("bad static size {s:?}"))?;
-            return Ok(Approach::Static(n));
-        }
-        Err(anyhow!(
-            "unknown approach {s:?} (daedalus|hpa-<pct>|static-<n>|phoebe|ds2)"
-        ))
+        Approach::parse(s, self.max_replicas, self.recovery_target)
     }
 
     /// Effective peak workload.
@@ -232,11 +236,15 @@ impl ExperimentSpec {
     }
 
     /// Build the workload for one repetition: the recorded trace when
-    /// `workload_file` is set, otherwise the job's synthetic default.
+    /// `workload_file` is set, else the named `workload_shape` when set,
+    /// otherwise the job's synthetic default.
     pub fn build_workload(&self, seed: u64) -> Result<Box<dyn Workload>> {
         if let Some(path) = &self.workload_file {
             let w = crate::workload::ReplayWorkload::from_csv(path)?.scaled_to_peak(self.peak());
             return Ok(Box::new(w));
+        }
+        if let Some(shape) = self.workload_shape {
+            return Ok(shape.build(self.peak(), self.duration, seed));
         }
         Ok(self.job.workload(self.peak(), self.duration, seed))
     }
@@ -306,6 +314,20 @@ mod tests {
         let w = spec.build_workload(1).unwrap();
         assert_eq!(w.duration(), spec.duration);
         assert!(w.peak() <= spec.peak() * 1.01);
+    }
+
+    #[test]
+    fn workload_shape_overrides_job_default() {
+        let spec = ExperimentSpec::from_json(
+            r#"{"workload_shape": "flash-crowd", "duration": 7200}"#,
+        )
+        .unwrap();
+        let w = spec.build_workload(1).unwrap();
+        assert_eq!(w.duration(), 7_200);
+        // The flash-crowd baseline sits far below the sine default's mean.
+        let early: f64 = (0..1_000).map(|t| w.rate(t)).sum::<f64>() / 1_000.0;
+        assert!(early < 0.4 * spec.peak(), "early {early}");
+        assert!(ExperimentSpec::from_json(r#"{"workload_shape": "bogus"}"#).is_err());
     }
 
     #[test]

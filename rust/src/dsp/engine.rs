@@ -414,6 +414,26 @@ impl Simulation {
         self.partitions.iter().map(|p| p.backlog()).sum()
     }
 
+    /// Total tuples produced into all partitions since the run started.
+    pub fn total_produced(&self) -> f64 {
+        self.partitions.iter().map(|p| p.produced).sum()
+    }
+
+    /// Total tuples consumed, net of exactly-once replay rewinds.
+    pub fn total_consumed(&self) -> f64 {
+        self.partitions.iter().map(|p| p.consumed).sum()
+    }
+
+    /// Total tuples covered by completed checkpoints.
+    pub fn total_committed(&self) -> f64 {
+        self.partitions.iter().map(|p| p.committed).sum()
+    }
+
+    /// Kafka-visible consumer lag (produced − committed) across partitions.
+    pub fn total_lag(&self) -> f64 {
+        self.partitions.iter().map(|p| p.lag()).sum()
+    }
+
     /// Run invariant checks over all partitions (debug/test aid).
     pub fn check_invariants(&self) {
         for p in &self.partitions {

@@ -5,6 +5,8 @@
 //! repeated with several seeds, latency samples are pooled, and resource
 //! usage is reported normalized against the static baseline.
 
+use anyhow::{anyhow, bail};
+
 use crate::autoscaler::{
     phoebe::profiler, Autoscaler, Daedalus, DaedalusConfig, Ds2, Ds2Config, Hpa, HpaConfig,
     Phoebe, PhoebeConfig, Static,
@@ -16,6 +18,8 @@ use crate::metrics::SeriesId;
 use crate::runtime::ComputeBackend;
 use crate::stats::Ecdf;
 use crate::workload::Workload;
+
+use super::scenarios::trace::RunTrace;
 
 /// Which autoscaling approach to deploy.
 #[derive(Clone)]
@@ -39,6 +43,46 @@ impl Approach {
             Approach::Ds2 => "ds2".into(),
         }
     }
+
+    /// Parse a descriptor string: `daedalus`, `hpa-<pct>`, `static-<n>`,
+    /// `phoebe`, `ds2`. The spec/scenario context supplies the bounds the
+    /// configurable approaches need.
+    pub fn parse(s: &str, max_replicas: usize, recovery_target: f64) -> crate::Result<Approach> {
+        if s == "daedalus" {
+            let cfg = DaedalusConfig {
+                recovery_target,
+                ..DaedalusConfig::default()
+            };
+            return Ok(Approach::Daedalus(cfg));
+        }
+        if s == "phoebe" {
+            let cfg = PhoebeConfig {
+                recovery_target,
+                ..PhoebeConfig::default()
+            };
+            let scaleouts: Vec<usize> = (1..=6)
+                .map(|i| (i * max_replicas).div_ceil(6))
+                .collect();
+            return Ok(Approach::Phoebe(cfg, scaleouts));
+        }
+        if s == "ds2" {
+            return Ok(Approach::Ds2);
+        }
+        if let Some(t) = s.strip_prefix("hpa-") {
+            let pct: f64 = t.parse().map_err(|_| anyhow!("bad HPA target {s:?}"))?;
+            if !(1.0..=100.0).contains(&pct) {
+                bail!("HPA target must be 1..=100, got {pct}");
+            }
+            return Ok(Approach::Hpa(pct / 100.0));
+        }
+        if let Some(n) = s.strip_prefix("static-") {
+            let n: usize = n.parse().map_err(|_| anyhow!("bad static size {s:?}"))?;
+            return Ok(Approach::Static(n));
+        }
+        Err(anyhow!(
+            "unknown approach {s:?} (daedalus|hpa-<pct>|static-<n>|phoebe|ds2)"
+        ))
+    }
 }
 
 /// One experiment: a job on an engine under a workload, with approaches.
@@ -55,6 +99,8 @@ pub struct Experiment {
     pub backend: ComputeBackend,
     /// Per-tick sampling stride for the time-series exports.
     pub sample_stride: u64,
+    /// Seconds at which worker failures are injected (sorted ascending).
+    pub failures: Vec<Timestamp>,
 }
 
 impl Experiment {
@@ -78,6 +124,7 @@ impl Experiment {
             approaches: vec![],
             backend,
             sample_stride: 30,
+            failures: vec![],
         }
     }
 
@@ -88,6 +135,11 @@ impl Experiment {
 
     pub fn with_seeds(mut self, seeds: Vec<u64>) -> Self {
         self.seeds = seeds;
+        self
+    }
+
+    pub fn with_failures(mut self, failures: Vec<Timestamp>) -> Self {
+        self.failures = failures;
         self
     }
 
@@ -158,6 +210,21 @@ impl Experiment {
         seed: u64,
         workload: Box<dyn Workload>,
     ) -> RunResult {
+        self.run_single_traced(approach, seed, workload, self.sample_stride)
+            .0
+    }
+
+    /// One approach, one seed, additionally recording a deterministic
+    /// per-tick trace of `(replicas, lag, p95 latency)` every
+    /// `trace_stride` seconds plus every rescale/failure event — the input
+    /// of the golden-trace digests (see [`super::scenarios::trace`]).
+    pub fn run_single_traced(
+        &self,
+        approach: &Approach,
+        seed: u64,
+        workload: Box<dyn Workload>,
+        trace_stride: u64,
+    ) -> (RunResult, RunTrace) {
         let (mut scaler, profiling_ws) = self.build_scaler(approach, seed);
         let cfg = SimConfig {
             profile: self.engine.clone(),
@@ -171,10 +238,14 @@ impl Experiment {
             max_replicas: self.max_replicas,
             seed,
             rate_noise: 0.02,
-            failures: vec![],
+            failures: self.failures.clone(),
         };
         let mut sim = Simulation::new(cfg);
         let mut parallelism_series = Vec::new();
+        let mut trace = RunTrace::new(&self.name, &approach.label(), seed);
+        let lag_id = SeriesId::global("consumer_lag");
+        let p95_id = SeriesId::global("latency_p95_ms");
+        let stride = trace_stride.max(1);
         for t in 0..self.duration {
             sim.step(t);
             if let Some(n) = scaler.decide(&sim.view()) {
@@ -186,12 +257,21 @@ impl Experiment {
             if t % self.sample_stride == 0 {
                 parallelism_series.push((t, sim.parallelism()));
             }
+            if t % stride == 0 {
+                let db = sim.tsdb();
+                let lag = db.last_at(&lag_id, t).map(|(_, v)| v).unwrap_or(0.0);
+                let p95 = db.last_at(&p95_id, t).map(|(_, v)| v).unwrap_or(0.0);
+                trace.record(t, sim.parallelism(), lag, p95);
+            }
+        }
+        for ev in &sim.rescale_log {
+            trace.record_rescale(ev);
         }
         let db = sim.tsdb();
         let lag_max = db
             .max_over(&SeriesId::global("consumer_lag"), 0, self.duration)
             .unwrap_or(0.0);
-        RunResult {
+        let result = RunResult {
             latencies: sim.latencies().clone(),
             avg_workers: sim.avg_workers(),
             worker_seconds: sim.worker_seconds(),
@@ -200,7 +280,8 @@ impl Experiment {
             parallelism_series,
             final_backlog: sim.total_backlog(),
             lag_max,
-        }
+        };
+        (result, trace)
     }
 }
 
@@ -318,6 +399,7 @@ mod tests {
             approaches: vec![Approach::Static(6), Approach::Hpa(0.8)],
             backend: ComputeBackend::native(),
             sample_stride: 60,
+            failures: vec![],
         };
         let res = exp.run(&|_seed| {
             Box::new(SineWorkload::paper_default(20_000.0, 1_200))

@@ -13,6 +13,10 @@
 //!   predicted-vs-actual recovery time.
 //! * [`ablation`] — one-mechanism-off variants of Daedalus quantifying each
 //!   design choice's contribution.
+//! * [`scenarios`] — the declarative scenario matrix (engines × jobs ×
+//!   workload shapes × failure schedules × seeds), the parallel sweep
+//!   runner, and the deterministic golden-trace recorder every later perf
+//!   or behavior change is regression-tested against.
 
 pub mod ablation;
 pub mod export;
@@ -22,6 +26,8 @@ pub mod harness;
 pub mod plot;
 pub mod report;
 pub mod rt_sweep;
+pub mod scenarios;
 pub mod validate;
 
 pub use harness::{Approach, ApproachResult, Experiment, ExperimentResult};
+pub use scenarios::{Scenario, ScenarioRegistry};

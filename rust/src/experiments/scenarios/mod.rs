@@ -1,0 +1,26 @@
+//! The scenario-matrix subsystem: declarative scenarios, a parallel sweep
+//! runner, and deterministic golden-trace recording.
+//!
+//! The paper evaluates autoscalers over a matrix of engines, jobs and
+//! workload traces (§4.4–4.6); related autoscaler work (Phoebe, Demeter)
+//! likewise judges policies across many workload shapes and QoS regimes.
+//! This module makes that matrix a first-class, named object:
+//!
+//! * [`registry`] — the declarative matrix (engines × jobs × workload
+//!   shapes × failure schedules × seeds), addressable by name.
+//! * [`sweep`] — a `std::thread::scope` work-stealing runner executing
+//!   independent runs in parallel across cores and pooling per-approach
+//!   QoS/resource summaries.
+//! * [`trace`] — the deterministic per-run trace recorder and its FNV-1a
+//!   digest, the anchor of the golden-trace regression suite (determinism
+//!   contract documented there).
+//!
+//! CLI: `daedalus sweep [--list | --scenarios a,b | all] …`.
+
+pub mod registry;
+pub mod sweep;
+pub mod trace;
+
+pub use registry::{FailurePlan, Scenario, ScenarioRegistry};
+pub use sweep::{run_sweep, run_unit, SweepOptions, SweepReport, SweepRunResult, SweepUnit};
+pub use trace::RunTrace;

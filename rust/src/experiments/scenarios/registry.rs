@@ -1,0 +1,289 @@
+//! The declarative scenario matrix: engines × jobs × workload shapes ×
+//! failure schedules × seeds, registered in one place and addressable by
+//! name.
+//!
+//! A [`Scenario`] is a complete, deterministic experiment description; the
+//! [`ScenarioRegistry`] holds the curated built-in matrix (the paper's six
+//! engine/job combinations on their §4.2 traces, plus the stress shapes
+//! and failure schedules this reproduction adds). `daedalus sweep --list`
+//! prints every name.
+
+use crate::clock::Timestamp;
+use crate::config::{EngineKind, JobKind};
+use crate::experiments::harness::{Approach, Experiment};
+use crate::runtime::ComputeBackend;
+use crate::workload::{ShapeKind, Workload};
+use crate::Result;
+
+use anyhow::anyhow;
+
+/// When (if ever) worker failures are injected into a scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailurePlan {
+    /// No failures — the paper's evaluation setting.
+    None,
+    /// A single worker failure at the midpoint of the run.
+    MidRun,
+    /// `n` failures spread evenly through the middle 80 % of the run.
+    Storm(usize),
+}
+
+impl FailurePlan {
+    /// Concrete sorted injection times for a run of `duration` seconds.
+    pub fn schedule(&self, duration: Timestamp) -> Vec<Timestamp> {
+        match *self {
+            FailurePlan::None => vec![],
+            FailurePlan::MidRun => vec![duration / 2],
+            FailurePlan::Storm(n) => {
+                let lo = duration / 10;
+                let span = duration - 2 * lo;
+                (1..=n as u64)
+                    .map(|i| lo + i * span / (n as u64 + 1))
+                    .collect()
+            }
+        }
+    }
+
+    /// Scenario-name suffix ("" when no failures).
+    fn suffix(&self) -> String {
+        match *self {
+            FailurePlan::None => String::new(),
+            FailurePlan::MidRun => "-failmid".into(),
+            FailurePlan::Storm(n) => format!("-failstorm{n}"),
+        }
+    }
+}
+
+/// One named cell of the scenario matrix.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// `"<engine>-<job>-<shape>[-fail…]"` — derived, stable, unique.
+    pub name: String,
+    pub engine: EngineKind,
+    pub job: JobKind,
+    pub shape: ShapeKind,
+    pub failures: FailurePlan,
+    pub duration: Timestamp,
+    pub seeds: Vec<u64>,
+    /// Approach descriptors (see [`Approach::parse`]).
+    pub approaches: Vec<String>,
+    pub initial_replicas: usize,
+    pub max_replicas: usize,
+    pub partitions: usize,
+    pub recovery_target: f64,
+}
+
+impl Scenario {
+    pub fn new(
+        engine: EngineKind,
+        job: JobKind,
+        shape: ShapeKind,
+        failures: FailurePlan,
+        duration: Timestamp,
+        seeds: Vec<u64>,
+    ) -> Self {
+        Self {
+            name: format!(
+                "{}-{}-{}{}",
+                engine.name(),
+                job.name(),
+                shape.name(),
+                failures.suffix()
+            ),
+            engine,
+            job,
+            shape,
+            failures,
+            duration,
+            seeds,
+            approaches: vec![
+                "daedalus".into(),
+                "hpa-80".into(),
+                "ds2".into(),
+                "static-12".into(),
+            ],
+            initial_replicas: 4,
+            max_replicas: 12,
+            partitions: 72,
+            recovery_target: 600.0,
+        }
+    }
+
+    /// The workload trace for one repetition (deterministic per seed,
+    /// scaled to the job's reference peak as in §4.2).
+    pub fn workload(&self, seed: u64) -> Box<dyn Workload> {
+        let peak = self.job.profile().reference_peak;
+        self.shape.build(peak, self.duration, seed)
+    }
+
+    /// The harness [`Experiment`] skeleton on the native backend (the
+    /// backend designed for massively parallel sweeps) — engine, job,
+    /// duration, replica bounds, failure schedule; no approaches attached.
+    pub fn base_experiment(&self) -> Experiment {
+        let mut exp = Experiment::paper(
+            &self.name,
+            self.engine.profile(),
+            self.job.profile(),
+            ComputeBackend::native(),
+            self.duration,
+        )
+        .with_seeds(self.seeds.clone())
+        .with_failures(self.failures.schedule(self.duration));
+        exp.initial_replicas = self.initial_replicas;
+        exp.max_replicas = self.max_replicas;
+        exp.partitions = self.partitions;
+        exp
+    }
+
+    /// Materialize as a complete [`Experiment`] with this scenario's
+    /// approach descriptors parsed and attached.
+    pub fn to_experiment(&self) -> Result<Experiment> {
+        let approaches = self
+            .approaches
+            .iter()
+            .map(|a| Approach::parse(a, self.max_replicas, self.recovery_target))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(self.base_experiment().with_approaches(approaches))
+    }
+}
+
+/// The named scenario matrix.
+#[derive(Debug, Clone)]
+pub struct ScenarioRegistry {
+    scenarios: Vec<Scenario>,
+}
+
+impl ScenarioRegistry {
+    /// The curated built-in matrix (14 scenarios): the six paper
+    /// engine × job cells on their default traces, the three stress shapes
+    /// on several cells, and two failure-injection schedules.
+    pub fn builtin(duration: Timestamp, seeds: &[u64]) -> Self {
+        use EngineKind::{Flink, KStreams};
+        use JobKind::{Traffic, WordCount, Ysb};
+        use ShapeKind::{DiurnalDrift, FlashCrowd, OutageBackfill};
+
+        let s = |engine, job: JobKind, shape, failures| {
+            Scenario::new(engine, job, shape, failures, duration, seeds.to_vec())
+        };
+        let paper = |engine, job: JobKind| {
+            s(engine, job, job.default_shape(), FailurePlan::None)
+        };
+        let scenarios = vec![
+            // The paper's six engine × job cells (§4.4–4.6).
+            paper(Flink, WordCount),
+            paper(Flink, Ysb),
+            paper(Flink, Traffic),
+            paper(KStreams, WordCount),
+            paper(KStreams, Ysb),
+            paper(KStreams, Traffic),
+            // Stress shapes.
+            s(Flink, WordCount, FlashCrowd, FailurePlan::None),
+            s(Flink, WordCount, DiurnalDrift, FailurePlan::None),
+            s(Flink, WordCount, OutageBackfill, FailurePlan::None),
+            s(KStreams, Ysb, FlashCrowd, FailurePlan::None),
+            s(KStreams, WordCount, DiurnalDrift, FailurePlan::None),
+            s(Flink, Ysb, OutageBackfill, FailurePlan::None),
+            // Failure injection (the paper's §4.8 future work).
+            s(Flink, Traffic, ShapeKind::Traffic, FailurePlan::MidRun),
+            s(Flink, WordCount, ShapeKind::Sine, FailurePlan::Storm(3)),
+        ];
+        Self { scenarios }
+    }
+
+    pub fn scenarios(&self) -> &[Scenario] {
+        &self.scenarios
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.scenarios.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    /// Resolve selection patterns: exact names, or `"all"` for everything.
+    /// Unknown names error with the list of available scenarios.
+    pub fn select(&self, patterns: &[&str]) -> Result<Vec<&Scenario>> {
+        let mut out = Vec::new();
+        for p in patterns {
+            if *p == "all" {
+                return Ok(self.scenarios.iter().collect());
+            }
+            match self.get(p) {
+                Some(s) => out.push(s),
+                None => {
+                    return Err(anyhow!(
+                        "unknown scenario {p:?}; available: {}",
+                        self.names().join(", ")
+                    ))
+                }
+            }
+        }
+        if out.is_empty() {
+            return Err(anyhow!("no scenarios selected"));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_matrix_is_complete_and_uniquely_named() {
+        let reg = ScenarioRegistry::builtin(7_200, &[1, 2]);
+        assert!(reg.scenarios().len() >= 12, "{}", reg.scenarios().len());
+        let names = reg.names();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate scenario names");
+        // All three new stress shapes are addressable by name.
+        for n in [
+            "flink-wordcount-flash-crowd",
+            "flink-wordcount-diurnal-drift",
+            "flink-wordcount-outage-backfill",
+        ] {
+            assert!(reg.get(n).is_some(), "missing {n}");
+        }
+        // The paper cells are present.
+        assert!(reg.get("flink-wordcount-sine").is_some());
+        assert!(reg.get("kstreams-ysb-ctr").is_some());
+    }
+
+    #[test]
+    fn select_all_and_exact_and_unknown() {
+        let reg = ScenarioRegistry::builtin(7_200, &[1]);
+        assert_eq!(reg.select(&["all"]).unwrap().len(), reg.scenarios().len());
+        let two = reg
+            .select(&["flink-wordcount-sine", "kstreams-wordcount-sine"])
+            .unwrap();
+        assert_eq!(two.len(), 2);
+        let err = reg.select(&["nope"]).unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("flink-wordcount-sine"));
+    }
+
+    #[test]
+    fn failure_plans_schedule_inside_the_run() {
+        assert!(FailurePlan::None.schedule(7_200).is_empty());
+        assert_eq!(FailurePlan::MidRun.schedule(7_200), vec![3_600]);
+        let storm = FailurePlan::Storm(3).schedule(7_200);
+        assert_eq!(storm.len(), 3);
+        assert!(storm.windows(2).all(|w| w[0] < w[1]), "{storm:?}");
+        assert!(storm[0] > 720 && storm[2] < 6_480, "{storm:?}");
+    }
+
+    #[test]
+    fn scenario_builds_runnable_experiment() {
+        let reg = ScenarioRegistry::builtin(1_200, &[1]);
+        let sc = reg.get("flink-wordcount-sine-failstorm3").unwrap();
+        let exp = sc.to_experiment().unwrap();
+        assert_eq!(exp.duration, 1_200);
+        assert_eq!(exp.approaches.len(), 4);
+        assert_eq!(exp.failures.len(), 3);
+        let w = sc.workload(1);
+        assert_eq!(w.duration(), 1_200);
+    }
+}

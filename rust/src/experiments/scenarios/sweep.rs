@@ -1,0 +1,291 @@
+//! Multi-threaded scenario-sweep runner.
+//!
+//! Expands scenarios into independent `(scenario, approach, seed)` run
+//! units, executes them in parallel on `std::thread::scope` worker threads
+//! (work-stealing over an atomic cursor — the environment is offline, so
+//! no rayon), and aggregates per-approach QoS/resource summaries plus the
+//! deterministic trace digests.
+//!
+//! Determinism: every unit owns its whole world (simulation, autoscaler,
+//! workload, PRNG state are all derived from the unit's triple), results
+//! land in a pre-sized slot table indexed by unit order, and aggregation
+//! walks that table in order — so thread count and scheduling cannot change
+//! any output bit. `tests/scenario_sweep.rs` pins this with a
+//! threads=1 vs threads=4 digest comparison.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::anyhow;
+
+use crate::Result;
+
+use super::registry::Scenario;
+use super::trace::RunTrace;
+
+/// Sweep tuning.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Worker threads (0 = one per available core, capped by the unit
+    /// count).
+    pub threads: usize,
+    /// Trace sampling stride in simulated seconds.
+    pub trace_stride: u64,
+    /// When set, overrides every scenario's approach list.
+    pub approaches: Option<Vec<String>>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            trace_stride: 30,
+            approaches: None,
+        }
+    }
+}
+
+/// One `(scenario, approach, seed)` cell of the expanded matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepUnit {
+    pub scenario: String,
+    pub approach: String,
+    pub seed: u64,
+}
+
+/// Result of one unit: QoS/resource summary + deterministic trace.
+#[derive(Debug, Clone)]
+pub struct SweepRunResult {
+    pub unit: SweepUnit,
+    pub digest: String,
+    pub trace: RunTrace,
+    pub avg_latency_ms: f64,
+    pub p95_ms: f64,
+    pub avg_workers: f64,
+    pub worker_seconds: f64,
+    pub rescales: usize,
+    pub lag_max: f64,
+    pub final_backlog: f64,
+}
+
+/// Aggregated sweep output, in deterministic unit order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub runs: Vec<SweepRunResult>,
+}
+
+/// Execute one unit. Exposed for the golden-trace tests.
+pub fn run_unit(
+    scenario: &Scenario,
+    approach_desc: &str,
+    seed: u64,
+    trace_stride: u64,
+) -> Result<SweepRunResult> {
+    let approach = crate::experiments::harness::Approach::parse(
+        approach_desc,
+        scenario.max_replicas,
+        scenario.recovery_target,
+    )?;
+    let exp = scenario.base_experiment();
+    let (run, trace) =
+        exp.run_single_traced(&approach, seed, scenario.workload(seed), trace_stride);
+    let mut lat = run.latencies.clone();
+    Ok(SweepRunResult {
+        unit: SweepUnit {
+            scenario: scenario.name.clone(),
+            approach: approach.label(),
+            seed,
+        },
+        digest: trace.digest(),
+        trace,
+        avg_latency_ms: lat.mean(),
+        p95_ms: lat.quantile(0.95),
+        avg_workers: run.avg_workers,
+        worker_seconds: run.worker_seconds,
+        rescales: run.rescales,
+        lag_max: run.lag_max,
+        final_backlog: run.final_backlog,
+    })
+}
+
+/// Run the full matrix `scenarios × approaches × seeds` in parallel.
+pub fn run_sweep(scenarios: &[&Scenario], opts: &SweepOptions) -> Result<SweepReport> {
+    // Expand the deterministic unit list.
+    let mut units: Vec<(usize, String, u64)> = Vec::new();
+    for (si, sc) in scenarios.iter().enumerate() {
+        let approaches = opts.approaches.as_ref().unwrap_or(&sc.approaches);
+        for a in approaches {
+            for &seed in &sc.seeds {
+                units.push((si, a.clone(), seed));
+            }
+        }
+    }
+    if units.is_empty() {
+        return Err(anyhow!("sweep expanded to zero runs"));
+    }
+
+    let n_threads = if opts.threads > 0 {
+        opts.threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+    .min(units.len())
+    .max(1);
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<SweepRunResult>>>> =
+        (0..units.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= units.len() {
+                    break;
+                }
+                let (si, ref approach, seed) = units[i];
+                let res = run_unit(scenarios[si], approach, seed, opts.trace_stride);
+                *slots[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+
+    let mut runs = Vec::with_capacity(units.len());
+    for slot in slots {
+        match slot.into_inner().unwrap() {
+            Some(Ok(r)) => runs.push(r),
+            Some(Err(e)) => return Err(e),
+            None => return Err(anyhow!("sweep worker dropped a unit")),
+        }
+    }
+    Ok(SweepReport { runs })
+}
+
+impl SweepReport {
+    /// Per-`scenario × approach` summary pooled over seeds, in unit order.
+    pub fn table(&self) -> String {
+        let mut out = String::from(
+            "scenario                                 approach     seeds  avg lat ms     p95 ms  avg workers  rescales      lag max\n",
+        );
+        // Group consecutive runs of the same (scenario, approach).
+        let mut i = 0;
+        while i < self.runs.len() {
+            let key = (
+                self.runs[i].unit.scenario.clone(),
+                self.runs[i].unit.approach.clone(),
+            );
+            let mut j = i;
+            let (mut lat, mut p95, mut workers, mut rescales, mut lag) =
+                (0.0, 0.0, 0.0, 0.0, 0.0f64);
+            while j < self.runs.len()
+                && self.runs[j].unit.scenario == key.0
+                && self.runs[j].unit.approach == key.1
+            {
+                let r = &self.runs[j];
+                lat += r.avg_latency_ms;
+                p95 += r.p95_ms;
+                workers += r.avg_workers;
+                rescales += r.rescales as f64;
+                lag = lag.max(r.lag_max);
+                j += 1;
+            }
+            let n = (j - i) as f64;
+            out.push_str(&format!(
+                "{:<40} {:<12} {:>5} {:>11.0} {:>10.0} {:>12.2} {:>9.1} {:>12.0}\n",
+                key.0,
+                key.1,
+                j - i,
+                lat / n,
+                p95 / n,
+                workers / n,
+                rescales / n,
+                lag,
+            ));
+            i = j;
+        }
+        out
+    }
+
+    /// One `scenario/approach/seed digest` line per run (regression pins).
+    pub fn digest_lines(&self) -> String {
+        let mut out = String::from("trace digests:\n");
+        for r in &self.runs {
+            out.push_str(&format!(
+                "  {}/{}/seed-{} {}\n",
+                r.unit.scenario, r.unit.approach, r.unit.seed, r.digest
+            ));
+        }
+        out
+    }
+
+    /// Write every run's compact JSON trace under `dir`.
+    pub fn write_traces(&self, dir: &str) -> Result<std::path::PathBuf> {
+        let base = std::path::Path::new(dir).join("traces");
+        std::fs::create_dir_all(&base)?;
+        for r in &self.runs {
+            let file = base.join(format!(
+                "{}__{}__seed{}.json",
+                r.unit.scenario, r.unit.approach, r.unit.seed
+            ));
+            std::fs::write(file, r.trace.to_json())?;
+        }
+        Ok(base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scenarios::registry::ScenarioRegistry;
+
+    #[test]
+    fn single_unit_runs_and_traces() {
+        let reg = ScenarioRegistry::builtin(1_200, &[1]);
+        let sc = reg.get("flink-wordcount-sine").unwrap();
+        let r = run_unit(sc, "static-6", 1, 60).unwrap();
+        assert_eq!(r.unit.approach, "static-6");
+        assert_eq!(r.trace.points.len(), 20);
+        assert!(r.avg_workers > 5.0, "avg {}", r.avg_workers);
+        assert_eq!(r.digest, r.trace.digest());
+    }
+
+    #[test]
+    fn sweep_aggregates_all_units_in_order() {
+        let reg = ScenarioRegistry::builtin(1_200, &[1, 2]);
+        let sel = reg
+            .select(&["flink-wordcount-sine", "flink-wordcount-flash-crowd"])
+            .unwrap();
+        let opts = SweepOptions {
+            threads: 3,
+            trace_stride: 60,
+            approaches: Some(vec!["static-6".into(), "hpa-80".into()]),
+        };
+        let report = run_sweep(&sel, &opts).unwrap();
+        // 2 scenarios × 2 approaches × 2 seeds.
+        assert_eq!(report.runs.len(), 8);
+        // Unit order is scenario-major, then approach, then seed.
+        assert_eq!(report.runs[0].unit.scenario, "flink-wordcount-sine");
+        assert_eq!(report.runs[0].unit.approach, "static-6");
+        assert_eq!(report.runs[0].unit.seed, 1);
+        assert_eq!(report.runs[3].unit.approach, "hpa-80");
+        assert_eq!(report.runs[4].unit.scenario, "flink-wordcount-flash-crowd");
+        let table = report.table();
+        assert!(table.contains("flink-wordcount-sine"));
+        assert!(table.contains("hpa-80"));
+        let digests = report.digest_lines();
+        assert_eq!(digests.trim().lines().count(), 1 + 8);
+    }
+
+    #[test]
+    fn unknown_approach_surfaces_as_error() {
+        let reg = ScenarioRegistry::builtin(1_200, &[1]);
+        let sel = reg.select(&["flink-wordcount-sine"]).unwrap();
+        let opts = SweepOptions {
+            approaches: Some(vec!["wizardry".into()]),
+            ..Default::default()
+        };
+        assert!(run_sweep(&sel, &opts).is_err());
+    }
+}

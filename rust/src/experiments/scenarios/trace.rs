@@ -1,0 +1,249 @@
+//! Deterministic run traces and their digests — the substance behind the
+//! golden-trace regression suite.
+//!
+//! A [`RunTrace`] folds one run's per-tick observables — `(replicas,
+//! consumer lag, p95 latency)` sampled on a fixed stride, plus every
+//! rescale/failure event — into (a) a compact JSON document and (b) a
+//! stable 64-bit FNV-1a digest over quantized values.
+//!
+//! ## Determinism contract
+//!
+//! * Every stochastic input of a run is derived from the run's `(scenario,
+//!   approach, seed)` triple through the crate's own PRNG — two runs with
+//!   the same triple produce byte-identical traces regardless of thread
+//!   scheduling, because runs share no mutable state.
+//! * Recorded values are quantized to 1/1000 before hashing, so the digest
+//!   is insensitive to sub-milli float formatting concerns but pins every
+//!   observable change an autoscaler could cause.
+//! * Within one toolchain/platform the digest is bit-stable. Transcendental
+//!   functions (`sin`, `powf`) come from the platform libm, so goldens are
+//!   blessed per environment (see `tests/golden_traces.rs` for the update
+//!   path) while the in-process double-run check holds everywhere.
+
+use crate::clock::Timestamp;
+use crate::dsp::RescaleEvent;
+
+/// One sampled tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    pub t: Timestamp,
+    pub replicas: usize,
+    /// Consumer lag (tuples), quantized to 1/1000.
+    pub lag: f64,
+    /// p95 end-to-end latency (ms), quantized to 1/1000.
+    pub p95_ms: f64,
+}
+
+/// One rescale or failure restart.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub t: Timestamp,
+    pub from: usize,
+    pub to: usize,
+    /// Downtime (s), quantized to 1/1000.
+    pub downtime_secs: f64,
+    pub failure: bool,
+}
+
+/// The deterministic trace of one `(scenario, approach, seed)` run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunTrace {
+    pub scenario: String,
+    pub approach: String,
+    pub seed: u64,
+    pub points: Vec<TracePoint>,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Quantize to 1/1000 before hashing/serialization (non-finite → sentinel).
+fn q3(v: f64) -> f64 {
+    if !v.is_finite() {
+        return -1.0;
+    }
+    (v * 1000.0).round() / 1000.0
+}
+
+/// 64-bit FNV-1a.
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Self {
+        Self(0xCBF2_9CE4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn write_f64(&mut self, v: f64) {
+        // Quantized values hash via their bit pattern; q3 already collapsed
+        // representation noise and mapped non-finite values to a sentinel.
+        self.write(&q3(v).to_bits().to_le_bytes());
+    }
+}
+
+impl RunTrace {
+    pub fn new(scenario: &str, approach: &str, seed: u64) -> Self {
+        Self {
+            scenario: scenario.to_string(),
+            approach: approach.to_string(),
+            seed,
+            points: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Record one sampled tick (values are quantized on entry).
+    pub fn record(&mut self, t: Timestamp, replicas: usize, lag: f64, p95_ms: f64) {
+        self.points.push(TracePoint {
+            t,
+            replicas,
+            lag: q3(lag),
+            p95_ms: q3(p95_ms),
+        });
+    }
+
+    /// Record one rescale/failure event from the engine log.
+    pub fn record_rescale(&mut self, ev: &RescaleEvent) {
+        self.events.push(TraceEvent {
+            t: ev.t,
+            from: ev.from,
+            to: ev.to,
+            downtime_secs: q3(ev.downtime_secs),
+            failure: ev.failure,
+        });
+    }
+
+    /// Stable digest of the whole trace, as 16 lowercase hex chars.
+    pub fn digest(&self) -> String {
+        let mut h = Fnv64::new();
+        h.write(self.scenario.as_bytes());
+        h.write(&[0xFF]);
+        h.write(self.approach.as_bytes());
+        h.write(&[0xFF]);
+        h.write_u64(self.seed);
+        h.write_u64(self.points.len() as u64);
+        for p in &self.points {
+            h.write_u64(p.t);
+            h.write_u64(p.replicas as u64);
+            h.write_f64(p.lag);
+            h.write_f64(p.p95_ms);
+        }
+        h.write_u64(self.events.len() as u64);
+        for e in &self.events {
+            h.write_u64(e.t);
+            h.write_u64(e.from as u64);
+            h.write_u64(e.to as u64);
+            h.write_f64(e.downtime_secs);
+            h.write_u64(e.failure as u64);
+        }
+        format!("{:016x}", h.0)
+    }
+
+    /// Compact JSON document (stable field order, quantized values).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(64 + 32 * self.points.len());
+        out.push_str(&format!(
+            "{{\"scenario\":\"{}\",\"approach\":\"{}\",\"seed\":{},\"digest\":\"{}\",",
+            self.scenario,
+            self.approach,
+            self.seed,
+            self.digest()
+        ));
+        out.push_str("\"points\":[");
+        for (i, p) in self.points.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "[{},{},{},{}]",
+                p.t, p.replicas, p.lag, p.p95_ms
+            ));
+        }
+        out.push_str("],\"events\":[");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "[{},{},{},{},{}]",
+                e.t, e.from, e.to, e.downtime_secs, e.failure
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunTrace {
+        let mut t = RunTrace::new("scenario-x", "daedalus", 7);
+        t.record(0, 4, 0.0, 150.0);
+        t.record(30, 4, 1_234.567_891, 151.25);
+        t.record_rescale(&RescaleEvent {
+            t: 45,
+            from: 4,
+            to: 8,
+            downtime_secs: 31.0009,
+            failure: false,
+        });
+        t
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let a = sample();
+        let b = sample();
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.digest().len(), 16);
+
+        // Any observable change flips the digest.
+        let mut c = sample();
+        c.record(60, 5, 0.0, 150.0);
+        assert_ne!(a.digest(), c.digest());
+        let mut d = RunTrace::new("scenario-x", "daedalus", 8);
+        d.record(0, 4, 0.0, 150.0);
+        assert_ne!(a.digest()[..8], d.digest()[..8]);
+    }
+
+    #[test]
+    fn digest_ignores_sub_milli_noise() {
+        let mut a = RunTrace::new("s", "a", 1);
+        a.record(0, 4, 1_000.000_000_1, 10.0);
+        let mut b = RunTrace::new("s", "a", 1);
+        b.record(0, 4, 1_000.000_000_2, 10.0);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let t = sample();
+        let v = crate::util::json::Json::parse(&t.to_json()).unwrap();
+        assert_eq!(v.get("scenario").unwrap().as_str().unwrap(), "scenario-x");
+        assert_eq!(v.get("seed").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.get("digest").unwrap().as_str().unwrap(), t.digest());
+        assert_eq!(v.get("points").unwrap().as_arr().unwrap().len(), 2);
+        let ev = &v.get("events").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ev.as_arr().unwrap()[1].as_usize().unwrap(), 4);
+        assert_eq!(ev.as_arr().unwrap()[2].as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn non_finite_values_hash_to_sentinel() {
+        let mut a = RunTrace::new("s", "a", 1);
+        a.record(0, 1, f64::NAN, f64::INFINITY);
+        // Does not panic, digest is stable.
+        assert_eq!(a.digest(), a.digest());
+        assert_eq!(a.points[0].lag, -1.0);
+    }
+}

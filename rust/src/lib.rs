@@ -17,9 +17,24 @@
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
 //!   Gram-matrix and batched-Welford hot spots, lowered inside Layer 2.
 //!
-//! At run time only Rust executes: [`runtime`] loads the AOT artifacts via
-//! the PJRT CPU client and runs them on every analyze phase. Python is a
-//! build-time tool (`make artifacts`), never on the decision path.
+//! At run time only Rust executes: with the `pjrt` cargo feature, [`runtime`]
+//! loads the AOT artifacts via the PJRT CPU client and runs them on every
+//! analyze phase; the default offline build runs the bit-equivalent native
+//! mirror instead. Python is a build-time tool (`make artifacts`), never on
+//! the decision path.
+//!
+//! ## Scenario matrix & golden traces
+//!
+//! Beyond the paper's figures, [`experiments::scenarios`] makes evaluation
+//! scenarios first-class: a declarative matrix of engines × jobs × workload
+//! shapes ([`workload::ShapeKind`], including flash-crowd, diurnal-drift
+//! and outage-backfill stress shapes) × failure schedules × seeds,
+//! addressable by name, executed in parallel by a `std::thread::scope`
+//! sweep runner, and pinned by deterministic golden-trace digests. The
+//! determinism contract: every run is a pure function of its `(scenario,
+//! approach, seed)` triple — thread count and scheduling cannot change any
+//! recorded bit. `daedalus sweep` is the CLI entry point;
+//! `tests/golden_traces.rs` documents the bless/update workflow.
 
 pub mod autoscaler;
 pub mod clock;

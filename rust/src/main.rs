@@ -30,6 +30,10 @@ fn usage() -> ! {
                failure-injection evaluation (the paper's future work)\n\
            rt-sweep [--targets 120,600,...] [--duration S] [--backend ...]\n\
                quantify the recovery-target's influence (open in paper §4.8)\n\
+           sweep [--list] [--scenarios a,b|all] [--approaches x,y] [--duration S]\n\
+                 [--seeds a,b] [--threads N] [--stride S] [--out DIR]\n\
+               run the scenario matrix in parallel (native backend) and print\n\
+               pooled QoS/resource summaries plus golden-trace digests\n\
            selfcheck [--backend ...]\n\
                compile + execute both AOT artifacts once and print timings\n\
            live [--speed X] [--duration S] [--backend ...]\n\
@@ -53,7 +57,7 @@ fn parse_args(argv: &[String]) -> Args {
         let a = &argv[i];
         if let Some(name) = a.strip_prefix("--") {
             // Known boolean switches take no value.
-            if name == "quick" {
+            if name == "quick" || name == "list" {
                 switches.insert(name.to_string());
             } else if i + 1 < argv.len() {
                 flags.insert(name.to_string(), argv[i + 1].clone());
@@ -251,6 +255,72 @@ fn cmd_rt_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use daedalus::experiments::scenarios::{run_sweep, ScenarioRegistry, SweepOptions};
+
+    let duration = args
+        .flags
+        .get("duration")
+        .map(|d| d.parse().expect("bad --duration"))
+        .unwrap_or(7_200);
+    let seeds: Vec<u64> = args
+        .flags
+        .get("seeds")
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().parse().expect("bad --seeds"))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1]);
+    let registry = ScenarioRegistry::builtin(duration, &seeds);
+    if args.switches.contains("list") {
+        println!("built-in scenarios ({}):", registry.scenarios().len());
+        for name in registry.names() {
+            println!("  {name}");
+        }
+        return Ok(());
+    }
+    let selection = args
+        .flags
+        .get("scenarios")
+        .map(|s| s.split(',').map(str::trim).collect::<Vec<_>>())
+        .unwrap_or_else(|| vec!["all"]);
+    let scenarios = registry.select(&selection)?;
+    let mut opts = SweepOptions::default();
+    if let Some(t) = args.flags.get("threads") {
+        opts.threads = t.parse().expect("bad --threads");
+    }
+    if let Some(s) = args.flags.get("stride") {
+        opts.trace_stride = s.parse().expect("bad --stride");
+    }
+    if let Some(a) = args.flags.get("approaches") {
+        opts.approaches = Some(a.split(',').map(|x| x.trim().to_string()).collect());
+    }
+    let n_runs: usize = scenarios
+        .iter()
+        .map(|sc| {
+            opts.approaches
+                .as_ref()
+                .map_or(sc.approaches.len(), |a| a.len())
+                * sc.seeds.len()
+        })
+        .sum();
+    eprintln!(
+        "sweep: {} scenarios, {} runs, {} s each",
+        scenarios.len(),
+        n_runs,
+        duration
+    );
+    let report = run_sweep(&scenarios, &opts)?;
+    println!("{}", report.table());
+    println!("{}", report.digest_lines());
+    if let Some(out) = args.flags.get("out") {
+        let dir = report.write_traces(out)?;
+        println!("traces: {}", dir.display());
+    }
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let duration = args
         .flags
@@ -383,6 +453,7 @@ fn main() -> Result<()> {
         "ablation" => cmd_ablation(&args),
         "failures" => cmd_failures(&args),
         "rt-sweep" => cmd_rt_sweep(&args),
+        "sweep" => cmd_sweep(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "live" => cmd_live(&args),
         _ => usage(),

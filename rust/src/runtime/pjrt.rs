@@ -6,9 +6,13 @@
 //! graphs were lowered with `return_tuple=True`, so each execution returns a
 //! single tuple literal that we unpack.
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+use std::path::Path;
+use std::path::PathBuf;
 
-use anyhow::{anyhow, Context};
+use anyhow::anyhow;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use super::capacity::{CapacityOutput, CapacityState};
 use super::forecast::ForecastOutput;
@@ -71,6 +75,7 @@ impl ArtifactMeta {
 }
 
 /// Compiled artifacts + the PJRT client that owns them.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactRuntime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -80,6 +85,49 @@ pub struct ArtifactRuntime {
     pub dir: PathBuf,
 }
 
+/// Stub used when the crate is built without the `pjrt` feature (the
+/// offline default: the XLA bindings crate is not vendored). Keeps every
+/// call site — the CLI's `--backend artifact`, the runtime benches, the
+/// artifact integration tests — compiling; `load` always fails with a
+/// pointer at the feature flag, and the CLI falls back to the native
+/// backend, which mirrors both graphs bit-for-bit in pure Rust.
+#[cfg(not(feature = "pjrt"))]
+pub struct ArtifactRuntime {
+    pub meta: ArtifactMeta,
+    pub dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ArtifactRuntime {
+    /// Always fails: this build carries no PJRT client.
+    pub fn load(dir: &str) -> Result<Self> {
+        let _ = dir;
+        Err(anyhow!(
+            "artifact backend unavailable: built without the `pjrt` cargo \
+             feature (no XLA bindings in the offline build); use the native \
+             backend or rebuild with --features pjrt and the xla crate added"
+        ))
+    }
+
+    /// Unreachable in practice (`load` never succeeds); kept for API parity.
+    pub fn capacity_update(
+        &self,
+        _state: &CapacityState,
+        _xs: &[f32],
+        _ys: &[f32],
+        _mask: &[f32],
+        _cpu_target: &[f32],
+    ) -> Result<CapacityOutput> {
+        Err(anyhow!("artifact backend unavailable (built without `pjrt`)"))
+    }
+
+    /// Unreachable in practice (`load` never succeeds); kept for API parity.
+    pub fn forecast(&self, _history: &[f32]) -> Result<ForecastOutput> {
+        Err(anyhow!("artifact backend unavailable (built without `pjrt`)"))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl ArtifactRuntime {
     /// Load `meta.json`, `capacity.hlo.txt` and `forecast.hlo.txt` from
     /// `dir`, compiling both executables on a fresh CPU client.

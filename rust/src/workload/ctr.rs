@@ -7,7 +7,7 @@
 //! generator reproduces those features deterministically from a seed. The
 //! substitution is documented in DESIGN.md §2.
 
-use super::Workload;
+use super::{SmoothNoise, Workload};
 use crate::clock::Timestamp;
 use crate::stats::Rng;
 
@@ -16,25 +16,16 @@ use crate::stats::Rng;
 pub struct CtrWorkload {
     peak: f64,
     duration: Timestamp,
-    /// Smooth noise sampled every `NOISE_STEP` seconds, linearly interpolated.
-    noise: Vec<f64>,
+    /// Correlated wander, ±8 % of peak.
+    noise: SmoothNoise,
     /// Burst windows: (start, length_secs, relative_height).
     bursts: Vec<(Timestamp, Timestamp, f64)>,
 }
 
-const NOISE_STEP: usize = 60;
-
 impl CtrWorkload {
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xC7E0_11AD);
-        // Ornstein-Uhlenbeck-style correlated wander, ±8 % of peak.
-        let n = duration as usize / NOISE_STEP + 2;
-        let mut noise = Vec::with_capacity(n);
-        let mut x: f64 = 0.0;
-        for _ in 0..n {
-            x = 0.9 * x + 0.1 * rng.normal();
-            noise.push(x * 0.08);
-        }
+        let noise = SmoothNoise::generate(&mut rng, duration, 60, 0.9, 0.1, 0.08);
         // A handful of click bursts, 2–6 minutes, up to +25 % of peak.
         let n_bursts = 4 + rng.below(4);
         let bursts = (0..n_bursts)
@@ -62,19 +53,11 @@ impl CtrWorkload {
         let base = 0.22;
         base + morning + evening
     }
-
-    fn smooth_noise(&self, t: Timestamp) -> f64 {
-        let i = t as usize / NOISE_STEP;
-        let frac = (t as usize % NOISE_STEP) as f64 / NOISE_STEP as f64;
-        let a = self.noise[i.min(self.noise.len() - 1)];
-        let b = self.noise[(i + 1).min(self.noise.len() - 1)];
-        a + (b - a) * frac
-    }
 }
 
 impl Workload for CtrWorkload {
     fn rate(&self, t: Timestamp) -> f64 {
-        let mut level = self.diurnal(t) + self.smooth_noise(t);
+        let mut level = self.diurnal(t) + self.noise.at(t);
         for (start, len, height) in &self.bursts {
             if t >= *start && t < start + len {
                 // Triangular burst envelope.

@@ -1,0 +1,118 @@
+//! Diurnal workload with growth drift — two compressed "days" of the
+//! canonical day/night cycle whose level grows linearly over the run
+//! (an onboarding product, a spreading rollout). The repetition lets the
+//! subset-AR forecaster lock onto the cycle while the drift makes a purely
+//! stationary model systematically under-forecast — the §3.3 WAPE gate's
+//! job is exactly to catch that.
+//!
+//! Deterministic per seed: trough level, drift strength and the noise walk
+//! are drawn once at construction. The global maximum (end of the last
+//! day's peak) is normalized to `peak`.
+
+use super::{SmoothNoise, Workload};
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Diurnal cycle × linear growth drift + correlated noise.
+#[derive(Debug, Clone)]
+pub struct DiurnalDriftWorkload {
+    peak: f64,
+    duration: Timestamp,
+    /// Number of day cycles mapped onto the run.
+    days: f64,
+    /// Overnight trough as a fraction of the daily peak.
+    trough_frac: f64,
+    /// Total growth over the run (0.4 = +40 % by the end).
+    drift_frac: f64,
+    noise: SmoothNoise,
+}
+
+impl DiurnalDriftWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xD1D7_0D21);
+        let trough_frac = rng.range(0.15, 0.25);
+        let drift_frac = rng.range(0.30, 0.60);
+        let noise = SmoothNoise::generate(&mut rng, duration, 60, 0.9, 0.1, 0.04);
+        Self {
+            peak,
+            duration,
+            days: 2.0,
+            trough_frac,
+            drift_frac,
+            noise,
+        }
+    }
+}
+
+impl Workload for DiurnalDriftWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let x = t as f64 / self.duration as f64;
+        // Day curve in [0, 1]: trough at day boundaries, peak mid-day.
+        let day = (1.0 - (2.0 * std::f64::consts::PI * self.days * x).cos()) / 2.0;
+        let level = self.trough_frac + (1.0 - self.trough_frac) * day;
+        // Linear growth, normalized so the last day's peak (x = 0.75 for
+        // two days) lands on `peak`.
+        let growth = (1.0 + self.drift_frac * x) / (1.0 + 0.75 * self.drift_frac);
+        (self.peak * level * growth * (1.0 + self.noise.at(t))).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = DiurnalDriftWorkload::new(50_000.0, 21_600, 13);
+        let b = DiurnalDriftWorkload::new(50_000.0, 21_600, 13);
+        for t in (0..21_600).step_by(311) {
+            assert_eq!(a.rate(t), b.rate(t));
+        }
+        let c = DiurnalDriftWorkload::new(50_000.0, 21_600, 14);
+        assert_ne!(a.rate(10_000), c.rate(10_000));
+    }
+
+    #[test]
+    fn second_day_peak_exceeds_first() {
+        let w = DiurnalDriftWorkload::new(50_000.0, 21_600, 1);
+        // Day peaks at 1/4 and 3/4 of the run (2 days, cosine trough at 0).
+        let avg_around = |center: Timestamp| {
+            (center - 300..center + 300).map(|t| w.rate(t)).sum::<f64>() / 600.0
+        };
+        let p1 = avg_around(21_600 / 4);
+        let p2 = avg_around(3 * 21_600 / 4);
+        assert!(p2 > 1.1 * p1, "no drift: day1 {p1}, day2 {p2}");
+    }
+
+    #[test]
+    fn peak_normalized_to_target() {
+        let w = DiurnalDriftWorkload::new(50_000.0, 21_600, 5);
+        let peak = w.peak();
+        assert!(peak > 0.9 * 50_000.0, "peak {peak}");
+        assert!(peak < 1.2 * 50_000.0, "peak {peak}");
+    }
+
+    #[test]
+    fn troughs_are_deep() {
+        let w = DiurnalDriftWorkload::new(50_000.0, 21_600, 8);
+        // Mid-run trough (between the two days).
+        let trough: f64 =
+            (10_500..11_100).map(|t| w.rate(t)).sum::<f64>() / 600.0;
+        let p2: f64 =
+            (15_900..16_500).map(|t| w.rate(t)).sum::<f64>() / 600.0;
+        assert!(trough < 0.45 * p2, "trough {trough} vs peak {p2}");
+    }
+
+    #[test]
+    fn rates_finite_and_nonnegative() {
+        let w = DiurnalDriftWorkload::new(50_000.0, 21_600, 21);
+        for t in (0..21_600).step_by(67) {
+            let r = w.rate(t);
+            assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+}

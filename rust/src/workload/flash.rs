@@ -1,0 +1,141 @@
+//! Flash-crowd workload — a calm baseline interrupted by a viral event:
+//! the rate multiplies within minutes, holds a plateau, then decays with a
+//! long power-law tail (the canonical flash-crowd profile from web-traffic
+//! studies). The rise is much faster than the traffic trace's rush-hour
+//! spikes, so it stresses the reactive half of every autoscaler: by the
+//! time a forecast window contains the event, the event is already there.
+//!
+//! Deterministic per seed: the event's onset, rise time, plateau length and
+//! decay scale are drawn once at construction.
+
+use super::{SmoothNoise, Workload};
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Baseline + one seeded flash-crowd event + correlated noise.
+#[derive(Debug, Clone)]
+pub struct FlashCrowdWorkload {
+    peak: f64,
+    duration: Timestamp,
+    /// Seconds into the run at which the crowd arrives.
+    onset: f64,
+    /// Seconds from onset to full intensity.
+    rise_secs: f64,
+    /// Seconds the crowd holds at full intensity.
+    plateau_secs: f64,
+    /// Power-law decay time scale (seconds).
+    decay_scale: f64,
+    /// Baseline rate as a fraction of `peak`.
+    base_frac: f64,
+    noise: SmoothNoise,
+}
+
+impl FlashCrowdWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xF1A5_0C0D);
+        let onset = duration as f64 * rng.range(0.25, 0.45);
+        let rise_secs = rng.range(90.0, 180.0);
+        let plateau_secs = duration as f64 * rng.range(0.08, 0.15);
+        let decay_scale = duration as f64 * rng.range(0.04, 0.08);
+        let base_frac = rng.range(0.18, 0.25);
+        let noise = SmoothNoise::generate(&mut rng, duration, 30, 0.85, 0.15, 0.03);
+        Self {
+            peak,
+            duration,
+            onset,
+            rise_secs,
+            plateau_secs,
+            decay_scale,
+            base_frac,
+            noise,
+        }
+    }
+
+    /// Crowd intensity in [0, 1] at second `t`.
+    fn envelope(&self, t: f64) -> f64 {
+        if t < self.onset {
+            return 0.0;
+        }
+        let since = t - self.onset;
+        if since < self.rise_secs {
+            // Smoothstep rise: fast but C¹, so per-tick deltas stay sane.
+            let x = since / self.rise_secs;
+            return x * x * (3.0 - 2.0 * x);
+        }
+        let after_rise = since - self.rise_secs;
+        if after_rise < self.plateau_secs {
+            return 1.0;
+        }
+        // Power-law tail: (1 + t/τ)^(-1.5), the classic flash-crowd decay.
+        let tail = (after_rise - self.plateau_secs) / self.decay_scale;
+        (1.0 + tail).powf(-1.5)
+    }
+}
+
+impl Workload for FlashCrowdWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let level = self.base_frac + (1.0 - self.base_frac) * self.envelope(t as f64);
+        (self.peak * level * (1.0 + self.noise.at(t))).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = FlashCrowdWorkload::new(40_000.0, 21_600, 3);
+        let b = FlashCrowdWorkload::new(40_000.0, 21_600, 3);
+        for t in (0..21_600).step_by(173) {
+            assert_eq!(a.rate(t), b.rate(t));
+        }
+        let c = FlashCrowdWorkload::new(40_000.0, 21_600, 4);
+        assert_ne!(a.rate(9_000), c.rate(9_000));
+    }
+
+    #[test]
+    fn baseline_is_calm_and_event_hits_peak() {
+        let w = FlashCrowdWorkload::new(40_000.0, 21_600, 7);
+        // Before the earliest possible onset: near the baseline.
+        let early: f64 = (0..4_000).map(|t| w.rate(t)).sum::<f64>() / 4_000.0;
+        assert!(early < 0.35 * 40_000.0, "baseline too high: {early}");
+        // The event reaches (close to) the peak somewhere.
+        let max = w.peak();
+        assert!(max > 0.9 * 40_000.0, "event never peaked: {max}");
+        assert!(max < 1.15 * 40_000.0, "overshoot: {max}");
+    }
+
+    #[test]
+    fn rise_is_fast() {
+        let w = FlashCrowdWorkload::new(40_000.0, 21_600, 11);
+        let plateau_t = (w.onset + w.rise_secs + 10.0) as Timestamp;
+        let before = w.rate((w.onset - 600.0) as Timestamp);
+        let at = w.rate(plateau_t);
+        // 10 minutes before onset the rate is a small fraction of the
+        // plateau; minutes after onset it is the full crowd.
+        assert!(before < 0.35 * at, "rise not sharp: {before} vs {at}");
+    }
+
+    #[test]
+    fn decays_back_toward_baseline() {
+        let w = FlashCrowdWorkload::new(40_000.0, 21_600, 5);
+        let plateau_end = w.onset + w.rise_secs + w.plateau_secs;
+        let late = (plateau_end + 6.0 * w.decay_scale).min(21_500.0) as Timestamp;
+        let at_plateau = w.rate((plateau_end - 10.0) as Timestamp);
+        assert!(w.rate(late) < 0.55 * at_plateau);
+    }
+
+    #[test]
+    fn rates_finite_and_nonnegative() {
+        let w = FlashCrowdWorkload::new(40_000.0, 21_600, 9);
+        for t in (0..21_600).step_by(61) {
+            let r = w.rate(t);
+            assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+}

@@ -16,16 +16,135 @@
 //! approaches read the same Kafka topic.
 
 mod ctr;
+mod diurnal;
+mod flash;
+mod outage;
 mod shapes;
 mod sine;
 mod traffic;
 
 pub use ctr::CtrWorkload;
+pub use diurnal::DiurnalDriftWorkload;
+pub use flash::FlashCrowdWorkload;
+pub use outage::OutageBackfillWorkload;
 pub use shapes::{ConstantWorkload, RampWorkload, ReplayWorkload, StepWorkload};
 pub use sine::SineWorkload;
 pub use traffic::TrafficWorkload;
 
 use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Ornstein-Uhlenbeck-style correlated noise, sampled every `step` seconds
+/// and linearly interpolated — the wander component shared by every trace
+/// generator. Draws `duration/step + 2` normals from `rng` at construction.
+#[derive(Debug, Clone)]
+pub struct SmoothNoise {
+    samples: Vec<f64>,
+    step: usize,
+}
+
+impl SmoothNoise {
+    /// `x' = persistence·x + innovation·N(0,1)`, emitted as `x·scale`.
+    pub fn generate(
+        rng: &mut Rng,
+        duration: Timestamp,
+        step: usize,
+        persistence: f64,
+        innovation: f64,
+        scale: f64,
+    ) -> Self {
+        let n = duration as usize / step + 2;
+        let mut samples = Vec::with_capacity(n);
+        let mut x: f64 = 0.0;
+        for _ in 0..n {
+            x = persistence * x + innovation * rng.normal();
+            samples.push(x * scale);
+        }
+        Self { samples, step }
+    }
+
+    /// Interpolated noise value at second `t` (clamped at the trace end).
+    pub fn at(&self, t: Timestamp) -> f64 {
+        let i = t as usize / self.step;
+        let frac = (t as usize % self.step) as f64 / self.step as f64;
+        let a = self.samples[i.min(self.samples.len() - 1)];
+        let b = self.samples[(i + 1).min(self.samples.len() - 1)];
+        a + (b - a) * frac
+    }
+}
+
+/// The named workload shapes of the scenario matrix: the paper's three
+/// evaluation traces plus the stress shapes added for scenario diversity.
+/// Addressable by name from experiment specs (`"workload_shape"`), the
+/// scenario registry and the sweep CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShapeKind {
+    /// The paper's WordCount trace: sine wave, two periods (§4.2).
+    Sine,
+    /// The paper's YSB trace: diurnal ad traffic with bursts (§4.2).
+    Ctr,
+    /// The paper's traffic-monitoring trace: two sharp rush-hour spikes.
+    Traffic,
+    /// Viral event: minutes-scale rise to peak, power-law decay.
+    FlashCrowd,
+    /// Day/night cycle with a linear growth drift (non-stationary mean).
+    DiurnalDrift,
+    /// Upstream outage followed by a volume-conserving backfill surge.
+    OutageBackfill,
+}
+
+impl ShapeKind {
+    /// All shapes, in registry order.
+    pub fn all() -> [ShapeKind; 6] {
+        [
+            ShapeKind::Sine,
+            ShapeKind::Ctr,
+            ShapeKind::Traffic,
+            ShapeKind::FlashCrowd,
+            ShapeKind::DiurnalDrift,
+            ShapeKind::OutageBackfill,
+        ]
+    }
+
+    /// Stable name used in scenario ids and spec files.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShapeKind::Sine => "sine",
+            ShapeKind::Ctr => "ctr",
+            ShapeKind::Traffic => "traffic",
+            ShapeKind::FlashCrowd => "flash-crowd",
+            ShapeKind::DiurnalDrift => "diurnal-drift",
+            ShapeKind::OutageBackfill => "outage-backfill",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Self::all()
+            .into_iter()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown workload shape {s:?} (sine|ctr|traffic|\
+                     flash-crowd|diurnal-drift|outage-backfill)"
+                )
+            })
+    }
+
+    /// Build the shape, scaled to `peak`, deterministic in `seed` (the
+    /// sine shape ignores the seed — it is fully parametric).
+    pub fn build(self, peak: f64, duration: Timestamp, seed: u64) -> Box<dyn Workload> {
+        match self {
+            ShapeKind::Sine => Box::new(SineWorkload::paper_default(peak, duration)),
+            ShapeKind::Ctr => Box::new(CtrWorkload::new(peak, duration, seed)),
+            ShapeKind::Traffic => Box::new(TrafficWorkload::new(peak, duration, seed)),
+            ShapeKind::FlashCrowd => Box::new(FlashCrowdWorkload::new(peak, duration, seed)),
+            ShapeKind::DiurnalDrift => Box::new(DiurnalDriftWorkload::new(peak, duration, seed)),
+            ShapeKind::OutageBackfill => {
+                Box::new(OutageBackfillWorkload::new(peak, duration, seed))
+            }
+        }
+    }
+}
 
 /// A deterministic workload trace: tuples/second as a function of time.
 pub trait Workload: Send + Sync {
@@ -104,6 +223,34 @@ mod tests {
                 let r = w.rate(t);
                 assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
             }
+        }
+    }
+
+    #[test]
+    fn shape_kind_names_round_trip() {
+        for k in ShapeKind::all() {
+            assert_eq!(ShapeKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ShapeKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn every_shape_builds_sane_and_deterministic_traces() {
+        for k in ShapeKind::all() {
+            let a = k.build(30_000.0, 7_200, 9);
+            let b = k.build(30_000.0, 7_200, 9);
+            assert_eq!(a.duration(), 7_200, "{}", k.name());
+            for t in (0..7_200).step_by(37) {
+                let r = a.rate(t);
+                assert!(r.is_finite() && r >= 0.0, "{}: rate {r} at {t}", k.name());
+                assert_eq!(r, b.rate(t), "{}: not deterministic at {t}", k.name());
+            }
+            let peak = a.peak();
+            assert!(
+                peak > 5_000.0 && peak < 42_000.0,
+                "{}: peak {peak} out of range",
+                k.name()
+            );
         }
     }
 }

@@ -1,0 +1,162 @@
+//! Outage-then-surge backfill workload — an upstream producer outage
+//! followed by a catch-up replay: the rate collapses to a trickle for a few
+//! minutes, then the buffered volume arrives as a sustained surge near peak
+//! until the deficit is paid off, then the baseline resumes.
+//!
+//! This is the adversarial case for lag-based heuristics: during the outage
+//! every signal says "scale in", yet the backfill that follows needs peak
+//! capacity — Daedalus' consumer-lag scale-in protection (§3.2) and
+//! recovery-time constraint (§3.4) are both on the hook. The backfill
+//! conserves volume: the integral of the trace equals the no-outage
+//! baseline integral to within noise.
+//!
+//! Deterministic per seed: outage position, length and surge level are
+//! drawn once at construction; the surge length is derived from the
+//! deficit so conservation holds by construction.
+
+use super::{SmoothNoise, Workload};
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Baseline with one outage window and its backfill surge.
+#[derive(Debug, Clone)]
+pub struct OutageBackfillWorkload {
+    peak: f64,
+    duration: Timestamp,
+    /// Steady rate as a fraction of `peak`.
+    base_frac: f64,
+    /// Trickle that still arrives during the outage (fraction of `peak`).
+    residual_frac: f64,
+    /// Backfill rate as a fraction of `peak` (close to 1.0).
+    surge_frac: f64,
+    outage_start: f64,
+    outage_len: f64,
+    surge_len: f64,
+    noise: SmoothNoise,
+}
+
+impl OutageBackfillWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x0074_A6E5);
+        let d = duration as f64;
+        let base_frac = rng.range(0.50, 0.60);
+        let residual_frac = 0.02;
+        let surge_frac = rng.range(0.92, 1.0);
+        let start_frac = rng.range(0.35, 0.55);
+        // Outage length is minutes-scale in long runs but capped relative
+        // to short runs so the backfill always fits inside the trace.
+        let outage_len = rng.range(180.0, 420.0).min(d / 8.0);
+        // Backfill pays the deficit at (surge − base) extra throughput.
+        let deficit = (base_frac - residual_frac) * outage_len;
+        let surge_len = deficit / (surge_frac - base_frac);
+        // Pull the outage forward if needed so the surge ends by 0.9·d —
+        // the volume-conservation invariant must hold at every duration.
+        let latest_start = 0.9 * d - outage_len - surge_len;
+        let outage_start = (d * start_frac).min(latest_start).max(0.05 * d);
+        let noise = SmoothNoise::generate(&mut rng, duration, 30, 0.85, 0.15, 0.03);
+        Self {
+            peak,
+            duration,
+            base_frac,
+            residual_frac,
+            surge_frac,
+            outage_start,
+            outage_len,
+            surge_len,
+            noise,
+        }
+    }
+}
+
+impl Workload for OutageBackfillWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let tf = t as f64;
+        let outage_end = self.outage_start + self.outage_len;
+        let surge_end = outage_end + self.surge_len;
+        let frac = if tf >= self.outage_start && tf < outage_end {
+            self.residual_frac
+        } else if tf >= outage_end && tf < surge_end {
+            self.surge_frac
+        } else {
+            self.base_frac
+        };
+        (self.peak * frac * (1.0 + self.noise.at(t))).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = OutageBackfillWorkload::new(40_000.0, 21_600, 2);
+        let b = OutageBackfillWorkload::new(40_000.0, 21_600, 2);
+        for t in (0..21_600).step_by(97) {
+            assert_eq!(a.rate(t), b.rate(t));
+        }
+        let c = OutageBackfillWorkload::new(40_000.0, 21_600, 3);
+        let diffs = (0..21_600)
+            .step_by(600)
+            .filter(|t| (a.rate(*t) - c.rate(*t)).abs() > 1e-9)
+            .count();
+        assert!(diffs > 20);
+    }
+
+    #[test]
+    fn outage_collapses_then_surge_exceeds_baseline() {
+        let w = OutageBackfillWorkload::new(40_000.0, 21_600, 6);
+        let mid_outage = (w.outage_start + w.outage_len / 2.0) as Timestamp;
+        let mid_surge =
+            (w.outage_start + w.outage_len + w.surge_len / 2.0) as Timestamp;
+        let baseline = w.rate(100);
+        assert!(w.rate(mid_outage) < 0.1 * baseline, "no collapse");
+        assert!(w.rate(mid_surge) > 1.4 * baseline, "no surge");
+    }
+
+    #[test]
+    fn backfill_conserves_volume() {
+        let w = OutageBackfillWorkload::new(40_000.0, 21_600, 4);
+        let actual: f64 = (0..21_600).map(|t| w.rate(t)).sum();
+        let baseline = w.peak * w.base_frac * 21_600.0;
+        let rel = (actual - baseline).abs() / baseline;
+        assert!(rel < 0.05, "volume drift {rel}");
+    }
+
+    #[test]
+    fn surge_fits_inside_the_run_at_every_duration() {
+        for duration in [1_200u64, 2_400, 7_200, 21_600] {
+            for seed in 0..20 {
+                let w = OutageBackfillWorkload::new(40_000.0, duration, seed);
+                let surge_end = w.outage_start + w.outage_len + w.surge_len;
+                assert!(
+                    surge_end <= 0.9 * duration as f64 + 1e-9,
+                    "duration {duration} seed {seed}: surge ends at {surge_end}"
+                );
+                assert!(w.outage_start >= 0.05 * duration as f64 - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn backfill_conserves_volume_in_short_runs_too() {
+        let w = OutageBackfillWorkload::new(40_000.0, 1_200, 8);
+        let actual: f64 = (0..1_200).map(|t| w.rate(t)).sum();
+        let baseline = w.peak * w.base_frac * 1_200.0;
+        let rel = (actual - baseline).abs() / baseline;
+        assert!(rel < 0.05, "volume drift {rel}");
+    }
+
+    #[test]
+    fn rates_finite_and_nonnegative() {
+        let w = OutageBackfillWorkload::new(40_000.0, 21_600, 10);
+        for t in (0..21_600).step_by(61) {
+            let r = w.rate(t);
+            assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+}

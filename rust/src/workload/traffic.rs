@@ -6,7 +6,7 @@
 //! the workload rapidly rises and falls — the hardest case for autoscalers.
 //! Deterministic per seed; substitution documented in DESIGN.md §2.
 
-use super::Workload;
+use super::{SmoothNoise, Workload};
 use crate::clock::Timestamp;
 use crate::stats::Rng;
 
@@ -15,21 +15,13 @@ use crate::stats::Rng;
 pub struct TrafficWorkload {
     peak: f64,
     duration: Timestamp,
-    noise: Vec<f64>,
+    noise: SmoothNoise,
 }
-
-const NOISE_STEP: usize = 30;
 
 impl TrafficWorkload {
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0x7AFF_1C00);
-        let n = duration as usize / NOISE_STEP + 2;
-        let mut noise = Vec::with_capacity(n);
-        let mut x: f64 = 0.0;
-        for _ in 0..n {
-            x = 0.85 * x + 0.15 * rng.normal();
-            noise.push(x * 0.05);
-        }
+        let noise = SmoothNoise::generate(&mut rng, duration, 30, 0.85, 0.15, 0.05);
         Self {
             peak,
             duration,
@@ -50,12 +42,7 @@ impl Workload for TrafficWorkload {
         let base = 0.18;
         let morning = Self::spike(x, 0.30, 0.055) * 0.95;
         let evening = Self::spike(x, 0.70, 0.065) * 0.85;
-        let i = t as usize / NOISE_STEP;
-        let frac = (t as usize % NOISE_STEP) as f64 / NOISE_STEP as f64;
-        let a = self.noise[i.min(self.noise.len() - 1)];
-        let b = self.noise[(i + 1).min(self.noise.len() - 1)];
-        let noise = a + (b - a) * frac;
-        ((base + morning + evening + noise) / 1.13 * self.peak).max(0.0)
+        ((base + morning + evening + self.noise.at(t)) / 1.13 * self.peak).max(0.0)
     }
 
     fn duration(&self) -> Timestamp {

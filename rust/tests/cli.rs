@@ -97,6 +97,73 @@ fn run_with_bad_config_fails_cleanly() {
 }
 
 #[test]
+fn sweep_list_prints_scenario_matrix() {
+    let out = bin().args(["sweep", "--list"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("built-in scenarios"));
+    // Paper cells and every new stress shape are addressable by name.
+    for name in [
+        "flink-wordcount-sine",
+        "kstreams-ysb-ctr",
+        "flink-wordcount-flash-crowd",
+        "flink-wordcount-diurnal-drift",
+        "flink-wordcount-outage-backfill",
+        "flink-wordcount-sine-failstorm3",
+    ] {
+        assert!(text.contains(name), "missing {name} in:\n{text}");
+    }
+}
+
+#[test]
+fn sweep_runs_selected_scenarios_and_prints_digests() {
+    let dir = std::env::temp_dir().join("daedalus-cli-sweep-test");
+    let out = bin()
+        .args([
+            "sweep",
+            "--scenarios",
+            "flink-wordcount-sine,flink-wordcount-flash-crowd",
+            "--approaches",
+            "daedalus,static-6",
+            "--duration",
+            "1200",
+            "--threads",
+            "2",
+            "--stride",
+            "60",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("flink-wordcount-sine"));
+    assert!(text.contains("flink-wordcount-flash-crowd"));
+    assert!(text.contains("daedalus"));
+    assert!(text.contains("trace digests:"));
+    assert!(dir
+        .join("traces/flink-wordcount-sine__daedalus__seed1.json")
+        .exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_rejects_unknown_scenario() {
+    let out = bin()
+        .args(["sweep", "--scenarios", "no-such-scenario"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("no-such-scenario"), "{err}");
+}
+
+#[test]
 fn selfcheck_native_backend() {
     let out = bin()
         .args(["selfcheck", "--backend", "native"])

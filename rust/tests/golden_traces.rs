@@ -1,0 +1,105 @@
+//! Golden-trace regression suite: one canonical scenario per autoscaler,
+//! pinned by its deterministic trace digest.
+//!
+//! ## How the pinning works
+//!
+//! Each test runs its canonical `(scenario, approach, seed)` unit and
+//! compares the trace digest against `tests/golden/<approach>.digest`.
+//!
+//! * If the golden file exists, the digests must match — any mismatch means
+//!   autoscaler-observable behavior changed.
+//! * If it does not exist yet (fresh checkout/toolchain), the test blesses
+//!   the current digest: it writes the file (plus the full JSON trace next
+//!   to it for diffing) and passes with a note. Commit the files to pin.
+//!
+//! ## Updating after an intentional behavior change
+//!
+//! Re-bless with `UPDATE_GOLDEN=1 cargo test --test golden_traces`, then
+//! commit the updated `tests/golden/*` and describe the behavior change in
+//! the PR. Digests are bit-stable per platform/toolchain (transcendentals
+//! come from libm — see `experiments::scenarios::trace` for the full
+//! determinism contract).
+
+use std::path::PathBuf;
+
+use daedalus::experiments::scenarios::{run_unit, ScenarioRegistry};
+
+const GOLDEN_DURATION: u64 = 1_800;
+const GOLDEN_SEED: u64 = 1;
+const GOLDEN_STRIDE: u64 = 30;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Run the canonical unit for `approach` and check/bless its digest.
+fn check_golden(approach: &str) {
+    let reg = ScenarioRegistry::builtin(GOLDEN_DURATION, &[GOLDEN_SEED]);
+    let sc = reg.get("flink-wordcount-sine").unwrap();
+    let run = run_unit(sc, approach, GOLDEN_SEED, GOLDEN_STRIDE).unwrap();
+
+    // In-process determinism: the same unit re-run must digest identically
+    // even before any golden file exists.
+    let rerun = run_unit(sc, approach, GOLDEN_SEED, GOLDEN_STRIDE).unwrap();
+    assert_eq!(
+        run.digest, rerun.digest,
+        "{approach}: in-process rerun produced a different trace"
+    );
+
+    let dir = golden_dir();
+    let digest_path = dir.join(format!("{approach}.digest"));
+    let trace_path = dir.join(format!("{approach}.trace.json"));
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    match std::fs::read_to_string(&digest_path) {
+        Ok(golden) if !update => {
+            assert_eq!(
+                golden.trim(),
+                run.digest,
+                "{approach}: trace digest drifted from {digest_path:?}; if the \
+                 behavior change is intentional, re-bless with UPDATE_GOLDEN=1 \
+                 and commit (full trace at {trace_path:?})"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(&digest_path, format!("{}\n", run.digest)).unwrap();
+            std::fs::write(&trace_path, run.trace.to_json()).unwrap();
+            eprintln!(
+                "blessed golden trace for {approach}: {} -> {digest_path:?}",
+                run.digest
+            );
+        }
+    }
+
+    // Regardless of pinning, the canonical run must be structurally sane.
+    assert_eq!(
+        run.trace.points.len() as u64,
+        GOLDEN_DURATION / GOLDEN_STRIDE
+    );
+    assert!(run.worker_seconds > 0.0);
+}
+
+#[test]
+fn golden_trace_daedalus() {
+    check_golden("daedalus");
+}
+
+#[test]
+fn golden_trace_hpa() {
+    check_golden("hpa-80");
+}
+
+#[test]
+fn golden_trace_ds2() {
+    check_golden("ds2");
+}
+
+#[test]
+fn golden_trace_phoebe() {
+    check_golden("phoebe");
+}
+
+#[test]
+fn golden_trace_static() {
+    check_golden("static-6");
+}

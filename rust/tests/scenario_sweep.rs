@@ -1,0 +1,95 @@
+//! Scenario-matrix sweep integration tests: the ≥12-run parallel matrix
+//! and its determinism proof (identical trace digests across repeated runs
+//! and across thread counts).
+
+use daedalus::experiments::scenarios::{run_sweep, ScenarioRegistry, SweepOptions};
+
+fn matrix(reg: &ScenarioRegistry) -> Vec<&daedalus::experiments::Scenario> {
+    reg.select(&[
+        "flink-wordcount-sine",
+        "flink-wordcount-flash-crowd",
+        "kstreams-wordcount-diurnal-drift",
+    ])
+    .unwrap()
+}
+
+#[test]
+fn twelve_run_matrix_is_deterministic_across_runs_and_thread_counts() {
+    let reg = ScenarioRegistry::builtin(1_200, &[1, 2]);
+    let sel = matrix(&reg);
+    let opts = |threads| SweepOptions {
+        threads,
+        trace_stride: 60,
+        approaches: Some(vec!["daedalus".into(), "static-6".into()]),
+    };
+    // 3 scenarios × 2 approaches × 2 seeds = 12 parallel runs.
+    let parallel = run_sweep(&sel, &opts(4)).unwrap();
+    assert_eq!(parallel.runs.len(), 12);
+
+    // Same matrix again with the same seeds: identical digests, bit for bit.
+    let again = run_sweep(&sel, &opts(4)).unwrap();
+    // And once more on a single thread: scheduling cannot matter.
+    let serial = run_sweep(&sel, &opts(1)).unwrap();
+    for ((a, b), c) in parallel
+        .runs
+        .iter()
+        .zip(&again.runs)
+        .zip(&serial.runs)
+    {
+        assert_eq!(a.unit, b.unit);
+        assert_eq!(a.unit, c.unit);
+        assert_eq!(a.digest, b.digest, "rerun digest drift for {:?}", a.unit);
+        assert_eq!(a.digest, c.digest, "thread-count digest drift for {:?}", a.unit);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.worker_seconds, b.worker_seconds);
+    }
+
+    // Different seeds genuinely change the traces (the digest is not a
+    // constant function).
+    assert_ne!(parallel.runs[0].digest, parallel.runs[1].digest);
+}
+
+#[test]
+fn new_shapes_are_exercised_through_the_registry_by_name() {
+    let reg = ScenarioRegistry::builtin(1_200, &[1]);
+    for name in [
+        "flink-wordcount-flash-crowd",
+        "flink-wordcount-diurnal-drift",
+        "flink-wordcount-outage-backfill",
+    ] {
+        let sel = reg.select(&[name]).unwrap();
+        let opts = SweepOptions {
+            threads: 2,
+            trace_stride: 60,
+            approaches: Some(vec!["hpa-80".into()]),
+        };
+        let report = run_sweep(&sel, &opts).unwrap();
+        assert_eq!(report.runs.len(), 1);
+        let run = &report.runs[0];
+        assert_eq!(run.unit.scenario, name);
+        // The run processed real traffic and produced a full trace.
+        assert!(run.worker_seconds > 0.0);
+        assert_eq!(run.trace.points.len(), 20);
+        assert!(run.trace.points.iter().all(|p| p.replicas >= 1));
+    }
+}
+
+#[test]
+fn failure_scenarios_inject_failures_into_the_trace() {
+    let reg = ScenarioRegistry::builtin(2_400, &[1]);
+    let sel = reg.select(&["flink-wordcount-sine-failstorm3"]).unwrap();
+    let opts = SweepOptions {
+        threads: 1,
+        trace_stride: 60,
+        approaches: Some(vec!["static-8".into()]),
+    };
+    let report = run_sweep(&sel, &opts).unwrap();
+    let run = &report.runs[0];
+    let failures = run
+        .trace
+        .events
+        .iter()
+        .filter(|e| e.failure)
+        .count();
+    assert_eq!(failures, 3, "events: {:?}", run.trace.events);
+}
