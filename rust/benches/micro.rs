@@ -1,97 +1,26 @@
 //! Micro-benches for the hot paths identified in the perf pass
-//! (EXPERIMENTS.md §Perf): the simulator tick loop, TSDB queries, the
-//! MAPE-K analyze phase (native backend), Algorithm 1, and the forecaster.
+//! (EXPERIMENTS.md §Perf): the simulator tick loop (heap merge vs the
+//! retained naive reference), the ECDF histogram vs the exact reference,
+//! TSDB monitor queries, and the native Layer-2 mirrors.
+//!
+//! Thin driver over the shared registry in [`daedalus::perf`] — the
+//! `daedalus bench` subcommand runs the same registry and maintains the
+//! `BENCH_micro.json` perf trajectory at the repo root. Env knobs:
+//! `BENCH_SMOKE=1` (one iteration per bench), `BENCH_FILTER=<substr>`,
+//! `BENCH_JSON=<path>` (also emit the JSON trajectory).
 
-include!("bench_util.rs");
-
-use daedalus::autoscaler::{Autoscaler, Daedalus, DaedalusConfig};
-use daedalus::dsp::{EngineProfile, SimConfig, Simulation};
-use daedalus::jobs::JobProfile;
-use daedalus::metrics::{query, SeriesId, Tsdb};
-use daedalus::runtime::{native, ArtifactMeta, CapacityState, ComputeBackend};
-use daedalus::stats::Welford;
-use daedalus::workload::SineWorkload;
-
-fn sim_1h() -> Simulation {
-    let job = JobProfile::wordcount();
-    let peak = job.reference_peak;
-    Simulation::new(SimConfig::paper(
-        EngineProfile::flink(),
-        job,
-        Box::new(SineWorkload::paper_default(peak, 3_600)),
-    ))
-}
+use daedalus::perf::{self, BenchOpts};
 
 fn main() {
+    let opts = BenchOpts {
+        smoke: std::env::var("BENCH_SMOKE").is_ok(),
+        filter: std::env::var("BENCH_FILTER").ok(),
+    };
     println!("micro benches\n");
-
-    // Substrate: 1 hour of simulated time, 4 workers, no autoscaler.
-    bench("engine_tick_1h_plain", 3, || {
-        let mut sim = sim_1h();
-        for t in 0..3_600 {
-            sim.step(t);
-        }
-        sim.total_backlog()
-    });
-
-    // Full stack: same but with the Daedalus MAPE-K loop attached.
-    bench("engine_tick_1h_with_daedalus", 3, || {
-        let mut sim = sim_1h();
-        let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
-        for t in 0..3_600 {
-            sim.step(t);
-            if let Some(n) = d.decide(&sim.view()) {
-                sim.request_rescale(n);
-            }
-        }
-        sim.avg_workers()
-    });
-
-    // TSDB: the monitor-phase query mix over a fully populated store.
-    let mut db = Tsdb::new();
-    for t in 0..21_600u64 {
-        db.record_global("workload_rate", t, 20_000.0 + (t % 97) as f64);
-        db.record_global("consumer_lag", t, 1_000.0);
-        for w in 0..12 {
-            db.record_worker("worker_cpu", w, t, 0.7);
-            db.record_worker("worker_throughput", w, t, 4_000.0);
-        }
+    let results = perf::run_micro(&opts);
+    print!("{}", perf::table(&results));
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        perf::write_json(&path, &results, opts.smoke).expect("writing bench JSON");
+        println!("\nwrote {path}");
     }
-    bench("tsdb_monitor_query_mix_6h_store", 100, || {
-        let snaps = query::worker_snapshots(&db, 21_599, 60);
-        let window = query::workload_window(&db, 21_599, 1_800);
-        let lag = query::consumer_lag(&db, 21_599);
-        (snaps.len(), window.len(), lag)
-    });
-    bench("tsdb_avg_over_60s", 1_000, || {
-        db.avg_over(&SeriesId::global("workload_rate"), 21_540, 21_599)
-    });
-
-    // Stats primitives.
-    bench("welford_push_10k", 100, || {
-        let mut w = Welford::new();
-        for i in 0..10_000 {
-            w.push(i as f64 * 1e-4, i as f64);
-        }
-        w.slope()
-    });
-
-    // Native Layer-2 mirrors (the artifact path is benched in `runtime`).
-    let meta = ArtifactMeta::default();
-    let hist: Vec<f32> = (0..meta.window)
-        .map(|t| (30e3 + 10e3 * (t as f64 / 250.0).sin()) as f32)
-        .collect();
-    bench("native_forecast_1800w_900h", 10, || {
-        native::forecast(&meta, &hist).unwrap().forecast[0]
-    });
-    let state = CapacityState::zeros(meta.max_workers);
-    let xs = vec![0.6f32; meta.max_workers * meta.obs_block];
-    let ys = vec![3_000.0f32; meta.max_workers * meta.obs_block];
-    let mask = vec![1.0f32; meta.max_workers * meta.obs_block];
-    let tgt = vec![1.0f32; meta.max_workers];
-    bench("native_capacity_update_32w", 100, || {
-        native::capacity_update(&meta, &state, &xs, &ys, &mask, &tgt)
-            .unwrap()
-            .capacities[0]
-    });
 }

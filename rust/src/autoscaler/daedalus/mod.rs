@@ -104,6 +104,9 @@ pub struct Daedalus {
     analyzer: Analyzer,
     recovery_monitor: Option<RecoveryMonitor>,
     next_loop: u64,
+    /// Reusable monitor-phase buffer (worker snapshots + workload history
+    /// keep their capacity across iterations — no per-loop allocation).
+    monitor_buf: MonitorData,
 }
 
 impl Daedalus {
@@ -116,6 +119,7 @@ impl Daedalus {
             next_loop: cfg.warmup,
             cfg,
             backend,
+            monitor_buf: MonitorData::empty(),
         }
     }
 
@@ -127,8 +131,9 @@ impl Daedalus {
     /// One full MAPE-K iteration. Returns a desired parallelism if the plan
     /// phase decided to rescale.
     fn mape_iteration(&mut self, view: &SimView<'_>) -> Option<usize> {
-        // Monitor.
-        let data = MonitorData::collect(view, &self.cfg, self.backend.meta());
+        // Monitor (into the reusable buffer — allocation-free once warm).
+        MonitorData::collect_into(view, &self.cfg, self.backend.meta(), &mut self.monitor_buf);
+        let data = &self.monitor_buf;
         if data.workers.is_empty() {
             return None;
         }
@@ -137,14 +142,14 @@ impl Daedalus {
         let capacities = self.analyzer.update_capacity(
             &self.backend,
             &mut self.knowledge,
-            &data,
+            data,
             self.cfg.cpu_target,
             self.cfg.skew_aware,
         );
         let forecast = forecasting::forecast(
             &self.backend,
             &mut self.knowledge,
-            &data,
+            data,
             &self.cfg,
             view.now,
         );
@@ -153,7 +158,7 @@ impl Daedalus {
         let decision = plan::plan_scale_out(
             view.now,
             &capacities,
-            &data,
+            data,
             &forecast,
             &self.knowledge,
             &self.cfg,

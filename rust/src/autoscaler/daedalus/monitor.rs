@@ -25,7 +25,34 @@ pub struct MonitorData {
 }
 
 impl MonitorData {
+    /// An empty instance to use as a reusable collection buffer.
+    pub fn empty() -> Self {
+        Self {
+            now: 0,
+            workers: Vec::new(),
+            history: Vec::new(),
+            workload_avg: 0.0,
+            workload_max: 0.0,
+            consumer_lag: 0.0,
+            parallelism: 0,
+        }
+    }
+
     pub fn collect(view: &SimView<'_>, cfg: &DaedalusConfig, meta: &ArtifactMeta) -> Self {
+        let mut out = Self::empty();
+        Self::collect_into(view, cfg, meta, &mut out);
+        out
+    }
+
+    /// Collect into a reusable buffer: the `workers` / `history` vectors
+    /// keep their capacity across MAPE-K iterations, so the steady-state
+    /// monitor phase allocates nothing.
+    pub fn collect_into(
+        view: &SimView<'_>,
+        cfg: &DaedalusConfig,
+        meta: &ArtifactMeta,
+        out: &mut Self,
+    ) {
         let now = view.now;
         let from = now.saturating_sub(cfg.loop_interval.saturating_sub(1));
         let (workload_avg, workload_max) =
@@ -35,25 +62,17 @@ impl MonitorData {
         // caught up. The minimum over one checkpoint interval is the true
         // outstanding backlog.
         let lag_id = crate::metrics::SeriesId::global("consumer_lag");
-        let lag_floor = view
+        let consumer_lag = view
             .tsdb
-            .values_over(&lag_id, now.saturating_sub(15), now)
-            .into_iter()
-            .fold(f64::MAX, f64::min);
-        let consumer_lag = if lag_floor == f64::MAX {
-            query::consumer_lag(view.tsdb, now)
-        } else {
-            lag_floor
-        };
-        Self {
-            now,
-            workers: query::worker_snapshots(view.tsdb, now, cfg.cpu_window),
-            history: query::workload_window(view.tsdb, now, meta.window),
-            workload_avg,
-            workload_max,
-            consumer_lag,
-            parallelism: view.parallelism,
-        }
+            .min_over(&lag_id, now.saturating_sub(15), now)
+            .unwrap_or_else(|| query::consumer_lag(view.tsdb, now));
+        out.now = now;
+        query::worker_snapshots_into(view.tsdb, now, cfg.cpu_window, &mut out.workers);
+        query::workload_window_into(view.tsdb, now, meta.window, &mut out.history);
+        out.workload_avg = workload_avg;
+        out.workload_max = workload_max;
+        out.consumer_lag = consumer_lag;
+        out.parallelism = view.parallelism;
     }
 }
 

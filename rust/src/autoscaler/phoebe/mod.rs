@@ -61,6 +61,9 @@ pub struct Phoebe {
     backend: ComputeBackend,
     next_loop: u64,
     last_rescale: Option<u64>,
+    /// Reusable monitor buffers (allocation-free steady-state planning).
+    history: Vec<f64>,
+    hist32: Vec<f32>,
 }
 
 impl Phoebe {
@@ -71,6 +74,8 @@ impl Phoebe {
             models,
             backend,
             last_rescale: None,
+            history: Vec::new(),
+            hist32: Vec::new(),
         }
     }
 }
@@ -95,13 +100,18 @@ impl Autoscaler for Phoebe {
             }
         }
 
-        // Monitor + forecast (same TSF machinery class as Daedalus).
-        let meta = self.backend.meta();
-        let history = query::workload_window(view.tsdb, view.now, meta.window);
-        let hist32: Vec<f32> = history.iter().map(|v| *v as f32).collect();
-        let forecast = match self.backend.forecast(&hist32) {
+        // Monitor + forecast (same TSF machinery class as Daedalus). The
+        // history buffers are reused across iterations.
+        let (window, horizon) = {
+            let meta = self.backend.meta();
+            (meta.window, meta.horizon)
+        };
+        query::workload_window_into(view.tsdb, view.now, window, &mut self.history);
+        self.hist32.clear();
+        self.hist32.extend(self.history.iter().map(|v| *v as f32));
+        let forecast = match self.backend.forecast(&self.hist32) {
             Ok(f) => f.clamped(),
-            Err(_) => vec![*history.last().unwrap_or(&0.0); meta.horizon],
+            Err(_) => vec![*self.history.last().unwrap_or(&0.0); horizon],
         };
         let from = view.now.saturating_sub(self.cfg.loop_interval - 1);
         let (w_avg, _) = query::workload_stats(view.tsdb, from, view.now)?;

@@ -76,12 +76,11 @@ pub fn profile_job(
             .avg_over(&SeriesId::global("consumer_lag"), 650, 699)
             .unwrap_or(0.0);
         let mut recovery_secs = 500.0; // pessimistic default
-        for t in 701..1_200 {
-            if let Some((_, lag)) = db.last_at(&SeriesId::global("consumer_lag"), t) {
-                if lag <= pre_lag * 1.5 + 1_000.0 {
-                    recovery_secs = (t - 700) as f64;
-                    break;
-                }
+        // Allocation-free scan: the lag series has one sample per tick.
+        for (t, lag) in db.iter_over(&SeriesId::global("consumer_lag"), 701, 1_199) {
+            if lag <= pre_lag * 1.5 + 1_000.0 {
+                recovery_secs = (t - 700) as f64;
+                break;
             }
         }
         profiles.push(ScaleoutProfile {

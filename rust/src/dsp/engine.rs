@@ -6,6 +6,19 @@
 //! throughput, lag and latency are derived and recorded into the TSDB.
 //! Rescales and failures are stop-the-world restarts with exactly-once
 //! replay from the last completed checkpoint (paper §3.4, Fig 6).
+//!
+//! ## Hot path: the cross-partition FIFO merge
+//!
+//! `serve` must repeatedly find the globally-oldest head chunk among a
+//! worker's assigned partitions (`p % n == w`). The default
+//! [`MergePolicy::Heap`] keeps precomputed per-worker partition lists
+//! (rebuilt only when the serving parallelism changes) and a binary
+//! min-heap keyed on `(head_time, partition_idx)` — O(log k) per consumed
+//! chunk instead of the O(k) re-scan of [`MergePolicy::NaiveScan`]. The
+//! index tie-break reproduces the naive scan's first-lowest-index choice
+//! exactly, so both policies are bit-identical (pinned by
+//! `tests/invariants.rs`); the naive scan is retained as the reference and
+//! as the `engine_tick_1h_naive_merge` bench baseline.
 
 use crate::clock::Timestamp;
 use crate::jobs::JobProfile;
@@ -64,6 +77,74 @@ impl SimConfig {
     }
 }
 
+/// How `serve` selects the globally-oldest head chunk among a worker's
+/// partitions each consumption step (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MergePolicy {
+    /// Per-worker binary min-heap keyed on `(head_time, partition_idx)`.
+    #[default]
+    Heap,
+    /// Full re-scan of the worker's strided partitions per chunk — the
+    /// bit-exact reference implementation.
+    NaiveScan,
+}
+
+/// Min-heap ordering for `(head_time, partition_idx)` entries: earlier
+/// head time wins; the lower partition index breaks ties, reproducing the
+/// naive scan's first-lowest-index choice bit for bit.
+#[inline]
+fn heap_less(a: (f64, usize), b: (f64, usize)) -> bool {
+    match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.1 < b.1,
+    }
+}
+
+/// Push onto the scratch min-heap (sift-up).
+fn heap_push(heap: &mut Vec<(f64, usize)>, entry: (f64, usize)) {
+    heap.push(entry);
+    let mut i = heap.len() - 1;
+    while i > 0 {
+        let parent = (i - 1) / 2;
+        if heap_less(heap[i], heap[parent]) {
+            heap.swap(i, parent);
+            i = parent;
+        } else {
+            break;
+        }
+    }
+}
+
+/// Pop the minimum entry off the scratch min-heap (sift-down).
+fn heap_pop(heap: &mut Vec<(f64, usize)>) -> Option<(f64, usize)> {
+    let n = heap.len();
+    if n == 0 {
+        return None;
+    }
+    heap.swap(0, n - 1);
+    let top = heap.pop();
+    let n = heap.len();
+    let mut i = 0;
+    loop {
+        let l = 2 * i + 1;
+        if l >= n {
+            break;
+        }
+        let mut m = if heap_less(heap[l], heap[i]) { l } else { i };
+        let r = l + 1;
+        if r < n && heap_less(heap[r], heap[m]) {
+            m = r;
+        }
+        if m == i {
+            break;
+        }
+        heap.swap(i, m);
+        i = m;
+    }
+    top
+}
+
 /// A rescale/failure event for the experiment log.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RescaleEvent {
@@ -106,6 +187,14 @@ pub struct Simulation {
     handles: Handles,
     /// Reusable per-tick latency sample buffer (avoids per-tick allocs).
     scratch_lat: Vec<(f64, f64)>,
+    /// FIFO-merge implementation (default heap; naive kept as reference).
+    merge_policy: MergePolicy,
+    /// Precomputed per-worker partition lists (`assign[w]` = partitions
+    /// with `p % n == w`), rebuilt only when the serving count changes.
+    assign: Vec<Vec<usize>>,
+    assign_n: usize,
+    /// Reusable per-worker merge heap of `(head_time, partition_idx)`.
+    scratch_heap: Vec<(f64, usize)>,
 }
 
 /// Pre-resolved TSDB handles for the per-tick recording hot path.
@@ -174,7 +263,17 @@ impl Simulation {
             started: false,
             handles,
             scratch_lat: Vec::with_capacity(256),
+            merge_policy: MergePolicy::default(),
+            assign: Vec::new(),
+            assign_n: 0,
+            scratch_heap: Vec::new(),
         }
+    }
+
+    /// Select the FIFO-merge implementation (default [`MergePolicy::Heap`]).
+    /// The naive scan is retained for equivalence tests and benches.
+    pub fn set_merge_policy(&mut self, policy: MergePolicy) {
+        self.merge_policy = policy;
     }
 
     /// The trace length of the configured workload.
@@ -338,39 +437,93 @@ impl Simulation {
         self.worker_seconds += allocated;
     }
 
+    /// Rebuild the per-worker partition assignment lists for `n` workers,
+    /// reusing the inner allocations.
+    fn rebuild_assignments(&mut self, n: usize) {
+        self.assign.truncate(n);
+        while self.assign.len() < n {
+            self.assign.push(Vec::new());
+        }
+        for (w, list) in self.assign.iter_mut().enumerate() {
+            list.clear();
+            let mut pi = w;
+            while pi < self.partitions.len() {
+                list.push(pi);
+                pi += n;
+            }
+        }
+        self.assign_n = n;
+    }
+
     /// One serving tick: drain queues worker by worker.
     fn serve(&mut self, t: Timestamp, n: usize, rate: f64) {
         let service_ms = self.job.service_latency_ms(n, rate);
+        if self.merge_policy == MergePolicy::Heap && self.assign_n != n {
+            self.rebuild_assignments(n);
+        }
         let mut scratch = std::mem::take(&mut self.scratch_lat);
+        let mut heap = std::mem::take(&mut self.scratch_heap);
         scratch.clear();
         for w in 0..n {
             let capacity = self.workers[w].capacity(self.job.base_capacity);
             let mut budget = capacity;
-            // FIFO merge across this worker's partitions (p % n == w).
-            loop {
-                let mut best: Option<(usize, f64)> = None;
-                let mut idx = w;
-                while idx < self.partitions.len() {
-                    if let Some(ht) = self.partitions[idx].head_time() {
-                        if best.map_or(true, |(_, bt)| ht < bt) {
-                            best = Some((idx, ht));
+            // FIFO merge across this worker's partitions (p % n == w):
+            // consume the globally-oldest head chunk until the budget or
+            // the queues run out.
+            match self.merge_policy {
+                MergePolicy::Heap => {
+                    heap.clear();
+                    for &pi in &self.assign[w] {
+                        if let Some(ht) = self.partitions[pi].head_time() {
+                            heap_push(&mut heap, (ht, pi));
                         }
                     }
-                    idx += n;
+                    while let Some((_, pi)) = heap_pop(&mut heap) {
+                        let Some(chunk) = self.partitions[pi].consume_head(budget) else {
+                            break;
+                        };
+                        budget -= chunk.amount;
+                        // Mid-tick completion; latency = wait + service.
+                        let wait_ms = ((t as f64 + 0.5 - chunk.t) * 1_000.0).max(0.0);
+                        let lat = wait_ms + service_ms;
+                        self.latencies.push(lat, chunk.amount);
+                        scratch.push((lat, chunk.amount));
+                        if budget <= 1e-9 {
+                            break;
+                        }
+                        // The head chunk was fully drained (a partial take
+                        // exhausts the budget above): re-queue the
+                        // partition under its next head time, if any.
+                        if let Some(ht) = self.partitions[pi].head_time() {
+                            heap_push(&mut heap, (ht, pi));
+                        }
+                    }
                 }
-                let Some((pi, _)) = best else { break };
-                let Some(chunk) = self.partitions[pi].consume_head(budget) else {
-                    break;
-                };
-                budget -= chunk.amount;
-                // Mid-tick completion; latency = wait + service.
-                let wait_ms = ((t as f64 + 0.5 - chunk.t) * 1_000.0).max(0.0);
-                let lat = wait_ms + service_ms;
-                self.latencies.push(lat, chunk.amount);
-                scratch.push((lat, chunk.amount));
-                if budget <= 1e-9 {
-                    break;
-                }
+                MergePolicy::NaiveScan => loop {
+                    let mut best: Option<(usize, f64)> = None;
+                    let mut idx = w;
+                    while idx < self.partitions.len() {
+                        if let Some(ht) = self.partitions[idx].head_time() {
+                            if best.map_or(true, |(_, bt)| ht < bt) {
+                                best = Some((idx, ht));
+                            }
+                        }
+                        idx += n;
+                    }
+                    let Some((pi, _)) = best else { break };
+                    let Some(chunk) = self.partitions[pi].consume_head(budget) else {
+                        break;
+                    };
+                    budget -= chunk.amount;
+                    // Mid-tick completion; latency = wait + service.
+                    let wait_ms = ((t as f64 + 0.5 - chunk.t) * 1_000.0).max(0.0);
+                    let lat = wait_ms + service_ms;
+                    self.latencies.push(lat, chunk.amount);
+                    scratch.push((lat, chunk.amount));
+                    if budget <= 1e-9 {
+                        break;
+                    }
+                },
             }
             let processed = capacity - budget;
             let util = processed / capacity;
@@ -400,6 +553,7 @@ impl Simulation {
             self.tsdb.record_h(self.handles.latency_p95, t, p95);
         }
         self.scratch_lat = scratch;
+        self.scratch_heap = heap;
         let tput: f64 = self.workers[..n].iter().map(|w| w.last_throughput).sum();
         self.tsdb.record_h(self.handles.throughput, t, tput);
     }
@@ -412,6 +566,13 @@ impl Simulation {
     /// Total backlog across partitions (unconsumed tuples).
     pub fn total_backlog(&self) -> f64 {
         self.partitions.iter().map(|p| p.backlog()).sum()
+    }
+
+    /// Longest per-partition chunk queue — with same-timestamp coalescing
+    /// this is bounded by the active backlog's age in ticks (the
+    /// perf-smoke memory bound).
+    pub fn max_queue_len(&self) -> usize {
+        self.partitions.iter().map(|p| p.queue_len()).max().unwrap_or(0)
     }
 
     /// Total tuples produced into all partitions since the run started.
@@ -607,6 +768,35 @@ mod tests {
         assert_eq!(sim.parallelism(), 4);
         run(&mut sim, 900);
         assert!(sim.ready());
+    }
+
+    #[test]
+    fn merge_heap_pops_in_time_then_index_order() {
+        let mut h = Vec::new();
+        for e in [(5.0, 3), (1.0, 7), (1.0, 2), (3.0, 0), (0.5, 9)] {
+            heap_push(&mut h, e);
+        }
+        let mut got = Vec::new();
+        while let Some(e) = heap_pop(&mut h) {
+            got.push(e);
+        }
+        assert_eq!(got, vec![(0.5, 9), (1.0, 2), (1.0, 7), (3.0, 0), (5.0, 3)]);
+        assert_eq!(heap_pop(&mut h), None);
+    }
+
+    #[test]
+    fn heap_and_naive_merge_agree_bitwise() {
+        // Saturated 3-worker deployment: multi-chunk queues, chunk splits
+        // and cross-partition ties are all exercised.
+        let mut a = sim_with(18_000.0, 3, 9);
+        let mut b = sim_with(18_000.0, 3, 9);
+        b.set_merge_policy(MergePolicy::NaiveScan);
+        run(&mut a, 400);
+        run(&mut b, 400);
+        assert_eq!(a.latencies(), b.latencies());
+        assert_eq!(a.tsdb(), b.tsdb());
+        assert_eq!(a.total_consumed().to_bits(), b.total_consumed().to_bits());
+        assert_eq!(a.total_backlog().to_bits(), b.total_backlog().to_bits());
     }
 
     #[test]

@@ -41,11 +41,17 @@ impl Partition {
     }
 
     /// Generator writes `amount` tuples at time `t` (mid-tick timestamped).
+    /// Same-timestamp writes coalesce into the back chunk, so the queue
+    /// holds at most one chunk per distinct arrival time and its length
+    /// stays bounded by the active backlog's age in ticks.
     pub fn produce(&mut self, t: f64, amount: f64) {
         if amount <= 0.0 {
             return;
         }
-        self.queue.push_back(Chunk { t, amount });
+        match self.queue.back_mut() {
+            Some(last) if (last.t - t).abs() < 1e-9 => last.amount += amount,
+            _ => self.queue.push_back(Chunk { t, amount }),
+        }
         self.produced += amount;
     }
 
@@ -57,6 +63,12 @@ impl Partition {
     /// Unconsumed backlog in tuples.
     pub fn backlog(&self) -> f64 {
         self.produced - self.consumed
+    }
+
+    /// Unconsumed chunks queued (≤ distinct arrival ticks in the backlog —
+    /// the perf-smoke memory bound).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
     }
 
     /// Kafka-reported consumer lag under exactly-once (committed offsets).
@@ -128,11 +140,18 @@ impl Partition {
     }
 
     /// Restart from last checkpoint: uncommitted consumption is undone and
-    /// will be re-read (exactly-once replay).
+    /// will be re-read (exactly-once replay). A replayed chunk whose
+    /// arrival time matches the current queue front (the unconsumed
+    /// remainder of a split chunk) coalesces back into it, so repeated
+    /// restart storms cannot grow the queue beyond one chunk per distinct
+    /// arrival time.
     pub fn rewind(&mut self) {
         while let Some(chunk) = self.pending.pop_back() {
             self.consumed -= chunk.amount;
-            self.queue.push_front(chunk);
+            match self.queue.front_mut() {
+                Some(front) if (front.t - chunk.t).abs() < 1e-9 => front.amount += chunk.amount,
+                _ => self.queue.push_front(chunk),
+            }
         }
         debug_assert!((self.consumed - self.committed).abs() < 1e-6);
         self.consumed = self.committed;
@@ -148,6 +167,13 @@ impl Partition {
             "queue {queued} != backlog {}",
             self.backlog()
         );
+        // Coalescing invariant: strictly increasing arrival times, i.e. at
+        // most one queued chunk per distinct arrival time.
+        let mut prev = f64::NEG_INFINITY;
+        for c in &self.queue {
+            assert!(c.t > prev, "queue not coalesced: chunk at t={} follows t={prev}", c.t);
+            prev = c.t;
+        }
     }
 }
 
@@ -200,6 +226,41 @@ mod tests {
         let total: f64 = got.iter().map(|c| c.amount).sum();
         crate::assert_close!(total, 80.0, atol = 1e-9);
         p.check_invariants();
+    }
+
+    #[test]
+    fn same_timestamp_produce_coalesces() {
+        let mut p = Partition::new();
+        p.produce(0.5, 100.0);
+        p.produce(0.5, 50.0);
+        p.produce(1.5, 10.0);
+        assert_eq!(p.queue_len(), 2);
+        crate::assert_close!(p.backlog(), 160.0, atol = 1e-9);
+        let got = p.consume(120.0);
+        crate::assert_close!(got[0].amount, 120.0, atol = 1e-9);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn rewind_coalesces_split_chunks_back_together() {
+        let mut p = Partition::new();
+        p.produce(0.5, 100.0);
+        // Partially consume the head chunk, then crash: the replayed part
+        // must merge with the unconsumed remainder (same arrival time).
+        p.consume(60.0);
+        p.rewind();
+        assert_eq!(p.queue_len(), 1);
+        crate::assert_close!(p.backlog(), 100.0, atol = 1e-9);
+        p.check_invariants();
+        // Repeated consume/rewind storms never grow the queue.
+        p.produce(1.5, 80.0);
+        for _ in 0..10 {
+            p.consume(30.0);
+            p.rewind();
+            assert!(p.queue_len() <= 2, "queue grew to {}", p.queue_len());
+            p.check_invariants();
+        }
+        crate::assert_close!(p.backlog(), 180.0, atol = 1e-9);
     }
 
     #[test]

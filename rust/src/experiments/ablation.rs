@@ -83,7 +83,7 @@ pub fn run(backend: ComputeBackend, duration: Timestamp, seeds: Vec<u64>) -> Res
         .with_approaches(vec![Approach::Daedalus(cfg)]);
         let res = exp.run(&move |_| Box::new(SineWorkload::paper_default(peak, duration)));
         let a = &res.approaches[0];
-        let mut lat = a.latencies.clone();
+        let lat = &a.latencies;
         out.push_str(&format!(
             "{:<14} {:>10.0} {:>10.0} {:>12.2} {:>9.1} {:>10.0}\n",
             name,

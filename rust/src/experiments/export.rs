@@ -19,7 +19,7 @@ pub fn write_experiment(res: &ExperimentResult, base: &str) -> Result<PathBuf> {
         "approach,avg_latency_ms,p95_ms,p99_ms,max_ms,avg_workers,worker_seconds,profiling_worker_seconds,rescales\n",
     );
     for a in &res.approaches {
-        let mut lat = a.latencies.clone();
+        let lat = &a.latencies;
         summary.push_str(&format!(
             "{},{:.1},{:.1},{:.1},{:.1},{:.3},{:.0},{:.0},{:.1}\n",
             a.name,

@@ -90,7 +90,7 @@ pub fn run(
                 sim.request_rescale(n);
             }
         }
-        let mut lat = sim.latencies().clone();
+        let lat = sim.latencies();
         outcomes.push(FailureOutcome {
             name: scaler.name(),
             avg_latency_ms: lat.mean(),

@@ -13,7 +13,6 @@ pub fn summary_table(res: &ExperimentResult, static_name: &str) -> String {
     ));
     let base = res.approach(static_name).map(|a| a.worker_seconds);
     for a in &res.approaches {
-        let mut lat = a.latencies.clone();
         let vs_static = match base {
             Some(b) if b > 0.0 => format!("{:+.0}%", (a.worker_seconds / b - 1.0) * 100.0),
             _ => "-".into(),
@@ -22,8 +21,8 @@ pub fn summary_table(res: &ExperimentResult, static_name: &str) -> String {
             "{:<12} {:>12.0} {:>10.0} {:>10.0} {:>12.2} {:>10} {:>9.1}\n",
             a.name,
             a.avg_latency_ms(),
-            lat.quantile(0.95),
-            lat.quantile(0.99),
+            a.latencies.quantile(0.95),
+            a.latencies.quantile(0.99),
             a.avg_workers,
             vs_static,
             a.rescales,
@@ -70,15 +69,15 @@ pub fn ecdf_table(res: &ExperimentResult, points: usize) -> String {
         out.push_str(&format!(",{}", a.name));
     }
     out.push('\n');
-    let mut curves: Vec<Vec<(f64, f64)>> = res
+    let curves: Vec<Vec<(f64, f64)>> = res
         .approaches
         .iter()
-        .map(|a| a.latencies.clone().curve_logspace(lo, hi, points))
+        .map(|a| a.latencies.curve_logspace(lo, hi, points))
         .collect();
     for i in 0..points {
         let x = curves[0][i].0;
         out.push_str(&format!("{x:.1}"));
-        for c in curves.iter_mut() {
+        for c in &curves {
             out.push_str(&format!(",{:.4}", c[i].1));
         }
         out.push('\n');

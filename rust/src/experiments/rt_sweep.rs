@@ -71,7 +71,7 @@ pub fn run(
             .iter()
             .map(|r| r.recovery_secs)
             .fold(0.0, f64::max);
-        let mut lat = sim.latencies().clone();
+        let lat = sim.latencies();
         points.push(RtPoint {
             target_secs: target,
             avg_workers: sim.avg_workers(),

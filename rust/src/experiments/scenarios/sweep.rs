@@ -89,7 +89,7 @@ pub fn run_unit(
     let exp = scenario.base_experiment();
     let (run, trace) =
         exp.run_single_traced(&approach, seed, scenario.workload(seed), trace_stride);
-    let mut lat = run.latencies.clone();
+    let lat = &run.latencies;
     Ok(SweepRunResult {
         unit: SweepUnit {
             scenario: scenario.name.clone(),

@@ -43,6 +43,7 @@ pub mod dsp;
 pub mod experiments;
 pub mod jobs;
 pub mod metrics;
+pub mod perf;
 pub mod runtime;
 pub mod stats;
 pub mod util;

@@ -34,6 +34,9 @@ fn usage() -> ! {
                  [--seeds a,b] [--threads N] [--stride S] [--out DIR]\n\
                run the scenario matrix in parallel (native backend) and print\n\
                pooled QoS/resource summaries plus golden-trace digests\n\
+           bench [--out BENCH_micro.json] [--smoke] [--filter substr]\n\
+               run the micro-bench registry (before/after pairs vs the\n\
+               retained reference impls) and write the JSON perf trajectory\n\
            selfcheck [--backend ...]\n\
                compile + execute both AOT artifacts once and print timings\n\
            live [--speed X] [--duration S] [--backend ...]\n\
@@ -57,7 +60,7 @@ fn parse_args(argv: &[String]) -> Args {
         let a = &argv[i];
         if let Some(name) = a.strip_prefix("--") {
             // Known boolean switches take no value.
-            if name == "quick" || name == "list" {
+            if name == "quick" || name == "list" || name == "smoke" {
                 switches.insert(name.to_string());
             } else if i + 1 < argv.len() {
                 flags.insert(name.to_string(), argv[i + 1].clone());
@@ -394,6 +397,26 @@ fn cmd_live(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(args: &Args) -> Result<()> {
+    let opts = daedalus::perf::BenchOpts {
+        smoke: args.switches.contains("smoke"),
+        filter: args.flags.get("filter").cloned(),
+    };
+    if opts.smoke {
+        eprintln!("bench: smoke mode (1 warmup + 1 timed iteration per bench)");
+    }
+    let results = daedalus::perf::run_micro(&opts);
+    print!("{}", daedalus::perf::table(&results));
+    let out = args
+        .flags
+        .get("out")
+        .map(String::as_str)
+        .unwrap_or("BENCH_micro.json");
+    daedalus::perf::write_json(out, &results, opts.smoke)?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
 fn cmd_selfcheck(args: &Args) -> Result<()> {
     let backend = backend_from(args)?;
     let meta = backend.meta().clone();
@@ -454,6 +477,7 @@ fn main() -> Result<()> {
         "failures" => cmd_failures(&args),
         "rt-sweep" => cmd_rt_sweep(&args),
         "sweep" => cmd_sweep(&args),
+        "bench" => cmd_bench(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "live" => cmd_live(&args),
         _ => usage(),

@@ -19,8 +19,21 @@ pub struct WorkerSnapshot {
 /// `window` seconds — the paper monitors CPU as a 1-minute moving average
 /// to reduce noise (§3.6).
 pub fn worker_snapshots(db: &Tsdb, now: Timestamp, window: u64) -> Vec<WorkerSnapshot> {
-    let from = now.saturating_sub(window.saturating_sub(1));
     let mut out = Vec::new();
+    worker_snapshots_into(db, now, window, &mut out);
+    out
+}
+
+/// [`worker_snapshots`] into a caller-supplied buffer — the MAPE-K monitor
+/// reuses one across iterations to avoid per-loop allocation.
+pub fn worker_snapshots_into(
+    db: &Tsdb,
+    now: Timestamp,
+    window: u64,
+    out: &mut Vec<WorkerSnapshot>,
+) {
+    out.clear();
+    let from = now.saturating_sub(window.saturating_sub(1));
     for w in db.workers_for("worker_cpu") {
         let cpu_id = SeriesId::worker("worker_cpu", w);
         let tput_id = SeriesId::worker("worker_throughput", w);
@@ -36,36 +49,48 @@ pub fn worker_snapshots(db: &Tsdb, now: Timestamp, window: u64) -> Vec<WorkerSna
             throughput: tput,
         });
     }
-    out
 }
 
 /// Workload rate history over `[now − window + 1, now]`, padded on the left
 /// with the earliest sample so the result always has `window` entries — the
 /// fixed-shape input the forecast artifact expects.
 pub fn workload_window(db: &Tsdb, now: Timestamp, window: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    workload_window_into(db, now, window, &mut out);
+    out
+}
+
+/// [`workload_window`] into a caller-supplied buffer (cleared first). The
+/// left pad is written before the forward-fill sweep, so the whole window
+/// is built in O(window) — the old implementation `insert(0, …)`-ed the
+/// pad afterwards, which was O(window²) for young jobs.
+pub fn workload_window_into(db: &Tsdb, now: Timestamp, window: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(window);
     let id = SeriesId::global("workload_rate");
     let from = (now + 1).saturating_sub(window as u64);
-    let samples = db.range(&id, from, now);
-    let mut out = Vec::with_capacity(window);
-    if samples.is_empty() {
-        return vec![0.0; window];
-    }
+    let mut samples = db.iter_over(&id, from, now).peekable();
+    let Some(&(_, first)) = samples.peek() else {
+        out.resize(window, 0.0);
+        return;
+    };
+    // Left pad for jobs younger than `window` (the dense grid below covers
+    // `now − from + 1 = min(window, now + 1)` entries).
+    let grid_len = (now - from + 1) as usize;
+    out.resize(window - grid_len, first);
     // Forward-fill over any gaps onto a dense 1 Hz grid.
-    let mut si = 0;
-    let mut last = samples[0].1;
+    let mut last = first;
     for t in from..=now {
-        while si < samples.len() && samples[si].0 <= t {
-            last = samples[si].1;
-            si += 1;
+        while let Some(&(st, sv)) = samples.peek() {
+            if st > t {
+                break;
+            }
+            last = sv;
+            samples.next();
         }
         out.push(last);
     }
-    // Left-pad to the fixed window if the job is younger than `window`.
-    while out.len() < window {
-        out.insert(0, samples[0].1);
-    }
     debug_assert_eq!(out.len(), window);
-    out
 }
 
 /// Total consumer lag at `now` (latest sample).
@@ -126,6 +151,20 @@ mod tests {
         db.record_global("workload_rate", 4, 9.0);
         let w = workload_window(&db, 5, 6);
         assert_eq!(w, vec![5.0, 5.0, 5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn window_into_reuses_buffer_across_calls() {
+        let db = db_with(10);
+        let mut buf = vec![99.0; 3]; // stale content must be cleared
+        workload_window_into(&db, 9, 20, &mut buf);
+        assert_eq!(buf, workload_window(&db, 9, 20));
+        // A second call with a different window reshapes the same buffer.
+        workload_window_into(&db, 9, 4, &mut buf);
+        assert_eq!(buf, vec![6.0, 7.0, 8.0, 9.0]);
+        let mut snaps = Vec::new();
+        worker_snapshots_into(&db, 9, 5, &mut snaps);
+        assert_eq!(snaps, worker_snapshots(&db, 9, 5));
     }
 
     #[test]

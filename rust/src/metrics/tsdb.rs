@@ -5,6 +5,11 @@
 //! Storage is a flat `Vec<Series>` with a hash index; the hot path (the
 //! engine recording 2·workers + ~6 globals every simulated second) uses
 //! pre-resolved [`SeriesHandle`]s and never hashes (EXPERIMENTS.md §Perf).
+//!
+//! Range reads come in two flavours: the allocating `range`/`values_over`
+//! (convenience, tests) and the allocation-free [`Tsdb::iter_over`] /
+//! [`Tsdb::fold_over`] / scalar aggregates (`avg_over`, `max_over`,
+//! `min_over`) that the per-second monitor paths use.
 
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
@@ -67,7 +72,7 @@ type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FastHasher>>;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SeriesHandle(usize);
 
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 struct Series {
     times: Vec<Timestamp>,
     values: Vec<f64>,
@@ -93,7 +98,9 @@ impl Series {
 }
 
 /// The metric store. The engine appends; autoscalers read.
-#[derive(Debug, Default, Clone)]
+/// `PartialEq` compares full contents — used by the merge-equivalence
+/// property tests to pin bit-identical recordings.
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct Tsdb {
     series: Vec<Series>,
     index: FastMap<SeriesId, usize>,
@@ -174,6 +181,49 @@ impl Tsdb {
         }
     }
 
+    /// Allocation-free iterator over the samples in `[from, to]` —
+    /// the range-read primitive for per-second monitor paths.
+    pub fn iter_over<'a>(
+        &'a self,
+        id: &SeriesId,
+        from: Timestamp,
+        to: Timestamp,
+    ) -> impl Iterator<Item = (Timestamp, f64)> + 'a {
+        let (s, lo, hi) = match self.get(id) {
+            Some(s) => {
+                let (lo, hi) = s.range_idx(from, to);
+                (Some(s), lo, hi)
+            }
+            None => (None, 0, 0),
+        };
+        (lo..hi).map(move |i| {
+            let s = s.expect("non-empty index range implies a series");
+            (s.times[i], s.values[i])
+        })
+    }
+
+    /// Allocation-free left fold over the samples in `[from, to]`.
+    pub fn fold_over<A>(
+        &self,
+        id: &SeriesId,
+        from: Timestamp,
+        to: Timestamp,
+        init: A,
+        mut f: impl FnMut(A, Timestamp, f64) -> A,
+    ) -> A {
+        match self.get(id) {
+            None => init,
+            Some(s) => {
+                let (lo, hi) = s.range_idx(from, to);
+                let mut acc = init;
+                for i in lo..hi {
+                    acc = f(acc, s.times[i], s.values[i]);
+                }
+                acc
+            }
+        }
+    }
+
     /// `avg_over_time` over `[from, to]`; `None` if no samples.
     pub fn avg_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
         let s = self.get(id)?;
@@ -192,6 +242,16 @@ impl Tsdb {
             return None;
         }
         Some(s.values[lo..hi].iter().copied().fold(f64::MIN, f64::max))
+    }
+
+    /// `min_over_time` over `[from, to]`; `None` if no samples.
+    pub fn min_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
+        let s = self.get(id)?;
+        let (lo, hi) = s.range_idx(from, to);
+        if lo == hi {
+            return None;
+        }
+        Some(s.values[lo..hi].iter().copied().fold(f64::MAX, f64::min))
     }
 
     /// Number of samples in a series.
@@ -266,7 +326,32 @@ mod tests {
         let id = SeriesId::global("nope");
         assert!(db.range(&id, 0, 10).is_empty());
         assert!(db.avg_over(&id, 0, 10).is_none());
+        assert!(db.min_over(&id, 0, 10).is_none());
+        assert_eq!(db.iter_over(&id, 0, 10).count(), 0);
+        assert_eq!(db.fold_over(&id, 0, 10, 7usize, |a, _, _| a + 1), 7);
         assert_eq!(db.len(&id), 0);
+    }
+
+    #[test]
+    fn iter_and_fold_match_range() {
+        let db = sample_db();
+        let id = SeriesId::global("workload_rate");
+        let collected: Vec<(Timestamp, f64)> = db.iter_over(&id, 10, 14).collect();
+        assert_eq!(collected, db.range(&id, 10, 14));
+        let sum = db.fold_over(&id, 10, 14, 0.0, |a, _, v| a + v);
+        crate::assert_close!(sum, db.range(&id, 10, 14).iter().map(|(_, v)| v).sum::<f64>());
+        // Out-of-range windows are empty, closed-interval semantics hold.
+        assert_eq!(db.iter_over(&id, 200, 300).count(), 0);
+        assert_eq!(db.iter_over(&id, 99, 99).count(), 1);
+    }
+
+    #[test]
+    fn min_over_mirrors_max_over() {
+        let db = sample_db();
+        let id = SeriesId::global("workload_rate");
+        crate::assert_close!(db.min_over(&id, 0, 99).unwrap(), 1_000.0, atol = 1e-9);
+        crate::assert_close!(db.min_over(&id, 50, 60).unwrap(), 1_050.0, atol = 1e-9);
+        assert!(db.min_over(&id, 200, 300).is_none());
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! Micro-bench registry + machine-readable perf trajectory.
+//!
+//! The hot paths identified in the perf pass (tick loop, ECDF, TSDB
+//! monitor queries, the native Layer-2 mirrors) are benchable from two
+//! entry points that share this registry:
+//!
+//! * `cargo bench --bench micro` — the developer loop (prints the table;
+//!   set `BENCH_JSON=<path>` to also emit JSON);
+//! * `daedalus bench [--out BENCH_micro.json] [--smoke] [--filter s]` —
+//!   the CLI entry point; CI's bench-smoke job runs it with `--smoke`
+//!   (one warmup + one timed iteration per bench) and schema-validates
+//!   the JSON so the bench targets cannot bit-rot.
+//!
+//! ## Before/after pairs
+//!
+//! Each optimized hot path keeps its pre-optimization implementation in
+//! the tree as a bit-exact or behaviour-equivalent reference
+//! ([`crate::dsp::MergePolicy::NaiveScan`], [`crate::stats::ExactEcdf`],
+//! and a private copy of the old O(window²) left-pad here). The registry
+//! links every optimized bench to its reference bench, so one run emits
+//! honest before/after entries with computed speedups — the perf
+//! trajectory in `BENCH_micro.json` at the repo root is regenerated, not
+//! hand-maintained.
+//!
+//! ## `BENCH_micro.json` schema (`daedalus-bench-micro/v1`)
+//!
+//! ```json
+//! {
+//!   "schema": "daedalus-bench-micro/v1",
+//!   "smoke": false,
+//!   "entries": [
+//!     {"name": "engine_tick_1h_plain", "ns_per_iter": 1.2e7, "iters": 5,
+//!      "min_ns": 1.1e7, "max_ns": 1.4e7,
+//!      "baseline": "engine_tick_1h_naive_merge",
+//!      "baseline_ns_per_iter": 3.1e7, "speedup": 2.58}
+//!   ]
+//! }
+//! ```
+//! `baseline`/`baseline_ns_per_iter`/`speedup` appear only on benches
+//! with a retained reference implementation.
+
+use std::time::{Duration, Instant};
+
+use crate::autoscaler::{Autoscaler, Daedalus, DaedalusConfig};
+use crate::dsp::{EngineProfile, MergePolicy, SimConfig, Simulation};
+use crate::jobs::JobProfile;
+use crate::metrics::{query, SeriesId, Tsdb};
+use crate::runtime::{native, ArtifactMeta, CapacityState, ComputeBackend};
+use crate::stats::{Ecdf, ExactEcdf, Rng, Welford};
+use crate::workload::SineWorkload;
+use crate::Result;
+
+/// Bench-run tuning.
+#[derive(Debug, Clone, Default)]
+pub struct BenchOpts {
+    /// One warmup + one timed iteration per bench (the CI smoke mode).
+    pub smoke: bool,
+    /// Only run benches whose name contains this substring.
+    pub filter: Option<String>,
+}
+
+/// One bench's measurement (plus its reference link, if any).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: &'static str,
+    pub ns_per_iter: f64,
+    pub iters: u32,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Name of the retained pre-optimization reference bench, if any.
+    pub baseline: Option<&'static str>,
+}
+
+struct Runner<'a> {
+    opts: &'a BenchOpts,
+    results: Vec<BenchResult>,
+}
+
+impl Runner<'_> {
+    fn run<R>(
+        &mut self,
+        name: &'static str,
+        baseline: Option<&'static str>,
+        min_iters: u32,
+        mut f: impl FnMut() -> R,
+    ) {
+        if let Some(fil) = &self.opts.filter {
+            if !name.contains(fil.as_str()) {
+                return;
+            }
+        }
+        // Warm-up.
+        std::hint::black_box(f());
+        // Budget: at least `min_iters`, stop early past ~2 s total.
+        let mut times_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times_ns.push(t.elapsed().as_secs_f64() * 1e9);
+            if self.opts.smoke {
+                break;
+            }
+            if times_ns.len() >= min_iters as usize && start.elapsed() > Duration::from_secs(2) {
+                break;
+            }
+            if times_ns.len() >= 10 * min_iters as usize {
+                break;
+            }
+        }
+        let mean = times_ns.iter().sum::<f64>() / times_ns.len() as f64;
+        let min = times_ns.iter().copied().fold(f64::MAX, f64::min);
+        let max = times_ns.iter().copied().fold(f64::MIN, f64::max);
+        self.results.push(BenchResult {
+            name,
+            ns_per_iter: mean,
+            iters: times_ns.len() as u32,
+            min_ns: min,
+            max_ns: max,
+            baseline,
+        });
+    }
+}
+
+fn sim_1h(policy: MergePolicy) -> Simulation {
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let mut sim = Simulation::new(SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(SineWorkload::paper_default(peak, 3_600)),
+    ));
+    sim.set_merge_policy(policy);
+    sim
+}
+
+/// The old `workload_window` left-pad (`insert(0, …)` per missing entry,
+/// O(window²) for young jobs) — retained here as the bench reference for
+/// `workload_window_young_job`.
+fn workload_window_naive_ref(db: &Tsdb, now: u64, window: usize) -> Vec<f64> {
+    let id = SeriesId::global("workload_rate");
+    let from = (now + 1).saturating_sub(window as u64);
+    let samples = db.range(&id, from, now);
+    if samples.is_empty() {
+        return vec![0.0; window];
+    }
+    let mut out = Vec::with_capacity(window);
+    let mut si = 0;
+    let mut last = samples[0].1;
+    for t in from..=now {
+        while si < samples.len() && samples[si].0 <= t {
+            last = samples[si].1;
+            si += 1;
+        }
+        out.push(last);
+    }
+    while out.len() < window {
+        out.insert(0, samples[0].1);
+    }
+    out
+}
+
+/// Whether any bench in a group survives the filter (skips the group's
+/// input setup entirely when none does).
+fn any_enabled(opts: &BenchOpts, names: &[&str]) -> bool {
+    match &opts.filter {
+        None => true,
+        Some(f) => names.iter().any(|n| n.contains(f.as_str())),
+    }
+}
+
+/// Run the micro-bench registry. Deterministic inputs throughout (the
+/// timings vary with the host; the measured work does not).
+pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
+    let mut r = Runner {
+        opts,
+        results: Vec::new(),
+    };
+
+    // Substrate: 1 hour of simulated time, no autoscaler. The naive merge
+    // is the retained pre-optimization reference (serve-merge hot path).
+    r.run("engine_tick_1h_naive_merge", None, 3, || {
+        let mut sim = sim_1h(MergePolicy::NaiveScan);
+        for t in 0..3_600 {
+            sim.step(t);
+        }
+        sim.total_backlog()
+    });
+    r.run(
+        "engine_tick_1h_plain",
+        Some("engine_tick_1h_naive_merge"),
+        3,
+        || {
+            let mut sim = sim_1h(MergePolicy::Heap);
+            for t in 0..3_600 {
+                sim.step(t);
+            }
+            sim.total_backlog()
+        },
+    );
+
+    // Full stack: same but with the Daedalus MAPE-K loop attached.
+    r.run("engine_tick_1h_with_daedalus", None, 3, || {
+        let mut sim = sim_1h(MergePolicy::Heap);
+        let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
+        for t in 0..3_600 {
+            sim.step(t);
+            if let Some(n) = d.decide(&sim.view()) {
+                sim.request_rescale(n);
+            }
+        }
+        sim.avg_workers()
+    });
+
+    // ECDF: pool 1M weighted samples and take the paper's quantiles. The
+    // exact sample-retaining implementation is the reference; the
+    // log-binned histogram is the optimized path.
+    if any_enabled(
+        opts,
+        &[
+            "ecdf_quantile_1M_samples_exact",
+            "ecdf_quantile_1M_samples",
+            "ecdf_curve_logspace_200pt",
+        ],
+    ) {
+        let mut rng = Rng::new(42);
+        let samples: Vec<(f64, f64)> = (0..1_000_000)
+            .map(|_| (rng.range(0.5, 1e6), rng.range(0.5, 2.0)))
+            .collect();
+        r.run("ecdf_quantile_1M_samples_exact", None, 3, || {
+            let mut e = ExactEcdf::new();
+            for &(v, w) in &samples {
+                e.push(v, w);
+            }
+            e.quantile(0.5) + e.quantile(0.95) + e.quantile(0.99)
+        });
+        r.run(
+            "ecdf_quantile_1M_samples",
+            Some("ecdf_quantile_1M_samples_exact"),
+            3,
+            || {
+                let mut e = Ecdf::new();
+                for &(v, w) in &samples {
+                    e.push(v, w);
+                }
+                e.quantile(0.5) + e.quantile(0.95) + e.quantile(0.99)
+            },
+        );
+        let mut pooled = Ecdf::new();
+        for &(v, w) in &samples {
+            pooled.push(v, w);
+        }
+        r.run("ecdf_curve_logspace_200pt", None, 200, || {
+            pooled.curve_logspace(0.1, 1e7, 200).len()
+        });
+    }
+
+    let mut window_buf: Vec<f64> = Vec::new();
+
+    // TSDB: the monitor-phase query mix over a fully populated store.
+    if any_enabled(opts, &["tsdb_monitor_query_mix_6h_store", "tsdb_avg_over_60s"]) {
+        let mut db = Tsdb::new();
+        for t in 0..21_600u64 {
+            db.record_global("workload_rate", t, 20_000.0 + (t % 97) as f64);
+            db.record_global("consumer_lag", t, 1_000.0);
+            for w in 0..12 {
+                db.record_worker("worker_cpu", w, t, 0.7);
+                db.record_worker("worker_throughput", w, t, 4_000.0);
+            }
+        }
+        let mut snap_buf = Vec::new();
+        r.run("tsdb_monitor_query_mix_6h_store", None, 100, || {
+            query::worker_snapshots_into(&db, 21_599, 60, &mut snap_buf);
+            query::workload_window_into(&db, 21_599, 1_800, &mut window_buf);
+            let lag = query::consumer_lag(&db, 21_599);
+            (snap_buf.len(), window_buf.len(), lag)
+        });
+        r.run("tsdb_avg_over_60s", None, 1_000, || {
+            db.avg_over(&SeriesId::global("workload_rate"), 21_540, 21_599)
+        });
+    }
+
+    // Young job (59 s of history, 1800-entry window): the left pad
+    // dominates. The O(window²) insert(0)-based pad is the reference.
+    if any_enabled(opts, &["workload_window_naive_left_pad", "workload_window_young_job"]) {
+        let mut young = Tsdb::new();
+        for t in 0..60u64 {
+            young.record_global("workload_rate", t, 10_000.0 + t as f64);
+        }
+        r.run("workload_window_naive_left_pad", None, 200, || {
+            workload_window_naive_ref(&young, 59, 1_800).len()
+        });
+        r.run(
+            "workload_window_young_job",
+            Some("workload_window_naive_left_pad"),
+            200,
+            || {
+                query::workload_window_into(&young, 59, 1_800, &mut window_buf);
+                window_buf.len()
+            },
+        );
+    }
+
+    // Stats primitives.
+    r.run("welford_push_10k", None, 100, || {
+        let mut w = Welford::new();
+        for i in 0..10_000 {
+            w.push(i as f64 * 1e-4, i as f64);
+        }
+        w.slope()
+    });
+
+    // Native Layer-2 mirrors (the artifact path is benched in `runtime`).
+    if any_enabled(opts, &["native_forecast_1800w_900h", "native_capacity_update_32w"]) {
+        let meta = ArtifactMeta::default();
+        let hist: Vec<f32> = (0..meta.window)
+            .map(|t| (30e3 + 10e3 * (t as f64 / 250.0).sin()) as f32)
+            .collect();
+        r.run("native_forecast_1800w_900h", None, 10, || {
+            native::forecast(&meta, &hist).unwrap().forecast[0]
+        });
+        let state = CapacityState::zeros(meta.max_workers);
+        let xs = vec![0.6f32; meta.max_workers * meta.obs_block];
+        let ys = vec![3_000.0f32; meta.max_workers * meta.obs_block];
+        let mask = vec![1.0f32; meta.max_workers * meta.obs_block];
+        let tgt = vec![1.0f32; meta.max_workers];
+        r.run("native_capacity_update_32w", None, 100, || {
+            native::capacity_update(&meta, &state, &xs, &ys, &mask, &tgt)
+                .unwrap()
+                .capacities[0]
+        });
+    }
+
+    r.results
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Look up a bench's reference measurement within the same run.
+fn baseline_of<'a>(results: &'a [BenchResult], r: &BenchResult) -> Option<&'a BenchResult> {
+    let base = r.baseline?;
+    results.iter().find(|b| b.name == base)
+}
+
+/// Criterion-style human-readable table, with before/after speedups where
+/// a reference implementation exists.
+pub fn table(results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    for r in results {
+        let speedup = baseline_of(results, r)
+            .map(|b| format!("  {:>6.2}x vs {}", b.ns_per_iter / r.ns_per_iter, b.name))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "{:<36} {:>12} /iter (min {:>12}, max {:>12}, n={}){}\n",
+            r.name,
+            fmt_ns(r.ns_per_iter),
+            fmt_ns(r.min_ns),
+            fmt_ns(r.max_ns),
+            r.iters,
+            speedup,
+        ));
+    }
+    out
+}
+
+/// Serialize to the `daedalus-bench-micro/v1` JSON schema.
+pub fn to_json(results: &[BenchResult], smoke: bool) -> String {
+    let mut out = String::from("{\n  \"schema\": \"daedalus-bench-micro/v1\",\n");
+    out.push_str("  \"cmd\": \"cargo run --release --bin daedalus -- bench\",\n");
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"entries\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ns_per_iter\": {:.1}, \"iters\": {}, \
+             \"min_ns\": {:.1}, \"max_ns\": {:.1}",
+            r.name, r.ns_per_iter, r.iters, r.min_ns, r.max_ns
+        ));
+        if let Some(b) = baseline_of(results, r) {
+            out.push_str(&format!(
+                ", \"baseline\": \"{}\", \"baseline_ns_per_iter\": {:.1}, \
+                 \"speedup\": {:.2}",
+                b.name,
+                b.ns_per_iter,
+                b.ns_per_iter / r.ns_per_iter
+            ));
+        }
+        out.push_str(if i + 1 == results.len() { "}\n" } else { "},\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON trajectory file (the repo root keeps the canonical one).
+pub fn write_json(path: &str, results: &[BenchResult], smoke: bool) -> Result<()> {
+    std::fs::write(path, to_json(results, smoke))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn fake_results() -> Vec<BenchResult> {
+        vec![
+            BenchResult {
+                name: "thing_naive",
+                ns_per_iter: 1_000.0,
+                iters: 5,
+                min_ns: 900.0,
+                max_ns: 1_100.0,
+                baseline: None,
+            },
+            BenchResult {
+                name: "thing",
+                ns_per_iter: 250.0,
+                iters: 5,
+                min_ns: 200.0,
+                max_ns: 300.0,
+                baseline: Some("thing_naive"),
+            },
+        ]
+    }
+
+    #[test]
+    fn json_matches_schema_and_computes_speedup() {
+        let j = Json::parse(&to_json(&fake_results(), true)).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "daedalus-bench-micro/v1");
+        assert!(j.get("smoke").unwrap().as_bool().unwrap());
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        let e = &entries[1];
+        assert_eq!(e.get("name").unwrap().as_str().unwrap(), "thing");
+        crate::assert_close!(e.get("ns_per_iter").unwrap().as_f64().unwrap(), 250.0);
+        assert_eq!(e.get("baseline").unwrap().as_str().unwrap(), "thing_naive");
+        crate::assert_close!(e.get("speedup").unwrap().as_f64().unwrap(), 4.0);
+        // The reference entry itself carries no baseline fields.
+        assert!(entries[0].get("baseline").is_err());
+    }
+
+    #[test]
+    fn table_lists_every_bench_with_speedups() {
+        let t = table(&fake_results());
+        assert!(t.contains("thing_naive"));
+        assert!(t.contains("4.00x vs thing_naive"));
+    }
+
+    #[test]
+    fn smoke_run_of_cheap_benches_is_valid() {
+        // Keep CI-in-test cost low: only the stats/tsdb benches.
+        let opts = BenchOpts {
+            smoke: true,
+            filter: Some("tsdb".into()),
+        };
+        let results = run_micro(&opts);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.iters, 1);
+            assert!(r.ns_per_iter > 0.0);
+        }
+        Json::parse(&to_json(&results, true)).unwrap();
+    }
+
+    #[test]
+    fn naive_window_reference_matches_current_impl() {
+        let mut db = Tsdb::new();
+        for t in 0..60u64 {
+            db.record_global("workload_rate", t, t as f64);
+        }
+        assert_eq!(
+            workload_window_naive_ref(&db, 59, 200),
+            query::workload_window(&db, 59, 200)
+        );
+    }
+}

@@ -3,21 +3,257 @@
 //! The paper reports end-to-end latencies as an ECDF (Figs 7c, 8c, 9c, 10c,
 //! 11c) plus averages and percentiles. The simulator emits fluid latency
 //! samples weighted by tuple volume, so the ECDF must be weight-aware.
+//!
+//! ## Storage: deterministic log-binned weighted histogram
+//!
+//! [`Ecdf`] used to keep every `(value, weight)` sample in a `Vec` and
+//! re-sort on demand — on a multi-hour run the engine pushes one sample per
+//! consumed fluid chunk, so storage grew without bound and every quantile
+//! paid an O(n log n) sort. It now accumulates into a fixed log-spaced
+//! weighted histogram:
+//!
+//! * **push** is O(1) (one `log10` + one bin add);
+//! * **quantile** is O(bins), **curve_logspace** is a single O(points +
+//!   bins) sweep;
+//! * **storage** is O([`Ecdf::MAX_BINS`]) no matter how many samples are
+//!   pushed;
+//! * **merge** (seed pooling) adds histograms bin-wise;
+//! * the **mean, min and max are exact** (tracked outside the bins).
+//!
+//! Accuracy contract: [`Ecdf::BINS_PER_DECADE`] bins per decade over
+//! `[1e-3, 1e9)` covers sub-microsecond to multi-week latencies in ms.
+//! Within that range a quantile is reported as the geometric midpoint of
+//! its bin (clamped to the exact min/max), so its relative error is at most
+//! `10^(1/(2·128)) − 1 ≈ 0.90 %` — bounded by [`Ecdf::QUANTILE_RTOL`].
+//! `cdf_at(x)` counts the whole bin containing `x`, so it is sandwiched by
+//! the exact ECDF: `exact(x) ≤ cdf_at(x) ≤ exact(x·γ)` with
+//! `γ = 10^(1/128) ≈ 1.018` (pinned by a regression test against
+//! [`ExactEcdf`]). Values outside the bin range clamp into the edge bins;
+//! min/max stay exact.
 
-/// Accumulates weighted samples; quantiles/ECDF computed on demand.
-#[derive(Debug, Clone, Default)]
+/// Accumulates weighted samples into a log-binned histogram; quantiles and
+/// CDF evaluations are computed on demand with documented error bounds.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Ecdf {
+    /// Weight per log-spaced bin; allocated lazily on the first push.
+    bins: Vec<f64>,
+    total_weight: f64,
+    /// Running Σ value·weight in push order (exact mean).
+    sum_vw: f64,
+    /// Exact extremes (`+∞` / `−∞` sentinels while empty).
+    min: f64,
+    max: f64,
+    /// Number of samples pushed (not their weight).
+    count: usize,
+}
+
+impl Ecdf {
+    /// Histogram resolution: bins per decade of value.
+    pub const BINS_PER_DECADE: usize = 128;
+    /// Lower edge of bin 0; smaller values clamp into bin 0.
+    pub const BIN_LO: f64 = 1e-3;
+    /// Decades covered: `[1e-3, 1e9)` (values in ms).
+    pub const DECADES: usize = 12;
+    /// Fixed storage bound: total number of bins.
+    pub const MAX_BINS: usize = Self::BINS_PER_DECADE * Self::DECADES;
+    /// Guaranteed quantile relative error inside the bin range:
+    /// `10^(1/(2·BINS_PER_DECADE)) − 1 ≈ 0.904 %`.
+    pub const QUANTILE_RTOL: f64 = 0.0091;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bin index for a value (clamped into `[0, MAX_BINS)`).
+    #[inline]
+    fn bin_of(value: f64) -> usize {
+        if value < Self::BIN_LO {
+            return 0;
+        }
+        let idx = ((value / Self::BIN_LO).log10() * Self::BINS_PER_DECADE as f64) as usize;
+        idx.min(Self::MAX_BINS - 1)
+    }
+
+    /// Geometric midpoint of bin `i` — the reported quantile location.
+    #[inline]
+    fn representative(i: usize) -> f64 {
+        Self::BIN_LO * 10f64.powf((i as f64 + 0.5) / Self::BINS_PER_DECADE as f64)
+    }
+
+    /// Add a sample with weight (e.g. latency, tuple count). O(1).
+    pub fn push(&mut self, value: f64, weight: f64) {
+        if weight <= 0.0 || !value.is_finite() || !weight.is_finite() {
+            return;
+        }
+        if self.bins.is_empty() {
+            self.bins = vec![0.0; Self::MAX_BINS];
+        }
+        self.bins[Self::bin_of(value)] += weight;
+        self.total_weight += weight;
+        self.sum_vw += value * weight;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+        self.count += 1;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Number of samples pushed (storage stays O(bins) regardless).
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// Number of histogram bins held (≤ [`Ecdf::MAX_BINS`]).
+    pub fn bin_count(&self) -> usize {
+        self.bins.len()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Weighted mean of the samples (exact).
+    pub fn mean(&self) -> f64 {
+        if self.total_weight == 0.0 {
+            return 0.0;
+        }
+        self.sum_vw / self.total_weight
+    }
+
+    /// Minimum sample value (exact; `+∞` if empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum sample value (exact; `−∞` if empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Weighted quantile in [0, 1]. O(bins); relative error within
+    /// [`Ecdf::QUANTILE_RTOL`] inside the bin range; q = 0 / q = 1 return
+    /// the exact min / max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = q * self.total_weight;
+        let mut acc = 0.0;
+        for (i, w) in self.bins.iter().enumerate() {
+            if *w <= 0.0 {
+                continue;
+            }
+            acc += w;
+            if acc >= target {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// P(X ≤ x): the empirical CDF evaluated at `x`. Counts the whole bin
+    /// containing `x`, so `exact(x) ≤ cdf_at(x) ≤ exact(x·γ)` with
+    /// `γ = 10^(1/BINS_PER_DECADE)`.
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        if self.total_weight == 0.0 || x < self.min {
+            return 0.0;
+        }
+        if x >= self.max {
+            return 1.0;
+        }
+        let b = Self::bin_of(x);
+        let acc: f64 = self.bins[..=b].iter().sum();
+        acc / self.total_weight
+    }
+
+    /// Evaluate the CDF on a log-spaced grid — the paper's latency plots are
+    /// log-x. Returns `(grid_value, cumulative_probability)` pairs.
+    /// Single sorted sweep: O(points + bins), matching `cdf_at` pointwise.
+    pub fn curve_logspace(&self, lo: f64, hi: f64, points: usize) -> Vec<(f64, f64)> {
+        assert!(lo > 0.0 && hi > lo && points >= 2);
+        let lf = lo.ln();
+        let hf = hi.ln();
+        let mut out = Vec::with_capacity(points);
+        let mut acc = 0.0;
+        let mut next_bin = 0usize; // first bin not yet folded into `acc`
+        for i in 0..points {
+            let x = (lf + (hf - lf) * i as f64 / (points - 1) as f64).exp();
+            let p = if self.total_weight == 0.0 || x < self.min {
+                0.0
+            } else if x >= self.max {
+                1.0
+            } else {
+                let b = Self::bin_of(x);
+                while next_bin <= b {
+                    acc += self.bins[next_bin];
+                    next_bin += 1;
+                }
+                acc / self.total_weight
+            };
+            out.push((x, p));
+        }
+        out
+    }
+
+    /// Merge another ECDF into this one (used to pool repetition runs).
+    /// Bin-wise addition — associative up to float rounding, deterministic
+    /// for a fixed merge order.
+    pub fn merge(&mut self, other: &Ecdf) {
+        if other.count == 0 {
+            return;
+        }
+        if self.bins.is_empty() {
+            self.bins = vec![0.0; Self::MAX_BINS];
+        }
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += *b;
+        }
+        self.total_weight += other.total_weight;
+        self.sum_vw += other.sum_vw;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+    }
+}
+
+impl Default for Ecdf {
+    fn default() -> Self {
+        Self {
+            bins: Vec::new(),
+            total_weight: 0.0,
+            sum_vw: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            count: 0,
+        }
+    }
+}
+
+/// The exact sample-retaining weighted ECDF — the previous implementation,
+/// kept as the reference for regression tests and the before/after micro
+/// benches (`ecdf_quantile_1M_samples_exact`). Stores every sample; do not
+/// use on hot paths.
+#[derive(Debug, Clone, Default)]
+pub struct ExactEcdf {
     samples: Vec<(f64, f64)>, // (value, weight)
     sorted: bool,
     total_weight: f64,
 }
 
-impl Ecdf {
+impl ExactEcdf {
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Add a sample with weight (e.g. latency, tuple count).
+    /// Add a sample with weight.
     pub fn push(&mut self, value: f64, weight: f64) {
         if weight <= 0.0 || !value.is_finite() {
             return;
@@ -29,8 +265,6 @@ impl Ecdf {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            // Unstable sort: no scratch allocation — this runs on the
-            // per-tick latency path (EXPERIMENTS.md §Perf).
             self.samples
                 .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
             self.sorted = true;
@@ -65,7 +299,7 @@ impl Ecdf {
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Weighted quantile in [0, 1] (lower interpolation).
+    /// Exact weighted quantile in [0, 1] (lower interpolation).
     pub fn quantile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -82,7 +316,7 @@ impl Ecdf {
         self.samples.last().unwrap().0
     }
 
-    /// P(X ≤ x): the empirical CDF evaluated at `x`.
+    /// Exact P(X ≤ x).
     pub fn cdf_at(&mut self, x: f64) -> f64 {
         if self.total_weight == 0.0 {
             return 0.0;
@@ -97,44 +331,29 @@ impl Ecdf {
         }
         acc / self.total_weight
     }
-
-    /// Evaluate the CDF on a log-spaced grid — the paper's latency plots are
-    /// log-x. Returns `(grid_value, cumulative_probability)` pairs.
-    pub fn curve_logspace(&mut self, lo: f64, hi: f64, points: usize) -> Vec<(f64, f64)> {
-        assert!(lo > 0.0 && hi > lo && points >= 2);
-        let lf = lo.ln();
-        let hf = hi.ln();
-        (0..points)
-            .map(|i| {
-                let x = (lf + (hf - lf) * i as f64 / (points - 1) as f64).exp();
-                (x, self.cdf_at(x))
-            })
-            .collect()
-    }
-
-    /// Merge another ECDF into this one (used to pool repetition runs).
-    pub fn merge(&mut self, other: &Ecdf) {
-        self.samples.extend_from_slice(&other.samples);
-        self.total_weight += other.total_weight;
-        self.sorted = false;
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    
+
+    /// Slightly above the documented bounds, for float headroom.
+    const RTOL: f64 = Ecdf::QUANTILE_RTOL * 1.01;
+    const GAMMA: f64 = 1.0182_f64; // ≥ 10^(1/BINS_PER_DECADE)
 
     #[test]
-    fn unweighted_quantiles() {
+    fn unweighted_quantiles_within_documented_bound() {
         let mut e = Ecdf::new();
         for v in 1..=100 {
             e.push(v as f64, 1.0);
         }
-        crate::assert_close!(e.quantile(0.5), 50.0, rtol = 1e-9, atol = 1e-12);
-        crate::assert_close!(e.quantile(0.95), 95.0, rtol = 1e-9, atol = 1e-12);
-        crate::assert_close!(e.quantile(1.0), 100.0, rtol = 1e-9, atol = 1e-12);
-        crate::assert_close!(e.mean(), 50.5, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(e.quantile(0.5), 50.0, rtol = RTOL);
+        crate::assert_close!(e.quantile(0.95), 95.0, rtol = RTOL);
+        // q = 1 returns the exact max.
+        crate::assert_close!(e.quantile(1.0), 100.0, rtol = 1e-12);
+        crate::assert_close!(e.quantile(0.0), 1.0, rtol = 1e-12);
+        // The mean stays exact.
+        crate::assert_close!(e.mean(), 50.5, rtol = 1e-12);
     }
 
     #[test]
@@ -142,9 +361,19 @@ mod tests {
         let mut e = Ecdf::new();
         e.push(1.0, 99.0);
         e.push(100.0, 1.0);
-        crate::assert_close!(e.quantile(0.5), 1.0, rtol = 1e-9, atol = 1e-12);
-        crate::assert_close!(e.quantile(0.999), 100.0, rtol = 1e-9, atol = 1e-12);
-        crate::assert_close!(e.mean(), (99.0 + 100.0) / 100.0, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(e.quantile(0.5), 1.0, rtol = RTOL);
+        crate::assert_close!(e.quantile(0.999), 100.0, rtol = RTOL);
+        crate::assert_close!(e.mean(), (99.0 + 100.0) / 100.0, rtol = 1e-12);
+    }
+
+    #[test]
+    fn min_max_are_exact() {
+        let mut e = Ecdf::new();
+        for v in [3.7, 912.4, 0.052, 88.1] {
+            e.push(v, 2.5);
+        }
+        crate::assert_close!(e.min(), 0.052, rtol = 1e-15);
+        crate::assert_close!(e.max(), 912.4, rtol = 1e-15);
     }
 
     #[test]
@@ -162,11 +391,78 @@ mod tests {
     }
 
     #[test]
+    fn curve_logspace_pinned_against_exact_reference() {
+        // The histogram CDF must sandwich the exact ECDF:
+        //   exact(x) ≤ hist(x) ≤ exact(x·γ),  γ = one bin's width ratio.
+        let mut hist = Ecdf::new();
+        let mut exact = ExactEcdf::new();
+        let mut rng = crate::stats::Rng::new(99);
+        for _ in 0..500 {
+            let v = rng.range(0.1, 5_000.0);
+            let w = rng.range(0.5, 3.0);
+            hist.push(v, w);
+            exact.push(v, w);
+        }
+        let curve = hist.curve_logspace(0.05, 10_000.0, 200);
+        for &(x, p) in &curve {
+            let lo = exact.cdf_at(x);
+            let hi = exact.cdf_at(x * GAMMA);
+            assert!(p >= lo - 1e-12 && p <= hi + 1e-12, "cdf at {x}: {p} outside [{lo}, {hi}]");
+            // And the sweep must agree with pointwise evaluation.
+            crate::assert_close!(p, hist.cdf_at(x), rtol = 1e-12, atol = 1e-12);
+        }
+    }
+
+    #[test]
+    fn quantiles_pinned_against_exact_reference() {
+        let mut hist = Ecdf::new();
+        let mut exact = ExactEcdf::new();
+        let mut rng = crate::stats::Rng::new(7);
+        for _ in 0..2_000 {
+            let v = rng.range(0.5, 50_000.0);
+            let w = rng.range(0.1, 4.0);
+            hist.push(v, w);
+            exact.push(v, w);
+        }
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999] {
+            let e = exact.quantile(q);
+            let h = hist.quantile(q);
+            crate::assert_close!(h, e, rtol = RTOL);
+        }
+        crate::assert_close!(hist.mean(), exact.mean(), rtol = 1e-12);
+    }
+
+    #[test]
+    fn storage_stays_bounded() {
+        let mut e = Ecdf::new();
+        let mut rng = crate::stats::Rng::new(5);
+        for _ in 0..100_000 {
+            e.push(rng.range(0.01, 1e7), 1.0);
+        }
+        assert_eq!(e.len(), 100_000);
+        assert!(e.bin_count() <= Ecdf::MAX_BINS);
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_into_edge_bins() {
+        let mut e = Ecdf::new();
+        e.push(1e-9, 1.0); // below BIN_LO
+        e.push(1e12, 1.0); // above the top edge
+        assert_eq!(e.len(), 2);
+        crate::assert_close!(e.min(), 1e-9, rtol = 1e-15);
+        crate::assert_close!(e.max(), 1e12, rtol = 1e-15);
+        // Quantiles clamp to the exact extremes.
+        crate::assert_close!(e.quantile(0.0), 1e-9, rtol = 1e-15);
+        crate::assert_close!(e.quantile(1.0), 1e12, rtol = 1e-15);
+    }
+
+    #[test]
     fn ignores_invalid_samples() {
         let mut e = Ecdf::new();
         e.push(f64::NAN, 1.0);
         e.push(1.0, 0.0);
         e.push(1.0, -5.0);
+        e.push(1.0, f64::NAN);
         assert!(e.is_empty());
     }
 
@@ -179,5 +475,10 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.len(), 2);
         crate::assert_close!(a.mean(), 2.0, rtol = 1e-9, atol = 1e-12);
+        crate::assert_close!(a.max(), 3.0, rtol = 1e-15);
+        // Merging an empty ECDF is a no-op.
+        let before = a.clone();
+        a.merge(&Ecdf::new());
+        assert_eq!(a, before);
     }
 }

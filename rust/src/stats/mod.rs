@@ -5,7 +5,9 @@
 //!   detector. The *hot* batched version runs inside the AOT artifact; this
 //!   is the scalar reference/driver implementation.
 //! * [`regression`] — simple linear regression on top of Welford state.
-//! * [`ecdf`] — weighted empirical CDF for the latency plots (Figs 7c–10c).
+//! * [`ecdf`] — weighted empirical CDF for the latency plots (Figs 7c–10c):
+//!   a log-binned histogram with O(1) push and O(bins) storage/quantiles
+//!   (plus the exact sample-retaining reference, [`ExactEcdf`]).
 //! * [`wape`] — weighted absolute percentage error, the paper's forecast
 //!   quality gate (§3.3).
 //! * [`rng`] — small deterministic PRNG (xoshiro256++) so experiments are
@@ -18,7 +20,7 @@ pub mod rng;
 pub mod wape;
 pub mod welford;
 
-pub use ecdf::Ecdf;
+pub use ecdf::{Ecdf, ExactEcdf};
 pub use holt::HoltWinters;
 pub use regression::LinearRegression;
 pub use rng::Rng;

@@ -164,6 +164,35 @@ fn sweep_rejects_unknown_scenario() {
 }
 
 #[test]
+fn bench_smoke_writes_schema_valid_json() {
+    // Per-process-unique dir: concurrent `cargo test` runs must not race.
+    let dir = std::env::temp_dir().join(format!("daedalus-cli-bench-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("BENCH_micro.json");
+    let out = bin()
+        .args([
+            "bench",
+            "--smoke",
+            "--filter",
+            "tsdb",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&out_path).unwrap();
+    assert!(text.contains("\"schema\": \"daedalus-bench-micro/v1\""));
+    assert!(text.contains("tsdb_avg_over_60s"));
+    assert!(text.contains("\"smoke\": true"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn selfcheck_native_backend() {
     let out = bin()
         .args(["selfcheck", "--backend", "native"])

@@ -12,7 +12,7 @@
 //!    latency weight equals the integral of recorded throughput.
 //! 5. Queue mass equals backlog per partition (`check_invariants`).
 
-use daedalus::dsp::{EngineProfile, SimConfig, Simulation};
+use daedalus::dsp::{EngineProfile, MergePolicy, SimConfig, Simulation};
 use daedalus::jobs::JobProfile;
 use daedalus::metrics::SeriesId;
 use daedalus::stats::Rng;
@@ -39,10 +39,8 @@ fn throughput_integral(sim: &Simulation, upto: u64) -> f64 {
     let db = sim.tsdb();
     let mut total = 0.0;
     for w in 0..sim.max_replicas() {
-        total += db
-            .values_over(&SeriesId::worker("worker_throughput", w), 0, upto)
-            .iter()
-            .sum::<f64>();
+        let id = SeriesId::worker("worker_throughput", w);
+        total += db.fold_over(&id, 0, upto, 0.0, |acc, _, v| acc + v);
     }
     total
 }
@@ -120,6 +118,77 @@ fn conservation_under_random_rescale_and_failure_storms() {
             sim.total_lag(),
             sim.total_backlog()
         );
+    }
+}
+
+/// The heap-based FIFO merge must be *bit-identical* to the retained naive
+/// reference scan: same consumed totals, same pooled latency histogram,
+/// same TSDB contents, same rescale log — across randomized workload
+/// shapes, rescale storms and failure injections. The `(head_time,
+/// partition_idx)` heap tie-break is what makes this hold exactly.
+#[test]
+fn heap_merge_bit_identical_to_naive_reference_scan() {
+    for seed in 0..4u64 {
+        let shape = ShapeKind::all()[seed as usize % 6];
+        let duration = 1_500;
+        let mut frng = Rng::new(seed ^ 0xFA_17);
+        let mut failures: Vec<u64> = (0..frng.below(3))
+            .map(|_| 300 + frng.below(duration - 600))
+            .collect();
+        failures.sort_unstable();
+        failures.dedup();
+        let build = |failures: &[u64]| {
+            Simulation::new(SimConfig {
+                profile: EngineProfile::flink(),
+                job: JobProfile::wordcount(),
+                workload: shape.build(25_000.0, duration, seed),
+                partitions: 36,
+                initial_replicas: 1 + (seed as usize % 8),
+                max_replicas: 12,
+                seed,
+                rate_noise: 0.02,
+                failures: failures.to_vec(),
+            })
+        };
+        let mut heap_sim = build(&failures);
+        let mut naive_sim = build(&failures);
+        naive_sim.set_merge_policy(MergePolicy::NaiveScan);
+        // Identical rescale storms driven by twin PRNGs.
+        let mut rng_a = Rng::new(seed ^ 0xAB);
+        let mut rng_b = Rng::new(seed ^ 0xAB);
+        for t in 0..duration {
+            heap_sim.step(t);
+            naive_sim.step(t);
+            if rng_a.below(90) == 0 {
+                heap_sim.request_rescale(1 + rng_a.below(12) as usize);
+            }
+            if rng_b.below(90) == 0 {
+                naive_sim.request_rescale(1 + rng_b.below(12) as usize);
+            }
+        }
+        let tag = format!("seed {seed} ({})", shape.name());
+        assert_eq!(heap_sim.rescale_log, naive_sim.rescale_log, "{tag}: rescale logs diverged");
+        assert_eq!(
+            heap_sim.latencies(),
+            naive_sim.latencies(),
+            "{tag}: pooled latency histograms diverged"
+        );
+        assert_eq!(
+            heap_sim.total_consumed().to_bits(),
+            naive_sim.total_consumed().to_bits(),
+            "{tag}: consumed totals diverged"
+        );
+        assert_eq!(
+            heap_sim.total_backlog().to_bits(),
+            naive_sim.total_backlog().to_bits(),
+            "{tag}: backlogs diverged"
+        );
+        assert!(
+            heap_sim.tsdb() == naive_sim.tsdb(),
+            "{tag}: recorded metric series diverged"
+        );
+        assert_conservation(&heap_sim);
+        assert_conservation(&naive_sim);
     }
 }
 
