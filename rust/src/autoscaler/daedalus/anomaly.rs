@@ -120,6 +120,7 @@ mod tests {
             parallelism: 4,
             ready,
             max_replicas: 12,
+            stage_parallelism: &[],
         }
     }
 

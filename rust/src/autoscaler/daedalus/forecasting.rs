@@ -143,6 +143,8 @@ mod tests {
         MonitorData {
             now,
             workers: vec![],
+            stages: vec![],
+            stage_parallelism: vec![],
             history,
             workload_avg: 0.0,
             workload_max: 0.0,

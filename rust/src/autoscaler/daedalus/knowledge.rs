@@ -38,6 +38,10 @@ pub struct Knowledge {
     /// Latest capacity estimate per *seen* scale-out (paper §3.1: observed
     /// estimations are preferred over predicted ones).
     pub seen_capacity: HashMap<usize, f64>,
+    /// Per-stage observed-capacity ledger on staged deployments:
+    /// `(stage, replicas) → stage input capacity` (same
+    /// observed-over-predicted rule, per operator).
+    pub stage_capacity: HashMap<(usize, usize), f64>,
     /// Most recent forecast, for the next loop's WAPE check.
     pub last_forecast: Option<IssuedForecast>,
     /// Consecutive poor forecasts (≥ threshold triggers retrain).
@@ -73,6 +77,7 @@ impl Knowledge {
         Self {
             capacity_state: CapacityState::zeros(meta.max_workers),
             seen_capacity: HashMap::new(),
+            stage_capacity: HashMap::new(),
             last_forecast: None,
             bad_forecast_streak: 0,
             retrain_count: 0,

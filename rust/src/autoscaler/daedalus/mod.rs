@@ -19,6 +19,15 @@
 //!   assumed downtimes.
 //!
 //! Knowledge ([`knowledge`]) is the state shared between phases.
+//!
+//! On a staged deployment ([`crate::dsp::StageModel::Staged`]) the same
+//! loop runs per-operator: the monitor collects per-stage busy/throughput
+//! snapshots, knowledge keeps a `(stage, replicas) → capacity` ledger of
+//! observed estimates, and the plan phase
+//! ([`plan::plan_stage_scale_out`]) emits a *vector* of stage
+//! parallelisms — minimal per-stage coverage, the recovery-time constraint
+//! enforced by growing the bottleneck stage, and the consumer-lag guard
+//! applied to net scale-ins.
 
 pub mod analyze;
 pub mod anomaly;
@@ -29,7 +38,7 @@ pub mod plan;
 pub mod recovery;
 
 use super::Autoscaler;
-use crate::dsp::engine::SimView;
+use crate::dsp::engine::{ScalePlan, SimView};
 use crate::runtime::ComputeBackend;
 
 use analyze::Analyzer;
@@ -128,6 +137,39 @@ impl Daedalus {
         &self.knowledge
     }
 
+    /// Per-second background threads plus the MAPE-K loop gates, shared by
+    /// the fused and staged decision paths: anomaly statistics and recovery
+    /// monitoring always run; planning proceeds only on a due loop tick,
+    /// outside the post-rescale grace period, with a serving job.
+    fn loop_gate(&mut self, view: &SimView<'_>) -> bool {
+        anomaly::track(&mut self.knowledge, view);
+        if let Some(mon) = &mut self.recovery_monitor {
+            if mon.update(&mut self.knowledge, view) {
+                self.recovery_monitor = None;
+            }
+        }
+        if view.now < self.next_loop {
+            return false;
+        }
+        self.next_loop = view.now + self.cfg.loop_interval;
+        if let Some(last) = self.knowledge.last_rescale {
+            if view.now < last + self.cfg.grace_period {
+                return false;
+            }
+        }
+        view.ready
+    }
+
+    /// Execute-phase bookkeeping shared by both paths: the pods will be
+    /// recreated (placement and per-pod speed may change) — per-worker
+    /// regression state starts fresh; the capacity ledgers persist.
+    fn execute_bookkeeping(&mut self, now: crate::clock::Timestamp, scale_out: bool) {
+        self.knowledge.reset_capacity_state();
+        self.knowledge.last_rescale = Some(now);
+        self.knowledge.rescale_count += 1;
+        self.recovery_monitor = Some(RecoveryMonitor::start(now, scale_out));
+    }
+
     /// One full MAPE-K iteration. Returns a desired parallelism if the plan
     /// phase decided to rescale.
     fn mape_iteration(&mut self, view: &SimView<'_>) -> Option<usize> {
@@ -185,41 +227,62 @@ impl Autoscaler for Daedalus {
     }
 
     fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
-        // Continuous background work (the paper's "background threads"):
-        // anomaly statistics and recovery monitoring run every second.
-        anomaly::track(&mut self.knowledge, view);
-        if let Some(mon) = &mut self.recovery_monitor {
-            if mon.update(&mut self.knowledge, view) {
-                self.recovery_monitor = None;
-            }
-        }
-
-        if view.now < self.next_loop {
+        if !self.loop_gate(view) {
             return None;
         }
-        self.next_loop = view.now + self.cfg.loop_interval;
-
-        // Respect the grace period after a scaling action (§3.2).
-        if let Some(last) = self.knowledge.last_rescale {
-            if view.now < last + self.cfg.grace_period {
-                return None;
-            }
-        }
-        // MAPE-K loop needs a serving job to monitor.
-        if !view.ready {
-            return None;
-        }
-
         let decision = self.mape_iteration(view)?;
-        // Execute. The pods will be recreated (placement and per-pod speed
-        // may change) — per-worker regression state starts fresh; the
-        // seen-scale-out capacity ledger persists.
-        self.knowledge.reset_capacity_state();
-        self.knowledge.last_rescale = Some(view.now);
-        self.knowledge.rescale_count += 1;
+        // Execute.
         let scale_out = decision > view.parallelism;
-        self.recovery_monitor = Some(RecoveryMonitor::start(view.now, scale_out));
+        self.execute_bookkeeping(view.now, scale_out);
         Some(decision)
+    }
+
+    fn decide_plan(&mut self, view: &SimView<'_>) -> Option<ScalePlan> {
+        // Fused flat pool: the job-level MAPE-K loop as before.
+        if view.stage_parallelism.is_empty() {
+            return self.decide(view).map(ScalePlan::Uniform);
+        }
+        // Staged deployment: per-stage monitoring/knowledge/planning,
+        // behind the same background threads and loop gates.
+        if !self.loop_gate(view) {
+            return None;
+        }
+
+        // Monitor: per-stage snapshots ride in the same reusable buffer.
+        MonitorData::collect_into(view, &self.cfg, self.backend.meta(), &mut self.monitor_buf);
+        if self.monitor_buf.stages.len() < view.stage_parallelism.len() {
+            return None;
+        }
+        // Analyze: the forecast artifact is shared with the job-level
+        // loop; per-stage capacity observations land in the knowledge
+        // ledger inside the plan call below.
+        let forecast = forecasting::forecast(
+            &self.backend,
+            &mut self.knowledge,
+            &self.monitor_buf,
+            &self.cfg,
+            view.now,
+        );
+        // Plan: per-stage Algorithm 1.
+        let decision = plan::plan_stage_scale_out(
+            view.now,
+            &self.monitor_buf,
+            &forecast,
+            &mut self.knowledge,
+            &self.cfg,
+            view.max_replicas,
+        )?;
+        if decision.targets == view.stage_parallelism {
+            return None;
+        }
+        if let Some(rt) = decision.predicted_recovery {
+            self.knowledge.predicted_recoveries.push((view.now, rt));
+        }
+        // Execute.
+        let scale_out = decision.targets.iter().sum::<usize>()
+            > view.stage_parallelism.iter().sum::<usize>();
+        self.execute_bookkeeping(view.now, scale_out);
+        Some(ScalePlan::PerStage(decision.targets))
     }
 }
 
@@ -235,15 +298,10 @@ mod tests {
         secs: u64,
     ) -> (Simulation, Daedalus) {
         let cfg = SimConfig {
-            profile: EngineProfile::flink(),
-            job: JobProfile::wordcount(),
-            workload,
             partitions: 36,
-            initial_replicas: 4,
-            max_replicas: 12,
             seed: 42,
             rate_noise: 0.01,
-            failures: vec![],
+            ..SimConfig::base(EngineProfile::flink(), JobProfile::wordcount(), workload)
         };
         let mut sim = Simulation::new(cfg);
         let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());

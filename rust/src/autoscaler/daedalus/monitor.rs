@@ -3,7 +3,7 @@
 
 use crate::clock::Timestamp;
 use crate::dsp::engine::SimView;
-use crate::metrics::query::{self, WorkerSnapshot};
+use crate::metrics::query::{self, StageSnapshot, WorkerSnapshot};
 use crate::runtime::ArtifactMeta;
 
 use super::DaedalusConfig;
@@ -14,6 +14,11 @@ pub struct MonitorData {
     pub now: Timestamp,
     /// Per-worker CPU/throughput snapshots (1-min moving averages).
     pub workers: Vec<WorkerSnapshot>,
+    /// Per-operator-stage snapshots (staged deployments; empty on the
+    /// fused pool) — busy fractions, input throughputs, queue backlogs.
+    pub stages: Vec<StageSnapshot>,
+    /// Current per-stage replica counts (copied from the view).
+    pub stage_parallelism: Vec<usize>,
     /// Full fixed-size workload history window for the forecaster.
     pub history: Vec<f64>,
     /// Workload observed since the last loop iteration: (avg, max).
@@ -30,6 +35,8 @@ impl MonitorData {
         Self {
             now: 0,
             workers: Vec::new(),
+            stages: Vec::new(),
+            stage_parallelism: Vec::new(),
             history: Vec::new(),
             workload_avg: 0.0,
             workload_max: 0.0,
@@ -68,6 +75,15 @@ impl MonitorData {
             .unwrap_or_else(|| query::consumer_lag(view.tsdb, now));
         out.now = now;
         query::worker_snapshots_into(view.tsdb, now, cfg.cpu_window, &mut out.workers);
+        query::stage_snapshots_into(
+            view.tsdb,
+            now,
+            cfg.cpu_window,
+            view.stage_parallelism.len(),
+            &mut out.stages,
+        );
+        out.stage_parallelism.clear();
+        out.stage_parallelism.extend_from_slice(view.stage_parallelism);
         query::workload_window_into(view.tsdb, now, meta.window, &mut out.history);
         out.workload_avg = workload_avg;
         out.workload_max = workload_max;
@@ -98,11 +114,13 @@ mod tests {
             parallelism: 3,
             ready: true,
             max_replicas: 12,
+            stage_parallelism: &[],
         };
         let cfg = DaedalusConfig::default();
         let meta = ArtifactMeta::default();
         let d = MonitorData::collect(&view, &cfg, &meta);
         assert_eq!(d.workers.len(), 3);
+        assert!(d.stages.is_empty() && d.stage_parallelism.is_empty());
         assert_eq!(d.history.len(), meta.window);
         // Last loop interval covers t in [140, 199]: avg = 10_000 + 169.5.
         crate::assert_close!(d.workload_avg, 10_169.5, atol = 1e-9);

@@ -110,6 +110,149 @@ pub fn plan_scale_out(
     PlanDecision { target: max_scaleout, predicted_recovery: None }
 }
 
+/// Outcome of the per-stage plan phase (staged deployments).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlanDecision {
+    /// Chosen per-stage replica counts (may equal the current vector).
+    pub targets: Vec<usize>,
+    /// Predicted recovery time for the chosen vector, if computed.
+    pub predicted_recovery: Option<f64>,
+}
+
+/// Algorithm 1, per-operator: every stage gets the smallest replica count
+/// whose *observed-over-predicted* capacity covers that stage's share of
+/// the observed and forecast workload; the recovery-time constraint is then
+/// enforced at the job level by growing the bottleneck stage, and the
+/// consumer-lag guard blocks net scale-ins while the pipeline is behind.
+/// Also folds this iteration's per-stage capacity observations into the
+/// knowledge ledger (the monitor/knowledge half of the staged loop).
+pub fn plan_stage_scale_out(
+    _now: Timestamp,
+    data: &MonitorData,
+    forecast: &ForecastResult,
+    knowledge: &mut Knowledge,
+    cfg: &DaedalusConfig,
+    max_scaleout: usize,
+) -> Option<StagePlanDecision> {
+    let n_stages = data.stages.len();
+    if n_stages == 0 || data.stage_parallelism.len() != n_stages {
+        return None;
+    }
+    let tsf = &forecast.values;
+    let recent = &data.history[data.history.len().saturating_sub(60)..];
+
+    // Observe: per-replica capacity from exact per-stage busy fractions,
+    // folded into the (stage, n) ledger.
+    let mut per_replica = Vec::with_capacity(n_stages);
+    for snap in &data.stages {
+        let n_s = data.stage_parallelism[snap.stage].max(1);
+        let busy = snap.busy.clamp(0.05, 1.0);
+        let cap_rep = (snap.throughput / n_s as f64) / busy;
+        if cap_rep.is_nan() || cap_rep <= 0.0 {
+            return None;
+        }
+        knowledge
+            .stage_capacity
+            .insert((snap.stage, n_s), cap_rep * n_s as f64);
+        per_replica.push(cap_rep);
+    }
+    // Cumulative observed selectivity: stage s's input per source tuple.
+    let mut cumsel = vec![1.0; n_stages];
+    for s in 1..n_stages {
+        let up = &data.stages[s - 1];
+        let ratio = if up.throughput > 1e-9 {
+            (data.stages[s].throughput / up.throughput).clamp(0.01, 20.0)
+        } else {
+            1.0
+        };
+        cumsel[s] = cumsel[s - 1] * ratio;
+    }
+    let cap_at = |knowledge: &Knowledge, s: usize, n: usize| -> f64 {
+        match knowledge.stage_capacity.get(&(s, n)) {
+            Some(c) => *c,
+            None => per_replica[s] * n as f64,
+        }
+    };
+
+    // Plan: smallest per-stage replica count covering the observed average
+    // and the forecast horizon, in this stage's input units.
+    let tsf_max_full = max_until(tsf, tsf.len());
+    let demand_source = data.workload_avg.max(tsf_max_full);
+    let mut targets = Vec::with_capacity(n_stages);
+    for s in 0..n_stages {
+        let demand_s = demand_source * cumsel[s];
+        let mut n = max_scaleout;
+        for cand in 1..=max_scaleout {
+            if cap_at(knowledge, s, cand) > demand_s {
+                n = cand;
+                break;
+            }
+        }
+        targets.push(n);
+    }
+
+    // Execute constraint: the pipeline must recover within the target. The
+    // job's source-rate capacity is the tightest stage's capacity mapped
+    // back to source units; grow the bottleneck stage until the predicted
+    // recovery fits (or nothing can grow).
+    let current = &data.stage_parallelism;
+    let pipeline_cap = |knowledge: &Knowledge, targets: &[usize]| -> (f64, usize) {
+        let mut cap = f64::INFINITY;
+        let mut argmin = 0;
+        for s in 0..n_stages {
+            let c = cap_at(knowledge, s, targets[s]) / cumsel[s].max(1e-9);
+            if c < cap {
+                cap = c;
+                argmin = s;
+            }
+        }
+        (cap, argmin)
+    };
+    let cur_total: usize = current.iter().sum();
+    let mut predicted = None;
+    if cfg.use_recovery_constraint {
+        for _ in 0..(n_stages * max_scaleout) {
+            let (c_src, bottleneck) = pipeline_cap(knowledge, &targets);
+            let tgt_total: usize = targets.iter().sum();
+            let downtime = knowledge.anticipated_downtime(cur_total, tgt_total);
+            let rt = predict_recovery_time(c_src, recent, tsf, CHECKPOINT_INTERVAL, downtime);
+            if rt <= cfg.recovery_target || targets[bottleneck] >= max_scaleout {
+                predicted = Some(rt);
+                break;
+            }
+            targets[bottleneck] += 1;
+        }
+    } else {
+        let (c_src, _) = pipeline_cap(knowledge, &targets);
+        let tgt_total: usize = targets.iter().sum();
+        let downtime = knowledge.anticipated_downtime(cur_total, tgt_total);
+        predicted = Some(predict_recovery_time(
+            c_src,
+            recent,
+            tsf,
+            CHECKPOINT_INTERVAL,
+            downtime,
+        ));
+    }
+
+    // Consumer-lag scale-in protection (§3.2), at the job level: while the
+    // pipeline is behind by more than its source capacity, hold.
+    let tgt_total: usize = targets.iter().sum();
+    if cfg.use_lag_guard && tgt_total < cur_total {
+        let (c_src, _) = pipeline_cap(knowledge, &targets);
+        if c_src < data.consumer_lag {
+            return Some(StagePlanDecision {
+                targets: current.clone(),
+                predicted_recovery: None,
+            });
+        }
+    }
+    Some(StagePlanDecision {
+        targets,
+        predicted_recovery: predicted,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +272,8 @@ mod tests {
         MonitorData {
             now: 1_000,
             workers: vec![],
+            stages: vec![],
+            stage_parallelism: vec![],
             history: vec![avg; 1800],
             workload_avg: avg,
             workload_max: avg * 1.05,
@@ -260,6 +405,138 @@ mod tests {
             18,
         );
         assert!(decision.target > 3, "decision {decision:?}");
+    }
+
+    fn staged_data(avg: f64, lag: f64) -> MonitorData {
+        use crate::metrics::query::StageSnapshot;
+        // Three stages at 2 replicas each; the middle stage amplifies ×3.
+        // Per-replica true capacities: 20k / 6.25k / 15k.
+        MonitorData {
+            now: 1_000,
+            workers: vec![],
+            stages: vec![
+                StageSnapshot {
+                    stage: 0,
+                    parallelism: 2,
+                    busy: 0.25,
+                    throughput: avg,
+                    queue: 0.0,
+                },
+                StageSnapshot {
+                    stage: 1,
+                    parallelism: 2,
+                    busy: 0.8,
+                    throughput: avg,
+                    queue: 0.0,
+                },
+                StageSnapshot {
+                    stage: 2,
+                    parallelism: 2,
+                    busy: 1.0,
+                    throughput: avg * 3.0,
+                    queue: 0.0,
+                },
+            ],
+            stage_parallelism: vec![2, 2, 2],
+            history: vec![avg; 1800],
+            workload_avg: avg,
+            workload_max: avg * 1.05,
+            consumer_lag: lag,
+            parallelism: 2,
+        }
+    }
+
+    #[test]
+    fn stage_plan_targets_each_operator_minimally() {
+        let mut k = knowledge();
+        let d = staged_data(10_000.0, 0.0);
+        let decision = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k,
+            &DaedalusConfig::default(),
+            12,
+        )
+        .expect("plan");
+        // Stage 0: 20k/replica for 10k → 1. Stage 1: 6.25k/replica for
+        // 10k → 2. Stage 2: 15k/replica for 30k (×3) → 3.
+        assert_eq!(decision.targets, vec![1, 2, 3]);
+        // Ledger recorded the observed (stage, n) capacities.
+        crate::assert_close!(k.stage_capacity[&(0, 2)], 40_000.0, rtol = 1e-9);
+        crate::assert_close!(k.stage_capacity[&(1, 2)], 12_500.0, rtol = 1e-9);
+    }
+
+    #[test]
+    fn stage_plan_lag_guard_blocks_net_scale_in() {
+        let mut k = knowledge();
+        // Lightly loaded pipeline whose minimal vector [1, 1, 2] is a net
+        // scale-in from [2, 2, 2] — but a huge consumer lag must hold it.
+        let mut d = staged_data(2_000.0, 50_000_000.0);
+        d.stages[1].busy = 0.2; // per-replica 5k → stage 1 needs 1
+        d.stages[2].busy = 0.75; // per-replica 4k for 6k demand → needs 2
+        let held = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![2_000.0; 900]),
+            &mut k,
+            &DaedalusConfig::default(),
+            12,
+        )
+        .expect("plan");
+        assert_eq!(held.targets, vec![2, 2, 2], "lag guard must hold the current vector");
+        // Without the lag, the same pipeline shrinks.
+        let mut k2 = knowledge();
+        let mut d2 = staged_data(2_000.0, 0.0);
+        d2.stages[1].busy = 0.2;
+        d2.stages[2].busy = 0.75;
+        let shrunk = plan_stage_scale_out(
+            1_000,
+            &d2,
+            &fc(vec![2_000.0; 900]),
+            &mut k2,
+            &DaedalusConfig::default(),
+            12,
+        )
+        .expect("plan");
+        assert!(
+            shrunk.targets.iter().sum::<usize>() < 6,
+            "expected a net scale-in, got {:?}",
+            shrunk.targets
+        );
+    }
+
+    #[test]
+    fn stage_plan_recovery_constraint_grows_bottleneck() {
+        let mut k = knowledge();
+        let mut cfg = DaedalusConfig::default();
+        cfg.recovery_target = 60.0;
+        let d = staged_data(10_000.0, 0.0);
+        let relaxed = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k,
+            &DaedalusConfig::default(),
+            12,
+        )
+        .unwrap();
+        let tight = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k,
+            &cfg,
+            12,
+        )
+        .unwrap();
+        assert!(
+            tight.targets.iter().sum::<usize>() > relaxed.targets.iter().sum::<usize>(),
+            "tight {:?} vs relaxed {:?}",
+            tight.targets,
+            relaxed.targets
+        );
+        assert!(tight.predicted_recovery.unwrap() <= 60.0 || tight.targets.contains(&12));
     }
 
     #[test]

@@ -1,22 +1,32 @@
 //! DS2-style reactive autoscaler (Kalavri et al., OSDI '18) — the paper's
-//! §2 "three steps is all you need" comparison point.
+//! §2 "three steps is all you need" comparison point, in its **true
+//! per-operator formulation**.
 //!
 //! DS2 computes each operator's *true processing rate* (tuples/s of pure
-//! processing, excluding idle/back-pressure time) and jumps directly to the
-//! minimal parallelism whose aggregate true rate covers the observed source
-//! rate. It is purely reactive (no forecasting), assumes **no data skew**
-//! (scales by averages), and assumes the workload holds still while it
-//! converges — exactly the limitations Daedalus targets (§2).
+//! processing, excluding idle/back-pressure time) and jumps every operator
+//! directly to the minimal parallelism whose aggregate true rate covers
+//! that operator's share of the source rate. On a staged deployment
+//! ([`crate::dsp::StageModel::Staged`]) this controller therefore emits a
+//! **vector** of per-stage parallelisms ([`ScalePlan::PerStage`]): per-stage
+//! busy fractions → per-stage true rates → per-stage targets, with observed
+//! output/input ratios propagating the source rate down the chain exactly
+//! as DS2's instrumented dataflow graph does. It is purely reactive (no
+//! forecasting) and assumes the workload holds still while it converges —
+//! the limitations Daedalus targets (§2).
 //!
-//! Mapping to our observables: a worker's busy fraction is
-//! `(cpu − idle) / (cpu_sat − idle)`; its true rate is
-//! `throughput / busy_fraction`. We estimate `idle`/`cpu_sat` conservatively
-//! from the observed CPU range, as DS2 instruments its runtimes to do.
+//! On the fused flat pool the retained **job-level** path applies: a
+//! worker's busy fraction is estimated as `(cpu − idle) / (cpu_sat − idle)`
+//! with `idle`/`cpu_sat` calibrated conservatively from the observed CPU
+//! range, and the job jumps to a single parallelism. The staged path reads
+//! the engine's exact `stage_busy` instrumentation instead — real DS2
+//! instruments operator useful-time precisely, which is why its
+//! per-operator targets are tight where coarse CPU calibration must be
+//! conservative.
 
 use super::Autoscaler;
 use crate::clock::Timestamp;
-use crate::dsp::engine::SimView;
-use crate::metrics::query::worker_snapshots;
+use crate::dsp::engine::{ScalePlan, SimView};
+use crate::metrics::query::{stage_snapshots, worker_snapshots};
 
 /// DS2 tuning.
 #[derive(Debug, Clone)]
@@ -47,9 +57,23 @@ impl Ds2Config {
     }
 }
 
+/// Reconfiguration granularity of the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Ds2Mode {
+    /// True DS2: every operator jumps to its own minimal parallelism
+    /// (per-stage vector on a staged deployment).
+    #[default]
+    PerOperator,
+    /// Job-level reconfiguration: the worst operator's requirement is
+    /// applied to *every* operator uniformly (Flink reactive-mode
+    /// semantics) — the comparison baseline for the granularity dividend.
+    JobLevel,
+}
+
 /// The DS2-like controller.
 pub struct Ds2 {
     cfg: Ds2Config,
+    mode: Ds2Mode,
     last_decision: Option<Timestamp>,
     last_rescale: Option<Timestamp>,
     /// Running estimate of the idle-CPU floor (min CPU ever seen).
@@ -60,13 +84,84 @@ pub struct Ds2 {
 
 impl Ds2 {
     pub fn new(cfg: Ds2Config) -> Self {
+        Self::with_mode(cfg, Ds2Mode::PerOperator)
+    }
+
+    /// Job-level variant (uniform vector on staged deployments).
+    pub fn job_level(cfg: Ds2Config) -> Self {
+        Self::with_mode(cfg, Ds2Mode::JobLevel)
+    }
+
+    pub fn with_mode(cfg: Ds2Config, mode: Ds2Mode) -> Self {
         Self {
             cfg,
+            mode,
             last_decision: None,
             last_rescale: None,
             idle_floor: 0.05,
             sat_ceiling: 0.5,
         }
+    }
+
+    /// Shared gating: readiness, decision interval, post-rescale cooldown.
+    /// Marks the decision slot when it passes.
+    fn gate(&mut self, view: &SimView<'_>) -> bool {
+        if !view.ready {
+            return false;
+        }
+        if let Some(t) = self.last_decision {
+            if view.now < t + self.cfg.interval {
+                return false;
+            }
+        }
+        if let Some(t) = self.last_rescale {
+            if view.now < t + self.cfg.cooldown {
+                return false;
+            }
+        }
+        self.last_decision = Some(view.now);
+        true
+    }
+
+    /// The per-operator core: per-stage busy fractions → per-stage true
+    /// rates → per-stage minimal parallelisms, with observed output/input
+    /// ratios propagating the source rate down the chain.
+    fn stage_targets(&self, view: &SimView<'_>) -> Option<Vec<usize>> {
+        let n_stages = view.stage_parallelism.len();
+        let snaps = stage_snapshots(view.tsdb, view.now, 60, n_stages);
+        if snaps.len() < n_stages {
+            return None;
+        }
+        let source_rate = view
+            .tsdb
+            .last_at(&crate::metrics::SeriesId::global("workload_rate"), view.now)
+            .map(|(_, v)| v)?;
+        let mut demand = source_rate;
+        let mut targets = Vec::with_capacity(n_stages);
+        for (s, snap) in snaps.iter().enumerate() {
+            let n_s = view.stage_parallelism[s].max(1);
+            // The staged engine instruments per-stage busy time exactly
+            // (as DS2 instruments operator useful-time), so the true rate
+            // needs no CPU-range calibration.
+            let busy = snap.busy.clamp(0.02, 1.0);
+            let per_replica_true = (snap.throughput / n_s as f64) / busy;
+            if per_replica_true.is_nan() || per_replica_true <= 0.0 {
+                return None;
+            }
+            let t_s = ((self.cfg.headroom * demand / per_replica_true).ceil() as usize)
+                .clamp(self.cfg.min_replicas, self.cfg.max_replicas);
+            targets.push(t_s);
+            if s + 1 < n_stages {
+                // Observed selectivity: downstream input over this input.
+                let ratio = if snap.throughput > 1e-9 {
+                    (snaps[s + 1].throughput / snap.throughput).clamp(0.01, 20.0)
+                } else {
+                    1.0
+                };
+                demand *= ratio;
+            }
+        }
+        Some(targets)
     }
 }
 
@@ -76,20 +171,9 @@ impl Autoscaler for Ds2 {
     }
 
     fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
-        if !view.ready {
+        if !self.gate(view) {
             return None;
         }
-        if let Some(t) = self.last_decision {
-            if view.now < t + self.cfg.interval {
-                return None;
-            }
-        }
-        if let Some(t) = self.last_rescale {
-            if view.now < t + self.cfg.cooldown {
-                return None;
-            }
-        }
-        self.last_decision = Some(view.now);
 
         let snaps = worker_snapshots(view.tsdb, view.now, 60);
         if snaps.is_empty() {
@@ -132,6 +216,44 @@ impl Autoscaler for Ds2 {
         self.last_rescale = Some(view.now);
         Some(target)
     }
+
+    fn decide_plan(&mut self, view: &SimView<'_>) -> Option<ScalePlan> {
+        // Fused flat pool: the retained job-level formulation.
+        if view.stage_parallelism.is_empty() {
+            return self.decide(view).map(ScalePlan::Uniform);
+        }
+        if !self.gate(view) {
+            return None;
+        }
+        let targets = self.stage_targets(view)?;
+        let current = view.stage_parallelism;
+        let plan = match self.mode {
+            Ds2Mode::PerOperator => {
+                let delta: usize = targets
+                    .iter()
+                    .zip(current)
+                    .map(|(a, b)| a.abs_diff(*b))
+                    .sum();
+                if delta < self.cfg.min_delta.max(1) {
+                    return None;
+                }
+                ScalePlan::PerStage(targets)
+            }
+            Ds2Mode::JobLevel => {
+                // Reconfiguration granularity = the whole job: every
+                // operator gets the worst operator's requirement.
+                let max = targets.iter().copied().max().unwrap_or(1);
+                let cur_max = current.iter().copied().max().unwrap_or(1);
+                let uniform = current.iter().all(|&c| c == cur_max);
+                if uniform && max.abs_diff(cur_max) < self.cfg.min_delta.max(1) {
+                    return None;
+                }
+                ScalePlan::Uniform(max)
+            }
+        };
+        self.last_rescale = Some(view.now);
+        Some(plan)
+    }
 }
 
 #[cfg(test)]
@@ -141,20 +263,25 @@ mod tests {
     use crate::jobs::JobProfile;
     use crate::workload::{ConstantWorkload, StepWorkload};
 
+    /// The replica bound DS2 runs under in the sweep: taken from the
+    /// scenario registry's canonical cell instead of a hard-coded constant,
+    /// so these tests cannot drift from the registry defaults.
+    fn registry_max_replicas() -> usize {
+        let reg = crate::experiments::scenarios::ScenarioRegistry::builtin(1_200, &[1]);
+        reg.get("flink-wordcount-sine").unwrap().max_replicas
+    }
+
     fn drive(workload: Box<dyn crate::workload::Workload>, secs: u64) -> Simulation {
+        let max_replicas = registry_max_replicas();
         let cfg = SimConfig {
-            profile: EngineProfile::flink(),
-            job: JobProfile::wordcount(),
-            workload,
             partitions: 36,
-            initial_replicas: 4,
-            max_replicas: 12,
+            max_replicas,
             seed: 9,
             rate_noise: 0.01,
-            failures: vec![],
+            ..SimConfig::base(EngineProfile::flink(), JobProfile::wordcount(), workload)
         };
         let mut sim = Simulation::new(cfg);
-        let mut ds2 = Ds2::new(Ds2Config::defaults(12));
+        let mut ds2 = Ds2::new(Ds2Config::defaults(max_replicas));
         for t in 0..secs {
             sim.step(t);
             if let Some(n) = ds2.decide(&sim.view()) {
@@ -196,15 +323,81 @@ mod tests {
 
     #[test]
     fn holds_during_cooldown_and_restarts() {
-        let mut ds2 = Ds2::new(Ds2Config::defaults(12));
+        let max = registry_max_replicas();
+        let mut ds2 = Ds2::new(Ds2Config::defaults(max));
         let db = crate::metrics::Tsdb::new();
         let view = SimView {
             now: 100,
             tsdb: &db,
             parallelism: 4,
             ready: false,
-            max_replicas: 12,
+            max_replicas: max,
+            stage_parallelism: &[],
         };
         assert_eq!(ds2.decide(&view), None);
+        assert_eq!(ds2.decide_plan(&view), None);
+    }
+
+    /// Hand-built staged metrics: three stages where the middle one is the
+    /// bottleneck. The per-operator formulation must target each stage
+    /// individually; the job-level mode must apply the max uniformly.
+    fn staged_db() -> crate::metrics::Tsdb {
+        let mut db = crate::metrics::Tsdb::new();
+        for t in 0..200u64 {
+            db.record_global("workload_rate", t, 10_000.0);
+            // Stage 0: source, 10k in, busy 0.25 at 2 replicas
+            //   → per-replica true rate 20k → needs 1.
+            db.record_stage("stage_throughput", 0, t, 10_000.0);
+            db.record_stage("stage_busy", 0, t, 0.25);
+            db.record_stage("stage_parallelism", 0, t, 2.0);
+            db.record_stage("stage_queue", 0, t, 0.0);
+            // Stage 1: flat-map ×3 output, 10k in, busy 0.8 at 2 replicas
+            //   → per-replica true 6.25k → needs ceil(1.1·10k/6.25k) = 2.
+            db.record_stage("stage_throughput", 1, t, 10_000.0);
+            db.record_stage("stage_busy", 1, t, 0.8);
+            db.record_stage("stage_parallelism", 1, t, 2.0);
+            db.record_stage("stage_queue", 1, t, 50.0);
+            // Stage 2: 30k in (sel 3), busy 1.0 at 2 replicas
+            //   → per-replica true 15k → needs ceil(1.1·30k/15k) = 3.
+            db.record_stage("stage_throughput", 2, t, 30_000.0);
+            db.record_stage("stage_busy", 2, t, 1.0);
+            db.record_stage("stage_parallelism", 2, t, 2.0);
+            db.record_stage("stage_queue", 2, t, 5_000.0);
+        }
+        db
+    }
+
+    #[test]
+    fn per_operator_mode_emits_stage_vector() {
+        let db = staged_db();
+        let mut ds2 = Ds2::new(Ds2Config::defaults(12));
+        let stage_par = [2usize, 2, 2];
+        let view = SimView {
+            now: 199,
+            tsdb: &db,
+            parallelism: 2,
+            ready: true,
+            max_replicas: 12,
+            stage_parallelism: &stage_par,
+        };
+        let plan = ds2.decide_plan(&view).expect("per-stage plan");
+        assert_eq!(plan, ScalePlan::PerStage(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn job_level_mode_applies_max_uniformly() {
+        let db = staged_db();
+        let mut ds2 = Ds2::job_level(Ds2Config::defaults(12));
+        let stage_par = [2usize, 2, 2];
+        let view = SimView {
+            now: 199,
+            tsdb: &db,
+            parallelism: 2,
+            ready: true,
+            max_replicas: 12,
+            stage_parallelism: &stage_par,
+        };
+        let plan = ds2.decide_plan(&view).expect("uniform plan");
+        assert_eq!(plan, ScalePlan::Uniform(3));
     }
 }

@@ -183,6 +183,7 @@ mod tests {
             parallelism,
             ready,
             max_replicas: 18,
+            stage_parallelism: &[],
         }
     }
 

@@ -23,7 +23,7 @@ pub use hpa::{Hpa, HpaConfig};
 pub use phoebe::{Phoebe, PhoebeConfig};
 pub use statik::Static;
 
-use crate::dsp::engine::SimView;
+use crate::dsp::engine::{ScalePlan, SimView};
 
 /// A horizontal autoscaling policy.
 pub trait Autoscaler {
@@ -34,6 +34,16 @@ pub trait Autoscaler {
     /// Returning `Some(n)` requests a rescale to `n` replicas; the engine
     /// ignores requests equal to the current parallelism or mid-restart.
     fn decide(&mut self, view: &SimView<'_>) -> Option<usize>;
+
+    /// Called once per simulated second by the harness. Job-level
+    /// autoscalers inherit this uniform-vector adapter: their single
+    /// parallelism is applied to every operator stage (Flink reactive-mode
+    /// semantics) or to the fused pool. Per-operator autoscalers (DS2,
+    /// Daedalus on a staged deployment) override it to emit
+    /// [`ScalePlan::PerStage`] vectors.
+    fn decide_plan(&mut self, view: &SimView<'_>) -> Option<ScalePlan> {
+        self.decide(view).map(ScalePlan::Uniform)
+    }
 
     /// Whether the harness should complete a checkpoint immediately before
     /// applying this scaler's rescale (Phoebe's manual pre-scale

@@ -48,15 +48,13 @@ pub fn profile_job(
             duration: 1_200,
         };
         let cfg = SimConfig {
-            profile: profile.clone(),
-            job: job.clone(),
-            workload: Box::new(workload),
             partitions: max_replicas,
             initial_replicas: n,
             max_replicas,
             seed: seed.wrapping_add(i as u64 * 7_919),
             rate_noise: 0.01,
             failures: vec![700],
+            ..SimConfig::base(profile.clone(), job.clone(), Box::new(workload))
         };
         let mut sim = Simulation::new(cfg);
         for t in 0..1_200 {

@@ -48,6 +48,7 @@ mod tests {
             parallelism: 4,
             ready: true,
             max_replicas: 18,
+            stage_parallelism: &[],
         };
         assert_eq!(s.decide(&v), Some(12));
         let v = SimView {
@@ -56,6 +57,7 @@ mod tests {
             parallelism: 12,
             ready: true,
             max_replicas: 18,
+            stage_parallelism: &[],
         };
         assert_eq!(s.decide(&v), None);
     }

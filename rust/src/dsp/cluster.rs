@@ -74,7 +74,16 @@ impl Cluster {
     /// Returns whether a restart began.
     pub fn request_rescale(&mut self, t: Timestamp, target: usize, downtime_secs: f64) -> bool {
         let target = target.clamp(1, self.max_replicas);
-        if !matches!(self.phase, Phase::Running) || target == self.current {
+        target != self.current && self.request_restart(t, target, downtime_secs)
+    }
+
+    /// Begin a restart toward `target` even when the scalar parallelism is
+    /// unchanged — the staged engine's per-stage vector may differ while
+    /// its max (the job parallelism this scalar machine tracks) does not.
+    /// Returns whether a restart began (false while already restarting).
+    pub fn request_restart(&mut self, t: Timestamp, target: usize, downtime_secs: f64) -> bool {
+        let target = target.clamp(1, self.max_replicas);
+        if !matches!(self.phase, Phase::Running) {
             return false;
         }
         self.transitions.push((t, self.current, target));
@@ -87,15 +96,7 @@ impl Cluster {
 
     /// Force a restart at the *same* parallelism (failure recovery).
     pub fn request_failure_restart(&mut self, t: Timestamp, downtime_secs: f64) -> bool {
-        if !matches!(self.phase, Phase::Running) {
-            return false;
-        }
-        self.transitions.push((t, self.current, self.current));
-        self.phase = Phase::Restarting {
-            until: t + downtime_secs.ceil().max(1.0) as Timestamp,
-            target: self.current,
-        };
-        true
+        self.request_restart(t, self.current, downtime_secs)
     }
 
     /// Advance the state machine to time `t`; returns `Some(new_replicas)`

@@ -1,11 +1,38 @@
 //! The discrete-time simulation engine: one tick per second.
 //!
 //! Each tick: the generator produces tuples into skew-weighted partitions;
-//! if the cluster is serving, each worker drains its assigned partitions
-//! FIFO (oldest chunk first across partitions) up to its capacity; CPU,
-//! throughput, lag and latency are derived and recorded into the TSDB.
-//! Rescales and failures are stop-the-world restarts with exactly-once
-//! replay from the last completed checkpoint (paper §3.4, Fig 6).
+//! if the cluster is serving, the deployment drains its queues up to
+//! capacity; CPU, throughput, lag and latency are derived and recorded into
+//! the TSDB. Rescales and failures are stop-the-world restarts with
+//! exactly-once replay from the last completed checkpoint (paper §3.4,
+//! Fig 6).
+//!
+//! ## Stage models
+//!
+//! The engine executes a job's [`crate::jobs::Topology`] under one of two
+//! [`StageModel`]s:
+//!
+//! * [`StageModel::Fused`] — the retained flat-pool reference (operator
+//!   chaining): every worker runs the whole chain on its partition slice;
+//!   parallelism is a single number. This is the paper's deployment model
+//!   and the reference the staged engine is pinned against for
+//!   single-operator topologies (`tests/invariants.rs`).
+//! * [`StageModel::Staged`] — every operator is its own stage with its own
+//!   replica set. Stage 0 reads the source partitions exactly like the
+//!   fused pool; each downstream stage is fed by a *bounded* inter-stage
+//!   queue whose input is the upstream stage's output scaled by its
+//!   (possibly drifting) selectivity. A full queue throttles the upstream
+//!   stage, so backpressure propagates hop by hop until the source stops
+//!   consuming and Kafka lag grows — exactly how a real pipeline surfaces
+//!   a hot operator. Checkpoints snapshot a consistent cut (source offsets
+//!   + per-stage counters + in-flight queue contents); a restart restores
+//!   that cut and replays from the source, preserving per-stage flow
+//!   conservation (`operator_conservation` in `tests/invariants.rs`).
+//!   Per-stage scale-outs are a *vector* of replica counts
+//!   ([`ScalePlan::PerStage`]); job-level autoscalers drive the staged
+//!   engine through the uniform-vector adapter ([`ScalePlan::Uniform`] =
+//!   Flink reactive mode, which sets every operator to the same
+//!   parallelism).
 //!
 //! ## Hot path: the cross-partition FIFO merge
 //!
@@ -18,19 +45,51 @@
 //! index tie-break reproduces the naive scan's first-lowest-index choice
 //! exactly, so both policies are bit-identical (pinned by
 //! `tests/invariants.rs`); the naive scan is retained as the reference and
-//! as the `engine_tick_1h_naive_merge` bench baseline.
+//! as the `engine_tick_1h_naive_merge` bench baseline. The staged source
+//! stage reuses the same merge.
+
+use std::collections::VecDeque;
 
 use crate::clock::Timestamp;
-use crate::jobs::JobProfile;
+use crate::jobs::{JobProfile, SelectivityDrift, Topology};
 use crate::metrics::tsdb::{SeriesHandle, SeriesId};
 use crate::metrics::Tsdb;
 use crate::stats::{Ecdf, Rng};
 use crate::workload::Workload;
 
 use super::cluster::{Cluster, Phase};
-use super::partition::Partition;
+use super::partition::{Chunk, Partition};
 use super::profile::EngineProfile;
+use super::skew::KeyDistribution;
 use super::worker::Worker;
+
+/// How the engine maps a job's operator chain onto workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StageModel {
+    /// Flat worker pool running the whole chain (operator chaining) — the
+    /// retained reference model, bit-compatible with the pre-stage engine.
+    #[default]
+    Fused,
+    /// One replica set per operator with bounded inter-stage queues and
+    /// upstream backpressure.
+    Staged,
+}
+
+/// A rescale request: a single parallelism (job-level autoscalers) or one
+/// replica count per operator stage (per-operator autoscalers).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScalePlan {
+    /// All stages (or the fused pool) at the same parallelism — Flink
+    /// reactive-mode semantics, and the adapter that keeps HPA/Static
+    /// job-level on the staged engine.
+    Uniform(usize),
+    /// Per-stage replica counts (length = number of operators).
+    PerStage(Vec<usize>),
+}
+
+/// Seconds of effective stage capacity an inter-stage queue may buffer
+/// before backpressure throttles the upstream stage.
+const BACKPRESSURE_SECS: f64 = 5.0;
 
 /// Static configuration of one simulated deployment.
 pub struct SimConfig {
@@ -40,6 +99,7 @@ pub struct SimConfig {
     /// Kafka partitions; the paper provisions as many as the max scale-out.
     pub partitions: usize,
     pub initial_replicas: usize,
+    /// Maximum replicas (per stage under [`StageModel::Staged`]).
     pub max_replicas: usize,
     pub seed: u64,
     /// Multiplicative per-tick noise on the produced rate (σ).
@@ -47,21 +107,50 @@ pub struct SimConfig {
     /// Seconds at which a worker failure is injected (§4.8 future work —
     /// implemented here and exercised by tests/benches).
     pub failures: Vec<Timestamp>,
+    /// Whether operators run fused on a flat pool (reference) or as
+    /// per-operator stages.
+    pub stage_model: StageModel,
+    /// Optional mid-run selectivity drift (the `bottleneck-shift`
+    /// mechanism); applies to both stage models.
+    pub selectivity_drift: Option<SelectivityDrift>,
+    /// Optional override of the job's Zipf exponent (the `skew-amplify`
+    /// mechanism).
+    pub zipf_override: Option<f64>,
+    /// Optional topology override (tests); defaults to the job profile's
+    /// operator chain.
+    pub topology: Option<Topology>,
 }
 
 impl SimConfig {
     /// Paper-style deployment: partitions = max scale-out, mild rate noise.
     pub fn paper(profile: EngineProfile, job: JobProfile, workload: Box<dyn Workload>) -> Self {
         Self {
-            profile,
-            job,
-            workload,
             partitions: 72,
             initial_replicas: 4,
             max_replicas: 18,
             seed: 1,
             rate_noise: 0.02,
+            ..Self::base(profile, job, workload)
+        }
+    }
+
+    /// Minimal config with neutral defaults — the base most call sites
+    /// override with functional-update syntax.
+    pub fn base(profile: EngineProfile, job: JobProfile, workload: Box<dyn Workload>) -> Self {
+        Self {
+            profile,
+            job,
+            workload,
+            partitions: 72,
+            initial_replicas: 4,
+            max_replicas: 12,
+            seed: 1,
+            rate_noise: 0.0,
             failures: Vec::new(),
+            stage_model: StageModel::Fused,
+            selectivity_drift: None,
+            zipf_override: None,
+            topology: None,
         }
     }
 
@@ -73,6 +162,11 @@ impl SimConfig {
     pub fn with_replicas(mut self, initial: usize, max: usize) -> Self {
         self.initial_replicas = initial;
         self.max_replicas = max;
+        self
+    }
+
+    pub fn with_stage_model(mut self, model: StageModel) -> Self {
+        self.stage_model = model;
         self
     }
 }
@@ -159,9 +253,55 @@ pub struct RescaleEvent {
 pub struct SimView<'a> {
     pub now: Timestamp,
     pub tsdb: &'a Tsdb,
+    /// Job parallelism: the fused pool size, or the max stage parallelism
+    /// under the staged model (Flink's notion of job parallelism).
     pub parallelism: usize,
     pub ready: bool,
+    /// Maximum replicas (per stage under the staged model).
     pub max_replicas: usize,
+    /// Per-stage replica counts under [`StageModel::Staged`]; empty for
+    /// the fused reference pool. Per-operator autoscalers key their
+    /// per-stage metric reads off this.
+    pub stage_parallelism: &'a [usize],
+}
+
+/// One operator stage of the staged engine: its input queue, exactly-once
+/// flow counters, and the consistent-cut snapshot taken at each checkpoint.
+struct Stage {
+    op: crate::jobs::Operator,
+    /// Replica workers (speed-jittered pods).
+    workers: Vec<Worker>,
+    /// Input queue (stages ≥ 1; stage 0 reads the source partitions).
+    queue: VecDeque<Chunk>,
+    queue_backlog: f64,
+    /// Input tuples processed, net of exactly-once replay.
+    consumed: f64,
+    /// Output tuples emitted downstream (Σ take × selectivity(t)).
+    emitted: f64,
+    committed_consumed: f64,
+    committed_emitted: f64,
+    /// Consistent-cut queue snapshot from the last completed checkpoint.
+    queue_snapshot: VecDeque<Chunk>,
+    snapshot_backlog: f64,
+    /// Per-replica-count skew weights for keyed stages (lazily cached):
+    /// `n -> (effective-capacity factor, per-replica weight shares)`.
+    skew_cache: std::collections::HashMap<usize, (f64, Vec<f64>)>,
+    /// Scratch: processed input this tick.
+    last_processed: f64,
+}
+
+/// Per-stage flow counters exposed to the conservation test suite.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageFlow {
+    /// Input tuples processed (net of exactly-once replay).
+    pub consumed: f64,
+    /// Output tuples emitted downstream.
+    pub emitted: f64,
+    /// Tuples waiting in the stage's input queue (0 for the source stage,
+    /// whose backlog lives in the Kafka partitions).
+    pub queue_backlog: f64,
+    pub committed_consumed: f64,
+    pub committed_emitted: f64,
 }
 
 /// One simulated DSP deployment (cluster + job + source).
@@ -195,6 +335,28 @@ pub struct Simulation {
     assign_n: usize,
     /// Reusable per-worker merge heap of `(head_time, partition_idx)`.
     scratch_heap: Vec<(f64, usize)>,
+    /// Reusable per-tick consumed-chunk buffer (staged serve).
+    scratch_chunks: Vec<Chunk>,
+    /// Reusable per-tick per-replica throughput buffer (staged serve).
+    scratch_replica: Vec<f64>,
+    /// Reusable per-tick per-stage effective-capacity buffer (staged
+    /// serve; each stage's capacity is computed once per tick and shared
+    /// between its own budget and the upstream backpressure bound).
+    scratch_eff: Vec<f64>,
+    // --- Staged-model state (empty / unused under StageModel::Fused) ---
+    stage_model: StageModel,
+    topology: Topology,
+    drift: Option<SelectivityDrift>,
+    /// Nominal (un-drifted) whole-chain cost, for the fused engine's
+    /// capacity scaling under drift.
+    nominal_cost_us: f64,
+    stages: Vec<Stage>,
+    /// Current per-stage replica counts (empty when fused).
+    stage_replicas: Vec<usize>,
+    /// Pending per-stage targets while a staged restart is in flight.
+    stage_target: Option<Vec<usize>>,
+    /// The job's key distribution (staged keyed-shuffle skew).
+    key_dist: KeyDistribution,
 }
 
 /// Pre-resolved TSDB handles for the per-tick recording hot path.
@@ -208,10 +370,19 @@ struct Handles {
     latency_p95: SeriesHandle,
     worker_tput: Vec<SeriesHandle>,
     worker_cpu: Vec<SeriesHandle>,
+    /// Per-stage aggregates (staged model only; empty when fused).
+    stage_tput: Vec<SeriesHandle>,
+    stage_busy: Vec<SeriesHandle>,
+    stage_queue: Vec<SeriesHandle>,
+    stage_par: Vec<SeriesHandle>,
 }
 
 impl Handles {
-    fn new(db: &mut Tsdb, max_workers: usize) -> Self {
+    /// `max_workers` is the fused pool bound, or the per-stage bound when
+    /// `n_stages > 0` (per-replica series use flattened indices
+    /// `stage · max_workers + replica`).
+    fn new(db: &mut Tsdb, max_workers: usize, n_stages: usize) -> Self {
+        let flat = max_workers * n_stages.max(1);
         Self {
             workload: db.handle(SeriesId::global("workload_rate")),
             lag: db.handle(SeriesId::global("consumer_lag")),
@@ -220,11 +391,23 @@ impl Handles {
             throughput: db.handle(SeriesId::global("throughput")),
             latency: db.handle(SeriesId::global("latency_ms")),
             latency_p95: db.handle(SeriesId::global("latency_p95_ms")),
-            worker_tput: (0..max_workers)
+            worker_tput: (0..flat)
                 .map(|w| db.handle(SeriesId::worker("worker_throughput", w)))
                 .collect(),
-            worker_cpu: (0..max_workers)
+            worker_cpu: (0..flat)
                 .map(|w| db.handle(SeriesId::worker("worker_cpu", w)))
+                .collect(),
+            stage_tput: (0..n_stages)
+                .map(|s| db.handle(SeriesId::stage("stage_throughput", s)))
+                .collect(),
+            stage_busy: (0..n_stages)
+                .map(|s| db.handle(SeriesId::stage("stage_busy", s)))
+                .collect(),
+            stage_queue: (0..n_stages)
+                .map(|s| db.handle(SeriesId::stage("stage_queue", s)))
+                .collect(),
+            stage_par: (0..n_stages)
+                .map(|s| db.handle(SeriesId::stage("stage_parallelism", s)))
                 .collect(),
         }
     }
@@ -232,20 +415,58 @@ impl Handles {
 
 impl Simulation {
     pub fn new(cfg: SimConfig) -> Self {
+        let mut job = cfg.job;
+        if let Some(z) = cfg.zipf_override {
+            job.zipf_s = z;
+        }
         let mut rng = Rng::new(cfg.seed);
-        let kd = cfg.job.key_distribution(cfg.seed);
+        let kd = job.key_distribution(cfg.seed);
         let partition_weights = kd.partition_weights(cfg.partitions);
         let partitions = (0..cfg.partitions).map(|_| Partition::new()).collect();
+        let topology = cfg.topology.unwrap_or_else(|| job.topology());
+        let nominal_cost_us = topology.cost_per_source_tuple_us();
+        let staged = cfg.stage_model == StageModel::Staged;
+        let n_stages = if staged { topology.operators.len() } else { 0 };
         let mut worker_rng = rng.fork();
-        let workers = (0..cfg.initial_replicas)
-            .map(|_| Worker::spawn(&mut worker_rng, cfg.profile.speed_jitter))
-            .collect();
+        let (workers, stages, stage_replicas) = if staged {
+            let replicas = vec![cfg.initial_replicas.clamp(1, cfg.max_replicas); n_stages];
+            let stages = topology
+                .operators
+                .iter()
+                .zip(&replicas)
+                .map(|(op, &n)| Stage {
+                    op: op.clone(),
+                    workers: (0..n)
+                        .map(|_| Worker::spawn(&mut worker_rng, cfg.profile.speed_jitter))
+                        .collect(),
+                    queue: VecDeque::new(),
+                    queue_backlog: 0.0,
+                    consumed: 0.0,
+                    emitted: 0.0,
+                    committed_consumed: 0.0,
+                    committed_emitted: 0.0,
+                    queue_snapshot: VecDeque::new(),
+                    snapshot_backlog: 0.0,
+                    skew_cache: std::collections::HashMap::new(),
+                    last_processed: 0.0,
+                })
+                .collect();
+            (Vec::new(), stages, replicas)
+        } else {
+            let workers = (0..cfg.initial_replicas)
+                .map(|_| Worker::spawn(&mut worker_rng, cfg.profile.speed_jitter))
+                .collect();
+            (workers, Vec::new(), Vec::new())
+        };
         let mut tsdb = Tsdb::new();
-        let handles = Handles::new(&mut tsdb, cfg.max_replicas);
+        let handles = Handles::new(&mut tsdb, cfg.max_replicas, n_stages);
         Self {
-            cluster: Cluster::new(cfg.initial_replicas, cfg.max_replicas),
+            cluster: Cluster::new(
+                cfg.initial_replicas.clamp(1, cfg.max_replicas),
+                cfg.max_replicas,
+            ),
             profile: cfg.profile,
-            job: cfg.job,
+            job,
             workload: cfg.workload,
             partition_weights,
             partitions,
@@ -267,6 +488,17 @@ impl Simulation {
             assign: Vec::new(),
             assign_n: 0,
             scratch_heap: Vec::new(),
+            scratch_chunks: Vec::new(),
+            scratch_replica: Vec::new(),
+            scratch_eff: Vec::new(),
+            stage_model: cfg.stage_model,
+            topology,
+            drift: cfg.selectivity_drift,
+            nominal_cost_us,
+            stages,
+            stage_replicas,
+            stage_target: None,
+            key_dist: kd,
         }
     }
 
@@ -305,6 +537,7 @@ impl Simulation {
         self.worker_seconds
     }
 
+    /// Job parallelism: fused pool size, or max stage parallelism (staged).
     pub fn parallelism(&self) -> usize {
         self.cluster.parallelism()
     }
@@ -317,6 +550,51 @@ impl Simulation {
         self.cluster.max_replicas()
     }
 
+    /// The active stage model.
+    pub fn stage_model(&self) -> StageModel {
+        self.stage_model
+    }
+
+    /// Number of operator stages (0 under the fused model).
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Current per-stage replica counts (empty under the fused model).
+    pub fn stage_parallelism(&self) -> &[usize] {
+        &self.stage_replicas
+    }
+
+    /// Operator names, stage by stage (staged model).
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.op.name).collect()
+    }
+
+    /// Flow counters of stage `s` (conservation test surface).
+    pub fn stage_flow(&self, s: usize) -> StageFlow {
+        let st = &self.stages[s];
+        StageFlow {
+            consumed: st.consumed,
+            emitted: st.emitted,
+            queue_backlog: st.queue_backlog,
+            committed_consumed: st.committed_consumed,
+            committed_emitted: st.committed_emitted,
+        }
+    }
+
+    /// Workers currently allocated (billed): the fused pool, or the sum of
+    /// stage replica counts — restarts bill the target set from the moment
+    /// the restart begins, as the fused model does.
+    pub fn allocated_workers(&self) -> usize {
+        match self.stage_model {
+            StageModel::Fused => self.cluster.allocated(),
+            StageModel::Staged => match &self.stage_target {
+                Some(v) => v.iter().sum(),
+                None => self.stage_replicas.iter().sum(),
+            },
+        }
+    }
+
     /// Autoscaler-facing view at the current tick.
     pub fn view(&self) -> SimView<'_> {
         SimView {
@@ -325,6 +603,40 @@ impl Simulation {
             parallelism: self.cluster.parallelism(),
             ready: self.cluster.ready(),
             max_replicas: self.cluster.max_replicas(),
+            stage_parallelism: &self.stage_replicas,
+        }
+    }
+
+    /// Complete a checkpoint: source offsets commit and every stage
+    /// snapshots its consistent cut (counters + in-flight queue). No-op
+    /// while restarting.
+    fn complete_checkpoint(&mut self, t: Timestamp) {
+        for p in &mut self.partitions {
+            p.checkpoint();
+        }
+        for st in &mut self.stages {
+            st.committed_consumed = st.consumed;
+            st.committed_emitted = st.emitted;
+            st.queue_snapshot.clear();
+            st.queue_snapshot.extend(st.queue.iter().copied());
+            st.snapshot_backlog = st.queue_backlog;
+        }
+        self.last_checkpoint = t;
+    }
+
+    /// Exactly-once replay: source partitions rewind to the committed
+    /// offset and every stage restores its checkpoint cut (in-flight data
+    /// past the cut is discarded and will re-flow from the source).
+    fn rewind_all(&mut self) {
+        for p in &mut self.partitions {
+            p.rewind();
+        }
+        for st in &mut self.stages {
+            st.consumed = st.committed_consumed;
+            st.emitted = st.committed_emitted;
+            st.queue.clear();
+            st.queue.extend(st.queue_snapshot.iter().copied());
+            st.queue_backlog = st.snapshot_backlog;
         }
     }
 
@@ -332,24 +644,25 @@ impl Simulation {
     /// before rescaling to minimize replay, §4.8). No-op while restarting.
     pub fn checkpoint_now(&mut self) {
         if self.cluster.ready() {
-            for p in &mut self.partitions {
-                p.checkpoint();
-            }
-            self.last_checkpoint = self.now;
+            self.complete_checkpoint(self.now);
         }
     }
 
-    /// Request a rescale to `target` replicas (stop-the-world; §3.4).
-    /// Returns the event if a restart actually began.
+    /// Request a rescale to `target` replicas (stop-the-world; §3.4). On
+    /// the staged engine this is the uniform-vector adapter: every stage
+    /// goes to `target` (Flink reactive mode). Returns the event if a
+    /// restart actually began.
     pub fn request_rescale(&mut self, target: usize) -> Option<RescaleEvent> {
+        if self.stage_model == StageModel::Staged {
+            let v = vec![target; self.stages.len()];
+            return self.request_rescale_stages(&v);
+        }
         let from = self.cluster.parallelism();
         let base = self.profile.restart_secs(from, target.clamp(1, self.max_replicas()));
         let downtime = base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
         if self.cluster.request_rescale(self.now, target, downtime) {
             // Exactly-once: processing stops now; uncommitted reads replay.
-            for p in &mut self.partitions {
-                p.rewind();
-            }
+            self.rewind_all();
             let ev = RescaleEvent {
                 t: self.now,
                 from,
@@ -364,14 +677,73 @@ impl Simulation {
         }
     }
 
+    /// Request a per-stage rescale (staged model only): one replica count
+    /// per operator. The whole job restarts stop-the-world (§3.4); the
+    /// event's `from`/`to` record *total* worker counts.
+    pub fn request_rescale_stages(&mut self, targets: &[usize]) -> Option<RescaleEvent> {
+        assert_eq!(
+            self.stage_model,
+            StageModel::Staged,
+            "per-stage rescale on a fused deployment"
+        );
+        assert_eq!(
+            targets.len(),
+            self.stages.len(),
+            "per-stage rescale vector length must match the operator count"
+        );
+        let max_r = self.max_replicas();
+        let clamped: Vec<usize> = targets.iter().map(|&n| n.clamp(1, max_r)).collect();
+        let from_total: usize = self.stage_replicas.iter().sum();
+        let to_total: usize = clamped.iter().sum();
+        let base = self.profile.restart_secs(from_total, to_total);
+        let downtime = base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
+        if clamped == self.stage_replicas {
+            return None;
+        }
+        let to_max = clamped.iter().copied().max().unwrap_or(1);
+        if self.cluster.request_restart(self.now, to_max, downtime) {
+            self.rewind_all();
+            self.stage_target = Some(clamped);
+            let ev = RescaleEvent {
+                t: self.now,
+                from: from_total,
+                to: to_total,
+                downtime_secs: downtime,
+                failure: false,
+            };
+            self.rescale_log.push(ev);
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    /// Apply an autoscaler's [`ScalePlan`] under the current stage model.
+    /// Per-stage plans degrade to their max on the fused pool (a flat pool
+    /// has a single parallelism).
+    pub fn request_rescale_plan(&mut self, plan: &ScalePlan) -> Option<RescaleEvent> {
+        match (self.stage_model, plan) {
+            (_, ScalePlan::Uniform(n)) => self.request_rescale(*n),
+            (StageModel::Staged, ScalePlan::PerStage(v)) => self.request_rescale_stages(v),
+            (StageModel::Fused, ScalePlan::PerStage(v)) => {
+                self.request_rescale(v.iter().copied().max().unwrap_or(1))
+            }
+        }
+    }
+
     fn inject_failure(&mut self) {
-        let from = self.cluster.parallelism();
+        let from = match self.stage_model {
+            StageModel::Fused => self.cluster.parallelism(),
+            StageModel::Staged => self.stage_replicas.iter().sum(),
+        };
         let base = self.profile.restart_secs(from, from).max(self.profile.restart_out_secs);
         let downtime = self.profile.failure_detection_secs
             + base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
         if self.cluster.request_failure_restart(self.now, downtime) {
-            for p in &mut self.partitions {
-                p.rewind();
+            self.rewind_all();
+            if self.stage_model == StageModel::Staged {
+                // Same counts come back, but every pod is recreated.
+                self.stage_target = Some(self.stage_replicas.clone());
             }
             self.rescale_log.push(RescaleEvent {
                 t: self.now,
@@ -399,9 +771,25 @@ impl Simulation {
         //    reset; checkpoint clock restarts.
         if let Some(n) = self.cluster.tick(t) {
             let jitter = self.profile.speed_jitter;
-            self.workers = (0..n)
-                .map(|_| Worker::spawn(&mut self.rng, jitter))
-                .collect();
+            match self.stage_model {
+                StageModel::Fused => {
+                    self.workers = (0..n)
+                        .map(|_| Worker::spawn(&mut self.rng, jitter))
+                        .collect();
+                }
+                StageModel::Staged => {
+                    let targets = self
+                        .stage_target
+                        .take()
+                        .unwrap_or_else(|| self.stage_replicas.clone());
+                    for (st, &n_s) in self.stages.iter_mut().zip(&targets) {
+                        st.workers = (0..n_s)
+                            .map(|_| Worker::spawn(&mut self.rng, jitter))
+                            .collect();
+                    }
+                    self.stage_replicas = targets;
+                }
+            }
             self.last_checkpoint = t;
         }
 
@@ -417,13 +805,13 @@ impl Simulation {
         // 3. Serve.
         let serving = self.cluster.serving_replicas();
         if serving > 0 {
-            self.serve(t, serving, rate);
+            match self.stage_model {
+                StageModel::Fused => self.serve(t, serving, rate),
+                StageModel::Staged => self.serve_staged(t, rate),
+            }
             // 4. Checkpoints complete only while serving.
             if t - self.last_checkpoint >= self.profile.checkpoint_interval {
-                for p in &mut self.partitions {
-                    p.checkpoint();
-                }
-                self.last_checkpoint = t;
+                self.complete_checkpoint(t);
             }
         }
 
@@ -432,9 +820,16 @@ impl Simulation {
         self.tsdb.record_h(self.handles.lag, t, lag);
         self.tsdb
             .record_h(self.handles.parallelism, t, self.cluster.parallelism() as f64);
-        let allocated = self.cluster.allocated() as f64;
+        let allocated = self.allocated_workers() as f64;
         self.tsdb.record_h(self.handles.allocated, t, allocated);
         self.worker_seconds += allocated;
+        // Per-stage bookkeeping series (every tick, like parallelism).
+        for s in 0..self.stages.len() {
+            self.tsdb
+                .record_h(self.handles.stage_par[s], t, self.stage_replicas[s] as f64);
+            self.tsdb
+                .record_h(self.handles.stage_queue[s], t, self.stages[s].queue_backlog);
+        }
     }
 
     /// Rebuild the per-worker partition assignment lists for `n` workers,
@@ -455,9 +850,24 @@ impl Simulation {
         self.assign_n = n;
     }
 
+    /// Whole-chain per-worker capacity of the fused pool at time `t` — the
+    /// configured constant, scaled by the drifting chain cost when a
+    /// selectivity drift is active (bit-identical to the constant when no
+    /// drift is configured).
+    fn fused_base_capacity(&self, t: Timestamp) -> f64 {
+        match &self.drift {
+            None => self.job.base_capacity,
+            Some(d) => {
+                let cost = self.topology.cost_per_source_tuple_us_at(Some(d), t);
+                self.job.base_capacity * self.nominal_cost_us / cost.max(1e-9)
+            }
+        }
+    }
+
     /// One serving tick: drain queues worker by worker.
     fn serve(&mut self, t: Timestamp, n: usize, rate: f64) {
         let service_ms = self.job.service_latency_ms(n, rate);
+        let base_cap = self.fused_base_capacity(t);
         if self.merge_policy == MergePolicy::Heap && self.assign_n != n {
             self.rebuild_assignments(n);
         }
@@ -465,7 +875,7 @@ impl Simulation {
         let mut heap = std::mem::take(&mut self.scratch_heap);
         scratch.clear();
         for w in 0..n {
-            let capacity = self.workers[w].capacity(self.job.base_capacity);
+            let capacity = self.workers[w].capacity(base_cap);
             let mut budget = capacity;
             // FIFO merge across this worker's partitions (p % n == w):
             // consume the globally-oldest head chunk until the budget or
@@ -535,27 +945,266 @@ impl Simulation {
             self.tsdb.record_h(self.handles.worker_tput[w], t, processed);
             self.tsdb.record_h(self.handles.worker_cpu[w], t, cpu);
         }
-        if !scratch.is_empty() {
-            let total_w: f64 = scratch.iter().map(|(_, w)| w).sum();
-            let mean = scratch.iter().map(|(v, w)| v * w).sum::<f64>() / total_w;
-            self.tsdb.record_h(self.handles.latency, t, mean);
-            // Weighted p95 on the (small) per-tick sample set.
-            scratch.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            let mut acc = 0.0;
-            let mut p95 = scratch.last().unwrap().0;
-            for (v, w) in &scratch {
-                acc += w;
-                if acc >= 0.95 * total_w {
-                    p95 = *v;
-                    break;
-                }
-            }
-            self.tsdb.record_h(self.handles.latency_p95, t, p95);
-        }
+        self.record_latency_aggregates(t, &mut scratch);
         self.scratch_lat = scratch;
         self.scratch_heap = heap;
         let tput: f64 = self.workers[..n].iter().map(|w| w.last_throughput).sum();
         self.tsdb.record_h(self.handles.throughput, t, tput);
+    }
+
+    /// Record the per-tick weighted mean and weighted p95 of the collected
+    /// latency samples (shared by the fused and staged serve paths;
+    /// `scratch` is sorted in place). No-op on an empty tick.
+    fn record_latency_aggregates(&mut self, t: Timestamp, scratch: &mut Vec<(f64, f64)>) {
+        if scratch.is_empty() {
+            return;
+        }
+        let total_w: f64 = scratch.iter().map(|(_, w)| w).sum();
+        let mean = scratch.iter().map(|(v, w)| v * w).sum::<f64>() / total_w;
+        self.tsdb.record_h(self.handles.latency, t, mean);
+        // Weighted p95 on the (small) per-tick sample set.
+        scratch.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut acc = 0.0;
+        let mut p95 = scratch.last().unwrap().0;
+        for (v, w) in scratch.iter() {
+            acc += w;
+            if acc >= 0.95 * total_w {
+                p95 = *v;
+                break;
+            }
+        }
+        self.tsdb.record_h(self.handles.latency_p95, t, p95);
+    }
+
+    /// Fill (if needed) and return stage `s`'s skew entry for `n` replicas:
+    /// `(effective-capacity factor, per-replica load shares)`. Keyed stages
+    /// inherit the job's key skew hashed over their replicas — the stage
+    /// saturates when its hottest replica does; unkeyed stages split
+    /// round-robin evenly.
+    fn stage_skew_factor(&mut self, s: usize, n: usize) -> f64 {
+        if let Some(entry) = self.stages[s].skew_cache.get(&n) {
+            return entry.0;
+        }
+        let entry = if !self.stages[s].op.keyed || n <= 1 {
+            (1.0, vec![1.0 / n.max(1) as f64; n.max(1)])
+        } else {
+            let w = self.key_dist.partition_weights(n);
+            let max_w = w.iter().copied().fold(0.0, f64::max).max(1e-12);
+            ((1.0 / (n as f64 * max_w)).min(1.0), w)
+        };
+        let factor = entry.0;
+        self.stages[s].skew_cache.insert(n, entry);
+        factor
+    }
+
+    /// Per-replica load share of replica `r` at stage `s` (cache must have
+    /// been filled by [`Self::stage_skew_factor`] for this `n`).
+    fn stage_share(&self, s: usize, n: usize, r: usize) -> f64 {
+        self.stages[s].skew_cache[&n].1[r]
+    }
+
+    /// Effective (skew-limited) input capacity of stage `s` this tick.
+    fn stage_effective_capacity(&mut self, s: usize) -> f64 {
+        let n = self.stage_replicas[s];
+        let unit = 1e6 / self.stages[s].op.cost_us.max(1e-9);
+        let nominal: f64 = self.stages[s].workers.iter().map(|w| w.capacity(unit)).sum();
+        nominal * self.stage_skew_factor(s, n)
+    }
+
+    /// Coalescing push of `amount` tuples with source-arrival time `t`
+    /// onto the back of an inter-stage queue.
+    fn queue_push(queue: &mut VecDeque<Chunk>, t: f64, amount: f64) {
+        if amount <= 0.0 {
+            return;
+        }
+        match queue.back_mut() {
+            Some(last) if (last.t - t).abs() < 1e-9 => last.amount += amount,
+            _ => queue.push_back(Chunk { t, amount }),
+        }
+    }
+
+    /// One serving tick of the staged pipeline: stages drain in topology
+    /// order; each stage's intake is capped both by its own (skew-limited)
+    /// capacity and by the free space of the downstream queue, so a slow
+    /// stage backpressures its upstream hop by hop until the source stops
+    /// consuming and Kafka lag grows.
+    fn serve_staged(&mut self, t: Timestamp, rate: f64) {
+        let n_stages = self.stages.len();
+        let job_par = self.cluster.parallelism();
+        let service_ms = self.job.service_latency_ms(job_par, rate);
+        let max_r = self.max_replicas();
+        let mut scratch = std::mem::take(&mut self.scratch_lat);
+        let mut heap = std::mem::take(&mut self.scratch_heap);
+        let mut chunks = std::mem::take(&mut self.scratch_chunks);
+        let mut replica_tput = std::mem::take(&mut self.scratch_replica);
+        let mut eff = std::mem::take(&mut self.scratch_eff);
+        scratch.clear();
+        // Each stage's (skew-limited, jittered) capacity, computed once
+        // per tick: stage s reads eff[s] for its own budget and eff[s+1]
+        // for the backpressure bound.
+        eff.clear();
+        for s in 0..n_stages {
+            let e = self.stage_effective_capacity(s);
+            eff.push(e);
+        }
+
+        for s in 0..n_stages {
+            let n_s = self.stage_replicas[s];
+            let sel = self.topology.selectivity_at(s, self.drift.as_ref(), t);
+            let unit_cap = 1e6 / self.stages[s].op.cost_us.max(1e-9);
+            let skew = self.stage_skew_factor(s, n_s);
+            let eff_total = eff[s];
+            // Backpressure: how many *input* tuples we may process before
+            // the downstream queue (bounded to BACKPRESSURE_SECS of its
+            // effective capacity) would overflow.
+            let allowance = if s + 1 < n_stages {
+                let free = (BACKPRESSURE_SECS * eff[s + 1] - self.stages[s + 1].queue_backlog)
+                    .max(0.0);
+                if sel > 1e-12 {
+                    free / sel
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                f64::INFINITY
+            };
+
+            chunks.clear();
+            replica_tput.clear();
+            if s == 0 {
+                // Source stage: replicas drain their strided partitions
+                // with the same FIFO merge as the fused pool.
+                if self.assign_n != n_s {
+                    self.rebuild_assignments(n_s);
+                }
+                let mut remaining_allowance = allowance;
+                for r in 0..n_s {
+                    let cap_r = self.stages[0].workers[r].capacity(unit_cap) * skew;
+                    let budget0 = cap_r.min(remaining_allowance);
+                    let mut budget = budget0;
+                    heap.clear();
+                    for &pi in &self.assign[r] {
+                        if let Some(ht) = self.partitions[pi].head_time() {
+                            heap_push(&mut heap, (ht, pi));
+                        }
+                    }
+                    while let Some((_, pi)) = heap_pop(&mut heap) {
+                        let Some(chunk) = self.partitions[pi].consume_head(budget) else {
+                            break;
+                        };
+                        budget -= chunk.amount;
+                        chunks.push(chunk);
+                        if budget <= 1e-9 {
+                            break;
+                        }
+                        if let Some(ht) = self.partitions[pi].head_time() {
+                            heap_push(&mut heap, (ht, pi));
+                        }
+                    }
+                    let processed_r = budget0 - budget;
+                    replica_tput.push(processed_r);
+                    if remaining_allowance.is_finite() {
+                        remaining_allowance = (remaining_allowance - processed_r).max(0.0);
+                    }
+                }
+                // Replica streams are individually FIFO; restore global
+                // arrival order before handing downstream. Unstable sort:
+                // equal-time chunks coalesce into one queue entry on push,
+                // so their relative order cannot be observed — and the
+                // allocating stable sort has no place in the tick loop.
+                if n_stages > 1 {
+                    chunks.sort_unstable_by(|a, b| a.t.total_cmp(&b.t));
+                }
+            } else {
+                // Aggregate FIFO drain of the stage's input queue.
+                let budget0 = eff_total.min(allowance);
+                let mut budget = budget0;
+                let stage = &mut self.stages[s];
+                while budget > 1e-9 {
+                    let Some(front) = stage.queue.front_mut() else {
+                        break;
+                    };
+                    let take = front.amount.min(budget);
+                    chunks.push(Chunk {
+                        t: front.t,
+                        amount: take,
+                    });
+                    front.amount -= take;
+                    budget -= take;
+                    stage.queue_backlog = (stage.queue_backlog - take).max(0.0);
+                    if front.amount <= 1e-9 {
+                        stage.queue.pop_front();
+                    }
+                }
+            }
+
+            // Account, emit downstream / record end-to-end latency.
+            let processed: f64 = chunks.iter().map(|c| c.amount).sum();
+            {
+                let (head, tail) = self.stages.split_at_mut(s + 1);
+                let stage = &mut head[s];
+                stage.consumed += processed;
+                stage.emitted += processed * sel;
+                if let Some(down) = tail.first_mut() {
+                    for c in &chunks {
+                        let out = c.amount * sel;
+                        Self::queue_push(&mut down.queue, c.t, out);
+                        down.queue_backlog += out;
+                    }
+                } else {
+                    for c in &chunks {
+                        let wait_ms = ((t as f64 + 0.5 - c.t) * 1_000.0).max(0.0);
+                        let lat = wait_ms + service_ms;
+                        self.latencies.push(lat, c.amount);
+                        scratch.push((lat, c.amount));
+                    }
+                }
+                let busy = if eff_total > 0.0 {
+                    (processed / eff_total).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                stage.last_processed = processed;
+                self.tsdb.record_h(self.handles.stage_tput[s], t, processed);
+                self.tsdb.record_h(self.handles.stage_busy[s], t, busy);
+            }
+
+            // Per-replica series (flattened worker indices) for the
+            // job-level autoscalers' CPU view.
+            for r in 0..n_s {
+                let tput_r = if s == 0 {
+                    replica_tput[r]
+                } else {
+                    processed * self.stage_share(s, n_s, r)
+                };
+                let cap_nominal = self.stages[s].workers[r].capacity(unit_cap);
+                let util = if cap_nominal > 0.0 {
+                    (tput_r / cap_nominal).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                let cpu = (self.profile.cpu_for_utilization(util)
+                    * (1.0 + self.rng.normal() * self.profile.cpu_noise))
+                    .clamp(0.0, 1.0);
+                let w = &mut self.stages[s].workers[r];
+                w.last_throughput = tput_r;
+                w.last_cpu = cpu;
+                let flat = s * max_r + r;
+                self.tsdb.record_h(self.handles.worker_tput[flat], t, tput_r);
+                self.tsdb.record_h(self.handles.worker_cpu[flat], t, cpu);
+            }
+        }
+
+        // Global series: throughput in source-tuple terms (stage 0) and
+        // the per-tick latency aggregates from the sink stage's samples.
+        let source_tput = self.stages[0].last_processed;
+        self.tsdb.record_h(self.handles.throughput, t, source_tput);
+        self.record_latency_aggregates(t, &mut scratch);
+        self.scratch_lat = scratch;
+        self.scratch_heap = heap;
+        self.scratch_chunks = chunks;
+        self.scratch_replica = replica_tput;
+        self.scratch_eff = eff;
     }
 
     /// Serving phase (for tests / reporting).
@@ -563,8 +1212,16 @@ impl Simulation {
         self.cluster.phase
     }
 
-    /// Total backlog across partitions (unconsumed tuples).
+    /// Total backlog: unconsumed source tuples, plus (staged) the bounded
+    /// in-flight contents of the inter-stage queues in their stages' input
+    /// units.
     pub fn total_backlog(&self) -> f64 {
+        let source: f64 = self.partitions.iter().map(|p| p.backlog()).sum();
+        source + self.stages.iter().map(|s| s.queue_backlog).sum::<f64>()
+    }
+
+    /// Unconsumed source tuples only (the Kafka-visible backlog).
+    pub fn source_backlog(&self) -> f64 {
         self.partitions.iter().map(|p| p.backlog()).sum()
     }
 
@@ -595,10 +1252,47 @@ impl Simulation {
         self.partitions.iter().map(|p| p.lag()).sum()
     }
 
-    /// Run invariant checks over all partitions (debug/test aid).
+    /// Run invariant checks over all partitions and (staged) all stage
+    /// flows (debug/test aid).
     pub fn check_invariants(&self) {
         for p in &self.partitions {
             p.check_invariants();
+        }
+        for (s, st) in self.stages.iter().enumerate() {
+            let queued: f64 = st.queue.iter().map(|c| c.amount).sum();
+            let tol = 1e-6 * st.consumed.max(1.0);
+            assert!(
+                (queued - st.queue_backlog).abs() < tol.max(1e-4),
+                "stage {s} ({}): queue mass {queued} != tracked backlog {}",
+                st.op.name,
+                st.queue_backlog
+            );
+            assert!(
+                st.committed_consumed <= st.consumed + tol,
+                "stage {s}: committed_consumed > consumed"
+            );
+            // Inter-stage flow conservation: what the upstream stage
+            // emitted either got consumed here or is still queued.
+            if s > 0 {
+                let up = &self.stages[s - 1];
+                let flow_tol = 1e-6 * up.emitted.max(1.0);
+                assert!(
+                    (up.emitted - st.consumed - st.queue_backlog).abs() < flow_tol,
+                    "stage {s}: upstream emitted {} != consumed {} + queued {}",
+                    up.emitted,
+                    st.consumed,
+                    st.queue_backlog
+                );
+            } else if !self.stages.is_empty() {
+                // The source stage's intake is exactly the partitions'
+                // consumed offset total.
+                let src: f64 = self.partitions.iter().map(|p| p.consumed).sum();
+                assert!(
+                    (src - st.consumed).abs() < 1e-6 * src.max(1.0),
+                    "source stage consumed {} != partition offsets {src}",
+                    st.consumed
+                );
+            }
         }
     }
 }
@@ -610,18 +1304,17 @@ mod tests {
 
     fn sim_with(rate: f64, replicas: usize, seed: u64) -> Simulation {
         let cfg = SimConfig {
-            profile: EngineProfile::flink(),
-            job: JobProfile::wordcount(),
-            workload: Box::new(ConstantWorkload {
-                rate,
-                duration: 10_000,
-            }),
             partitions: 12,
             initial_replicas: replicas,
-            max_replicas: 12,
             seed,
-            rate_noise: 0.0,
-            failures: vec![],
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate,
+                    duration: 10_000,
+                }),
+            )
         };
         Simulation::new(cfg)
     }
@@ -671,19 +1364,17 @@ mod tests {
     #[test]
     fn cpu_tracks_utilization_linearly() {
         let cfg = SimConfig {
-            profile: EngineProfile::flink(),
-            job: JobProfile::wordcount(),
-            workload: Box::new(RampWorkload {
-                from: 1_000.0,
-                to: 20_000.0,
-                duration: 2_000,
-            }),
             partitions: 12,
-            initial_replicas: 4,
-            max_replicas: 12,
             seed: 3,
-            rate_noise: 0.0,
-            failures: vec![],
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(RampWorkload {
+                    from: 1_000.0,
+                    to: 20_000.0,
+                    duration: 2_000,
+                }),
+            )
         };
         let mut sim = Simulation::new(cfg);
         run(&mut sim, 1_500);
@@ -745,18 +1436,17 @@ mod tests {
     #[test]
     fn failure_injection_restarts_same_parallelism() {
         let cfg = SimConfig {
-            profile: EngineProfile::flink(),
-            job: JobProfile::wordcount(),
-            workload: Box::new(ConstantWorkload {
-                rate: 8_000.0,
-                duration: 2_000,
-            }),
             partitions: 12,
-            initial_replicas: 4,
-            max_replicas: 12,
             seed: 6,
-            rate_noise: 0.0,
             failures: vec![500],
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate: 8_000.0,
+                    duration: 2_000,
+                }),
+            )
         };
         let mut sim = Simulation::new(cfg);
         run(&mut sim, 499);
@@ -806,6 +1496,192 @@ mod tests {
         crate::assert_close!(sim.avg_workers(), 4.0, atol = 1e-9);
         // Ticks 0..=1000 inclusive → 1001 ticks at 4 workers.
         crate::assert_close!(sim.worker_seconds(), 4_004.0, atol = 1e-6);
+    }
+
+    fn staged_sim(rate: f64, replicas: usize, seed: u64) -> Simulation {
+        let cfg = SimConfig {
+            partitions: 24,
+            initial_replicas: replicas,
+            seed,
+            stage_model: StageModel::Staged,
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate,
+                    duration: 10_000,
+                }),
+            )
+        };
+        Simulation::new(cfg)
+    }
+
+    #[test]
+    fn staged_pipeline_processes_end_to_end() {
+        // 2 source replicas (~110k), plenty everywhere: a 10k load flows
+        // through all four wordcount stages within the run.
+        let mut sim = staged_sim(10_000.0, 2, 21);
+        run(&mut sim, 600);
+        assert_eq!(sim.n_stages(), 4);
+        assert_eq!(sim.stage_parallelism(), &[2, 2, 2, 2]);
+        sim.check_invariants();
+        // Every stage conserves selectivity exactly (no drift configured).
+        let topo = sim.job.topology();
+        for s in 0..4 {
+            let f = sim.stage_flow(s);
+            assert!(f.consumed > 0.0, "stage {s} never consumed");
+            crate::assert_close!(
+                f.emitted,
+                f.consumed * topo.operators[s].selectivity,
+                rtol = 1e-9,
+                atol = 1e-3
+            );
+        }
+        // Sink samples exist and the source keeps up.
+        assert!(sim.latencies().total_weight() > 0.0);
+        assert!(sim.source_backlog() < 20_000.0, "{}", sim.source_backlog());
+    }
+
+    #[test]
+    fn staged_bottleneck_backpressures_to_the_source() {
+        // Choke the keyed count stage (1 replica handles ~71k of the 7×
+        // amplified stream; a 20k source load needs ~140k): its input
+        // queue must stay bounded while the *source* lag grows.
+        let mut sim = staged_sim(20_000.0, 4, 22);
+        sim.request_rescale_stages(&[4, 4, 1, 4]);
+        run(&mut sim, 400);
+        assert_eq!(sim.stage_parallelism(), &[4, 4, 1, 4]);
+        let count_queue = sim.stage_flow(2).queue_backlog;
+        // Bounded by BACKPRESSURE_SECS × effective capacity (~71k/s) plus
+        // one tick of in-flight emission.
+        assert!(
+            count_queue < 6.5 * 80_000.0,
+            "count queue {count_queue} not bounded by backpressure"
+        );
+        assert!(
+            sim.source_backlog() > 1_000_000.0,
+            "source lag {} should absorb the backpressure",
+            sim.source_backlog()
+        );
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn per_stage_rescale_is_stop_the_world_and_applies_vector() {
+        let mut sim = staged_sim(8_000.0, 2, 23);
+        run(&mut sim, 100);
+        let ev = sim.request_rescale_stages(&[1, 2, 3, 1]).expect("restart");
+        assert_eq!(ev.from, 8);
+        assert_eq!(ev.to, 7);
+        assert!(!sim.ready());
+        // Mid-restart requests are ignored.
+        assert!(sim.request_rescale_stages(&[5, 5, 5, 5]).is_none());
+        run(&mut sim, 200);
+        assert!(sim.ready());
+        assert_eq!(sim.stage_parallelism(), &[1, 2, 3, 1]);
+        assert_eq!(sim.parallelism(), 3, "job parallelism is the max stage");
+        // Same-vector requests are no-ops.
+        assert!(sim.request_rescale_stages(&[1, 2, 3, 1]).is_none());
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn uniform_adapter_fans_out_to_every_stage() {
+        let mut sim = staged_sim(8_000.0, 2, 24);
+        run(&mut sim, 50);
+        sim.request_rescale_plan(&ScalePlan::Uniform(5));
+        run(&mut sim, 200);
+        assert_eq!(sim.stage_parallelism(), &[5, 5, 5, 5]);
+        assert_eq!(sim.allocated_workers(), 20);
+        // And a per-stage plan on a fused pool degrades to its max.
+        let mut fused = sim_with(8_000.0, 2, 24);
+        run(&mut fused, 50);
+        fused.request_rescale_plan(&ScalePlan::PerStage(vec![1, 4, 2]));
+        run(&mut fused, 150);
+        assert_eq!(fused.parallelism(), 4);
+    }
+
+    #[test]
+    fn staged_rewind_restores_the_committed_cut() {
+        let mut sim = staged_sim(12_000.0, 2, 25);
+        run(&mut sim, 155);
+        // 155 is mid-checkpoint-interval: there is uncommitted progress.
+        let pre = sim.stage_flow(0);
+        assert!(pre.consumed > pre.committed_consumed);
+        // The rescale rewinds every stage exactly to the committed cut.
+        sim.request_rescale_stages(&[3, 3, 3, 3]).expect("restart");
+        for s in 0..4 {
+            let f = sim.stage_flow(s);
+            let tol = 1e-6 * f.consumed.max(1.0);
+            assert!(
+                (f.consumed - f.committed_consumed).abs() < tol,
+                "stage {s}: consumed did not rewind to the committed cut"
+            );
+            assert!(
+                (f.emitted - f.committed_emitted).abs() < tol,
+                "stage {s}: emitted did not rewind to the committed cut"
+            );
+        }
+        crate::assert_close!(
+            sim.total_consumed(),
+            sim.total_committed(),
+            rtol = 1e-9,
+            atol = 1e-6
+        );
+        // Replay re-flows the rewound tuples; conservation holds after.
+        run(&mut sim, 500);
+        sim.check_invariants();
+        let topo = sim.job.topology();
+        for s in 0..4 {
+            let f = sim.stage_flow(s);
+            crate::assert_close!(
+                f.emitted,
+                f.consumed * topo.operators[s].selectivity,
+                rtol = 1e-9,
+                atol = 1e-3
+            );
+        }
+    }
+
+    #[test]
+    fn selectivity_drift_shifts_fused_capacity() {
+        use crate::jobs::SelectivityDrift;
+        // Fused pool with the wordcount split-lines drift 7 → 2: the chain
+        // gets cheaper, so the same 4 workers stop saturating.
+        let mk = |drift| {
+            Simulation::new(SimConfig {
+                partitions: 24,
+                seed: 26,
+                selectivity_drift: drift,
+                ..SimConfig::base(
+                    EngineProfile::flink(),
+                    JobProfile::wordcount(),
+                    Box::new(ConstantWorkload {
+                        rate: 30_000.0,
+                        duration: 4_000,
+                    }),
+                )
+            })
+        };
+        let mut drifted = mk(Some(SelectivityDrift {
+            op: 1,
+            to: 2.0,
+            start: 0,
+            end: 1_000,
+        }));
+        let mut plain = mk(None);
+        for t in 0..2_000 {
+            drifted.step(t);
+            plain.step(t);
+        }
+        // Post-drift capacity ≈ 5500 × 170/90 ≈ 10.4k/worker → 4 workers
+        // absorb 30k; the un-drifted pool (22k cap) cannot.
+        assert!(
+            drifted.total_backlog() < 0.25 * plain.total_backlog(),
+            "drifted backlog {} vs plain {}",
+            drifted.total_backlog(),
+            plain.total_backlog()
+        );
     }
 
     #[test]

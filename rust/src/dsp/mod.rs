@@ -25,7 +25,9 @@ pub mod skew;
 pub mod worker;
 
 pub use cluster::{Cluster, Phase};
-pub use engine::{MergePolicy, RescaleEvent, SimConfig, Simulation};
+pub use engine::{
+    MergePolicy, RescaleEvent, ScalePlan, SimConfig, Simulation, StageFlow, StageModel,
+};
 pub use partition::Partition;
 pub use profile::EngineProfile;
 pub use skew::KeyDistribution;

@@ -70,15 +70,14 @@ pub fn run(
     let mut outcomes = Vec::new();
     for scaler in scalers.iter_mut() {
         let cfg = SimConfig {
-            profile: EngineProfile::flink(),
-            job: job.clone(),
-            workload: Box::new(SineWorkload::paper_default(peak, duration)),
-            partitions: 72,
-            initial_replicas: 4,
-            max_replicas: 12,
             seed,
             rate_noise: 0.02,
             failures: failures.clone(),
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                job.clone(),
+                Box::new(SineWorkload::paper_default(peak, duration)),
+            )
         };
         let mut sim = Simulation::new(cfg);
         for t in 0..duration {

@@ -57,15 +57,11 @@ fn run_fixed_parallelism(
 ) -> Simulation {
     let duration = workload.duration();
     let cfg = SimConfig {
-        profile: EngineProfile::flink(),
-        job,
-        workload,
-        partitions: 72,
         initial_replicas: replicas,
         max_replicas: replicas.max(12),
         seed,
         rate_noise: 0.02,
-        failures: vec![],
+        ..SimConfig::base(EngineProfile::flink(), job, workload)
     };
     let mut sim = Simulation::new(cfg);
     for t in 0..duration {

@@ -12,8 +12,8 @@ use crate::autoscaler::{
     Phoebe, PhoebeConfig, Static,
 };
 use crate::clock::Timestamp;
-use crate::dsp::{EngineProfile, SimConfig, Simulation};
-use crate::jobs::JobProfile;
+use crate::dsp::{EngineProfile, SimConfig, Simulation, StageModel};
+use crate::jobs::{JobProfile, SelectivityDrift};
 use crate::metrics::SeriesId;
 use crate::runtime::ComputeBackend;
 use crate::stats::Ecdf;
@@ -29,8 +29,12 @@ pub enum Approach {
     Static(usize),
     /// Phoebe profiles `scaleouts` first; profiling cost is accounted.
     Phoebe(PhoebeConfig, Vec<usize>),
-    /// DS2-style reactive true-rate scaler.
+    /// DS2-style reactive true-rate scaler (true per-operator formulation
+    /// on staged deployments).
     Ds2,
+    /// DS2 restricted to job-level reconfiguration: the worst operator's
+    /// requirement applied uniformly — the granularity-dividend baseline.
+    Ds2Job,
 }
 
 impl Approach {
@@ -41,12 +45,13 @@ impl Approach {
             Approach::Static(n) => format!("static-{n}"),
             Approach::Phoebe(..) => "phoebe".into(),
             Approach::Ds2 => "ds2".into(),
+            Approach::Ds2Job => "ds2-job".into(),
         }
     }
 
     /// Parse a descriptor string: `daedalus`, `hpa-<pct>`, `static-<n>`,
-    /// `phoebe`, `ds2`. The spec/scenario context supplies the bounds the
-    /// configurable approaches need.
+    /// `phoebe`, `ds2`, `ds2-job`. The spec/scenario context supplies the
+    /// bounds the configurable approaches need.
     pub fn parse(s: &str, max_replicas: usize, recovery_target: f64) -> crate::Result<Approach> {
         if s == "daedalus" {
             let cfg = DaedalusConfig {
@@ -68,6 +73,9 @@ impl Approach {
         if s == "ds2" {
             return Ok(Approach::Ds2);
         }
+        if s == "ds2-job" {
+            return Ok(Approach::Ds2Job);
+        }
         if let Some(t) = s.strip_prefix("hpa-") {
             let pct: f64 = t.parse().map_err(|_| anyhow!("bad HPA target {s:?}"))?;
             if !(1.0..=100.0).contains(&pct) {
@@ -80,7 +88,7 @@ impl Approach {
             return Ok(Approach::Static(n));
         }
         Err(anyhow!(
-            "unknown approach {s:?} (daedalus|hpa-<pct>|static-<n>|phoebe|ds2)"
+            "unknown approach {s:?} (daedalus|hpa-<pct>|static-<n>|phoebe|ds2|ds2-job)"
         ))
     }
 }
@@ -101,6 +109,12 @@ pub struct Experiment {
     pub sample_stride: u64,
     /// Seconds at which worker failures are injected (sorted ascending).
     pub failures: Vec<Timestamp>,
+    /// Fused flat pool (reference) or per-operator stages.
+    pub stage_model: StageModel,
+    /// Optional mid-run selectivity drift (`bottleneck-shift`).
+    pub selectivity_drift: Option<SelectivityDrift>,
+    /// Optional Zipf-exponent override (`skew-amplify`).
+    pub zipf_override: Option<f64>,
 }
 
 impl Experiment {
@@ -125,6 +139,9 @@ impl Experiment {
             backend,
             sample_stride: 30,
             failures: vec![],
+            stage_model: StageModel::Fused,
+            selectivity_drift: None,
+            zipf_override: None,
         }
     }
 
@@ -187,6 +204,10 @@ impl Experiment {
                 Box::new(Ds2::new(Ds2Config::defaults(self.max_replicas))),
                 0.0,
             ),
+            Approach::Ds2Job => (
+                Box::new(Ds2::job_level(Ds2Config::defaults(self.max_replicas))),
+                0.0,
+            ),
             Approach::Phoebe(cfg, scaleouts) => {
                 let report = profiler::profile_job(
                     &self.engine,
@@ -227,9 +248,6 @@ impl Experiment {
     ) -> (RunResult, RunTrace) {
         let (mut scaler, profiling_ws) = self.build_scaler(approach, seed);
         let cfg = SimConfig {
-            profile: self.engine.clone(),
-            job: self.job.clone(),
-            workload,
             partitions: self.partitions,
             initial_replicas: match approach {
                 Approach::Static(n) => *n,
@@ -239,6 +257,10 @@ impl Experiment {
             seed,
             rate_noise: 0.02,
             failures: self.failures.clone(),
+            stage_model: self.stage_model,
+            selectivity_drift: self.selectivity_drift,
+            zipf_override: self.zipf_override,
+            ..SimConfig::base(self.engine.clone(), self.job.clone(), workload)
         };
         let mut sim = Simulation::new(cfg);
         let mut parallelism_series = Vec::new();
@@ -248,11 +270,11 @@ impl Experiment {
         let stride = trace_stride.max(1);
         for t in 0..self.duration {
             sim.step(t);
-            if let Some(n) = scaler.decide(&sim.view()) {
+            if let Some(plan) = scaler.decide_plan(&sim.view()) {
                 if scaler.wants_precheckpoint() {
                     sim.checkpoint_now();
                 }
-                sim.request_rescale(n);
+                sim.request_rescale_plan(&plan);
             }
             if t % self.sample_stride == 0 {
                 parallelism_series.push((t, sim.parallelism()));
@@ -400,6 +422,9 @@ mod tests {
             backend: ComputeBackend::native(),
             sample_stride: 60,
             failures: vec![],
+            stage_model: StageModel::Fused,
+            selectivity_drift: None,
+            zipf_override: None,
         };
         let res = exp.run(&|_seed| {
             Box::new(SineWorkload::paper_default(20_000.0, 1_200))

@@ -44,15 +44,13 @@ pub fn run(
         cfg.recovery_target = target;
         let mut d = Daedalus::new(cfg, backend.clone());
         let mut sim = Simulation::new(SimConfig {
-            profile: EngineProfile::flink(),
-            job: job.clone(),
-            workload: Box::new(SineWorkload::paper_default(peak, duration)),
-            partitions: 72,
-            initial_replicas: 4,
-            max_replicas: 12,
             seed,
             rate_noise: 0.02,
-            failures: vec![],
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                job.clone(),
+                Box::new(SineWorkload::paper_default(peak, duration)),
+            )
         });
         for t in 0..duration {
             sim.step(t);

@@ -10,7 +10,9 @@
 
 use crate::clock::Timestamp;
 use crate::config::{EngineKind, JobKind};
+use crate::dsp::StageModel;
 use crate::experiments::harness::{Approach, Experiment};
+use crate::jobs::SelectivityDrift;
 use crate::runtime::ComputeBackend;
 use crate::workload::{ShapeKind, Workload};
 use crate::Result;
@@ -71,6 +73,12 @@ pub struct Scenario {
     pub max_replicas: usize,
     pub partitions: usize,
     pub recovery_target: f64,
+    /// Fused flat pool (the paper's deployment) or per-operator stages.
+    pub stage_model: StageModel,
+    /// `bottleneck-shift` mechanism: one operator's selectivity drifts.
+    pub selectivity_drift: Option<SelectivityDrift>,
+    /// `skew-amplify` mechanism: Zipf-exponent override.
+    pub zipf_override: Option<f64>,
 }
 
 impl Scenario {
@@ -82,6 +90,8 @@ impl Scenario {
         duration: Timestamp,
         seeds: Vec<u64>,
     ) -> Self {
+        let (stage_model, selectivity_drift, zipf_override) =
+            Self::engine_knobs_for(shape, job, duration);
         Self {
             name: format!(
                 "{}-{}-{}{}",
@@ -106,6 +116,47 @@ impl Scenario {
             max_replicas: 12,
             partitions: 72,
             recovery_target: 600.0,
+            stage_model,
+            selectivity_drift,
+            zipf_override,
+        }
+    }
+
+    /// The engine-level knobs a workload shape implies. The two
+    /// operator-level shapes run on the staged engine; everything else
+    /// stays on the fused reference pool (so the pre-existing scenario
+    /// matrix — and its goldens — are untouched by the stage refactor).
+    /// Public because the `run --config` spec path must wire the same
+    /// knobs when a spec names one of these shapes.
+    pub fn engine_knobs_for(
+        shape: ShapeKind,
+        job: JobKind,
+        duration: Timestamp,
+    ) -> (StageModel, Option<SelectivityDrift>, Option<f64>) {
+        match shape {
+            ShapeKind::BottleneckShift => {
+                // Drift the job's characteristic mid-chain selectivity over
+                // the middle half of the run so the dominant cost migrates
+                // between operators: WordCount's flat-map collapses 7 → 2
+                // words/line; the YSB / traffic filters stop filtering.
+                let drift = match job {
+                    JobKind::WordCount => SelectivityDrift {
+                        op: 1,
+                        to: 2.0,
+                        start: duration / 4,
+                        end: duration * 3 / 4,
+                    },
+                    JobKind::Ysb | JobKind::Traffic => SelectivityDrift {
+                        op: 2,
+                        to: 1.0,
+                        start: duration / 4,
+                        end: duration * 3 / 4,
+                    },
+                };
+                (StageModel::Staged, Some(drift), None)
+            }
+            ShapeKind::SkewAmplify => (StageModel::Staged, None, Some(1.1)),
+            _ => (StageModel::Fused, None, None),
         }
     }
 
@@ -132,6 +183,9 @@ impl Scenario {
         exp.initial_replicas = self.initial_replicas;
         exp.max_replicas = self.max_replicas;
         exp.partitions = self.partitions;
+        exp.stage_model = self.stage_model;
+        exp.selectivity_drift = self.selectivity_drift;
+        exp.zipf_override = self.zipf_override;
         exp
     }
 
@@ -154,13 +208,15 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The curated built-in matrix (14 scenarios): the six paper
+    /// The curated built-in matrix (18 scenarios): the six paper
     /// engine × job cells on their default traces, the three stress shapes
-    /// on several cells, and two failure-injection schedules.
+    /// on several cells, two failure-injection schedules, and four
+    /// staged-engine operator-elasticity cells (`bottleneck-shift`,
+    /// `skew-amplify`).
     pub fn builtin(duration: Timestamp, seeds: &[u64]) -> Self {
         use EngineKind::{Flink, KStreams};
         use JobKind::{Traffic, WordCount, Ysb};
-        use ShapeKind::{DiurnalDrift, FlashCrowd, OutageBackfill};
+        use ShapeKind::{BottleneckShift, DiurnalDrift, FlashCrowd, OutageBackfill, SkewAmplify};
 
         let s = |engine, job: JobKind, shape, failures| {
             Scenario::new(engine, job, shape, failures, duration, seeds.to_vec())
@@ -186,6 +242,13 @@ impl ScenarioRegistry {
             // Failure injection (the paper's §4.8 future work).
             s(Flink, Traffic, ShapeKind::Traffic, FailurePlan::MidRun),
             s(Flink, WordCount, ShapeKind::Sine, FailurePlan::Storm(3)),
+            // Operator-level elasticity (staged engine): the pipeline's
+            // hot spot migrates between operators / concentrates on one
+            // stage's hottest replica.
+            s(Flink, WordCount, BottleneckShift, FailurePlan::None),
+            s(Flink, Ysb, BottleneckShift, FailurePlan::None),
+            s(Flink, WordCount, SkewAmplify, FailurePlan::None),
+            s(KStreams, Ysb, SkewAmplify, FailurePlan::None),
         ];
         Self { scenarios }
     }
@@ -251,6 +314,34 @@ mod tests {
         // The paper cells are present.
         assert!(reg.get("flink-wordcount-sine").is_some());
         assert!(reg.get("kstreams-ysb-ctr").is_some());
+    }
+
+    #[test]
+    fn operator_elasticity_cells_carry_their_engine_knobs() {
+        let reg = ScenarioRegistry::builtin(7_200, &[1]);
+        let bs = reg.get("flink-wordcount-bottleneck-shift").unwrap();
+        assert_eq!(bs.stage_model, StageModel::Staged);
+        let drift = bs.selectivity_drift.expect("drift configured");
+        assert_eq!(drift.op, 1);
+        assert_eq!((drift.start, drift.end), (1_800, 5_400));
+        assert!(bs.zipf_override.is_none());
+
+        let sa = reg.get("flink-wordcount-skew-amplify").unwrap();
+        assert_eq!(sa.stage_model, StageModel::Staged);
+        assert!(sa.selectivity_drift.is_none());
+        assert_eq!(sa.zipf_override, Some(1.1));
+
+        // The pre-existing matrix stays on the fused reference pool, so
+        // its golden traces are untouched by the stage refactor.
+        for name in ["flink-wordcount-sine", "kstreams-ysb-ctr", "flink-wordcount-flash-crowd"] {
+            assert_eq!(reg.get(name).unwrap().stage_model, StageModel::Fused);
+        }
+
+        // The staged cells materialize runnable experiments with the
+        // knobs attached.
+        let exp = bs.to_experiment().unwrap();
+        assert_eq!(exp.stage_model, StageModel::Staged);
+        assert!(exp.selectivity_drift.is_some());
     }
 
     #[test]

@@ -75,15 +75,13 @@ pub fn run(backend: ComputeBackend, duration: u64, seed: u64) -> Result<Validati
     let job = JobProfile::wordcount();
     let peak = job.reference_peak;
     let cfg = SimConfig {
-        profile: EngineProfile::flink(),
-        job: job.clone(),
-        workload: Box::new(SineWorkload::paper_default(peak, duration)),
-        partitions: 72,
-        initial_replicas: 4,
-        max_replicas: 12,
         seed,
         rate_noise: 0.02,
-        failures: vec![],
+        ..SimConfig::base(
+            EngineProfile::flink(),
+            job.clone(),
+            Box::new(SineWorkload::paper_default(peak, duration)),
+        )
     };
     let mut sim = Simulation::new(cfg);
     let mut d = Daedalus::new(DaedalusConfig::default(), backend);

@@ -8,7 +8,7 @@
 
 pub mod topology;
 
-pub use topology::{Operator, Topology};
+pub use topology::{Operator, SelectivityDrift, Topology};
 
 use crate::dsp::KeyDistribution;
 
@@ -94,6 +94,18 @@ impl JobProfile {
     /// Capacity of `n` nominal-speed workers.
     pub fn capacity_at(&self, n: usize) -> f64 {
         self.base_capacity * n as f64
+    }
+
+    /// The operator chain behind this profile — the staged engine's stage
+    /// list. Custom profiles fall back to a single-operator chain whose
+    /// capacity matches `base_capacity` (staged ≡ fused on those).
+    pub fn topology(&self) -> Topology {
+        match self.name {
+            "wordcount" => Topology::wordcount(),
+            "ysb" => Topology::ysb(),
+            "traffic" => Topology::traffic(),
+            _ => Topology::single(self.name, self.base_capacity),
+        }
     }
 
     /// The job's key distribution (seeded).

@@ -2,12 +2,22 @@
 //! describes (§4.1), not opaque cost constants.
 //!
 //! Each job is a chain of operators with a per-tuple CPU cost and a
-//! selectivity (output/input ratio). A worker executes the whole chain on
-//! its partition slice (Flink operator-chaining / Kafka Streams topology),
-//! so the per-worker capacity is the reciprocal of the *effective* cost:
-//! cost of each operator weighted by how many tuples survive to reach it.
-//! `JobProfile::base_capacity` is derived from these chains, keeping the
-//! simulator's knob count low while making the job definitions auditable.
+//! selectivity (output/input ratio). Under the fused stage model a worker
+//! executes the whole chain on its partition slice (Flink operator-chaining
+//! / Kafka Streams topology), so the per-worker capacity is the reciprocal
+//! of the *effective* cost: cost of each operator weighted by how many
+//! tuples survive to reach it. Under [`crate::dsp::StageModel::Staged`]
+//! each operator gets its own replica set and the same costs drive the
+//! per-stage capacities instead. `JobProfile::base_capacity` is derived
+//! from these chains, keeping the simulator's knob count low while making
+//! the job definitions auditable.
+//!
+//! [`SelectivityDrift`] models a workload-characteristic change over the
+//! run (e.g. a filter's pass rate collapsing): the affected operator's
+//! selectivity interpolates linearly over a time window, which migrates the
+//! pipeline's hot spot between operators — the `bottleneck-shift` scenario.
+
+use crate::clock::Timestamp;
 
 /// One streaming operator.
 #[derive(Debug, Clone)]
@@ -17,6 +27,10 @@ pub struct Operator {
     pub cost_us: f64,
     /// Output tuples per input tuple (filter < 1, flat-map > 1).
     pub selectivity: f64,
+    /// Whether the operator is keyed (preceded by a key-based shuffle):
+    /// its staged replica set inherits key skew; unkeyed operators are fed
+    /// round-robin and split evenly.
+    pub keyed: bool,
 }
 
 impl Operator {
@@ -25,7 +39,46 @@ impl Operator {
             name,
             cost_us,
             selectivity,
+            keyed: false,
         }
+    }
+
+    /// A keyed (shuffle-fed, skew-susceptible) operator.
+    pub const fn keyed(name: &'static str, cost_us: f64, selectivity: f64) -> Self {
+        Self {
+            name,
+            cost_us,
+            selectivity,
+            keyed: true,
+        }
+    }
+}
+
+/// A linear drift of one operator's selectivity over `[start, end]`: the
+/// engine evaluates the affected operator at the interpolated value, so the
+/// pipeline's dominant cost term migrates between operators mid-run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SelectivityDrift {
+    /// Index of the drifting operator within the topology.
+    pub op: usize,
+    /// Selectivity at/after `end` (the start value is the operator's own).
+    pub to: f64,
+    pub start: Timestamp,
+    pub end: Timestamp,
+}
+
+impl SelectivityDrift {
+    /// Interpolated selectivity of the drifting operator at time `t`,
+    /// given its `base` (pre-drift) selectivity.
+    pub fn sel_at(&self, base: f64, t: Timestamp) -> f64 {
+        if t <= self.start || self.end <= self.start {
+            return base;
+        }
+        if t >= self.end {
+            return self.to;
+        }
+        let frac = (t - self.start) as f64 / (self.end - self.start) as f64;
+        base + (self.to - base) * frac
     }
 }
 
@@ -45,7 +98,7 @@ impl Topology {
             operators: vec![
                 Operator::new("kafka-source", 18.0, 1.0),
                 Operator::new("split-lines", 40.0, 7.0),
-                Operator::new("count-per-word", 14.0, 1.0),
+                Operator::keyed("count-per-word", 14.0, 1.0),
                 Operator::new("console-sink", 2.0, 1.0),
             ],
         }
@@ -63,7 +116,7 @@ impl Topology {
                 Operator::new("filter-event-type", 15.0, 0.33),
                 Operator::new("project-fields", 8.0, 1.0),
                 Operator::new("join-campaign-cache", 60.0, 1.0),
-                Operator::new("window-count-10s", 25.0, 1.0),
+                Operator::keyed("window-count-10s", 25.0, 1.0),
                 Operator::new("kafka-sink", 15.0, 1.0),
             ],
         }
@@ -78,21 +131,52 @@ impl Topology {
                 Operator::new("kafka-source", 20.0, 1.0),
                 Operator::new("deserialize-json", 60.0, 1.0),
                 Operator::new("filter-radius", 18.0, 0.40),
-                Operator::new("window-avg-speed-10s", 22.0, 1.0),
+                Operator::keyed("window-avg-speed-10s", 22.0, 1.0),
                 Operator::new("enrich-vehicle", 18.0, 1.0),
                 Operator::new("kafka-sink", 15.0, 1.0),
             ],
         }
     }
 
+    /// A degenerate single-operator chain whose nominal capacity equals
+    /// `capacity` tuples/s — the topology the staged engine derives for
+    /// custom job profiles, and the one the fused-vs-staged agreement pin
+    /// uses (both models collapse to the same flat pool on it).
+    pub fn single(name: &'static str, capacity: f64) -> Self {
+        Self {
+            name,
+            operators: vec![Operator::new(name, 1e6 / capacity.max(1e-9), 1.0)],
+        }
+    }
+
+    /// Selectivity of operator `i` at time `t` under an optional drift.
+    pub fn selectivity_at(&self, i: usize, drift: Option<&SelectivityDrift>, t: Timestamp) -> f64 {
+        let base = self.operators[i].selectivity;
+        match drift {
+            Some(d) if d.op == i => d.sel_at(base, t),
+            _ => base,
+        }
+    }
+
     /// Effective CPU cost per *source* tuple (µs): each operator's cost is
     /// weighted by the fraction of the stream that reaches it.
     pub fn cost_per_source_tuple_us(&self) -> f64 {
+        self.cost_per_source_tuple_us_at(None, 0)
+    }
+
+    /// [`Self::cost_per_source_tuple_us`] with an optional selectivity
+    /// drift evaluated at time `t` — the fused engine's time-varying
+    /// whole-chain cost under `bottleneck-shift`.
+    pub fn cost_per_source_tuple_us_at(
+        &self,
+        drift: Option<&SelectivityDrift>,
+        t: Timestamp,
+    ) -> f64 {
         let mut reach = 1.0;
         let mut total = 0.0;
-        for op in &self.operators {
+        for (i, op) in self.operators.iter().enumerate() {
             total += op.cost_us * reach;
-            reach *= op.selectivity;
+            reach *= self.selectivity_at(i, drift, t);
         }
         total
     }
@@ -148,6 +232,64 @@ mod tests {
         assert!(wc.end_to_end_selectivity() > 6.0);
         // And its weighted cost dominates the raw cost.
         assert!(wc.cost_per_source_tuple_us() > 40.0 + 18.0 + 14.0);
+    }
+
+    #[test]
+    fn keyed_flags_mark_the_shuffle_fed_operators() {
+        for topo in [Topology::wordcount(), Topology::ysb(), Topology::traffic()] {
+            let keyed: Vec<&str> = topo
+                .operators
+                .iter()
+                .filter(|o| o.keyed)
+                .map(|o| o.name)
+                .collect();
+            assert_eq!(keyed.len(), 1, "{}: {keyed:?}", topo.name);
+            // Sources are never keyed (they read assigned partitions).
+            assert!(!topo.operators[0].keyed);
+        }
+    }
+
+    #[test]
+    fn selectivity_drift_interpolates_and_clamps() {
+        let d = SelectivityDrift {
+            op: 1,
+            to: 2.0,
+            start: 100,
+            end: 300,
+        };
+        crate::assert_close!(d.sel_at(7.0, 0), 7.0, atol = 1e-12);
+        crate::assert_close!(d.sel_at(7.0, 100), 7.0, atol = 1e-12);
+        crate::assert_close!(d.sel_at(7.0, 200), 4.5, atol = 1e-12);
+        crate::assert_close!(d.sel_at(7.0, 300), 2.0, atol = 1e-12);
+        crate::assert_close!(d.sel_at(7.0, 9_999), 2.0, atol = 1e-12);
+    }
+
+    #[test]
+    fn drift_migrates_the_dominant_cost_term() {
+        // WordCount with split-lines drifting 7 -> 2: the weighted chain
+        // cost falls and count-per-word loses its dominance to split-lines.
+        let wc = Topology::wordcount();
+        let d = SelectivityDrift {
+            op: 1,
+            to: 2.0,
+            start: 0,
+            end: 1_000,
+        };
+        let before = wc.cost_per_source_tuple_us_at(Some(&d), 0);
+        let after = wc.cost_per_source_tuple_us_at(Some(&d), 1_000);
+        crate::assert_close!(before, wc.cost_per_source_tuple_us(), atol = 1e-9);
+        // 18 + 40 + 16·sel: sel 7 -> 170, sel 2 -> 90.
+        crate::assert_close!(after, 90.0, atol = 1e-9);
+        // Non-drifting queries at any time are unaffected.
+        crate::assert_close!(wc.cost_per_source_tuple_us_at(None, 500), 170.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn single_operator_topology_matches_capacity() {
+        let t = Topology::single("flat", 5_500.0);
+        assert_eq!(t.operators.len(), 1);
+        crate::assert_close!(t.nominal_capacity(), 5_500.0, rtol = 1e-12);
+        crate::assert_close!(t.end_to_end_selectivity(), 1.0, atol = 1e-12);
     }
 
     #[test]

@@ -33,7 +33,9 @@ fn usage() -> ! {
            sweep [--list] [--scenarios a,b|all] [--approaches x,y] [--duration S]\n\
                  [--seeds a,b] [--threads N] [--stride S] [--out DIR]\n\
                run the scenario matrix in parallel (native backend) and print\n\
-               pooled QoS/resource summaries plus golden-trace digests\n\
+               pooled QoS/resource summaries plus golden-trace digests; the\n\
+               bottleneck-shift / skew-amplify cells run the staged engine\n\
+               (per-operator replica sets; ds2 scales stage vectors)\n\
            bench [--out BENCH_micro.json] [--smoke] [--filter substr]\n\
                run the micro-bench registry (before/after pairs vs the\n\
                retained reference impls) and write the JSON perf trajectory\n\
@@ -179,6 +181,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     exp.max_replicas = spec.max_replicas;
     exp.initial_replicas = spec.initial_replicas;
     exp.partitions = spec.partitions;
+    // Specs naming an operator-elasticity shape get the same staged-engine
+    // knobs the scenario registry wires (drift / Zipf override).
+    if let Some(shape) = spec.workload_shape {
+        let (stage_model, drift, zipf) =
+            daedalus::experiments::Scenario::engine_knobs_for(shape, spec.job, spec.duration);
+        exp.stage_model = stage_model;
+        exp.selectivity_drift = drift;
+        exp.zipf_override = zipf;
+    }
     let spec2 = spec.clone();
     let res = exp.run(&move |seed| {
         spec2

@@ -51,6 +51,70 @@ pub fn worker_snapshots_into(
     }
 }
 
+/// Point-in-time view of one operator stage's aggregates (staged engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSnapshot {
+    pub stage: usize,
+    /// Current replica count (latest sample).
+    pub parallelism: usize,
+    /// Moving-average busy fraction (0..1): processed input over the
+    /// stage's effective (skew-limited) capacity.
+    pub busy: f64,
+    /// Moving-average input throughput in the stage's own input units.
+    pub throughput: f64,
+    /// Latest input-queue backlog (0 for the source stage).
+    pub queue: f64,
+}
+
+/// Per-stage busy/throughput snapshots over a trailing `window`, one entry
+/// per stage `0..n_stages`. Returns fewer entries when a stage has no
+/// samples yet (callers treat a short vector as "not warmed up").
+pub fn stage_snapshots(
+    db: &Tsdb,
+    now: Timestamp,
+    window: u64,
+    n_stages: usize,
+) -> Vec<StageSnapshot> {
+    let mut out = Vec::new();
+    stage_snapshots_into(db, now, window, n_stages, &mut out);
+    out
+}
+
+/// [`stage_snapshots`] into a caller-supplied buffer (cleared first).
+pub fn stage_snapshots_into(
+    db: &Tsdb,
+    now: Timestamp,
+    window: u64,
+    n_stages: usize,
+    out: &mut Vec<StageSnapshot>,
+) {
+    out.clear();
+    let from = now.saturating_sub(window.saturating_sub(1));
+    for s in 0..n_stages {
+        let busy_id = SeriesId::stage("stage_busy", s);
+        let tput_id = SeriesId::stage("stage_throughput", s);
+        let (Some(busy), Some(throughput)) = (
+            db.avg_over(&busy_id, from, now),
+            db.avg_over(&tput_id, from, now),
+        ) else {
+            break;
+        };
+        let parallelism = db
+            .last_at(&SeriesId::stage("stage_parallelism", s), now)
+            .map_or(1, |(_, v)| v as usize);
+        let queue = db
+            .last_at(&SeriesId::stage("stage_queue", s), now)
+            .map_or(0.0, |(_, v)| v);
+        out.push(StageSnapshot {
+            stage: s,
+            parallelism,
+            busy,
+            throughput,
+            queue,
+        });
+    }
+}
+
 /// Workload rate history over `[now − window + 1, now]`, padded on the left
 /// with the earliest sample so the result always has `window` entries — the
 /// fixed-shape input the forecast artifact expects.
@@ -165,6 +229,26 @@ mod tests {
         let mut snaps = Vec::new();
         worker_snapshots_into(&db, 9, 5, &mut snaps);
         assert_eq!(snaps, worker_snapshots(&db, 9, 5));
+    }
+
+    #[test]
+    fn stage_snapshots_aggregate_and_stop_at_missing_stages() {
+        let mut db = Tsdb::new();
+        for t in 0..100u64 {
+            for s in 0..2 {
+                db.record_stage("stage_busy", s, t, 0.4 + s as f64 * 0.2);
+                db.record_stage("stage_throughput", s, t, 1_000.0 * (s + 1) as f64);
+                db.record_stage("stage_parallelism", s, t, (s + 2) as f64);
+                db.record_stage("stage_queue", s, t, 10.0 * s as f64);
+            }
+        }
+        // Stage 2 has no series: snapshot list stops there.
+        let snaps = stage_snapshots(&db, 99, 60, 3);
+        assert_eq!(snaps.len(), 2);
+        crate::assert_close!(snaps[0].busy, 0.4, atol = 1e-12);
+        crate::assert_close!(snaps[1].throughput, 2_000.0, atol = 1e-9);
+        assert_eq!(snaps[1].parallelism, 3);
+        crate::assert_close!(snaps[1].queue, 10.0, atol = 1e-12);
     }
 
     #[test]

@@ -16,22 +16,39 @@ use std::hash::{BuildHasherDefault, Hasher};
 
 use crate::clock::Timestamp;
 
-/// Identifies a series: metric name + optional worker index label.
+/// Identifies a series: metric name + optional worker / operator-stage
+/// index labels (the staged engine records per-stage aggregates under the
+/// `stage` label and per-replica series under flattened `worker` indices).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SeriesId {
     pub name: &'static str,
     pub worker: Option<usize>,
+    pub stage: Option<usize>,
 }
 
 impl SeriesId {
     pub fn global(name: &'static str) -> Self {
-        Self { name, worker: None }
+        Self {
+            name,
+            worker: None,
+            stage: None,
+        }
     }
 
     pub fn worker(name: &'static str, worker: usize) -> Self {
         Self {
             name,
             worker: Some(worker),
+            stage: None,
+        }
+    }
+
+    /// Per-operator-stage aggregate series (staged engine).
+    pub fn stage(name: &'static str, stage: usize) -> Self {
+        Self {
+            name,
+            worker: None,
+            stage: Some(stage),
         }
     }
 }
@@ -142,6 +159,11 @@ impl Tsdb {
     /// Convenience: per-worker series.
     pub fn record_worker(&mut self, name: &'static str, w: usize, t: Timestamp, value: f64) {
         self.record(SeriesId::worker(name, w), t, value);
+    }
+
+    /// Convenience: per-stage series.
+    pub fn record_stage(&mut self, name: &'static str, s: usize, t: Timestamp, value: f64) {
+        self.record(SeriesId::stage(name, s), t, value);
     }
 
     fn get(&self, id: &SeriesId) -> Option<&Series> {
@@ -359,6 +381,19 @@ mod tests {
         let db = sample_db();
         assert_eq!(db.workers_for("worker_cpu"), vec![0, 1]);
         assert!(db.workers_for("worker_throughput").is_empty());
+    }
+
+    #[test]
+    fn stage_series_are_distinct_from_worker_and_global() {
+        let mut db = Tsdb::new();
+        db.record_global("tput", 0, 1.0);
+        db.record_worker("tput", 2, 0, 2.0);
+        db.record_stage("tput", 2, 0, 3.0);
+        assert_eq!(db.last_at(&SeriesId::global("tput"), 0), Some((0, 1.0)));
+        assert_eq!(db.last_at(&SeriesId::worker("tput", 2), 0), Some((0, 2.0)));
+        assert_eq!(db.last_at(&SeriesId::stage("tput", 2), 0), Some((0, 3.0)));
+        // Stage labels do not leak into the worker listing.
+        assert_eq!(db.workers_for("tput"), vec![2]);
     }
 
     #[test]

@@ -41,8 +41,8 @@
 
 use std::time::{Duration, Instant};
 
-use crate::autoscaler::{Autoscaler, Daedalus, DaedalusConfig};
-use crate::dsp::{EngineProfile, MergePolicy, SimConfig, Simulation};
+use crate::autoscaler::{Autoscaler, Daedalus, DaedalusConfig, Ds2, Ds2Config};
+use crate::dsp::{EngineProfile, MergePolicy, SimConfig, Simulation, StageModel};
 use crate::jobs::JobProfile;
 use crate::metrics::{query, SeriesId, Tsdb};
 use crate::runtime::{native, ArtifactMeta, CapacityState, ComputeBackend};
@@ -134,6 +134,21 @@ fn sim_1h(policy: MergePolicy) -> Simulation {
     sim
 }
 
+/// Same deployment on the staged engine (per-operator replica sets,
+/// inter-stage queues): the fused pool above is its reference.
+fn sim_1h_staged() -> Simulation {
+    let job = JobProfile::wordcount();
+    let peak = job.reference_peak;
+    let mut cfg = SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(SineWorkload::paper_default(peak, 3_600)),
+    );
+    cfg.stage_model = StageModel::Staged;
+    cfg.max_replicas = 12;
+    Simulation::new(cfg)
+}
+
 /// The old `workload_window` left-pad (`insert(0, …)` per missing entry,
 /// O(window²) for young jobs) — retained here as the bench reference for
 /// `workload_window_young_job`.
@@ -211,6 +226,35 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
         }
         sim.avg_workers()
     });
+
+    // Staged engine (per-operator replica sets, inter-stage queues): the
+    // fused flat pool is the before; this records the stage refactor's
+    // per-tick cost in the trajectory.
+    r.run("engine_tick_1h_staged", Some("engine_tick_1h_plain"), 3, || {
+        let mut sim = sim_1h_staged();
+        for t in 0..3_600 {
+            sim.step(t);
+        }
+        sim.total_backlog()
+    });
+    // Per-operator DS2 on top of the staged engine (per-stage snapshots +
+    // vector plans), against the bare staged tick loop.
+    r.run(
+        "engine_tick_1h_staged_with_ds2",
+        Some("engine_tick_1h_staged"),
+        3,
+        || {
+            let mut sim = sim_1h_staged();
+            let mut ds2 = Ds2::new(Ds2Config::defaults(12));
+            for t in 0..3_600 {
+                sim.step(t);
+                if let Some(plan) = ds2.decide_plan(&sim.view()) {
+                    sim.request_rescale_plan(&plan);
+                }
+            }
+            sim.avg_workers()
+        },
+    );
 
     // ECDF: pool 1M weighted samples and take the paper's quantiles. The
     // exact sample-retaining implementation is the reference; the

@@ -20,6 +20,7 @@ mod diurnal;
 mod flash;
 mod outage;
 mod shapes;
+mod shift;
 mod sine;
 mod traffic;
 
@@ -28,6 +29,7 @@ pub use diurnal::DiurnalDriftWorkload;
 pub use flash::FlashCrowdWorkload;
 pub use outage::OutageBackfillWorkload;
 pub use shapes::{ConstantWorkload, RampWorkload, ReplayWorkload, StepWorkload};
+pub use shift::{BottleneckShiftWorkload, SkewAmplifyWorkload};
 pub use sine::SineWorkload;
 pub use traffic::TrafficWorkload;
 
@@ -91,11 +93,17 @@ pub enum ShapeKind {
     DiurnalDrift,
     /// Upstream outage followed by a volume-conserving backfill surge.
     OutageBackfill,
+    /// Gentle swell whose scenario drifts one operator's selectivity so
+    /// the pipeline's hot spot migrates between stages (staged engine).
+    BottleneckShift,
+    /// Rising ramp whose scenario overrides the job's Zipf exponent so one
+    /// stage's keys concentrate on its hottest replica (staged engine).
+    SkewAmplify,
 }
 
 impl ShapeKind {
     /// All shapes, in registry order.
-    pub fn all() -> [ShapeKind; 6] {
+    pub fn all() -> [ShapeKind; 8] {
         [
             ShapeKind::Sine,
             ShapeKind::Ctr,
@@ -103,6 +111,8 @@ impl ShapeKind {
             ShapeKind::FlashCrowd,
             ShapeKind::DiurnalDrift,
             ShapeKind::OutageBackfill,
+            ShapeKind::BottleneckShift,
+            ShapeKind::SkewAmplify,
         ]
     }
 
@@ -115,6 +125,8 @@ impl ShapeKind {
             ShapeKind::FlashCrowd => "flash-crowd",
             ShapeKind::DiurnalDrift => "diurnal-drift",
             ShapeKind::OutageBackfill => "outage-backfill",
+            ShapeKind::BottleneckShift => "bottleneck-shift",
+            ShapeKind::SkewAmplify => "skew-amplify",
         }
     }
 
@@ -125,7 +137,8 @@ impl ShapeKind {
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown workload shape {s:?} (sine|ctr|traffic|\
-                     flash-crowd|diurnal-drift|outage-backfill)"
+                     flash-crowd|diurnal-drift|outage-backfill|\
+                     bottleneck-shift|skew-amplify)"
                 )
             })
     }
@@ -142,6 +155,10 @@ impl ShapeKind {
             ShapeKind::OutageBackfill => {
                 Box::new(OutageBackfillWorkload::new(peak, duration, seed))
             }
+            ShapeKind::BottleneckShift => {
+                Box::new(BottleneckShiftWorkload::new(peak, duration, seed))
+            }
+            ShapeKind::SkewAmplify => Box::new(SkewAmplifyWorkload::new(peak, duration, seed)),
         }
     }
 }

@@ -1,0 +1,120 @@
+//! Rate traces for the operator-level elasticity scenarios.
+//!
+//! The interesting physics of these two scenarios lives in the *engine*
+//! knobs the scenario registry wires up alongside them (a selectivity
+//! drift for `bottleneck-shift`, a Zipf-exponent override for
+//! `skew-amplify`); the rate traces themselves stay deliberately tame so
+//! runs exercise the per-operator mechanisms rather than raw load swings.
+//!
+//! * [`BottleneckShiftWorkload`] — a gentle two-period swell around 60 %
+//!   of peak. While the rate breathes, the drifting operator selectivity
+//!   migrates the pipeline's hot spot between stages mid-run.
+//! * [`SkewAmplifyWorkload`] — a slow ramp with small diurnal ripples.
+//!   Rising volume on a heavily Zipf-skewed key space concentrates one
+//!   stage's keys onto its hottest replica.
+
+use super::{SmoothNoise, Workload};
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Gentle swell around 60 % of peak (two slow periods) with correlated
+/// noise — the carrier trace for the selectivity-drift scenario.
+#[derive(Debug, Clone)]
+pub struct BottleneckShiftWorkload {
+    peak: f64,
+    duration: Timestamp,
+    noise: SmoothNoise,
+}
+
+impl BottleneckShiftWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xB0_77_1E);
+        let noise = SmoothNoise::generate(&mut rng, duration, 60, 0.9, 0.5, 0.02 * peak);
+        Self {
+            peak,
+            duration,
+            noise,
+        }
+    }
+}
+
+impl Workload for BottleneckShiftWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * 2.0 * t as f64 / self.duration.max(1) as f64;
+        let base = self.peak * (0.60 + 0.18 * phase.sin());
+        (base + self.noise.at(t)).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+/// Slow ramp from ~45 % to ~85 % of peak with small diurnal ripples — the
+/// carrier trace for the key-skew-concentration scenario.
+#[derive(Debug, Clone)]
+pub struct SkewAmplifyWorkload {
+    peak: f64,
+    duration: Timestamp,
+    noise: SmoothNoise,
+}
+
+impl SkewAmplifyWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5_EA_AB);
+        let noise = SmoothNoise::generate(&mut rng, duration, 45, 0.88, 0.6, 0.02 * peak);
+        Self {
+            peak,
+            duration,
+            noise,
+        }
+    }
+}
+
+impl Workload for SkewAmplifyWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let frac = t as f64 / self.duration.max(1) as f64;
+        let ripple = (2.0 * std::f64::consts::PI * 5.0 * frac).sin();
+        let base = self.peak * (0.45 + 0.40 * frac.clamp(0.0, 1.0) + 0.04 * ripple);
+        (base + self.noise.at(t)).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bottleneck_shift_breathes_around_sixty_percent() {
+        let w = BottleneckShiftWorkload::new(30_000.0, 7_200, 3);
+        let mean: f64 = (0..7_200).map(|t| w.rate(t)).sum::<f64>() / 7_200.0;
+        assert!((0.5..0.7).contains(&(mean / 30_000.0)), "mean {mean}");
+        let peak = w.peak();
+        assert!(peak < 30_000.0, "peak {peak} must stay below the scale peak");
+        assert!(peak > 0.7 * 30_000.0, "peak {peak} too flat");
+    }
+
+    #[test]
+    fn skew_amplify_ramps_upward() {
+        let w = SkewAmplifyWorkload::new(30_000.0, 7_200, 3);
+        let early: f64 = (0..1_200).map(|t| w.rate(t)).sum::<f64>() / 1_200.0;
+        let late: f64 = (6_000..7_200).map(|t| w.rate(t)).sum::<f64>() / 1_200.0;
+        assert!(
+            late > early * 1.4,
+            "late {late} should sit well above early {early}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = BottleneckShiftWorkload::new(20_000.0, 3_600, 7);
+        let b = BottleneckShiftWorkload::new(20_000.0, 3_600, 7);
+        let c = BottleneckShiftWorkload::new(20_000.0, 3_600, 8);
+        assert_eq!(a.rate(1_234), b.rate(1_234));
+        assert_ne!(a.rate(1_234), c.rate(1_234));
+    }
+}

@@ -110,6 +110,8 @@ fn sweep_list_prints_scenario_matrix() {
         "flink-wordcount-diurnal-drift",
         "flink-wordcount-outage-backfill",
         "flink-wordcount-sine-failstorm3",
+        "flink-wordcount-bottleneck-shift",
+        "kstreams-ysb-skew-amplify",
     ] {
         assert!(text.contains(name), "missing {name} in:\n{text}");
     }

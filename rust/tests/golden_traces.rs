@@ -1,5 +1,19 @@
 //! Golden-trace regression suite: one canonical scenario per autoscaler,
-//! pinned by its deterministic trace digest.
+//! pinned by its deterministic trace digest — plus, since the
+//! operator-stage refactor, one *staged-engine* golden per autoscaler on
+//! the canonical `bottleneck-shift` scenario.
+//!
+//! ## Why the fused goldens did NOT need re-blessing (PR 3)
+//!
+//! The stage refactor left `StageModel::Fused` — the model every
+//! pre-existing scenario runs on — bit-compatible: the per-tick serve
+//! path, RNG draw order, and restart semantics are unchanged, and the
+//! drift-aware capacity hook returns the exact configured constant when no
+//! drift is set. Per the determinism contract (ROADMAP), a behavior change
+//! would require `UPDATE_GOLDEN=1` + a PR note; none was needed. The new
+//! `staged-*` goldens pin the staged engine's observable behavior from its
+//! first release, so later changes to stage scheduling, backpressure
+//! bounds, or per-stage planning must re-bless *those* deliberately.
 //!
 //! ## How the pinning works
 //!
@@ -32,10 +46,11 @@ fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
 }
 
-/// Run the canonical unit for `approach` and check/bless its digest.
-fn check_golden(approach: &str) {
+/// Run the canonical unit for `approach` on `scenario` and check/bless its
+/// digest under `tag`.
+fn check_golden_on(scenario: &str, approach: &str, tag: &str) {
     let reg = ScenarioRegistry::builtin(GOLDEN_DURATION, &[GOLDEN_SEED]);
-    let sc = reg.get("flink-wordcount-sine").unwrap();
+    let sc = reg.get(scenario).unwrap();
     let run = run_unit(sc, approach, GOLDEN_SEED, GOLDEN_STRIDE).unwrap();
 
     // In-process determinism: the same unit re-run must digest identically
@@ -43,19 +58,19 @@ fn check_golden(approach: &str) {
     let rerun = run_unit(sc, approach, GOLDEN_SEED, GOLDEN_STRIDE).unwrap();
     assert_eq!(
         run.digest, rerun.digest,
-        "{approach}: in-process rerun produced a different trace"
+        "{tag}: in-process rerun produced a different trace"
     );
 
     let dir = golden_dir();
-    let digest_path = dir.join(format!("{approach}.digest"));
-    let trace_path = dir.join(format!("{approach}.trace.json"));
+    let digest_path = dir.join(format!("{tag}.digest"));
+    let trace_path = dir.join(format!("{tag}.trace.json"));
     let update = std::env::var("UPDATE_GOLDEN").is_ok();
     match std::fs::read_to_string(&digest_path) {
         Ok(golden) if !update => {
             assert_eq!(
                 golden.trim(),
                 run.digest,
-                "{approach}: trace digest drifted from {digest_path:?}; if the \
+                "{tag}: trace digest drifted from {digest_path:?}; if the \
                  behavior change is intentional, re-bless with UPDATE_GOLDEN=1 \
                  and commit (full trace at {trace_path:?})"
             );
@@ -65,7 +80,7 @@ fn check_golden(approach: &str) {
             std::fs::write(&digest_path, format!("{}\n", run.digest)).unwrap();
             std::fs::write(&trace_path, run.trace.to_json()).unwrap();
             eprintln!(
-                "blessed golden trace for {approach}: {} -> {digest_path:?}",
+                "blessed golden trace for {tag}: {} -> {digest_path:?}",
                 run.digest
             );
         }
@@ -77,6 +92,20 @@ fn check_golden(approach: &str) {
         GOLDEN_DURATION / GOLDEN_STRIDE
     );
     assert!(run.worker_seconds > 0.0);
+}
+
+/// Fused reference goldens (the paper's canonical cell).
+fn check_golden(approach: &str) {
+    check_golden_on("flink-wordcount-sine", approach, approach);
+}
+
+/// Staged-engine goldens on the canonical operator-elasticity cell.
+fn check_staged_golden(approach: &str) {
+    check_golden_on(
+        "flink-wordcount-bottleneck-shift",
+        approach,
+        &format!("staged-{approach}"),
+    );
 }
 
 #[test]
@@ -102,4 +131,34 @@ fn golden_trace_phoebe() {
 #[test]
 fn golden_trace_static() {
     check_golden("static-6");
+}
+
+#[test]
+fn golden_trace_staged_daedalus() {
+    check_staged_golden("daedalus");
+}
+
+#[test]
+fn golden_trace_staged_hpa() {
+    check_staged_golden("hpa-80");
+}
+
+#[test]
+fn golden_trace_staged_ds2() {
+    check_staged_golden("ds2");
+}
+
+#[test]
+fn golden_trace_staged_ds2_job() {
+    check_staged_golden("ds2-job");
+}
+
+#[test]
+fn golden_trace_staged_phoebe() {
+    check_staged_golden("phoebe");
+}
+
+#[test]
+fn golden_trace_staged_static() {
+    check_staged_golden("static-6");
 }

@@ -23,18 +23,18 @@ fn one_hour_sim_memory_stays_bounded() {
     // rewinds and catch-up backlogs, the paths that used to duplicate
     // same-timestamp chunks.
     let cfg = SimConfig {
-        profile: EngineProfile::flink(),
-        job: JobProfile::wordcount(),
-        workload: Box::new(ConstantWorkload {
-            rate: 12_000.0,
-            duration: 3_600,
-        }),
-        partitions: 72,
-        initial_replicas: 4,
         max_replicas: 18,
         seed: 17,
         rate_noise: 0.02,
         failures: vec![600, 1_800],
+        ..SimConfig::base(
+            EngineProfile::flink(),
+            JobProfile::wordcount(),
+            Box::new(ConstantWorkload {
+                rate: 12_000.0,
+                duration: 3_600,
+            }),
+        )
     };
     let mut sim = Simulation::new(cfg);
     let mut max_q = 0;

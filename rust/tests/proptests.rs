@@ -29,6 +29,8 @@ fn monitor(avg: f64, lag: f64, parallelism: usize) -> MonitorData {
     MonitorData {
         now: 5_000,
         workers: vec![],
+        stages: vec![],
+        stage_parallelism: vec![],
         history: vec![avg; 1800],
         workload_avg: avg,
         workload_max: avg,
@@ -235,19 +237,20 @@ fn prop_engine_conservation_under_random_rescales() {
         let mut rng = Rng::new(seed ^ 0xE46);
         let failures = if seed % 2 == 0 { vec![700, 1_500] } else { vec![] };
         let cfg = SimConfig {
-            profile: if seed % 3 == 0 {
-                EngineProfile::kstreams()
-            } else {
-                EngineProfile::flink()
-            },
-            job: JobProfile::wordcount(),
-            workload: Box::new(SineWorkload::paper_default(20_000.0, 2_400)),
             partitions: 36,
             initial_replicas: 1 + rng.below(12) as usize,
-            max_replicas: 12,
             seed,
             rate_noise: 0.02,
             failures,
+            ..SimConfig::base(
+                if seed % 3 == 0 {
+                    EngineProfile::kstreams()
+                } else {
+                    EngineProfile::flink()
+                },
+                JobProfile::wordcount(),
+                Box::new(SineWorkload::paper_default(20_000.0, 2_400)),
+            )
         };
         let mut sim = Simulation::new(cfg);
         let mut alloc_integral = 0.0;
