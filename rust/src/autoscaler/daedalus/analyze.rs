@@ -143,13 +143,11 @@ mod tests {
         MonitorData {
             now: 120,
             workers,
-            stages: vec![],
-            stage_parallelism: vec![],
             history: vec![10_000.0; 1800],
             workload_avg: 10_000.0,
             workload_max: 11_000.0,
-            consumer_lag: 0.0,
             parallelism,
+            ..MonitorData::empty()
         }
     }
 

@@ -142,14 +142,9 @@ mod tests {
     fn data(history: Vec<f64>, now: Timestamp) -> MonitorData {
         MonitorData {
             now,
-            workers: vec![],
-            stages: vec![],
-            stage_parallelism: vec![],
             history,
-            workload_avg: 0.0,
-            workload_max: 0.0,
-            consumer_lag: 0.0,
             parallelism: 4,
+            ..MonitorData::empty()
         }
     }
 

@@ -3,7 +3,7 @@
 
 use crate::clock::Timestamp;
 use crate::dsp::engine::SimView;
-use crate::metrics::query::{self, StageSnapshot, WorkerSnapshot};
+use crate::metrics::query::{self, StageMonitor, StageSnapshot, WorkerMonitor, WorkerSnapshot};
 use crate::runtime::ArtifactMeta;
 
 use super::DaedalusConfig;
@@ -27,6 +27,16 @@ pub struct MonitorData {
     /// Total consumer lag (tuples).
     pub consumer_lag: f64,
     pub parallelism: usize,
+    /// Incremental collection state riding in the reusable buffer: the
+    /// per-stage rolling windows, the per-worker handle table, and the
+    /// cached `workload_rate` handle, so decision ticks never rebuild the
+    /// per-stage view from scratch (pre-resolved handles, each TSDB sample
+    /// read once per run).
+    pub stage_monitor: StageMonitor,
+    pub worker_monitor: WorkerMonitor,
+    /// Cached `workload_rate` handle for the forecaster-input rebuild
+    /// (public so sibling-module test literals can spread `..empty()`).
+    pub rate_handle: Option<crate::metrics::SeriesHandle>,
 }
 
 impl MonitorData {
@@ -42,6 +52,9 @@ impl MonitorData {
             workload_max: 0.0,
             consumer_lag: 0.0,
             parallelism: 0,
+            stage_monitor: StageMonitor::default(),
+            worker_monitor: WorkerMonitor::new(),
+            rate_handle: None,
         }
     }
 
@@ -74,8 +87,9 @@ impl MonitorData {
             .min_over(&lag_id, now.saturating_sub(15), now)
             .unwrap_or_else(|| query::consumer_lag(view.tsdb, now));
         out.now = now;
-        query::worker_snapshots_into(view.tsdb, now, cfg.cpu_window, &mut out.workers);
-        query::stage_snapshots_into(
+        out.worker_monitor
+            .snapshots_into(view.tsdb, now, cfg.cpu_window, &mut out.workers);
+        out.stage_monitor.snapshots_into(
             view.tsdb,
             now,
             cfg.cpu_window,
@@ -84,7 +98,13 @@ impl MonitorData {
         );
         out.stage_parallelism.clear();
         out.stage_parallelism.extend_from_slice(view.stage_parallelism);
-        query::workload_window_into(view.tsdb, now, meta.window, &mut out.history);
+        query::workload_window_into_cached(
+            view.tsdb,
+            &mut out.rate_handle,
+            now,
+            meta.window,
+            &mut out.history,
+        );
         out.workload_avg = workload_avg;
         out.workload_max = workload_max;
         out.consumer_lag = consumer_lag;

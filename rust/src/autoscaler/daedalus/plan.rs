@@ -271,14 +271,12 @@ mod tests {
     fn data(avg: f64, lag: f64, parallelism: usize) -> MonitorData {
         MonitorData {
             now: 1_000,
-            workers: vec![],
-            stages: vec![],
-            stage_parallelism: vec![],
             history: vec![avg; 1800],
             workload_avg: avg,
             workload_max: avg * 1.05,
             consumer_lag: lag,
             parallelism,
+            ..MonitorData::empty()
         }
     }
 
@@ -413,7 +411,6 @@ mod tests {
         // Per-replica true capacities: 20k / 6.25k / 15k.
         MonitorData {
             now: 1_000,
-            workers: vec![],
             stages: vec![
                 StageSnapshot {
                     stage: 0,
@@ -443,6 +440,7 @@ mod tests {
             workload_max: avg * 1.05,
             consumer_lag: lag,
             parallelism: 2,
+            ..MonitorData::empty()
         }
     }
 

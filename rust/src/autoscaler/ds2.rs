@@ -26,7 +26,7 @@
 use super::Autoscaler;
 use crate::clock::Timestamp;
 use crate::dsp::engine::{ScalePlan, SimView};
-use crate::metrics::query::{stage_snapshots, worker_snapshots};
+use crate::metrics::query::{StageMonitor, StageSnapshot, WorkerMonitor, WorkerSnapshot};
 
 /// DS2 tuning.
 #[derive(Debug, Clone)]
@@ -70,6 +70,9 @@ pub enum Ds2Mode {
     JobLevel,
 }
 
+/// The 1-minute policy window DS2 evaluates its instrumentation over.
+const DS2_WINDOW: u64 = 60;
+
 /// The DS2-like controller.
 pub struct Ds2 {
     cfg: Ds2Config,
@@ -80,6 +83,13 @@ pub struct Ds2 {
     idle_floor: f64,
     /// Running estimate of the saturation ceiling (max CPU ever seen).
     sat_ceiling: f64,
+    /// Incremental per-stage instrumentation view (pre-resolved handles +
+    /// rolling windows) and its reusable output buffer.
+    stage_monitor: StageMonitor,
+    stage_snaps: Vec<StageSnapshot>,
+    /// Cached per-worker handle table + reusable snapshot buffer (fused).
+    worker_monitor: WorkerMonitor,
+    worker_snaps: Vec<WorkerSnapshot>,
 }
 
 impl Ds2 {
@@ -100,6 +110,10 @@ impl Ds2 {
             last_rescale: None,
             idle_floor: 0.05,
             sat_ceiling: 0.5,
+            stage_monitor: StageMonitor::new(DS2_WINDOW),
+            stage_snaps: Vec::new(),
+            worker_monitor: WorkerMonitor::new(),
+            worker_snaps: Vec::new(),
         }
     }
 
@@ -125,10 +139,19 @@ impl Ds2 {
 
     /// The per-operator core: per-stage busy fractions → per-stage true
     /// rates → per-stage minimal parallelisms, with observed output/input
-    /// ratios propagating the source rate down the chain.
-    fn stage_targets(&self, view: &SimView<'_>) -> Option<Vec<usize>> {
+    /// ratios propagating the source rate down the chain. The per-stage
+    /// view comes from the incremental [`StageMonitor`] — no hashing, no
+    /// window re-reads on decision ticks.
+    fn stage_targets(&mut self, view: &SimView<'_>) -> Option<Vec<usize>> {
         let n_stages = view.stage_parallelism.len();
-        let snaps = stage_snapshots(view.tsdb, view.now, 60, n_stages);
+        self.stage_monitor.snapshots_into(
+            view.tsdb,
+            view.now,
+            DS2_WINDOW,
+            n_stages,
+            &mut self.stage_snaps,
+        );
+        let snaps = &self.stage_snaps;
         if snaps.len() < n_stages {
             return None;
         }
@@ -175,21 +198,26 @@ impl Autoscaler for Ds2 {
             return None;
         }
 
-        let snaps = worker_snapshots(view.tsdb, view.now, 60);
+        self.worker_monitor
+            .snapshots_into(view.tsdb, view.now, DS2_WINDOW, &mut self.worker_snaps);
+        let snaps = &self.worker_snaps;
         if snaps.is_empty() {
             return None;
         }
         // Calibrate the CPU range from observations.
-        for s in &snaps {
-            self.idle_floor = self.idle_floor.min(s.cpu.max(0.01));
-            self.sat_ceiling = self.sat_ceiling.max(s.cpu);
+        let (mut floor, mut ceiling) = (self.idle_floor, self.sat_ceiling);
+        for s in snaps {
+            floor = floor.min(s.cpu.max(0.01));
+            ceiling = ceiling.max(s.cpu);
         }
+        self.idle_floor = floor;
+        self.sat_ceiling = ceiling;
         let span = (self.sat_ceiling - self.idle_floor).max(0.05);
 
         // True processing rate per worker = throughput / busy fraction.
         let mut true_rate_sum = 0.0;
         let mut tput_sum = 0.0;
-        for s in &snaps {
+        for s in snaps {
             let busy = ((s.cpu - self.idle_floor) / span).clamp(0.02, 1.0);
             true_rate_sum += s.throughput / busy;
             tput_sum += s.throughput;

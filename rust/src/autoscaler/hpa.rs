@@ -18,7 +18,7 @@ use std::collections::VecDeque;
 use super::Autoscaler;
 use crate::clock::Timestamp;
 use crate::dsp::engine::SimView;
-use crate::metrics::query::worker_snapshots;
+use crate::metrics::query::{WorkerMonitor, WorkerSnapshot};
 
 /// HPA tuning (mirrors the upstream defaults).
 #[derive(Debug, Clone)]
@@ -72,6 +72,9 @@ pub struct Hpa {
     /// When the current pod set became ready (None until the first
     /// restart — the initial deployment is assumed warmed up).
     pods_ready_since: Option<Timestamp>,
+    /// Cached per-worker handle table + reusable snapshot buffer.
+    monitor: WorkerMonitor,
+    snaps: Vec<WorkerSnapshot>,
 }
 
 impl Hpa {
@@ -82,12 +85,16 @@ impl Hpa {
             last_sync: None,
             was_ready: true,
             pods_ready_since: None,
+            monitor: WorkerMonitor::new(),
+            snaps: Vec::new(),
         }
     }
 
     /// One controller evaluation (called at sync boundaries).
     fn evaluate(&mut self, view: &SimView<'_>) -> Option<usize> {
-        let snaps = worker_snapshots(view.tsdb, view.now, self.cfg.cpu_window);
+        self.monitor
+            .snapshots_into(view.tsdb, view.now, self.cfg.cpu_window, &mut self.snaps);
+        let snaps = &self.snaps;
         if snaps.is_empty() {
             return None;
         }

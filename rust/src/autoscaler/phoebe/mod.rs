@@ -24,6 +24,7 @@ pub use profiler::{profile_job, ProfilingReport};
 use super::Autoscaler;
 use crate::dsp::engine::SimView;
 use crate::metrics::query;
+use crate::metrics::SeriesHandle;
 use crate::runtime::ComputeBackend;
 
 /// Phoebe tuning.
@@ -64,6 +65,8 @@ pub struct Phoebe {
     /// Reusable monitor buffers (allocation-free steady-state planning).
     history: Vec<f64>,
     hist32: Vec<f32>,
+    /// Cached `workload_rate` handle (resolved once; hash-free monitor).
+    rate_handle: Option<SeriesHandle>,
 }
 
 impl Phoebe {
@@ -76,6 +79,7 @@ impl Phoebe {
             last_rescale: None,
             history: Vec::new(),
             hist32: Vec::new(),
+            rate_handle: None,
         }
     }
 }
@@ -106,7 +110,13 @@ impl Autoscaler for Phoebe {
             let meta = self.backend.meta();
             (meta.window, meta.horizon)
         };
-        query::workload_window_into(view.tsdb, view.now, window, &mut self.history);
+        query::workload_window_into_cached(
+            view.tsdb,
+            &mut self.rate_handle,
+            view.now,
+            window,
+            &mut self.history,
+        );
         self.hist32.clear();
         self.hist32.extend(self.history.iter().map(|v| *v as f32));
         let forecast = match self.backend.forecast(&self.hist32) {

@@ -46,9 +46,22 @@
 //! exactly, so both policies are bit-identical (pinned by
 //! `tests/invariants.rs`); the naive scan is retained as the reference and
 //! as the `engine_tick_1h_naive_merge` bench baseline. The staged source
-//! stage reuses the same merge.
-
-use std::collections::VecDeque;
+//! stage reuses the same merge through [`drain_partitions_fifo`], the
+//! single owner of the per-replica heap FIFO drain.
+//!
+//! ## Hot path: bucket-ring inter-stage queues
+//!
+//! Chunk arrival times are tick-quantized (`t + 0.5`), so the staged
+//! engine's inter-stage queues default to [`QueuePolicy::BucketRing`]
+//! ([`super::queue`]): a push is an O(1) indexed add into the arrival
+//! tick's bucket, the source-replica merge needs no
+//! restore-global-order sort (buckets are inherently time-ordered), and a
+//! checkpoint snapshot is a flat ring copy. [`QueuePolicy::Chunked`]
+//! retains the PR-3 chunk-list behaviour bit for bit as the reference
+//! (`staged_tick_chunked` bench baseline; agreement property-pinned in
+//! `tests/invariants.rs` at quantization tolerance — the ring regroups
+//! float additions when equal-time chunks from different source replicas
+//! coalesce).
 
 use crate::clock::Timestamp;
 use crate::jobs::{JobProfile, SelectivityDrift, Topology};
@@ -60,6 +73,7 @@ use crate::workload::Workload;
 use super::cluster::{Cluster, Phase};
 use super::partition::{Chunk, Partition};
 use super::profile::EngineProfile;
+use super::queue::{QueuePolicy, StageQueue};
 use super::skew::KeyDistribution;
 use super::worker::Worker;
 
@@ -239,6 +253,41 @@ fn heap_pop(heap: &mut Vec<(f64, usize)>) -> Option<(f64, usize)> {
     top
 }
 
+/// Drain one worker's assigned partitions oldest-head-first until `budget`
+/// (or the queues) run out — the heap FIFO merge shared by the fused pool
+/// and the staged source stage (single owner of the merge logic). Calls
+/// `on_chunk` for every consumed chunk and returns the remaining budget.
+fn drain_partitions_fifo(
+    partitions: &mut [Partition],
+    assigned: &[usize],
+    heap: &mut Vec<(f64, usize)>,
+    mut budget: f64,
+    mut on_chunk: impl FnMut(Chunk),
+) -> f64 {
+    heap.clear();
+    for &pi in assigned {
+        if let Some(ht) = partitions[pi].head_time() {
+            heap_push(heap, (ht, pi));
+        }
+    }
+    while let Some((_, pi)) = heap_pop(heap) {
+        let Some(chunk) = partitions[pi].consume_head(budget) else {
+            break;
+        };
+        budget -= chunk.amount;
+        on_chunk(chunk);
+        if budget <= 1e-9 {
+            break;
+        }
+        // The head chunk was fully drained (a partial take exhausts the
+        // budget above): re-queue the partition under its next head time.
+        if let Some(ht) = partitions[pi].head_time() {
+            heap_push(heap, (ht, pi));
+        }
+    }
+    budget
+}
+
 /// A rescale/failure event for the experiment log.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RescaleEvent {
@@ -272,7 +321,7 @@ struct Stage {
     /// Replica workers (speed-jittered pods).
     workers: Vec<Worker>,
     /// Input queue (stages ≥ 1; stage 0 reads the source partitions).
-    queue: VecDeque<Chunk>,
+    queue: StageQueue,
     queue_backlog: f64,
     /// Input tuples processed, net of exactly-once replay.
     consumed: f64,
@@ -281,7 +330,7 @@ struct Stage {
     committed_consumed: f64,
     committed_emitted: f64,
     /// Consistent-cut queue snapshot from the last completed checkpoint.
-    queue_snapshot: VecDeque<Chunk>,
+    queue_snapshot: StageQueue,
     snapshot_backlog: f64,
     /// Per-replica-count skew weights for keyed stages (lazily cached):
     /// `n -> (effective-capacity factor, per-replica weight shares)`.
@@ -329,6 +378,9 @@ pub struct Simulation {
     scratch_lat: Vec<(f64, f64)>,
     /// FIFO-merge implementation (default heap; naive kept as reference).
     merge_policy: MergePolicy,
+    /// Inter-stage queue representation (default bucket ring; the chunk
+    /// list retained as reference).
+    queue_policy: QueuePolicy,
     /// Precomputed per-worker partition lists (`assign[w]` = partitions
     /// with `p % n == w`), rebuilt only when the serving count changes.
     assign: Vec<Vec<usize>>,
@@ -439,13 +491,13 @@ impl Simulation {
                     workers: (0..n)
                         .map(|_| Worker::spawn(&mut worker_rng, cfg.profile.speed_jitter))
                         .collect(),
-                    queue: VecDeque::new(),
+                    queue: StageQueue::new(QueuePolicy::default()),
                     queue_backlog: 0.0,
                     consumed: 0.0,
                     emitted: 0.0,
                     committed_consumed: 0.0,
                     committed_emitted: 0.0,
-                    queue_snapshot: VecDeque::new(),
+                    queue_snapshot: StageQueue::new(QueuePolicy::default()),
                     snapshot_backlog: 0.0,
                     skew_cache: std::collections::HashMap::new(),
                     last_processed: 0.0,
@@ -485,6 +537,7 @@ impl Simulation {
             handles,
             scratch_lat: Vec::with_capacity(256),
             merge_policy: MergePolicy::default(),
+            queue_policy: QueuePolicy::default(),
             assign: Vec::new(),
             assign_n: 0,
             scratch_heap: Vec::new(),
@@ -506,6 +559,24 @@ impl Simulation {
     /// The naive scan is retained for equivalence tests and benches.
     pub fn set_merge_policy(&mut self, policy: MergePolicy) {
         self.merge_policy = policy;
+    }
+
+    /// Select the inter-stage queue representation (default
+    /// [`QueuePolicy::BucketRing`]; the chunk list is retained for
+    /// equivalence tests and the `staged_tick_chunked` bench). Must be
+    /// called before the first tick — the queues are rebuilt empty.
+    pub fn set_queue_policy(&mut self, policy: QueuePolicy) {
+        assert!(!self.started, "queue policy must be selected before the first tick");
+        self.queue_policy = policy;
+        for st in &mut self.stages {
+            st.queue = StageQueue::new(policy);
+            st.queue_snapshot = StageQueue::new(policy);
+        }
+    }
+
+    /// The active inter-stage queue representation.
+    pub fn queue_policy(&self) -> QueuePolicy {
+        self.queue_policy
     }
 
     /// The trace length of the configured workload.
@@ -617,8 +688,7 @@ impl Simulation {
         for st in &mut self.stages {
             st.committed_consumed = st.consumed;
             st.committed_emitted = st.emitted;
-            st.queue_snapshot.clear();
-            st.queue_snapshot.extend(st.queue.iter().copied());
+            st.queue_snapshot.assign_from(&st.queue);
             st.snapshot_backlog = st.queue_backlog;
         }
         self.last_checkpoint = t;
@@ -634,8 +704,7 @@ impl Simulation {
         for st in &mut self.stages {
             st.consumed = st.committed_consumed;
             st.emitted = st.committed_emitted;
-            st.queue.clear();
-            st.queue.extend(st.queue_snapshot.iter().copied());
+            st.queue.assign_from(&st.queue_snapshot);
             st.queue_backlog = st.snapshot_backlog;
         }
     }
@@ -882,32 +951,20 @@ impl Simulation {
             // the queues run out.
             match self.merge_policy {
                 MergePolicy::Heap => {
-                    heap.clear();
-                    for &pi in &self.assign[w] {
-                        if let Some(ht) = self.partitions[pi].head_time() {
-                            heap_push(&mut heap, (ht, pi));
-                        }
-                    }
-                    while let Some((_, pi)) = heap_pop(&mut heap) {
-                        let Some(chunk) = self.partitions[pi].consume_head(budget) else {
-                            break;
-                        };
-                        budget -= chunk.amount;
-                        // Mid-tick completion; latency = wait + service.
-                        let wait_ms = ((t as f64 + 0.5 - chunk.t) * 1_000.0).max(0.0);
-                        let lat = wait_ms + service_ms;
-                        self.latencies.push(lat, chunk.amount);
-                        scratch.push((lat, chunk.amount));
-                        if budget <= 1e-9 {
-                            break;
-                        }
-                        // The head chunk was fully drained (a partial take
-                        // exhausts the budget above): re-queue the
-                        // partition under its next head time, if any.
-                        if let Some(ht) = self.partitions[pi].head_time() {
-                            heap_push(&mut heap, (ht, pi));
-                        }
-                    }
+                    let latencies = &mut self.latencies;
+                    budget = drain_partitions_fifo(
+                        &mut self.partitions,
+                        &self.assign[w],
+                        &mut heap,
+                        budget,
+                        |chunk| {
+                            // Mid-tick completion; latency = wait + service.
+                            let wait_ms = ((t as f64 + 0.5 - chunk.t) * 1_000.0).max(0.0);
+                            let lat = wait_ms + service_ms;
+                            latencies.push(lat, chunk.amount);
+                            scratch.push((lat, chunk.amount));
+                        },
+                    );
                 }
                 MergePolicy::NaiveScan => loop {
                     let mut best: Option<(usize, f64)> = None;
@@ -1011,18 +1068,6 @@ impl Simulation {
         nominal * self.stage_skew_factor(s, n)
     }
 
-    /// Coalescing push of `amount` tuples with source-arrival time `t`
-    /// onto the back of an inter-stage queue.
-    fn queue_push(queue: &mut VecDeque<Chunk>, t: f64, amount: f64) {
-        if amount <= 0.0 {
-            return;
-        }
-        match queue.back_mut() {
-            Some(last) if (last.t - t).abs() < 1e-9 => last.amount += amount,
-            _ => queue.push_back(Chunk { t, amount }),
-        }
-    }
-
     /// One serving tick of the staged pipeline: stages drain in topology
     /// order; each stage's intake is capped both by its own (skew-limited)
     /// capacity and by the free space of the downstream queue, so a slow
@@ -1081,61 +1126,36 @@ impl Simulation {
                 for r in 0..n_s {
                     let cap_r = self.stages[0].workers[r].capacity(unit_cap) * skew;
                     let budget0 = cap_r.min(remaining_allowance);
-                    let mut budget = budget0;
-                    heap.clear();
-                    for &pi in &self.assign[r] {
-                        if let Some(ht) = self.partitions[pi].head_time() {
-                            heap_push(&mut heap, (ht, pi));
-                        }
-                    }
-                    while let Some((_, pi)) = heap_pop(&mut heap) {
-                        let Some(chunk) = self.partitions[pi].consume_head(budget) else {
-                            break;
-                        };
-                        budget -= chunk.amount;
-                        chunks.push(chunk);
-                        if budget <= 1e-9 {
-                            break;
-                        }
-                        if let Some(ht) = self.partitions[pi].head_time() {
-                            heap_push(&mut heap, (ht, pi));
-                        }
-                    }
-                    let processed_r = budget0 - budget;
+                    let budget_left = drain_partitions_fifo(
+                        &mut self.partitions,
+                        &self.assign[r],
+                        &mut heap,
+                        budget0,
+                        |chunk| chunks.push(chunk),
+                    );
+                    let processed_r = budget0 - budget_left;
                     replica_tput.push(processed_r);
                     if remaining_allowance.is_finite() {
                         remaining_allowance = (remaining_allowance - processed_r).max(0.0);
                     }
                 }
-                // Replica streams are individually FIFO; restore global
-                // arrival order before handing downstream. Unstable sort:
-                // equal-time chunks coalesce into one queue entry on push,
-                // so their relative order cannot be observed — and the
-                // allocating stable sort has no place in the tick loop.
-                if n_stages > 1 {
+                // Replica streams are individually FIFO; the chunk-list
+                // queue needs global arrival order restored before the
+                // hand-off downstream (unstable sort: equal-time chunks
+                // coalesce into one queue entry on push, so their relative
+                // order cannot be observed). The bucket ring indexes by
+                // arrival tick, so the sort disappears from the default
+                // tick loop entirely.
+                if n_stages > 1 && self.queue_policy == QueuePolicy::Chunked {
                     chunks.sort_unstable_by(|a, b| a.t.total_cmp(&b.t));
                 }
             } else {
                 // Aggregate FIFO drain of the stage's input queue.
                 let budget0 = eff_total.min(allowance);
-                let mut budget = budget0;
                 let stage = &mut self.stages[s];
-                while budget > 1e-9 {
-                    let Some(front) = stage.queue.front_mut() else {
-                        break;
-                    };
-                    let take = front.amount.min(budget);
-                    chunks.push(Chunk {
-                        t: front.t,
-                        amount: take,
-                    });
-                    front.amount -= take;
-                    budget -= take;
-                    stage.queue_backlog = (stage.queue_backlog - take).max(0.0);
-                    if front.amount <= 1e-9 {
-                        stage.queue.pop_front();
-                    }
-                }
+                stage
+                    .queue
+                    .drain_into(budget0, &mut stage.queue_backlog, &mut chunks);
             }
 
             // Account, emit downstream / record end-to-end latency.
@@ -1148,7 +1168,7 @@ impl Simulation {
                 if let Some(down) = tail.first_mut() {
                     for c in &chunks {
                         let out = c.amount * sel;
-                        Self::queue_push(&mut down.queue, c.t, out);
+                        down.queue.push(c.t, out);
                         down.queue_backlog += out;
                     }
                 } else {
@@ -1232,6 +1252,14 @@ impl Simulation {
         self.partitions.iter().map(|p| p.queue_len()).max().unwrap_or(0)
     }
 
+    /// Largest inter-stage queue occupancy (bucket-ring tick span, or chunk
+    /// count under [`QueuePolicy::Chunked`]) — like the partition queues,
+    /// bounded by the queued backlog's age in ticks (the perf-smoke memory
+    /// bound for the staged engine). 0 under the fused model.
+    pub fn max_stage_queue_len(&self) -> usize {
+        self.stages.iter().map(|s| s.queue.len()).max().unwrap_or(0)
+    }
+
     /// Total tuples produced into all partitions since the run started.
     pub fn total_produced(&self) -> f64 {
         self.partitions.iter().map(|p| p.produced).sum()
@@ -1259,7 +1287,7 @@ impl Simulation {
             p.check_invariants();
         }
         for (s, st) in self.stages.iter().enumerate() {
-            let queued: f64 = st.queue.iter().map(|c| c.amount).sum();
+            let queued: f64 = st.queue.mass();
             let tol = 1e-6 * st.consumed.max(1.0);
             assert!(
                 (queued - st.queue_backlog).abs() < tol.max(1e-4),
@@ -1599,6 +1627,43 @@ mod tests {
         fused.request_rescale_plan(&ScalePlan::PerStage(vec![1, 4, 2]));
         run(&mut fused, 150);
         assert_eq!(fused.parallelism(), 4);
+    }
+
+    #[test]
+    fn bucket_ring_and_chunked_queues_agree_on_staged_pipeline() {
+        // Saturated staged deployment with a mid-run per-stage rescale:
+        // queues back up, split, snapshot and replay. The bucket ring
+        // regroups float additions (equal-time chunks from different
+        // source replicas land in one bucket), so agreement is pinned at
+        // fp-regrouping tolerance, not bit-identity — restart timelines
+        // must still match exactly (RNG draws are content-independent).
+        let mut ring = staged_sim(20_000.0, 3, 31);
+        let mut chunked = staged_sim(20_000.0, 3, 31);
+        assert_eq!(ring.queue_policy(), QueuePolicy::BucketRing);
+        chunked.set_queue_policy(QueuePolicy::Chunked);
+        run(&mut ring, 200);
+        run(&mut chunked, 200);
+        ring.request_rescale_stages(&[4, 3, 2, 1]);
+        chunked.request_rescale_stages(&[4, 3, 2, 1]);
+        run(&mut ring, 600);
+        run(&mut chunked, 600);
+        assert_eq!(ring.rescale_log, chunked.rescale_log);
+        crate::assert_close!(ring.total_consumed(), chunked.total_consumed(), rtol = 1e-6);
+        crate::assert_close!(ring.total_backlog(), chunked.total_backlog(), rtol = 1e-6, atol = 1.0);
+        for s in 0..ring.n_stages() {
+            let a = ring.stage_flow(s);
+            let b = chunked.stage_flow(s);
+            crate::assert_close!(a.consumed, b.consumed, rtol = 1e-6, atol = 1e-3);
+            crate::assert_close!(a.emitted, b.emitted, rtol = 1e-6, atol = 1e-3);
+            crate::assert_close!(a.queue_backlog, b.queue_backlog, rtol = 1e-6, atol = 1.0);
+        }
+        crate::assert_close!(
+            ring.latencies().total_weight(),
+            chunked.latencies().total_weight(),
+            rtol = 1e-6
+        );
+        ring.check_invariants();
+        chunked.check_invariants();
     }
 
     #[test]

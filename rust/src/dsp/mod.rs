@@ -21,6 +21,7 @@ pub mod cluster;
 pub mod engine;
 pub mod partition;
 pub mod profile;
+pub mod queue;
 pub mod skew;
 pub mod worker;
 
@@ -30,5 +31,6 @@ pub use engine::{
 };
 pub use partition::Partition;
 pub use profile::EngineProfile;
+pub use queue::QueuePolicy;
 pub use skew::KeyDistribution;
 pub use worker::Worker;

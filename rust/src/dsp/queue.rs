@@ -1,0 +1,480 @@
+//! Inter-stage queue representations for the staged engine.
+//!
+//! Chunk arrival times are tick-quantized: the generator stamps every
+//! source chunk `t + 0.5` for integer tick `t`, and all downstream
+//! emission preserves arrival times, so an inter-stage queue only ever
+//! holds mass at half-second points `k + 0.5`. The default
+//! [`QueuePolicy::BucketRing`] exploits that: the queue is a ring of
+//! per-tick f64 buckets indexed by arrival tick, which makes a push an
+//! O(1) indexed add (no coalescing scan, and no sort to restore global
+//! arrival order after the source-replica merge — buckets are inherently
+//! time-ordered), keeps the memory footprint at one f64 per backlogged
+//! tick, and turns a checkpoint snapshot into a flat ring copy.
+//!
+//! The pre-ring chunk-list representation is retained bit-for-bit as
+//! [`QueuePolicy::Chunked`] — the reference implementation the
+//! queue-policy agreement property test (`tests/invariants.rs`) and the
+//! `staged_tick_chunked` bench baseline drive, following the PR-2
+//! `NaiveScan` pattern. The two policies drain identical chunk sequences
+//! for identical queue contents; the only behavioural difference is that
+//! the ring coalesces *all* equal-tick mass into one bucket while the
+//! chunk list only coalesces consecutive same-time pushes, so float
+//! additions regroup (sub-ulp effects, absorbed by the 1/1000 trace
+//! quantization — the same rationale as PR 2's chunk coalescing).
+
+use std::collections::VecDeque;
+
+use super::partition::Chunk;
+
+/// How the staged engine represents its inter-stage queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueuePolicy {
+    /// Ring of per-tick f64 buckets keyed by arrival tick — O(1) push,
+    /// inherently time-ordered, snapshot = ring copy.
+    #[default]
+    BucketRing,
+    /// FIFO chunk list (`VecDeque<Chunk>` with consecutive same-time
+    /// coalescing) — the retained PR-3 reference implementation.
+    Chunked,
+}
+
+/// Ring of per-tick buckets: `buckets[(head + i) & mask]` holds the mass
+/// that arrived at tick `start_tick + i`, for `i < span`. Buckets inside
+/// the span may be zero (ticks where nothing arrived — e.g. across a
+/// restart gap); buckets outside the span hold garbage and are zeroed as
+/// the span grows over them.
+#[derive(Debug, Clone, Default)]
+pub struct BucketRing {
+    /// Power-of-two capacity (0 until the first push).
+    buckets: Vec<f64>,
+    /// Ring index of the oldest tick.
+    head: usize,
+    /// Tick of the oldest bucket.
+    start_tick: u64,
+    /// Number of ticks spanned from `head` (0 = empty).
+    span: usize,
+}
+
+impl BucketRing {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The arrival tick a chunk time belongs to (times are `k + 0.5`).
+    #[inline]
+    fn tick_of(t: f64) -> u64 {
+        let tick = (t - 0.5).round();
+        debug_assert!(
+            (t - (tick + 0.5)).abs() < 1e-6 && tick >= 0.0,
+            "arrival time {t} is not tick-quantized"
+        );
+        tick as u64
+    }
+
+    /// Re-linearize into a fresh ring of at least `min_cap` buckets.
+    fn grow(&mut self, min_cap: usize) {
+        let cap = min_cap.max(self.buckets.len() * 2).max(8).next_power_of_two();
+        let mut next = vec![0.0; cap];
+        let old_cap = self.buckets.len();
+        for i in 0..self.span {
+            next[i] = self.buckets[(self.head + i) & (old_cap - 1)];
+        }
+        self.buckets = next;
+        self.head = 0;
+    }
+
+    /// Add `amount` tuples with arrival time `t` — an O(1) indexed add
+    /// (amortizing the occasional ring growth).
+    pub fn push(&mut self, t: f64, amount: f64) {
+        if amount <= 0.0 {
+            return;
+        }
+        let tick = Self::tick_of(t);
+        if self.span == 0 {
+            if self.buckets.is_empty() {
+                self.buckets = vec![0.0; 8];
+            }
+            self.head = 0;
+            self.start_tick = tick;
+            self.span = 1;
+            self.buckets[0] = amount;
+            return;
+        }
+        if tick >= self.start_tick {
+            let off = (tick - self.start_tick) as usize;
+            if off >= self.buckets.len() {
+                self.grow(off + 1);
+            }
+            let mask = self.buckets.len() - 1;
+            if off >= self.span {
+                // Newly covered ticks: clear whatever the ring held there.
+                for i in self.span..=off {
+                    self.buckets[(self.head + i) & mask] = 0.0;
+                }
+                self.span = off + 1;
+            }
+            self.buckets[(self.head + off) & mask] += amount;
+        } else {
+            // Older than the current head — does not occur in forward
+            // pipeline flow (FIFO emission), but restores/replay storms
+            // are entitled to it; extend the ring backwards.
+            let back = (self.start_tick - tick) as usize;
+            if self.span + back > self.buckets.len() {
+                self.grow(self.span + back);
+            }
+            let mask = self.buckets.len() - 1;
+            for _ in 0..back {
+                self.head = (self.head + mask) & mask; // head - 1 mod cap
+                self.buckets[self.head] = 0.0;
+            }
+            self.start_tick = tick;
+            self.span += back;
+            self.buckets[self.head] += amount;
+        }
+    }
+
+    #[inline]
+    fn advance(&mut self) {
+        let mask = self.buckets.len() - 1;
+        self.head = (self.head + 1) & mask;
+        self.start_tick += 1;
+        self.span -= 1;
+    }
+
+    /// FIFO-drain up to `budget` tuples into `out`, mirroring the chunked
+    /// drain chunk for chunk: emitted times are reconstructed as
+    /// `tick + 0.5` (bit-identical to the pushed times), sub-`1e-9`
+    /// residues are dropped exactly like a popped chunk's, and
+    /// `backlog` is decremented per take with the same floor-at-zero.
+    /// Returns the drained total.
+    pub fn drain_into(&mut self, mut budget: f64, backlog: &mut f64, out: &mut Vec<Chunk>) -> f64 {
+        let mut drained = 0.0;
+        while budget > 1e-9 && self.span > 0 {
+            let amt = self.buckets[self.head];
+            if amt > 0.0 {
+                let take = amt.min(budget);
+                out.push(Chunk {
+                    t: self.start_tick as f64 + 0.5,
+                    amount: take,
+                });
+                budget -= take;
+                drained += take;
+                *backlog = (*backlog - take).max(0.0);
+                let rest = amt - take;
+                if rest <= 1e-9 {
+                    self.buckets[self.head] = 0.0;
+                    self.advance();
+                } else {
+                    self.buckets[self.head] = rest;
+                    // Budget exhausted on a partial take.
+                }
+            } else {
+                // Empty tick inside the span (nothing arrived then).
+                self.buckets[self.head] = 0.0;
+                self.advance();
+            }
+        }
+        drained
+    }
+
+    /// Total queued mass (invariant checks; not on the tick path).
+    pub fn mass(&self) -> f64 {
+        let mask = self.buckets.len().wrapping_sub(1);
+        (0..self.span).map(|i| self.buckets[(self.head + i) & mask]).sum()
+    }
+
+    /// Ticks spanned by the ring — the occupancy bound `tests/perf_smoke.rs`
+    /// pins (one bucket per backlogged tick).
+    pub fn span(&self) -> usize {
+        self.span
+    }
+
+    pub fn clear(&mut self) {
+        self.span = 0;
+    }
+
+    /// Snapshot copy from `src`, reusing this ring's allocation when the
+    /// capacities match (the checkpoint hot path: a flat memcpy).
+    pub fn assign_from(&mut self, src: &BucketRing) {
+        self.buckets.clone_from(&src.buckets);
+        self.head = src.head;
+        self.start_tick = src.start_tick;
+        self.span = src.span;
+    }
+}
+
+/// The retained PR-3 queue: a FIFO chunk list coalescing consecutive
+/// same-time pushes.
+#[derive(Debug, Clone, Default)]
+pub struct ChunkedQueue {
+    queue: VecDeque<Chunk>,
+}
+
+impl ChunkedQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Coalescing push of `amount` tuples with arrival time `t` onto the
+    /// back of the queue.
+    pub fn push(&mut self, t: f64, amount: f64) {
+        if amount <= 0.0 {
+            return;
+        }
+        match self.queue.back_mut() {
+            Some(last) if (last.t - t).abs() < 1e-9 => last.amount += amount,
+            _ => self.queue.push_back(Chunk { t, amount }),
+        }
+    }
+
+    /// FIFO-drain up to `budget` tuples into `out` (possibly splitting the
+    /// head chunk), decrementing `backlog` per take. Returns the drained
+    /// total. Bit-identical to the pre-refactor in-engine drain loop.
+    pub fn drain_into(&mut self, mut budget: f64, backlog: &mut f64, out: &mut Vec<Chunk>) -> f64 {
+        let mut drained = 0.0;
+        while budget > 1e-9 {
+            let Some(front) = self.queue.front_mut() else {
+                break;
+            };
+            let take = front.amount.min(budget);
+            out.push(Chunk {
+                t: front.t,
+                amount: take,
+            });
+            front.amount -= take;
+            budget -= take;
+            drained += take;
+            *backlog = (*backlog - take).max(0.0);
+            if front.amount <= 1e-9 {
+                self.queue.pop_front();
+            }
+        }
+        drained
+    }
+
+    pub fn mass(&self) -> f64 {
+        self.queue.iter().map(|c| c.amount).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.queue.clear();
+    }
+
+    pub fn assign_from(&mut self, src: &ChunkedQueue) {
+        self.queue.clear();
+        self.queue.extend(src.queue.iter().copied());
+    }
+}
+
+/// One stage's input queue under the active [`QueuePolicy`].
+#[derive(Debug, Clone)]
+pub enum StageQueue {
+    Ring(BucketRing),
+    Chunked(ChunkedQueue),
+}
+
+impl StageQueue {
+    pub fn new(policy: QueuePolicy) -> Self {
+        match policy {
+            QueuePolicy::BucketRing => StageQueue::Ring(BucketRing::new()),
+            QueuePolicy::Chunked => StageQueue::Chunked(ChunkedQueue::new()),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: f64, amount: f64) {
+        match self {
+            StageQueue::Ring(q) => q.push(t, amount),
+            StageQueue::Chunked(q) => q.push(t, amount),
+        }
+    }
+
+    #[inline]
+    pub fn drain_into(&mut self, budget: f64, backlog: &mut f64, out: &mut Vec<Chunk>) -> f64 {
+        match self {
+            StageQueue::Ring(q) => q.drain_into(budget, backlog, out),
+            StageQueue::Chunked(q) => q.drain_into(budget, backlog, out),
+        }
+    }
+
+    pub fn mass(&self) -> f64 {
+        match self {
+            StageQueue::Ring(q) => q.mass(),
+            StageQueue::Chunked(q) => q.mass(),
+        }
+    }
+
+    /// Occupancy: ring span (ticks) or chunk count.
+    pub fn len(&self) -> usize {
+        match self {
+            StageQueue::Ring(q) => q.span(),
+            StageQueue::Chunked(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&mut self) {
+        match self {
+            StageQueue::Ring(q) => q.clear(),
+            StageQueue::Chunked(q) => q.clear(),
+        }
+    }
+
+    /// Snapshot copy (checkpoint/restore). Both sides always share the
+    /// deployment's policy, so a variant mismatch is a bug.
+    pub fn assign_from(&mut self, src: &StageQueue) {
+        match (self, src) {
+            (StageQueue::Ring(dst), StageQueue::Ring(s)) => dst.assign_from(s),
+            (StageQueue::Chunked(dst), StageQueue::Chunked(s)) => dst.assign_from(s),
+            _ => unreachable!("queue snapshot policy mismatch"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut StageQueue, budget: f64) -> (Vec<Chunk>, f64) {
+        let mut out = Vec::new();
+        let mut backlog = q.mass();
+        let got = q.drain_into(budget, &mut backlog, &mut out);
+        (out, got)
+    }
+
+    #[test]
+    fn ring_push_drain_fifo_order() {
+        let mut q = BucketRing::new();
+        q.push(2.5, 10.0);
+        q.push(0.5, 5.0);
+        q.push(2.5, 1.0); // same tick coalesces into the bucket
+        assert_eq!(q.span(), 3); // ticks 0..=2, tick 1 empty
+        crate::assert_close!(q.mass(), 16.0, atol = 1e-12);
+        let mut out = Vec::new();
+        let mut backlog = 16.0;
+        let got = q.drain_into(100.0, &mut backlog, &mut out);
+        crate::assert_close!(got, 16.0, atol = 1e-12);
+        assert_eq!(out.len(), 2); // the empty tick-1 bucket emits nothing
+        assert_eq!(out[0], Chunk { t: 0.5, amount: 5.0 });
+        assert_eq!(out[1], Chunk { t: 2.5, amount: 11.0 });
+        assert_eq!(q.span(), 0);
+        crate::assert_close!(backlog, 0.0, atol = 1e-12);
+    }
+
+    #[test]
+    fn ring_partial_drain_splits_bucket() {
+        let mut q = BucketRing::new();
+        q.push(0.5, 100.0);
+        let mut out = Vec::new();
+        let mut backlog = 100.0;
+        q.drain_into(60.0, &mut backlog, &mut out);
+        assert_eq!(out, vec![Chunk { t: 0.5, amount: 60.0 }]);
+        crate::assert_close!(q.mass(), 40.0, atol = 1e-12);
+        assert_eq!(q.span(), 1);
+        q.drain_into(60.0, &mut backlog, &mut out);
+        crate::assert_close!(q.mass(), 0.0, atol = 1e-12);
+    }
+
+    #[test]
+    fn ring_grows_past_initial_capacity() {
+        let mut q = BucketRing::new();
+        for k in 0..200u64 {
+            q.push(k as f64 + 0.5, 1.0);
+        }
+        assert_eq!(q.span(), 200);
+        crate::assert_close!(q.mass(), 200.0, atol = 1e-9);
+        // Drain half, then push far ahead: the ring wraps and regrows.
+        let (_, got) = {
+            let mut out = Vec::new();
+            let mut backlog = q.mass();
+            let got = q.drain_into(100.0, &mut backlog, &mut out);
+            (out, got)
+        };
+        crate::assert_close!(got, 100.0, atol = 1e-9);
+        q.push(999.5, 7.0);
+        assert_eq!(q.span(), 900); // ticks 100..=999
+        crate::assert_close!(q.mass(), 107.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn ring_supports_backward_push_after_restore() {
+        let mut q = BucketRing::new();
+        q.push(10.5, 4.0);
+        q.push(8.5, 2.0); // older than the head
+        assert_eq!(q.span(), 3);
+        let (out, _) = drain(&mut StageQueue::Ring(q), 100.0);
+        assert_eq!(out[0], Chunk { t: 8.5, amount: 2.0 });
+        assert_eq!(out[1], Chunk { t: 10.5, amount: 4.0 });
+    }
+
+    #[test]
+    fn ring_and_chunked_drain_identical_sequences() {
+        // Same monotone push pattern → identical drained chunks across a
+        // randomized budget schedule.
+        let mut ring = StageQueue::new(QueuePolicy::BucketRing);
+        let mut chunked = StageQueue::new(QueuePolicy::Chunked);
+        let mut rng = crate::stats::Rng::new(99);
+        let mut t = 0u64;
+        for _ in 0..300 {
+            let amt = rng.range(0.0, 500.0);
+            ring.push(t as f64 + 0.5, amt);
+            chunked.push(t as f64 + 0.5, amt);
+            t += 1 + rng.below(3); // occasional gaps
+            let budget = rng.range(0.0, 700.0);
+            let (a, ga) = drain_one(&mut ring, budget);
+            let (b, gb) = drain_one(&mut chunked, budget);
+            assert_eq!(a, b);
+            assert_eq!(ga.to_bits(), gb.to_bits());
+        }
+        crate::assert_close!(ring.mass(), chunked.mass(), rtol = 1e-12, atol = 1e-9);
+
+        fn drain_one(q: &mut StageQueue, budget: f64) -> (Vec<Chunk>, f64) {
+            let mut out = Vec::new();
+            let mut backlog = f64::MAX;
+            let got = q.drain_into(budget, &mut backlog, &mut out);
+            (out, got)
+        }
+    }
+
+    #[test]
+    fn snapshot_assign_restores_exact_state() {
+        for policy in [QueuePolicy::BucketRing, QueuePolicy::Chunked] {
+            let mut q = StageQueue::new(policy);
+            for k in 0..40u64 {
+                q.push(k as f64 + 0.5, (k % 7) as f64);
+            }
+            let mut snap = StageQueue::new(policy);
+            snap.assign_from(&q);
+            // Mutate, then restore.
+            let (_, _) = drain(&mut q, 55.0);
+            q.push(60.5, 3.0);
+            q.assign_from(&snap);
+            crate::assert_close!(q.mass(), snap.mass(), rtol = 1e-12, atol = 1e-12);
+            let (a, _) = drain(&mut q, f64::MAX);
+            let (b, _) = drain(&mut snap, f64::MAX);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn zero_and_negative_pushes_ignored() {
+        for policy in [QueuePolicy::BucketRing, QueuePolicy::Chunked] {
+            let mut q = StageQueue::new(policy);
+            q.push(0.5, 0.0);
+            q.push(1.5, -4.0);
+            assert!(q.is_empty());
+            crate::assert_close!(q.mass(), 0.0, atol = 1e-12);
+        }
+    }
+}

@@ -156,6 +156,11 @@ impl Scenario {
                 (StageModel::Staged, Some(drift), None)
             }
             ShapeKind::SkewAmplify => (StageModel::Staged, None, Some(1.1)),
+            // The week-scale horizon runs the staged engine (no drift, no
+            // skew override): it is the long-horizon sweep substrate the
+            // bucket-ring queues and columnar TSDB exist for, so the cell
+            // exercises them end to end.
+            ShapeKind::DiurnalWeek => (StageModel::Staged, None, None),
             _ => (StageModel::Fused, None, None),
         }
     }
@@ -208,15 +213,18 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The curated built-in matrix (18 scenarios): the six paper
+    /// The curated built-in matrix (20 scenarios): the six paper
     /// engine × job cells on their default traces, the three stress shapes
-    /// on several cells, two failure-injection schedules, and four
+    /// on several cells, two failure-injection schedules, four
     /// staged-engine operator-elasticity cells (`bottleneck-shift`,
-    /// `skew-amplify`).
+    /// `skew-amplify`), and two week-scale `diurnal-week` cells (staged
+    /// engine; real days at `--duration 604800`).
     pub fn builtin(duration: Timestamp, seeds: &[u64]) -> Self {
         use EngineKind::{Flink, KStreams};
         use JobKind::{Traffic, WordCount, Ysb};
-        use ShapeKind::{BottleneckShift, DiurnalDrift, FlashCrowd, OutageBackfill, SkewAmplify};
+        use ShapeKind::{
+            BottleneckShift, DiurnalDrift, DiurnalWeek, FlashCrowd, OutageBackfill, SkewAmplify,
+        };
 
         let s = |engine, job: JobKind, shape, failures| {
             Scenario::new(engine, job, shape, failures, duration, seeds.to_vec())
@@ -249,6 +257,12 @@ impl ScenarioRegistry {
             s(Flink, Ysb, BottleneckShift, FailurePlan::None),
             s(Flink, WordCount, SkewAmplify, FailurePlan::None),
             s(KStreams, Ysb, SkewAmplify, FailurePlan::None),
+            // Week-scale horizon (7 diurnal cycles × weekday rhythm ×
+            // growth) on the staged engine — the long-horizon sweep the
+            // bucket-ring queues + columnar TSDB make tractable; run with
+            // `--duration 604800` for real days (CI smokes it truncated).
+            s(Flink, WordCount, DiurnalWeek, FailurePlan::None),
+            s(KStreams, Ysb, DiurnalWeek, FailurePlan::None),
         ];
         Self { scenarios }
     }
@@ -330,6 +344,14 @@ mod tests {
         assert_eq!(sa.stage_model, StageModel::Staged);
         assert!(sa.selectivity_drift.is_none());
         assert_eq!(sa.zipf_override, Some(1.1));
+
+        // The week-scale cells run the staged engine without drift/skew
+        // overrides, on both engines.
+        for name in ["flink-wordcount-diurnal-week", "kstreams-ysb-diurnal-week"] {
+            let dw = reg.get(name).unwrap();
+            assert_eq!(dw.stage_model, StageModel::Staged, "{name}");
+            assert!(dw.selectivity_drift.is_none() && dw.zipf_override.is_none());
+        }
 
         // The pre-existing matrix stays on the fused reference pool, so
         // its golden traces are untouched by the stage refactor.

@@ -37,8 +37,11 @@ fn usage() -> ! {
                bottleneck-shift / skew-amplify cells run the staged engine\n\
                (per-operator replica sets; ds2 scales stage vectors)\n\
            bench [--out BENCH_micro.json] [--smoke] [--filter substr]\n\
+                 [--check tracked.json]\n\
                run the micro-bench registry (before/after pairs vs the\n\
-               retained reference impls) and write the JSON perf trajectory\n\
+               retained reference impls) and write the JSON perf trajectory;\n\
+               --check prints per-entry deltas vs a tracked trajectory\n\
+               file (report-only — never fails the run)\n\
            selfcheck [--backend ...]\n\
                compile + execute both AOT artifacts once and print timings\n\
            live [--speed X] [--duration S] [--backend ...]\n\
@@ -425,6 +428,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .unwrap_or("BENCH_micro.json");
     daedalus::perf::write_json(out, &results, opts.smoke)?;
     println!("\nwrote {out}");
+    // Report-only by contract: an unreadable/garbled tracked file must not
+    // fail the run (or eat the measurements — --out is already written).
+    if let Some(tracked) = args.flags.get("check") {
+        let report = match std::fs::read_to_string(tracked) {
+            Ok(text) => daedalus::perf::check_report(&results, &text, tracked),
+            Err(e) => Err(e.into()),
+        };
+        match report {
+            Ok(text) => print!("\n{text}"),
+            Err(e) => eprintln!("warning: --check {tracked} skipped: {e}"),
+        }
+    }
     Ok(())
 }
 

@@ -19,4 +19,4 @@
 pub mod query;
 pub mod tsdb;
 
-pub use tsdb::{SeriesId, Tsdb};
+pub use tsdb::{SeriesHandle, SeriesId, Tsdb};

@@ -1,8 +1,22 @@
 //! Higher-level queries over the TSDB — the monitor-phase view the
 //! autoscalers consume (per-worker snapshots, moving averages, workload
 //! history extraction for the forecaster).
+//!
+//! Two flavours: the stateless functions (tests, one-shot reads) and the
+//! **incremental monitors** ([`StageMonitor`], [`WorkerMonitor`]) the
+//! per-decision-tick paths hold. The monitors resolve every series to a
+//! dense [`SeriesHandle`] table once (re-resolved only when the store
+//! gains a series), and the stage monitor additionally keeps the trailing
+//! window in per-stage sample rings advanced by a time cursor — each TSDB
+//! sample is read once over the life of a run instead of once per
+//! decision tick, so DS2/Daedalus decision ticks no longer rebuild their
+//! per-stage views from scratch. Ring sums run front-to-back in time
+//! order, i.e. the exact summation sequence of `Tsdb::avg_over` — the
+//! incremental path is bit-identical to the stateless one.
 
-use super::tsdb::{SeriesId, Tsdb};
+use std::collections::VecDeque;
+
+use super::tsdb::{SeriesHandle, SeriesId, Tsdb};
 use crate::clock::Timestamp;
 
 /// Point-in-time view of one worker's metrics.
@@ -115,6 +129,204 @@ pub fn stage_snapshots_into(
     }
 }
 
+/// Rolling trailing-window view of one per-second series: a pre-resolved
+/// handle, a read cursor, and the in-window samples (oldest first).
+#[derive(Debug, Clone, Default)]
+struct SeriesWindow {
+    handle: Option<SeriesHandle>,
+    /// Next unread timestamp (everything before it has been pulled).
+    cursor: Timestamp,
+    ring: VecDeque<(Timestamp, f64)>,
+}
+
+impl SeriesWindow {
+    /// Pull samples in `[max(cursor, from), now]` and evict those before
+    /// `from`. Returns false while the series does not exist yet.
+    ///
+    /// Contract: the monitored series must be appended by a single writer
+    /// whose timestamps strictly exceed every already-monitored `now` (the
+    /// engine records all of tick `t`'s samples before any autoscaler
+    /// reads at `t`, and monitor calls see non-decreasing `now`). A sample
+    /// recorded at or before a previous call's `now` lands behind the
+    /// cursor and is never observed — that is where the bit-identity with
+    /// the stateless snapshot functions would end.
+    fn advance(&mut self, db: &Tsdb, from: Timestamp, now: Timestamp) -> bool {
+        let Some(h) = self.handle else { return false };
+        let lo = self.cursor.max(from);
+        if lo <= now {
+            db.fold_over_h(h, lo, now, (), |(), t, v| self.ring.push_back((t, v)));
+            self.cursor = now + 1;
+        }
+        while self.ring.front().is_some_and(|&(t, _)| t < from) {
+            self.ring.pop_front();
+        }
+        true
+    }
+
+    /// Front-to-back mean — the same summation order as `Tsdb::avg_over`
+    /// over the window, so the incremental value is bit-identical.
+    fn avg(&self) -> Option<f64> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        Some(self.ring.iter().map(|&(_, v)| v).sum::<f64>() / self.ring.len() as f64)
+    }
+}
+
+/// Incremental per-stage monitor: one [`SeriesWindow`] per stage metric
+/// plus last-value handles, producing [`StageSnapshot`]s without hashing,
+/// re-searching, or re-reading history (see the module docs).
+#[derive(Debug, Clone, Default)]
+pub struct StageMonitor {
+    window: u64,
+    /// `Tsdb::series_count` when handles were last resolved; any new
+    /// series re-triggers resolution (handles themselves are stable).
+    generation: usize,
+    stages: Vec<StageState>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct StageState {
+    busy: SeriesWindow,
+    tput: SeriesWindow,
+    par: Option<SeriesHandle>,
+    queue: Option<SeriesHandle>,
+}
+
+impl StageMonitor {
+    pub fn new(window: u64) -> Self {
+        Self {
+            window,
+            ..Self::default()
+        }
+    }
+
+    /// (Re-)resolve handles for `n_stages` stages. Rings and cursors of
+    /// already-resolved stages are untouched — handles are stable.
+    fn rebind(&mut self, db: &Tsdb, n_stages: usize) {
+        self.stages.resize_with(n_stages, StageState::default);
+        for (s, st) in self.stages.iter_mut().enumerate() {
+            if st.busy.handle.is_none() {
+                st.busy.handle = db.lookup(&SeriesId::stage("stage_busy", s));
+            }
+            if st.tput.handle.is_none() {
+                st.tput.handle = db.lookup(&SeriesId::stage("stage_throughput", s));
+            }
+            if st.par.is_none() {
+                st.par = db.lookup(&SeriesId::stage("stage_parallelism", s));
+            }
+            if st.queue.is_none() {
+                st.queue = db.lookup(&SeriesId::stage("stage_queue", s));
+            }
+        }
+        self.generation = db.series_count();
+    }
+
+    /// [`stage_snapshots_into`], incrementally: same output (bit for bit),
+    /// but each underlying sample is read only once across calls. `window`
+    /// must not change between calls on the same store (it is fixed per
+    /// autoscaler config); a changed window resets the monitor.
+    pub fn snapshots_into(
+        &mut self,
+        db: &Tsdb,
+        now: Timestamp,
+        window: u64,
+        n_stages: usize,
+        out: &mut Vec<StageSnapshot>,
+    ) {
+        out.clear();
+        if window != self.window {
+            *self = Self::new(window);
+        }
+        if db.series_count() != self.generation || self.stages.len() != n_stages {
+            self.rebind(db, n_stages);
+        }
+        let from = now.saturating_sub(window.saturating_sub(1));
+        for s in 0..n_stages {
+            let st = &mut self.stages[s];
+            if !st.busy.advance(db, from, now) || !st.tput.advance(db, from, now) {
+                break;
+            }
+            let (Some(busy), Some(throughput)) = (st.busy.avg(), st.tput.avg()) else {
+                break;
+            };
+            let parallelism = st
+                .par
+                .and_then(|h| db.last_at_h(h, now))
+                .map_or(1, |(_, v)| v as usize);
+            let queue = st
+                .queue
+                .and_then(|h| db.last_at_h(h, now))
+                .map_or(0.0, |(_, v)| v);
+            out.push(StageSnapshot {
+                stage: s,
+                parallelism,
+                busy,
+                throughput,
+                queue,
+            });
+        }
+    }
+}
+
+/// Cached handle table for the per-worker snapshot reads: resolves the
+/// `worker_cpu`/`worker_throughput` handle pairs once (re-resolved only
+/// when the store gains a series), so the steady-state monitor phase does
+/// no hashing and no per-call index scan/sort/allocation.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerMonitor {
+    generation: usize,
+    /// Sorted by worker index, mirroring `Tsdb::workers_for`.
+    workers: Vec<(usize, SeriesHandle, Option<SeriesHandle>)>,
+}
+
+impl WorkerMonitor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn rebind(&mut self, db: &Tsdb) {
+        self.workers.clear();
+        for w in db.workers_for("worker_cpu") {
+            let Some(cpu) = db.lookup(&SeriesId::worker("worker_cpu", w)) else {
+                continue;
+            };
+            let tput = db.lookup(&SeriesId::worker("worker_throughput", w));
+            self.workers.push((w, cpu, tput));
+        }
+        self.generation = db.series_count();
+    }
+
+    /// [`worker_snapshots_into`] through the cached handle table — same
+    /// output, bit for bit.
+    pub fn snapshots_into(
+        &mut self,
+        db: &Tsdb,
+        now: Timestamp,
+        window: u64,
+        out: &mut Vec<WorkerSnapshot>,
+    ) {
+        out.clear();
+        if db.series_count() != self.generation {
+            self.rebind(db);
+        }
+        let from = now.saturating_sub(window.saturating_sub(1));
+        for &(w, cpu_h, tput_h) in &self.workers {
+            let (Some(cpu), Some(tput)) = (
+                db.avg_over_h(cpu_h, from, now),
+                tput_h.and_then(|h| db.avg_over_h(h, from, now)),
+            ) else {
+                continue;
+            };
+            out.push(WorkerSnapshot {
+                worker: w,
+                cpu,
+                throughput: tput,
+            });
+        }
+    }
+}
+
 /// Workload rate history over `[now − window + 1, now]`, padded on the left
 /// with the earliest sample so the result always has `window` entries — the
 /// fixed-shape input the forecast artifact expects.
@@ -129,11 +341,49 @@ pub fn workload_window(db: &Tsdb, now: Timestamp, window: usize) -> Vec<f64> {
 /// is built in O(window) — the old implementation `insert(0, …)`-ed the
 /// pad afterwards, which was O(window²) for young jobs.
 pub fn workload_window_into(db: &Tsdb, now: Timestamp, window: usize, out: &mut Vec<f64>) {
+    match db.lookup(&SeriesId::global("workload_rate")) {
+        Some(h) => workload_window_into_h(db, h, now, window, out),
+        None => {
+            out.clear();
+            out.resize(window, 0.0);
+        }
+    }
+}
+
+/// [`workload_window_into`] with a caller-held handle cache — the
+/// per-decision-tick form: resolves the `workload_rate` handle once into
+/// `handle`, then stays on the hash-free path (Phoebe and the Daedalus
+/// monitor both hold such a cache; the single owner of the
+/// resolve-or-fall-back dance lives here).
+pub fn workload_window_into_cached(
+    db: &Tsdb,
+    handle: &mut Option<SeriesHandle>,
+    now: Timestamp,
+    window: usize,
+    out: &mut Vec<f64>,
+) {
+    if handle.is_none() {
+        *handle = db.lookup(&SeriesId::global("workload_rate"));
+    }
+    match *handle {
+        Some(h) => workload_window_into_h(db, h, now, window, out),
+        None => workload_window_into(db, now, window, out),
+    }
+}
+
+/// [`workload_window_into`] through a pre-resolved `workload_rate` handle —
+/// the hot inner path behind [`workload_window_into_cached`].
+pub fn workload_window_into_h(
+    db: &Tsdb,
+    h: SeriesHandle,
+    now: Timestamp,
+    window: usize,
+    out: &mut Vec<f64>,
+) {
     out.clear();
     out.reserve(window);
-    let id = SeriesId::global("workload_rate");
     let from = (now + 1).saturating_sub(window as u64);
-    let mut samples = db.iter_over(&id, from, now).peekable();
+    let mut samples = db.iter_over_h(h, from, now).peekable();
     let Some(&(_, first)) = samples.peek() else {
         out.resize(window, 0.0);
         return;
@@ -257,5 +507,97 @@ mod tests {
         assert_eq!(workload_window(&db, 100, 4), vec![0.0; 4]);
         assert_eq!(consumer_lag(&db, 100), 0.0);
         assert!(parallelism(&db, 100).is_none());
+    }
+
+    #[test]
+    fn cached_window_matches_uncached_and_resolves_once() {
+        let db = db_with(10);
+        let mut handle = None;
+        let mut buf = Vec::new();
+        workload_window_into_cached(&db, &mut handle, 9, 20, &mut buf);
+        assert_eq!(buf, workload_window(&db, 9, 20));
+        assert!(handle.is_some());
+        // A second call reuses the resolved handle and agrees again.
+        workload_window_into_cached(&db, &mut handle, 9, 4, &mut buf);
+        assert_eq!(buf, workload_window(&db, 9, 4));
+        // Missing series: zero fill, handle stays unresolved until the
+        // series appears.
+        let empty = Tsdb::new();
+        let mut h2 = None;
+        workload_window_into_cached(&empty, &mut h2, 5, 4, &mut buf);
+        assert_eq!(buf, vec![0.0; 4]);
+        assert!(h2.is_none());
+    }
+
+    fn staged_series(db: &mut Tsdb, upto: u64) {
+        for t in 0..upto {
+            for s in 0..2 {
+                // Non-trivial values so any summation drift would show.
+                db.record_stage("stage_busy", s, t, 0.3 + 0.11 * ((t * (s as u64 + 3)) % 7) as f64 / 7.0);
+                db.record_stage("stage_throughput", s, t, 900.0 + (t % 13) as f64 * (s + 1) as f64);
+                db.record_stage("stage_parallelism", s, t, (s + 2) as f64);
+                db.record_stage("stage_queue", s, t, (t % 5) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn stage_monitor_matches_stateless_snapshots_bitwise() {
+        let mut db = Tsdb::new();
+        staged_series(&mut db, 40);
+        let mut mon = StageMonitor::new(60);
+        let mut got = Vec::new();
+        // Drive it incrementally — including before the window fills, and
+        // across series that appear after the monitor's first call.
+        for now in [10u64, 39] {
+            mon.snapshots_into(&db, now, 60, 3, &mut got);
+            assert_eq!(got, stage_snapshots(&db, now, 60, 3), "now={now}");
+            assert_eq!(got.len(), 2, "stage 2 has no series yet");
+        }
+        // Stage 2 appears later: the generation bump re-resolves handles.
+        for t in 40..200u64 {
+            for s in 0..3 {
+                db.record_stage("stage_busy", s, t, 0.5 + 0.01 * s as f64);
+                db.record_stage("stage_throughput", s, t, 1_000.0 * (s + 1) as f64);
+                db.record_stage("stage_parallelism", s, t, 2.0);
+                db.record_stage("stage_queue", s, t, 1.0);
+            }
+        }
+        for now in [40u64, 99, 100, 160, 199] {
+            mon.snapshots_into(&db, now, 60, 3, &mut got);
+            let want = stage_snapshots(&db, now, 60, 3);
+            assert_eq!(got, want, "now={now}");
+        }
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn worker_monitor_matches_stateless_snapshots() {
+        let mut db = Tsdb::new();
+        for t in 0..50u64 {
+            db.record_worker("worker_cpu", 0, t, 0.4 + (t % 3) as f64 * 0.1);
+            db.record_worker("worker_throughput", 0, t, 5_000.0 + t as f64);
+        }
+        // Worker 1 has CPU but no throughput series: skipped by both.
+        for t in 0..50u64 {
+            db.record_worker("worker_cpu", 1, t, 0.9);
+        }
+        let mut mon = WorkerMonitor::new();
+        let mut got = Vec::new();
+        for now in [5u64, 30, 49] {
+            mon.snapshots_into(&db, now, 60, &mut got);
+            assert_eq!(got, worker_snapshots(&db, now, 60), "now={now}");
+        }
+        assert_eq!(got.len(), 1);
+        // A new worker appearing later is picked up via the generation.
+        for t in 50..80u64 {
+            for w in 0..3 {
+                db.record_worker("worker_cpu", w, t, 0.5);
+                db.record_worker("worker_throughput", w, t, 4_000.0);
+            }
+        }
+        mon.snapshots_into(&db, 79, 60, &mut got);
+        assert_eq!(got, worker_snapshots(&db, 79, 60));
+        assert_eq!(got.len(), 3);
     }
 }

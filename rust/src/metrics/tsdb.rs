@@ -2,9 +2,24 @@
 //! semantics: one sample per (series, timestamp), queries over closed time
 //! ranges `[from, to]` in seconds.
 //!
-//! Storage is a flat `Vec<Series>` with a hash index; the hot path (the
-//! engine recording 2·workers + ~6 globals every simulated second) uses
-//! pre-resolved [`SeriesHandle`]s and never hashes (EXPERIMENTS.md §Perf).
+//! ## Columnar storage
+//!
+//! The engine appends one sample per series per simulated second, so a
+//! series is stored as a **dense f64 column** with an implicit stride-1
+//! timeline: `values` holds the samples in append order and `runs` holds
+//! `(start_time, start_index)` markers for each contiguous stretch of
+//! consecutive timestamps. A steady-state append extends the current run
+//! (8 bytes/sample, half the retained `(Timestamp, f64)`-pair layout that
+//! `src/perf.rs` keeps as the `tsdb_scan_6h_pairs` bench reference); a new
+//! run starts only when the timeline gaps (restart downtime) or a
+//! timestamp repeats. Range queries resolve `[from, to]` to a `[lo, hi)`
+//! index window with a binary search over the (tiny) run list and then
+//! walk a plain `&[f64]` slice — no per-sample timestamp loads.
+//!
+//! The hot write path (the engine recording 2·workers + ~6 globals every
+//! simulated second) uses pre-resolved [`SeriesHandle`]s and never hashes;
+//! the monitor read paths can do the same through [`Tsdb::lookup`] and the
+//! `*_h` query variants (see `metrics::query`'s incremental monitors).
 //!
 //! Range reads come in two flavours: the allocating `range`/`values_over`
 //! (convenience, tests) and the allocation-free [`Tsdb::iter_over`] /
@@ -83,34 +98,109 @@ impl Hasher for FastHasher {
     }
 }
 
-type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FastHasher>>;
+pub(crate) type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FastHasher>>;
 
-/// Pre-resolved series slot for hash-free recording.
+/// Pre-resolved series slot for hash-free recording and reading.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SeriesHandle(usize);
 
+/// One columnar series: dense values plus stride-1 run markers.
 #[derive(Debug, Default, Clone, PartialEq)]
 struct Series {
-    times: Vec<Timestamp>,
+    /// Sample values in append (= time) order.
     values: Vec<f64>,
+    /// `(start_time, start_index)` per contiguous stride-1 run; run `r`
+    /// covers `values[runs[r].1 .. runs[r+1].1]` at consecutive
+    /// timestamps starting at `runs[r].0`. Append-only non-decreasing
+    /// times guarantee run `r+1` starts at or after run `r`'s last time.
+    runs: Vec<(Timestamp, usize)>,
 }
 
 impl Series {
     #[inline]
     fn push(&mut self, t: Timestamp, v: f64) {
-        debug_assert!(
-            self.times.last().map_or(true, |last| *last <= t),
-            "samples must be appended in time order"
-        );
-        self.times.push(t);
+        let extends = match self.runs.last() {
+            Some(&(st, si)) => {
+                let last = st + (self.values.len() - si - 1) as Timestamp;
+                debug_assert!(last <= t, "samples must be appended in time order");
+                t == last + 1
+            }
+            None => false,
+        };
+        if !extends {
+            self.runs.push((t, self.values.len()));
+        }
         self.values.push(v);
     }
 
-    /// Index range covering `[from, to]`.
+    #[inline]
+    fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Length of run `r` in samples.
+    #[inline]
+    fn run_len(&self, r: usize) -> usize {
+        let end = self.runs.get(r + 1).map_or(self.values.len(), |&(_, si)| si);
+        end - self.runs[r].1
+    }
+
+    /// Number of samples with time < `from`.
+    fn lower_idx(&self, from: Timestamp) -> usize {
+        let pp = self.runs.partition_point(|&(st, _)| st < from);
+        if pp == 0 {
+            return 0;
+        }
+        let (st, si) = self.runs[pp - 1];
+        si + ((from - st) as usize).min(self.run_len(pp - 1))
+    }
+
+    /// Number of samples with time ≤ `to`.
+    fn upper_idx(&self, to: Timestamp) -> usize {
+        let pp = self.runs.partition_point(|&(st, _)| st <= to);
+        if pp == 0 {
+            return 0;
+        }
+        let (st, si) = self.runs[pp - 1];
+        si + ((to - st) as usize).saturating_add(1).min(self.run_len(pp - 1))
+    }
+
+    /// Global index window covering `[from, to]`.
+    #[inline]
     fn range_idx(&self, from: Timestamp, to: Timestamp) -> (usize, usize) {
-        let lo = self.times.partition_point(|t| *t < from);
-        let hi = self.times.partition_point(|t| *t <= to);
-        (lo, hi)
+        (self.lower_idx(from), self.upper_idx(to))
+    }
+
+    /// Timestamp of sample index `i` (must be < `len`).
+    fn time_at(&self, i: usize) -> Timestamp {
+        let r = self.runs.partition_point(|&(_, si)| si <= i) - 1;
+        self.runs[r].0 + (i - self.runs[r].1) as Timestamp
+    }
+}
+
+/// Allocation-free `(time, value)` iterator over one series' index window.
+pub struct SampleIter<'a> {
+    series: Option<&'a Series>,
+    idx: usize,
+    end: usize,
+    run: usize,
+}
+
+impl Iterator for SampleIter<'_> {
+    type Item = (Timestamp, f64);
+
+    fn next(&mut self) -> Option<(Timestamp, f64)> {
+        let s = self.series?;
+        if self.idx >= self.end {
+            return None;
+        }
+        while self.run + 1 < s.runs.len() && s.runs[self.run + 1].1 <= self.idx {
+            self.run += 1;
+        }
+        let (st, si) = s.runs[self.run];
+        let item = (st + (self.idx - si) as Timestamp, s.values[self.idx]);
+        self.idx += 1;
+        Some(item)
     }
 }
 
@@ -137,6 +227,19 @@ impl Tsdb {
         self.series.push(Series::default());
         self.index.insert(id, i);
         SeriesHandle(i)
+    }
+
+    /// Resolve an existing series to a handle without creating it — the
+    /// read-side counterpart of [`Tsdb::handle`] for monitors that only
+    /// hold `&Tsdb`. Handles are stable for the lifetime of the store.
+    pub fn lookup(&self, id: &SeriesId) -> Option<SeriesHandle> {
+        self.index.get(id).map(|&i| SeriesHandle(i))
+    }
+
+    /// Number of series in the store — a cheap generation stamp: it only
+    /// ever grows, and any new series invalidates cached handle tables.
+    pub fn series_count(&self) -> usize {
+        self.series.len()
     }
 
     /// Append via a pre-resolved handle (the engine's per-tick path).
@@ -172,24 +275,23 @@ impl Tsdb {
 
     /// Latest sample at or before `t`.
     pub fn last_at(&self, id: &SeriesId, t: Timestamp) -> Option<(Timestamp, f64)> {
-        let s = self.get(id)?;
-        let i = s.times.partition_point(|x| *x <= t);
+        self.lookup(id).and_then(|h| self.last_at_h(h, t))
+    }
+
+    /// [`Tsdb::last_at`] via a pre-resolved handle.
+    pub fn last_at_h(&self, h: SeriesHandle, t: Timestamp) -> Option<(Timestamp, f64)> {
+        let s = &self.series[h.0];
+        let i = s.upper_idx(t);
         if i == 0 {
             None
         } else {
-            Some((s.times[i - 1], s.values[i - 1]))
+            Some((s.time_at(i - 1), s.values[i - 1]))
         }
     }
 
     /// All samples with `from ≤ t ≤ to`, as (time, value) pairs.
     pub fn range(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Vec<(Timestamp, f64)> {
-        match self.get(id) {
-            None => vec![],
-            Some(s) => {
-                let (lo, hi) = s.range_idx(from, to);
-                (lo..hi).map(|i| (s.times[i], s.values[i])).collect()
-            }
-        }
+        self.iter_over(id, from, to).collect()
     }
 
     /// Values only (samples in `[from, to]`).
@@ -205,23 +307,28 @@ impl Tsdb {
 
     /// Allocation-free iterator over the samples in `[from, to]` —
     /// the range-read primitive for per-second monitor paths.
-    pub fn iter_over<'a>(
-        &'a self,
-        id: &SeriesId,
-        from: Timestamp,
-        to: Timestamp,
-    ) -> impl Iterator<Item = (Timestamp, f64)> + 'a {
-        let (s, lo, hi) = match self.get(id) {
-            Some(s) => {
-                let (lo, hi) = s.range_idx(from, to);
-                (Some(s), lo, hi)
-            }
-            None => (None, 0, 0),
-        };
-        (lo..hi).map(move |i| {
-            let s = s.expect("non-empty index range implies a series");
-            (s.times[i], s.values[i])
-        })
+    pub fn iter_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> SampleIter<'_> {
+        match self.lookup(id) {
+            Some(h) => self.iter_over_h(h, from, to),
+            None => SampleIter {
+                series: None,
+                idx: 0,
+                end: 0,
+                run: 0,
+            },
+        }
+    }
+
+    /// [`Tsdb::iter_over`] via a pre-resolved handle.
+    pub fn iter_over_h(&self, h: SeriesHandle, from: Timestamp, to: Timestamp) -> SampleIter<'_> {
+        let s = &self.series[h.0];
+        let (lo, hi) = s.range_idx(from, to);
+        SampleIter {
+            series: Some(s),
+            idx: lo,
+            end: hi,
+            run: 0,
+        }
     }
 
     /// Allocation-free left fold over the samples in `[from, to]`.
@@ -231,24 +338,38 @@ impl Tsdb {
         from: Timestamp,
         to: Timestamp,
         init: A,
+        f: impl FnMut(A, Timestamp, f64) -> A,
+    ) -> A {
+        match self.lookup(id) {
+            None => init,
+            Some(h) => self.fold_over_h(h, from, to, init, f),
+        }
+    }
+
+    /// [`Tsdb::fold_over`] via a pre-resolved handle.
+    pub fn fold_over_h<A>(
+        &self,
+        h: SeriesHandle,
+        from: Timestamp,
+        to: Timestamp,
+        init: A,
         mut f: impl FnMut(A, Timestamp, f64) -> A,
     ) -> A {
-        match self.get(id) {
-            None => init,
-            Some(s) => {
-                let (lo, hi) = s.range_idx(from, to);
-                let mut acc = init;
-                for i in lo..hi {
-                    acc = f(acc, s.times[i], s.values[i]);
-                }
-                acc
-            }
+        let mut acc = init;
+        for (t, v) in self.iter_over_h(h, from, to) {
+            acc = f(acc, t, v);
         }
+        acc
     }
 
     /// `avg_over_time` over `[from, to]`; `None` if no samples.
     pub fn avg_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
-        let s = self.get(id)?;
+        self.avg_over_h(self.lookup(id)?, from, to)
+    }
+
+    /// [`Tsdb::avg_over`] via a pre-resolved handle: a dense slice walk.
+    pub fn avg_over_h(&self, h: SeriesHandle, from: Timestamp, to: Timestamp) -> Option<f64> {
+        let s = &self.series[h.0];
         let (lo, hi) = s.range_idx(from, to);
         if lo == hi {
             return None;
@@ -278,12 +399,27 @@ impl Tsdb {
 
     /// Number of samples in a series.
     pub fn len(&self, id: &SeriesId) -> usize {
-        self.get(id).map_or(0, |s| s.times.len())
+        self.get(id).map_or(0, Series::len)
     }
 
     /// Whether the store holds any series.
     pub fn is_empty(&self) -> bool {
         self.series.is_empty()
+    }
+
+    /// Total samples across all series.
+    pub fn samples_total(&self) -> usize {
+        self.series.iter().map(Series::len).sum()
+    }
+
+    /// Payload bytes of the columnar storage: 8 per sample plus 16 per run
+    /// marker (the `tests/perf_smoke.rs` bytes-per-tick bound; the retained
+    /// pair layout costs a flat 16 per sample).
+    pub fn sample_bytes(&self) -> usize {
+        self.series
+            .iter()
+            .map(|s| s.values.len() * 8 + s.runs.len() * 16)
+            .sum()
     }
 
     /// Worker indices present for a metric name.
@@ -310,6 +446,21 @@ mod tests {
             db.record_worker("worker_cpu", 0, t, 0.5);
             db.record_worker("worker_cpu", 1, t, 0.8);
         }
+        db
+    }
+
+    /// Sparse series: runs split across gaps and a duplicate timestamp.
+    fn gappy_db() -> Tsdb {
+        let mut db = Tsdb::new();
+        for t in 0..10u64 {
+            db.record_global("x", t, t as f64);
+        }
+        // Gap (restart downtime), then a second dense run.
+        for t in 50..60u64 {
+            db.record_global("x", t, t as f64);
+        }
+        // Duplicate timestamp: allowed (non-decreasing), starts a new run.
+        db.record_global("x", 59, -1.0);
         db
     }
 
@@ -352,6 +503,7 @@ mod tests {
         assert_eq!(db.iter_over(&id, 0, 10).count(), 0);
         assert_eq!(db.fold_over(&id, 0, 10, 7usize, |a, _, _| a + 1), 7);
         assert_eq!(db.len(&id), 0);
+        assert!(db.lookup(&id).is_none());
     }
 
     #[test]
@@ -410,5 +562,62 @@ mod tests {
         db.record_h(h2, 0, 9.0);
         db.record_h(h, 3, 4.0);
         assert_eq!(db.last_at(&SeriesId::global("x"), 3), Some((3, 4.0)));
+        // Read-only lookup resolves the same slots.
+        assert_eq!(db.lookup(&SeriesId::global("x")), Some(h));
+        assert_eq!(db.lookup(&SeriesId::global("y")), Some(h2));
+    }
+
+    #[test]
+    fn gaps_and_duplicates_split_runs_but_preserve_semantics() {
+        let db = gappy_db();
+        let id = SeriesId::global("x");
+        assert_eq!(db.len(&id), 21);
+        // Queries straddling the gap see exactly the recorded samples.
+        assert_eq!(db.range(&id, 8, 51), vec![(8, 8.0), (9, 9.0), (50, 50.0), (51, 51.0)]);
+        assert_eq!(db.last_at(&id, 30), Some((9, 9.0)));
+        assert_eq!(db.last_at(&id, 50), Some((50, 50.0)));
+        // The duplicate timestamp keeps both samples, in append order.
+        assert_eq!(db.range(&id, 59, 59), vec![(59, 59.0), (59, -1.0)]);
+        assert_eq!(db.last_at(&id, 100), Some((59, -1.0)));
+        crate::assert_close!(
+            db.avg_over(&id, 0, 9).unwrap(),
+            4.5,
+            atol = 1e-12
+        );
+        // Windows entirely inside a gap are empty.
+        assert!(db.avg_over(&id, 20, 40).is_none());
+        assert_eq!(db.iter_over(&id, 20, 40).count(), 0);
+        // Fold reconstructs gap-straddling timestamps correctly.
+        let times: Vec<Timestamp> = db.fold_over(&id, 8, 51, Vec::new(), |mut acc, t, _| {
+            acc.push(t);
+            acc
+        });
+        assert_eq!(times, vec![8, 9, 50, 51]);
+    }
+
+    #[test]
+    fn handle_queries_agree_with_id_queries() {
+        let db = gappy_db();
+        let id = SeriesId::global("x");
+        let h = db.lookup(&id).unwrap();
+        assert_eq!(db.avg_over_h(h, 0, 60), db.avg_over(&id, 0, 60));
+        assert_eq!(db.last_at_h(h, 55), db.last_at(&id, 55));
+        let a: Vec<_> = db.iter_over_h(h, 5, 52).collect();
+        let b: Vec<_> = db.iter_over(&id, 5, 52).collect();
+        assert_eq!(a, b);
+        let sum_h = db.fold_over_h(h, 0, 60, 0.0, |a, _, v| a + v);
+        let sum = db.fold_over(&id, 0, 60, 0.0, |a, _, v| a + v);
+        assert_eq!(sum_h.to_bits(), sum.to_bits());
+    }
+
+    #[test]
+    fn columnar_storage_stays_near_8_bytes_per_sample() {
+        let db = sample_db();
+        // 300 samples in 3 series, one run each: 8 B/sample + 16 B/run.
+        assert_eq!(db.samples_total(), 300);
+        assert_eq!(db.sample_bytes(), 300 * 8 + 3 * 16);
+        // A gap adds one run marker, not a per-sample timestamp.
+        let gappy = gappy_db();
+        assert_eq!(gappy.sample_bytes(), 21 * 8 + 3 * 16);
     }
 }

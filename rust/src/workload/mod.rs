@@ -23,6 +23,7 @@ mod shapes;
 mod shift;
 mod sine;
 mod traffic;
+mod week;
 
 pub use ctr::CtrWorkload;
 pub use diurnal::DiurnalDriftWorkload;
@@ -32,6 +33,7 @@ pub use shapes::{ConstantWorkload, RampWorkload, ReplayWorkload, StepWorkload};
 pub use shift::{BottleneckShiftWorkload, SkewAmplifyWorkload};
 pub use sine::SineWorkload;
 pub use traffic::TrafficWorkload;
+pub use week::DiurnalWeekWorkload;
 
 use crate::clock::Timestamp;
 use crate::stats::Rng;
@@ -91,6 +93,10 @@ pub enum ShapeKind {
     FlashCrowd,
     /// Day/night cycle with a linear growth drift (non-stationary mean).
     DiurnalDrift,
+    /// Seven day/night cycles with a weekday/weekend rhythm and a linear
+    /// growth drift — the week-scale horizon (staged engine; real days at
+    /// `--duration 604800`).
+    DiurnalWeek,
     /// Upstream outage followed by a volume-conserving backfill surge.
     OutageBackfill,
     /// Gentle swell whose scenario drifts one operator's selectivity so
@@ -103,13 +109,14 @@ pub enum ShapeKind {
 
 impl ShapeKind {
     /// All shapes, in registry order.
-    pub fn all() -> [ShapeKind; 8] {
+    pub fn all() -> [ShapeKind; 9] {
         [
             ShapeKind::Sine,
             ShapeKind::Ctr,
             ShapeKind::Traffic,
             ShapeKind::FlashCrowd,
             ShapeKind::DiurnalDrift,
+            ShapeKind::DiurnalWeek,
             ShapeKind::OutageBackfill,
             ShapeKind::BottleneckShift,
             ShapeKind::SkewAmplify,
@@ -124,6 +131,7 @@ impl ShapeKind {
             ShapeKind::Traffic => "traffic",
             ShapeKind::FlashCrowd => "flash-crowd",
             ShapeKind::DiurnalDrift => "diurnal-drift",
+            ShapeKind::DiurnalWeek => "diurnal-week",
             ShapeKind::OutageBackfill => "outage-backfill",
             ShapeKind::BottleneckShift => "bottleneck-shift",
             ShapeKind::SkewAmplify => "skew-amplify",
@@ -137,8 +145,8 @@ impl ShapeKind {
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown workload shape {s:?} (sine|ctr|traffic|\
-                     flash-crowd|diurnal-drift|outage-backfill|\
-                     bottleneck-shift|skew-amplify)"
+                     flash-crowd|diurnal-drift|diurnal-week|\
+                     outage-backfill|bottleneck-shift|skew-amplify)"
                 )
             })
     }
@@ -152,6 +160,7 @@ impl ShapeKind {
             ShapeKind::Traffic => Box::new(TrafficWorkload::new(peak, duration, seed)),
             ShapeKind::FlashCrowd => Box::new(FlashCrowdWorkload::new(peak, duration, seed)),
             ShapeKind::DiurnalDrift => Box::new(DiurnalDriftWorkload::new(peak, duration, seed)),
+            ShapeKind::DiurnalWeek => Box::new(DiurnalWeekWorkload::new(peak, duration, seed)),
             ShapeKind::OutageBackfill => {
                 Box::new(OutageBackfillWorkload::new(peak, duration, seed))
             }

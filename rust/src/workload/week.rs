@@ -1,0 +1,154 @@
+//! Week-scale diurnal workload — seven day/night cycles with a
+//! weekday/weekend rhythm and a linear week-over-week growth drift.
+//!
+//! This is the long-horizon trace behind the `diurnal-week` scenarios: at
+//! `--duration 604800` each cycle is a real day; shorter durations compress
+//! the same seven cycles (so CI can smoke the cell in minutes). A week of
+//! 1 Hz metrics is exactly the workload the columnar TSDB and bucket-ring
+//! queues exist for — ~120 series × 604 800 ticks stays tractable at
+//! 8 bytes/sample where the pair layout doubles it.
+//!
+//! Deterministic per seed: trough level, weekend damping, drift strength
+//! and the noise walk are drawn once at construction. The global maximum —
+//! the last weekday's (day 5, "Friday") midday peak — is normalized to
+//! `peak`.
+
+use super::{SmoothNoise, Workload};
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Seven diurnal cycles × weekday/weekend rhythm × linear growth + noise.
+#[derive(Debug, Clone)]
+pub struct DiurnalWeekWorkload {
+    peak: f64,
+    duration: Timestamp,
+    /// Overnight trough as a fraction of the daily peak.
+    trough_frac: f64,
+    /// Weekend (days 5 and 6) level as a fraction of a weekday's.
+    weekend_frac: f64,
+    /// Total growth over the week (0.25 = +25 % by the end).
+    drift_frac: f64,
+    noise: SmoothNoise,
+    /// Normalizer putting the Friday-midday maximum at `peak`.
+    norm: f64,
+}
+
+const DAYS: f64 = 7.0;
+
+impl DiurnalWeekWorkload {
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7EE6_0D21);
+        let trough_frac = rng.range(0.12, 0.22);
+        let weekend_frac = rng.range(0.50, 0.65);
+        let drift_frac = rng.range(0.15, 0.35);
+        let noise = SmoothNoise::generate(&mut rng, duration, 60, 0.9, 0.1, 0.03);
+        // Friday midday sits at x = 4.5/7 of the run; with weekend damping
+        // ≤ 0.65 the weekend peaks never exceed it, so this is the global
+        // (noise-free) maximum.
+        let norm = 1.0 + drift_frac * (4.5 / DAYS);
+        Self {
+            peak,
+            duration,
+            trough_frac,
+            weekend_frac,
+            drift_frac,
+            noise,
+            norm,
+        }
+    }
+}
+
+impl Workload for DiurnalWeekWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let x = (t as f64 / self.duration.max(1) as f64).clamp(0.0, 1.0);
+        let day_pos = (x * DAYS).min(DAYS - 1e-9);
+        let day = day_pos as usize; // 0..=6; 5 and 6 are the weekend
+        let within = day_pos - day as f64;
+        // Day curve in [0, 1]: trough at day boundaries, peak mid-day.
+        let curve = (1.0 - (2.0 * std::f64::consts::PI * within).cos()) / 2.0;
+        let level = self.trough_frac + (1.0 - self.trough_frac) * curve;
+        let weekend = if day >= 5 { self.weekend_frac } else { 1.0 };
+        let growth = (1.0 + self.drift_frac * x) / self.norm;
+        (self.peak * level * weekend * growth * (1.0 + self.noise.at(t))).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WEEK: Timestamp = 604_800;
+
+    /// Average rate over ±5 min around the middle of day `d` (0-based).
+    fn midday_avg(w: &DiurnalWeekWorkload, d: u64) -> f64 {
+        let center = (d * 2 + 1) * WEEK / 14;
+        (center - 300..center + 300).map(|t| w.rate(t)).sum::<f64>() / 600.0
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = DiurnalWeekWorkload::new(50_000.0, WEEK, 13);
+        let b = DiurnalWeekWorkload::new(50_000.0, WEEK, 13);
+        for t in (0..WEEK).step_by(7_919) {
+            assert_eq!(a.rate(t), b.rate(t));
+        }
+        let c = DiurnalWeekWorkload::new(50_000.0, WEEK, 14);
+        assert_ne!(a.rate(100_000), c.rate(100_000));
+    }
+
+    #[test]
+    fn weekend_days_dip_below_weekdays() {
+        let w = DiurnalWeekWorkload::new(50_000.0, WEEK, 3);
+        let friday = midday_avg(&w, 4);
+        let saturday = midday_avg(&w, 5);
+        let sunday = midday_avg(&w, 6);
+        assert!(saturday < 0.8 * friday, "sat {saturday} vs fri {friday}");
+        assert!(sunday < 0.8 * friday, "sun {sunday} vs fri {friday}");
+    }
+
+    #[test]
+    fn growth_lifts_late_weekdays_over_early_ones() {
+        let w = DiurnalWeekWorkload::new(50_000.0, WEEK, 5);
+        let monday = midday_avg(&w, 0);
+        let friday = midday_avg(&w, 4);
+        assert!(friday > 1.05 * monday, "mon {monday}, fri {friday}");
+    }
+
+    #[test]
+    fn peak_normalized_to_target() {
+        for seed in [1u64, 9, 21] {
+            let w = DiurnalWeekWorkload::new(50_000.0, WEEK, seed);
+            let peak = w.peak();
+            assert!(peak > 0.9 * 50_000.0, "seed {seed}: peak {peak}");
+            assert!(peak < 1.2 * 50_000.0, "seed {seed}: peak {peak}");
+        }
+    }
+
+    #[test]
+    fn compressed_horizons_keep_the_seven_cycles() {
+        // Truncated CI horizon: the same seven cycles, compressed.
+        let w = DiurnalWeekWorkload::new(30_000.0, 900, 1);
+        // Day boundaries (~multiples of 900/7 s) are troughs; midday of
+        // day 2 (~321 s) is a peak.
+        let trough = w.rate(129); // ≈ boundary day0/day1
+        let peak = w.rate(321);
+        assert!(trough < 0.55 * peak, "trough {trough} vs peak {peak}");
+        for t in 0..900 {
+            let r = w.rate(t);
+            assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+
+    #[test]
+    fn rates_finite_and_nonnegative_over_a_full_week() {
+        let w = DiurnalWeekWorkload::new(50_000.0, WEEK, 21);
+        for t in (0..WEEK).step_by(601) {
+            let r = w.rate(t);
+            assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+}

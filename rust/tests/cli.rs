@@ -112,6 +112,8 @@ fn sweep_list_prints_scenario_matrix() {
         "flink-wordcount-sine-failstorm3",
         "flink-wordcount-bottleneck-shift",
         "kstreams-ysb-skew-amplify",
+        "flink-wordcount-diurnal-week",
+        "kstreams-ysb-diurnal-week",
     ] {
         assert!(text.contains(name), "missing {name} in:\n{text}");
     }

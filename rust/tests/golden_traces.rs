@@ -15,6 +15,24 @@
 //! first release, so later changes to stage scheduling, backpressure
 //! bounds, or per-stage planning must re-bless *those* deliberately.
 //!
+//! ## Staged goldens re-blessed for the bucket-ring queues (PR 4)
+//!
+//! The staged engine's inter-stage queues defaulted from the chunk list to
+//! the bucket ring (`dsp::QueuePolicy::BucketRing`). The ring coalesces
+//! *all* equal-tick mass into one per-tick bucket, where the chunk list
+//! sorted the source-replica merge and coalesced in sorted order — float
+//! additions regroup, a sub-ulp effect absorbed by the 1/1000 trace
+//! quantization exactly as PR 2's same-timestamp chunk coalescing was
+//! (`tests/invariants.rs::bucket_ring_agrees_with_chunked_reference_on_all_staged_scenarios`
+//! pins the ring against the retained chunk list at that tolerance, with
+//! restart timelines matching exactly). Values straddling a 1/1000
+//! rounding boundary can still flip a digest bit, so the `staged-*`
+//! goldens are re-blessed with this PR; the fused goldens are untouched
+//! (the fused serve path does not use inter-stage queues, and the columnar
+//! TSDB stores bit-identical samples). Digest files are not committed in
+//! this repo — fresh checkouts self-bless — so the re-bless is this note
+//! plus the property pin.
+//!
 //! ## How the pinning works
 //!
 //! Each test runs its canonical `(scenario, approach, seed)` unit and

@@ -12,7 +12,9 @@
 //!    latency weight equals the integral of recorded throughput.
 //! 5. Queue mass equals backlog per partition (`check_invariants`).
 
-use daedalus::dsp::{EngineProfile, MergePolicy, SimConfig, Simulation, StageModel};
+use daedalus::dsp::{
+    EngineProfile, MergePolicy, QueuePolicy, SimConfig, Simulation, StageModel,
+};
 use daedalus::experiments::ScenarioRegistry;
 use daedalus::jobs::{JobProfile, Topology};
 use daedalus::metrics::SeriesId;
@@ -280,6 +282,105 @@ fn operator_conservation() {
             );
             let last = sim.stage_flow(sim.n_stages() - 1);
             assert!(last.consumed > 0.0);
+        }
+    }
+}
+
+/// The bucket-ring inter-stage queues must agree with the retained
+/// chunk-list reference (`QueuePolicy::Chunked` — PR-3's exact
+/// representation, bit for bit) on every staged scenario in the registry,
+/// through per-stage rescale storms, a failure injection, and the
+/// checkpoint/replay machinery they trigger.
+///
+/// The pin is quantization-identity, not bit-identity: the ring coalesces
+/// *all* equal-tick mass into one bucket while the chunk list sorts the
+/// source-replica merge and coalesces in sorted order, so float additions
+/// regroup — the same sub-ulp effect PR 2 documented for same-timestamp
+/// chunk coalescing, absorbed by the 1/1000 golden-trace quantization.
+/// Restart timelines (times, totals, downtime draws) must still match
+/// *exactly*: RNG draw order is content-independent, so any divergence
+/// there would mean the policies disagree structurally, not numerically.
+#[test]
+fn bucket_ring_agrees_with_chunked_reference_on_all_staged_scenarios() {
+    let duration = 1_200u64;
+    let reg = ScenarioRegistry::builtin(duration, &[1]);
+    for name in [
+        "flink-wordcount-bottleneck-shift",
+        "flink-ysb-bottleneck-shift",
+        "flink-wordcount-skew-amplify",
+        "kstreams-ysb-skew-amplify",
+        "flink-wordcount-diurnal-week",
+        "kstreams-ysb-diurnal-week",
+    ] {
+        let sc = reg.get(name).expect("staged scenario registered");
+        assert_eq!(sc.stage_model, StageModel::Staged, "{name}");
+        for &seed in &sc.seeds {
+            let build = || {
+                Simulation::new(SimConfig {
+                    partitions: sc.partitions,
+                    initial_replicas: sc.initial_replicas,
+                    max_replicas: sc.max_replicas,
+                    seed,
+                    rate_noise: 0.02,
+                    failures: vec![duration / 2],
+                    stage_model: sc.stage_model,
+                    selectivity_drift: sc.selectivity_drift,
+                    zipf_override: sc.zipf_override,
+                    ..SimConfig::base(sc.engine.profile(), sc.job.profile(), sc.workload(seed))
+                })
+            };
+            let mut ring = build();
+            let mut chunked = build();
+            assert_eq!(ring.queue_policy(), QueuePolicy::BucketRing);
+            chunked.set_queue_policy(QueuePolicy::Chunked);
+            // Identical per-stage rescale storms driven by twin PRNGs.
+            let mut rng_a = Rng::new(seed ^ 0xB0C4E7);
+            let mut rng_b = Rng::new(seed ^ 0xB0C4E7);
+            let mut storm = |rng: &mut Rng, sim: &mut Simulation| {
+                if rng.below(130) == 0 {
+                    let v: Vec<usize> = (0..sim.n_stages())
+                        .map(|_| 1 + rng.below(8) as usize)
+                        .collect();
+                    sim.request_rescale_stages(&v);
+                }
+            };
+            for t in 0..duration {
+                ring.step(t);
+                chunked.step(t);
+                storm(&mut rng_a, &mut ring);
+                storm(&mut rng_b, &mut chunked);
+            }
+            let tag = format!("{name} seed {seed}");
+            assert_eq!(ring.rescale_log, chunked.rescale_log, "{tag}: restart timelines diverged");
+            let close = |a: f64, b: f64, what: &str| {
+                let tol = (1e-6 * a.abs().max(1.0)).max(1.0);
+                assert!(
+                    (a - b).abs() < tol,
+                    "{tag}: {what} diverged beyond regrouping tolerance: ring {a} vs chunked {b}"
+                );
+            };
+            close(ring.total_produced(), chunked.total_produced(), "produced");
+            close(ring.total_consumed(), chunked.total_consumed(), "consumed");
+            close(ring.total_backlog(), chunked.total_backlog(), "backlog");
+            close(
+                ring.latencies().total_weight(),
+                chunked.latencies().total_weight(),
+                "latency weight",
+            );
+            for s in 0..ring.n_stages() {
+                let a = ring.stage_flow(s);
+                let b = chunked.stage_flow(s);
+                close(a.consumed, b.consumed, &format!("stage {s} consumed"));
+                close(a.emitted, b.emitted, &format!("stage {s} emitted"));
+                close(a.queue_backlog, b.queue_backlog, &format!("stage {s} queue"));
+            }
+            // Per-stage flow conservation holds under both policies (the
+            // job-level `assert_conservation` does not apply: staged
+            // `total_backlog` includes in-flight inter-stage mass).
+            ring.check_invariants();
+            chunked.check_invariants();
+            // Both pipelines actually processed traffic end to end.
+            assert!(ring.latencies().total_weight() > 0.0, "{tag}: sink saw no tuples");
         }
     }
 }

@@ -1,6 +1,6 @@
 //! End-to-end perf smoke: the memory bounds of the tick-loop hot paths.
 //!
-//! Two unbounded-growth regressions are pinned here so they cannot
+//! Four unbounded-growth regressions are pinned here so they cannot
 //! silently return:
 //!
 //! * **Partition queues** — same-timestamp chunk coalescing keeps every
@@ -10,8 +10,15 @@
 //!   histogram with O(`Ecdf::MAX_BINS`) storage no matter how many fluid
 //!   chunks a multi-hour run pushes (the old `Vec<(f64, f64)>` kept every
 //!   sample).
+//! * **Inter-stage bucket rings** — a stage queue spans one f64 bucket per
+//!   backlogged arrival tick, so its occupancy is O(queued backlog age),
+//!   bounded by the backpressure window plus restart gaps — not O(run
+//!   length).
+//! * **Columnar TSDB bytes** — a per-second series costs 8 bytes/sample
+//!   plus a 16-byte run marker per serving gap, so a simulated hour stays
+//!   near 8 bytes/tick/series (the retained pair layout costs a flat 16).
 
-use daedalus::dsp::{EngineProfile, SimConfig, Simulation};
+use daedalus::dsp::{EngineProfile, SimConfig, Simulation, StageModel};
 use daedalus::jobs::JobProfile;
 use daedalus::stats::Ecdf;
 use daedalus::workload::ConstantWorkload;
@@ -64,4 +71,68 @@ fn one_hour_sim_memory_stays_bounded() {
         lat.bin_count()
     );
     assert!(lat.total_weight() > 0.0);
+
+    // Columnar TSDB bound (fused): the hour's recordings stay near
+    // 8 bytes/sample — run markers (one per serving gap per series) are
+    // noise, not a second timestamp column.
+    let db = sim.tsdb();
+    let samples = db.samples_total();
+    assert!(samples > 50_000, "expected an hour of metrics, got {samples}");
+    assert!(
+        db.sample_bytes() < samples * 9,
+        "columnar TSDB spent {} bytes on {samples} samples (> 9 B/sample)",
+        db.sample_bytes()
+    );
+}
+
+#[test]
+fn one_hour_staged_sim_ring_and_tsdb_stay_bounded() {
+    // Staged deployment with a deliberately choked middle stage: the
+    // inter-stage queues run at their backpressure bound the whole hour,
+    // plus two failures and a mid-run per-stage rescale for replay storms.
+    let cfg = SimConfig {
+        partitions: 24,
+        initial_replicas: 4,
+        max_replicas: 12,
+        seed: 23,
+        rate_noise: 0.02,
+        failures: vec![900, 2_200],
+        stage_model: StageModel::Staged,
+        ..SimConfig::base(
+            EngineProfile::flink(),
+            JobProfile::wordcount(),
+            Box::new(ConstantWorkload {
+                rate: 18_000.0,
+                duration: 3_600,
+            }),
+        )
+    };
+    let mut sim = Simulation::new(cfg);
+    sim.request_rescale_stages(&[4, 4, 1, 4]);
+    let mut max_ring = 0;
+    for t in 0..3_600 {
+        sim.step(t);
+        if t == 2_000 {
+            sim.request_rescale_stages(&[4, 4, 2, 4]);
+        }
+        max_ring = max_ring.max(sim.max_stage_queue_len());
+    }
+    sim.check_invariants();
+
+    // Ring-span bound: one bucket per backlogged tick — the backpressure
+    // window (5 s of stage capacity) plus restart gaps is minutes of age,
+    // not the hour of run time.
+    assert!(max_ring < 512, "inter-stage ring grew to {max_ring} buckets");
+
+    // Columnar TSDB bound: the staged engine records ~70 series every
+    // serving tick for an hour; storage must stay near 8 bytes/sample
+    // even with the restart-gap run splits.
+    let db = sim.tsdb();
+    let samples = db.samples_total();
+    assert!(samples > 150_000, "expected an hour of staged metrics, got {samples}");
+    assert!(
+        db.sample_bytes() < samples * 9,
+        "columnar TSDB spent {} bytes on {samples} samples (> 9 B/sample)",
+        db.sample_bytes()
+    );
 }

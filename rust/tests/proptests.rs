@@ -28,14 +28,12 @@ fn caps(per_worker: f64, parallelism: usize) -> CapacityEstimates {
 fn monitor(avg: f64, lag: f64, parallelism: usize) -> MonitorData {
     MonitorData {
         now: 5_000,
-        workers: vec![],
-        stages: vec![],
-        stage_parallelism: vec![],
         history: vec![avg; 1800],
         workload_avg: avg,
         workload_max: avg,
         consumer_lag: lag,
         parallelism,
+        ..MonitorData::empty()
     }
 }
 
