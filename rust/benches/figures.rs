@@ -1,4 +1,5 @@
-//! End-to-end benches: one per paper table/figure (DESIGN.md §4).
+//! End-to-end benches: one per paper table/figure (`ARCHITECTURE.md`
+//! § Evaluation stack).
 //!
 //! Each bench regenerates the corresponding figure at a reduced duration
 //! (the full 6-hour × 5-seed protocol is `daedalus figure <id>`), so this

@@ -53,6 +53,7 @@ pub struct Analyzer {
 }
 
 impl Analyzer {
+    /// Analyzer for artifacts of the given shape.
     pub fn new(meta: ArtifactMeta) -> Self {
         Self { meta }
     }

@@ -48,6 +48,7 @@ pub struct RecoveryMonitor {
 }
 
 impl RecoveryMonitor {
+    /// Begin monitoring the recovery following a rescale issued at `now`.
     pub fn start(now: Timestamp, scale_out: bool) -> Self {
         Self {
             started: now,

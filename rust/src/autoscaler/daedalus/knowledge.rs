@@ -14,6 +14,7 @@ use crate::stats::Welford;
 /// A forecast issued at some loop iteration (for later WAPE evaluation).
 #[derive(Debug, Clone)]
 pub struct IssuedForecast {
+    /// Loop-iteration time the forecast was issued at.
     pub issued_at: Timestamp,
     /// Predicted workload for seconds `issued_at+1 ..= issued_at+horizon`.
     pub values: Vec<f64>,
@@ -24,9 +25,13 @@ pub struct IssuedForecast {
 /// An observed recovery after a scaling action (§3.5).
 #[derive(Debug, Clone, Copy)]
 pub struct ObservedRecovery {
+    /// When the rescale was executed.
     pub rescale_at: Timestamp,
+    /// Observed restart downtime (s).
     pub downtime_secs: f64,
+    /// Seconds from restart until lag returned to normal.
     pub recovery_secs: f64,
+    /// Whether the action grew the deployment.
     pub scale_out: bool,
 }
 
@@ -57,9 +62,11 @@ pub struct Knowledge {
     pub anomaly: Welford,
     /// Adaptive anticipated downtimes (§3.4), refined from observations.
     pub downtime_out: f64,
+    /// Anticipated scale-in downtime (s), refined from observations.
     pub downtime_in: f64,
     /// Time of the last executed scaling action.
     pub last_rescale: Option<Timestamp>,
+    /// Number of executed scaling actions.
     pub rescale_count: usize,
     /// Completed recovery observations.
     pub recoveries: Vec<ObservedRecovery>,
@@ -73,6 +80,7 @@ pub struct Knowledge {
 }
 
 impl Knowledge {
+    /// Fresh knowledge base with the configured initial downtimes.
     pub fn new(meta: &ArtifactMeta, downtime_out: f64, downtime_in: f64) -> Self {
         Self {
             capacity_state: CapacityState::zeros(meta.max_workers),

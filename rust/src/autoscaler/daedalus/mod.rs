@@ -66,6 +66,7 @@ pub struct DaedalusConfig {
     pub cpu_target: f64,
     /// Initial anticipated downtime for scale-out / scale-in (§3.4).
     pub initial_downtime_out: f64,
+    /// Initial anticipated downtime for scale-in (§3.4).
     pub initial_downtime_in: f64,
     /// CPU moving-average window for monitor (seconds).
     pub cpu_window: u64,
@@ -107,6 +108,7 @@ impl Default for DaedalusConfig {
 
 /// The self-adaptive manager.
 pub struct Daedalus {
+    /// Loop configuration (public for the ablation variants).
     pub cfg: DaedalusConfig,
     backend: ComputeBackend,
     knowledge: Knowledge,
@@ -119,6 +121,7 @@ pub struct Daedalus {
 }
 
 impl Daedalus {
+    /// Manager with fresh knowledge on the given compute backend.
     pub fn new(cfg: DaedalusConfig, backend: ComputeBackend) -> Self {
         let meta = backend.meta().clone();
         Self {

@@ -11,6 +11,7 @@ use super::DaedalusConfig;
 /// Everything the analyze/plan phases consume this iteration.
 #[derive(Debug, Clone)]
 pub struct MonitorData {
+    /// Collection time.
     pub now: Timestamp,
     /// Per-worker CPU/throughput snapshots (1-min moving averages).
     pub workers: Vec<WorkerSnapshot>,
@@ -23,9 +24,11 @@ pub struct MonitorData {
     pub history: Vec<f64>,
     /// Workload observed since the last loop iteration: (avg, max).
     pub workload_avg: f64,
+    /// Max workload observed since the last loop iteration.
     pub workload_max: f64,
     /// Total consumer lag (tuples).
     pub consumer_lag: f64,
+    /// Current job parallelism.
     pub parallelism: usize,
     /// Incremental collection state riding in the reusable buffer: the
     /// per-stage rolling windows, the per-worker handle table, and the
@@ -33,6 +36,7 @@ pub struct MonitorData {
     /// per-stage view from scratch (pre-resolved handles, each TSDB sample
     /// read once per run).
     pub stage_monitor: StageMonitor,
+    /// Cached per-worker handle table (incremental collection state).
     pub worker_monitor: WorkerMonitor,
     /// Cached `workload_rate` handle for the forecaster-input rebuild
     /// (public so sibling-module test literals can spread `..empty()`).
@@ -58,6 +62,7 @@ impl MonitorData {
         }
     }
 
+    /// Collect one iteration's monitor snapshot from the view.
     pub fn collect(view: &SimView<'_>, cfg: &DaedalusConfig, meta: &ArtifactMeta) -> Self {
         let mut out = Self::empty();
         Self::collect_into(view, cfg, meta, &mut out);

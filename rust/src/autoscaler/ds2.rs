@@ -40,11 +40,14 @@ pub struct Ds2Config {
     pub headroom: f64,
     /// Cooldown after a rescale (convergence wait).
     pub cooldown: u64,
+    /// Lower parallelism bound.
     pub min_replicas: usize,
+    /// Upper parallelism bound (cluster size).
     pub max_replicas: usize,
 }
 
 impl Ds2Config {
+    /// DS2 defaults at a given cluster size.
     pub fn defaults(max_replicas: usize) -> Self {
         Self {
             interval: 60,
@@ -93,6 +96,7 @@ pub struct Ds2 {
 }
 
 impl Ds2 {
+    /// Per-operator DS2 (the true formulation).
     pub fn new(cfg: Ds2Config) -> Self {
         Self::with_mode(cfg, Ds2Mode::PerOperator)
     }
@@ -102,6 +106,7 @@ impl Ds2 {
         Self::with_mode(cfg, Ds2Mode::JobLevel)
     }
 
+    /// Controller with an explicit reconfiguration granularity.
     pub fn with_mode(cfg: Ds2Config, mode: Ds2Mode) -> Self {
         Self {
             cfg,

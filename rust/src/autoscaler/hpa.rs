@@ -41,7 +41,9 @@ pub struct HpaConfig {
     /// 100 %-CPU catch-up phase after every restart triggers a scale-up
     /// cascade.
     pub cpu_init_period: u64,
+    /// `--min-replicas`.
     pub min_replicas: usize,
+    /// `--max-replicas` (cluster size).
     pub max_replicas: usize,
 }
 
@@ -78,6 +80,7 @@ pub struct Hpa {
 }
 
 impl Hpa {
+    /// Controller with the given configuration.
     pub fn new(cfg: HpaConfig) -> Self {
         Self {
             cfg,

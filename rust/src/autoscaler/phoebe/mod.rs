@@ -57,7 +57,9 @@ impl Default for PhoebeConfig {
 
 /// The Phoebe-like manager.
 pub struct Phoebe {
+    /// Loop configuration.
     pub cfg: PhoebeConfig,
+    /// Profiled QoS models the planner interpolates over.
     pub models: QosModels,
     backend: ComputeBackend,
     next_loop: u64,
@@ -70,6 +72,7 @@ pub struct Phoebe {
 }
 
 impl Phoebe {
+    /// Manager from profiled models on the given compute backend.
     pub fn new(cfg: PhoebeConfig, models: QosModels, backend: ComputeBackend) -> Self {
         Self {
             next_loop: cfg.warmup,

@@ -4,9 +4,13 @@
 /// Measurements for one profiled scale-out.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ScaleoutProfile {
+    /// Profiled scale-out (worker count).
     pub n: usize,
+    /// Sustainable throughput ceiling (tuples/s).
     pub max_throughput: f64,
+    /// Steady-state processing latency (ms).
     pub latency_ms: f64,
+    /// Measured restart-recovery time (s).
     pub recovery_secs: f64,
 }
 
@@ -17,12 +21,14 @@ pub struct QosModels {
 }
 
 impl QosModels {
+    /// Build models from profiling measurements (sorted by scale-out).
     pub fn from_profiles(mut profiles: Vec<ScaleoutProfile>) -> Self {
         assert!(!profiles.is_empty(), "need at least one profiled scale-out");
         profiles.sort_by_key(|p| p.n);
         Self { profiles }
     }
 
+    /// The profiled scale-outs, ascending.
     pub fn profiles(&self) -> &[ScaleoutProfile] {
         &self.profiles
     }

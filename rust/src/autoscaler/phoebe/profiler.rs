@@ -18,6 +18,7 @@ use super::models::{QosModels, ScaleoutProfile};
 /// Result of profiling one job on one engine.
 #[derive(Debug, Clone)]
 pub struct ProfilingReport {
+    /// QoS models fitted to the profiling runs.
     pub models: QosModels,
     /// Total worker-seconds consumed by all profiling runs.
     pub worker_seconds: f64,

@@ -9,10 +9,12 @@ use crate::dsp::engine::SimView;
 /// Fixed-parallelism "autoscaler".
 #[derive(Debug, Clone)]
 pub struct Static {
+    /// The fixed parallelism.
     pub replicas: usize,
 }
 
 impl Static {
+    /// Fixed deployment of `replicas` workers.
     pub fn new(replicas: usize) -> Self {
         Self { replicas }
     }

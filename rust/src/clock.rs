@@ -24,6 +24,7 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// Fresh clock at t = 0, shared behind an `Arc`.
     pub fn new() -> Arc<Self> {
         Arc::new(Self::default())
     }
@@ -48,6 +49,7 @@ pub struct WallClock {
 }
 
 impl WallClock {
+    /// Clock anchored at the current instant.
     pub fn new() -> Self {
         Self {
             start: std::time::Instant::now(),

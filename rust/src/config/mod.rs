@@ -17,11 +17,14 @@ use crate::Result;
 /// Which engine profile to simulate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
+    /// Apache Flink.
     Flink,
+    /// Kafka Streams.
     KStreams,
 }
 
 impl EngineKind {
+    /// Parse an engine name (`flink` | `kstreams`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "flink" => Ok(Self::Flink),
@@ -30,6 +33,7 @@ impl EngineKind {
         }
     }
 
+    /// The engine's behavior constants.
     pub fn profile(self) -> EngineProfile {
         match self {
             Self::Flink => EngineProfile::flink(),
@@ -49,12 +53,16 @@ impl EngineKind {
 /// Which benchmark job to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobKind {
+    /// WordCount (§4.1.1).
     WordCount,
+    /// Yahoo Streaming Benchmark (§4.1.2).
     Ysb,
+    /// Traffic monitoring (§4.1.3).
     Traffic,
 }
 
 impl JobKind {
+    /// Parse a job name (`wordcount` | `ysb` | `traffic`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "wordcount" => Ok(Self::WordCount),
@@ -64,6 +72,7 @@ impl JobKind {
         }
     }
 
+    /// The job's cost/latency profile.
     pub fn profile(self) -> JobProfile {
         match self {
             Self::WordCount => JobProfile::wordcount(),
@@ -103,13 +112,21 @@ impl JobKind {
 /// A fully-specified experiment.
 #[derive(Debug, Clone)]
 pub struct ExperimentSpec {
+    /// Experiment name.
     pub name: String,
+    /// Engine profile to simulate.
     pub engine: EngineKind,
+    /// Benchmark job.
     pub job: JobKind,
+    /// Simulated run length (s).
     pub duration: Timestamp,
+    /// Repetition seeds.
     pub seeds: Vec<u64>,
+    /// Upper parallelism bound.
     pub max_replicas: usize,
+    /// Starting parallelism.
     pub initial_replicas: usize,
+    /// Kafka partition count.
     pub partitions: usize,
     /// Peak workload; defaults to the job's reference peak.
     pub peak: Option<f64>,
@@ -122,6 +139,7 @@ pub struct ExperimentSpec {
     pub workload_shape: Option<ShapeKind>,
     /// Approach descriptors: "daedalus", "hpa-80", "static-12", "phoebe".
     pub approaches: Vec<String>,
+    /// Recovery-time target (s) for the model-based autoscalers.
     pub recovery_target: f64,
 }
 

@@ -19,6 +19,7 @@ pub enum Phase {
 /// Replica-set controller state.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// Current lifecycle phase.
     pub phase: Phase,
     current: usize,
     max_replicas: usize,
@@ -27,6 +28,7 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Running cluster at `initial` replicas.
     pub fn new(initial: usize, max_replicas: usize) -> Self {
         assert!(initial >= 1 && initial <= max_replicas);
         Self {
@@ -65,6 +67,7 @@ impl Cluster {
         matches!(self.phase, Phase::Running)
     }
 
+    /// Upper replica bound.
     pub fn max_replicas(&self) -> usize {
         self.max_replicas
     }

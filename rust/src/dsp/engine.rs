@@ -107,14 +107,19 @@ const BACKPRESSURE_SECS: f64 = 5.0;
 
 /// Static configuration of one simulated deployment.
 pub struct SimConfig {
+    /// Engine behavior constants.
     pub profile: EngineProfile,
+    /// Job cost profile.
     pub job: JobProfile,
+    /// Source workload trace.
     pub workload: Box<dyn Workload>,
     /// Kafka partitions; the paper provisions as many as the max scale-out.
     pub partitions: usize,
+    /// Starting parallelism.
     pub initial_replicas: usize,
     /// Maximum replicas (per stage under [`StageModel::Staged`]).
     pub max_replicas: usize,
+    /// PRNG seed (the run's entire stochasticity).
     pub seed: u64,
     /// Multiplicative per-tick noise on the produced rate (σ).
     pub rate_noise: f64,
@@ -168,17 +173,20 @@ impl SimConfig {
         }
     }
 
+    /// Builder: set the PRNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Builder: set initial and maximum parallelism.
     pub fn with_replicas(mut self, initial: usize, max: usize) -> Self {
         self.initial_replicas = initial;
         self.max_replicas = max;
         self
     }
 
+    /// Builder: set the stage model.
     pub fn with_stage_model(mut self, model: StageModel) -> Self {
         self.stage_model = model;
         self
@@ -291,20 +299,28 @@ fn drain_partitions_fifo(
 /// A rescale/failure event for the experiment log.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RescaleEvent {
+    /// Event time.
     pub t: Timestamp,
+    /// Total workers before the restart.
     pub from: usize,
+    /// Total workers after the restart.
     pub to: usize,
+    /// Restart downtime (s).
     pub downtime_secs: f64,
+    /// Whether a failure caused the restart.
     pub failure: bool,
 }
 
 /// Read-only view handed to autoscalers each tick.
 pub struct SimView<'a> {
+    /// Current tick.
     pub now: Timestamp,
+    /// The metric store.
     pub tsdb: &'a Tsdb,
     /// Job parallelism: the fused pool size, or the max stage parallelism
     /// under the staged model (Flink's notion of job parallelism).
     pub parallelism: usize,
+    /// Whether all pods are serving (no restart in flight).
     pub ready: bool,
     /// Maximum replicas (per stage under the staged model).
     pub max_replicas: usize,
@@ -349,13 +365,17 @@ pub struct StageFlow {
     /// Tuples waiting in the stage's input queue (0 for the source stage,
     /// whose backlog lives in the Kafka partitions).
     pub queue_backlog: f64,
+    /// Input tuples committed at the last checkpoint.
     pub committed_consumed: f64,
+    /// Output tuples committed at the last checkpoint.
     pub committed_emitted: f64,
 }
 
 /// One simulated DSP deployment (cluster + job + source).
 pub struct Simulation {
+    /// Engine behavior constants.
     pub profile: EngineProfile,
+    /// Job cost profile.
     pub job: JobProfile,
     workload: Box<dyn Workload>,
     partition_weights: Vec<f64>,
@@ -369,6 +389,7 @@ pub struct Simulation {
     last_checkpoint: Timestamp,
     worker_seconds: f64,
     latencies: Ecdf,
+    /// Every restart (rescale or failure), in time order.
     pub rescale_log: Vec<RescaleEvent>,
     failures: Vec<Timestamp>,
     rate_noise: f64,
@@ -466,6 +487,7 @@ impl Handles {
 }
 
 impl Simulation {
+    /// Build a deployment from its static configuration.
     pub fn new(cfg: SimConfig) -> Self {
         let mut job = cfg.job;
         if let Some(z) = cfg.zipf_override {
@@ -613,10 +635,12 @@ impl Simulation {
         self.cluster.parallelism()
     }
 
+    /// Whether all pods are serving (no restart in flight).
     pub fn ready(&self) -> bool {
         self.cluster.ready()
     }
 
+    /// Upper replica bound (per stage under the staged model).
     pub fn max_replicas(&self) -> usize {
         self.cluster.max_replicas()
     }

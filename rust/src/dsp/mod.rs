@@ -1,5 +1,6 @@
 //! Discrete-time DSP-cluster simulator — the substrate standing in for the
-//! paper's Flink / Kafka Streams on Kubernetes testbed (DESIGN.md §2).
+//! paper's Flink / Kafka Streams on Kubernetes testbed (`ARCHITECTURE.md`
+//! § Simulation substrate).
 //!
 //! The simulator reproduces, at 1-second resolution, exactly the observable
 //! behaviour the paper's autoscalers depend on (§3.1, Figs 2–6):

@@ -19,7 +19,9 @@ use std::collections::VecDeque;
 /// Fluid chunk: `amount` tuples that arrived at (fractional) time `t`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Chunk {
+    /// Arrival time (fractional seconds).
     pub t: f64,
+    /// Tuples in the chunk.
     pub amount: f64,
 }
 
@@ -30,12 +32,16 @@ pub struct Partition {
     queue: VecDeque<Chunk>,
     /// Consumed but not yet committed (checkpointed) chunks, oldest first.
     pending: VecDeque<Chunk>,
+    /// Total tuples produced into the partition.
     pub produced: f64,
+    /// Total tuples consumed (net of exactly-once replay).
     pub consumed: f64,
+    /// Total tuples committed at the last checkpoint.
     pub committed: f64,
 }
 
 impl Partition {
+    /// Empty partition.
     pub fn new() -> Self {
         Self::default()
     }

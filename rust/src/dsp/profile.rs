@@ -12,6 +12,7 @@
 /// Static characteristics of a DSP engine deployment.
 #[derive(Debug, Clone)]
 pub struct EngineProfile {
+    /// Engine name.
     pub name: &'static str,
     /// CPU utilization reading when a worker is fully saturated.
     pub cpu_at_saturation: f64,
@@ -26,7 +27,8 @@ pub struct EngineProfile {
     /// Checkpoint / commit interval (seconds); exactly-once replay re-reads
     /// everything after the last completed checkpoint.
     pub checkpoint_interval: u64,
-    /// Per-pod speed jitter (fraction; ±5 % in DESIGN.md §6).
+    /// Per-pod speed jitter (fraction; ±5 % by default — see
+    /// `ARCHITECTURE.md` § Simulation substrate).
     pub speed_jitter: f64,
     /// Multiplicative noise on CPU readings.
     pub cpu_noise: f64,

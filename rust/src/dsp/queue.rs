@@ -56,6 +56,7 @@ pub struct BucketRing {
 }
 
 impl BucketRing {
+    /// Empty ring (buckets allocated on the first push).
     pub fn new() -> Self {
         Self::default()
     }
@@ -189,6 +190,7 @@ impl BucketRing {
         self.span
     }
 
+    /// Drop all buffered mass.
     pub fn clear(&mut self) {
         self.span = 0;
     }
@@ -211,6 +213,7 @@ pub struct ChunkedQueue {
 }
 
 impl ChunkedQueue {
+    /// Empty queue.
     pub fn new() -> Self {
         Self::default()
     }
@@ -252,22 +255,27 @@ impl ChunkedQueue {
         drained
     }
 
+    /// Total buffered tuples.
     pub fn mass(&self) -> f64 {
         self.queue.iter().map(|c| c.amount).sum()
     }
 
+    /// Number of chunks.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether nothing is buffered.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// Drop all buffered chunks.
     pub fn clear(&mut self) {
         self.queue.clear();
     }
 
+    /// Snapshot copy from `src` (the checkpoint path).
     pub fn assign_from(&mut self, src: &ChunkedQueue) {
         self.queue.clear();
         self.queue.extend(src.queue.iter().copied());
@@ -277,11 +285,14 @@ impl ChunkedQueue {
 /// One stage's input queue under the active [`QueuePolicy`].
 #[derive(Debug, Clone)]
 pub enum StageQueue {
+    /// Bucket-ring queue (the default policy).
     Ring(BucketRing),
+    /// Retained chunk-list reference.
     Chunked(ChunkedQueue),
 }
 
 impl StageQueue {
+    /// Empty queue under the given policy.
     pub fn new(policy: QueuePolicy) -> Self {
         match policy {
             QueuePolicy::BucketRing => StageQueue::Ring(BucketRing::new()),
@@ -290,6 +301,7 @@ impl StageQueue {
     }
 
     #[inline]
+    /// Buffer `amount` tuples arriving at time `t`.
     pub fn push(&mut self, t: f64, amount: f64) {
         match self {
             StageQueue::Ring(q) => q.push(t, amount),
@@ -298,6 +310,7 @@ impl StageQueue {
     }
 
     #[inline]
+    /// Drain up to `budget` tuples into `out`, tracking `backlog`; returns the drained amount.
     pub fn drain_into(&mut self, budget: f64, backlog: &mut f64, out: &mut Vec<Chunk>) -> f64 {
         match self {
             StageQueue::Ring(q) => q.drain_into(budget, backlog, out),
@@ -305,6 +318,7 @@ impl StageQueue {
         }
     }
 
+    /// Total buffered tuples.
     pub fn mass(&self) -> f64 {
         match self {
             StageQueue::Ring(q) => q.mass(),
@@ -320,10 +334,12 @@ impl StageQueue {
         }
     }
 
+    /// Whether nothing is buffered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Drop all buffered mass.
     pub fn clear(&mut self) {
         match self {
             StageQueue::Ring(q) => q.clear(),

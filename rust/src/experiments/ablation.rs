@@ -1,4 +1,5 @@
-//! Ablation study over Daedalus' design choices (DESIGN.md §4).
+//! Ablation study over Daedalus' design choices (`ARCHITECTURE.md`
+//! § Evaluation stack).
 //!
 //! Each variant disables (or swaps) exactly one mechanism the paper argues
 //! for, and runs the Fig-7 protocol; comparing against the full system

@@ -16,12 +16,12 @@ pub fn write_experiment(res: &ExperimentResult, base: &str) -> Result<PathBuf> {
     fs::write(dir.join("parallelism.csv"), report::parallelism_series(res))?;
     fs::write(dir.join("latency_ecdf.csv"), report::ecdf_table(res, 120))?;
     let mut summary = String::from(
-        "approach,avg_latency_ms,p95_ms,p99_ms,max_ms,avg_workers,worker_seconds,profiling_worker_seconds,rescales\n",
+        "approach,avg_latency_ms,p95_ms,p99_ms,max_ms,avg_workers,worker_seconds,profiling_worker_seconds,rescales,slo_violation_frac\n",
     );
     for a in &res.approaches {
         let lat = &a.latencies;
         summary.push_str(&format!(
-            "{},{:.1},{:.1},{:.1},{:.1},{:.3},{:.0},{:.0},{:.1}\n",
+            "{},{:.1},{:.1},{:.1},{:.1},{:.3},{:.0},{:.0},{:.1},{:.6}\n",
             a.name,
             a.avg_latency_ms(),
             lat.quantile(0.95),
@@ -31,6 +31,7 @@ pub fn write_experiment(res: &ExperimentResult, base: &str) -> Result<PathBuf> {
             a.worker_seconds,
             a.profiling_worker_seconds,
             a.rescales,
+            a.slo_violation_frac,
         ));
     }
     fs::write(dir.join("summary.csv"), summary)?;
@@ -73,6 +74,8 @@ mod tests {
                 parallelism_series: vec![(0, 1)],
                 final_backlog: 0.0,
                 lag_max: 0.0,
+                slo_violation_frac: 0.0,
+                recovery_secs: Vec::new(),
             }],
         };
         let tmp = std::env::temp_dir().join("daedalus-test-results");

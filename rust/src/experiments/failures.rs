@@ -9,7 +9,6 @@ use crate::autoscaler::{Autoscaler, Daedalus, DaedalusConfig, Hpa, HpaConfig, St
 use crate::clock::Timestamp;
 use crate::dsp::{EngineProfile, SimConfig, Simulation};
 use crate::jobs::JobProfile;
-use crate::metrics::SeriesId;
 use crate::runtime::ComputeBackend;
 use crate::workload::SineWorkload;
 use crate::Result;
@@ -17,34 +16,17 @@ use crate::Result;
 /// Outcome of one approach under failure injection.
 #[derive(Debug, Clone)]
 pub struct FailureOutcome {
+    /// Approach label.
     pub name: String,
+    /// Mean end-to-end latency (ms).
     pub avg_latency_ms: f64,
+    /// p99 end-to-end latency (ms).
     pub p99_ms: f64,
+    /// Time-averaged worker count.
     pub avg_workers: f64,
-    /// Measured recovery time per injected failure (lag back to normal).
+    /// Measured recovery time per injected failure (lag back to normal),
+    /// via the shared [`super::harness::measure_recoveries`] metric.
     pub recovery_secs: Vec<f64>,
-}
-
-/// Measure recovery after each failure: seconds until consumer lag falls
-/// back under `threshold`.
-fn measure_recoveries(sim: &Simulation, failures: &[Timestamp], duration: u64) -> Vec<f64> {
-    let db = sim.tsdb();
-    let id = SeriesId::global("consumer_lag");
-    failures
-        .iter()
-        .map(|&f| {
-            let pre = db.avg_over(&id, f.saturating_sub(30), f).unwrap_or(0.0);
-            let threshold = pre * 1.5 + 5_000.0;
-            for t in f + 1..duration {
-                if let Some((_, lag)) = db.last_at(&id, t) {
-                    if lag <= threshold && t > f + 5 {
-                        return (t - f) as f64;
-                    }
-                }
-            }
-            f64::INFINITY
-        })
-        .collect()
 }
 
 /// Run the failure experiment. Returns outcomes and the printable report.
@@ -95,7 +77,7 @@ pub fn run(
             avg_latency_ms: lat.mean(),
             p99_ms: lat.quantile(0.99),
             avg_workers: sim.avg_workers(),
-            recovery_secs: measure_recoveries(&sim, &failures, duration),
+            recovery_secs: super::harness::measure_recoveries(&sim, &failures, duration),
         });
     }
 

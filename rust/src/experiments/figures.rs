@@ -1,22 +1,22 @@
-//! One driver per paper figure. Each returns a printable report and writes
-//! CSV series under `results/` so every table AND figure in the paper's
-//! evaluation can be regenerated (see DESIGN.md §4 for the index).
+//! One driver per paper figure. Figures 2–5 probe the simulation substrate
+//! directly (metric relationships at fixed parallelism) and write CSV
+//! series under `results/`; the comparison figures 7–11 are thin adapters
+//! over the unified evaluation stack ([`super::evaluate`]) — each runs the
+//! corresponding report section restricted to its scenario, so there is a
+//! single protocol definition and a single run loop behind every
+//! comparison number (see `ARCHITECTURE.md` § Evaluation stack for the
+//! figure/section index).
 
-use crate::autoscaler::{DaedalusConfig, PhoebeConfig};
 use crate::clock::Timestamp;
 use crate::dsp::{EngineProfile, SimConfig, Simulation};
 use crate::jobs::JobProfile;
 use crate::metrics::SeriesId;
 use crate::runtime::ComputeBackend;
 use crate::stats::Welford;
-use crate::workload::{
-    ConstantWorkload, CtrWorkload, RampWorkload, SineWorkload, TrafficWorkload, Workload,
-};
+use crate::workload::{ConstantWorkload, RampWorkload, Workload};
 use crate::Result;
 
-use super::export;
-use super::harness::{Approach, Experiment, ExperimentResult};
-use super::report;
+use super::evaluate::{self, EvalOptions};
 
 /// Factory for figure-run protocols.
 pub struct FigureOpts;
@@ -44,8 +44,12 @@ impl FigureOpts {
 /// Owned variant (seeds vector).
 #[derive(Debug, Clone)]
 pub struct FigureOptsOwned {
+    /// Simulated run length (s).
     pub duration: Timestamp,
+    /// Repetition seeds.
     pub seeds: Vec<u64>,
+    /// Output directory: CSV series for Figs. 2–5, and one
+    /// report-artifact directory per comparison figure (Figs. 7–11).
     pub out_dir: String,
 }
 
@@ -289,106 +293,100 @@ pub fn fig5(opts: &FigureOptsOwned) -> Result<String> {
     ))
 }
 
-fn comparison_approaches(targets: (f64, f64), backend: &ComputeBackend) -> Vec<Approach> {
-    let _ = backend;
-    vec![
-        Approach::Daedalus(DaedalusConfig::default()),
-        Approach::Hpa(targets.0),
-        Approach::Hpa(targets.1),
-        Approach::Static(12),
-    ]
-}
-
-fn autoscaler_figure(
-    name: &str,
-    engine: EngineProfile,
-    job: JobProfile,
-    make_workload: &dyn Fn(u64) -> Box<dyn Workload>,
-    hpa_targets: (f64, f64),
-    backend: ComputeBackend,
+/// Thin adapter behind Figs. 7–11: run one report section restricted to a
+/// single registry scenario through the evaluation stack; the caller
+/// writes the section's report artifacts under `out_dir/<scenario>`. The
+/// figures' `backend` parameter is accepted for CLI/bench compatibility
+/// but unused — the sweep substrate always runs the native mirror (the
+/// backend built for parallel sweeps).
+fn comparison_figure(
+    section_id: &str,
+    scenario: &str,
     opts: &FigureOptsOwned,
-) -> Result<(String, ExperimentResult)> {
-    let exp = Experiment::paper(name, engine, job, backend.clone(), opts.duration)
-        .with_seeds(opts.seeds.clone())
-        .with_approaches(comparison_approaches(hpa_targets, &backend));
-    let res = exp.run(make_workload);
-    let dir = export::write_experiment(&res, &opts.out_dir)?;
-    let mut text = report::summary_table(&res, "static-12");
-    text.push_str(&report::reduction_lines(&res, "daedalus"));
-    text.push('\n');
-    text.push_str(&super::plot::experiment_panels(&res));
-    text.push_str(&format!("CSVs: {}\n", dir.display()));
-    Ok((text, res))
+) -> Result<evaluate::Evaluation> {
+    let mut spec = evaluate::sections_by_ids(&[section_id])?.remove(0);
+    spec.scenarios.retain(|s| s == scenario);
+    evaluate::run(
+        &[spec],
+        &EvalOptions {
+            duration: opts.duration,
+            seeds: opts.seeds.clone(),
+            threads: 0,
+        },
+    )
 }
 
-/// Fig 7 — Flink WordCount: Daedalus vs HPA-80/85 vs Static-12, sine ×2.
+/// Run + render + write one comparison figure; returns the `Evaluation`
+/// (for figure-specific notes) alongside the heading/markdown/artifacts
+/// text block.
+fn comparison_figure_rendered(
+    section_id: &str,
+    scenario: &str,
+    heading: &str,
+    opts: &FigureOptsOwned,
+) -> Result<(evaluate::Evaluation, String)> {
+    let eval = comparison_figure(section_id, scenario, opts)?;
+    let dir = eval.write(&format!("{}/{}", opts.out_dir, scenario))?;
+    let text = format!(
+        "{heading}\n{}artifacts: {}\n",
+        eval.section_markdown(&eval.sections[0]),
+        dir.display()
+    );
+    Ok((eval, text))
+}
+
+fn comparison_figure_text(
+    section_id: &str,
+    scenario: &str,
+    heading: &str,
+    opts: &FigureOptsOwned,
+) -> Result<String> {
+    Ok(comparison_figure_rendered(section_id, scenario, heading, opts)?.1)
+}
+
+/// Fig 7 — Flink WordCount: Daedalus vs HPA-80, DS2 and Static-12 on the
+/// sine ×2 trace (the `fused-flink` report section's WordCount cell).
 pub fn fig7(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
-    let job = JobProfile::wordcount();
-    let peak = job.reference_peak;
-    let duration = opts.duration;
-    let (text, _res) = autoscaler_figure(
-        "fig7-flink-wordcount",
-        EngineProfile::flink(),
-        job,
-        &move |_seed| Box::new(SineWorkload::paper_default(peak, duration)),
-        (0.80, 0.85),
-        backend,
-        opts,
-    )?;
-    Ok(format!("Fig 7: Flink WordCount\n{text}"))
+    let _ = backend;
+    comparison_figure_text("fused-flink", "flink-wordcount-sine", "Fig 7: Flink WordCount", opts)
 }
 
 /// Fig 8 — Flink Yahoo Streaming Benchmark on the CTR-like trace.
 pub fn fig8(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
-    let job = JobProfile::ysb();
-    let peak = job.reference_peak;
-    let duration = opts.duration;
-    let (text, _res) = autoscaler_figure(
-        "fig8-flink-ysb",
-        EngineProfile::flink(),
-        job,
-        &move |seed| Box::new(CtrWorkload::new(peak, duration, seed)),
-        (0.80, 0.85),
-        backend,
+    let _ = backend;
+    comparison_figure_text(
+        "fused-flink",
+        "flink-ysb-ctr",
+        "Fig 8: Yahoo Streaming Benchmark (Flink)",
         opts,
-    )?;
-    Ok(format!("Fig 8: Yahoo Streaming Benchmark (Flink)\n{text}"))
+    )
 }
 
 /// Fig 9 — Flink Traffic Monitoring on the double-spike trace.
 pub fn fig9(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
-    let job = JobProfile::traffic();
-    let peak = job.reference_peak;
-    let duration = opts.duration;
-    let (text, _res) = autoscaler_figure(
-        "fig9-flink-traffic",
-        EngineProfile::flink(),
-        job,
-        &move |seed| Box::new(TrafficWorkload::new(peak, duration, seed)),
-        (0.80, 0.85),
-        backend,
+    let _ = backend;
+    comparison_figure_text(
+        "fused-flink",
+        "flink-traffic-traffic",
+        "Fig 9: Traffic Monitoring (Flink)",
         opts,
-    )?;
-    Ok(format!("Fig 9: Traffic Monitoring (Flink)\n{text}"))
+    )
 }
 
 /// Fig 10 — Kafka Streams WordCount: HPA-60/80 (HPA-80 under-provisions
 /// because Kafka Streams saturates below 80 % CPU).
 pub fn fig10(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
-    let job = JobProfile::wordcount();
-    let peak = job.reference_peak;
-    let duration = opts.duration;
-    let (text, res) = autoscaler_figure(
-        "fig10-kstreams-wordcount",
-        EngineProfile::kstreams(),
-        job,
-        &move |_seed| Box::new(SineWorkload::paper_default(peak, duration)),
-        (0.60, 0.80),
-        backend,
+    let _ = backend;
+    let (eval, text) = comparison_figure_rendered(
+        "fused-kstreams",
+        "kstreams-wordcount-sine",
+        "Fig 10: Kafka Streams WordCount",
         opts,
     )?;
     // The headline mechanism: HPA-80 must have under-provisioned.
-    let note = match (res.approach("hpa-80"), res.approach("hpa-60")) {
+    let sec = &eval.sections[0];
+    let by = |a: &str| sec.rows.iter().find(|r| r.approach == a);
+    let note = match (by("hpa-80"), by("hpa-60")) {
         (Some(h80), Some(h60)) => format!(
             "HPA-80 avg latency {:.0} ms vs HPA-60 {:.0} ms (under-provisioning: {})\n",
             h80.avg_latency_ms(),
@@ -397,48 +395,28 @@ pub fn fig10(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> 
         ),
         _ => String::new(),
     };
-    Ok(format!("Fig 10: Kafka Streams WordCount\n{text}{note}"))
+    Ok(format!("{text}{note}"))
 }
 
 /// Fig 11 — comparison with Phoebe: YSB on a sine workload, max 18
-/// workers, 600 s recovery target; Phoebe's profiling cost is reported.
+/// workers, 600 s recovery target; Phoebe's profiling cost is reported
+/// (the registry's dedicated `flink-ysb-sine` cell).
+///
+/// Protocol note: Phoebe's profiled scale-outs are now derived uniformly
+/// from the cell's ceiling by [`crate::experiments::Approach::parse`]
+/// (`{3, 6, 9, 12, 15, 18}`), replacing the seed-era hand-picked
+/// `{2, 4, 6, 9, 12, 15, 18}` — one fewer profiling run and no
+/// small-scale-out points, so profiling cost and interpolated QoS shift
+/// slightly vs pre-PR-5 fig11 output (deliberate: one registry-driven
+/// protocol for the figure, the report and the sweep).
 pub fn fig11(backend: ComputeBackend, opts: &FigureOptsOwned) -> Result<String> {
-    let job = JobProfile::ysb();
-    let peak = job.reference_peak;
-    let duration = opts.duration;
-    let mut exp = Experiment::paper(
-        "fig11-phoebe-comparison",
-        EngineProfile::flink(),
-        job,
-        backend,
-        duration,
+    let _ = backend;
+    comparison_figure_text(
+        "phoebe",
+        "flink-ysb-sine",
+        "Fig 11: Daedalus vs Phoebe (YSB, sine, max 18)",
+        opts,
     )
-    .with_seeds(opts.seeds.clone())
-    .with_approaches(vec![
-        Approach::Daedalus(DaedalusConfig::default()),
-        Approach::Phoebe(PhoebeConfig::default(), vec![2, 4, 6, 9, 12, 15, 18]),
-    ]);
-    exp.max_replicas = 18;
-    let res = exp.run(&move |_seed| Box::new(SineWorkload::paper_default(peak, duration)));
-    let dir = export::write_experiment(&res, &opts.out_dir)?;
-    let mut text = String::from("Fig 11: Daedalus vs Phoebe (YSB, sine, max 18)\n");
-    text.push_str(&report::summary_table(&res, "daedalus"));
-    if let (Some(d), Some(p)) = (res.approach("daedalus"), res.approach("phoebe")) {
-        let without = 1.0 - d.worker_seconds / p.worker_seconds.max(1.0);
-        let with = 1.0 - d.total_worker_seconds() / p.total_worker_seconds().max(1.0);
-        text.push_str(&format!(
-            "daedalus vs phoebe resources: {:.0}% less (excl. profiling), {:.0}% less (incl. profiling)\n\
-             phoebe profiling cost: {:.0} worker-seconds\n\
-             max latency — daedalus: {:.1} s, phoebe: {:.1} s\n",
-            without * 100.0,
-            with * 100.0,
-            p.profiling_worker_seconds,
-            d.latencies.max() / 1_000.0,
-            p.latencies.max() / 1_000.0,
-        ));
-    }
-    text.push_str(&format!("CSVs: {}\n", dir.display()));
-    Ok(text)
 }
 
 /// Run every figure (the full evaluation).

@@ -4,6 +4,13 @@
 //! workload trace (each in its own isolated deployment), each experiment is
 //! repeated with several seeds, latency samples are pooled, and resource
 //! usage is reported normalized against the static baseline.
+//!
+//! There is exactly **one** run loop in the repo: [`Experiment::run_single_traced`]
+//! executes one `(approach, seed)` unit tick by tick. The scenario sweep
+//! runner ([`super::scenarios::sweep`]) and [`Experiment::run`] are both
+//! thin expansions over it — `run` fans its `approaches × seeds` units out
+//! on the sweep runner's shared parallel executor and pools the results in
+//! deterministic unit order.
 
 use anyhow::{anyhow, bail};
 
@@ -24,8 +31,11 @@ use super::scenarios::trace::RunTrace;
 /// Which autoscaling approach to deploy.
 #[derive(Clone)]
 pub enum Approach {
+    /// The paper's MAPE-K autoscaler.
     Daedalus(DaedalusConfig),
+    /// Kubernetes HPA at the given CPU target (fraction).
     Hpa(f64),
+    /// Fixed parallelism (the static baseline).
     Static(usize),
     /// Phoebe profiles `scaleouts` first; profiling cost is accounted.
     Phoebe(PhoebeConfig, Vec<usize>),
@@ -38,6 +48,8 @@ pub enum Approach {
 }
 
 impl Approach {
+    /// Stable descriptor label (`daedalus`, `hpa-80`, `static-6`, …) —
+    /// the inverse of [`Approach::parse`].
     pub fn label(&self) -> String {
         match self {
             Approach::Daedalus(_) => "daedalus".into(),
@@ -93,17 +105,33 @@ impl Approach {
     }
 }
 
+/// Default p95-latency SLO bound (ms) for the violation accounting: a tick
+/// violates the SLO when the p95 of that tick's served end-to-end latency
+/// samples exceeds it; stop-the-world restart downtime counts as violated
+/// time (nothing is served at all), and the fraction is over the whole run.
+pub const DEFAULT_SLO_MS: f64 = 1_000.0;
+
 /// One experiment: a job on an engine under a workload, with approaches.
 pub struct Experiment {
+    /// Experiment name (used for export directories and trace labels).
     pub name: String,
+    /// Engine profile (Flink / Kafka Streams behavior constants).
     pub engine: EngineProfile,
+    /// Job profile (topology, per-operator costs, reference peak).
     pub job: JobProfile,
+    /// Simulated run length in seconds.
     pub duration: Timestamp,
+    /// Kafka partition count of the source topic.
     pub partitions: usize,
+    /// Parallelism every non-static approach starts at.
     pub initial_replicas: usize,
+    /// Upper bound on parallelism (cluster size).
     pub max_replicas: usize,
+    /// One repetition per seed; latency samples are pooled over seeds.
     pub seeds: Vec<u64>,
+    /// The autoscaling approaches under comparison.
     pub approaches: Vec<Approach>,
+    /// Compute backend for the model-based autoscalers.
     pub backend: ComputeBackend,
     /// Per-tick sampling stride for the time-series exports.
     pub sample_stride: u64,
@@ -115,6 +143,8 @@ pub struct Experiment {
     pub selectivity_drift: Option<SelectivityDrift>,
     /// Optional Zipf-exponent override (`skew-amplify`).
     pub zipf_override: Option<f64>,
+    /// p95-latency SLO bound (ms) for the violation-fraction accounting.
+    pub slo_ms: f64,
 }
 
 impl Experiment {
@@ -142,36 +172,53 @@ impl Experiment {
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,
+            slo_ms: DEFAULT_SLO_MS,
         }
     }
 
+    /// Builder: set the approaches under comparison.
     pub fn with_approaches(mut self, approaches: Vec<Approach>) -> Self {
         self.approaches = approaches;
         self
     }
 
+    /// Builder: set the repetition seeds.
     pub fn with_seeds(mut self, seeds: Vec<u64>) -> Self {
         self.seeds = seeds;
         self
     }
 
+    /// Builder: set the failure-injection schedule.
     pub fn with_failures(mut self, failures: Vec<Timestamp>) -> Self {
         self.failures = failures;
         self
     }
 
-    /// Run every approach × seed. `make_workload(seed)` builds the shared
-    /// trace for one repetition.
+    /// Run every approach × seed on the shared parallel executor
+    /// ([`super::scenarios::sweep::run_parallel`]) and pool per-approach
+    /// results in deterministic unit order (approach-major, then seed —
+    /// thread count and scheduling cannot change any output bit).
+    /// `make_workload(seed)` builds the shared trace for one repetition.
     pub fn run(
         &self,
-        make_workload: &dyn Fn(u64) -> Box<dyn Workload>,
+        make_workload: &(dyn Fn(u64) -> Box<dyn Workload> + Sync),
     ) -> ExperimentResult {
+        let mut units: Vec<(usize, u64)> = Vec::new();
+        for ai in 0..self.approaches.len() {
+            for &seed in &self.seeds {
+                units.push((ai, seed));
+            }
+        }
+        let results = super::scenarios::sweep::run_parallel(units.len(), 0, |i| {
+            let (ai, seed) = units[i];
+            self.run_single(&self.approaches[ai], seed, make_workload(seed))
+        });
+        let mut results = results.into_iter();
         let mut approaches = Vec::new();
         for approach in &self.approaches {
             let mut pooled = ApproachResult::empty(approach.label());
-            for &seed in &self.seeds {
-                let run = self.run_single(approach, seed, make_workload(seed));
-                pooled.absorb(run);
+            for _ in &self.seeds {
+                pooled.absorb(results.next().expect("one result per unit"));
             }
             pooled.finalize(self.seeds.len());
             approaches.push(pooled);
@@ -293,6 +340,23 @@ impl Experiment {
         let lag_max = db
             .max_over(&SeriesId::global("consumer_lag"), 0, self.duration)
             .unwrap_or(0.0);
+        // SLO accounting over the whole run: ticks whose served-latency
+        // p95 exceeded the bound, plus stop-the-world restart downtime
+        // (the p95 series is a no-op on unserved ticks, which would
+        // otherwise silently drop every restart window — the worst ticks —
+        // from a frequently-rescaling approach's metric). Unserved ticks
+        // outside a restart (e.g. a producer outage) count as compliant.
+        let viol = db.fold_over(&p95_id, 0, self.duration, 0u64, |v, _, x| {
+            v + u64::from(x > self.slo_ms)
+        });
+        let downtime: f64 = sim.rescale_log.iter().map(|e| e.downtime_secs).sum();
+        let slo_violation_frac = if self.duration == 0 {
+            0.0
+        } else {
+            ((viol as f64 + downtime) / self.duration as f64).min(1.0)
+        };
+        let event_times: Vec<Timestamp> = sim.rescale_log.iter().map(|e| e.t).collect();
+        let recovery_secs = measure_recoveries(&sim, &event_times, self.duration);
         let result = RunResult {
             latencies: sim.latencies().clone(),
             avg_workers: sim.avg_workers(),
@@ -302,35 +366,98 @@ impl Experiment {
             parallelism_series,
             final_backlog: sim.total_backlog(),
             lag_max,
+            slo_violation_frac,
+            recovery_secs,
         };
         (result, trace)
     }
 }
 
+/// Measured recovery time after each event (rescale restart or injected
+/// failure): seconds until consumer lag falls back inside its pre-event
+/// envelope (`1.5×` the 30 s pre-event average, plus a 5 000-tuple floor),
+/// checked no earlier than 5 s after the event. `f64::INFINITY` when the
+/// run ends before the lag recovers — the shared recovery metric behind
+/// the failure-injection driver and the sweep/report recovery columns.
+///
+/// `consumer_lag` is recorded every tick, so this resolves the series
+/// handle once and walks the dense sample slice per event — no per-tick
+/// hashed lookups (this runs for every sweep unit, including week-scale
+/// horizons).
+pub fn measure_recoveries(
+    sim: &Simulation,
+    events: &[Timestamp],
+    duration: Timestamp,
+) -> Vec<f64> {
+    let db = sim.tsdb();
+    let Some(h) = db.lookup(&SeriesId::global("consumer_lag")) else {
+        return vec![f64::INFINITY; events.len()];
+    };
+    events
+        .iter()
+        .map(|&f| {
+            let pre = db.avg_over_h(h, f.saturating_sub(30), f).unwrap_or(0.0);
+            let threshold = pre * 1.5 + 5_000.0;
+            for (t, lag) in db.iter_over_h(h, f + 6, duration.saturating_sub(1)) {
+                if lag <= threshold {
+                    return (t - f) as f64;
+                }
+            }
+            f64::INFINITY
+        })
+        .collect()
+}
+
 /// Raw results of a single (approach, seed) run.
 pub struct RunResult {
+    /// End-to-end latency samples (ms) of the whole run.
     pub latencies: Ecdf,
+    /// Time-averaged worker count.
     pub avg_workers: f64,
+    /// Total worker-seconds consumed (the resource-usage metric).
     pub worker_seconds: f64,
+    /// Worker-seconds spent in offline profiling (Phoebe only).
     pub profiling_worker_seconds: f64,
+    /// Number of rescale/restart events.
     pub rescales: usize,
+    /// `(t, parallelism)` samples on the experiment's stride.
     pub parallelism_series: Vec<(Timestamp, usize)>,
+    /// Unprocessed tuples left at the end of the run.
     pub final_backlog: f64,
+    /// Peak consumer lag (tuples) over the run.
     pub lag_max: f64,
+    /// Fraction of the run in violation of [`Experiment::slo_ms`]: ticks
+    /// whose served-latency p95 exceeded the bound, plus restart downtime.
+    pub slo_violation_frac: f64,
+    /// Measured recovery time per rescale/failure event (s); `INFINITY`
+    /// when the run ended before the lag recovered.
+    pub recovery_secs: Vec<f64>,
 }
 
 /// Results pooled over seeds for one approach.
 pub struct ApproachResult {
+    /// Approach label (see [`Approach::label`]).
     pub name: String,
+    /// Latency samples pooled (merged) over all seeds.
     pub latencies: Ecdf,
+    /// Mean over seeds of the time-averaged worker count.
     pub avg_workers: f64,
+    /// Mean worker-seconds over seeds.
     pub worker_seconds: f64,
+    /// Mean profiling worker-seconds over seeds (Phoebe only).
     pub profiling_worker_seconds: f64,
+    /// Mean rescale count over seeds.
     pub rescales: f64,
     /// Parallelism over time from the first repetition (for the figures).
     pub parallelism_series: Vec<(Timestamp, usize)>,
+    /// Mean final backlog over seeds.
     pub final_backlog: f64,
+    /// Max peak consumer lag over seeds.
     pub lag_max: f64,
+    /// Mean SLO-violation fraction over seeds.
+    pub slo_violation_frac: f64,
+    /// Measured recovery times pooled over all seeds (s).
+    pub recovery_secs: Vec<f64>,
 }
 
 impl ApproachResult {
@@ -345,9 +472,16 @@ impl ApproachResult {
             parallelism_series: Vec::new(),
             final_backlog: 0.0,
             lag_max: 0.0,
+            slo_violation_frac: 0.0,
+            recovery_secs: Vec::new(),
         }
     }
 
+    // Seed-pooling semantics (merge histograms, seed-mean the resource
+    // numbers, max the lag, concatenate recoveries) are mirrored by
+    // `scenarios::sweep::SweepReport::pool` over `SweepRunResult`s — a
+    // metric added here must be added there, or `daedalus report` and the
+    // harness paths (run --config, ablation, failures) silently diverge.
     fn absorb(&mut self, run: RunResult) {
         self.latencies.merge(&run.latencies);
         self.avg_workers += run.avg_workers;
@@ -356,6 +490,8 @@ impl ApproachResult {
         self.rescales += run.rescales as f64;
         self.final_backlog += run.final_backlog;
         self.lag_max = self.lag_max.max(run.lag_max);
+        self.slo_violation_frac += run.slo_violation_frac;
+        self.recovery_secs.extend(run.recovery_secs);
         if self.parallelism_series.is_empty() {
             self.parallelism_series = run.parallelism_series;
         }
@@ -368,6 +504,7 @@ impl ApproachResult {
         self.profiling_worker_seconds /= r;
         self.rescales /= r;
         self.final_backlog /= r;
+        self.slo_violation_frac /= r;
     }
 
     /// Mean end-to-end latency (ms).
@@ -383,12 +520,16 @@ impl ApproachResult {
 
 /// A full experiment's pooled output.
 pub struct ExperimentResult {
+    /// Experiment name.
     pub name: String,
+    /// Reference workload series `(t, rate)` from the first seed.
     pub workload_series: Vec<(Timestamp, f64)>,
+    /// Per-approach pooled results, in configuration order.
     pub approaches: Vec<ApproachResult>,
 }
 
 impl ExperimentResult {
+    /// Look up one approach's pooled result by label.
     pub fn approach(&self, name: &str) -> Option<&ApproachResult> {
         self.approaches.iter().find(|a| a.name == name)
     }
@@ -425,6 +566,7 @@ mod tests {
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,
+            slo_ms: DEFAULT_SLO_MS,
         };
         let res = exp.run(&|_seed| {
             Box::new(SineWorkload::paper_default(20_000.0, 1_200))
@@ -438,5 +580,10 @@ mod tests {
         // Normalized usage is defined and positive.
         let norm = res.normalized_usage("hpa-80", "static-6").unwrap();
         assert!(norm > 0.0);
+        // SLO accounting is a fraction; a right-sized static deployment
+        // spends most of the run inside the bound.
+        assert!((0.0..=1.0).contains(&s.slo_violation_frac));
+        // Every rescale produced a recovery measurement.
+        assert_eq!(h.recovery_secs.len() as f64, h.rescales * 2.0);
     }
 }

@@ -3,22 +3,28 @@
 //! (the three jobs × two engines autoscaler comparisons), Figure 11
 //! (Phoebe), and the §4.8 validation numbers.
 //!
-//! * [`harness`] — run N approaches × M seeds over one workload and pool
-//!   the results (the paper runs 5 repetitions).
-//! * [`figures`] — one driver per paper figure; each returns printable
-//!   series plus the summary rows quoted in the text.
+//! * [`scenarios`] — the declarative scenario matrix (engines × jobs ×
+//!   workload shapes × failure schedules × seeds), the parallel sweep
+//!   runner, and the deterministic golden-trace recorder every later perf
+//!   or behavior change is regression-tested against.
+//! * [`evaluate`] — the unified paper-style evaluation: every comparison
+//!   table/figure as a selection over the registry, executed through the
+//!   sweep runner and rendered as a byte-stable `REPORT.md` + CSV/JSON
+//!   (`daedalus report`).
+//! * [`harness`] — the single-run loop ([`Experiment::run_single_traced`])
+//!   plus the approaches × seeds expansion over the shared parallel
+//!   executor (the paper runs 5 repetitions).
+//! * [`figures`] — one driver per paper figure; Figs. 2–5 probe the
+//!   substrate directly, Figs. 7–11 are thin adapters over [`evaluate`].
 //! * [`report`] — formatting: summary tables, ECDF curves, time series.
 //! * [`export`] — CSV dumps under `results/`.
 //! * [`validate`] — §4.8: capacity-estimate accuracy, TSF accuracy,
 //!   predicted-vs-actual recovery time.
 //! * [`ablation`] — one-mechanism-off variants of Daedalus quantifying each
 //!   design choice's contribution.
-//! * [`scenarios`] — the declarative scenario matrix (engines × jobs ×
-//!   workload shapes × failure schedules × seeds), the parallel sweep
-//!   runner, and the deterministic golden-trace recorder every later perf
-//!   or behavior change is regression-tested against.
 
 pub mod ablation;
+pub mod evaluate;
 pub mod export;
 pub mod failures;
 pub mod figures;

@@ -3,13 +3,21 @@
 use super::harness::ExperimentResult;
 
 /// Paper-style summary table (§4.5 text numbers): average latency, average
-/// workers, resource usage vs. the static baseline and each other approach.
+/// workers, resource usage vs. the static baseline, SLO-violation
+/// fraction, and rescale counts.
 pub fn summary_table(res: &ExperimentResult, static_name: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!("== {} ==\n", res.name));
     out.push_str(&format!(
-        "{:<12} {:>12} {:>10} {:>10} {:>12} {:>10} {:>9}\n",
-        "approach", "avg lat ms", "p95 ms", "p99 ms", "avg workers", "vs static", "rescales"
+        "{:<12} {:>12} {:>10} {:>10} {:>12} {:>10} {:>9} {:>9}\n",
+        "approach",
+        "avg lat ms",
+        "p95 ms",
+        "p99 ms",
+        "avg workers",
+        "vs static",
+        "rescales",
+        "slo viol"
     ));
     let base = res.approach(static_name).map(|a| a.worker_seconds);
     for a in &res.approaches {
@@ -18,7 +26,7 @@ pub fn summary_table(res: &ExperimentResult, static_name: &str) -> String {
             _ => "-".into(),
         };
         out.push_str(&format!(
-            "{:<12} {:>12.0} {:>10.0} {:>10.0} {:>12.2} {:>10} {:>9.1}\n",
+            "{:<12} {:>12.0} {:>10.0} {:>10.0} {:>12.2} {:>10} {:>9.1} {:>8.1}%\n",
             a.name,
             a.avg_latency_ms(),
             a.latencies.quantile(0.95),
@@ -26,6 +34,7 @@ pub fn summary_table(res: &ExperimentResult, static_name: &str) -> String {
             a.avg_workers,
             vs_static,
             a.rescales,
+            a.slo_violation_frac * 100.0,
         ));
     }
     out
@@ -140,6 +149,8 @@ mod tests {
                 parallelism_series: vec![(0, 4), (30, 6)],
                 final_backlog: 0.0,
                 lag_max: 0.0,
+                slo_violation_frac: 0.25,
+                recovery_secs: vec![45.0],
             }
         };
         ExperimentResult {

@@ -18,10 +18,15 @@ use crate::Result;
 /// Result for one recovery target.
 #[derive(Debug, Clone)]
 pub struct RtPoint {
+    /// The recovery target handed to Daedalus (s).
     pub target_secs: f64,
+    /// Time-averaged worker count.
     pub avg_workers: f64,
+    /// Mean end-to-end latency (ms).
     pub avg_latency_ms: f64,
+    /// p99 end-to-end latency (ms).
     pub p99_ms: f64,
+    /// Number of rescales.
     pub rescales: usize,
     /// Fraction of observed recoveries that met the target.
     pub target_met_frac: f64,

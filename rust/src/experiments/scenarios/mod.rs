@@ -22,5 +22,8 @@ pub mod sweep;
 pub mod trace;
 
 pub use registry::{FailurePlan, Scenario, ScenarioRegistry};
-pub use sweep::{run_sweep, run_unit, SweepOptions, SweepReport, SweepRunResult, SweepUnit};
+pub use sweep::{
+    run_parallel, run_sweep, run_unit, PooledSummary, SweepOptions, SweepReport, SweepRunResult,
+    SweepUnit,
+};
 pub use trace::RunTrace;

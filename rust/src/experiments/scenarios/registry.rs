@@ -61,18 +61,30 @@ impl FailurePlan {
 pub struct Scenario {
     /// `"<engine>-<job>-<shape>[-fail…]"` — derived, stable, unique.
     pub name: String,
+    /// Stream-processing engine under test.
     pub engine: EngineKind,
+    /// Benchmark job.
     pub job: JobKind,
+    /// Workload trace shape.
     pub shape: ShapeKind,
+    /// Failure-injection schedule.
     pub failures: FailurePlan,
+    /// Simulated run length in seconds.
     pub duration: Timestamp,
+    /// One repetition per seed.
     pub seeds: Vec<u64>,
     /// Approach descriptors (see [`Approach::parse`]).
     pub approaches: Vec<String>,
+    /// Parallelism every non-static approach starts at.
     pub initial_replicas: usize,
+    /// Upper bound on parallelism.
     pub max_replicas: usize,
+    /// Kafka partition count of the source topic.
     pub partitions: usize,
+    /// Recovery-time target (s) handed to the model-based autoscalers.
     pub recovery_target: f64,
+    /// p95-latency SLO bound (ms) for the violation accounting.
+    pub slo_ms: f64,
     /// Fused flat pool (the paper's deployment) or per-operator stages.
     pub stage_model: StageModel,
     /// `bottleneck-shift` mechanism: one operator's selectivity drifts.
@@ -82,6 +94,7 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    /// A named cell with the default comparison protocol (engine knobs derived from the shape).
     pub fn new(
         engine: EngineKind,
         job: JobKind,
@@ -116,6 +129,7 @@ impl Scenario {
             max_replicas: 12,
             partitions: 72,
             recovery_target: 600.0,
+            slo_ms: crate::experiments::harness::DEFAULT_SLO_MS,
             stage_model,
             selectivity_drift,
             zipf_override,
@@ -188,6 +202,7 @@ impl Scenario {
         exp.initial_replicas = self.initial_replicas;
         exp.max_replicas = self.max_replicas;
         exp.partitions = self.partitions;
+        exp.slo_ms = self.slo_ms;
         exp.stage_model = self.stage_model;
         exp.selectivity_drift = self.selectivity_drift;
         exp.zipf_override = self.zipf_override;
@@ -213,12 +228,13 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The curated built-in matrix (20 scenarios): the six paper
+    /// The curated built-in matrix (21 scenarios): the six paper
     /// engine × job cells on their default traces, the three stress shapes
     /// on several cells, two failure-injection schedules, four
     /// staged-engine operator-elasticity cells (`bottleneck-shift`,
-    /// `skew-amplify`), and two week-scale `diurnal-week` cells (staged
-    /// engine; real days at `--duration 604800`).
+    /// `skew-amplify`), two week-scale `diurnal-week` cells (staged
+    /// engine; real days at `--duration 604800`), and the Fig-11 Phoebe
+    /// comparison cell (`flink-ysb-sine`, 18-worker ceiling).
     pub fn builtin(duration: Timestamp, seeds: &[u64]) -> Self {
         use EngineKind::{Flink, KStreams};
         use JobKind::{Traffic, WordCount, Ysb};
@@ -232,7 +248,7 @@ impl ScenarioRegistry {
         let paper = |engine, job: JobKind| {
             s(engine, job, job.default_shape(), FailurePlan::None)
         };
-        let scenarios = vec![
+        let mut scenarios = vec![
             // The paper's six engine × job cells (§4.4–4.6).
             paper(Flink, WordCount),
             paper(Flink, Ysb),
@@ -264,17 +280,28 @@ impl ScenarioRegistry {
             s(Flink, WordCount, DiurnalWeek, FailurePlan::None),
             s(KStreams, Ysb, DiurnalWeek, FailurePlan::None),
         ];
+        // The paper's Fig-11 Phoebe comparison: YSB on the sine trace,
+        // 18-worker ceiling, Phoebe's offline profiling cost accounted
+        // against its worker-seconds. The `report` evaluation stack
+        // selects this cell for its Daedalus-vs-Phoebe section.
+        let mut phoebe = s(Flink, Ysb, ShapeKind::Sine, FailurePlan::None);
+        phoebe.max_replicas = 18;
+        phoebe.approaches = vec!["daedalus".into(), "phoebe".into()];
+        scenarios.push(phoebe);
         Self { scenarios }
     }
 
+    /// Every registered scenario, in registry order.
     pub fn scenarios(&self) -> &[Scenario] {
         &self.scenarios
     }
 
+    /// Every scenario name, in registry order.
     pub fn names(&self) -> Vec<&str> {
         self.scenarios.iter().map(|s| s.name.as_str()).collect()
     }
 
+    /// Look up a scenario by exact name.
     pub fn get(&self, name: &str) -> Option<&Scenario> {
         self.scenarios.iter().find(|s| s.name == name)
     }
@@ -328,6 +355,20 @@ mod tests {
         // The paper cells are present.
         assert!(reg.get("flink-wordcount-sine").is_some());
         assert!(reg.get("kstreams-ysb-ctr").is_some());
+    }
+
+    #[test]
+    fn phoebe_comparison_cell_carries_fig11_protocol() {
+        let reg = ScenarioRegistry::builtin(7_200, &[1]);
+        let ph = reg.get("flink-ysb-sine").unwrap();
+        assert_eq!(ph.max_replicas, 18);
+        assert_eq!(ph.approaches, vec!["daedalus".to_string(), "phoebe".into()]);
+        assert_eq!(ph.stage_model, StageModel::Fused);
+        // Default cells carry the default SLO bound and wire it through to
+        // the materialized experiment.
+        let exp = ph.to_experiment().unwrap();
+        assert_eq!(exp.slo_ms, crate::experiments::harness::DEFAULT_SLO_MS);
+        assert_eq!(exp.max_replicas, 18);
     }
 
     #[test]

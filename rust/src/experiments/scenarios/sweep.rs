@@ -4,7 +4,11 @@
 //! units, executes them in parallel on `std::thread::scope` worker threads
 //! (work-stealing over an atomic cursor — the environment is offline, so
 //! no rayon), and aggregates per-approach QoS/resource summaries plus the
-//! deterministic trace digests.
+//! deterministic trace digests. The underlying executor ([`run_parallel`])
+//! is shared with the experiment harness, and [`SweepReport::pool`] is the
+//! seed-pooling substrate (mergeable latency [`Ecdf`]s, SLO and recovery
+//! accounting) that `experiments::evaluate` builds the paper-style report
+//! on.
 //!
 //! Determinism: every unit owns its whole world (simulation, autoscaler,
 //! workload, PRNG state are all derived from the unit's triple), results
@@ -18,10 +22,56 @@ use std::sync::Mutex;
 
 use anyhow::anyhow;
 
+use crate::stats::Ecdf;
 use crate::Result;
 
 use super::registry::Scenario;
 use super::trace::RunTrace;
+
+/// Execute `n` independent jobs on up to `threads` scoped worker threads
+/// (0 = one per available core) and return the results **in index order**.
+/// This is the single parallel executor behind both [`run_sweep`] and
+/// [`crate::experiments::harness::Experiment::run`]: jobs steal indices off
+/// an atomic cursor, results land in a pre-sized slot table, and callers
+/// read the table in order — thread count and scheduling cannot reorder or
+/// drop anything.
+pub fn run_parallel<T: Send>(
+    n: usize,
+    threads: usize,
+    job: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let n_threads = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|x| x.get())
+            .unwrap_or(4)
+    }
+    .min(n)
+    .max(1);
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = job(i);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker dropped a job"))
+        .collect()
+}
 
 /// Sweep tuning.
 #[derive(Debug, Clone)]
@@ -48,30 +98,121 @@ impl Default for SweepOptions {
 /// One `(scenario, approach, seed)` cell of the expanded matrix.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SweepUnit {
+    /// Scenario name from the registry.
     pub scenario: String,
+    /// Approach label (see `Approach::label`).
     pub approach: String,
+    /// Repetition seed.
     pub seed: u64,
 }
 
 /// Result of one unit: QoS/resource summary + deterministic trace.
 #[derive(Debug, Clone)]
 pub struct SweepRunResult {
+    /// The `(scenario, approach, seed)` triple this run executed.
     pub unit: SweepUnit,
+    /// Deterministic trace digest (see [`RunTrace::digest`]).
     pub digest: String,
+    /// The full deterministic run trace.
     pub trace: RunTrace,
+    /// Latency samples of the whole run (ms) — mergeable for seed pooling.
+    pub latencies: Ecdf,
+    /// Mean end-to-end latency (ms).
     pub avg_latency_ms: f64,
+    /// p95 end-to-end latency (ms).
     pub p95_ms: f64,
+    /// p99 end-to-end latency (ms).
+    pub p99_ms: f64,
+    /// Time-averaged worker count.
     pub avg_workers: f64,
+    /// Total worker-seconds consumed (the resource-usage metric).
     pub worker_seconds: f64,
+    /// Worker-seconds spent in offline profiling (Phoebe only).
+    pub profiling_worker_seconds: f64,
+    /// Number of rescale/restart events.
     pub rescales: usize,
+    /// Peak consumer lag (tuples).
     pub lag_max: f64,
+    /// Unprocessed tuples left at the end of the run.
     pub final_backlog: f64,
+    /// Fraction of the run in violation of the scenario's SLO bound
+    /// (served p95 above it, plus restart downtime).
+    pub slo_violation_frac: f64,
+    /// Measured recovery time per rescale/failure event (s; `INFINITY`
+    /// when the run ended before the lag recovered).
+    pub recovery_secs: Vec<f64>,
 }
 
 /// Aggregated sweep output, in deterministic unit order.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
+    /// Every unit's result, scenario-major, then approach, then seed.
     pub runs: Vec<SweepRunResult>,
+}
+
+/// Per-`scenario × approach` QoS/resource summary pooled over seeds:
+/// latencies are merged histograms ([`Ecdf::merge`]), means are over seeds,
+/// `lag_max` is the worst seed, recoveries are concatenated.
+#[derive(Debug, Clone)]
+pub struct PooledSummary {
+    /// Scenario name.
+    pub scenario: String,
+    /// Approach label.
+    pub approach: String,
+    /// Number of seeds pooled into this row.
+    pub seeds: usize,
+    /// Latency samples pooled over seeds (ms).
+    pub latencies: Ecdf,
+    /// Mean time-averaged worker count.
+    pub avg_workers: f64,
+    /// Mean worker-seconds.
+    pub worker_seconds: f64,
+    /// Mean profiling worker-seconds (Phoebe only).
+    pub profiling_worker_seconds: f64,
+    /// Mean rescale count.
+    pub rescales: f64,
+    /// Worst peak consumer lag over seeds.
+    pub lag_max: f64,
+    /// Mean SLO-violation fraction.
+    pub slo_violation_frac: f64,
+    /// Measured recovery times pooled over seeds (s).
+    pub recovery_secs: Vec<f64>,
+}
+
+impl PooledSummary {
+    /// Mean end-to-end latency (ms) of the pooled samples.
+    pub fn avg_latency_ms(&self) -> f64 {
+        self.latencies.mean()
+    }
+
+    /// Pooled p95 end-to-end latency (ms).
+    pub fn p95_ms(&self) -> f64 {
+        self.latencies.quantile(0.95)
+    }
+
+    /// Pooled p99 end-to-end latency (ms).
+    pub fn p99_ms(&self) -> f64 {
+        self.latencies.quantile(0.99)
+    }
+
+    /// Mean worker-seconds including profiling overhead (the paper's
+    /// Fig 11 accounting).
+    pub fn total_worker_seconds(&self) -> f64 {
+        self.worker_seconds + self.profiling_worker_seconds
+    }
+
+    /// Worst measured recovery (s); `None` when no rescale happened.
+    pub fn recovery_max(&self) -> Option<f64> {
+        self.recovery_secs
+            .iter()
+            .copied()
+            .fold(None, |acc: Option<f64>, r| Some(acc.map_or(r, |a| a.max(r))))
+    }
+
+    /// Whether every recovery completed before the run ended.
+    pub fn recovered_all(&self) -> bool {
+        self.recovery_secs.iter().all(|r| r.is_finite())
+    }
 }
 
 /// Execute one unit. Exposed for the golden-trace tests.
@@ -89,7 +230,6 @@ pub fn run_unit(
     let exp = scenario.base_experiment();
     let (run, trace) =
         exp.run_single_traced(&approach, seed, scenario.workload(seed), trace_stride);
-    let lat = &run.latencies;
     Ok(SweepRunResult {
         unit: SweepUnit {
             scenario: scenario.name.clone(),
@@ -98,13 +238,18 @@ pub fn run_unit(
         },
         digest: trace.digest(),
         trace,
-        avg_latency_ms: lat.mean(),
-        p95_ms: lat.quantile(0.95),
+        avg_latency_ms: run.latencies.mean(),
+        p95_ms: run.latencies.quantile(0.95),
+        p99_ms: run.latencies.quantile(0.99),
+        latencies: run.latencies,
         avg_workers: run.avg_workers,
         worker_seconds: run.worker_seconds,
+        profiling_worker_seconds: run.profiling_worker_seconds,
         rescales: run.rescales,
         lag_max: run.lag_max,
         final_backlog: run.final_backlog,
+        slo_violation_frac: run.slo_violation_frac,
+        recovery_secs: run.recovery_secs,
     })
 }
 
@@ -124,86 +269,87 @@ pub fn run_sweep(scenarios: &[&Scenario], opts: &SweepOptions) -> Result<SweepRe
         return Err(anyhow!("sweep expanded to zero runs"));
     }
 
-    let n_threads = if opts.threads > 0 {
-        opts.threads
-    } else {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-    }
-    .min(units.len())
-    .max(1);
-
-    let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<SweepRunResult>>>> =
-        (0..units.len()).map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= units.len() {
-                    break;
-                }
-                let (si, ref approach, seed) = units[i];
-                let res = run_unit(scenarios[si], approach, seed, opts.trace_stride);
-                *slots[i].lock().unwrap() = Some(res);
-            });
-        }
+    let results = run_parallel(units.len(), opts.threads, |i| {
+        let (si, approach, seed) = &units[i];
+        run_unit(scenarios[*si], approach, *seed, opts.trace_stride)
     });
-
     let mut runs = Vec::with_capacity(units.len());
-    for slot in slots {
-        match slot.into_inner().unwrap() {
-            Some(Ok(r)) => runs.push(r),
-            Some(Err(e)) => return Err(e),
-            None => return Err(anyhow!("sweep worker dropped a unit")),
-        }
+    for r in results {
+        runs.push(r?);
     }
     Ok(SweepReport { runs })
 }
 
 impl SweepReport {
+    /// Pool consecutive runs of the same `scenario × approach` over their
+    /// seeds, in unit order: merged latency histograms, seed-mean resource
+    /// numbers, worst-seed lag, concatenated recoveries. The substrate of
+    /// the sweep table and of `experiments::evaluate`'s report rows.
+    /// These pooling semantics mirror `harness::ApproachResult`'s
+    /// `absorb`/`finalize` (which pool `RunResult`s for the experiment
+    /// paths) — a metric added to one accumulator must be added to both.
+    pub fn pool(&self) -> Vec<PooledSummary> {
+        let mut out: Vec<PooledSummary> = Vec::new();
+        for r in &self.runs {
+            let fresh = match out.last() {
+                None => true,
+                Some(p) => p.scenario != r.unit.scenario || p.approach != r.unit.approach,
+            };
+            if fresh {
+                out.push(PooledSummary {
+                    scenario: r.unit.scenario.clone(),
+                    approach: r.unit.approach.clone(),
+                    seeds: 0,
+                    latencies: Ecdf::new(),
+                    avg_workers: 0.0,
+                    worker_seconds: 0.0,
+                    profiling_worker_seconds: 0.0,
+                    rescales: 0.0,
+                    lag_max: 0.0,
+                    slo_violation_frac: 0.0,
+                    recovery_secs: Vec::new(),
+                });
+            }
+            let p = out.last_mut().expect("row pushed above");
+            p.seeds += 1;
+            p.latencies.merge(&r.latencies);
+            p.avg_workers += r.avg_workers;
+            p.worker_seconds += r.worker_seconds;
+            p.profiling_worker_seconds += r.profiling_worker_seconds;
+            p.rescales += r.rescales as f64;
+            p.lag_max = p.lag_max.max(r.lag_max);
+            p.slo_violation_frac += r.slo_violation_frac;
+            p.recovery_secs.extend(r.recovery_secs.iter().copied());
+        }
+        for p in &mut out {
+            let n = p.seeds.max(1) as f64;
+            p.avg_workers /= n;
+            p.worker_seconds /= n;
+            p.profiling_worker_seconds /= n;
+            p.rescales /= n;
+            p.slo_violation_frac /= n;
+        }
+        out
+    }
+
     /// Per-`scenario × approach` summary pooled over seeds, in unit order.
     pub fn table(&self) -> String {
         let mut out = String::from(
-            "scenario                                 approach     seeds  avg lat ms     p95 ms  avg workers  rescales      lag max\n",
+            "scenario                                 approach     seeds  avg lat ms     p95 ms  avg workers  rescales      lag max  slo viol\n",
         );
-        // Group consecutive runs of the same (scenario, approach).
-        let mut i = 0;
-        while i < self.runs.len() {
-            let key = (
-                self.runs[i].unit.scenario.clone(),
-                self.runs[i].unit.approach.clone(),
-            );
-            let mut j = i;
-            let (mut lat, mut p95, mut workers, mut rescales, mut lag) =
-                (0.0, 0.0, 0.0, 0.0, 0.0f64);
-            while j < self.runs.len()
-                && self.runs[j].unit.scenario == key.0
-                && self.runs[j].unit.approach == key.1
-            {
-                let r = &self.runs[j];
-                lat += r.avg_latency_ms;
-                p95 += r.p95_ms;
-                workers += r.avg_workers;
-                rescales += r.rescales as f64;
-                lag = lag.max(r.lag_max);
-                j += 1;
-            }
-            let n = (j - i) as f64;
+        for p in self.pool() {
             out.push_str(&format!(
-                "{:<40} {:<12} {:>5} {:>11.0} {:>10.0} {:>12.2} {:>9.1} {:>12.0}\n",
-                key.0,
-                key.1,
-                j - i,
-                lat / n,
-                p95 / n,
-                workers / n,
-                rescales / n,
-                lag,
+                "{:<40} {:<12} {:>5} {:>11.0} {:>10.0} {:>12.2} {:>9.1} {:>12.0} {:>8.1}%\n",
+                p.scenario,
+                p.approach,
+                p.seeds,
+                p.avg_latency_ms(),
+                p.p95_ms(),
+                p.avg_workers,
+                p.rescales,
+                p.lag_max,
+                p.slo_violation_frac * 100.0,
             ));
-            i = j;
         }
         out
     }
@@ -276,6 +422,50 @@ mod tests {
         assert!(table.contains("hpa-80"));
         let digests = report.digest_lines();
         assert_eq!(digests.trim().lines().count(), 1 + 8);
+    }
+
+    #[test]
+    fn pool_merges_seeds_and_keeps_unit_order() {
+        let reg = ScenarioRegistry::builtin(1_200, &[1, 2]);
+        let sel = reg.select(&["flink-wordcount-sine"]).unwrap();
+        let opts = SweepOptions {
+            threads: 2,
+            trace_stride: 60,
+            approaches: Some(vec!["static-6".into(), "hpa-80".into()]),
+        };
+        let report = run_sweep(&sel, &opts).unwrap();
+        let pooled = report.pool();
+        assert_eq!(pooled.len(), 2);
+        assert_eq!(pooled[0].approach, "static-6");
+        assert_eq!(pooled[1].approach, "hpa-80");
+        for p in &pooled {
+            assert_eq!(p.seeds, 2);
+            // Merged histogram carries both seeds' samples; the seed-mean
+            // resource number sits between the per-seed values.
+            let (a, b) = (&report.runs[0], &report.runs[1]);
+            if p.approach == "static-6" {
+                crate::assert_close!(
+                    p.latencies.total_weight(),
+                    a.latencies.total_weight() + b.latencies.total_weight()
+                );
+                crate::assert_close!(
+                    p.worker_seconds,
+                    (a.worker_seconds + b.worker_seconds) / 2.0
+                );
+            }
+            assert!((0.0..=1.0).contains(&p.slo_violation_frac));
+        }
+        // Recovery accounting: one measurement per rescale event.
+        let hpa = &pooled[1];
+        let events: usize = report.runs[2..4].iter().map(|r| r.rescales).sum();
+        assert_eq!(hpa.recovery_secs.len(), events);
+    }
+
+    #[test]
+    fn run_parallel_returns_results_in_index_order() {
+        let out = run_parallel(17, 3, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        assert!(run_parallel(0, 4, |i| i).is_empty());
     }
 
     #[test]

@@ -22,11 +22,14 @@
 
 use crate::clock::Timestamp;
 use crate::dsp::RescaleEvent;
+use crate::util::Fnv64;
 
 /// One sampled tick.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TracePoint {
+    /// Sample time.
     pub t: Timestamp,
+    /// Job parallelism at `t`.
     pub replicas: usize,
     /// Consumer lag (tuples), quantized to 1/1000.
     pub lag: f64,
@@ -37,21 +40,30 @@ pub struct TracePoint {
 /// One rescale or failure restart.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceEvent {
+    /// Event time.
     pub t: Timestamp,
+    /// Total workers before the restart.
     pub from: usize,
+    /// Total workers after the restart.
     pub to: usize,
     /// Downtime (s), quantized to 1/1000.
     pub downtime_secs: f64,
+    /// Whether a failure (vs. a requested rescale) caused the restart.
     pub failure: bool,
 }
 
 /// The deterministic trace of one `(scenario, approach, seed)` run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunTrace {
+    /// Scenario name.
     pub scenario: String,
+    /// Approach label.
     pub approach: String,
+    /// Repetition seed.
     pub seed: u64,
+    /// Sampled ticks, in time order.
     pub points: Vec<TracePoint>,
+    /// Rescale/failure events, in log order.
     pub events: Vec<TraceEvent>,
 }
 
@@ -63,33 +75,15 @@ fn q3(v: f64) -> f64 {
     (v * 1000.0).round() / 1000.0
 }
 
-/// 64-bit FNV-1a.
-struct Fnv64(u64);
-
-impl Fnv64 {
-    fn new() -> Self {
-        Self(0xCBF2_9CE4_8422_2325)
-    }
-
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-    }
-
-    fn write_u64(&mut self, v: u64) {
-        self.write(&v.to_le_bytes());
-    }
-
-    fn write_f64(&mut self, v: f64) {
-        // Quantized values hash via their bit pattern; q3 already collapsed
-        // representation noise and mapped non-finite values to a sentinel.
-        self.write(&q3(v).to_bits().to_le_bytes());
-    }
+/// Absorb a quantized float into the shared FNV-1a hasher via its bit
+/// pattern; `q3` already collapsed representation noise and mapped
+/// non-finite values to a sentinel.
+fn write_f64(h: &mut Fnv64, v: f64) {
+    h.write(&q3(v).to_bits().to_le_bytes());
 }
 
 impl RunTrace {
+    /// Empty trace for one `(scenario, approach, seed)` unit.
     pub fn new(scenario: &str, approach: &str, seed: u64) -> Self {
         Self {
             scenario: scenario.to_string(),
@@ -133,18 +127,18 @@ impl RunTrace {
         for p in &self.points {
             h.write_u64(p.t);
             h.write_u64(p.replicas as u64);
-            h.write_f64(p.lag);
-            h.write_f64(p.p95_ms);
+            write_f64(&mut h, p.lag);
+            write_f64(&mut h, p.p95_ms);
         }
         h.write_u64(self.events.len() as u64);
         for e in &self.events {
             h.write_u64(e.t);
             h.write_u64(e.from as u64);
             h.write_u64(e.to as u64);
-            h.write_f64(e.downtime_secs);
+            write_f64(&mut h, e.downtime_secs);
             h.write_u64(e.failure as u64);
         }
-        format!("{:016x}", h.0)
+        h.hex()
     }
 
     /// Compact JSON document (stable field order, quantized values).

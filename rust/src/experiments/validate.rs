@@ -18,18 +18,22 @@ pub struct Validation {
     pub wapes: Vec<f64>,
     /// (predicted, measured) recovery-time pairs.
     pub recovery_pairs: Vec<(f64, f64)>,
+    /// Forecaster retrain count.
     pub retrains: usize,
 }
 
 impl Validation {
+    /// Median relative capacity-estimate error.
     pub fn median_capacity_error(&self) -> f64 {
         median(&self.capacity_errors)
     }
 
+    /// Median forecast WAPE.
     pub fn median_wape(&self) -> f64 {
         median(&self.wapes)
     }
 
+    /// Printable §4.8 summary.
     pub fn report(&self) -> String {
         let over = self
             .recovery_pairs

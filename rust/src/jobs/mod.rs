@@ -15,6 +15,7 @@ use crate::dsp::KeyDistribution;
 /// Cost/latency profile of a DSP job.
 #[derive(Debug, Clone)]
 pub struct JobProfile {
+    /// Job name.
     pub name: &'static str,
     /// Tuples/s one worker at speed 1.0 can process.
     pub base_capacity: f64,

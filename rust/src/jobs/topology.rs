@@ -22,6 +22,7 @@ use crate::clock::Timestamp;
 /// One streaming operator.
 #[derive(Debug, Clone)]
 pub struct Operator {
+    /// Operator name.
     pub name: &'static str,
     /// CPU microseconds per *input* tuple on a nominal worker core.
     pub cost_us: f64,
@@ -34,6 +35,7 @@ pub struct Operator {
 }
 
 impl Operator {
+    /// An unkeyed (round-robin-fed) operator.
     pub const fn new(name: &'static str, cost_us: f64, selectivity: f64) -> Self {
         Self {
             name,
@@ -63,7 +65,9 @@ pub struct SelectivityDrift {
     pub op: usize,
     /// Selectivity at/after `end` (the start value is the operator's own).
     pub to: f64,
+    /// Drift start (s).
     pub start: Timestamp,
+    /// Drift end (s).
     pub end: Timestamp,
 }
 
@@ -85,7 +89,9 @@ impl SelectivityDrift {
 /// A linear operator chain (the paper's jobs are all linear pipelines).
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// Topology name.
     pub name: &'static str,
+    /// Operators in pipeline order.
     pub operators: Vec<Operator>,
 }
 

@@ -35,6 +35,19 @@
 //! approach, seed)` triple — thread count and scheduling cannot change any
 //! recorded bit. `daedalus sweep` is the CLI entry point;
 //! `tests/golden_traces.rs` documents the bless/update workflow.
+//!
+//! ## The unified evaluation stack
+//!
+//! [`experiments::evaluate`] expresses every paper table/figure as a
+//! selection over the scenario registry, executes it through the sweep
+//! runner (fused + staged engines, multi-seed pooling with mergeable
+//! [`stats::Ecdf`] histograms), and renders a byte-stable `REPORT.md`
+//! plus machine-readable CSV/JSON — the `daedalus report` subcommand.
+//! Repo-level docs: `README.md` (front door), `ARCHITECTURE.md` (module
+//! map), `CONTRIBUTING.md` (determinism contract, golden re-bless policy,
+//! bench regeneration).
+
+#![warn(missing_docs)]
 
 pub mod autoscaler;
 pub mod clock;

@@ -1,6 +1,8 @@
 //! `daedalus` — CLI for the Daedalus reproduction.
 //!
 //! Subcommands:
+//!   report [--quick] [--sections a,b|all] [--scenarios x,y] [--out DIR] …
+//!          — the unified paper-style evaluation (REPORT.md + CSV/JSON)
 //!   figure <fig2|fig3|fig4|fig5|fig7|fig8|fig9|fig10|fig11|all>
 //!          [--quick] [--duration S] [--seeds a,b,c] [--backend artifact|native]
 //!   run    --config <spec.json> [--backend ...]   — run an ExperimentSpec
@@ -9,7 +11,9 @@
 
 use daedalus::config::ExperimentSpec;
 use daedalus::experiments::figures::{self, FigureOpts, FigureOptsOwned};
-use daedalus::experiments::{ablation, export, failures, harness::Experiment, report, rt_sweep, validate};
+use daedalus::experiments::{
+    ablation, evaluate, export, failures, harness::Experiment, plot, report, rt_sweep, validate,
+};
 use daedalus::runtime::ComputeBackend;
 use daedalus::Result;
 
@@ -18,8 +22,15 @@ fn usage() -> ! {
         "usage: daedalus <command>\n\
          \n\
          commands:\n\
+           report [--quick] [--sections a,b|all] [--scenarios x,y] [--duration S]\n\
+                  [--seeds a,b] [--threads N] [--out DIR]\n\
+               run the paper-style comparison (Daedalus vs static/HPA/DS2/\n\
+               Phoebe, fused + staged engines) over the scenario registry and\n\
+               write REPORT.md + report.csv/json (byte-stable for a fixed\n\
+               selection; default --out results/report)\n\
            figure <id|all> [--quick] [--duration S] [--seeds a,b,c] [--backend artifact|native]\n\
-               regenerate a paper figure (fig2..fig5, fig7..fig11)\n\
+               regenerate a paper figure (fig2..fig5 probe the substrate;\n\
+               fig7..fig11 are adapters over the report sections)\n\
            run --config <spec.json> [--backend ...]\n\
                run a custom experiment spec (see examples/configs/)\n\
            validate [--duration S] [--seed N] [--backend ...]\n\
@@ -37,11 +48,12 @@ fn usage() -> ! {
                bottleneck-shift / skew-amplify cells run the staged engine\n\
                (per-operator replica sets; ds2 scales stage vectors)\n\
            bench [--out BENCH_micro.json] [--smoke] [--filter substr]\n\
-                 [--check tracked.json]\n\
+                 [--check tracked.json] [--strict]\n\
                run the micro-bench registry (before/after pairs vs the\n\
                retained reference impls) and write the JSON perf trajectory;\n\
-               --check prints per-entry deltas vs a tracked trajectory\n\
-               file (report-only — never fails the run)\n\
+               --check prints per-entry deltas vs a tracked trajectory file\n\
+               (report-only by default; --strict exits non-zero when any\n\
+               bench regressed beyond the tolerance)\n\
            selfcheck [--backend ...]\n\
                compile + execute both AOT artifacts once and print timings\n\
            live [--speed X] [--duration S] [--backend ...]\n\
@@ -65,7 +77,7 @@ fn parse_args(argv: &[String]) -> Args {
         let a = &argv[i];
         if let Some(name) = a.strip_prefix("--") {
             // Known boolean switches take no value.
-            if name == "quick" || name == "list" || name == "smoke" {
+            if name == "quick" || name == "list" || name == "smoke" || name == "strict" {
                 switches.insert(name.to_string());
             } else if i + 1 < argv.len() {
                 flags.insert(name.to_string(), argv[i + 1].clone());
@@ -207,8 +219,89 @@ fn cmd_run(args: &Args) -> Result<()> {
         .unwrap_or_else(|| res.approaches[0].name.clone());
     println!("{}", report::summary_table(&res, &static_name));
     println!("{}", report::reduction_lines(&res, "daedalus"));
+    println!("{}", plot::experiment_panels(&res));
     let dir = export::write_experiment(&res, "results")?;
     println!("CSVs: {}", dir.display());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let mut opts = if args.switches.contains("quick") {
+        evaluate::EvalOptions::quick()
+    } else {
+        evaluate::EvalOptions::paper()
+    };
+    if let Some(d) = args.flags.get("duration") {
+        opts.duration = d.parse().expect("bad --duration");
+    }
+    if let Some(s) = args.flags.get("seeds") {
+        opts.seeds = s
+            .split(',')
+            .map(|x| x.trim().parse().expect("bad --seeds"))
+            .collect();
+    }
+    if let Some(t) = args.flags.get("threads") {
+        opts.threads = t.parse().expect("bad --threads");
+    }
+    let ids = args
+        .flags
+        .get("sections")
+        .map(|s| s.split(',').map(str::trim).collect::<Vec<_>>())
+        .unwrap_or_else(|| vec!["all"]);
+    let mut sections = evaluate::sections_by_ids(&ids)?;
+    // Optional scenario filter: restrict every section to the named cells
+    // (sections left empty are dropped) — the truncation knob CI's
+    // report-smoke uses.
+    if let Some(filter) = args.flags.get("scenarios") {
+        let keep: Vec<&str> = filter.split(',').map(str::trim).collect();
+        // Every named scenario must appear in at least one selected
+        // section — a typo must not silently shrink the report.
+        for k in &keep {
+            let known = sections
+                .iter()
+                .any(|sec| sec.scenarios.iter().any(|s| s == k));
+            if !known {
+                anyhow::bail!(
+                    "--scenarios entry {k:?} matches no scenario of the selected \
+                     sections ({})",
+                    sections
+                        .iter()
+                        .map(|s| s.id.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        for sec in &mut sections {
+            sec.scenarios.retain(|s| keep.contains(&s.as_str()));
+        }
+        sections.retain(|s| !s.scenarios.is_empty());
+        if sections.is_empty() {
+            anyhow::bail!("--scenarios {filter:?} matched no section scenario");
+        }
+    }
+    let n_runs: usize = sections
+        .iter()
+        .map(|s| s.scenarios.len() * s.approaches.len() * opts.seeds.len())
+        .sum();
+    eprintln!(
+        "report: {} sections, {} runs, {} s each",
+        sections.len(),
+        n_runs,
+        opts.duration
+    );
+    let eval = evaluate::run(&sections, &opts)?;
+    let out = args
+        .flags
+        .get("out")
+        .map(String::as_str)
+        .unwrap_or("results/report");
+    let dir = eval.write(out)?;
+    print!("{}", eval.markdown());
+    eprintln!(
+        "report written: {} (+ report.csv, report.json, per-scenario ECDFs)",
+        dir.join("REPORT.md").display()
+    );
     Ok(())
 }
 
@@ -412,6 +505,10 @@ fn cmd_live(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    let strict = args.switches.contains("strict");
+    if strict && !args.flags.contains_key("check") {
+        anyhow::bail!("--strict requires --check <tracked.json>");
+    }
     let opts = daedalus::perf::BenchOpts {
         smoke: args.switches.contains("smoke"),
         filter: args.flags.get("filter").cloned(),
@@ -430,13 +527,31 @@ fn cmd_bench(args: &Args) -> Result<()> {
     println!("\nwrote {out}");
     // Report-only by contract: an unreadable/garbled tracked file must not
     // fail the run (or eat the measurements — --out is already written).
+    // `--strict` opts into a hard gate: any bench slower than the tracked
+    // trajectory by more than perf::STRICT_RTOL exits non-zero (the
+    // one-flag CI gate), and a bad tracked file becomes an error too.
     if let Some(tracked) = args.flags.get("check") {
-        let report = match std::fs::read_to_string(tracked) {
-            Ok(text) => daedalus::perf::check_report(&results, &text, tracked),
+        let outcome = match std::fs::read_to_string(tracked) {
+            Ok(text) => daedalus::perf::check_deltas(&results, &text, tracked),
             Err(e) => Err(e.into()),
         };
-        match report {
-            Ok(text) => print!("\n{text}"),
+        match outcome {
+            Ok(o) => {
+                print!("\n{}", o.text);
+                if strict && !o.regressions.is_empty() {
+                    anyhow::bail!(
+                        "--strict: {} bench(es) regressed beyond {:.0}% vs {tracked}: {}",
+                        o.regressions.len(),
+                        daedalus::perf::STRICT_RTOL * 100.0,
+                        o.regressions
+                            .iter()
+                            .map(|(n, d)| format!("{n} ({:+.1}%)", d * 100.0))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    );
+                }
+            }
+            Err(e) if strict => return Err(e.context(format!("--strict --check {tracked}"))),
             Err(e) => eprintln!("warning: --check {tracked} skipped: {e}"),
         }
     }
@@ -496,6 +611,7 @@ fn main() -> Result<()> {
     let cmd = argv[0].clone();
     let args = parse_args(&argv[1..]);
     match cmd.as_str() {
+        "report" => cmd_report(&args),
         "figure" => cmd_figure(&args),
         "run" => cmd_run(&args),
         "validate" => cmd_validate(&args),

@@ -22,6 +22,7 @@ use crate::clock::Timestamp;
 /// Point-in-time view of one worker's metrics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerSnapshot {
+    /// Worker index.
     pub worker: usize,
     /// Moving-average CPU utilization (0..1).
     pub cpu: f64,
@@ -68,6 +69,7 @@ pub fn worker_snapshots_into(
 /// Point-in-time view of one operator stage's aggregates (staged engine).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageSnapshot {
+    /// Stage (operator) index.
     pub stage: usize,
     /// Current replica count (latest sample).
     pub parallelism: usize,
@@ -194,6 +196,7 @@ struct StageState {
 }
 
 impl StageMonitor {
+    /// Monitor with a `window`-second trailing window.
     pub fn new(window: u64) -> Self {
         Self {
             window,
@@ -281,6 +284,7 @@ pub struct WorkerMonitor {
 }
 
 impl WorkerMonitor {
+    /// Empty monitor; handles bind lazily per TSDB generation.
     pub fn new() -> Self {
         Self::default()
     }

@@ -36,12 +36,16 @@ use crate::clock::Timestamp;
 /// `stage` label and per-replica series under flattened `worker` indices).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SeriesId {
+    /// Metric name.
     pub name: &'static str,
+    /// Worker index label, if per-worker.
     pub worker: Option<usize>,
+    /// Stage index label, if per-stage.
     pub stage: Option<usize>,
 }
 
 impl SeriesId {
+    /// A global (unlabelled) series id.
     pub fn global(name: &'static str) -> Self {
         Self {
             name,
@@ -50,6 +54,7 @@ impl SeriesId {
         }
     }
 
+    /// A per-worker series id.
     pub fn worker(name: &'static str, worker: usize) -> Self {
         Self {
             name,
@@ -214,6 +219,7 @@ pub struct Tsdb {
 }
 
 impl Tsdb {
+    /// Empty store.
     pub fn new() -> Self {
         Self::default()
     }

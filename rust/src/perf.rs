@@ -78,10 +78,15 @@ pub struct BenchOpts {
 /// One bench's measurement (plus its reference link, if any).
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Bench name (stable across runs; the JSON key).
     pub name: &'static str,
+    /// Mean wall-clock nanoseconds per iteration.
     pub ns_per_iter: f64,
+    /// Timed iterations executed.
     pub iters: u32,
+    /// Fastest iteration (ns).
     pub min_ns: f64,
+    /// Slowest iteration (ns).
     pub max_ns: f64,
     /// Name of the retained pre-optimization reference bench, if any.
     pub baseline: Option<&'static str>,
@@ -623,12 +628,32 @@ pub fn write_json(path: &str, results: &[BenchResult], smoke: bool) -> Result<()
     Ok(())
 }
 
-/// Report-only comparison of a bench run against a tracked trajectory file
+/// `--strict` regression tolerance: a bench counts as regressed when its
+/// `ns_per_iter` exceeds the tracked trajectory's by more than this
+/// fraction. Generous on purpose — wall-clock noise on shared CI runners
+/// is real; the gate is for order-of-magnitude cliffs, not jitter.
+pub const STRICT_RTOL: f64 = 0.25;
+
+/// Structured result of a trajectory comparison ([`check_deltas`]).
+pub struct CheckOutcome {
+    /// The printable per-entry delta report.
+    pub text: String,
+    /// `(name, delta_fraction)` for every bench slower than the tracked
+    /// trajectory by more than [`STRICT_RTOL`] (what `--strict` gates on).
+    pub regressions: Vec<(String, f64)>,
+}
+
+/// Comparison of a bench run against a tracked trajectory file
 /// (`daedalus bench --check <path>`): per-entry Δ vs the tracked
-/// `ns_per_iter`, plus benches present on only one side. Never fails the
-/// run — wall-clock timings are not a CI gate (smoke mode in particular is
-/// a single unwarmed iteration), but drift stays visible in the logs.
-pub fn check_report(results: &[BenchResult], tracked_json: &str, tracked_name: &str) -> Result<String> {
+/// `ns_per_iter`, plus benches present on only one side. Report-only by
+/// default — wall-clock timings are not a CI gate (smoke mode in
+/// particular is a single unwarmed iteration) — but the returned
+/// [`CheckOutcome::regressions`] let `--strict` turn it into one.
+pub fn check_deltas(
+    results: &[BenchResult],
+    tracked_json: &str,
+    tracked_name: &str,
+) -> Result<CheckOutcome> {
     let j = Json::parse(tracked_json)?;
     let entries = j.get("entries")?.as_arr()?;
     let mut tracked: Vec<(String, f64)> = Vec::with_capacity(entries.len());
@@ -639,15 +664,23 @@ pub fn check_report(results: &[BenchResult], tracked_json: &str, tracked_name: &
         ));
     }
     let mut out = format!("deltas vs tracked trajectory {tracked_name} (report-only):\n");
+    let mut regressions = Vec::new();
     for r in results {
         match tracked.iter().find(|(n, _)| n == r.name) {
-            Some((_, ns)) => out.push_str(&format!(
-                "  {:<36} {:>12} vs tracked {:>12}  {:+7.1}%\n",
-                r.name,
-                fmt_ns(r.ns_per_iter),
-                fmt_ns(*ns),
-                (r.ns_per_iter / ns - 1.0) * 100.0
-            )),
+            Some((_, ns)) => {
+                let delta = r.ns_per_iter / ns - 1.0;
+                let flag = if delta > STRICT_RTOL { "  << regression" } else { "" };
+                out.push_str(&format!(
+                    "  {:<36} {:>12} vs tracked {:>12}  {:+7.1}%{flag}\n",
+                    r.name,
+                    fmt_ns(r.ns_per_iter),
+                    fmt_ns(*ns),
+                    delta * 100.0
+                ));
+                if delta > STRICT_RTOL {
+                    regressions.push((r.name.to_string(), delta));
+                }
+            }
             None => out.push_str(&format!(
                 "  {:<36} {:>12} (new — not in the tracked file)\n",
                 r.name,
@@ -660,7 +693,16 @@ pub fn check_report(results: &[BenchResult], tracked_json: &str, tracked_name: &
             out.push_str(&format!("  {name:<36} tracked, but not measured in this run\n"));
         }
     }
-    Ok(out)
+    Ok(CheckOutcome { text: out, regressions })
+}
+
+/// [`check_deltas`], report text only (the legacy report-only surface).
+pub fn check_report(
+    results: &[BenchResult],
+    tracked_json: &str,
+    tracked_name: &str,
+) -> Result<String> {
+    Ok(check_deltas(results, tracked_json, tracked_name)?.text)
 }
 
 #[cfg(test)]
@@ -752,6 +794,20 @@ mod tests {
         assert!(report.contains("thing_naive") && report.contains("not measured in this run"));
         // Garbage input surfaces as an error, not a panic.
         assert!(check_report(&current, "{nope", "x").is_err());
+
+        // The structured outcome flags the 2× slowdown (what --strict
+        // gates on) but not benches inside the tolerance.
+        let outcome = check_deltas(&current, &tracked, "BENCH_micro.json").unwrap();
+        assert_eq!(outcome.regressions.len(), 1);
+        assert_eq!(outcome.regressions[0].0, "thing");
+        crate::assert_close!(outcome.regressions[0].1, 1.0);
+        assert!(outcome.text.contains("<< regression"), "{}", outcome.text);
+
+        let mut fine = fake_results();
+        fine[1].ns_per_iter *= 1.0 + STRICT_RTOL * 0.5; // inside tolerance
+        let ok = check_deltas(&fine, &tracked, "BENCH_micro.json").unwrap();
+        assert!(ok.regressions.is_empty(), "{:?}", ok.regressions);
+        assert!(!ok.text.contains("<< regression"));
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub struct CapacityState {
 /// Result of one capacity_update execution.
 #[derive(Debug, Clone)]
 pub struct CapacityOutput {
+    /// Updated Welford regression state.
     pub state: CapacityState,
     /// Predicted per-worker capacity (tuples/s) at the requested CPU target.
     pub capacities: Vec<f32>,
@@ -45,10 +46,12 @@ impl CapacityState {
         Ok(Self { data, max_workers })
     }
 
+    /// Raw row-major `[max_workers, 5]` buffer.
     pub fn as_slice(&self) -> &[f32] {
         &self.data
     }
 
+    /// Number of worker rows.
     pub fn max_workers(&self) -> usize {
         self.max_workers
     }

@@ -46,6 +46,7 @@ impl ComputeBackend {
         Self::Native(ArtifactMeta::default())
     }
 
+    /// Artifact shape metadata of the active backend.
     pub fn meta(&self) -> &ArtifactMeta {
         match self {
             Self::Artifact(rt) => &rt.meta,

@@ -23,15 +23,25 @@ use crate::Result;
 /// (`artifacts/meta.json`). Defaults mirror `python/compile/model.py`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactMeta {
+    /// Maximum workers the capacity graph models.
     pub max_workers: usize,
+    /// Observations folded per `capacity_update` call (per worker).
     pub obs_block: usize,
+    /// Forecast history window length (samples).
     pub window: usize,
+    /// Forecast rollout length (samples).
     pub horizon: usize,
+    /// Number of AR lags.
     pub ar_order: usize,
+    /// The AR lag set.
     pub ar_lags: Vec<usize>,
+    /// Largest lag in `ar_lags`.
     pub max_lag: usize,
+    /// Ridge regularization λ of the AR fit.
     pub ridge_lam: f64,
+    /// Conjugate-gradient iterations of the AR solve.
     pub cg_iters: usize,
+    /// Floats per worker row in the capacity state.
     pub state_width: usize,
 }
 
@@ -81,7 +91,9 @@ pub struct ArtifactRuntime {
     client: xla::PjRtClient,
     capacity_exe: xla::PjRtLoadedExecutable,
     forecast_exe: xla::PjRtLoadedExecutable,
+    /// Validated artifact metadata (`meta.json`).
     pub meta: ArtifactMeta,
+    /// Artifact directory.
     pub dir: PathBuf,
 }
 
@@ -93,7 +105,9 @@ pub struct ArtifactRuntime {
 /// backend, which mirrors both graphs bit-for-bit in pure Rust.
 #[cfg(not(feature = "pjrt"))]
 pub struct ArtifactRuntime {
+    /// Artifact metadata (defaults in the stub build).
     pub meta: ArtifactMeta,
+    /// Artifact directory the load was attempted from.
     pub dir: PathBuf,
 }
 

@@ -60,6 +60,7 @@ impl Ecdf {
     /// `10^(1/(2·BINS_PER_DECADE)) − 1 ≈ 0.904 %`.
     pub const QUANTILE_RTOL: f64 = 0.0091;
 
+    /// Empty histogram (bins allocated lazily on the first push).
     pub fn new() -> Self {
         Self::default()
     }
@@ -96,6 +97,7 @@ impl Ecdf {
         self.count += 1;
     }
 
+    /// Whether no samples have been pushed.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
@@ -110,6 +112,7 @@ impl Ecdf {
         self.bins.len()
     }
 
+    /// Total pushed weight.
     pub fn total_weight(&self) -> f64 {
         self.total_weight
     }
@@ -249,6 +252,7 @@ pub struct ExactEcdf {
 }
 
 impl ExactEcdf {
+    /// Empty exact reference ECDF.
     pub fn new() -> Self {
         Self::default()
     }
@@ -271,14 +275,17 @@ impl ExactEcdf {
         }
     }
 
+    /// Whether no samples have been pushed.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Number of samples pushed.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Total pushed weight.
     pub fn total_weight(&self) -> f64 {
         self.total_weight
     }

@@ -9,7 +9,9 @@ use super::welford::Welford;
 /// Linear model `y = intercept + slope · x`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinearRegression {
+    /// Slope of the fitted line.
     pub slope: f64,
+    /// Intercept of the fitted line.
     pub intercept: f64,
 }
 

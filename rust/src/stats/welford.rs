@@ -12,11 +12,17 @@
 /// `cxy = Σ(x−x̄)(y−ȳ)` with Welford's numerically stable updates.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Welford {
+    /// Number of observations.
     pub count: f64,
+    /// Running mean of x.
     pub mean_x: f64,
+    /// Running mean of y.
     pub mean_y: f64,
+    /// Σ(x−x̄)².
     pub m2x: f64,
+    /// Σ(y−ȳ)².
     pub m2y: f64,
+    /// Σ(x−x̄)(y−ȳ).
     pub cxy: f64,
 }
 

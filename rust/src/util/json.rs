@@ -8,11 +8,17 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number (every JSON number is an f64 here).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -32,6 +38,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The value as a float; error if not a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -39,6 +46,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer; error otherwise.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -47,6 +55,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// The value as a string; error otherwise.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -54,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The value as a boolean; error otherwise.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -61,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The value as an array; error otherwise.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -68,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The value as an object; error otherwise.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Ok(o),

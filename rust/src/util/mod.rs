@@ -4,6 +4,52 @@
 
 pub mod json;
 
+/// Streaming 64-bit FNV-1a hasher — the single digest primitive behind
+/// both the golden-trace digests (`experiments::scenarios::trace`) and the
+/// report pinning ([`fnv1a_hex`]).
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    /// Fresh hasher at the FNV-1a offset basis.
+    pub fn new() -> Self {
+        Self(0xCBF2_9CE4_8422_2325)
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    /// Absorb a `u64` in little-endian byte order.
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// The digest so far, as 16 lowercase hex chars.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// 64-bit FNV-1a over raw bytes, rendered as 16 lowercase hex chars — the
+/// same digest primitive the golden traces use, exposed for pinning any
+/// deterministic text artifact (e.g. the `daedalus report` output).
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.hex()
+}
+
 /// Assert two floats are close: `|a − b| ≤ atol + rtol·|b|`.
 #[macro_export]
 macro_rules! assert_close {

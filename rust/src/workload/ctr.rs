@@ -5,7 +5,7 @@
 //! is the trace *shape*: an advertising-traffic diurnal cycle (compressed to
 //! the 6-h run), slow correlated wander, and short click bursts. This
 //! generator reproduces those features deterministically from a seed. The
-//! substitution is documented in DESIGN.md §2.
+//! substitution is documented in `ARCHITECTURE.md` § Workload generators.
 
 use super::{SmoothNoise, Workload};
 use crate::clock::Timestamp;
@@ -23,6 +23,7 @@ pub struct CtrWorkload {
 }
 
 impl CtrWorkload {
+    /// CTR-shaped trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xC7E0_11AD);
         let noise = SmoothNoise::generate(&mut rng, duration, 60, 0.9, 0.1, 0.08);

@@ -28,6 +28,7 @@ pub struct DiurnalDriftWorkload {
 }
 
 impl DiurnalDriftWorkload {
+    /// Diurnal-drift trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xD1D7_0D21);
         let trough_frac = rng.range(0.15, 0.25);

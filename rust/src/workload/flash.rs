@@ -31,6 +31,7 @@ pub struct FlashCrowdWorkload {
 }
 
 impl FlashCrowdWorkload {
+    /// Flash-crowd trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xF1A5_0C0D);
         let onset = duration as f64 * rng.range(0.25, 0.45);

@@ -138,6 +138,7 @@ impl ShapeKind {
         }
     }
 
+    /// Parse a shape name (see the error message for the full list).
     pub fn parse(s: &str) -> crate::Result<Self> {
         Self::all()
             .into_iter()
@@ -202,7 +203,9 @@ impl<W: Workload + ?Sized> Workload for Box<W> {
 /// Multiply an inner workload by a constant factor (the paper scales every
 /// trace so the peak fits the 12-worker capacity).
 pub struct ScaledWorkload<W> {
+    /// The wrapped workload.
     pub inner: W,
+    /// Multiplier applied to every rate sample.
     pub factor: f64,
 }
 

@@ -36,6 +36,7 @@ pub struct OutageBackfillWorkload {
 }
 
 impl OutageBackfillWorkload {
+    /// Outage-backfill trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0x0074_A6E5);
         let d = duration as f64;

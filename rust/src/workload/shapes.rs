@@ -7,7 +7,9 @@ use crate::clock::Timestamp;
 /// Constant rate.
 #[derive(Debug, Clone)]
 pub struct ConstantWorkload {
+    /// Constant rate (tuples/s).
     pub rate: f64,
+    /// Trace length (s).
     pub duration: Timestamp,
 }
 
@@ -26,8 +28,11 @@ impl Workload for ConstantWorkload {
 /// over CPU).
 #[derive(Debug, Clone)]
 pub struct RampWorkload {
+    /// Rate at t = 0.
     pub from: f64,
+    /// Rate at the end of the ramp.
     pub to: f64,
+    /// Trace length (s).
     pub duration: Timestamp,
 }
 
@@ -45,7 +50,9 @@ impl Workload for RampWorkload {
 /// Piecewise-constant steps `(start_second, rate)`, sorted by start.
 #[derive(Debug, Clone)]
 pub struct StepWorkload {
+    /// `(start_second, rate)` steps, sorted by start.
     pub steps: Vec<(Timestamp, f64)>,
+    /// Trace length (s).
     pub duration: Timestamp,
 }
 
@@ -67,6 +74,7 @@ impl Workload for StepWorkload {
 /// Replay a recorded trace (1 sample per second, clamped to the last value).
 #[derive(Debug, Clone)]
 pub struct ReplayWorkload {
+    /// One rate sample per second.
     pub samples: Vec<f64>,
 }
 

@@ -27,6 +27,7 @@ pub struct BottleneckShiftWorkload {
 }
 
 impl BottleneckShiftWorkload {
+    /// Bottleneck-shift carrier trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xB0_77_1E);
         let noise = SmoothNoise::generate(&mut rng, duration, 60, 0.9, 0.5, 0.02 * peak);
@@ -60,6 +61,7 @@ pub struct SkewAmplifyWorkload {
 }
 
 impl SkewAmplifyWorkload {
+    /// Skew-amplify carrier trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0x5_EA_AB);
         let noise = SmoothNoise::generate(&mut rng, duration, 45, 0.88, 0.6, 0.02 * peak);

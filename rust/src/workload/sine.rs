@@ -8,11 +8,17 @@ use crate::clock::Timestamp;
 /// floored at `min_rate`.
 #[derive(Debug, Clone)]
 pub struct SineWorkload {
+    /// Mean rate (tuples/s).
     pub offset: f64,
+    /// Oscillation amplitude (tuples/s).
     pub amplitude: f64,
+    /// Full periods over the duration.
     pub periods: f64,
+    /// Trace length (s).
     pub duration: Timestamp,
+    /// Lower bound applied after the sine.
     pub min_rate: f64,
+    /// Phase offset (radians).
     pub phase: f64,
 }
 

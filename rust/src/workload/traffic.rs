@@ -4,7 +4,8 @@
 //! The paper's Fig 9a shows the defining feature this generator reproduces:
 //! a moderate baseline with **two large, sharp spikes** (rush hours) where
 //! the workload rapidly rises and falls — the hardest case for autoscalers.
-//! Deterministic per seed; substitution documented in DESIGN.md §2.
+//! Deterministic per seed; substitution documented in `ARCHITECTURE.md`
+//! § Workload generators.
 
 use super::{SmoothNoise, Workload};
 use crate::clock::Timestamp;
@@ -19,6 +20,7 @@ pub struct TrafficWorkload {
 }
 
 impl TrafficWorkload {
+    /// Double-spike traffic trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0x7AFF_1C00);
         let noise = SmoothNoise::generate(&mut rng, duration, 30, 0.85, 0.15, 0.05);

@@ -36,6 +36,7 @@ pub struct DiurnalWeekWorkload {
 const DAYS: f64 = 7.0;
 
 impl DiurnalWeekWorkload {
+    /// Week-scale diurnal trace scaled to `peak` over `duration` (deterministic per seed).
     pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0x7EE6_0D21);
         let trough_frac = rng.range(0.12, 0.22);

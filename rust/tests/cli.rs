@@ -197,6 +197,128 @@ fn bench_smoke_writes_schema_valid_json() {
 }
 
 #[test]
+fn report_truncated_writes_byte_stable_artifacts() {
+    let dir = std::env::temp_dir().join(format!("daedalus-cli-report-test-{}", std::process::id()));
+    let run = || {
+        bin()
+            .args([
+                "report",
+                "--quick",
+                "--sections",
+                "fused-flink",
+                "--scenarios",
+                "flink-wordcount-sine",
+                "--duration",
+                "600",
+                "--seeds",
+                "1",
+                "--out",
+                dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap()
+    };
+    let out = run();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("paper-style evaluation report"), "{text}");
+    assert!(text.contains("flink-wordcount-sine"));
+    assert!(text.contains("vs static-12"));
+    let report1 = std::fs::read_to_string(dir.join("REPORT.md")).unwrap();
+    let csv = std::fs::read_to_string(dir.join("report.csv")).unwrap();
+    assert!(csv.contains("reduction_vs_baseline_pct"));
+    assert!(dir.join("report.json").exists());
+    // A second invocation reproduces REPORT.md byte for byte.
+    assert!(run().status.success());
+    let report2 = std::fs::read_to_string(dir.join("REPORT.md")).unwrap();
+    assert_eq!(report1, report2, "report bytes drifted across invocations");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn report_rejects_unknown_section() {
+    let out = bin()
+        .args(["report", "--quick", "--sections", "no-such-section"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("no-such-section"), "{err}");
+}
+
+#[test]
+fn bench_check_strict_gates_on_regressions_only() {
+    let dir = std::env::temp_dir().join(format!("daedalus-cli-strict-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("out.json");
+    let tracked_slow = dir.join("tracked-slow.json");
+    let tracked_fast = dir.join("tracked-fast.json");
+    // A tracked trajectory claiming the bench takes ~nothing: any real
+    // measurement is a >25 % regression.
+    std::fs::write(
+        &tracked_fast,
+        r#"{"schema":"daedalus-bench-micro/v1","entries":[{"name":"tsdb_avg_over_60s","ns_per_iter":0.001,"iters":1,"min_ns":0.001,"max_ns":0.001}]}"#,
+    )
+    .unwrap();
+    // And one claiming it takes ten minutes: never a regression.
+    std::fs::write(
+        &tracked_slow,
+        r#"{"schema":"daedalus-bench-micro/v1","entries":[{"name":"tsdb_avg_over_60s","ns_per_iter":6e11,"iters":1,"min_ns":6e11,"max_ns":6e11}]}"#,
+    )
+    .unwrap();
+    let base = |tracked: &std::path::Path, strict: bool| {
+        let mut args = vec![
+            "bench".to_string(),
+            "--smoke".into(),
+            "--filter".into(),
+            "tsdb_avg_over_60s".into(),
+            "--out".into(),
+            out_path.to_str().unwrap().into(),
+            "--check".into(),
+            tracked.to_str().unwrap().into(),
+        ];
+        if strict {
+            args.push("--strict".into());
+        }
+        bin().args(&args).output().unwrap()
+    };
+    // Report-only: the regression is printed but the run succeeds.
+    let out = base(&tracked_fast, false);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("<< regression"));
+    // --strict turns the same comparison into an exit-code gate.
+    let out = base(&tracked_fast, true);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("regressed"));
+    // No regression → --strict passes.
+    let out = base(&tracked_slow, true);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // --strict without --check is a usage error.
+    let out = bin()
+        .args([
+            "bench",
+            "--smoke",
+            "--filter",
+            "tsdb_avg_over_60s",
+            "--out",
+            out_path.to_str().unwrap(),
+            "--strict",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn selfcheck_native_backend() {
     let out = bin()
         .args(["selfcheck", "--backend", "native"])

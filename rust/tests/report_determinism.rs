@@ -1,0 +1,119 @@
+//! Report determinism: `daedalus report`'s output must be a pure function
+//! of `(sections, duration, seeds)` — byte-identical across in-process
+//! reruns and across thread counts — and is digest-pinned alongside the
+//! golden traces.
+//!
+//! Pinning mirrors `tests/golden_traces.rs`: the markdown's FNV-1a digest
+//! is compared against `tests/golden/report.digest`; a fresh checkout
+//! self-blesses (writes the digest plus the full `REPORT.md` next to it
+//! for diffing), and intentional protocol/rendering changes re-bless with
+//! `UPDATE_GOLDEN=1` plus a rationale in the PR. Digests are per-platform
+//! stable (transcendentals come from libm); the in-process double-run
+//! byte-equality holds everywhere.
+
+use std::path::PathBuf;
+
+use daedalus::experiments::evaluate::{self, EvalOptions, SectionSpec};
+use daedalus::util::fnv1a_hex;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// The truncated selection: one fused paper cell and one staged
+/// operator-elasticity cell, trimmed approach lists, short horizon.
+fn truncated() -> (Vec<SectionSpec>, EvalOptions) {
+    let mut sections = evaluate::sections_by_ids(&["fused-flink", "staged"]).unwrap();
+    sections[0].scenarios.retain(|s| s == "flink-wordcount-sine");
+    sections[0].approaches = vec!["daedalus".into(), "static-12".into()];
+    sections[1].scenarios.retain(|s| s == "flink-wordcount-bottleneck-shift");
+    sections[1].approaches = vec!["ds2".into(), "ds2-job".into()];
+    let opts = EvalOptions {
+        duration: 900,
+        seeds: vec![1, 2],
+        threads: 0,
+    };
+    (sections, opts)
+}
+
+#[test]
+fn report_is_byte_identical_across_runs_and_thread_counts_and_digest_pinned() {
+    let (sections, opts) = truncated();
+    let a = evaluate::run(&sections, &opts).unwrap();
+    // Rerun with default threading, then serially: bytes cannot differ.
+    let b = evaluate::run(&sections, &opts).unwrap();
+    let serial_opts = EvalOptions {
+        threads: 1,
+        ..opts.clone()
+    };
+    let serial = evaluate::run(&sections, &serial_opts).unwrap();
+    let md = a.markdown();
+    assert_eq!(md, b.markdown(), "in-process rerun changed REPORT.md bytes");
+    assert_eq!(md, serial.markdown(), "thread count changed REPORT.md bytes");
+    assert_eq!(a.csv(), b.csv());
+    assert_eq!(a.json(), serial.json());
+
+    // Structure: both engines' sections rendered, the reduction column and
+    // headline present, machine-readable rows parse.
+    assert!(md.contains("flink-wordcount-sine"));
+    assert!(md.contains("flink-wordcount-bottleneck-shift"));
+    assert!(md.contains("vs static-12") && md.contains("vs ds2-job"));
+    assert!(a.csv().contains("reduction_vs_baseline_pct"));
+    let json = daedalus::util::json::Json::parse(&a.json()).unwrap();
+    assert_eq!(
+        json.get("schema").unwrap().as_str().unwrap(),
+        "daedalus-report/v1"
+    );
+    // The staged granularity dividend shows up in the report itself:
+    // per-operator DS2 undercuts job-level DS2 on bottleneck-shift.
+    let staged = &a.sections[1];
+    let red = staged.reduction_vs("ds2-job", false).unwrap();
+    assert!(red > 0.0, "per-operator DS2 should save resources: {red}%");
+
+    // Digest-pin the markdown next to the golden traces (self-blessing,
+    // UPDATE_GOLDEN=1 to re-bless after an intentional change).
+    let digest = fnv1a_hex(md.as_bytes());
+    let dir = golden_dir();
+    let digest_path = dir.join("report.digest");
+    let report_path = dir.join("report.REPORT.md");
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    match std::fs::read_to_string(&digest_path) {
+        Ok(golden) if !update => {
+            assert_eq!(
+                golden.trim(),
+                digest,
+                "REPORT.md bytes drifted from {digest_path:?}; if the \
+                 protocol/rendering change is intentional, re-bless with \
+                 UPDATE_GOLDEN=1 and commit (full report at {report_path:?})"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(&digest_path, format!("{digest}\n")).unwrap();
+            std::fs::write(&report_path, &md).unwrap();
+            eprintln!("blessed report digest: {digest} -> {digest_path:?}");
+        }
+    }
+}
+
+#[test]
+fn report_write_emits_all_artifacts() {
+    let (mut sections, mut opts) = truncated();
+    // Smallest possible write check: one section, one seed.
+    sections.truncate(1);
+    opts.seeds = vec![1];
+    let eval = evaluate::run(&sections, &opts).unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "daedalus-report-write-test-{}",
+        std::process::id()
+    ));
+    let out = eval.write(dir.to_str().unwrap()).unwrap();
+    let report = std::fs::read_to_string(out.join("REPORT.md")).unwrap();
+    assert_eq!(report, eval.markdown(), "written file differs from render");
+    let csv = std::fs::read_to_string(out.join("report.csv")).unwrap();
+    // Header + one row per (scenario × approach).
+    assert_eq!(csv.trim().lines().count(), 1 + eval.sections[0].rows.len());
+    assert!(out.join("report.json").exists());
+    assert!(out.join("ecdf_flink-wordcount-sine.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
