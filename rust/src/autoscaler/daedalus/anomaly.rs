@@ -19,14 +19,20 @@ const MONITOR_TIMEOUT: u64 = 1_800;
 /// Anomaly threshold in standard deviations (§3.5: one σ).
 const SIGMA_K: f64 = 1.0;
 
+/// Workload/throughput difference at tick `now`, if both series have a
+/// sample at exactly `now` (the engine only records throughput while
+/// serving). Works on any historical tick — the event-driven manager
+/// replays skipped quiet-span ticks through this from the dense TSDB.
+pub fn diff_at(tsdb: &crate::metrics::Tsdb, now: Timestamp) -> Option<f64> {
+    let (tw, w) = tsdb.last_at(&SeriesId::global("workload_rate"), now)?;
+    let (tt, tp) = tsdb.last_at(&SeriesId::global("throughput"), now)?;
+    (tw == now && tt == now).then_some(w - tp)
+}
+
 /// Current workload/throughput difference, if both series have a fresh
-/// sample at `now` (the engine only records throughput while serving).
+/// sample at `now`.
 fn fresh_diff(view: &SimView<'_>) -> Option<f64> {
-    let (tw, w) = view
-        .tsdb
-        .last_at(&SeriesId::global("workload_rate"), view.now)?;
-    let (tt, tp) = view.tsdb.last_at(&SeriesId::global("throughput"), view.now)?;
-    (tw == view.now && tt == view.now).then_some(w - tp)
+    diff_at(view.tsdb, view.now)
 }
 
 /// Per-second background tracking of the difference statistics. Runs only
@@ -61,20 +67,36 @@ impl RecoveryMonitor {
     /// One tick of monitoring. Returns `true` when finished (recovered or
     /// timed out); on recovery the observation is folded into Knowledge.
     pub fn update(&mut self, knowledge: &mut Knowledge, view: &SimView<'_>) -> bool {
-        let now = view.now;
-        if now.saturating_sub(self.started) > MONITOR_TIMEOUT {
-            return true; // give up
-        }
-        // Downtime observation: first tick the pods serve again.
-        if self.serving_since.is_none() && view.ready {
+        self.update_at(knowledge, view.now, view.ready, fresh_diff(view))
+    }
+
+    /// [`RecoveryMonitor::update`] with the view decomposed into its three
+    /// inputs — the event-driven manager replays skipped quiet-span ticks
+    /// through this (`diff` from [`diff_at`] on the dense TSDB), making
+    /// the catch-up bit-identical to per-tick calls.
+    pub fn update_at(
+        &mut self,
+        knowledge: &mut Knowledge,
+        now: Timestamp,
+        ready: bool,
+        diff: Option<f64>,
+    ) -> bool {
+        // Downtime observation: first tick the pods serve again. Checked
+        // before the timeout so a restart that outlasts MONITOR_TIMEOUT
+        // still feeds the downtime EMA — only the *recovery* observation
+        // is abandoned on timeout.
+        if self.serving_since.is_none() && ready {
             self.serving_since = Some(now);
             knowledge.observe_downtime(self.scale_out, now.saturating_sub(self.started) as f64);
+        }
+        if now.saturating_sub(self.started) > MONITOR_TIMEOUT {
+            return true; // give up on observing the recovery
         }
         let Some(_) = self.serving_since else {
             return false;
         };
         // Anomaly check on the fresh difference.
-        let Some(d) = fresh_diff(view) else {
+        let Some(d) = diff else {
             return false;
         };
         if knowledge.anomaly.is_anomalous(d, SIGMA_K) {
@@ -161,6 +183,29 @@ mod tests {
         assert!(rec.recovery_secs >= 100.0);
         // Downtime EMA moved from 30 toward the observed 30 (unchanged).
         crate::assert_close!(k.downtime_out, 30.0, atol = 0.5);
+    }
+
+    #[test]
+    fn slow_restart_still_observes_downtime_at_timeout() {
+        // Regression: a restart that only resumes serving after
+        // MONITOR_TIMEOUT has elapsed must still feed the downtime EMA
+        // before the monitor gives up on the recovery observation.
+        let mut k = knowledge_with_normal();
+        let db = Tsdb::new();
+        let mut mon = RecoveryMonitor::start(100, true);
+        let before = k.downtime_out;
+        // Down the whole window …
+        assert!(!mon.update(&mut k, &view_at(&db, 1_000, false)));
+        // … and serving resumes only at started + 1 801 (past the timeout).
+        assert!(mon.update(&mut k, &view_at(&db, 100 + 1_801, true)));
+        assert!(
+            k.downtime_out > before,
+            "downtime EMA did not learn: {} -> {}",
+            before,
+            k.downtime_out
+        );
+        // The recovery observation itself is still abandoned.
+        assert!(k.recoveries.is_empty());
     }
 
     #[test]

@@ -115,6 +115,13 @@ pub struct Daedalus {
     analyzer: Analyzer,
     recovery_monitor: Option<RecoveryMonitor>,
     next_loop: u64,
+    /// First tick the per-second background threads (anomaly statistics,
+    /// recovery monitoring) have *not* yet processed. The event-driven
+    /// harness may skip `decide` calls inside quiet spans; `loop_gate`
+    /// replays every tick in `tracked_until..=now` from the dense TSDB so
+    /// the Welford statistics and recovery observations are bit-identical
+    /// to per-tick operation.
+    tracked_until: u64,
     /// Reusable monitor-phase buffer (worker snapshots + workload history
     /// keep their capacity across iterations — no per-loop allocation).
     monitor_buf: MonitorData,
@@ -129,6 +136,7 @@ impl Daedalus {
             analyzer: Analyzer::new(meta),
             recovery_monitor: None,
             next_loop: cfg.warmup,
+            tracked_until: 0,
             cfg,
             backend,
             monitor_buf: MonitorData::empty(),
@@ -145,12 +153,25 @@ impl Daedalus {
     /// monitoring always run; planning proceeds only on a due loop tick,
     /// outside the post-rescale grace period, with a serving job.
     fn loop_gate(&mut self, view: &SimView<'_>) -> bool {
-        anomaly::track(&mut self.knowledge, view);
-        if let Some(mon) = &mut self.recovery_monitor {
-            if mon.update(&mut self.knowledge, view) {
-                self.recovery_monitor = None;
+        // Replay the background threads over every tick since the last
+        // call. Per-tick operation makes this a single-tick range —
+        // identical to calling them inline; with the event-driven harness
+        // the skipped quiet-span ticks are reconstructed from the dense
+        // TSDB (all skipped ticks are inside ready spans, so `ready` is
+        // true for every tick but possibly the current one).
+        for u in self.tracked_until..=view.now {
+            let ready_u = if u == view.now { view.ready } else { true };
+            let diff = anomaly::diff_at(view.tsdb, u);
+            if let Some(d) = diff {
+                self.knowledge.anomaly.push_scalar(d);
+            }
+            if let Some(mon) = &mut self.recovery_monitor {
+                if mon.update_at(&mut self.knowledge, u, ready_u, diff) {
+                    self.recovery_monitor = None;
+                }
             }
         }
+        self.tracked_until = view.now + 1;
         if view.now < self.next_loop {
             return false;
         }
@@ -286,6 +307,14 @@ impl Autoscaler for Daedalus {
             > view.stage_parallelism.iter().sum::<usize>();
         self.execute_bookkeeping(view.now, scale_out);
         Some(ScalePlan::PerStage(decision.targets))
+    }
+
+    /// Next loop tick. The per-second background threads are *not* a
+    /// reason to wake up: `loop_gate` replays skipped ticks from the
+    /// dense TSDB (see `tracked_until`), so intermediate `decide` calls
+    /// carry no information the catch-up can't reconstruct.
+    fn next_decision(&self, now: crate::clock::Timestamp) -> crate::clock::Timestamp {
+        self.next_loop.max(now + 1)
     }
 }
 

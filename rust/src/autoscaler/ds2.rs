@@ -142,6 +142,20 @@ impl Ds2 {
         true
     }
 
+    /// Exact next-possible-action tick: before the decision interval (and
+    /// the post-rescale cooldown) elapse, `gate` returns `false` without
+    /// touching `last_decision`, so every intermediate `decide` call is a
+    /// pure no-op and may be skipped by the event-driven harness.
+    fn next_possible(&self, now: Timestamp) -> Timestamp {
+        let interval = self
+            .last_decision
+            .map_or(now + 1, |t| t + self.cfg.interval);
+        let cooldown = self
+            .last_rescale
+            .map_or(now + 1, |t| t + self.cfg.cooldown);
+        interval.max(cooldown).max(now + 1)
+    }
+
     /// The per-operator core: per-stage busy fractions → per-stage true
     /// rates → per-stage minimal parallelisms, with observed output/input
     /// ratios propagating the source rate down the chain. The per-stage
@@ -286,6 +300,10 @@ impl Autoscaler for Ds2 {
         };
         self.last_rescale = Some(view.now);
         Some(plan)
+    }
+
+    fn next_decision(&self, now: Timestamp) -> Timestamp {
+        self.next_possible(now)
     }
 }
 

@@ -168,6 +168,22 @@ impl Autoscaler for Hpa {
         self.last_sync = Some(view.now);
         self.evaluate(view)
     }
+
+    /// Exact next-possible-action tick. Between `now` and this tick every
+    /// `decide` call inside a ready span bails on the CPU-initialization
+    /// or sync-period gate *before* mutating `last_sync` (readiness edges
+    /// never occur inside a span — the harness runs unready phases
+    /// per-tick), so skipping those calls leaves the controller state
+    /// bit-identical.
+    fn next_decision(&self, now: crate::clock::Timestamp) -> crate::clock::Timestamp {
+        let sync = self
+            .last_sync
+            .map_or(now + 1, |t| t + self.cfg.sync_period);
+        let init = self
+            .pods_ready_since
+            .map_or(now + 1, |s| s + self.cfg.cpu_init_period);
+        sync.max(init).max(now + 1)
+    }
 }
 
 #[cfg(test)]

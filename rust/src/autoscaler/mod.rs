@@ -23,6 +23,7 @@ pub use hpa::{Hpa, HpaConfig};
 pub use phoebe::{Phoebe, PhoebeConfig};
 pub use statik::Static;
 
+use crate::clock::Timestamp;
 use crate::dsp::engine::{ScalePlan, SimView};
 
 /// A horizontal autoscaling policy.
@@ -50,5 +51,21 @@ pub trait Autoscaler {
     /// checkpoint, §4.8).
     fn wants_precheckpoint(&self) -> bool {
         false
+    }
+
+    /// Earliest future tick (strictly after `now`, the tick whose
+    /// `decide`/`decide_plan` call just returned) at which this scaler
+    /// could *possibly* act. The event-driven harness uses this to bound
+    /// quiet spans: every `decide` call at a steady-state tick in
+    /// `(now, next_decision(now))` is guaranteed to be a pure no-op
+    /// (returns `None`, mutates no internal state), so those calls may be
+    /// skipped wholesale. Scalers with per-tick background work (Daedalus'
+    /// anomaly tracking) must replay the skipped ticks themselves from the
+    /// dense TSDB when their next decision fires.
+    ///
+    /// The conservative default — a decision possible every tick —
+    /// disables span skipping for scalers that don't opt in.
+    fn next_decision(&self, now: Timestamp) -> Timestamp {
+        now + 1
     }
 }

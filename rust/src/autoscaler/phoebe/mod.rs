@@ -96,6 +96,13 @@ impl Autoscaler for Phoebe {
         true
     }
 
+    /// Exact next-possible-action tick: `decide` returns `None` without
+    /// mutating anything while `now < next_loop`, so the event-driven
+    /// harness may skip straight to the next loop tick.
+    fn next_decision(&self, now: u64) -> u64 {
+        self.next_loop.max(now + 1)
+    }
+
     fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
         if view.now < self.next_loop || !view.ready {
             return None;

@@ -29,6 +29,14 @@ impl Autoscaler for Static {
         // Only ever correct the initial deployment size.
         (view.parallelism != self.replicas).then_some(self.replicas)
     }
+
+    /// Static never acts once the deployment matches: the harness only
+    /// opens quiet spans after a `decide` that returned `None` on a ready
+    /// tick (i.e. `parallelism == replicas`), and parallelism cannot
+    /// change inside a span, so no future decision is ever due.
+    fn next_decision(&self, _now: crate::clock::Timestamp) -> crate::clock::Timestamp {
+        crate::clock::Timestamp::MAX
+    }
 }
 
 #[cfg(test)]

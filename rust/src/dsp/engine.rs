@@ -205,6 +205,27 @@ pub enum MergePolicy {
     NaiveScan,
 }
 
+/// How the experiment driver advances the simulation clock.
+///
+/// The engine itself exposes both entry points — [`Simulation::step`]
+/// (one tick) and [`Simulation::advance_quiet`] (a run of ticks with a
+/// quiet-span fast path) — and `advance_quiet` is defined to be
+/// bit-identical to the equivalent `step` loop. The mode only selects
+/// which one the harness drives, mirroring the
+/// [`MergePolicy::NaiveScan`] / [`crate::dsp::QueuePolicy::Chunked`]
+/// retained-reference pattern: `PerTick` is the reference, `EventDriven`
+/// the default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// Batch quiet spans between interesting times (autoscaler decisions,
+    /// workload knots, failure injections) through the engine fast path.
+    #[default]
+    EventDriven,
+    /// Call [`Simulation::step`] for every simulated second — the
+    /// reference driver the event-driven path is pinned against.
+    PerTick,
+}
+
 /// Min-heap ordering for `(head_time, partition_idx)` entries: earlier
 /// head time wins; the lower partition index breaks ties, reproducing the
 /// naive scan's first-lowest-index choice bit for bit.
@@ -850,6 +871,14 @@ impl Simulation {
 
     /// Advance one second of simulated time. `t` must be the next second.
     pub fn step(&mut self, t: Timestamp) {
+        self.begin_tick(t);
+        let rate = self.draw_rate(t);
+        self.produce_and_serve(t, rate);
+    }
+
+    /// Tick prologue shared by [`Self::step`] and the quiet-span fast
+    /// path: clock bookkeeping, failure injection, restart completion.
+    fn begin_tick(&mut self, t: Timestamp) {
         debug_assert!(!self.started || t == self.now + 1, "non-monotonic step");
         self.now = t;
         self.ticks += 1;
@@ -885,11 +914,21 @@ impl Simulation {
             }
             self.last_checkpoint = t;
         }
+    }
 
-        // 2. Produce into partitions (skew-weighted, noisy rate).
+    /// Draw this tick's noisy arrival rate. Exactly one RNG normal, always
+    /// drawn — the fast path reuses the value when it bails to the slow
+    /// core, so the draw order is identical in both drivers.
+    fn draw_rate(&mut self, t: Timestamp) -> f64 {
         let base_rate = self.workload.rate(t);
         let noise = (1.0 + self.rng.normal() * self.rate_noise).max(0.0);
-        let rate = base_rate * noise;
+        base_rate * noise
+    }
+
+    /// The slow (reference) tick core: produce, serve, checkpoint, global
+    /// metrics — everything after [`Self::begin_tick`]/[`Self::draw_rate`].
+    fn produce_and_serve(&mut self, t: Timestamp, rate: f64) {
+        // 2. Produce into partitions (skew-weighted, noisy rate).
         for (p, w) in self.partitions.iter_mut().zip(&self.partition_weights) {
             p.produce(t as f64 + 0.5, rate * w);
         }
@@ -923,6 +962,381 @@ impl Simulation {
             self.tsdb
                 .record_h(self.handles.stage_queue[s], t, self.stages[s].queue_backlog);
         }
+    }
+
+    /// Advance ticks `from..until`, bit-identically to calling
+    /// [`Self::step`] for each of them, batching *quiet* ticks through a
+    /// fast path (the event-driven engine core).
+    ///
+    /// A tick is quiet when the deployment is steady — serving, no
+    /// backlog anywhere, and this tick's whole arrival mass fits every
+    /// budget it meets on the reference path (per-worker FIFO budgets on
+    /// the fused pool; per-stage capacity and backpressure allowances on
+    /// the staged pipeline). On such a tick the reference tick loop is a
+    /// closed-form update: everything produced is consumed in the same
+    /// tick, latency is pure service time, and the bookkeeping series
+    /// (parallelism, allocated workers, per-stage parallelism/queue) are
+    /// constant. The fast path integrates produced/served mass, latency
+    /// contributions, worker-seconds and the dense per-tick series with
+    /// the reference's own arithmetic (same operation order, same RNG
+    /// draws) and defers only the constant series, which are bulk-filled
+    /// via [`crate::metrics::Tsdb::record_run_h`] when the span ends.
+    ///
+    /// Any tick that is not quiet — backlog, restart in flight, rate
+    /// spike past a budget, failure injection inside the range — falls
+    /// back to the reference core for that tick, so callers may pass any
+    /// range: correctness never depends on the caller's horizon choice.
+    pub fn advance_quiet(&mut self, from: Timestamp, until: Timestamp) {
+        // Constant-series values captured when a deferred run starts; a
+        // run only extends while the cluster is steady, so they cannot
+        // change before the flush.
+        let mut deferred: u64 = 0;
+        let mut par = 0.0;
+        let mut alloc = 0.0;
+        let mut stage_fill: Vec<(f64, f64)> = Vec::new();
+        for t in from..until {
+            self.begin_tick(t);
+            let rate = self.draw_rate(t);
+            if self.try_quiet_tick(t, rate) {
+                if deferred == 0 {
+                    par = self.cluster.parallelism() as f64;
+                    alloc = self.allocated_workers() as f64;
+                    stage_fill.clear();
+                    stage_fill.extend(
+                        self.stages
+                            .iter()
+                            .zip(&self.stage_replicas)
+                            .map(|(st, &n)| (n as f64, st.queue_backlog)),
+                    );
+                }
+                deferred += 1;
+            } else {
+                if deferred > 0 {
+                    self.flush_quiet_fills(t - deferred, deferred, par, alloc, &stage_fill);
+                    deferred = 0;
+                }
+                self.produce_and_serve(t, rate);
+            }
+        }
+        if deferred > 0 {
+            self.flush_quiet_fills(until - deferred, deferred, par, alloc, &stage_fill);
+        }
+    }
+
+    /// Bulk-fill the deferred constant series for the quiet run starting
+    /// at `from` and spanning `n` ticks.
+    fn flush_quiet_fills(
+        &mut self,
+        from: Timestamp,
+        n: u64,
+        par: f64,
+        alloc: f64,
+        stage_fill: &[(f64, f64)],
+    ) {
+        let n = n as usize;
+        self.tsdb.record_run_h(self.handles.parallelism, from, n, par);
+        self.tsdb.record_run_h(self.handles.allocated, from, n, alloc);
+        for (s, &(stage_par, backlog)) in stage_fill.iter().enumerate() {
+            self.tsdb
+                .record_run_h(self.handles.stage_par[s], from, n, stage_par);
+            self.tsdb
+                .record_run_h(self.handles.stage_queue[s], from, n, backlog);
+        }
+    }
+
+    /// Attempt the quiet fast path for tick `t`. Returns `false` (having
+    /// committed nothing) whenever the reference core could behave in any
+    /// way other than the closed-form steady-tick update.
+    fn try_quiet_tick(&mut self, t: Timestamp, rate: f64) -> bool {
+        if !self.cluster.ready() || self.partitions.iter().any(|p| p.queue_len() != 0) {
+            return false;
+        }
+        match self.stage_model {
+            StageModel::Fused => self.try_quiet_tick_fused(t, rate),
+            StageModel::Staged => self.try_quiet_tick_staged(t, rate),
+        }
+    }
+
+    /// Quiet fast path, fused pool: phase 1 replays `serve`'s per-worker
+    /// budget chains (heads all at `t + 0.5`, so the heap merge visits a
+    /// worker's strided partitions in ascending index order) purely; if
+    /// every chunk fits, phase 2 commits the same arithmetic wholesale.
+    fn try_quiet_tick_fused(&mut self, t: Timestamp, rate: f64) -> bool {
+        let n = self.cluster.serving_replicas();
+        if n == 0 {
+            return false;
+        }
+        let base_cap = self.fused_base_capacity(t);
+        let np = self.partitions.len();
+        // Phase 1: feasibility. A chunk is consumed whole iff the budget
+        // is still live (> 1e-9) and covers it entirely — any partial
+        // take or skipped chunk leaves backlog, which is the slow core's
+        // business.
+        for w in 0..n {
+            let mut budget = self.workers[w].capacity(base_cap);
+            let mut pi = w;
+            while pi < np {
+                let a = rate * self.partition_weights[pi];
+                if a > 0.0 {
+                    if budget <= 1e-9 || a > budget {
+                        return false;
+                    }
+                    budget -= a;
+                }
+                pi += n;
+            }
+        }
+        // Phase 2: commit, operation for operation what `serve` would do
+        // to the same inputs.
+        let t05 = t as f64 + 0.5;
+        let service_ms = self.job.service_latency_ms(n, rate);
+        self.tsdb.record_h(self.handles.workload, t, rate);
+        let mut scratch = std::mem::take(&mut self.scratch_lat);
+        scratch.clear();
+        for w in 0..n {
+            let capacity = self.workers[w].capacity(base_cap);
+            let mut budget = capacity;
+            let mut pi = w;
+            while pi < np {
+                let a = rate * self.partition_weights[pi];
+                if a > 0.0 {
+                    self.partitions[pi].settle_quiet(t05, a);
+                    budget -= a;
+                    // Same-tick completion: wait is exactly zero.
+                    self.latencies.push(service_ms, a);
+                    scratch.push((service_ms, a));
+                }
+                pi += n;
+            }
+            let processed = capacity - budget;
+            let util = processed / capacity;
+            let cpu = (self.profile.cpu_for_utilization(util)
+                * (1.0 + self.rng.normal() * self.profile.cpu_noise))
+                .clamp(0.0, 1.0);
+            self.workers[w].last_throughput = processed;
+            self.workers[w].last_cpu = cpu;
+            self.tsdb.record_h(self.handles.worker_tput[w], t, processed);
+            self.tsdb.record_h(self.handles.worker_cpu[w], t, cpu);
+        }
+        self.record_latency_aggregates(t, &mut scratch);
+        self.scratch_lat = scratch;
+        let tput: f64 = self.workers[..n].iter().map(|w| w.last_throughput).sum();
+        self.tsdb.record_h(self.handles.throughput, t, tput);
+        self.finish_quiet_tick(t);
+        true
+    }
+
+    /// Quiet fast path, staged pipeline: the whole per-tick cascade
+    /// (source replicas drain their strided partitions, every stage fully
+    /// absorbs its upstream's same-tick output) collapses to per-stage
+    /// mass folds. Inter-stage queues are left untouched — a bucket ring
+    /// that is pushed and fully drained within one tick ends empty
+    /// (`span == 0`), which is observationally identical to never touching
+    /// it — so this path requires the [`QueuePolicy::BucketRing`] default
+    /// (the chunked reference queue always takes the slow core).
+    fn try_quiet_tick_staged(&mut self, t: Timestamp, rate: f64) -> bool {
+        let n_stages = self.stages.len();
+        if n_stages == 0
+            || self.queue_policy != QueuePolicy::BucketRing
+            || self.stage_target.is_some()
+            || self
+                .stages
+                .iter()
+                .any(|s| !s.queue.is_empty() || s.queue_backlog != 0.0)
+        {
+            return false;
+        }
+        let np = self.partitions.len();
+        let mut eff = std::mem::take(&mut self.scratch_eff);
+        eff.clear();
+        for s in 0..n_stages {
+            let e = self.stage_effective_capacity(s);
+            eff.push(e);
+        }
+        // Phase 1: feasibility + the inter-stage mass folds. `m_in` is
+        // the mass a stage drains (for stage 0: the per-chunk arrivals),
+        // `m_out` the bucket its pushes would accumulate downstream —
+        // folded per chunk, exactly like the queue would.
+        let sel0 = self.topology.selectivity_at(0, self.drift.as_ref(), t);
+        let unit0 = 1e6 / self.stages[0].op.cost_us.max(1e-9);
+        let skew0 = self.stage_skew_factor(0, self.stage_replicas[0]);
+        let mut m_out = 0.0;
+        {
+            let n0 = self.stage_replicas[0];
+            let allowance0 = self.stage_allowance(0, sel0, &eff);
+            let mut remaining_allowance = allowance0;
+            for r in 0..n0 {
+                let cap_r = self.stages[0].workers[r].capacity(unit0) * skew0;
+                let budget0 = cap_r.min(remaining_allowance);
+                let mut budget = budget0;
+                let mut pi = r;
+                while pi < np {
+                    let a = rate * self.partition_weights[pi];
+                    if a > 0.0 {
+                        if budget <= 1e-9 || a > budget {
+                            self.scratch_eff = eff;
+                            return false;
+                        }
+                        budget -= a;
+                        m_out += a * sel0;
+                    }
+                    pi += n0;
+                }
+                if remaining_allowance.is_finite() {
+                    let processed_r = budget0 - budget;
+                    remaining_allowance = (remaining_allowance - processed_r).max(0.0);
+                }
+            }
+        }
+        for s in 1..n_stages {
+            let sel = self.topology.selectivity_at(s, self.drift.as_ref(), t);
+            let budget0 = eff[s].min(self.stage_allowance(s, sel, &eff));
+            if m_out > 0.0 && (budget0 <= 1e-9 || m_out > budget0) {
+                self.scratch_eff = eff;
+                return false;
+            }
+            m_out *= sel;
+        }
+        // Phase 2: commit. Recompute the folds stage by stage with the
+        // reference's own expression order, now also drawing the
+        // per-replica CPU normals in (stage, replica) order.
+        let t05 = t as f64 + 0.5;
+        let job_par = self.cluster.parallelism();
+        let service_ms = self.job.service_latency_ms(job_par, rate);
+        let max_r = self.max_replicas();
+        self.tsdb.record_h(self.handles.workload, t, rate);
+        let mut scratch = std::mem::take(&mut self.scratch_lat);
+        let mut replica_tput = std::mem::take(&mut self.scratch_replica);
+        scratch.clear();
+        let mut m_in = 0.0;
+        for s in 0..n_stages {
+            let n_s = self.stage_replicas[s];
+            let sel = self.topology.selectivity_at(s, self.drift.as_ref(), t);
+            let unit_cap = 1e6 / self.stages[s].op.cost_us.max(1e-9);
+            let skew = self.stage_skew_factor(s, n_s);
+            let eff_total = eff[s];
+            let allowance = self.stage_allowance(s, sel, &eff);
+            let processed;
+            if s == 0 {
+                replica_tput.clear();
+                let mut remaining_allowance = allowance;
+                // The sink case (single-stage topology) records one
+                // latency sample per consumed chunk, like the reference.
+                let sink = n_stages == 1;
+                let mut total = 0.0;
+                let mut m_next = 0.0;
+                for r in 0..n_s {
+                    let cap_r = self.stages[0].workers[r].capacity(unit_cap) * skew;
+                    let budget0 = cap_r.min(remaining_allowance);
+                    let mut budget = budget0;
+                    let mut pi = r;
+                    while pi < np {
+                        let a = rate * self.partition_weights[pi];
+                        if a > 0.0 {
+                            self.partitions[pi].settle_quiet(t05, a);
+                            budget -= a;
+                            total += a;
+                            m_next += a * sel;
+                            if sink {
+                                self.latencies.push(service_ms, a);
+                                scratch.push((service_ms, a));
+                            }
+                        }
+                        pi += n_s;
+                    }
+                    let processed_r = budget0 - budget;
+                    replica_tput.push(processed_r);
+                    if remaining_allowance.is_finite() {
+                        remaining_allowance = (remaining_allowance - processed_r).max(0.0);
+                    }
+                }
+                processed = total;
+                m_in = m_next;
+            } else {
+                processed = m_in;
+                if s + 1 == n_stages {
+                    if processed > 0.0 {
+                        self.latencies.push(service_ms, processed);
+                        scratch.push((service_ms, processed));
+                    }
+                } else {
+                    m_in = processed * sel;
+                }
+            }
+            let busy = if eff_total > 0.0 {
+                (processed / eff_total).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            {
+                let stage = &mut self.stages[s];
+                stage.consumed += processed;
+                stage.emitted += processed * sel;
+                stage.last_processed = processed;
+            }
+            self.tsdb.record_h(self.handles.stage_tput[s], t, processed);
+            self.tsdb.record_h(self.handles.stage_busy[s], t, busy);
+            for r in 0..n_s {
+                let tput_r = if s == 0 {
+                    replica_tput[r]
+                } else {
+                    processed * self.stage_share(s, n_s, r)
+                };
+                let cap_nominal = self.stages[s].workers[r].capacity(unit_cap);
+                let util = if cap_nominal > 0.0 {
+                    (tput_r / cap_nominal).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                let cpu = (self.profile.cpu_for_utilization(util)
+                    * (1.0 + self.rng.normal() * self.profile.cpu_noise))
+                    .clamp(0.0, 1.0);
+                let w = &mut self.stages[s].workers[r];
+                w.last_throughput = tput_r;
+                w.last_cpu = cpu;
+                let flat = s * max_r + r;
+                self.tsdb.record_h(self.handles.worker_tput[flat], t, tput_r);
+                self.tsdb.record_h(self.handles.worker_cpu[flat], t, cpu);
+            }
+        }
+        let source_tput = self.stages[0].last_processed;
+        self.tsdb.record_h(self.handles.throughput, t, source_tput);
+        self.record_latency_aggregates(t, &mut scratch);
+        self.scratch_lat = scratch;
+        self.scratch_replica = replica_tput;
+        self.scratch_eff = eff;
+        self.finish_quiet_tick(t);
+        true
+    }
+
+    /// Stage `s`'s backpressure allowance in input tuples — how much it
+    /// may process before the downstream queue (bounded to
+    /// `BACKPRESSURE_SECS` of its effective capacity) would overflow.
+    /// Mirrors the expression in [`Self::serve_staged`].
+    fn stage_allowance(&self, s: usize, sel: f64, eff: &[f64]) -> f64 {
+        if s + 1 < self.stages.len() {
+            let free =
+                (BACKPRESSURE_SECS * eff[s + 1] - self.stages[s + 1].queue_backlog).max(0.0);
+            if sel > 1e-12 {
+                free / sel
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Tail of a committed quiet tick: checkpoint completion, the dense
+    /// lag series (all queues empty after a quiet tick, but the lag fold
+    /// runs the same summation as the reference) and worker-seconds.
+    fn finish_quiet_tick(&mut self, t: Timestamp) {
+        if t - self.last_checkpoint >= self.profile.checkpoint_interval {
+            self.complete_checkpoint(t);
+        }
+        let lag: f64 = self.partitions.iter().map(|p| p.lag()).sum();
+        self.tsdb.record_h(self.handles.lag, t, lag);
+        self.worker_seconds += self.allocated_workers() as f64;
     }
 
     /// Rebuild the per-worker partition assignment lists for `n` workers,
@@ -1256,6 +1670,24 @@ impl Simulation {
         self.cluster.phase
     }
 
+    /// The workload's next piecewise knot strictly after `t` — a pure
+    /// *scheduling hint* for event-driven drivers (the engine re-evaluates
+    /// the rate every tick, so a missed knot only makes a tick infeasible
+    /// for the fast path, never incorrect).
+    pub fn next_knot(&self, t: Timestamp) -> Timestamp {
+        self.workload.next_knot(t)
+    }
+
+    /// First scheduled failure injection strictly after `t`, if any —
+    /// the other horizon bound for event-driven drivers. Like
+    /// [`Self::next_knot`] this is advisory: [`Self::advance_quiet`]
+    /// injects failures itself and falls back to the reference core for
+    /// the affected ticks.
+    pub fn next_failure_after(&self, t: Timestamp) -> Option<Timestamp> {
+        let i = self.failures.partition_point(|&f| f <= t);
+        self.failures.get(i).copied()
+    }
+
     /// Total backlog: unconsumed source tuples, plus (staged) the bounded
     /// in-flight contents of the inter-stage queues in their stages' input
     /// units.
@@ -1548,6 +1980,71 @@ mod tests {
         crate::assert_close!(sim.avg_workers(), 4.0, atol = 1e-9);
         // Ticks 0..=1000 inclusive → 1001 ticks at 4 workers.
         crate::assert_close!(sim.worker_seconds(), 4_004.0, atol = 1e-6);
+    }
+
+    /// `advance_quiet` over the whole horizon must be indistinguishable
+    /// from per-tick stepping: same latency histogram, same TSDB (every
+    /// series, every sample), same conserved masses, same RNG stream.
+    fn assert_advance_quiet_agrees(mut a: Simulation, mut b: Simulation, upto: Timestamp) {
+        run(&mut a, upto);
+        b.advance_quiet(0, upto + 1);
+        assert_eq!(a.latencies(), b.latencies());
+        assert_eq!(a.tsdb(), b.tsdb());
+        assert_eq!(a.total_consumed().to_bits(), b.total_consumed().to_bits());
+        assert_eq!(a.total_backlog().to_bits(), b.total_backlog().to_bits());
+        assert_eq!(a.worker_seconds().to_bits(), b.worker_seconds().to_bits());
+        assert_eq!(a.rescale_log, b.rescale_log);
+        a.check_invariants();
+        b.check_invariants();
+    }
+
+    #[test]
+    fn advance_quiet_agrees_bitwise_when_underloaded() {
+        // 4 workers ≈ 22k cap vs 10k load: every tick is quiet, the whole
+        // run takes the fast path (spot-checked via worker_seconds above).
+        assert_advance_quiet_agrees(sim_with(10_000.0, 4, 9), sim_with(10_000.0, 4, 9), 600);
+    }
+
+    #[test]
+    fn advance_quiet_agrees_bitwise_when_saturated() {
+        // 3 workers ≈ 16.5k cap vs 18k load: backlog everywhere, the fast
+        // path must bail every tick and defer to the reference core.
+        assert_advance_quiet_agrees(sim_with(18_000.0, 3, 9), sim_with(18_000.0, 3, 9), 400);
+    }
+
+    #[test]
+    fn advance_quiet_agrees_bitwise_across_failure_and_noise() {
+        // Mixed run: rate noise, a failure injected mid-range (restart,
+        // replay, catch-up — all inside the advance_quiet window), then a
+        // return to quiet stretches.
+        let mk = || {
+            let cfg = SimConfig {
+                partitions: 12,
+                initial_replicas: 4,
+                seed: 11,
+                rate_noise: 0.02,
+                failures: vec![200],
+                ..SimConfig::base(
+                    EngineProfile::flink(),
+                    JobProfile::wordcount(),
+                    Box::new(ConstantWorkload {
+                        rate: 10_000.0,
+                        duration: 10_000,
+                    }),
+                )
+            };
+            Simulation::new(cfg)
+        };
+        assert_advance_quiet_agrees(mk(), mk(), 700);
+    }
+
+    #[test]
+    fn advance_quiet_agrees_bitwise_staged() {
+        // Staged pipeline, underloaded: the staged fast path (mass folds,
+        // untouched bucket rings) must match the reference cascade.
+        assert_advance_quiet_agrees(staged_sim(10_000.0, 2, 21), staged_sim(10_000.0, 2, 21), 600);
+        // Staged, near saturation: mixed fast/slow ticks.
+        assert_advance_quiet_agrees(staged_sim(60_000.0, 1, 22), staged_sim(60_000.0, 1, 22), 400);
     }
 
     fn staged_sim(rate: f64, replicas: usize, seed: u64) -> Simulation {

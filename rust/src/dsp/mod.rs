@@ -28,7 +28,8 @@ pub mod worker;
 
 pub use cluster::{Cluster, Phase};
 pub use engine::{
-    MergePolicy, RescaleEvent, ScalePlan, SimConfig, Simulation, StageFlow, StageModel,
+    EngineMode, MergePolicy, RescaleEvent, ScalePlan, SimConfig, Simulation, StageFlow,
+    StageModel,
 };
 pub use partition::Partition;
 pub use profile::EngineProfile;

@@ -139,6 +139,26 @@ impl Partition {
         Some(chunk)
     }
 
+    /// Quiet-tick fast path: produce `amount` at time `t` and consume all
+    /// of it in the same tick. Callable only with an empty queue; bitwise
+    /// equivalent to `produce(t, amount)` followed by a `consume_head`
+    /// whose budget covers the whole chunk (the produced chunk is the
+    /// queue head, `take = amount`, `amount − amount == 0.0` pops it), so
+    /// offsets and the exactly-once pending log evolve identically to the
+    /// per-tick reference.
+    pub fn settle_quiet(&mut self, t: f64, amount: f64) {
+        debug_assert!(self.queue.is_empty(), "settle_quiet needs an empty queue");
+        if amount <= 0.0 {
+            return;
+        }
+        self.produced += amount;
+        self.consumed += amount;
+        match self.pending.back_mut() {
+            Some(last) if (last.t - t).abs() < 1e-9 => last.amount += amount,
+            _ => self.pending.push_back(Chunk { t, amount }),
+        }
+    }
+
     /// A checkpoint completed: committed catches up to consumed.
     pub fn checkpoint(&mut self) {
         self.pending.clear();
@@ -283,6 +303,32 @@ mod tests {
         p.produce(1.0, -5.0);
         assert_eq!(p.backlog(), 0.0);
         p.check_invariants();
+    }
+
+    #[test]
+    fn settle_quiet_matches_produce_then_full_consume_bitwise() {
+        let mut fast = Partition::new();
+        let mut slow = Partition::new();
+        let amounts = [137.25, 0.0, 412.5, 13.0625, -1.0, 981.125];
+        for (i, &a) in amounts.iter().enumerate() {
+            let t = i as f64 + 0.5;
+            fast.settle_quiet(t, a);
+            slow.produce(t, a);
+            slow.consume_head(f64::INFINITY);
+            assert_eq!(fast.produced.to_bits(), slow.produced.to_bits());
+            assert_eq!(fast.consumed.to_bits(), slow.consumed.to_bits());
+            assert_eq!(fast.queue_len(), 0);
+            assert_eq!(slow.queue_len(), 0);
+        }
+        // The pending (exactly-once) logs agree too: a rewind replays the
+        // same chunks either way.
+        fast.rewind();
+        slow.rewind();
+        assert_eq!(fast.queue_len(), slow.queue_len());
+        let f: Vec<Chunk> = fast.consume(f64::INFINITY);
+        let s: Vec<Chunk> = slow.consume(f64::INFINITY);
+        assert_eq!(f, s);
+        fast.check_invariants();
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::autoscaler::{
     Phoebe, PhoebeConfig, Static,
 };
 use crate::clock::Timestamp;
-use crate::dsp::{EngineProfile, SimConfig, Simulation, StageModel};
+use crate::dsp::{EngineMode, EngineProfile, SimConfig, Simulation, StageModel};
 use crate::jobs::{JobProfile, SelectivityDrift};
 use crate::metrics::SeriesId;
 use crate::runtime::ComputeBackend;
@@ -145,6 +145,10 @@ pub struct Experiment {
     pub zipf_override: Option<f64>,
     /// p95-latency SLO bound (ms) for the violation-fraction accounting.
     pub slo_ms: f64,
+    /// Event-driven quiet-span driver (default) or the per-tick reference
+    /// loop it is pinned against (see `ARCHITECTURE.md` § Event-driven
+    /// engine core).
+    pub engine_mode: EngineMode,
 }
 
 impl Experiment {
@@ -173,6 +177,7 @@ impl Experiment {
             selectivity_drift: None,
             zipf_override: None,
             slo_ms: DEFAULT_SLO_MS,
+            engine_mode: EngineMode::default(),
         }
     }
 
@@ -315,14 +320,12 @@ impl Experiment {
         let lag_id = SeriesId::global("consumer_lag");
         let p95_id = SeriesId::global("latency_p95_ms");
         let stride = trace_stride.max(1);
-        for t in 0..self.duration {
-            sim.step(t);
-            if let Some(plan) = scaler.decide_plan(&sim.view()) {
-                if scaler.wants_precheckpoint() {
-                    sim.checkpoint_now();
-                }
-                sim.request_rescale_plan(&plan);
-            }
+        // One closure for the per-tick observation row, so the per-tick
+        // loop and the event-driven span catch-up emit identical samples.
+        let sample = |sim: &Simulation,
+                          t: Timestamp,
+                          parallelism_series: &mut Vec<(Timestamp, usize)>,
+                          trace: &mut RunTrace| {
             if t % self.sample_stride == 0 {
                 parallelism_series.push((t, sim.parallelism()));
             }
@@ -332,6 +335,46 @@ impl Experiment {
                 let p95 = db.last_at(&p95_id, t).map(|(_, v)| v).unwrap_or(0.0);
                 trace.record(t, sim.parallelism(), lag, p95);
             }
+        };
+        let mut t = 0;
+        while t < self.duration {
+            sim.step(t);
+            if let Some(plan) = scaler.decide_plan(&sim.view()) {
+                if scaler.wants_precheckpoint() {
+                    sim.checkpoint_now();
+                }
+                sim.request_rescale_plan(&plan);
+            }
+            sample(&sim, t, &mut parallelism_series, &mut trace);
+            let mut next = t + 1;
+            // Event-driven driver: while the deployment is steady, skip
+            // ahead to the next *interesting* time — the autoscaler's next
+            // possible action ([`Autoscaler::next_decision`] is exact: the
+            // skipped `decide` calls are pure no-ops), the workload's next
+            // piecewise knot (a hint; a rate jump inside the span just
+            // bails the engine fast path), the next failure injection, or
+            // the end of the run. The engine batches the covered quiet
+            // ticks; observation rows are emitted post-hoc from the same
+            // dense series the per-tick loop reads, so both modes produce
+            // identical traces.
+            if self.engine_mode == EngineMode::EventDriven && sim.ready() && next < self.duration
+            {
+                let mut horizon = self
+                    .duration
+                    .min(scaler.next_decision(t))
+                    .min(sim.next_knot(t));
+                if let Some(f) = sim.next_failure_after(t) {
+                    horizon = horizon.min(f);
+                }
+                if horizon > next {
+                    sim.advance_quiet(next, horizon);
+                    for u in next..horizon {
+                        sample(&sim, u, &mut parallelism_series, &mut trace);
+                    }
+                    next = horizon;
+                }
+            }
+            t = next;
         }
         for ev in &sim.rescale_log {
             trace.record_rescale(ev);
@@ -567,6 +610,7 @@ mod tests {
             selectivity_drift: None,
             zipf_override: None,
             slo_ms: DEFAULT_SLO_MS,
+            engine_mode: EngineMode::EventDriven,
         };
         let res = exp.run(&|_seed| {
             Box::new(SineWorkload::paper_default(20_000.0, 1_200))
@@ -585,5 +629,44 @@ mod tests {
         assert!((0.0..=1.0).contains(&s.slo_violation_frac));
         // Every rescale produced a recovery measurement.
         assert_eq!(h.recovery_secs.len() as f64, h.rescales * 2.0);
+    }
+
+    /// The event-driven driver is pinned to the per-tick reference loop:
+    /// identical traces (digest equality — every sampled row), identical
+    /// pooled results down to the bit. The registry-wide version of this
+    /// pin lives in `tests/event_driven.rs`.
+    #[test]
+    fn engine_modes_produce_identical_runs() {
+        let run = |mode: EngineMode, approach: Approach| {
+            let mut exp = Experiment::paper(
+                "mode-pin",
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                ComputeBackend::native(),
+                1_800,
+            );
+            exp.engine_mode = mode;
+            exp.run_single_traced(
+                &approach,
+                7,
+                Box::new(SineWorkload::paper_default(20_000.0, 1_800)),
+                30,
+            )
+        };
+        for approach in [Approach::Static(6), Approach::Hpa(0.8)] {
+            let (a, ta) = run(EngineMode::PerTick, approach.clone());
+            let (b, tb) = run(EngineMode::EventDriven, approach.clone());
+            assert_eq!(ta.digest(), tb.digest(), "{} trace diverged", approach.label());
+            assert_eq!(
+                a.worker_seconds.to_bits(),
+                b.worker_seconds.to_bits(),
+                "{} worker-seconds diverged",
+                approach.label()
+            );
+            assert_eq!(a.latencies, b.latencies);
+            assert_eq!(a.parallelism_series, b.parallelism_series);
+            assert_eq!(a.final_backlog.to_bits(), b.final_backlog.to_bits());
+            assert_eq!(a.rescales, b.rescales);
+        }
     }
 }

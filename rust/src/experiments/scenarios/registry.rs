@@ -170,11 +170,12 @@ impl Scenario {
                 (StageModel::Staged, Some(drift), None)
             }
             ShapeKind::SkewAmplify => (StageModel::Staged, None, Some(1.1)),
-            // The week-scale horizon runs the staged engine (no drift, no
-            // skew override): it is the long-horizon sweep substrate the
-            // bucket-ring queues and columnar TSDB exist for, so the cell
-            // exercises them end to end.
-            ShapeKind::DiurnalWeek => (StageModel::Staged, None, None),
+            // The week- and month-scale horizons run the staged engine (no
+            // drift, no skew override): they are the long-horizon sweep
+            // substrate the bucket-ring queues, columnar TSDB and
+            // event-driven quiet-span core exist for, so the cells
+            // exercise them end to end.
+            ShapeKind::DiurnalWeek | ShapeKind::DiurnalMonth => (StageModel::Staged, None, None),
             _ => (StageModel::Fused, None, None),
         }
     }
@@ -228,18 +229,21 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The curated built-in matrix (21 scenarios): the six paper
+    /// The curated built-in matrix (22 scenarios): the six paper
     /// engine × job cells on their default traces, the three stress shapes
     /// on several cells, two failure-injection schedules, four
     /// staged-engine operator-elasticity cells (`bottleneck-shift`,
     /// `skew-amplify`), two week-scale `diurnal-week` cells (staged
-    /// engine; real days at `--duration 604800`), and the Fig-11 Phoebe
+    /// engine; real days at `--duration 604800`), one month-scale
+    /// `diurnal-month` cell (real days at `--duration 2592000`, the
+    /// event-driven engine's flagship horizon), and the Fig-11 Phoebe
     /// comparison cell (`flink-ysb-sine`, 18-worker ceiling).
     pub fn builtin(duration: Timestamp, seeds: &[u64]) -> Self {
         use EngineKind::{Flink, KStreams};
         use JobKind::{Traffic, WordCount, Ysb};
         use ShapeKind::{
-            BottleneckShift, DiurnalDrift, DiurnalWeek, FlashCrowd, OutageBackfill, SkewAmplify,
+            BottleneckShift, DiurnalDrift, DiurnalMonth, DiurnalWeek, FlashCrowd, OutageBackfill,
+            SkewAmplify,
         };
 
         let s = |engine, job: JobKind, shape, failures| {
@@ -279,6 +283,11 @@ impl ScenarioRegistry {
             // `--duration 604800` for real days (CI smokes it truncated).
             s(Flink, WordCount, DiurnalWeek, FailurePlan::None),
             s(KStreams, Ysb, DiurnalWeek, FailurePlan::None),
+            // Month-scale horizon (30 diurnal cycles × weekly rhythm ×
+            // growth drift) — the quiet-span engine's flagship cell: run
+            // with `--duration 2592000` for real days (CI smokes it
+            // truncated through the real CLI).
+            s(Flink, WordCount, DiurnalMonth, FailurePlan::None),
         ];
         // The paper's Fig-11 Phoebe comparison: YSB on the sine trace,
         // 18-worker ceiling, Phoebe's offline profiling cost accounted
@@ -386,9 +395,13 @@ mod tests {
         assert!(sa.selectivity_drift.is_none());
         assert_eq!(sa.zipf_override, Some(1.1));
 
-        // The week-scale cells run the staged engine without drift/skew
-        // overrides, on both engines.
-        for name in ["flink-wordcount-diurnal-week", "kstreams-ysb-diurnal-week"] {
+        // The week- and month-scale cells run the staged engine without
+        // drift/skew overrides.
+        for name in [
+            "flink-wordcount-diurnal-week",
+            "kstreams-ysb-diurnal-week",
+            "flink-wordcount-diurnal-month",
+        ] {
             let dw = reg.get(name).unwrap();
             assert_eq!(dw.stage_model, StageModel::Staged, "{name}");
             assert!(dw.selectivity_drift.is_none() && dw.zipf_override.is_none());

@@ -152,6 +152,14 @@ impl SeriesWindow {
     /// recorded at or before a previous call's `now` lands behind the
     /// cursor and is never observed — that is where the bit-identity with
     /// the stateless snapshot functions would end.
+    ///
+    /// Bulk appends are fine under the same clause: the event-driven
+    /// engine defers constant bookkeeping series during a quiet span and
+    /// bulk-fills them via [`Tsdb::record_run_h`] *before* any slow-core
+    /// tick and before the span-ending autoscaler decision, so every
+    /// deferred sample still lands strictly ahead of the first monitor
+    /// read that covers it (pinned by
+    /// `stage_monitor_tolerates_bulk_run_appends` below).
     fn advance(&mut self, db: &Tsdb, from: Timestamp, now: Timestamp) -> bool {
         let Some(h) = self.handle else { return false };
         let lo = self.cursor.max(from);
@@ -573,6 +581,62 @@ mod tests {
             assert_eq!(got, want, "now={now}");
         }
         assert_eq!(got.len(), 3);
+    }
+
+    /// Pin for the bulk-append clause in [`SeriesWindow::advance`]: the
+    /// event-driven engine defers the constant series (`stage_parallelism`,
+    /// `stage_queue`) during a quiet span and bulk-fills them with
+    /// [`Tsdb::record_run_h`] right before the next monitor read. As long
+    /// as every deferred sample lands ahead of the first `now` covering it,
+    /// the incremental monitor must stay bit-identical to the stateless
+    /// snapshots — and to a store filled one tick at a time.
+    #[test]
+    fn stage_monitor_tolerates_bulk_run_appends() {
+        let n_stages = 2usize;
+        let busy = |s: usize, t: u64| 0.25 + 0.1 * ((t * (s as u64 + 2)) % 11) as f64 / 11.0;
+        let tput = |s: usize, t: u64| 800.0 + (t % 17) as f64 * (s + 1) as f64;
+        // Constant within each quiet span, different across spans.
+        let par = |seg: usize, s: usize| (seg + s + 1) as f64;
+        let queue = |seg: usize, s: usize| (seg * 3 + s) as f64 * 0.5;
+
+        let mut bulk = Tsdb::new();
+        let mut tick = Tsdb::new();
+        let par_h: Vec<_> = (0..n_stages)
+            .map(|s| bulk.handle(SeriesId::stage("stage_parallelism", s)))
+            .collect();
+        let queue_h: Vec<_> = (0..n_stages)
+            .map(|s| bulk.handle(SeriesId::stage("stage_queue", s)))
+            .collect();
+
+        let mut mon = StageMonitor::new(60);
+        let mut got = Vec::new();
+        let mut from = 0u64;
+        // Span boundaries double as monitor-read points, mirroring the
+        // harness: fill [from, now], read at `now`, repeat.
+        for (seg, &now) in [40u64, 95, 96, 180, 299].iter().enumerate() {
+            let n = (now - from + 1) as usize;
+            for s in 0..n_stages {
+                // Dense series are recorded per tick on both stores.
+                for t in from..=now {
+                    bulk.record_stage("stage_busy", s, t, busy(s, t));
+                    bulk.record_stage("stage_throughput", s, t, tput(s, t));
+                }
+                // Constant series: one bulk run vs per-tick appends.
+                bulk.record_run_h(par_h[s], from, n, par(seg, s));
+                bulk.record_run_h(queue_h[s], from, n, queue(seg, s));
+                for t in from..=now {
+                    tick.record_stage("stage_busy", s, t, busy(s, t));
+                    tick.record_stage("stage_throughput", s, t, tput(s, t));
+                    tick.record_stage("stage_parallelism", s, t, par(seg, s));
+                    tick.record_stage("stage_queue", s, t, queue(seg, s));
+                }
+            }
+            mon.snapshots_into(&bulk, now, 60, n_stages, &mut got);
+            assert_eq!(got, stage_snapshots(&bulk, now, 60, n_stages), "now={now}");
+            assert_eq!(got, stage_snapshots(&tick, now, 60, n_stages), "now={now}");
+            from = now + 1;
+        }
+        assert_eq!(got.len(), n_stages);
     }
 
     #[test]

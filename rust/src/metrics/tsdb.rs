@@ -138,6 +138,29 @@ impl Series {
         self.values.push(v);
     }
 
+    /// Append `n` consecutive samples of the same `v` starting at `from`
+    /// — the event-driven engine's quiet-span bulk fill. Equivalent to
+    /// `n` calls to [`Series::push`] at `from, from+1, …` but with a
+    /// single run-marker check and a `resize` on the value column.
+    #[inline]
+    fn push_run(&mut self, from: Timestamp, n: usize, v: f64) {
+        if n == 0 {
+            return;
+        }
+        let extends = match self.runs.last() {
+            Some(&(st, si)) => {
+                let last = st + (self.values.len() - si - 1) as Timestamp;
+                debug_assert!(last <= from, "samples must be appended in time order");
+                from == last + 1
+            }
+            None => false,
+        };
+        if !extends {
+            self.runs.push((from, self.values.len()));
+        }
+        self.values.resize(self.values.len() + n, v);
+    }
+
     #[inline]
     fn len(&self) -> usize {
         self.values.len()
@@ -252,6 +275,17 @@ impl Tsdb {
     #[inline]
     pub fn record_h(&mut self, h: SeriesHandle, t: Timestamp, value: f64) {
         self.series[h.0].push(t, value);
+    }
+
+    /// Bulk-append `n` consecutive samples of the same `value` starting at
+    /// `from` (timestamps `from..from+n`) via a pre-resolved handle — the
+    /// event-driven engine's quiet-span fill for constant series. Contents
+    /// are indistinguishable from `n` per-tick [`Tsdb::record_h`] calls
+    /// (same values, same run structure), so every range/cursor reader
+    /// sees identical data.
+    #[inline]
+    pub fn record_run_h(&mut self, h: SeriesHandle, from: Timestamp, n: usize, value: f64) {
+        self.series[h.0].push_run(from, n, value);
     }
 
     /// Append one sample (must be in non-decreasing time order per series).
@@ -614,6 +648,44 @@ mod tests {
         let sum_h = db.fold_over_h(h, 0, 60, 0.0, |a, _, v| a + v);
         let sum = db.fold_over(&id, 0, 60, 0.0, |a, _, v| a + v);
         assert_eq!(sum_h.to_bits(), sum.to_bits());
+    }
+
+    #[test]
+    fn record_run_is_indistinguishable_from_per_tick_appends() {
+        // The quiet-span bulk fill must produce a store that compares
+        // equal (full contents, run structure included) to per-tick
+        // appends of the same samples — the event-driven agreement pin
+        // leans on this.
+        let mut bulk = Tsdb::new();
+        let hb = bulk.handle(SeriesId::global("p"));
+        let mut tick = Tsdb::new();
+        let ht = tick.handle(SeriesId::global("p"));
+
+        // Dense prefix, bulk continuation extending the same run.
+        bulk.record_h(hb, 0, 4.0);
+        bulk.record_run_h(hb, 1, 5, 4.0);
+        for t in 0..6 {
+            tick.record_h(ht, t, 4.0);
+        }
+        assert_eq!(bulk, tick);
+
+        // Gap: both paths start a new run at the same place.
+        bulk.record_run_h(hb, 20, 3, 7.0);
+        for t in 20..23 {
+            tick.record_h(ht, t, 7.0);
+        }
+        assert_eq!(bulk, tick);
+
+        // Empty fill is a no-op.
+        bulk.record_run_h(hb, 30, 0, 9.0);
+        assert_eq!(bulk, tick);
+
+        // Queries across the bulk-filled region behave like dense data.
+        let id = SeriesId::global("p");
+        assert_eq!(bulk.last_at(&id, 21), Some((21, 7.0)));
+        assert_eq!(bulk.range(&id, 4, 20), vec![(4, 4.0), (5, 4.0), (20, 7.0)]);
+        crate::assert_close!(bulk.avg_over(&id, 0, 5).unwrap(), 4.0, atol = 1e-12);
+        assert_eq!(bulk.len(&id), 9);
     }
 
     #[test]

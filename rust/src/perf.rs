@@ -29,7 +29,11 @@
 //! baselines against the retained *staged* reference
 //! (`staged_tick_chunked`), not against the fused pool — staged vs fused
 //! is a different workload, so both appear as unpaired entries and the
-//! comparison is left to the reader of the trajectory.
+//! comparison is left to the reader of the trajectory. The event-driven
+//! engine core ([`crate::dsp::EngineMode`]) follows the same pattern:
+//! `engine_tick_1h_event` integrates a quiet hour in one call and
+//! baselines against `engine_tick_1h_quiet_pertick`, the retained
+//! per-tick loop over the identical deployment.
 //!
 //! `daedalus bench --check <tracked.json>` prints per-entry deltas of the
 //! current run against the tracked trajectory (report-only; CI's
@@ -45,13 +49,17 @@
 //!   "entries": [
 //!     {"name": "engine_tick_1h_plain", "ns_per_iter": 1.2e7, "iters": 5,
 //!      "min_ns": 1.1e7, "max_ns": 1.4e7,
+//!      "ticks": 3600, "ticks_per_sec": 3.0e5,
 //!      "baseline": "engine_tick_1h_naive_merge",
 //!      "baseline_ns_per_iter": 3.1e7, "speedup": 2.58}
 //!   ]
 //! }
 //! ```
 //! `baseline`/`baseline_ns_per_iter`/`speedup` appear only on benches
-//! with a retained reference implementation.
+//! with a retained reference implementation. `ticks`/`ticks_per_sec`
+//! appear only on tick-loop benches: the simulated seconds advanced per
+//! iteration and the derived simulation throughput — the headline number
+//! for the month-scale-sweep goal (`ROADMAP.md`).
 
 use std::time::{Duration, Instant};
 
@@ -63,7 +71,7 @@ use crate::metrics::{query, SeriesHandle, SeriesId, Tsdb};
 use crate::runtime::{native, ArtifactMeta, CapacityState, ComputeBackend};
 use crate::stats::{Ecdf, ExactEcdf, Rng, Welford};
 use crate::util::json::Json;
-use crate::workload::SineWorkload;
+use crate::workload::{ConstantWorkload, SineWorkload};
 use crate::Result;
 
 /// Bench-run tuning.
@@ -90,6 +98,9 @@ pub struct BenchResult {
     pub max_ns: f64,
     /// Name of the retained pre-optimization reference bench, if any.
     pub baseline: Option<&'static str>,
+    /// Simulated engine ticks advanced per iteration (tick-loop benches
+    /// only) — serialized as `ticks` plus the derived `ticks_per_sec`.
+    pub ticks: Option<u64>,
 }
 
 struct Runner<'a> {
@@ -139,7 +150,26 @@ impl Runner<'_> {
             min_ns: min,
             max_ns: max,
             baseline,
+            ticks: None,
         });
+    }
+
+    /// [`Runner::run`] for tick-loop benches: additionally records the
+    /// simulated tick count so the trajectory carries `ticks_per_sec`.
+    fn run_ticks<R>(
+        &mut self,
+        name: &'static str,
+        baseline: Option<&'static str>,
+        min_iters: u32,
+        ticks: u64,
+        f: impl FnMut() -> R,
+    ) {
+        self.run(name, baseline, min_iters, f);
+        if let Some(last) = self.results.last_mut() {
+            if last.name == name {
+                last.ticks = Some(ticks);
+            }
+        }
     }
 }
 
@@ -153,6 +183,24 @@ fn sim_1h(policy: MergePolicy) -> Simulation {
     ));
     sim.set_merge_policy(policy);
     sim
+}
+
+/// Underloaded steady deployment (constant 30 % of the job's reference
+/// peak): after the first tick every second is quiet — serving, no
+/// backlog, nothing pending — so the event-driven core can integrate the
+/// entire hour. `engine_tick_1h_event` measures `advance_quiet` over it
+/// against the retained per-tick loop (`engine_tick_1h_quiet_pertick`).
+fn quiet_sim_1h() -> Simulation {
+    let job = JobProfile::wordcount();
+    let rate = job.reference_peak * 0.3;
+    Simulation::new(SimConfig::paper(
+        EngineProfile::flink(),
+        job,
+        Box::new(ConstantWorkload {
+            rate,
+            duration: 3_600,
+        }),
+    ))
 }
 
 /// Same deployment on the staged engine (per-operator replica sets,
@@ -324,17 +372,18 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
 
     // Substrate: 1 hour of simulated time, no autoscaler. The naive merge
     // is the retained pre-optimization reference (serve-merge hot path).
-    r.run("engine_tick_1h_naive_merge", None, 3, || {
+    r.run_ticks("engine_tick_1h_naive_merge", None, 3, 3_600, || {
         let mut sim = sim_1h(MergePolicy::NaiveScan);
         for t in 0..3_600 {
             sim.step(t);
         }
         sim.total_backlog()
     });
-    r.run(
+    r.run_ticks(
         "engine_tick_1h_plain",
         Some("engine_tick_1h_naive_merge"),
         3,
+        3_600,
         || {
             let mut sim = sim_1h(MergePolicy::Heap);
             for t in 0..3_600 {
@@ -344,8 +393,35 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
         },
     );
 
+    // Event-driven engine core: an underloaded steady deployment where
+    // every tick after the first is quiet, so `advance_quiet` integrates
+    // the whole hour between interesting times in one call. The per-tick
+    // loop over the identical deployment is the retained reference
+    // (`EngineMode::PerTick`); the agreement tests pin the two bit-exact,
+    // so this pair measures pure overhead removed. It is the ≥10×
+    // ticks-per-second pair backing month-scale sweeps.
+    r.run_ticks("engine_tick_1h_quiet_pertick", None, 3, 3_600, || {
+        let mut sim = quiet_sim_1h();
+        for t in 0..3_600 {
+            sim.step(t);
+        }
+        sim.total_backlog()
+    });
+    r.run_ticks(
+        "engine_tick_1h_event",
+        Some("engine_tick_1h_quiet_pertick"),
+        3,
+        3_600,
+        || {
+            let mut sim = quiet_sim_1h();
+            sim.step(0);
+            sim.advance_quiet(1, 3_600);
+            sim.total_backlog()
+        },
+    );
+
     // Full stack: same but with the Daedalus MAPE-K loop attached.
-    r.run("engine_tick_1h_with_daedalus", None, 3, || {
+    r.run_ticks("engine_tick_1h_with_daedalus", None, 3, 3_600, || {
         let mut sim = sim_1h(MergePolicy::Heap);
         let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
         for t in 0..3_600 {
@@ -362,14 +438,14 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
     // representation) is the like-for-like reference for the bucket-ring
     // tick loop; the plain-vs-staged comparison is a different workload,
     // so both stay unpaired entries in the trajectory.
-    r.run("staged_tick_chunked", None, 3, || {
+    r.run_ticks("staged_tick_chunked", None, 3, 3_600, || {
         let mut sim = sim_1h_staged(QueuePolicy::Chunked);
         for t in 0..3_600 {
             sim.step(t);
         }
         sim.total_backlog()
     });
-    r.run("engine_tick_1h_staged", Some("staged_tick_chunked"), 3, || {
+    r.run_ticks("engine_tick_1h_staged", Some("staged_tick_chunked"), 3, 3_600, || {
         let mut sim = sim_1h_staged(QueuePolicy::BucketRing);
         for t in 0..3_600 {
             sim.step(t);
@@ -378,10 +454,11 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
     });
     // Per-operator DS2 on top of the staged engine (per-stage snapshots +
     // vector plans), against the bare staged tick loop.
-    r.run(
+    r.run_ticks(
         "engine_tick_1h_staged_with_ds2",
         Some("engine_tick_1h_staged"),
         3,
+        3_600,
         || {
             let mut sim = sim_1h_staged(QueuePolicy::BucketRing);
             let mut ds2 = Ds2::new(Ds2Config::defaults(12));
@@ -579,16 +656,21 @@ fn baseline_of<'a>(results: &'a [BenchResult], r: &BenchResult) -> Option<&'a Be
 pub fn table(results: &[BenchResult]) -> String {
     let mut out = String::new();
     for r in results {
+        let ticks = r
+            .ticks
+            .map(|k| format!("  {:>9.0} ticks/s", k as f64 * 1e9 / r.ns_per_iter))
+            .unwrap_or_default();
         let speedup = baseline_of(results, r)
             .map(|b| format!("  {:>6.2}x vs {}", b.ns_per_iter / r.ns_per_iter, b.name))
             .unwrap_or_default();
         out.push_str(&format!(
-            "{:<36} {:>12} /iter (min {:>12}, max {:>12}, n={}){}\n",
+            "{:<36} {:>12} /iter (min {:>12}, max {:>12}, n={}){}{}\n",
             r.name,
             fmt_ns(r.ns_per_iter),
             fmt_ns(r.min_ns),
             fmt_ns(r.max_ns),
             r.iters,
+            ticks,
             speedup,
         ));
     }
@@ -607,6 +689,12 @@ pub fn to_json(results: &[BenchResult], smoke: bool) -> String {
              \"min_ns\": {:.1}, \"max_ns\": {:.1}",
             r.name, r.ns_per_iter, r.iters, r.min_ns, r.max_ns
         ));
+        if let Some(ticks) = r.ticks {
+            out.push_str(&format!(
+                ", \"ticks\": {ticks}, \"ticks_per_sec\": {:.1}",
+                ticks as f64 * 1e9 / r.ns_per_iter
+            ));
+        }
         if let Some(b) = baseline_of(results, r) {
             out.push_str(&format!(
                 ", \"baseline\": \"{}\", \"baseline_ns_per_iter\": {:.1}, \
@@ -719,6 +807,7 @@ mod tests {
                 min_ns: 900.0,
                 max_ns: 1_100.0,
                 baseline: None,
+                ticks: None,
             },
             BenchResult {
                 name: "thing",
@@ -727,6 +816,7 @@ mod tests {
                 min_ns: 200.0,
                 max_ns: 300.0,
                 baseline: Some("thing_naive"),
+                ticks: Some(3_600),
             },
         ]
     }
@@ -743,8 +833,17 @@ mod tests {
         crate::assert_close!(e.get("ns_per_iter").unwrap().as_f64().unwrap(), 250.0);
         assert_eq!(e.get("baseline").unwrap().as_str().unwrap(), "thing_naive");
         crate::assert_close!(e.get("speedup").unwrap().as_f64().unwrap(), 4.0);
-        // The reference entry itself carries no baseline fields.
+        // Tick-loop benches carry the simulated-tick trajectory: 3600
+        // ticks in 250 ns/iter → 1.44e10 ticks/s.
+        assert_eq!(e.get("ticks").unwrap().as_usize().unwrap(), 3_600);
+        crate::assert_close!(
+            e.get("ticks_per_sec").unwrap().as_f64().unwrap(),
+            1.44e10,
+            rtol = 1e-6
+        );
+        // The reference entry itself carries no baseline or tick fields.
         assert!(entries[0].get("baseline").is_err());
+        assert!(entries[0].get("ticks").is_err());
     }
 
     #[test]
@@ -752,6 +851,7 @@ mod tests {
         let t = table(&fake_results());
         assert!(t.contains("thing_naive"));
         assert!(t.contains("4.00x vs thing_naive"));
+        assert!(t.contains("ticks/s"), "{t}");
     }
 
     #[test]
@@ -786,6 +886,7 @@ mod tests {
             min_ns: 10.0,
             max_ns: 10.0,
             baseline: None,
+            ticks: None,
         });
         let report = check_report(&current, &tracked, "BENCH_micro.json").unwrap();
         assert!(report.contains("report-only"), "{report}");

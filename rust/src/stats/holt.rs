@@ -28,7 +28,10 @@ impl Default for HoltWinters {
 
 impl HoltWinters {
     /// Fit on `history` (1 Hz samples) and forecast `horizon` steps.
-    /// Returns an empty vec when history is too short.
+    /// A history shorter than two samples cannot support a trend: the
+    /// forecast degenerates to a constant fill of the only observed level
+    /// (or 0 for an empty history), clamped non-negative — always
+    /// `horizon` values, never an empty vec.
     pub fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64> {
         if history.len() < 2 {
             return vec![history.first().copied().unwrap_or(0.0).max(0.0); horizon];
@@ -87,10 +90,16 @@ mod tests {
 
     #[test]
     fn short_history_degenerates_gracefully() {
+        // Doc contract: constant fill of `horizon` values, never empty.
         let f = HoltWinters::default().forecast(&[42.0], 5);
         assert_eq!(f, vec![42.0; 5]);
         let f = HoltWinters::default().forecast(&[], 3);
         assert_eq!(f, vec![0.0; 3]);
+        // A single negative level is clamped non-negative.
+        let f = HoltWinters::default().forecast(&[-7.0], 4);
+        assert_eq!(f, vec![0.0; 4]);
+        // The fill length always matches the requested horizon.
+        assert_eq!(HoltWinters::default().forecast(&[1.0], 0), Vec::<f64>::new());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 mod ctr;
 mod diurnal;
 mod flash;
+mod month;
 mod outage;
 mod shapes;
 mod shift;
@@ -28,6 +29,7 @@ mod week;
 pub use ctr::CtrWorkload;
 pub use diurnal::DiurnalDriftWorkload;
 pub use flash::FlashCrowdWorkload;
+pub use month::DiurnalMonthWorkload;
 pub use outage::OutageBackfillWorkload;
 pub use shapes::{ConstantWorkload, RampWorkload, ReplayWorkload, StepWorkload};
 pub use shift::{BottleneckShiftWorkload, SkewAmplifyWorkload};
@@ -97,6 +99,10 @@ pub enum ShapeKind {
     /// growth drift — the week-scale horizon (staged engine; real days at
     /// `--duration 604800`).
     DiurnalWeek,
+    /// Thirty day/night cycles with the weekly weekday/weekend rhythm and
+    /// a month-long growth drift — the month-scale horizon for the
+    /// event-driven engine (real days at `--duration 2592000`).
+    DiurnalMonth,
     /// Upstream outage followed by a volume-conserving backfill surge.
     OutageBackfill,
     /// Gentle swell whose scenario drifts one operator's selectivity so
@@ -109,7 +115,7 @@ pub enum ShapeKind {
 
 impl ShapeKind {
     /// All shapes, in registry order.
-    pub fn all() -> [ShapeKind; 9] {
+    pub fn all() -> [ShapeKind; 10] {
         [
             ShapeKind::Sine,
             ShapeKind::Ctr,
@@ -117,6 +123,7 @@ impl ShapeKind {
             ShapeKind::FlashCrowd,
             ShapeKind::DiurnalDrift,
             ShapeKind::DiurnalWeek,
+            ShapeKind::DiurnalMonth,
             ShapeKind::OutageBackfill,
             ShapeKind::BottleneckShift,
             ShapeKind::SkewAmplify,
@@ -132,6 +139,7 @@ impl ShapeKind {
             ShapeKind::FlashCrowd => "flash-crowd",
             ShapeKind::DiurnalDrift => "diurnal-drift",
             ShapeKind::DiurnalWeek => "diurnal-week",
+            ShapeKind::DiurnalMonth => "diurnal-month",
             ShapeKind::OutageBackfill => "outage-backfill",
             ShapeKind::BottleneckShift => "bottleneck-shift",
             ShapeKind::SkewAmplify => "skew-amplify",
@@ -146,7 +154,7 @@ impl ShapeKind {
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown workload shape {s:?} (sine|ctr|traffic|\
-                     flash-crowd|diurnal-drift|diurnal-week|\
+                     flash-crowd|diurnal-drift|diurnal-week|diurnal-month|\
                      outage-backfill|bottleneck-shift|skew-amplify)"
                 )
             })
@@ -162,6 +170,7 @@ impl ShapeKind {
             ShapeKind::FlashCrowd => Box::new(FlashCrowdWorkload::new(peak, duration, seed)),
             ShapeKind::DiurnalDrift => Box::new(DiurnalDriftWorkload::new(peak, duration, seed)),
             ShapeKind::DiurnalWeek => Box::new(DiurnalWeekWorkload::new(peak, duration, seed)),
+            ShapeKind::DiurnalMonth => Box::new(DiurnalMonthWorkload::new(peak, duration, seed)),
             ShapeKind::OutageBackfill => {
                 Box::new(OutageBackfillWorkload::new(peak, duration, seed))
             }
@@ -188,6 +197,18 @@ pub trait Workload: Send + Sync {
             .map(|t| self.rate(t))
             .fold(0.0, f64::max)
     }
+
+    /// First time strictly after `t` at which the rate may change
+    /// *discontinuously* (a step edge, outage boundary, …). The
+    /// event-driven harness ends quiet spans at knots so abrupt rate
+    /// changes land on a fully evaluated tick. This is a scheduling hint
+    /// only: the engine re-evaluates `rate` at every integrated tick, so
+    /// the conservative default — no knots before the end of the trace,
+    /// right for every smooth shape — is always correct.
+    fn next_knot(&self, t: Timestamp) -> Timestamp {
+        let _ = t;
+        self.duration()
+    }
 }
 
 impl<W: Workload + ?Sized> Workload for Box<W> {
@@ -197,6 +218,14 @@ impl<W: Workload + ?Sized> Workload for Box<W> {
 
     fn duration(&self) -> Timestamp {
         (**self).duration()
+    }
+
+    fn peak(&self) -> f64 {
+        (**self).peak()
+    }
+
+    fn next_knot(&self, t: Timestamp) -> Timestamp {
+        (**self).next_knot(t)
     }
 }
 
@@ -226,6 +255,11 @@ impl<W: Workload> Workload for ScaledWorkload<W> {
     fn duration(&self) -> Timestamp {
         self.inner.duration()
     }
+
+    fn next_knot(&self, t: Timestamp) -> Timestamp {
+        // Scaling is time-invariant: the knots are the inner shape's.
+        self.inner.next_knot(t)
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +287,31 @@ mod tests {
                 assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
             }
         }
+    }
+
+    #[test]
+    fn next_knot_defaults_and_forwards() {
+        // Smooth shapes report no knots before the trace end.
+        let sine = SineWorkload::paper_default(10_000.0, 3_600);
+        assert_eq!(sine.next_knot(17), 3_600);
+        // Box and ScaledWorkload forward shape overrides.
+        let step = StepWorkload {
+            steps: vec![(0, 1.0), (50, 2.0)],
+            duration: 100,
+        };
+        let boxed: Box<dyn Workload> = Box::new(step.clone());
+        assert_eq!(boxed.next_knot(10), 50);
+        let scaled = ScaledWorkload {
+            inner: step,
+            factor: 2.0,
+        };
+        assert_eq!(scaled.next_knot(10), 50);
+        // The outage shape knots at its edges: the first knot is the
+        // outage onset, where the rate collapses to the residual trickle.
+        let w = OutageBackfillWorkload::new(40_000.0, 21_600, 4);
+        let k = w.next_knot(0);
+        assert!(k > 0 && k < 21_600);
+        assert!(w.rate(k + 1) < 0.2 * w.rate(k.saturating_sub(2)));
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Month-scale diurnal workload — thirty day/night cycles with the weekly
+//! weekday/weekend rhythm of [`super::DiurnalWeekWorkload`] and a linear
+//! month-over-month growth drift.
+//!
+//! This is the long-horizon trace behind the `diurnal-month` scenarios: at
+//! `--duration 2592000` each cycle is a real day; shorter durations
+//! compress the same thirty cycles (so CI can smoke the cell in seconds).
+//! A month of 1 Hz metrics is exactly what the event-driven quiet-span
+//! engine exists for — overnight troughs and steady weekday plateaus are
+//! integrated without per-tick work, while the columnar TSDB keeps
+//! ~120 series × 2 592 000 ticks at 8 bytes/sample.
+//!
+//! Deterministic per seed: trough level, weekend damping, drift strength
+//! and the noise walk are drawn once at construction. Days are 0-based;
+//! day `d` is a weekend iff `d % 7 ≥ 5` (so days 5–6, 12–13, … are the
+//! weekends). The global maximum — the last weekday's (day 29) midday
+//! peak — is normalized to `peak`. As in the week shape, the weekend
+//! damping is a deliberate step at each weekday/weekend boundary, landing
+//! at the overnight trough where the jump stays a small fraction of the
+//! rate.
+
+use super::{SmoothNoise, Workload};
+use crate::clock::Timestamp;
+use crate::stats::Rng;
+
+/// Thirty diurnal cycles × weekly weekday/weekend rhythm × linear growth
+/// + noise.
+#[derive(Debug, Clone)]
+pub struct DiurnalMonthWorkload {
+    peak: f64,
+    duration: Timestamp,
+    /// Overnight trough as a fraction of the daily peak.
+    trough_frac: f64,
+    /// Weekend (`day % 7 ≥ 5`) level as a fraction of a weekday's.
+    weekend_frac: f64,
+    /// Total growth over the month (0.3 = +30 % by the end).
+    drift_frac: f64,
+    noise: SmoothNoise,
+    /// Normalizer putting the day-29 midday maximum at `peak`.
+    norm: f64,
+}
+
+const DAYS: f64 = 30.0;
+
+impl DiurnalMonthWorkload {
+    /// Month-scale diurnal trace scaled to `peak` over `duration`
+    /// (deterministic per seed).
+    pub fn new(peak: f64, duration: Timestamp, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x30D0_117E);
+        let trough_frac = rng.range(0.12, 0.22);
+        let weekend_frac = rng.range(0.50, 0.65);
+        let drift_frac = rng.range(0.20, 0.40);
+        let noise = SmoothNoise::generate(&mut rng, duration, 60, 0.9, 0.1, 0.03);
+        // Day 29 (29 % 7 = 1, a weekday) midday sits at x = 29.5/30 of the
+        // run; with weekend damping ≤ 0.65 no weekend peak exceeds it, so
+        // this is the global (noise-free) maximum.
+        let norm = 1.0 + drift_frac * (29.5 / DAYS);
+        Self {
+            peak,
+            duration,
+            trough_frac,
+            weekend_frac,
+            drift_frac,
+            noise,
+            norm,
+        }
+    }
+}
+
+impl Workload for DiurnalMonthWorkload {
+    fn rate(&self, t: Timestamp) -> f64 {
+        let x = (t as f64 / self.duration.max(1) as f64).clamp(0.0, 1.0);
+        let day_pos = (x * DAYS).min(DAYS - 1e-9);
+        let day = day_pos as usize; // 0..=29; day % 7 ≥ 5 is a weekend
+        let within = day_pos - day as f64;
+        // Day curve in [0, 1]: trough at day boundaries, peak mid-day.
+        let curve = (1.0 - (2.0 * std::f64::consts::PI * within).cos()) / 2.0;
+        let level = self.trough_frac + (1.0 - self.trough_frac) * curve;
+        // Weekend damping: a deliberate trough-boundary step (module doc).
+        let weekend = if day % 7 >= 5 { self.weekend_frac } else { 1.0 };
+        let growth = (1.0 + self.drift_frac * x) / self.norm;
+        (self.peak * level * weekend * growth * (1.0 + self.noise.at(t))).max(0.0)
+    }
+
+    fn duration(&self) -> Timestamp {
+        self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MONTH: Timestamp = 2_592_000;
+
+    /// Average rate over ±5 min around the middle of day `d` (0-based).
+    fn midday_avg(w: &DiurnalMonthWorkload, d: u64) -> f64 {
+        let center = (d * 2 + 1) * MONTH / 60;
+        (center - 300..center + 300).map(|t| w.rate(t)).sum::<f64>() / 600.0
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = DiurnalMonthWorkload::new(50_000.0, MONTH, 13);
+        let b = DiurnalMonthWorkload::new(50_000.0, MONTH, 13);
+        for t in (0..MONTH).step_by(86_413) {
+            assert_eq!(a.rate(t), b.rate(t));
+        }
+        let c = DiurnalMonthWorkload::new(50_000.0, MONTH, 14);
+        assert_ne!(a.rate(1_000_000), c.rate(1_000_000));
+    }
+
+    #[test]
+    fn weekly_rhythm_repeats_across_the_month() {
+        let w = DiurnalMonthWorkload::new(50_000.0, MONTH, 3);
+        // Weekend days in every week dip below the preceding weekday.
+        for week in 0..4u64 {
+            let friday = midday_avg(&w, week * 7 + 4);
+            let saturday = midday_avg(&w, week * 7 + 5);
+            let sunday = midday_avg(&w, week * 7 + 6);
+            assert!(saturday < 0.8 * friday, "week {week}: sat {saturday} vs fri {friday}");
+            assert!(sunday < 0.8 * friday, "week {week}: sun {sunday} vs fri {friday}");
+        }
+    }
+
+    #[test]
+    fn growth_lifts_late_weeks_over_early_ones() {
+        let w = DiurnalMonthWorkload::new(50_000.0, MONTH, 5);
+        let early = midday_avg(&w, 1);
+        let late = midday_avg(&w, 29);
+        assert!(late > 1.1 * early, "early {early}, late {late}");
+    }
+
+    #[test]
+    fn peak_normalized_to_target() {
+        for seed in [1u64, 9, 21] {
+            let w = DiurnalMonthWorkload::new(50_000.0, 259_200, seed);
+            let peak = w.peak();
+            assert!(peak > 0.9 * 50_000.0, "seed {seed}: peak {peak}");
+            assert!(peak < 1.2 * 50_000.0, "seed {seed}: peak {peak}");
+        }
+    }
+
+    #[test]
+    fn compressed_horizons_keep_the_thirty_cycles() {
+        // Truncated CI horizon: the same thirty cycles, compressed.
+        let w = DiurnalMonthWorkload::new(30_000.0, 3_000, 1);
+        // Day boundaries (~multiples of 100 s) are troughs; midday of
+        // day 2 (~250 s) is a peak.
+        let trough = w.rate(100);
+        let peak = w.rate(250);
+        assert!(trough < 0.55 * peak, "trough {trough} vs peak {peak}");
+        for t in 0..3_000 {
+            let r = w.rate(t);
+            assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+
+    #[test]
+    fn rates_finite_and_nonnegative_over_a_full_month() {
+        let w = DiurnalMonthWorkload::new(50_000.0, MONTH, 21);
+        for t in (0..MONTH).step_by(3_607) {
+            let r = w.rate(t);
+            assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+}

@@ -87,6 +87,17 @@ impl Workload for OutageBackfillWorkload {
     fn duration(&self) -> Timestamp {
         self.duration
     }
+
+    fn next_knot(&self, t: Timestamp) -> Timestamp {
+        let outage_end = self.outage_start + self.outage_len;
+        let surge_end = outage_end + self.surge_len;
+        [self.outage_start, outage_end, surge_end]
+            .into_iter()
+            .map(|e| e.ceil() as Timestamp)
+            .filter(|&e| e > t)
+            .min()
+            .unwrap_or(self.duration)
+    }
 }
 
 #[cfg(test)]

@@ -69,6 +69,14 @@ impl Workload for StepWorkload {
     fn duration(&self) -> Timestamp {
         self.duration
     }
+
+    fn next_knot(&self, t: Timestamp) -> Timestamp {
+        self.steps
+            .iter()
+            .map(|&(start, _)| start)
+            .find(|&start| start > t)
+            .unwrap_or(self.duration)
+    }
 }
 
 /// Replay a recorded trace (1 sample per second, clamped to the last value).
@@ -161,6 +169,18 @@ mod tests {
         assert_eq!(w.rate(99), 10.0);
         assert_eq!(w.rate(100), 50.0);
         assert_eq!(w.rate(250), 20.0);
+    }
+
+    #[test]
+    fn step_next_knot_reports_boundaries() {
+        let w = StepWorkload {
+            steps: vec![(0, 10.0), (100, 50.0), (200, 20.0)],
+            duration: 300,
+        };
+        assert_eq!(w.next_knot(0), 100);
+        assert_eq!(w.next_knot(99), 100);
+        assert_eq!(w.next_knot(100), 200);
+        assert_eq!(w.next_knot(250), 300); // no later step: trace end
     }
 
     #[test]

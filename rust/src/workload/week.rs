@@ -10,8 +10,14 @@
 //!
 //! Deterministic per seed: trough level, weekend damping, drift strength
 //! and the noise walk are drawn once at construction. The global maximum —
-//! the last weekday's (day 5, "Friday") midday peak — is normalized to
-//! `peak`.
+//! the last weekday's (day 4, "Friday"; days are 0-based, so days 5–6 are
+//! the weekend) midday peak — is normalized to `peak`.
+//!
+//! The weekend damping is an intentional step applied at the day-4/5
+//! boundary. It lands exactly at the overnight trough, so the jump is
+//! bounded by `trough_frac · (1 − weekend_frac) · peak` — a small fraction
+//! of the already-low overnight rate, not a mid-day cliff (pinned by
+//! `weekend_step_lands_at_the_trough_and_stays_small`).
 
 use super::{SmoothNoise, Workload};
 use crate::clock::Timestamp;
@@ -68,6 +74,10 @@ impl Workload for DiurnalWeekWorkload {
         // Day curve in [0, 1]: trough at day boundaries, peak mid-day.
         let curve = (1.0 - (2.0 * std::f64::consts::PI * within).cos()) / 2.0;
         let level = self.trough_frac + (1.0 - self.trough_frac) * curve;
+        // Weekend damping (days 5–6, Friday = day 4): a deliberate step at
+        // the day-4/5 boundary. The boundary is a trough (`curve` ≈ 0), so
+        // the discontinuity is ≤ trough_frac · (1 − weekend_frac) of the
+        // normalized peak — see the module doc.
         let weekend = if day >= 5 { self.weekend_frac } else { 1.0 };
         let growth = (1.0 + self.drift_frac * x) / self.norm;
         (self.peak * level * weekend * growth * (1.0 + self.noise.at(t))).max(0.0)
@@ -141,6 +151,27 @@ mod tests {
         for t in 0..900 {
             let r = w.rate(t);
             assert!(r.is_finite() && r >= 0.0, "rate {r} at {t}");
+        }
+    }
+
+    #[test]
+    fn weekend_step_lands_at_the_trough_and_stays_small() {
+        // Regression for the documented day-4/5 boundary step: the weekend
+        // damping kicks in exactly at the overnight trough, so the jump is
+        // bounded by trough_frac · (1 − weekend_frac) of the (growth- and
+        // noise-adjusted) peak and is tiny next to the mid-day level.
+        for seed in [1u64, 7, 21, 33] {
+            let w = DiurnalWeekWorkload::new(50_000.0, WEEK, seed);
+            let boundary = 5 * WEEK / 7; // first second of day 5 (weekend)
+            let before = w.rate(boundary - 1);
+            let after = w.rate(boundary);
+            let step = (before - after).abs();
+            let bound = w.trough_frac * (1.0 - w.weekend_frac) * 50_000.0 * 1.3;
+            assert!(step <= bound, "seed {seed}: step {step} > bound {bound}");
+            // The boundary really is the trough, far below mid-day Friday.
+            let friday = midday_avg(&w, 4);
+            assert!(before < 0.35 * friday, "seed {seed}: {before} vs {friday}");
+            assert!(step < 0.15 * friday, "seed {seed}: step {step} vs {friday}");
         }
     }
 

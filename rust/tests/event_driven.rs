@@ -1,0 +1,108 @@
+//! Event-driven engine-core agreement tests: the quiet-span fast path
+//! ([`EngineMode::EventDriven`], the default) must reproduce the retained
+//! per-tick reference ([`EngineMode::PerTick`]) bit for bit — same trace
+//! digest, same pooled latencies, same worker-seconds — on **every**
+//! registry cell, and it must carry a truncated week/month-scale run
+//! without violating the conservation invariants CI depends on.
+
+use daedalus::dsp::EngineMode;
+use daedalus::experiments::scenarios::ScenarioRegistry;
+
+/// Run one (scenario, approach, seed) unit under `mode` and return the
+/// full `(RunResult, RunTrace)` pair.
+fn run_unit(
+    scenario: &daedalus::experiments::Scenario,
+    approach: &daedalus::experiments::Approach,
+    seed: u64,
+    mode: EngineMode,
+    stride: u64,
+) -> (
+    daedalus::experiments::harness::RunResult,
+    daedalus::experiments::scenarios::RunTrace,
+) {
+    let mut exp = scenario.to_experiment().unwrap();
+    exp.engine_mode = mode;
+    exp.run_single_traced(approach, seed, scenario.workload(seed), stride)
+}
+
+/// Assert that one unit's event-driven run equals its per-tick run in
+/// every observable: quantized trace digest, and exact (bitwise) resource
+/// and latency accounting.
+fn assert_modes_agree(
+    scenario: &daedalus::experiments::Scenario,
+    approach: &daedalus::experiments::Approach,
+    seed: u64,
+    stride: u64,
+) {
+    let (ra, ta) = run_unit(scenario, approach, seed, EngineMode::PerTick, stride);
+    let (rb, tb) = run_unit(scenario, approach, seed, EngineMode::EventDriven, stride);
+    let unit = format!("{}/{}/seed-{seed}", scenario.name, approach.label());
+    assert_eq!(ta.digest(), tb.digest(), "trace digest drift for {unit}");
+    assert_eq!(ta.points, tb.points, "trace points drift for {unit}");
+    assert_eq!(ta.events, tb.events, "trace events drift for {unit}");
+    assert_eq!(
+        ra.worker_seconds.to_bits(),
+        rb.worker_seconds.to_bits(),
+        "worker-seconds drift for {unit}"
+    );
+    assert_eq!(
+        ra.final_backlog.to_bits(),
+        rb.final_backlog.to_bits(),
+        "final-backlog drift for {unit}"
+    );
+    assert_eq!(
+        ra.lag_max.to_bits(),
+        rb.lag_max.to_bits(),
+        "lag-max drift for {unit}"
+    );
+    assert_eq!(ra.latencies, rb.latencies, "latency ECDF drift for {unit}");
+    assert_eq!(
+        ra.parallelism_series, rb.parallelism_series,
+        "parallelism-series drift for {unit}"
+    );
+    assert_eq!(ra.rescales, rb.rescales, "rescale-count drift for {unit}");
+}
+
+/// Every built-in registry cell, every approach it carries: the two engine
+/// modes must agree exactly. This is the PR's flagship pin — it covers the
+/// fused and staged serve paths, all five autoscalers' `next_decision`
+/// bounds, failure injection, and the deferred-TSDB bulk fills, all at a
+/// CI-sized duration.
+#[test]
+fn event_driven_matches_per_tick_on_every_registry_cell() {
+    let reg = ScenarioRegistry::builtin(900, &[3]);
+    for scenario in reg.scenarios() {
+        let exp = scenario.to_experiment().unwrap();
+        for approach in &exp.approaches {
+            assert_modes_agree(scenario, approach, 3, 60);
+        }
+    }
+}
+
+/// Truncated week/month-scale runs (real shapes, shortened horizon): the
+/// modes still agree across a rescale-heavy diurnal trace, and the
+/// flagship month cell produces a sane, fully-sampled trace under the
+/// event-driven default.
+#[test]
+fn truncated_week_and_month_scale_runs_agree_and_stay_sane() {
+    let reg = ScenarioRegistry::builtin(14_400, &[5]);
+    for name in ["flink-wordcount-diurnal-week", "flink-wordcount-diurnal-month"] {
+        let scenario = reg.get(name).unwrap();
+        let exp = scenario.to_experiment().unwrap();
+        // One reactive and one static approach keep the per-tick
+        // reference runs CI-cheap while still exercising rescales.
+        for approach in exp
+            .approaches
+            .iter()
+            .filter(|a| matches!(a.label().as_str(), "daedalus" | "static-12"))
+        {
+            assert_modes_agree(scenario, approach, 5, 300);
+            let (res, trace) = run_unit(scenario, approach, 5, EngineMode::EventDriven, 300);
+            assert!(res.worker_seconds > 0.0, "{name}: no work accounted");
+            assert!(res.final_backlog >= 0.0, "{name}: negative backlog");
+            assert!(res.latencies.total_weight() > 0.0, "{name}: no latency mass");
+            assert_eq!(trace.points.len(), (14_400 / 300) as usize, "{name}");
+            assert!(trace.points.iter().all(|p| p.replicas >= 1), "{name}");
+        }
+    }
+}
