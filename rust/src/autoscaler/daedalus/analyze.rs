@@ -122,8 +122,15 @@ impl Analyzer {
         } else {
             current / per_worker.len() as f64
         };
-        knowledge.seen_capacity.insert(n, current);
-        knowledge.capacity_history.push((data.now, n, current));
+        // Ledger quarantine: while the anomaly tracker flags a straggler
+        // window (a gray-degraded worker drags throughput down with no
+        // restart to observe), the estimate still feeds *this* iteration's
+        // planning but is not remembered as the capacity of a healthy
+        // deployment at scale-out `n`.
+        if !knowledge.straggler_suspect() {
+            knowledge.seen_capacity.insert(n, current);
+            knowledge.capacity_history.push((data.now, n, current));
+        }
 
         CapacityEstimates {
             per_worker,

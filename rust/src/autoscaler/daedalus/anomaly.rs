@@ -18,6 +18,12 @@ const NORMAL_STREAK: usize = 5;
 const MONITOR_TIMEOUT: u64 = 1_800;
 /// Anomaly threshold in standard deviations (§3.5: one σ).
 const SIGMA_K: f64 = 1.0;
+/// Consecutive straggler-suspect seconds before the capacity ledgers
+/// quarantine their writes (see [`straggler_tick`]).
+pub const STRAGGLER_STREAK: usize = 30;
+/// Minimum samples in the difference statistics before straggler detection
+/// can fire — a cold Welford flags everything as anomalous.
+const STRAGGLER_MIN_SAMPLES: f64 = 120.0;
 
 /// Workload/throughput difference at tick `now`, if both series have a
 /// sample at exactly `now` (the engine only records throughput while
@@ -41,6 +47,28 @@ fn fresh_diff(view: &SimView<'_>) -> Option<f64> {
 pub fn track(knowledge: &mut Knowledge, view: &SimView<'_>) {
     if let Some(d) = fresh_diff(view) {
         knowledge.anomaly.push_scalar(d);
+    }
+}
+
+/// One tick of straggler detection (gray failures: a degraded worker is
+/// detectable *only* as a persistent positive workload/throughput gap —
+/// there is no restart to observe). A tick is suspect when the job serves,
+/// the difference statistics are warm, and the gap is positive and
+/// anomalous; [`STRAGGLER_STREAK`] consecutive suspect ticks quarantine the
+/// knowledge-ledger writes ([`Knowledge::straggler_suspect`]) until the
+/// gap normalizes. The transition into quarantine is counted in
+/// `Knowledge::quarantined_windows`.
+pub fn straggler_tick(knowledge: &mut Knowledge, ready: bool, diff: Option<f64>) {
+    let suspect = ready
+        && knowledge.anomaly.count >= STRAGGLER_MIN_SAMPLES
+        && matches!(diff, Some(d) if d > 0.0 && knowledge.anomaly.is_anomalous(d, SIGMA_K));
+    if suspect {
+        knowledge.straggler_streak += 1;
+        if knowledge.straggler_streak == STRAGGLER_STREAK {
+            knowledge.quarantined_windows += 1;
+        }
+    } else {
+        knowledge.straggler_streak = 0;
     }
 }
 
@@ -144,6 +172,7 @@ mod tests {
             ready,
             max_replicas: 12,
             stage_parallelism: &[],
+            dropped_rescales: 0,
         }
     }
 
@@ -216,6 +245,45 @@ mod tests {
         assert!(!mon.update(&mut k, &view_at(&db, 200, false)));
         assert!(mon.update(&mut k, &view_at(&db, 100 + 1_801, false)));
         assert!(k.recoveries.is_empty());
+    }
+
+    /// A gray failure shows up as a persistent positive anomalous gap: the
+    /// streak must build to the quarantine threshold, flag the window
+    /// exactly once, and release as soon as the gap normalizes.
+    #[test]
+    fn straggler_streak_quarantines_and_releases() {
+        let mut k = knowledge_with_normal(); // normal ≈ 0 ± 50, 600 samples
+        assert!(!k.straggler_suspect());
+        // A degraded worker leaves a persistent ~2 000-tuple gap.
+        for _ in 0..STRAGGLER_STREAK {
+            assert!(!k.straggler_suspect());
+            straggler_tick(&mut k, true, Some(2_000.0));
+        }
+        assert!(k.straggler_suspect());
+        assert_eq!(k.quarantined_windows, 1);
+        // Staying suspect does not re-count the window.
+        straggler_tick(&mut k, true, Some(2_000.0));
+        assert_eq!(k.quarantined_windows, 1);
+        // The gap normalizes → quarantine releases immediately.
+        straggler_tick(&mut k, true, Some(10.0));
+        assert!(!k.straggler_suspect());
+        assert_eq!(k.straggler_streak, 0);
+
+        // Non-serving ticks and negative (catch-up) gaps never count.
+        let mut k2 = knowledge_with_normal();
+        for _ in 0..2 * STRAGGLER_STREAK {
+            straggler_tick(&mut k2, false, Some(2_000.0));
+            straggler_tick(&mut k2, true, Some(-2_000.0));
+        }
+        assert!(!k2.straggler_suspect());
+        assert_eq!(k2.quarantined_windows, 0);
+
+        // A cold Welford (fresh knowledge) cannot fire.
+        let mut cold = Knowledge::new(&ArtifactMeta::default(), 30.0, 15.0);
+        for _ in 0..2 * STRAGGLER_STREAK {
+            straggler_tick(&mut cold, true, Some(2_000.0));
+        }
+        assert!(!cold.straggler_suspect());
     }
 
     #[test]

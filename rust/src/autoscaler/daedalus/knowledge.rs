@@ -60,6 +60,13 @@ pub struct Knowledge {
     pub max_cpu_seen: f64,
     /// Running stats of (workload − throughput) for anomaly detection.
     pub anomaly: Welford,
+    /// Consecutive tracked seconds the workload/throughput difference has
+    /// looked straggler-like (see `anomaly::straggler_tick`).
+    pub straggler_streak: usize,
+    /// Times the straggler streak crossed the quarantine threshold — each
+    /// is one window whose capacity observations were kept out of the
+    /// ledgers (reports/diagnostics).
+    pub quarantined_windows: usize,
     /// Adaptive anticipated downtimes (§3.4), refined from observations.
     pub downtime_out: f64,
     /// Anticipated scale-in downtime (s), refined from observations.
@@ -91,6 +98,8 @@ impl Knowledge {
             retrain_count: 0,
             max_cpu_seen: 0.0,
             anomaly: Welford::new(),
+            straggler_streak: 0,
+            quarantined_windows: 0,
             downtime_out,
             downtime_in,
             last_rescale: None,
@@ -129,6 +138,16 @@ impl Knowledge {
     /// the data distribution changed; §3.1 monitors each worker freshly).
     pub fn reset_capacity_state(&mut self) {
         self.capacity_state.reset_all();
+    }
+
+    /// Whether the current window is straggler-suspect (a gray failure or
+    /// similar partial degradation): the capacity ledgers quarantine their
+    /// writes until the workload/throughput difference normalizes, so a
+    /// degraded worker's throughput is never remembered as the capacity of
+    /// a healthy deployment. Planning still uses the fresh in-loop
+    /// estimates — only *persistence* is gated.
+    pub fn straggler_suspect(&self) -> bool {
+        self.straggler_streak >= super::anomaly::STRAGGLER_STREAK
     }
 }
 

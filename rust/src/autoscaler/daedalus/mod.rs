@@ -162,8 +162,15 @@ impl Daedalus {
         for u in self.tracked_until..=view.now {
             let ready_u = if u == view.now { view.ready } else { true };
             let diff = anomaly::diff_at(view.tsdb, u);
+            // Straggler detection first (against the *pre-sample* normal),
+            // then fold the sample into the difference statistics — unless
+            // the window is quarantined: a gray-degraded deployment must
+            // not redefine "normal" any more than it may write capacity.
+            anomaly::straggler_tick(&mut self.knowledge, ready_u, diff);
             if let Some(d) = diff {
-                self.knowledge.anomaly.push_scalar(d);
+                if !self.knowledge.straggler_suspect() {
+                    self.knowledge.anomaly.push_scalar(d);
+                }
             }
             if let Some(mon) = &mut self.recovery_monitor {
                 if mon.update_at(&mut self.knowledge, u, ready_u, diff) {

@@ -140,6 +140,7 @@ mod tests {
             ready: true,
             max_replicas: 12,
             stage_parallelism: &[],
+            dropped_rescales: 0,
         };
         let cfg = DaedalusConfig::default();
         let meta = ArtifactMeta::default();

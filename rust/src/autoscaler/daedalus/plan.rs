@@ -151,9 +151,14 @@ pub fn plan_stage_scale_out(
         if cap_rep.is_nan() || cap_rep <= 0.0 {
             return None;
         }
-        knowledge
-            .stage_capacity
-            .insert((snap.stage, n_s), cap_rep * n_s as f64);
+        // Ledger quarantine (same rule as the fused path): straggler-
+        // suspect windows plan from this fresh estimate but never persist
+        // it as the healthy capacity of `(stage, n_s)`.
+        if !knowledge.straggler_suspect() {
+            knowledge
+                .stage_capacity
+                .insert((snap.stage, n_s), cap_rep * n_s as f64);
+        }
         per_replica.push(cap_rep);
     }
     // Cumulative observed selectivity: stage s's input per source tuple.

@@ -384,6 +384,7 @@ mod tests {
             ready: false,
             max_replicas: max,
             stage_parallelism: &[],
+            dropped_rescales: 0,
         };
         assert_eq!(ds2.decide(&view), None);
         assert_eq!(ds2.decide_plan(&view), None);
@@ -430,6 +431,7 @@ mod tests {
             ready: true,
             max_replicas: 12,
             stage_parallelism: &stage_par,
+            dropped_rescales: 0,
         };
         let plan = ds2.decide_plan(&view).expect("per-stage plan");
         assert_eq!(plan, ScalePlan::PerStage(vec![1, 2, 3]));
@@ -447,6 +449,7 @@ mod tests {
             ready: true,
             max_replicas: 12,
             stage_parallelism: &stage_par,
+            dropped_rescales: 0,
         };
         let plan = ds2.decide_plan(&view).expect("uniform plan");
         assert_eq!(plan, ScalePlan::Uniform(3));

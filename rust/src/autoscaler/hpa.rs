@@ -210,6 +210,7 @@ mod tests {
             ready,
             max_replicas: 18,
             stage_parallelism: &[],
+            dropped_rescales: 0,
         }
     }
 

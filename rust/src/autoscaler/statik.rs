@@ -59,6 +59,7 @@ mod tests {
             ready: true,
             max_replicas: 18,
             stage_parallelism: &[],
+            dropped_rescales: 0,
         };
         assert_eq!(s.decide(&v), Some(12));
         let v = SimView {
@@ -68,6 +69,7 @@ mod tests {
             ready: true,
             max_replicas: 18,
             stage_parallelism: &[],
+            dropped_rescales: 0,
         };
         assert_eq!(s.decide(&v), None);
     }

@@ -7,13 +7,18 @@
 
 use crate::clock::Timestamp;
 
-/// Whether the job is processing or mid-restart.
+/// Whether the job is processing, mid-restart, or retrying a failed
+/// restart attempt.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Phase {
     /// Processing normally with the current worker set.
     Running,
     /// Stop-the-world restart until `until`, then `target` replicas.
     Restarting { until: Timestamp, target: usize },
+    /// A restart attempt failed (crash-loop fault): backing off until
+    /// `until`, then the next attempt toward `target` completes or fails
+    /// again. Like `Restarting`, no pods serve and no checkpoints complete.
+    Retrying { until: Timestamp, target: usize },
 }
 
 /// Replica-set controller state.
@@ -43,7 +48,7 @@ impl Cluster {
     pub fn serving_replicas(&self) -> usize {
         match self.phase {
             Phase::Running => self.current,
-            Phase::Restarting { .. } => 0,
+            Phase::Restarting { .. } | Phase::Retrying { .. } => 0,
         }
     }
 
@@ -52,7 +57,7 @@ impl Cluster {
     pub fn parallelism(&self) -> usize {
         match self.phase {
             Phase::Running => self.current,
-            Phase::Restarting { target, .. } => target,
+            Phase::Restarting { target, .. } | Phase::Retrying { target, .. } => target,
         }
     }
 
@@ -102,10 +107,22 @@ impl Cluster {
         self.request_restart(t, self.current, downtime_secs)
     }
 
+    /// A restart attempt toward `target` failed at `t` (crash-loop fault):
+    /// re-enter the down state for `backoff_secs` before the next attempt.
+    /// Called by the engine *after* [`Cluster::tick`] reported completion,
+    /// so the transient `Running` inside that call is never observable.
+    pub fn begin_retry(&mut self, t: Timestamp, target: usize, backoff_secs: f64) {
+        self.phase = Phase::Retrying {
+            until: t + backoff_secs.ceil().max(1.0) as Timestamp,
+            target,
+        };
+    }
+
     /// Advance the state machine to time `t`; returns `Some(new_replicas)`
-    /// when a restart completes this tick.
+    /// when a restart (or retry) attempt completes this tick.
     pub fn tick(&mut self, t: Timestamp) -> Option<usize> {
-        if let Phase::Restarting { until, target } = self.phase {
+        if let Phase::Restarting { until, target } | Phase::Retrying { until, target } = self.phase
+        {
             if t >= until {
                 self.current = target;
                 self.phase = Phase::Running;
@@ -157,6 +174,25 @@ mod tests {
         assert_eq!(c.tick(10), Some(12));
         assert!(c.request_rescale(20, 0, 10.0));
         assert_eq!(c.tick(30), Some(1));
+    }
+
+    #[test]
+    fn retry_phase_backs_off_then_completes() {
+        let mut c = Cluster::new(6, 12);
+        assert!(c.request_failure_restart(50, 30.0));
+        assert_eq!(c.tick(80), Some(6));
+        // The engine decided this attempt failed: back off 20 s.
+        c.begin_retry(80, 6, 20.0);
+        assert_eq!(c.phase, Phase::Retrying { until: 100, target: 6 });
+        assert_eq!(c.serving_replicas(), 0);
+        assert_eq!(c.parallelism(), 6);
+        assert!(!c.ready());
+        // Rescale requests during the retry window are refused (and the
+        // engine counts them as dropped).
+        assert!(!c.request_rescale(90, 10, 30.0));
+        assert_eq!(c.tick(99), None);
+        assert_eq!(c.tick(100), Some(6));
+        assert!(c.ready());
     }
 
     #[test]

@@ -71,6 +71,7 @@ use crate::stats::{Ecdf, Rng};
 use crate::workload::Workload;
 
 use super::cluster::{Cluster, Phase};
+use super::faults::{FaultEvent, FaultTimeline, RETRY_BACKOFF_BASE_SECS, RETRY_BACKOFF_CAP_SECS};
 use super::partition::{Chunk, Partition};
 use super::profile::EngineProfile;
 use super::queue::{QueuePolicy, StageQueue};
@@ -124,8 +125,12 @@ pub struct SimConfig {
     /// Multiplicative per-tick noise on the produced rate (σ).
     pub rate_noise: f64,
     /// Seconds at which a worker failure is injected (§4.8 future work —
-    /// implemented here and exercised by tests/benches).
+    /// implemented here and exercised by tests/benches). Must be sorted
+    /// and duplicate-free (asserted on construction).
     pub failures: Vec<Timestamp>,
+    /// Typed fault schedule ([`super::faults`]): injected at the start of
+    /// the matching tick, alongside the legacy `failures` entries.
+    pub faults: FaultTimeline,
     /// Whether operators run fused on a flat pool (reference) or as
     /// per-operator stages.
     pub stage_model: StageModel,
@@ -166,6 +171,7 @@ impl SimConfig {
             seed: 1,
             rate_noise: 0.0,
             failures: Vec::new(),
+            faults: FaultTimeline::default(),
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,
@@ -189,6 +195,12 @@ impl SimConfig {
     /// Builder: set the stage model.
     pub fn with_stage_model(mut self, model: StageModel) -> Self {
         self.stage_model = model;
+        self
+    }
+
+    /// Builder: set the typed fault timeline.
+    pub fn with_faults(mut self, faults: FaultTimeline) -> Self {
+        self.faults = faults;
         self
     }
 }
@@ -349,6 +361,9 @@ pub struct SimView<'a> {
     /// the fused reference pool. Per-operator autoscalers key their
     /// per-stage metric reads off this.
     pub stage_parallelism: &'a [usize],
+    /// Cumulative rescale plans refused because a restart was already in
+    /// flight — decisions that would otherwise be silently lost.
+    pub dropped_rescales: u64,
 }
 
 /// One operator stage of the staged engine: its input queue, exactly-once
@@ -369,6 +384,12 @@ struct Stage {
     /// Consistent-cut queue snapshot from the last completed checkpoint.
     queue_snapshot: StageQueue,
     snapshot_backlog: f64,
+    /// Previous-generation cut (the checkpoint before the last), retained
+    /// so a checkpoint-loss fault can restore one cut further back.
+    prev_committed_consumed: f64,
+    prev_committed_emitted: f64,
+    prev_queue_snapshot: StageQueue,
+    prev_snapshot_backlog: f64,
     /// Per-replica-count skew weights for keyed stages (lazily cached):
     /// `n -> (effective-capacity factor, per-replica weight shares)`.
     skew_cache: std::collections::HashMap<usize, (f64, Vec<f64>)>,
@@ -413,6 +434,22 @@ pub struct Simulation {
     /// Every restart (rescale or failure), in time order.
     pub rescale_log: Vec<RescaleEvent>,
     failures: Vec<Timestamp>,
+    /// Typed fault schedule and the index of the next un-injected event.
+    faults: FaultTimeline,
+    fault_cursor: usize,
+    /// Flat worker indices to respawn when the in-flight restart completes
+    /// (partial-respawn faults); `None` → full respawn.
+    pending_respawn: Option<Vec<usize>>,
+    /// Active gray failures: (flat worker index, saved speed, restore tick).
+    gray_saved: Vec<(usize, f64, Timestamp)>,
+    /// Active crash-loop fault: (fail_prob, max_retries, failed attempts).
+    crash_loop: Option<(f64, u32, u32)>,
+    /// Rescale plans refused because a restart was already in flight.
+    dropped_rescales: u64,
+    /// Restart attempts that failed and were retried (crash-loop faults).
+    restart_retries: u64,
+    /// Ticks spent not serving (restart + retry-backoff windows).
+    down_ticks: u64,
     rate_noise: f64,
     started: bool,
     handles: Handles,
@@ -510,6 +547,12 @@ impl Handles {
 impl Simulation {
     /// Build a deployment from its static configuration.
     pub fn new(cfg: SimConfig) -> Self {
+        assert!(
+            cfg.failures.windows(2).all(|w| w[0] < w[1]),
+            "failure schedule must be sorted and duplicate-free: {:?}",
+            cfg.failures
+        );
+        cfg.faults.validate();
         let mut job = cfg.job;
         if let Some(z) = cfg.zipf_override {
             job.zipf_s = z;
@@ -542,6 +585,10 @@ impl Simulation {
                     committed_emitted: 0.0,
                     queue_snapshot: StageQueue::new(QueuePolicy::default()),
                     snapshot_backlog: 0.0,
+                    prev_committed_consumed: 0.0,
+                    prev_committed_emitted: 0.0,
+                    prev_queue_snapshot: StageQueue::new(QueuePolicy::default()),
+                    prev_snapshot_backlog: 0.0,
                     skew_cache: std::collections::HashMap::new(),
                     last_processed: 0.0,
                 })
@@ -575,6 +622,14 @@ impl Simulation {
             latencies: Ecdf::new(),
             rescale_log: Vec::new(),
             failures: cfg.failures,
+            faults: cfg.faults,
+            fault_cursor: 0,
+            pending_respawn: None,
+            gray_saved: Vec::new(),
+            crash_loop: None,
+            dropped_rescales: 0,
+            restart_retries: 0,
+            down_ticks: 0,
             rate_noise: cfg.rate_noise,
             started: false,
             handles,
@@ -614,6 +669,7 @@ impl Simulation {
         for st in &mut self.stages {
             st.queue = StageQueue::new(policy);
             st.queue_snapshot = StageQueue::new(policy);
+            st.prev_queue_snapshot = StageQueue::new(policy);
         }
     }
 
@@ -649,6 +705,24 @@ impl Simulation {
     /// 7d–10d, normalized by the caller).
     pub fn worker_seconds(&self) -> f64 {
         self.worker_seconds
+    }
+
+    /// Rescale plans refused because a restart was already in flight —
+    /// autoscaler decisions that would otherwise be silently lost.
+    pub fn dropped_rescales(&self) -> u64 {
+        self.dropped_rescales
+    }
+
+    /// Restart attempts that failed and were retried under backoff
+    /// (crash-loop faults).
+    pub fn restart_retries(&self) -> u64 {
+        self.restart_retries
+    }
+
+    /// Ticks spent not serving — restart downtime *and* crash-loop retry
+    /// backoff windows (the SLO accounting's downtime term).
+    pub fn down_ticks(&self) -> u64 {
+        self.down_ticks
     }
 
     /// Job parallelism: fused pool size, or max stage parallelism (staged).
@@ -720,6 +794,7 @@ impl Simulation {
             ready: self.cluster.ready(),
             max_replicas: self.cluster.max_replicas(),
             stage_parallelism: &self.stage_replicas,
+            dropped_rescales: self.dropped_rescales,
         }
     }
 
@@ -731,6 +806,12 @@ impl Simulation {
             p.checkpoint();
         }
         for st in &mut self.stages {
+            // The last cut shifts into the previous-cut generation so a
+            // checkpoint-loss fault can still restore one cut back.
+            st.prev_committed_consumed = st.committed_consumed;
+            st.prev_committed_emitted = st.committed_emitted;
+            st.prev_queue_snapshot.assign_from(&st.queue_snapshot);
+            st.prev_snapshot_backlog = st.snapshot_backlog;
             st.committed_consumed = st.consumed;
             st.committed_emitted = st.emitted;
             st.queue_snapshot.assign_from(&st.queue);
@@ -747,6 +828,26 @@ impl Simulation {
             p.rewind();
         }
         for st in &mut self.stages {
+            st.consumed = st.committed_consumed;
+            st.emitted = st.committed_emitted;
+            st.queue.assign_from(&st.queue_snapshot);
+            st.queue_backlog = st.snapshot_backlog;
+        }
+    }
+
+    /// Exactly-once replay from the *previous* consistent cut: the last
+    /// checkpoint is unusable ([`FaultEvent::CheckpointLoss`]). Afterwards
+    /// the previous cut *is* the last cut, mirroring
+    /// [`Partition::rewind_lost`] — a second loss cannot reach further back.
+    fn rewind_lost_all(&mut self) {
+        for p in &mut self.partitions {
+            p.rewind_lost();
+        }
+        for st in &mut self.stages {
+            st.committed_consumed = st.prev_committed_consumed;
+            st.committed_emitted = st.prev_committed_emitted;
+            st.queue_snapshot.assign_from(&st.prev_queue_snapshot);
+            st.snapshot_backlog = st.prev_snapshot_backlog;
             st.consumed = st.committed_consumed;
             st.emitted = st.committed_emitted;
             st.queue.assign_from(&st.queue_snapshot);
@@ -787,6 +888,11 @@ impl Simulation {
             self.rescale_log.push(ev);
             Some(ev)
         } else {
+            // Mid-restart the decision is refused and would otherwise be
+            // silently lost — count it (same-target no-ops are not drops).
+            if !self.cluster.ready() {
+                self.dropped_rescales += 1;
+            }
             None
         }
     }
@@ -828,6 +934,8 @@ impl Simulation {
             self.rescale_log.push(ev);
             Some(ev)
         } else {
+            // `request_restart` only refuses while a restart is in flight.
+            self.dropped_rescales += 1;
             None
         }
     }
@@ -845,7 +953,12 @@ impl Simulation {
         }
     }
 
-    fn inject_failure(&mut self) {
+    /// Stop-the-world failure restart at unchanged parallelism, optionally
+    /// restoring from the *previous* consistent cut (checkpoint loss) —
+    /// the shared core of the legacy failure schedule and every
+    /// restart-bearing typed fault. Returns whether the restart began
+    /// (false while the job is already down).
+    fn inject_restart(&mut self, lose_checkpoint: bool) -> bool {
         let from = match self.stage_model {
             StageModel::Fused => self.cluster.parallelism(),
             StageModel::Staged => self.stage_replicas.iter().sum(),
@@ -854,7 +967,11 @@ impl Simulation {
         let downtime = self.profile.failure_detection_secs
             + base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
         if self.cluster.request_failure_restart(self.now, downtime) {
-            self.rewind_all();
+            if lose_checkpoint {
+                self.rewind_lost_all();
+            } else {
+                self.rewind_all();
+            }
             if self.stage_model == StageModel::Staged {
                 // Same counts come back, but every pod is recreated.
                 self.stage_target = Some(self.stage_replicas.clone());
@@ -866,6 +983,169 @@ impl Simulation {
                 downtime_secs: downtime,
                 failure: true,
             });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The legacy whole-job failure (every pod recreated, replay from the
+    /// last cut) — [`FaultEvent::WorkerCrash`] generalizes this.
+    fn inject_failure(&mut self) {
+        self.inject_restart(false);
+    }
+
+    /// Total live pods across the deployment (fused pool or all stages).
+    fn total_workers(&self) -> usize {
+        match self.stage_model {
+            StageModel::Fused => self.workers.len(),
+            StageModel::Staged => self.stages.iter().map(|s| s.workers.len()).sum(),
+        }
+    }
+
+    /// Worker at flattened stage-major index `flat` (fused: pool index).
+    fn worker_mut_flat(&mut self, flat: usize) -> Option<&mut Worker> {
+        match self.stage_model {
+            StageModel::Fused => self.workers.get_mut(flat),
+            StageModel::Staged => {
+                let mut i = flat;
+                for st in &mut self.stages {
+                    if i < st.workers.len() {
+                        return st.workers.get_mut(i);
+                    }
+                    i -= st.workers.len();
+                }
+                None
+            }
+        }
+    }
+
+    /// Flat worker indices lost in a zone outage: the leading
+    /// `ceil(fraction · n_s)` replicas of every stage (deterministic zonal
+    /// placement by replica index), or of the fused pool.
+    fn zone_indices(&self, fraction: f64) -> Vec<usize> {
+        match self.stage_model {
+            StageModel::Fused => {
+                let n = self.workers.len();
+                let k = ((fraction * n as f64).ceil() as usize).clamp(1, n.max(1));
+                (0..k).collect()
+            }
+            StageModel::Staged => {
+                let mut out = Vec::new();
+                let mut base = 0;
+                for st in &self.stages {
+                    let n_s = st.workers.len();
+                    let k = ((fraction * n_s as f64).ceil() as usize).clamp(1, n_s.max(1));
+                    out.extend(base..base + k);
+                    base += n_s;
+                }
+                out
+            }
+        }
+    }
+
+    /// Inject one typed fault event due this tick (see [`super::faults`]).
+    fn inject_fault(&mut self, ev: FaultEvent) {
+        match ev {
+            FaultEvent::WorkerCrash { k, .. } => {
+                let k = k.min(self.total_workers()).max(1);
+                if self.inject_restart(false) {
+                    self.pending_respawn = Some((0..k).collect());
+                }
+            }
+            FaultEvent::ZoneOutage { fraction, .. } => {
+                let idxs = self.zone_indices(fraction);
+                if self.inject_restart(false) {
+                    self.pending_respawn = Some(idxs);
+                }
+            }
+            FaultEvent::GrayFailure {
+                to,
+                worker,
+                severity,
+                ..
+            } => {
+                let mut saved = None;
+                if let Some(w) = self.worker_mut_flat(worker) {
+                    let s = w.speed_factor;
+                    w.speed_factor = s * (1.0 - severity);
+                    saved = Some(s);
+                }
+                if let Some(s) = saved {
+                    self.gray_saved.push((worker, s, to));
+                }
+            }
+            FaultEvent::CrashLoop {
+                fail_prob,
+                max_retries,
+                ..
+            } => {
+                if self.inject_restart(false) {
+                    self.crash_loop = Some((fail_prob, max_retries, 0));
+                }
+            }
+            FaultEvent::CheckpointLoss { .. } => {
+                self.inject_restart(true);
+            }
+        }
+    }
+
+    /// Respawn pods after a completed restart: the full pool (the
+    /// default), or only the crashed indices when a partial-respawn fault
+    /// set [`Self::pending_respawn`] — survivors keep their speed factors.
+    /// Respawned pods shed any active gray failure (fresh pods are
+    /// healthy).
+    fn complete_restart(&mut self, n: usize) {
+        let jitter = self.profile.speed_jitter;
+        let respawn = self.pending_respawn.take();
+        match self.stage_model {
+            StageModel::Fused => {
+                if let Some(idxs) = respawn.filter(|_| self.workers.len() == n) {
+                    for &i in &idxs {
+                        if i < n {
+                            self.workers[i] = Worker::spawn(&mut self.rng, jitter);
+                            self.gray_saved.retain(|&(w, ..)| w != i);
+                        }
+                    }
+                } else {
+                    self.workers = (0..n)
+                        .map(|_| Worker::spawn(&mut self.rng, jitter))
+                        .collect();
+                    self.gray_saved.clear();
+                }
+            }
+            StageModel::Staged => {
+                let targets = self
+                    .stage_target
+                    .take()
+                    .unwrap_or_else(|| self.stage_replicas.clone());
+                let same_counts = self
+                    .stages
+                    .iter()
+                    .zip(&targets)
+                    .all(|(st, &n_s)| st.workers.len() == n_s);
+                if let Some(idxs) = respawn.filter(|_| same_counts) {
+                    for &flat in &idxs {
+                        let mut i = flat;
+                        for st in &mut self.stages {
+                            if i < st.workers.len() {
+                                st.workers[i] = Worker::spawn(&mut self.rng, jitter);
+                                break;
+                            }
+                            i -= st.workers.len();
+                        }
+                        self.gray_saved.retain(|&(w, ..)| w != flat);
+                    }
+                } else {
+                    for (st, &n_s) in self.stages.iter_mut().zip(&targets) {
+                        st.workers = (0..n_s)
+                            .map(|_| Worker::spawn(&mut self.rng, jitter))
+                            .collect();
+                    }
+                    self.gray_saved.clear();
+                }
+                self.stage_replicas = targets;
+            }
         }
     }
 
@@ -877,41 +1157,70 @@ impl Simulation {
     }
 
     /// Tick prologue shared by [`Self::step`] and the quiet-span fast
-    /// path: clock bookkeeping, failure injection, restart completion.
+    /// path: clock bookkeeping, fault/failure injection, restart
+    /// completion. Every fault effect lives here, and *both* drivers call
+    /// this for every tick of a span — which is what keeps
+    /// [`EngineMode::EventDriven`] bitwise identical to
+    /// [`EngineMode::PerTick`] on fault-bearing runs (the
+    /// [`super::faults`] boundary hooks are purely advisory span bounds).
     fn begin_tick(&mut self, t: Timestamp) {
         debug_assert!(!self.started || t == self.now + 1, "non-monotonic step");
         self.now = t;
         self.ticks += 1;
         self.started = true;
 
-        // 0. Failure injection.
+        // 0. Gray-failure restores scheduled for this tick (before any
+        //    new injection, so a back-to-back window re-degrades from the
+        //    restored speed). Entries for pods respawned inside the window
+        //    were dropped at respawn time — fresh pods are healthy.
+        if !self.gray_saved.is_empty() {
+            let mut i = 0;
+            while i < self.gray_saved.len() {
+                let (w, speed, to) = self.gray_saved[i];
+                if to == t {
+                    if let Some(wk) = self.worker_mut_flat(w) {
+                        wk.speed_factor = speed;
+                    }
+                    self.gray_saved.remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        // 1. Fault injection: the legacy schedule, then this tick's typed
+        //    events in timeline order.
         if self.failures.binary_search(&t).is_ok() {
             self.inject_failure();
         }
-
-        // 1. Restart completion → fresh pods (new speed factors), stats
-        //    reset; checkpoint clock restarts.
-        if let Some(n) = self.cluster.tick(t) {
-            let jitter = self.profile.speed_jitter;
-            match self.stage_model {
-                StageModel::Fused => {
-                    self.workers = (0..n)
-                        .map(|_| Worker::spawn(&mut self.rng, jitter))
-                        .collect();
-                }
-                StageModel::Staged => {
-                    let targets = self
-                        .stage_target
-                        .take()
-                        .unwrap_or_else(|| self.stage_replicas.clone());
-                    for (st, &n_s) in self.stages.iter_mut().zip(&targets) {
-                        st.workers = (0..n_s)
-                            .map(|_| Worker::spawn(&mut self.rng, jitter))
-                            .collect();
-                    }
-                    self.stage_replicas = targets;
-                }
+        while self.fault_cursor < self.faults.events().len()
+            && self.faults.events()[self.fault_cursor].at() <= t
+        {
+            let ev = self.faults.events()[self.fault_cursor];
+            self.fault_cursor += 1;
+            if ev.at() == t {
+                self.inject_fault(ev);
             }
+        }
+
+        // 2. Restart completion → fresh pods (new speed factors), stats
+        //    reset; checkpoint clock restarts. A crash-loop fault may fail
+        //    the attempt instead (one seeded draw), re-entering the down
+        //    state under exponential backoff.
+        if let Some(n) = self.cluster.tick(t) {
+            if let Some((fail_prob, max_retries, attempt)) = self.crash_loop {
+                if attempt < max_retries && self.rng.f64() < fail_prob {
+                    let attempt = attempt + 1;
+                    self.crash_loop = Some((fail_prob, max_retries, attempt));
+                    self.restart_retries += 1;
+                    let backoff = (RETRY_BACKOFF_BASE_SECS * 2f64.powi(attempt as i32 - 1))
+                        .min(RETRY_BACKOFF_CAP_SECS);
+                    self.cluster.begin_retry(t, n, backoff);
+                    return;
+                }
+                self.crash_loop = None;
+            }
+            self.complete_restart(n);
             self.last_checkpoint = t;
         }
     }
@@ -945,6 +1254,11 @@ impl Simulation {
             if t - self.last_checkpoint >= self.profile.checkpoint_interval {
                 self.complete_checkpoint(t);
             }
+        } else {
+            // Not serving: restart or retry-backoff downtime. Quiet spans
+            // require a ready cluster, so every down tick passes through
+            // this reference core in both engine modes.
+            self.down_ticks += 1;
         }
 
         // 5. Global metrics.
@@ -1688,6 +2002,18 @@ impl Simulation {
         self.failures.get(i).copied()
     }
 
+    /// Next tick (> `t`) at which a typed fault changes engine behavior —
+    /// the [`super::faults`] span-bounding hook, advisory exactly like
+    /// [`Self::next_failure_after`].
+    pub fn next_fault_boundary(&self, t: Timestamp) -> Option<Timestamp> {
+        self.faults.next_boundary(t)
+    }
+
+    /// The configured typed fault timeline.
+    pub fn faults(&self) -> &FaultTimeline {
+        &self.faults
+    }
+
     /// Total backlog: unconsumed source tuples, plus (staged) the bounded
     /// in-flight contents of the inter-stage queues in their stages' input
     /// units.
@@ -1994,6 +2320,9 @@ mod tests {
         assert_eq!(a.total_backlog().to_bits(), b.total_backlog().to_bits());
         assert_eq!(a.worker_seconds().to_bits(), b.worker_seconds().to_bits());
         assert_eq!(a.rescale_log, b.rescale_log);
+        assert_eq!(a.restart_retries(), b.restart_retries());
+        assert_eq!(a.dropped_rescales(), b.dropped_rescales());
+        assert_eq!(a.down_ticks(), b.down_ticks());
         a.check_invariants();
         b.check_invariants();
     }
@@ -2268,6 +2597,264 @@ mod tests {
             drifted.total_backlog(),
             plain.total_backlog()
         );
+    }
+
+    fn faulted_sim(rate: f64, replicas: usize, seed: u64, faults: FaultTimeline) -> Simulation {
+        let cfg = SimConfig {
+            partitions: 12,
+            initial_replicas: replicas,
+            seed,
+            faults,
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate,
+                    duration: 10_000,
+                }),
+            )
+        };
+        Simulation::new(cfg)
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted and duplicate-free")]
+    fn duplicate_failure_schedule_rejected() {
+        let cfg = SimConfig {
+            failures: vec![600, 600],
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate: 5_000.0,
+                    duration: 2_000,
+                }),
+            )
+        };
+        Simulation::new(cfg);
+    }
+
+    #[test]
+    fn worker_crash_respawns_only_the_crashed_pods() {
+        let tl = FaultTimeline::new(vec![FaultEvent::WorkerCrash { t: 200, k: 2 }]);
+        let mut sim = faulted_sim(8_000.0, 4, 31, tl);
+        run(&mut sim, 199);
+        let speeds: Vec<u64> = sim
+            .workers
+            .iter()
+            .map(|w| w.speed_factor.to_bits())
+            .collect();
+        run(&mut sim, 205);
+        assert!(!sim.ready(), "crash restarts the job");
+        assert_eq!(sim.rescale_log.len(), 1);
+        assert!(sim.rescale_log[0].failure);
+        run(&mut sim, 600);
+        assert!(sim.ready());
+        assert_eq!(sim.parallelism(), 4);
+        // Survivors keep their speed factors bit for bit; the crashed
+        // pods were redrawn.
+        assert_eq!(sim.workers[2].speed_factor.to_bits(), speeds[2]);
+        assert_eq!(sim.workers[3].speed_factor.to_bits(), speeds[3]);
+        assert_ne!(
+            (
+                sim.workers[0].speed_factor.to_bits(),
+                sim.workers[1].speed_factor.to_bits()
+            ),
+            (speeds[0], speeds[1])
+        );
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn gray_failure_degrades_then_restores_exact_speed() {
+        let tl = FaultTimeline::new(vec![FaultEvent::GrayFailure {
+            from: 100,
+            to: 300,
+            worker: 1,
+            severity: 0.5,
+        }]);
+        let mut sim = faulted_sim(8_000.0, 4, 32, tl);
+        run(&mut sim, 99);
+        let healthy = sim.workers[1].speed_factor;
+        run(&mut sim, 100);
+        assert_eq!(
+            sim.workers[1].speed_factor.to_bits(),
+            (healthy * 0.5).to_bits()
+        );
+        assert!(sim.ready(), "gray failures never restart the job");
+        assert!(sim.rescale_log.is_empty());
+        run(&mut sim, 300);
+        assert_eq!(sim.workers[1].speed_factor.to_bits(), healthy.to_bits());
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn crash_loop_retries_then_recovers() {
+        let tl = FaultTimeline::new(vec![FaultEvent::CrashLoop {
+            t: 150,
+            fail_prob: 0.999,
+            max_retries: 3,
+        }]);
+        let mut sim = faulted_sim(8_000.0, 4, 33, tl);
+        run(&mut sim, 149);
+        assert_eq!(sim.restart_retries(), 0);
+        let mut saw_retry = false;
+        for t in 150..=1_200 {
+            sim.step(t);
+            if matches!(sim.phase(), Phase::Retrying { .. }) {
+                saw_retry = true;
+            }
+        }
+        assert!(sim.ready(), "retry budget forces eventual success");
+        assert!(saw_retry, "the retry phase was never observable");
+        assert!(
+            (1..=3).contains(&sim.restart_retries()),
+            "retries {}",
+            sim.restart_retries()
+        );
+        assert_eq!(sim.rescale_log.len(), 1, "one fault, one logged restart");
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn checkpoint_loss_falls_back_to_previous_cut() {
+        let tl = FaultTimeline::new(vec![FaultEvent::CheckpointLoss { t: 205 }]);
+        let mut sim = faulted_sim(8_000.0, 4, 34, tl);
+        run(&mut sim, 204);
+        let last_cut = sim.total_committed();
+        run(&mut sim, 205);
+        // The restore reached back *past* the last cut: offsets fell to
+        // the previous checkpoint's cut.
+        assert!(
+            sim.total_committed() < last_cut - 1.0,
+            "committed {} did not fall below the lost cut {last_cut}",
+            sim.total_committed()
+        );
+        assert_eq!(
+            sim.total_consumed().to_bits(),
+            sim.total_committed().to_bits()
+        );
+        run(&mut sim, 800);
+        assert!(sim.ready());
+        sim.check_invariants();
+        crate::assert_close!(sim.total_produced(), sim.total_consumed(), rtol = 0.01);
+    }
+
+    #[test]
+    fn zone_outage_respawns_the_leading_replicas_of_every_stage() {
+        let tl = FaultTimeline::new(vec![FaultEvent::ZoneOutage {
+            t: 150,
+            fraction: 0.5,
+        }]);
+        let cfg = SimConfig {
+            partitions: 24,
+            initial_replicas: 2,
+            seed: 35,
+            stage_model: StageModel::Staged,
+            faults: tl,
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate: 8_000.0,
+                    duration: 10_000,
+                }),
+            )
+        };
+        let mut sim = Simulation::new(cfg);
+        run(&mut sim, 149);
+        let speeds: Vec<Vec<u64>> = sim
+            .stages
+            .iter()
+            .map(|st| st.workers.iter().map(|w| w.speed_factor.to_bits()).collect())
+            .collect();
+        run(&mut sim, 600);
+        assert!(sim.ready());
+        assert_eq!(sim.stage_parallelism(), &[2, 2, 2, 2]);
+        for (s, st) in sim.stages.iter().enumerate() {
+            // ceil(0.5 · 2) = 1: replica 0 redrawn, replica 1 kept.
+            assert_ne!(st.workers[0].speed_factor.to_bits(), speeds[s][0], "stage {s}");
+            assert_eq!(st.workers[1].speed_factor.to_bits(), speeds[s][1], "stage {s}");
+        }
+        assert_eq!(sim.rescale_log.len(), 1);
+        assert!(sim.rescale_log[0].failure);
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn mid_restart_rescale_plans_are_counted_as_dropped() {
+        let mut sim = sim_with(8_000.0, 4, 36);
+        run(&mut sim, 100);
+        assert!(sim.request_rescale(8).is_some());
+        assert_eq!(sim.dropped_rescales(), 0);
+        // Mid-restart: refused and counted.
+        assert!(sim.request_rescale(6).is_none());
+        assert!(sim.request_rescale(5).is_none());
+        assert_eq!(sim.dropped_rescales(), 2);
+        assert_eq!(sim.view().dropped_rescales, 2);
+        run(&mut sim, 300);
+        // Same-target no-op while running is not a drop.
+        assert!(sim.request_rescale(8).is_none());
+        assert_eq!(sim.dropped_rescales(), 2);
+        // Staged: mid-restart vector plans count too.
+        let mut st = staged_sim(8_000.0, 2, 36);
+        run(&mut st, 100);
+        assert!(st.request_rescale_stages(&[3, 3, 3, 3]).is_some());
+        assert!(st.request_rescale_stages(&[4, 4, 4, 4]).is_none());
+        assert_eq!(st.dropped_rescales(), 1);
+    }
+
+    #[test]
+    fn advance_quiet_agrees_bitwise_across_fault_timeline() {
+        // One run exercising every fault type: gray window straddling a
+        // worker crash (the respawned pod sheds its gray entry), a zonal
+        // outage, a crash loop and a checkpoint loss — under rate noise.
+        let tl = || {
+            FaultTimeline::new(vec![
+                FaultEvent::GrayFailure {
+                    from: 80,
+                    to: 260,
+                    worker: 0,
+                    severity: 0.4,
+                },
+                FaultEvent::WorkerCrash { t: 150, k: 2 },
+                FaultEvent::ZoneOutage {
+                    t: 320,
+                    fraction: 0.5,
+                },
+                FaultEvent::CrashLoop {
+                    t: 420,
+                    fail_prob: 0.9,
+                    max_retries: 3,
+                },
+                FaultEvent::CheckpointLoss { t: 560 },
+            ])
+        };
+        let mk = |staged: bool| {
+            let cfg = SimConfig {
+                partitions: 12,
+                initial_replicas: 4,
+                seed: 37,
+                rate_noise: 0.02,
+                faults: tl(),
+                stage_model: if staged {
+                    StageModel::Staged
+                } else {
+                    StageModel::Fused
+                },
+                ..SimConfig::base(
+                    EngineProfile::flink(),
+                    JobProfile::wordcount(),
+                    Box::new(ConstantWorkload {
+                        rate: 8_000.0,
+                        duration: 10_000,
+                    }),
+                )
+            };
+            Simulation::new(cfg)
+        };
+        assert_advance_quiet_agrees(mk(false), mk(false), 900);
+        assert_advance_quiet_agrees(mk(true), mk(true), 900);
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Typed fault injection: declarative, time-ordered fault timelines.
+//!
+//! The legacy failure schedule (`SimConfig::failures`, a `Vec<Timestamp>`
+//! of identical whole-job stop-the-world restarts) models exactly one
+//! failure mode. Real DSP deployments fail in richer ways — the paper
+//! defers this evaluation (§4.8), and Phoebe treats recovery behavior as a
+//! first-class QoS dimension — so this module makes fault schedules *data*:
+//! a [`FaultTimeline`] is a time-ordered list of typed [`FaultEvent`]s the
+//! engine injects at the start of the matching tick.
+//!
+//! ## The event-driven boundary contract
+//!
+//! Every fault type implements [`FaultEvent::next_boundary`]: the next
+//! future time at which the fault changes engine behavior. The harness
+//! folds [`FaultTimeline::next_boundary`] into its quiet-span bound next to
+//! the workload knots and the autoscaler's next decision tick. The hook is
+//! **advisory**: `Simulation::advance_quiet` calls `begin_tick` (where all
+//! fault injection lives) for every tick of a span and falls back to the
+//! reference core on any non-quiet tick, so `EngineMode::EventDriven`
+//! stays bitwise identical to `PerTick` even without the bound — the
+//! boundary only keeps spans from uselessly straddling an injection.
+//! New fault types MUST ship this hook (see CONTRIBUTING).
+//!
+//! ## Taxonomy
+//!
+//! * [`FaultEvent::WorkerCrash`] — the legacy restart generalized: `k` of
+//!   the `n` workers die; the job stop-the-world restarts at unchanged
+//!   parallelism, but only the crashed pods are respawned fresh (new speed
+//!   factors), survivors keep theirs.
+//! * [`FaultEvent::ZoneOutage`] — correlated loss of a zone: the leading
+//!   `ceil(fraction · n)` replicas of every stage (deterministic zonal
+//!   placement by replica index) crash together.
+//! * [`FaultEvent::GrayFailure`] — a straggler: one worker's speed factor
+//!   is degraded by `severity` over `[from, to)` with **no restart** — the
+//!   fault is detectable only through throughput. The exact pre-fault
+//!   speed is restored at `to` (bit-for-bit) unless the pod was respawned
+//!   inside the window (fresh pods are healthy).
+//! * [`FaultEvent::CrashLoop`] — the restart itself fails: each restart
+//!   completion is retried with seeded probability `fail_prob` under
+//!   exponential backoff ([`RETRY_BACKOFF_BASE_SECS`] doubling per attempt,
+//!   capped at [`RETRY_BACKOFF_CAP_SECS`]), at most `max_retries` times
+//!   (`Cluster::Phase::Retrying` is the cluster-visible state).
+//! * [`FaultEvent::CheckpointLoss`] — the restore at `t` cannot use the
+//!   last checkpoint and falls back to the *previous* consistent cut,
+//!   lengthening replay (`Partition::rewind_lost`).
+
+use crate::clock::Timestamp;
+
+/// First retry backoff after a failed restart attempt (seconds).
+pub const RETRY_BACKOFF_BASE_SECS: f64 = 10.0;
+/// Upper bound on the exponential retry backoff (seconds).
+pub const RETRY_BACKOFF_CAP_SECS: f64 = 160.0;
+
+/// One typed fault event (see the module docs for the taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// `k` of the workers crash at `t`; stop-the-world restart at unchanged
+    /// parallelism with partial-respawn semantics (only the crashed pods
+    /// draw fresh speed factors).
+    WorkerCrash {
+        /// Injection tick.
+        t: Timestamp,
+        /// Number of workers killed (clamped to the deployment size).
+        k: usize,
+    },
+    /// A zone dies at `t`: the leading `ceil(fraction · n)` replicas of
+    /// every stage (or of the fused pool) crash together.
+    ZoneOutage {
+        /// Injection tick.
+        t: Timestamp,
+        /// Fraction of every stage's replicas lost, in `(0, 1]`.
+        fraction: f64,
+    },
+    /// Worker `worker` (flattened stage-major index on staged deployments)
+    /// runs at `speed · (1 − severity)` over `[from, to)`. No restart; the
+    /// exact original speed is restored at `to` unless the pod was
+    /// respawned inside the window.
+    GrayFailure {
+        /// Degradation start tick.
+        from: Timestamp,
+        /// Restoration tick (exclusive end of the window).
+        to: Timestamp,
+        /// Flattened worker index the straggler lives at.
+        worker: usize,
+        /// Speed degradation in `(0, 1)`.
+        severity: f64,
+    },
+    /// All workers crash at `t`, and each restart completion fails with
+    /// probability `fail_prob` (one seeded PRNG draw per attempt), retried
+    /// under exponential backoff at most `max_retries` times.
+    CrashLoop {
+        /// Injection tick.
+        t: Timestamp,
+        /// Per-attempt restart-failure probability, in `[0, 1)`.
+        fail_prob: f64,
+        /// Retry budget before a completion is forced to succeed.
+        max_retries: u32,
+    },
+    /// All workers crash at `t` and the last checkpoint is unusable: the
+    /// restore falls back to the previous consistent cut.
+    CheckpointLoss {
+        /// Injection tick.
+        t: Timestamp,
+    },
+}
+
+impl FaultEvent {
+    /// The tick this fault first acts on the engine.
+    pub fn at(&self) -> Timestamp {
+        match *self {
+            FaultEvent::WorkerCrash { t, .. }
+            | FaultEvent::ZoneOutage { t, .. }
+            | FaultEvent::CrashLoop { t, .. }
+            | FaultEvent::CheckpointLoss { t } => t,
+            FaultEvent::GrayFailure { from, .. } => from,
+        }
+    }
+
+    /// The next future time (> `t`) at which this fault changes engine
+    /// behavior — the event-driven span-bounding hook (advisory; see the
+    /// module docs). `None` once the fault is entirely in the past.
+    pub fn next_boundary(&self, t: Timestamp) -> Option<Timestamp> {
+        match *self {
+            FaultEvent::WorkerCrash { t: at, .. }
+            | FaultEvent::ZoneOutage { t: at, .. }
+            | FaultEvent::CrashLoop { t: at, .. }
+            | FaultEvent::CheckpointLoss { t: at } => (at > t).then_some(at),
+            FaultEvent::GrayFailure { from, to, .. } => {
+                if from > t {
+                    Some(from)
+                } else if to > t {
+                    Some(to)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Whether this fault triggers a stop-the-world restart at injection
+    /// (gray failures do not — that is what makes them gray).
+    pub fn restarts(&self) -> bool {
+        !matches!(self, FaultEvent::GrayFailure { .. })
+    }
+
+    /// Parameter sanity (panics with a description on an invalid event).
+    fn validate(&self) {
+        match *self {
+            FaultEvent::WorkerCrash { k, .. } => {
+                assert!(k >= 1, "WorkerCrash must kill at least one worker");
+            }
+            FaultEvent::ZoneOutage { fraction, .. } => {
+                assert!(
+                    fraction > 0.0 && fraction <= 1.0,
+                    "ZoneOutage fraction must be in (0, 1], got {fraction}"
+                );
+            }
+            FaultEvent::GrayFailure {
+                from, to, severity, ..
+            } => {
+                assert!(from < to, "GrayFailure window is empty: [{from}, {to})");
+                assert!(
+                    severity > 0.0 && severity < 1.0,
+                    "GrayFailure severity must be in (0, 1), got {severity}"
+                );
+            }
+            FaultEvent::CrashLoop {
+                fail_prob,
+                max_retries,
+                ..
+            } => {
+                assert!(
+                    (0.0..1.0).contains(&fail_prob),
+                    "CrashLoop fail_prob must be in [0, 1), got {fail_prob}"
+                );
+                assert!(max_retries >= 1, "CrashLoop needs a retry budget");
+            }
+            FaultEvent::CheckpointLoss { .. } => {}
+        }
+    }
+}
+
+/// A declarative, time-ordered fault schedule for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultTimeline {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultTimeline {
+    /// Build a timeline from `events`; they are sorted by injection time
+    /// (stable, so same-tick events keep their given order) and validated.
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.at());
+        let tl = Self { events };
+        tl.validate();
+        tl
+    }
+
+    /// No faults scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The scheduled events, in injection order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// The next future time (> `t`) any scheduled fault changes engine
+    /// behavior — the quiet-span bound (advisory; see the module docs).
+    pub fn next_boundary(&self, t: Timestamp) -> Option<Timestamp> {
+        self.events
+            .iter()
+            .filter_map(|e| e.next_boundary(t))
+            .min()
+    }
+
+    /// Injection times of every restart-bearing fault, sorted — the
+    /// harness measures recovery around these exactly as it does around
+    /// the legacy failure schedule.
+    pub fn restart_times(&self) -> Vec<Timestamp> {
+        let mut out: Vec<Timestamp> = self
+            .events
+            .iter()
+            .filter(|e| e.restarts())
+            .map(|e| e.at())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Assert ordering and per-event parameter sanity (called on
+    /// construction and again when a `SimConfig` is consumed).
+    pub fn validate(&self) {
+        for w in self.events.windows(2) {
+            assert!(
+                w[0].at() <= w[1].at(),
+                "fault timeline not time-ordered: {:?} after {:?}",
+                w[1],
+                w[0]
+            );
+        }
+        for e in &self.events {
+            e.validate();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_sorts_and_validates() {
+        let tl = FaultTimeline::new(vec![
+            FaultEvent::CheckpointLoss { t: 900 },
+            FaultEvent::WorkerCrash { t: 300, k: 2 },
+            FaultEvent::GrayFailure {
+                from: 100,
+                to: 500,
+                worker: 1,
+                severity: 0.5,
+            },
+        ]);
+        let at: Vec<Timestamp> = tl.events().iter().map(|e| e.at()).collect();
+        assert_eq!(at, vec![100, 300, 900]);
+        assert!(!tl.is_empty());
+        assert!(FaultTimeline::default().is_empty());
+    }
+
+    #[test]
+    fn next_boundary_walks_every_edge() {
+        let tl = FaultTimeline::new(vec![
+            FaultEvent::GrayFailure {
+                from: 100,
+                to: 500,
+                worker: 0,
+                severity: 0.3,
+            },
+            FaultEvent::CrashLoop {
+                t: 300,
+                fail_prob: 0.5,
+                max_retries: 3,
+            },
+        ]);
+        // Before everything: the gray start.
+        assert_eq!(tl.next_boundary(0), Some(100));
+        // Inside the gray window: the crash-loop injection comes first.
+        assert_eq!(tl.next_boundary(100), Some(300));
+        // Past the injection: the gray restore edge remains.
+        assert_eq!(tl.next_boundary(300), Some(500));
+        // Past everything: no more boundaries.
+        assert_eq!(tl.next_boundary(500), None);
+        assert_eq!(FaultTimeline::default().next_boundary(0), None);
+    }
+
+    #[test]
+    fn restart_times_exclude_gray_failures() {
+        let tl = FaultTimeline::new(vec![
+            FaultEvent::GrayFailure {
+                from: 50,
+                to: 150,
+                worker: 0,
+                severity: 0.4,
+            },
+            FaultEvent::ZoneOutage { t: 200, fraction: 0.5 },
+            FaultEvent::WorkerCrash { t: 400, k: 1 },
+        ]);
+        assert_eq!(tl.restart_times(), vec![200, 400]);
+    }
+
+    #[test]
+    #[should_panic(expected = "severity")]
+    fn invalid_severity_rejected() {
+        FaultTimeline::new(vec![FaultEvent::GrayFailure {
+            from: 0,
+            to: 10,
+            worker: 0,
+            severity: 1.5,
+        }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "fraction")]
+    fn invalid_fraction_rejected() {
+        FaultTimeline::new(vec![FaultEvent::ZoneOutage { t: 5, fraction: 0.0 }]);
+    }
+}

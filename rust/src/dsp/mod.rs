@@ -20,6 +20,7 @@
 
 pub mod cluster;
 pub mod engine;
+pub mod faults;
 pub mod partition;
 pub mod profile;
 pub mod queue;
@@ -27,6 +28,7 @@ pub mod skew;
 pub mod worker;
 
 pub use cluster::{Cluster, Phase};
+pub use faults::{FaultEvent, FaultTimeline};
 pub use engine::{
     EngineMode, MergePolicy, RescaleEvent, ScalePlan, SimConfig, Simulation, StageFlow,
     StageModel,

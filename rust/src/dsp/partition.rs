@@ -32,6 +32,12 @@ pub struct Partition {
     queue: VecDeque<Chunk>,
     /// Consumed but not yet committed (checkpointed) chunks, oldest first.
     pending: VecDeque<Chunk>,
+    /// Chunks committed by the *last* checkpoint (the delta between the
+    /// previous cut and the last cut), retained so a checkpoint-loss fault
+    /// can replay back to the previous consistent cut.
+    prev_pending: VecDeque<Chunk>,
+    /// Committed offset of the previous (second-to-last) checkpoint.
+    prev_committed: f64,
     /// Total tuples produced into the partition.
     pub produced: f64,
     /// Total tuples consumed (net of exactly-once replay).
@@ -159,9 +165,12 @@ impl Partition {
         }
     }
 
-    /// A checkpoint completed: committed catches up to consumed.
+    /// A checkpoint completed: committed catches up to consumed. The just-
+    /// committed chunk log shifts into the previous-cut generation so a
+    /// checkpoint-loss fault can still replay one cut further back.
     pub fn checkpoint(&mut self) {
-        self.pending.clear();
+        self.prev_committed = self.committed;
+        self.prev_pending = std::mem::take(&mut self.pending);
         self.committed = self.consumed;
     }
 
@@ -181,6 +190,27 @@ impl Partition {
         }
         debug_assert!((self.consumed - self.committed).abs() < 1e-6);
         self.consumed = self.committed;
+    }
+
+    /// Restart from the *previous* consistent cut: the last checkpoint is
+    /// unusable (checkpoint-loss fault), so both the uncommitted log and
+    /// the last checkpoint's chunk log are replayed — the offsets fall back
+    /// to the previous checkpoint, lengthening replay. Degrades to
+    /// [`Partition::rewind`] when no previous cut exists. Afterwards the
+    /// previous cut *is* the last cut (a second loss cannot rewind further
+    /// than this one did).
+    pub fn rewind_lost(&mut self) {
+        self.rewind();
+        while let Some(chunk) = self.prev_pending.pop_back() {
+            self.consumed -= chunk.amount;
+            match self.queue.front_mut() {
+                Some(front) if (front.t - chunk.t).abs() < 1e-9 => front.amount += chunk.amount,
+                _ => self.queue.push_front(chunk),
+            }
+        }
+        debug_assert!((self.consumed - self.prev_committed).abs() < 1e-6);
+        self.consumed = self.prev_committed;
+        self.committed = self.prev_committed;
     }
 
     /// Invariant check (used by tests and debug assertions).
@@ -287,6 +317,51 @@ mod tests {
             p.check_invariants();
         }
         crate::assert_close!(p.backlog(), 180.0, atol = 1e-9);
+    }
+
+    #[test]
+    fn rewind_lost_replays_back_to_previous_cut() {
+        let mut p = Partition::new();
+        p.produce(0.5, 100.0);
+        p.consume(100.0);
+        p.checkpoint(); // cut A at offset 100
+        p.produce(1.5, 80.0);
+        p.consume(80.0);
+        p.checkpoint(); // cut B at offset 180
+        p.produce(2.5, 40.0);
+        p.consume(20.0);
+        // Checkpoint loss: cut B is unusable — the replay reaches back to
+        // cut A, so both the 20 uncommitted tuples AND cut B's 80 come
+        // back, with their original arrival times.
+        p.rewind_lost();
+        crate::assert_close!(p.consumed, 100.0, atol = 1e-9);
+        crate::assert_close!(p.committed, 100.0, atol = 1e-9);
+        crate::assert_close!(p.backlog(), 120.0, atol = 1e-9);
+        let got = p.consume(f64::INFINITY);
+        // FIFO order with original timestamps: 80 @ 1.5 before 40 @ 2.5.
+        crate::assert_close!(got[0].t, 1.5, atol = 1e-12);
+        crate::assert_close!(got[0].amount, 80.0, atol = 1e-9);
+        crate::assert_close!(got[1].t, 2.5, atol = 1e-12);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn rewind_lost_without_previous_cut_degrades_to_rewind() {
+        let mut p = Partition::new();
+        p.produce(0.5, 100.0);
+        p.consume(60.0);
+        // No checkpoint ever completed: the previous cut is job start.
+        p.rewind_lost();
+        crate::assert_close!(p.consumed, 0.0, atol = 1e-9);
+        crate::assert_close!(p.backlog(), 100.0, atol = 1e-9);
+        assert_eq!(p.queue_len(), 1);
+        p.check_invariants();
+        // A second loss right after cannot rewind further.
+        p.consume(30.0);
+        p.checkpoint();
+        p.rewind_lost();
+        crate::assert_close!(p.consumed, 0.0, atol = 1e-9);
+        p.check_invariants();
     }
 
     #[test]

@@ -165,6 +165,28 @@ pub fn paper_sections() -> Vec<SectionSpec> {
             "ds2-job",
         ),
         s(
+            "resilience",
+            "Fault injection & resilience (typed fault timelines)",
+            "Recovery behavior under the `dsp::faults` taxonomy: the legacy \
+             whole-job restart schedules plus the typed chaos cells — mixed \
+             chaos (gray straggler, partial crash, zone outage, checkpoint \
+             loss), a crash-loop storm with retry backoff, and a week-shape \
+             double-straggler cell. The `retries` column counts failed \
+             restart attempts; `dropped` counts rescale plans refused \
+             because a restart was already in flight.",
+            &[
+                "flink-traffic-traffic-failmid",
+                "flink-wordcount-sine-failstorm3",
+                "flink-wordcount-sine-chaos",
+                "flink-wordcount-sine-crashloop3",
+                "flink-wordcount-bottleneck-shift-chaos",
+                "flink-wordcount-diurnal-week-grayweek",
+            ],
+            &["daedalus", "hpa-80", "ds2", "static-12"],
+            "daedalus",
+            "static-12",
+        ),
+        s(
             "stress",
             "Stress shapes beyond the paper",
             "Flash-crowd, diurnal-drift and outage-backfill traces probe \
@@ -386,17 +408,17 @@ impl Evaluation {
         let mut out = String::new();
         out.push_str(&format!("## {}\n\n{}\n\n", sec.spec.title, sec.spec.blurb));
         out.push_str(&format!(
-            "| scenario | approach | mean ms | p95 ms | p99 ms | SLO viol % | avg workers | worker-s | vs {} | rescales | worst rec s |\n",
+            "| scenario | approach | mean ms | p95 ms | p99 ms | SLO viol % | avg workers | worker-s | vs {} | rescales | worst rec s | retries | dropped |\n",
             sec.spec.baseline
         ));
-        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for row in &sec.rows {
             let vs = match sec.vs_baseline_pct(row) {
                 Some(pct) => format!("{pct:+.1}%"),
                 None => "-".into(),
             };
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
                 row.scenario,
                 row.approach,
                 f(row.avg_latency_ms(), 0),
@@ -408,6 +430,8 @@ impl Evaluation {
                 vs,
                 f(row.rescales, 1),
                 fmt_recovery(row),
+                f(row.restart_retries, 1),
+                f(row.dropped_rescales, 1),
             ));
         }
         out.push('\n');
@@ -498,7 +522,8 @@ impl Evaluation {
         let mut out = String::from(
             "section,scenario,approach,seeds,mean_latency_ms,p95_ms,p99_ms,max_ms,\
              slo_violation_frac,avg_workers,worker_seconds,profiling_worker_seconds,\
-             total_worker_seconds,reduction_vs_baseline_pct,rescales,lag_max,recovery_max_s\n",
+             total_worker_seconds,reduction_vs_baseline_pct,rescales,lag_max,recovery_max_s,\
+             restart_retries,dropped_rescales\n",
         );
         for sec in &self.sections {
             for row in &sec.rows {
@@ -515,7 +540,7 @@ impl Evaluation {
                     Some(_) => "inf".into(),
                 };
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     sec.spec.id,
                     row.scenario,
                     row.approach,
@@ -533,6 +558,8 @@ impl Evaluation {
                     f(row.rescales, 2),
                     f(row.lag_max, 1),
                     rec,
+                    f(row.restart_retries, 2),
+                    f(row.dropped_rescales, 2),
                 ));
             }
         }
@@ -589,7 +616,8 @@ impl Evaluation {
                      \"slo_violation_frac\":{},\"avg_workers\":{},\
                      \"worker_seconds\":{},\"profiling_worker_seconds\":{},\
                      \"reduction_vs_baseline_pct\":{},\"rescales\":{},\
-                     \"lag_max\":{},\"recovery_max_s\":{},\"recovered_all\":{}}}",
+                     \"lag_max\":{},\"recovery_max_s\":{},\"recovered_all\":{},\
+                     \"restart_retries\":{},\"dropped_rescales\":{}}}",
                     row.scenario,
                     row.approach,
                     row.seeds,
@@ -605,6 +633,8 @@ impl Evaluation {
                     jf(row.lag_max, 1),
                     rec,
                     row.recovered_all(),
+                    jf(row.restart_retries, 2),
+                    jf(row.dropped_rescales, 2),
                 ));
             }
             out.push_str("]}");
@@ -686,6 +716,8 @@ mod tests {
             lag_max: 42.0,
             slo_violation_frac: 0.125,
             recovery_secs: vec![30.0, 60.0],
+            dropped_rescales: 1.5,
+            restart_retries: 0.5,
         }
     }
 

@@ -19,7 +19,7 @@ use crate::autoscaler::{
     Phoebe, PhoebeConfig, Static,
 };
 use crate::clock::Timestamp;
-use crate::dsp::{EngineMode, EngineProfile, SimConfig, Simulation, StageModel};
+use crate::dsp::{EngineMode, EngineProfile, FaultTimeline, SimConfig, Simulation, StageModel};
 use crate::jobs::{JobProfile, SelectivityDrift};
 use crate::metrics::SeriesId;
 use crate::runtime::ComputeBackend;
@@ -137,6 +137,9 @@ pub struct Experiment {
     pub sample_stride: u64,
     /// Seconds at which worker failures are injected (sorted ascending).
     pub failures: Vec<Timestamp>,
+    /// Typed fault timeline (crashes, zone outages, gray failures, …)
+    /// injected alongside the legacy failure schedule.
+    pub faults: FaultTimeline,
     /// Fused flat pool (reference) or per-operator stages.
     pub stage_model: StageModel,
     /// Optional mid-run selectivity drift (`bottleneck-shift`).
@@ -173,6 +176,7 @@ impl Experiment {
             backend,
             sample_stride: 30,
             failures: vec![],
+            faults: FaultTimeline::default(),
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,
@@ -196,6 +200,12 @@ impl Experiment {
     /// Builder: set the failure-injection schedule.
     pub fn with_failures(mut self, failures: Vec<Timestamp>) -> Self {
         self.failures = failures;
+        self
+    }
+
+    /// Builder: set the typed fault timeline.
+    pub fn with_faults(mut self, faults: FaultTimeline) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -309,6 +319,7 @@ impl Experiment {
             seed,
             rate_noise: 0.02,
             failures: self.failures.clone(),
+            faults: self.faults.clone(),
             stage_model: self.stage_model,
             selectivity_drift: self.selectivity_drift,
             zipf_override: self.zipf_override,
@@ -366,6 +377,9 @@ impl Experiment {
                 if let Some(f) = sim.next_failure_after(t) {
                     horizon = horizon.min(f);
                 }
+                if let Some(f) = sim.next_fault_boundary(t) {
+                    horizon = horizon.min(f);
+                }
                 if horizon > next {
                     sim.advance_quiet(next, horizon);
                     for u in next..horizon {
@@ -384,15 +398,16 @@ impl Experiment {
             .max_over(&SeriesId::global("consumer_lag"), 0, self.duration)
             .unwrap_or(0.0);
         // SLO accounting over the whole run: ticks whose served-latency
-        // p95 exceeded the bound, plus stop-the-world restart downtime
+        // p95 exceeded the bound, plus stop-the-world downtime ticks
         // (the p95 series is a no-op on unserved ticks, which would
         // otherwise silently drop every restart window — the worst ticks —
-        // from a frequently-rescaling approach's metric). Unserved ticks
-        // outside a restart (e.g. a producer outage) count as compliant.
+        // from a frequently-rescaling approach's metric). The engine's
+        // down-tick counter covers crash-loop retry-backoff windows too,
+        // which never appear in the rescale log's scheduled downtime.
         let viol = db.fold_over(&p95_id, 0, self.duration, 0u64, |v, _, x| {
             v + u64::from(x > self.slo_ms)
         });
-        let downtime: f64 = sim.rescale_log.iter().map(|e| e.downtime_secs).sum();
+        let downtime = sim.down_ticks() as f64;
         let slo_violation_frac = if self.duration == 0 {
             0.0
         } else {
@@ -411,7 +426,10 @@ impl Experiment {
             lag_max,
             slo_violation_frac,
             recovery_secs,
+            dropped_rescales: sim.dropped_rescales(),
+            restart_retries: sim.restart_retries(),
         };
+        trace.dropped_rescales = sim.dropped_rescales();
         (result, trace)
     }
 }
@@ -475,6 +493,12 @@ pub struct RunResult {
     /// Measured recovery time per rescale/failure event (s); `INFINITY`
     /// when the run ended before the lag recovered.
     pub recovery_secs: Vec<f64>,
+    /// Rescale plans the engine refused because a restart (or crash-loop
+    /// retry) was already in flight.
+    pub dropped_rescales: u64,
+    /// Restart attempts that failed and were retried under backoff
+    /// (crash-loop faults).
+    pub restart_retries: u64,
 }
 
 /// Results pooled over seeds for one approach.
@@ -501,6 +525,10 @@ pub struct ApproachResult {
     pub slo_violation_frac: f64,
     /// Measured recovery times pooled over all seeds (s).
     pub recovery_secs: Vec<f64>,
+    /// Mean count over seeds of rescale plans dropped mid-restart.
+    pub dropped_rescales: f64,
+    /// Mean count over seeds of crash-loop restart retries.
+    pub restart_retries: f64,
 }
 
 impl ApproachResult {
@@ -517,6 +545,8 @@ impl ApproachResult {
             lag_max: 0.0,
             slo_violation_frac: 0.0,
             recovery_secs: Vec::new(),
+            dropped_rescales: 0.0,
+            restart_retries: 0.0,
         }
     }
 
@@ -535,6 +565,8 @@ impl ApproachResult {
         self.lag_max = self.lag_max.max(run.lag_max);
         self.slo_violation_frac += run.slo_violation_frac;
         self.recovery_secs.extend(run.recovery_secs);
+        self.dropped_rescales += run.dropped_rescales as f64;
+        self.restart_retries += run.restart_retries as f64;
         if self.parallelism_series.is_empty() {
             self.parallelism_series = run.parallelism_series;
         }
@@ -548,6 +580,8 @@ impl ApproachResult {
         self.rescales /= r;
         self.final_backlog /= r;
         self.slo_violation_frac /= r;
+        self.dropped_rescales /= r;
+        self.restart_retries /= r;
     }
 
     /// Mean end-to-end latency (ms).
@@ -606,6 +640,7 @@ mod tests {
             backend: ComputeBackend::native(),
             sample_stride: 60,
             failures: vec![],
+            faults: FaultTimeline::default(),
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,
@@ -667,6 +702,8 @@ mod tests {
             assert_eq!(a.parallelism_series, b.parallelism_series);
             assert_eq!(a.final_backlog.to_bits(), b.final_backlog.to_bits());
             assert_eq!(a.rescales, b.rescales);
+            assert_eq!(a.dropped_rescales, b.dropped_rescales);
+            assert_eq!(a.restart_retries, b.restart_retries);
         }
     }
 }

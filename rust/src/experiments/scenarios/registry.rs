@@ -10,7 +10,7 @@
 
 use crate::clock::Timestamp;
 use crate::config::{EngineKind, JobKind};
-use crate::dsp::StageModel;
+use crate::dsp::{FaultEvent, FaultTimeline, StageModel};
 use crate::experiments::harness::{Approach, Experiment};
 use crate::jobs::SelectivityDrift;
 use crate::runtime::ComputeBackend;
@@ -20,6 +20,13 @@ use crate::Result;
 use anyhow::anyhow;
 
 /// When (if ever) worker failures are injected into a scenario.
+///
+/// The legacy plans (`MidRun`, `Storm`) feed the engine's whole-job restart
+/// schedule; the typed plans (`Chaos`, `GrayWeek`, `CrashLoopStorm`)
+/// generate a [`FaultTimeline`] of typed [`FaultEvent`]s instead (see
+/// `dsp::faults` for the taxonomy). A plan is pure *data* — concrete times
+/// are derived from the run duration, so the same plan scales from a CI
+/// smoke to a month-long horizon.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailurePlan {
     /// No failures — the paper's evaluation setting.
@@ -28,21 +35,98 @@ pub enum FailurePlan {
     MidRun,
     /// `n` failures spread evenly through the middle 80 % of the run.
     Storm(usize),
+    /// Mixed typed-fault chaos cell: a gray straggler, a 2-worker crash
+    /// inside the gray window, a half-zone outage at the midpoint, and a
+    /// checkpoint loss at the two-thirds mark.
+    Chaos,
+    /// Two long overlapping-free gray-failure windows (no restarts at
+    /// all) — the straggler-quarantine stress for week-scale horizons.
+    GrayWeek,
+    /// `n` crash-loop faults spread Storm-style: each restart attempt
+    /// fails with probability 0.7, retried under backoff up to 4 times.
+    CrashLoopStorm(usize),
 }
 
 impl FailurePlan {
-    /// Concrete sorted injection times for a run of `duration` seconds.
+    /// Concrete sorted, duplicate-free injection times for a run of
+    /// `duration` seconds (legacy whole-job restarts only; the typed plans
+    /// schedule through [`FailurePlan::timeline`] instead). At tiny
+    /// durations the Storm spacing collapses — times are clamped to `>= 1`
+    /// and deduped so the engine's sorted-unique assertion always holds.
     pub fn schedule(&self, duration: Timestamp) -> Vec<Timestamp> {
         match *self {
-            FailurePlan::None => vec![],
-            FailurePlan::MidRun => vec![duration / 2],
+            FailurePlan::None
+            | FailurePlan::Chaos
+            | FailurePlan::GrayWeek
+            | FailurePlan::CrashLoopStorm(_) => vec![],
+            FailurePlan::MidRun => vec![(duration / 2).max(1)],
             FailurePlan::Storm(n) => {
                 let lo = duration / 10;
                 let span = duration - 2 * lo;
-                (1..=n as u64)
-                    .map(|i| lo + i * span / (n as u64 + 1))
-                    .collect()
+                let mut out: Vec<Timestamp> = (1..=n as u64)
+                    .map(|i| (lo + i * span / (n as u64 + 1)).max(1))
+                    .collect();
+                // Monotone by construction, so dedup() removes every
+                // duplicate a degenerate (tiny-duration) spacing produced.
+                out.dedup();
+                out
             }
+        }
+    }
+
+    /// Typed fault timeline for a run of `duration` seconds (empty for the
+    /// legacy plans — they schedule through [`FailurePlan::schedule`]).
+    /// Window ends are clamped past their starts so even degenerate smoke
+    /// durations validate.
+    pub fn timeline(&self, duration: Timestamp) -> FaultTimeline {
+        match *self {
+            FailurePlan::None | FailurePlan::MidRun | FailurePlan::Storm(_) => {
+                FaultTimeline::default()
+            }
+            FailurePlan::Chaos => FaultTimeline::new(vec![
+                FaultEvent::GrayFailure {
+                    from: duration / 8,
+                    to: (duration / 3).max(duration / 8 + 1),
+                    worker: 0,
+                    severity: 0.5,
+                },
+                FaultEvent::WorkerCrash {
+                    t: duration / 4,
+                    k: 2,
+                },
+                FaultEvent::ZoneOutage {
+                    t: duration / 2,
+                    fraction: 0.5,
+                },
+                FaultEvent::CheckpointLoss {
+                    t: duration * 2 / 3,
+                },
+            ]),
+            FailurePlan::GrayWeek => FaultTimeline::new(vec![
+                FaultEvent::GrayFailure {
+                    from: duration / 6,
+                    to: (duration / 2).max(duration / 6 + 1),
+                    worker: 0,
+                    severity: 0.4,
+                },
+                FaultEvent::GrayFailure {
+                    from: duration * 7 / 12,
+                    to: (duration * 11 / 12).max(duration * 7 / 12 + 1),
+                    worker: 1,
+                    severity: 0.6,
+                },
+            ]),
+            FailurePlan::CrashLoopStorm(n) => FaultTimeline::new(
+                FailurePlan::Storm(n)
+                    .schedule(duration)
+                    .into_iter()
+                    .map(|t| FaultEvent::CrashLoop {
+                        t,
+                        fail_prob: 0.7,
+                        max_retries: 4,
+                    })
+                    .collect(),
+            ),
         }
     }
 
@@ -52,6 +136,9 @@ impl FailurePlan {
             FailurePlan::None => String::new(),
             FailurePlan::MidRun => "-failmid".into(),
             FailurePlan::Storm(n) => format!("-failstorm{n}"),
+            FailurePlan::Chaos => "-chaos".into(),
+            FailurePlan::GrayWeek => "-grayweek".into(),
+            FailurePlan::CrashLoopStorm(n) => format!("-crashloop{n}"),
         }
     }
 }
@@ -199,7 +286,8 @@ impl Scenario {
             self.duration,
         )
         .with_seeds(self.seeds.clone())
-        .with_failures(self.failures.schedule(self.duration));
+        .with_failures(self.failures.schedule(self.duration))
+        .with_faults(self.failures.timeline(self.duration));
         exp.initial_replicas = self.initial_replicas;
         exp.max_replicas = self.max_replicas;
         exp.partitions = self.partitions;
@@ -229,15 +317,17 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The curated built-in matrix (22 scenarios): the six paper
+    /// The curated built-in matrix (26 scenarios): the six paper
     /// engine × job cells on their default traces, the three stress shapes
-    /// on several cells, two failure-injection schedules, four
-    /// staged-engine operator-elasticity cells (`bottleneck-shift`,
-    /// `skew-amplify`), two week-scale `diurnal-week` cells (staged
-    /// engine; real days at `--duration 604800`), one month-scale
-    /// `diurnal-month` cell (real days at `--duration 2592000`, the
-    /// event-driven engine's flagship horizon), and the Fig-11 Phoebe
-    /// comparison cell (`flink-ysb-sine`, 18-worker ceiling).
+    /// on several cells, two legacy failure-injection schedules, four
+    /// typed-fault chaos cells (`-chaos`, `-grayweek`, `-crashloop3`; see
+    /// `dsp::faults`), four staged-engine operator-elasticity cells
+    /// (`bottleneck-shift`, `skew-amplify`), two week-scale `diurnal-week`
+    /// cells (staged engine; real days at `--duration 604800`), one
+    /// month-scale `diurnal-month` cell (real days at
+    /// `--duration 2592000`, the event-driven engine's flagship horizon),
+    /// and the Fig-11 Phoebe comparison cell (`flink-ysb-sine`, 18-worker
+    /// ceiling).
     pub fn builtin(duration: Timestamp, seeds: &[u64]) -> Self {
         use EngineKind::{Flink, KStreams};
         use JobKind::{Traffic, WordCount, Ysb};
@@ -270,6 +360,14 @@ impl ScenarioRegistry {
             // Failure injection (the paper's §4.8 future work).
             s(Flink, Traffic, ShapeKind::Traffic, FailurePlan::MidRun),
             s(Flink, WordCount, ShapeKind::Sine, FailurePlan::Storm(3)),
+            // Typed-fault chaos cells (dsp::faults taxonomy): mixed chaos
+            // on the fused reference pool and on a staged cell, a
+            // crash-loop storm, and a week-scale double-straggler cell
+            // exercising the gray-failure quarantine.
+            s(Flink, WordCount, ShapeKind::Sine, FailurePlan::Chaos),
+            s(Flink, WordCount, BottleneckShift, FailurePlan::Chaos),
+            s(Flink, WordCount, ShapeKind::Sine, FailurePlan::CrashLoopStorm(3)),
+            s(Flink, WordCount, DiurnalWeek, FailurePlan::GrayWeek),
             // Operator-level elasticity (staged engine): the pipeline's
             // hot spot migrates between operators / concentrates on one
             // stage's hottest replica.
@@ -437,9 +535,74 @@ mod tests {
         assert!(FailurePlan::None.schedule(7_200).is_empty());
         assert_eq!(FailurePlan::MidRun.schedule(7_200), vec![3_600]);
         let storm = FailurePlan::Storm(3).schedule(7_200);
-        assert_eq!(storm.len(), 3);
-        assert!(storm.windows(2).all(|w| w[0] < w[1]), "{storm:?}");
+        assert_eq!(storm, vec![2_160, 3_600, 5_040]);
         assert!(storm[0] > 720 && storm[2] < 6_480, "{storm:?}");
+    }
+
+    /// Degenerate Storm spacings (tiny durations, large `n`) used to
+    /// produce duplicate or zero injection times — the engine now asserts
+    /// sorted-unique schedules, so the plan must clamp and dedup.
+    #[test]
+    fn storm_schedules_stay_sorted_unique_at_tiny_durations() {
+        for duration in 1..=120 {
+            for n in 1..=8 {
+                let sched = FailurePlan::Storm(n).schedule(duration);
+                assert!(
+                    sched.windows(2).all(|w| w[0] < w[1]),
+                    "duration={duration} n={n}: {sched:?}"
+                );
+                assert!(
+                    sched.iter().all(|&t| t >= 1),
+                    "duration={duration} n={n}: {sched:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn typed_plans_generate_valid_timelines() {
+        // Chaos: four events, in time order, inside the run; exactly three
+        // of them restart (the gray straggler does not).
+        let tl = FailurePlan::Chaos.timeline(7_200);
+        assert_eq!(tl.events().len(), 4);
+        assert!(tl.events().iter().all(|e| e.at() < 7_200));
+        assert_eq!(tl.restart_times().len(), 3);
+        // GrayWeek: no restarts at all — throughput-only detectable.
+        let gw = FailurePlan::GrayWeek.timeline(7_200);
+        assert_eq!(gw.events().len(), 2);
+        assert!(gw.restart_times().is_empty());
+        // CrashLoopStorm rides the (deduped) Storm spacing.
+        let cl = FailurePlan::CrashLoopStorm(3).timeline(7_200);
+        assert_eq!(cl.restart_times(), vec![2_160, 3_600, 5_040]);
+        // Legacy plans carry no typed timeline.
+        assert!(FailurePlan::Storm(3).timeline(7_200).is_empty());
+        // Even degenerate smoke durations validate (FaultTimeline::new
+        // panics on an invalid event, so constructing is the assertion).
+        for d in [6, 30, 900] {
+            FailurePlan::Chaos.timeline(d).validate();
+            FailurePlan::GrayWeek.timeline(d).validate();
+            FailurePlan::CrashLoopStorm(5).timeline(d).validate();
+        }
+    }
+
+    #[test]
+    fn chaos_cells_are_registered_and_runnable() {
+        let reg = ScenarioRegistry::builtin(1_200, &[1]);
+        for name in [
+            "flink-wordcount-sine-chaos",
+            "flink-wordcount-bottleneck-shift-chaos",
+            "flink-wordcount-sine-crashloop3",
+            "flink-wordcount-diurnal-week-grayweek",
+        ] {
+            let sc = reg.get(name).expect(name);
+            let exp = sc.to_experiment().unwrap();
+            assert!(exp.failures.is_empty(), "{name} mixes legacy failures");
+            assert!(!exp.faults.is_empty(), "{name} lost its timeline");
+        }
+        // The staged chaos cell keeps its shape's engine knobs.
+        let bs = reg.get("flink-wordcount-bottleneck-shift-chaos").unwrap();
+        assert_eq!(bs.stage_model, StageModel::Staged);
+        assert!(bs.selectivity_drift.is_some());
     }
 
     #[test]

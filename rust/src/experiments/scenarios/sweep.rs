@@ -141,6 +141,10 @@ pub struct SweepRunResult {
     /// Measured recovery time per rescale/failure event (s; `INFINITY`
     /// when the run ended before the lag recovered).
     pub recovery_secs: Vec<f64>,
+    /// Rescale plans refused because a restart was already in flight.
+    pub dropped_rescales: u64,
+    /// Crash-loop restart attempts that failed and were retried.
+    pub restart_retries: u64,
 }
 
 /// Aggregated sweep output, in deterministic unit order.
@@ -177,6 +181,10 @@ pub struct PooledSummary {
     pub slo_violation_frac: f64,
     /// Measured recovery times pooled over seeds (s).
     pub recovery_secs: Vec<f64>,
+    /// Mean count of rescale plans dropped mid-restart.
+    pub dropped_rescales: f64,
+    /// Mean count of crash-loop restart retries.
+    pub restart_retries: f64,
 }
 
 impl PooledSummary {
@@ -250,6 +258,8 @@ pub fn run_unit(
         final_backlog: run.final_backlog,
         slo_violation_frac: run.slo_violation_frac,
         recovery_secs: run.recovery_secs,
+        dropped_rescales: run.dropped_rescales,
+        restart_retries: run.restart_retries,
     })
 }
 
@@ -308,6 +318,8 @@ impl SweepReport {
                     lag_max: 0.0,
                     slo_violation_frac: 0.0,
                     recovery_secs: Vec::new(),
+                    dropped_rescales: 0.0,
+                    restart_retries: 0.0,
                 });
             }
             let p = out.last_mut().expect("row pushed above");
@@ -320,6 +332,8 @@ impl SweepReport {
             p.lag_max = p.lag_max.max(r.lag_max);
             p.slo_violation_frac += r.slo_violation_frac;
             p.recovery_secs.extend(r.recovery_secs.iter().copied());
+            p.dropped_rescales += r.dropped_rescales as f64;
+            p.restart_retries += r.restart_retries as f64;
         }
         for p in &mut out {
             let n = p.seeds.max(1) as f64;
@@ -328,6 +342,8 @@ impl SweepReport {
             p.profiling_worker_seconds /= n;
             p.rescales /= n;
             p.slo_violation_frac /= n;
+            p.dropped_rescales /= n;
+            p.restart_retries /= n;
         }
         out
     }

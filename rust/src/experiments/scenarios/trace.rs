@@ -65,6 +65,9 @@ pub struct RunTrace {
     pub points: Vec<TracePoint>,
     /// Rescale/failure events, in log order.
     pub events: Vec<TraceEvent>,
+    /// Rescale plans the engine refused because a restart was in flight
+    /// (filled by the harness at the end of the run; part of the digest).
+    pub dropped_rescales: u64,
 }
 
 /// Quantize to 1/1000 before hashing/serialization (non-finite → sentinel).
@@ -91,6 +94,7 @@ impl RunTrace {
             seed,
             points: Vec::new(),
             events: Vec::new(),
+            dropped_rescales: 0,
         }
     }
 
@@ -138,6 +142,7 @@ impl RunTrace {
             write_f64(&mut h, e.downtime_secs);
             h.write_u64(e.failure as u64);
         }
+        h.write_u64(self.dropped_rescales);
         h.hex()
     }
 
@@ -171,7 +176,10 @@ impl RunTrace {
                 e.t, e.from, e.to, e.downtime_secs, e.failure
             ));
         }
-        out.push_str("]}");
+        out.push_str(&format!(
+            "],\"dropped_rescales\":{}}}",
+            self.dropped_rescales
+        ));
         out
     }
 }
@@ -205,6 +213,9 @@ mod tests {
         let mut c = sample();
         c.record(60, 5, 0.0, 150.0);
         assert_ne!(a.digest(), c.digest());
+        let mut e = sample();
+        e.dropped_rescales = 1;
+        assert_ne!(a.digest(), e.digest());
         let mut d = RunTrace::new("scenario-x", "daedalus", 8);
         d.record(0, 4, 0.0, 150.0);
         assert_ne!(a.digest()[..8], d.digest()[..8]);
@@ -230,6 +241,10 @@ mod tests {
         let ev = &v.get("events").unwrap().as_arr().unwrap()[0];
         assert_eq!(ev.as_arr().unwrap()[1].as_usize().unwrap(), 4);
         assert_eq!(ev.as_arr().unwrap()[2].as_usize().unwrap(), 8);
+        assert_eq!(
+            v.get("dropped_rescales").unwrap().as_usize().unwrap(),
+            0
+        );
     }
 
     #[test]

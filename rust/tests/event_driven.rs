@@ -61,6 +61,14 @@ fn assert_modes_agree(
         "parallelism-series drift for {unit}"
     );
     assert_eq!(ra.rescales, rb.rescales, "rescale-count drift for {unit}");
+    assert_eq!(
+        ra.dropped_rescales, rb.dropped_rescales,
+        "dropped-rescale drift for {unit}"
+    );
+    assert_eq!(
+        ra.restart_retries, rb.restart_retries,
+        "restart-retry drift for {unit}"
+    );
 }
 
 /// Every built-in registry cell, every approach it carries: the two engine
@@ -76,6 +84,30 @@ fn event_driven_matches_per_tick_on_every_registry_cell() {
         for approach in &exp.approaches {
             assert_modes_agree(scenario, approach, 3, 60);
         }
+    }
+}
+
+/// The typed-fault chaos cells must stay in the registry: the bitwise pin
+/// above iterates `ScenarioRegistry::builtin`, so its coverage of the
+/// fault taxonomy (mixed chaos, crash-loop storm, gray-failure week) is
+/// only as good as these cells' continued presence.
+#[test]
+fn chaos_cells_stay_in_the_registry_wide_bitwise_pin() {
+    let reg = ScenarioRegistry::builtin(900, &[3]);
+    for name in [
+        "flink-wordcount-sine-chaos",
+        "flink-wordcount-bottleneck-shift-chaos",
+        "flink-wordcount-sine-crashloop3",
+        "flink-wordcount-diurnal-week-grayweek",
+    ] {
+        let scenario = reg
+            .get(name)
+            .unwrap_or_else(|| panic!("{name} missing: the registry-wide pin lost its fault coverage"));
+        let exp = scenario.to_experiment().unwrap();
+        assert!(
+            !exp.faults.events().is_empty(),
+            "{name}: chaos cell carries no typed faults"
+        );
     }
 }
 

@@ -33,6 +33,27 @@
 //! this repo — fresh checkouts self-bless — so the re-bless is this note
 //! plus the property pin.
 //!
+//! ## Goldens re-blessed for the fault subsystem (PR 7)
+//!
+//! Two deliberate digest-layout/behavior changes ship with the typed
+//! fault-injection subsystem (`dsp::faults`):
+//!
+//! 1. The trace digest grew a field: `RunTrace::dropped_rescales` (rescale
+//!    plans refused mid-restart) is folded into the FNV stream after the
+//!    event list, so *every* digest changes even where behavior did not.
+//! 2. The harness SLO downtime term switched from summing the rescale
+//!    log's *scheduled* downtime to the engine's actual `down_ticks`
+//!    counter — the only term that can see crash-loop retry-backoff
+//!    windows, which never appear in the rescale log. On restart-bearing
+//!    cells the violated-seconds figure moves from a fractional schedule
+//!    to the ceil'd tick count the deployment really spent down.
+//!
+//! Digest files are not committed (fresh checkouts self-bless), so the
+//! re-bless is this note plus the mode-agreement pins: the event-driven /
+//! per-tick bitwise contract now also covers every fault class
+//! (`tests/invariants.rs::conservation_and_mode_agreement_under_every_typed_fault`
+//! and the chaos cells in the registry-wide `tests/event_driven.rs` pin).
+//!
 //! ## How the pinning works
 //!
 //! Each test runs its canonical `(scenario, approach, seed)` unit and

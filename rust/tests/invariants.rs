@@ -13,7 +13,8 @@
 //! 5. Queue mass equals backlog per partition (`check_invariants`).
 
 use daedalus::dsp::{
-    EngineProfile, MergePolicy, QueuePolicy, SimConfig, Simulation, StageModel,
+    EngineProfile, FaultEvent, FaultTimeline, MergePolicy, QueuePolicy, SimConfig, Simulation,
+    StageModel,
 };
 use daedalus::experiments::ScenarioRegistry;
 use daedalus::jobs::{JobProfile, Topology};
@@ -446,6 +447,133 @@ fn staged_and_fused_agree_on_single_operator_topologies() {
         );
         fused.check_invariants();
         staged.check_invariants();
+    }
+}
+
+/// Every typed fault class, on both stage models, driven per-tick and
+/// through `advance_quiet`: the two drivers must agree *bitwise* (all
+/// fault effects live in `begin_tick`, which both drivers run for every
+/// tick; the `next_boundary` hooks are purely advisory), flow must stay
+/// conserved through the injected restarts/replays, and each class must
+/// exhibit its defining restart signature (gray failures never restart,
+/// crash loops retry under backoff, everything else restarts exactly once).
+#[test]
+fn conservation_and_mode_agreement_under_every_typed_fault() {
+    let timelines: Vec<(&str, FaultTimeline)> = vec![
+        (
+            "worker-crash",
+            FaultTimeline::new(vec![FaultEvent::WorkerCrash { t: 200, k: 2 }]),
+        ),
+        (
+            "zone-outage",
+            FaultTimeline::new(vec![FaultEvent::ZoneOutage {
+                t: 200,
+                fraction: 0.5,
+            }]),
+        ),
+        (
+            "gray-failure",
+            FaultTimeline::new(vec![FaultEvent::GrayFailure {
+                from: 150,
+                to: 400,
+                worker: 1,
+                severity: 0.5,
+            }]),
+        ),
+        (
+            "crash-loop",
+            FaultTimeline::new(vec![FaultEvent::CrashLoop {
+                t: 200,
+                fail_prob: 0.999,
+                max_retries: 3,
+            }]),
+        ),
+        (
+            "checkpoint-loss",
+            FaultTimeline::new(vec![FaultEvent::CheckpointLoss { t: 250 }]),
+        ),
+    ];
+    let duration = 900u64;
+    for (tag, tl) in &timelines {
+        for staged in [false, true] {
+            let build = || {
+                Simulation::new(SimConfig {
+                    partitions: 24,
+                    initial_replicas: if staged { 2 } else { 4 },
+                    seed: 41,
+                    rate_noise: 0.02,
+                    faults: tl.clone(),
+                    stage_model: if staged {
+                        StageModel::Staged
+                    } else {
+                        StageModel::Fused
+                    },
+                    ..SimConfig::base(
+                        EngineProfile::flink(),
+                        JobProfile::wordcount(),
+                        ShapeKind::Sine.build(12_000.0, duration, 41),
+                    )
+                })
+            };
+            let mut per_tick = build();
+            let mut event = build();
+            for t in 0..duration {
+                per_tick.step(t);
+            }
+            event.advance_quiet(0, duration);
+            let what = format!("{tag} staged={staged}");
+            assert_eq!(per_tick.latencies(), event.latencies(), "{what}: latencies");
+            assert!(per_tick.tsdb() == event.tsdb(), "{what}: tsdb diverged");
+            assert_eq!(
+                per_tick.total_consumed().to_bits(),
+                event.total_consumed().to_bits(),
+                "{what}: consumed"
+            );
+            assert_eq!(
+                per_tick.total_backlog().to_bits(),
+                event.total_backlog().to_bits(),
+                "{what}: backlog"
+            );
+            assert_eq!(per_tick.rescale_log, event.rescale_log, "{what}: restarts");
+            assert_eq!(
+                per_tick.restart_retries(),
+                event.restart_retries(),
+                "{what}: retries"
+            );
+            assert_eq!(per_tick.down_ticks(), event.down_ticks(), "{what}: down ticks");
+
+            // Conservation after the dust settles. The job-level identity
+            // `produced == consumed + backlog` only applies to the fused
+            // pool (staged backlog includes inter-stage mass in per-stage
+            // input units); the staged pipeline pins per-stage flow.
+            if staged {
+                let topo = JobProfile::wordcount().topology();
+                assert_operator_conservation(&per_tick, &topo, None);
+            } else {
+                assert_conservation(&per_tick);
+            }
+
+            // Restart signature per fault class.
+            let restarts = per_tick.rescale_log.iter().filter(|e| e.failure).count();
+            if *tag == "gray-failure" {
+                assert_eq!(restarts, 0, "{what}: gray failures never restart");
+            } else {
+                assert_eq!(restarts, 1, "{what}: one fault, one logged restart");
+            }
+            if *tag == "crash-loop" {
+                assert!(
+                    per_tick.restart_retries() <= 3,
+                    "{what}: retries exceeded the budget"
+                );
+                assert!(per_tick.down_ticks() > 0, "{what}: no downtime observed");
+            } else {
+                assert_eq!(per_tick.restart_retries(), 0, "{what}: spurious retries");
+            }
+            assert!(
+                per_tick.latencies().total_weight() > 0.0,
+                "{what}: no tuples processed"
+            );
+        }
     }
 }
 
