@@ -292,10 +292,21 @@ impl Autoscaler for Ds2 {
                 let max = targets.iter().copied().max().unwrap_or(1);
                 let cur_max = current.iter().copied().max().unwrap_or(1);
                 let uniform = current.iter().all(|&c| c == cur_max);
-                if uniform && max.abs_diff(cur_max) < self.cfg.min_delta.max(1) {
-                    return None;
+                if max.abs_diff(cur_max) < self.cfg.min_delta.max(1) {
+                    // Hysteresis applies against the job level (`cur_max`)
+                    // regardless of uniformity — a sub-`min_delta` target
+                    // must never churn rescales just because replica
+                    // counts drifted apart (per-stage plan, partial
+                    // restart). A non-uniform deployment still gets *one*
+                    // normalizing plan back to its current job level;
+                    // once uniform, the gate holds.
+                    if uniform {
+                        return None;
+                    }
+                    ScalePlan::Uniform(cur_max)
+                } else {
+                    ScalePlan::Uniform(max)
                 }
-                ScalePlan::Uniform(max)
             }
         };
         self.last_rescale = Some(view.now);
@@ -304,6 +315,15 @@ impl Autoscaler for Ds2 {
 
     fn next_decision(&self, now: Timestamp) -> Timestamp {
         self.next_possible(now)
+    }
+
+    /// Exact via the controller's own gate arithmetic: every `decide` on
+    /// `(now, next_possible(now))` bails inside [`Ds2::gate`] *before*
+    /// touching `last_decision`, and a gate-passing tick mutates state
+    /// even when no plan results — so the claim never extends past the
+    /// next gate-passing tick, and never covers an unready view.
+    fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
+        view.ready && until <= self.next_possible(view.now)
     }
 }
 
@@ -394,8 +414,12 @@ mod tests {
     /// bottleneck. The per-operator formulation must target each stage
     /// individually; the job-level mode must apply the max uniformly.
     fn staged_db() -> crate::metrics::Tsdb {
+        staged_db_upto(200)
+    }
+
+    fn staged_db_upto(upto: u64) -> crate::metrics::Tsdb {
         let mut db = crate::metrics::Tsdb::new();
-        for t in 0..200u64 {
+        for t in 0..upto {
             db.record_global("workload_rate", t, 10_000.0);
             // Stage 0: source, 10k in, busy 0.25 at 2 replicas
             //   → per-replica true rate 20k → needs 1.
@@ -453,5 +477,61 @@ mod tests {
         };
         let plan = ds2.decide_plan(&view).expect("uniform plan");
         assert_eq!(plan, ScalePlan::Uniform(3));
+    }
+
+    #[test]
+    fn job_level_hysteresis_holds_regardless_of_uniformity() {
+        // Non-uniform deployment whose job-level target is within
+        // `min_delta` of the current job level: exactly one normalizing
+        // plan back to `cur_max`, then the gate holds — no back-to-back
+        // sub-threshold rescales.
+        let db = staged_db_upto(600);
+        let cfg = Ds2Config {
+            min_delta: 2,
+            ..Ds2Config::defaults(12)
+        };
+        let mut ds2 = Ds2::job_level(cfg.clone());
+        let drifted = [2usize, 3, 2]; // drifted apart; job level = 3
+        let view = SimView {
+            now: 199,
+            tsdb: &db,
+            parallelism: 3,
+            ready: true,
+            max_replicas: 12,
+            stage_parallelism: &drifted,
+            dropped_rescales: 0,
+        };
+        // Targets max = 3 = cur_max (sub-threshold) → one normalizing plan.
+        assert_eq!(ds2.decide_plan(&view), Some(ScalePlan::Uniform(3)));
+        // Plan applied → uniform. Past interval + cooldown the gate passes
+        // again, but the sub-`min_delta` delta now holds: no second plan.
+        let uniform_par = [3usize, 3, 3];
+        let view2 = SimView {
+            now: 580,
+            tsdb: &db,
+            parallelism: 3,
+            ready: true,
+            max_replicas: 12,
+            stage_parallelism: &uniform_par,
+            dropped_rescales: 0,
+        };
+        assert_eq!(ds2.decide_plan(&view2), None);
+
+        // The normalizing plan targets the *current* job level, never a
+        // sub-threshold new one: with targets max = 4 vs cur_max = 3
+        // (|Δ| = 1 < min_delta = 2) the old behavior emitted Uniform(4)
+        // every loop tick while the deployment stayed non-uniform.
+        let mut ds2b = Ds2::job_level(cfg);
+        let drifted_up = [2usize, 3, 3]; // stage-2 target rises to 4
+        let view3 = SimView {
+            now: 199,
+            tsdb: &db,
+            parallelism: 3,
+            ready: true,
+            max_replicas: 12,
+            stage_parallelism: &drifted_up,
+            dropped_rescales: 0,
+        };
+        assert_eq!(ds2b.decide_plan(&view3), Some(ScalePlan::Uniform(3)));
     }
 }

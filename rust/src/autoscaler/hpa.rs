@@ -175,14 +175,37 @@ impl Autoscaler for Hpa {
     /// never occur inside a span — the harness runs unready phases
     /// per-tick), so skipping those calls leaves the controller state
     /// bit-identical.
+    ///
+    /// Every case is exact, derived from the controller's own gates:
+    ///
+    /// * synced before → next sync is exactly `last_sync + sync_period`;
+    /// * restart edge seen at `r` → no sample is trusted before
+    ///   `r + cpu_init_period`, so a never-synced controller's first
+    ///   possible sync is derived from the readiness edge — not pinned to
+    ///   `now + 1`, which would force the slow path across the whole
+    ///   post-restart warm-up;
+    /// * fresh controller, warmed-up initial deployment (both `None`) →
+    ///   the very next `decide` call is due and will sync: `now + 1`.
     fn next_decision(&self, now: crate::clock::Timestamp) -> crate::clock::Timestamp {
-        let sync = self
-            .last_sync
-            .map_or(now + 1, |t| t + self.cfg.sync_period);
         let init = self
             .pods_ready_since
-            .map_or(now + 1, |s| s + self.cfg.cpu_init_period);
+            .map_or(0, |r| r + self.cfg.cpu_init_period);
+        let sync = self
+            .last_sync
+            .map_or(init, |t| t + self.cfg.sync_period);
         sync.max(init).max(now + 1)
+    }
+
+    /// Exact via the controller's own gate arithmetic, and only for a
+    /// ready steady view: `decide` calls strictly before the next sync
+    /// bail on the init/sync gates *before* mutating anything, while a
+    /// sync-due call always mutates `last_sync` (even when it produces no
+    /// plan) — so the claim never extends past the next sync tick, and
+    /// never covers a tick that could observe a readiness edge
+    /// (`was_ready` must track every unready tick, which the harness
+    /// drives per-tick).
+    fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
+        view.ready && self.was_ready && until <= self.next_decision(view.now)
     }
 }
 
@@ -282,6 +305,45 @@ mod tests {
         let db = db_with_cpu(1.0, 17, 100);
         let mut hpa = Hpa::new(HpaConfig::at_target(0.30, 18));
         assert_eq!(hpa.decide(&view(&db, 100, 17, true)), Some(18));
+    }
+
+    #[test]
+    fn next_decision_is_exact_on_a_fresh_controller() {
+        // Warmed-up initial deployment, never synced: the very next
+        // `decide` call is due and will sync — exactly `now + 1`.
+        let hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        assert_eq!(hpa.next_decision(0), 1);
+        assert_eq!(hpa.next_decision(100), 101);
+    }
+
+    #[test]
+    fn next_decision_spans_the_post_restart_warmup() {
+        let db = db_with_cpu(0.82, 4, 300);
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        // Restart in flight, then the readiness edge at r = 150.
+        assert_eq!(hpa.decide(&view(&db, 149, 4, false)), None);
+        assert_eq!(hpa.decide(&view(&db, 150, 4, true)), None); // init hold
+        // Never synced, but the first possible sync derives from the
+        // edge: exactly r + cpu_init_period = 180, not now + 1.
+        assert_eq!(hpa.next_decision(150), 180);
+        assert_eq!(hpa.decide(&view(&db, 179, 4, true)), None);
+        assert_eq!(hpa.next_decision(179), 180);
+        // The first decide at that tick really does sync.
+        let _ = hpa.decide(&view(&db, 180, 4, true));
+        assert_eq!(hpa.next_decision(180), 195);
+    }
+
+    #[test]
+    fn noop_claim_respects_sync_and_readiness() {
+        let db = db_with_cpu(0.82, 4, 300);
+        let mut hpa = Hpa::new(HpaConfig::at_target(0.80, 18));
+        let _ = hpa.decide(&view(&db, 100, 4, true)); // syncs at 100
+        // Claims hold up to the next sync bound (115) and no further — a
+        // sync-due decide mutates `last_sync` even when it plans nothing.
+        assert!(hpa.decide_is_noop_over(&view(&db, 100, 4, true), 115));
+        assert!(!hpa.decide_is_noop_over(&view(&db, 100, 4, true), 116));
+        // Never claims an unready view.
+        assert!(!hpa.decide_is_noop_over(&view(&db, 100, 4, false), 101));
     }
 
     #[test]

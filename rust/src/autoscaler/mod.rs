@@ -68,4 +68,23 @@ pub trait Autoscaler {
     fn next_decision(&self, now: Timestamp) -> Timestamp {
         now + 1
     }
+
+    /// Whether every `decide`/`decide_plan` call on the steady span
+    /// `(view.now, until)` is *provably* a pure no-op — returns no plan
+    /// and mutates no internal state — given the steady-state `view`
+    /// (constant rate, constant parallelism, ready, no backlog) that the
+    /// event-driven harness observes at span start. When this returns
+    /// `true` the harness lets a quiet span run through those decision
+    /// ticks without waking the scaler.
+    ///
+    /// Same safety rule as [`Self::next_decision`] (CONTRIBUTING item 4's
+    /// boundary hooks): the predicate must be a *pure* function of the
+    /// scaler's own gate arithmetic, conservative-`false` whenever the
+    /// answer needs anything not provably constant over the span. The
+    /// default delegates to [`Self::next_decision`] — exact for scalers
+    /// whose gates are purely time-based, conservative for the rest —
+    /// so behavior without an override is unchanged.
+    fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
+        until <= self.next_decision(view.now)
+    }
 }

@@ -22,6 +22,7 @@ pub use models::QosModels;
 pub use profiler::{profile_job, ProfilingReport};
 
 use super::Autoscaler;
+use crate::clock::Timestamp;
 use crate::dsp::engine::SimView;
 use crate::metrics::query;
 use crate::metrics::SeriesHandle;
@@ -99,7 +100,13 @@ impl Autoscaler for Phoebe {
     /// Exact next-possible-action tick: `decide` returns `None` without
     /// mutating anything while `now < next_loop`, so the event-driven
     /// harness may skip straight to the next loop tick.
-    fn next_decision(&self, now: u64) -> u64 {
+    ///
+    /// Trait-consistency note: this signature must spell the trait's
+    /// `Timestamp` alias, not bare `u64` — clippy and rustc accept either
+    /// today because the alias currently *is* `u64`, but an alias change
+    /// (e.g. a newtype for typed clocks) would silently strand any impl
+    /// written against the raw representation.
+    fn next_decision(&self, now: Timestamp) -> Timestamp {
         self.next_loop.max(now + 1)
     }
 

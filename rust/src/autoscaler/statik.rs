@@ -37,6 +37,13 @@ impl Autoscaler for Static {
     fn next_decision(&self, _now: crate::clock::Timestamp) -> crate::clock::Timestamp {
         crate::clock::Timestamp::MAX
     }
+
+    /// Exact: `decide` reads only `view.parallelism`, which is constant
+    /// over a steady span, so once the deployment matches every future
+    /// call is a pure no-op over *any* horizon.
+    fn decide_is_noop_over(&self, view: &SimView<'_>, _until: crate::clock::Timestamp) -> bool {
+        view.parallelism == self.replicas
+    }
 }
 
 #[cfg(test)]

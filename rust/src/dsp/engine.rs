@@ -106,6 +106,11 @@ pub enum ScalePlan {
 /// before backpressure throttles the upstream stage.
 const BACKPRESSURE_SECS: f64 = 5.0;
 
+/// Minimum length for the tier-2/tier-3 span fast paths to engage. Spans
+/// shorter than this are cheaper through the per-tick tier-1 closed form
+/// than through the span setup (feasibility walk + scratch rebuild).
+const MIN_SPAN_TICKS: u64 = 4;
+
 /// Static configuration of one simulated deployment.
 pub struct SimConfig {
     /// Engine behavior constants.
@@ -488,6 +493,18 @@ pub struct Simulation {
     stage_target: Option<Vec<usize>>,
     /// The job's key distribution (staged keyed-shuffle skew).
     key_dist: KeyDistribution,
+    /// Whether the span fast paths (tier 2/3) may engage inside
+    /// [`Self::advance_quiet`]. On by default; disabled to retain the
+    /// PR-6 per-tick quiet path as a bench/test reference.
+    span_integration: bool,
+    /// Ticks that ran the reference slow core ([`Self::produce_and_serve`]).
+    ticks_slow_core: u64,
+    /// Ticks committed by the per-tick quiet closed form (tier 1).
+    ticks_quiet_closed: u64,
+    /// Ticks committed by the span-closed-form integrator (tier 2).
+    ticks_span_integrated: u64,
+    /// Ticks committed by the vectorized catch-up serve (tier 3).
+    ticks_span_catchup: u64,
 }
 
 /// Pre-resolved TSDB handles for the per-tick recording hot path.
@@ -650,6 +667,11 @@ impl Simulation {
             stage_replicas,
             stage_target: None,
             key_dist: kd,
+            span_integration: true,
+            ticks_slow_core: 0,
+            ticks_quiet_closed: 0,
+            ticks_span_integrated: 0,
+            ticks_span_catchup: 0,
         }
     }
 
@@ -723,6 +745,44 @@ impl Simulation {
     /// backoff windows (the SLO accounting's downtime term).
     pub fn down_ticks(&self) -> u64 {
         self.down_ticks
+    }
+
+    /// Enable or disable the span fast paths (tiers 2/3) inside
+    /// [`Self::advance_quiet`]. Both settings are bit-identical — the
+    /// span paths commit the reference's own arithmetic — so this toggle
+    /// exists purely to retain the PR-6 per-tick quiet path as the
+    /// month-scale bench reference and as the counterpart in
+    /// tier-vs-tier agreement tests.
+    pub fn set_span_integration(&mut self, on: bool) {
+        self.span_integration = on;
+    }
+
+    /// Ticks that ran the reference slow core (produce + serve + global
+    /// metrics, no fast path). The `tests/perf_smoke.rs` O(1)-per-span
+    /// bound is pinned on this counter: a 30-day noise-free steady run
+    /// must keep it (plus [`Self::ticks_quiet_closed`]) under a fixed
+    /// budget. Diagnostic only — never part of any mode-agreement
+    /// comparison.
+    pub fn ticks_slow_core(&self) -> u64 {
+        self.ticks_slow_core
+    }
+
+    /// Ticks committed by the tier-1 per-tick quiet closed form.
+    /// Diagnostic only (see [`Self::ticks_slow_core`]).
+    pub fn ticks_quiet_closed(&self) -> u64 {
+        self.ticks_quiet_closed
+    }
+
+    /// Ticks committed by the tier-2 span-closed-form integrator.
+    /// Diagnostic only (see [`Self::ticks_slow_core`]).
+    pub fn ticks_span_integrated(&self) -> u64 {
+        self.ticks_span_integrated
+    }
+
+    /// Ticks committed by the tier-3 vectorized catch-up serve.
+    /// Diagnostic only (see [`Self::ticks_slow_core`]).
+    pub fn ticks_span_catchup(&self) -> u64 {
+        self.ticks_span_catchup
     }
 
     /// Job parallelism: fused pool size, or max stage parallelism (staged).
@@ -1225,18 +1285,44 @@ impl Simulation {
         }
     }
 
-    /// Draw this tick's noisy arrival rate. Exactly one RNG normal, always
-    /// drawn — the fast path reuses the value when it bails to the slow
-    /// core, so the draw order is identical in both drivers.
+    /// Draw this tick's noisy arrival rate. With noise configured this is
+    /// exactly one RNG normal, always drawn — the fast path reuses the
+    /// value when it bails to the slow core, so the draw order is
+    /// identical in both drivers. With `rate_noise == 0.0` the draw is
+    /// skipped: `base · (1 + normal·0).max(0) = base` bitwise for every
+    /// finite non-negative base, so skipping changes no observable value,
+    /// only the RNG call count — and since *both* engine modes share this
+    /// helper their draw sequences stay aligned (CONTRIBUTING item 4).
+    /// The skip is what lets tier-2 span integration cover a whole
+    /// noise-free span without consuming per-tick draws.
     fn draw_rate(&mut self, t: Timestamp) -> f64 {
         let base_rate = self.workload.rate(t);
+        if self.rate_noise == 0.0 {
+            return base_rate;
+        }
         let noise = (1.0 + self.rng.normal() * self.rate_noise).max(0.0);
         base_rate * noise
+    }
+
+    /// One worker CPU reading at utilization `util`: the profile's load
+    /// curve plus multiplicative measurement noise. With
+    /// `cpu_noise == 0.0` the RNG draw is skipped — `x · (1 + normal·0)
+    /// = x` bitwise for every finite `x` — mirroring
+    /// [`Self::draw_rate`]'s skip rule, and shared by every serve path in
+    /// both engine modes so the draw sequences agree.
+    fn cpu_reading(&mut self, util: f64) -> f64 {
+        if self.profile.cpu_noise == 0.0 {
+            return self.profile.cpu_for_utilization(util).clamp(0.0, 1.0);
+        }
+        (self.profile.cpu_for_utilization(util)
+            * (1.0 + self.rng.normal() * self.profile.cpu_noise))
+            .clamp(0.0, 1.0)
     }
 
     /// The slow (reference) tick core: produce, serve, checkpoint, global
     /// metrics — everything after [`Self::begin_tick`]/[`Self::draw_rate`].
     fn produce_and_serve(&mut self, t: Timestamp, rate: f64) {
+        self.ticks_slow_core += 1;
         // 2. Produce into partitions (skew-weighted, noisy rate).
         for (p, w) in self.partitions.iter_mut().zip(&self.partition_weights) {
             p.produce(t as f64 + 0.5, rate * w);
@@ -1280,7 +1366,20 @@ impl Simulation {
 
     /// Advance ticks `from..until`, bit-identically to calling
     /// [`Self::step`] for each of them, batching *quiet* ticks through a
-    /// fast path (the event-driven engine core).
+    /// three-tier fast path (the event-driven engine core):
+    ///
+    /// - **Tier 2** ([`Self::try_quiet_span`]) — when the workload proves
+    ///   a noise-free plateau over a span ([`Workload::noise_free_over`])
+    ///   and no event (failure, fault, gray restore) falls inside it, a
+    ///   steady empty-queue fused deployment integrates the whole span in
+    ///   closed form: O(1) engine work per span plus the per-tick float
+    ///   accumulations that bitwise identity forces to stay per-tick.
+    /// - **Tier 3** ([`Self::try_catchup_span`]) — a backlogged but
+    ///   stable deployment (catch-up after a restart) drains through the
+    ///   reference serve loop vectorized over the span, without per-tick
+    ///   dispatch, handing back to tier 2 the moment the queues empty.
+    /// - **Tier 1** ([`Self::try_quiet_tick`]) — the per-tick closed form
+    ///   from PR 6, for quiet ticks too close to a boundary to span.
     ///
     /// A tick is quiet when the deployment is steady — serving, no
     /// backlog anywhere, and this tick's whole arrival mass fits every
@@ -1290,7 +1389,7 @@ impl Simulation {
     /// closed-form update: everything produced is consumed in the same
     /// tick, latency is pure service time, and the bookkeeping series
     /// (parallelism, allocated workers, per-stage parallelism/queue) are
-    /// constant. The fast path integrates produced/served mass, latency
+    /// constant. Every tier integrates produced/served mass, latency
     /// contributions, worker-seconds and the dense per-tick series with
     /// the reference's own arithmetic (same operation order, same RNG
     /// draws) and defers only the constant series, which are bulk-filled
@@ -1308,10 +1407,38 @@ impl Simulation {
         let mut par = 0.0;
         let mut alloc = 0.0;
         let mut stage_fill: Vec<(f64, f64)> = Vec::new();
-        for t in from..until {
+        let mut t = from;
+        while t < until {
+            // Tier 2: a whole provably-quiet noise-free span in closed
+            // form. Tier 3: a backlogged-but-stable span through the
+            // reference serve loop without per-tick dispatch. Both commit
+            // the reference's own arithmetic, so falling through to the
+            // per-tick path at any boundary is always correct.
+            if let Some(end) = self.try_quiet_span(t, until) {
+                if deferred == 0 {
+                    par = self.cluster.parallelism() as f64;
+                    alloc = self.allocated_workers() as f64;
+                    stage_fill.clear();
+                }
+                deferred += end - t;
+                t = end;
+                continue;
+            }
+            if let Some(end) = self.try_catchup_span(t, until) {
+                if deferred == 0 {
+                    par = self.cluster.parallelism() as f64;
+                    alloc = self.allocated_workers() as f64;
+                    stage_fill.clear();
+                }
+                deferred += end - t;
+                t = end;
+                continue;
+            }
+            // Tier 1 / slow core: one tick at a time.
             self.begin_tick(t);
             let rate = self.draw_rate(t);
             if self.try_quiet_tick(t, rate) {
+                self.ticks_quiet_closed += 1;
                 if deferred == 0 {
                     par = self.cluster.parallelism() as f64;
                     alloc = self.allocated_workers() as f64;
@@ -1331,10 +1458,237 @@ impl Simulation {
                 }
                 self.produce_and_serve(t, rate);
             }
+            t += 1;
         }
         if deferred > 0 {
             self.flush_quiet_fills(until - deferred, deferred, par, alloc, &stage_fill);
         }
+    }
+
+    /// Upper bound (exclusive, ≤ `until`) of a span starting at `t0`
+    /// inside which no per-tick event can occur: the workload rate is one
+    /// bit pattern ([`Workload::noise_free_over`]), no legacy failure or
+    /// typed fault fires, and no gray-failure restore is scheduled. Every
+    /// bound is exact — the tick at the returned boundary falls back to
+    /// the per-tick path, whose [`Self::begin_tick`] handles the event.
+    fn quiet_span_bound(&self, t0: Timestamp, until: Timestamp) -> Timestamp {
+        let mut end = self.workload.noise_free_over(t0, until);
+        // First failure at or after t0 (events strictly before t0 were
+        // handled by earlier `begin_tick`s).
+        let i = self.failures.partition_point(|&f| f < t0);
+        if let Some(&f) = self.failures.get(i) {
+            end = end.min(f);
+        }
+        if let Some(ev) = self.faults.events().get(self.fault_cursor) {
+            end = end.min(ev.at());
+        }
+        for &(_, _, to) in &self.gray_saved {
+            end = end.min(to);
+        }
+        end.clamp(t0, until)
+    }
+
+    /// Tier 2 — span-closed-form quiet integration. Commits ticks
+    /// `[t0, end)` in one pass and returns `Some(end)` iff the whole span
+    /// is provably quiet: fused model, noise-free rate plateau, steady
+    /// ready cluster, empty queues, and one tick's arrival mass feasible
+    /// under every per-worker budget (rate and capacities are
+    /// span-constant, so one tick's feasibility is every tick's). Commits
+    /// nothing and returns `None` otherwise.
+    ///
+    /// Span constants — per-worker throughput, CPU (noise-free profiles),
+    /// latency aggregates, workload and throughput — are computed once
+    /// with the reference's own expressions and bulk-filled via
+    /// [`crate::metrics::Tsdb::record_run_h`]; the latency ECDF takes the
+    /// tick's push sequence via [`Ecdf::push_run`]. What stays per-tick
+    /// is exactly what bitwise identity forces to stay per-tick: the
+    /// exactly-once pending log (rewind replays real arrival stamps), the
+    /// lag fold and worker-seconds (repeated float adds — `n·x` is not
+    /// `x + … + x` bitwise), checkpoint completion, and noisy CPU draws
+    /// in the reference's (tick, worker) order.
+    fn try_quiet_span(&mut self, t0: Timestamp, until: Timestamp) -> Option<Timestamp> {
+        if !self.span_integration
+            || self.rate_noise != 0.0
+            || self.stage_model != StageModel::Fused
+            || self.drift.is_some()
+            || self.crash_loop.is_some()
+            || self.pending_respawn.is_some()
+            || !self.cluster.ready()
+            || self.partitions.iter().any(|p| p.queue_len() != 0)
+        {
+            return None;
+        }
+        let end = self.quiet_span_bound(t0, until);
+        if end - t0 < MIN_SPAN_TICKS {
+            return None;
+        }
+        let n = self.cluster.serving_replicas();
+        if n == 0 {
+            return None;
+        }
+        // With rate_noise == 0 the per-tick draw is skipped, so the
+        // plateau value is bitwise what `draw_rate` returns at every tick.
+        let rate = self.workload.rate(t0);
+        let base_cap = self.fused_base_capacity(t0);
+        let np = self.partitions.len();
+        // Phase 1: feasibility, with the reference's own budget walk.
+        for w in 0..n {
+            let mut budget = self.workers[w].capacity(base_cap);
+            let mut pi = w;
+            while pi < np {
+                let a = rate * self.partition_weights[pi];
+                if a > 0.0 {
+                    if budget <= 1e-9 || a > budget {
+                        return None;
+                    }
+                    budget -= a;
+                }
+                pi += n;
+            }
+        }
+        debug_assert!(!self.started || t0 == self.now + 1, "non-monotonic span");
+        // Phase 2: commit. Span constants first — per-worker processed
+        // mass, utilization, and the tick's ECDF push sequence in the
+        // reference's (worker, partition) order.
+        let service_ms = self.job.service_latency_ms(n, rate);
+        let mut scratch = std::mem::take(&mut self.scratch_lat);
+        let mut processed_w = std::mem::take(&mut self.scratch_replica);
+        let mut utils = std::mem::take(&mut self.scratch_eff);
+        scratch.clear();
+        processed_w.clear();
+        utils.clear();
+        for w in 0..n {
+            let capacity = self.workers[w].capacity(base_cap);
+            let mut budget = capacity;
+            let mut pi = w;
+            while pi < np {
+                let a = rate * self.partition_weights[pi];
+                if a > 0.0 {
+                    budget -= a;
+                    scratch.push((service_ms, a));
+                }
+                pi += n;
+            }
+            let processed = capacity - budget;
+            processed_w.push(processed);
+            utils.push(processed / capacity);
+        }
+        let nspan = end - t0;
+        let alloc = self.allocated_workers() as f64;
+        let noisy_cpu = self.profile.cpu_noise != 0.0;
+        // The tight per-tick core (see the method docs for why each of
+        // these must stay per-tick).
+        for u in t0..end {
+            let t05 = u as f64 + 0.5;
+            for w in 0..n {
+                let mut pi = w;
+                while pi < np {
+                    let a = rate * self.partition_weights[pi];
+                    if a > 0.0 {
+                        self.partitions[pi].settle_quiet(t05, a);
+                    }
+                    pi += n;
+                }
+            }
+            if noisy_cpu {
+                for w in 0..n {
+                    let cpu = self.cpu_reading(utils[w]);
+                    self.workers[w].last_cpu = cpu;
+                    self.tsdb.record_h(self.handles.worker_cpu[w], u, cpu);
+                }
+            }
+            if u - self.last_checkpoint >= self.profile.checkpoint_interval {
+                self.complete_checkpoint(u);
+            }
+            let lag: f64 = self.partitions.iter().map(|p| p.lag()).sum();
+            self.tsdb.record_h(self.handles.lag, u, lag);
+            self.worker_seconds += alloc;
+        }
+        // Span-constant series and end-of-span worker state.
+        let run = nspan as usize;
+        self.tsdb.record_run_h(self.handles.workload, t0, run, rate);
+        for w in 0..n {
+            self.workers[w].last_throughput = processed_w[w];
+            self.tsdb
+                .record_run_h(self.handles.worker_tput[w], t0, run, processed_w[w]);
+            if !noisy_cpu {
+                let cpu = self.cpu_reading(utils[w]);
+                self.workers[w].last_cpu = cpu;
+                self.tsdb.record_run_h(self.handles.worker_cpu[w], t0, run, cpu);
+            }
+        }
+        self.latencies.push_run(&scratch, nspan);
+        if let Some((mean, p95)) = Self::latency_aggregates(&mut scratch) {
+            self.tsdb.record_run_h(self.handles.latency, t0, run, mean);
+            self.tsdb.record_run_h(self.handles.latency_p95, t0, run, p95);
+        }
+        let tput: f64 = self.workers[..n].iter().map(|w| w.last_throughput).sum();
+        self.tsdb.record_run_h(self.handles.throughput, t0, run, tput);
+        // Clock bookkeeping (`begin_tick`'s only work on a quiet span).
+        self.now = end - 1;
+        self.ticks += nspan;
+        self.started = true;
+        self.ticks_span_integrated += nspan;
+        self.scratch_lat = scratch;
+        self.scratch_replica = processed_w;
+        self.scratch_eff = utils;
+        Some(end)
+    }
+
+    /// Tier 3 — vectorized busy-span serve: a backlogged (or
+    /// quiet-infeasible) but *stable* deployment drains through the
+    /// reference [`Self::serve`] loop, tick-major, without per-tick
+    /// `begin_tick`/`draw_rate`/fast-path dispatch. Same structural
+    /// preconditions as tier 2 minus the empty-queue requirement (and
+    /// drift is allowed — `serve` re-derives the drifted capacity each
+    /// tick itself). Stops early once every queue drains, handing the
+    /// rest of the bound back so tier 2 can take over. Returns the
+    /// committed end (`> t0`), or `None` having committed nothing.
+    fn try_catchup_span(&mut self, t0: Timestamp, until: Timestamp) -> Option<Timestamp> {
+        if !self.span_integration
+            || self.rate_noise != 0.0
+            || self.stage_model != StageModel::Fused
+            || self.crash_loop.is_some()
+            || self.pending_respawn.is_some()
+            || !self.cluster.ready()
+        {
+            return None;
+        }
+        let end = self.quiet_span_bound(t0, until);
+        if end - t0 < MIN_SPAN_TICKS {
+            return None;
+        }
+        let n = self.cluster.serving_replicas();
+        if n == 0 {
+            return None;
+        }
+        debug_assert!(!self.started || t0 == self.now + 1, "non-monotonic span");
+        let rate = self.workload.rate(t0);
+        let alloc = self.allocated_workers() as f64;
+        let mut u = t0;
+        while u < end {
+            self.now = u;
+            self.ticks += 1;
+            self.started = true;
+            for (p, w) in self.partitions.iter_mut().zip(&self.partition_weights) {
+                p.produce(u as f64 + 0.5, rate * w);
+            }
+            self.serve(u, n, rate);
+            if u - self.last_checkpoint >= self.profile.checkpoint_interval {
+                self.complete_checkpoint(u);
+            }
+            let lag: f64 = self.partitions.iter().map(|p| p.lag()).sum();
+            self.tsdb.record_h(self.handles.lag, u, lag);
+            self.worker_seconds += alloc;
+            u += 1;
+            if self.partitions.iter().all(|p| p.queue_len() == 0) {
+                break;
+            }
+        }
+        let run = (u - t0) as usize;
+        self.tsdb.record_run_h(self.handles.workload, t0, run, rate);
+        self.ticks_span_catchup += u - t0;
+        Some(u)
     }
 
     /// Bulk-fill the deferred constant series for the quiet run starting
@@ -1424,9 +1778,7 @@ impl Simulation {
             }
             let processed = capacity - budget;
             let util = processed / capacity;
-            let cpu = (self.profile.cpu_for_utilization(util)
-                * (1.0 + self.rng.normal() * self.profile.cpu_noise))
-                .clamp(0.0, 1.0);
+            let cpu = self.cpu_reading(util);
             self.workers[w].last_throughput = processed;
             self.workers[w].last_cpu = cpu;
             self.tsdb.record_h(self.handles.worker_tput[w], t, processed);
@@ -1602,9 +1954,7 @@ impl Simulation {
                 } else {
                     0.0
                 };
-                let cpu = (self.profile.cpu_for_utilization(util)
-                    * (1.0 + self.rng.normal() * self.profile.cpu_noise))
-                    .clamp(0.0, 1.0);
+                let cpu = self.cpu_reading(util);
                 let w = &mut self.stages[s].workers[r];
                 w.last_throughput = tput_r;
                 w.last_cpu = cpu;
@@ -1746,9 +2096,7 @@ impl Simulation {
             }
             let processed = capacity - budget;
             let util = processed / capacity;
-            let cpu = (self.profile.cpu_for_utilization(util)
-                * (1.0 + self.rng.normal() * self.profile.cpu_noise))
-                .clamp(0.0, 1.0);
+            let cpu = self.cpu_reading(util);
             self.workers[w].last_throughput = processed;
             self.workers[w].last_cpu = cpu;
             self.tsdb.record_h(self.handles.worker_tput[w], t, processed);
@@ -1761,16 +2109,16 @@ impl Simulation {
         self.tsdb.record_h(self.handles.throughput, t, tput);
     }
 
-    /// Record the per-tick weighted mean and weighted p95 of the collected
-    /// latency samples (shared by the fused and staged serve paths;
-    /// `scratch` is sorted in place). No-op on an empty tick.
-    fn record_latency_aggregates(&mut self, t: Timestamp, scratch: &mut Vec<(f64, f64)>) {
+    /// Weighted mean and weighted p95 of one tick's latency samples
+    /// (`scratch` is sorted in place); `None` on an empty tick. Shared by
+    /// the per-tick recorder and the tier-2 span integrator, so both
+    /// produce the same bits from the same sample set.
+    fn latency_aggregates(scratch: &mut [(f64, f64)]) -> Option<(f64, f64)> {
         if scratch.is_empty() {
-            return;
+            return None;
         }
         let total_w: f64 = scratch.iter().map(|(_, w)| w).sum();
         let mean = scratch.iter().map(|(v, w)| v * w).sum::<f64>() / total_w;
-        self.tsdb.record_h(self.handles.latency, t, mean);
         // Weighted p95 on the (small) per-tick sample set.
         scratch.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let mut acc = 0.0;
@@ -1782,7 +2130,17 @@ impl Simulation {
                 break;
             }
         }
-        self.tsdb.record_h(self.handles.latency_p95, t, p95);
+        Some((mean, p95))
+    }
+
+    /// Record the per-tick weighted mean and weighted p95 of the collected
+    /// latency samples (shared by the fused and staged serve paths;
+    /// `scratch` is sorted in place). No-op on an empty tick.
+    fn record_latency_aggregates(&mut self, t: Timestamp, scratch: &mut Vec<(f64, f64)>) {
+        if let Some((mean, p95)) = Self::latency_aggregates(scratch) {
+            self.tsdb.record_h(self.handles.latency, t, mean);
+            self.tsdb.record_h(self.handles.latency_p95, t, p95);
+        }
     }
 
     /// Fill (if needed) and return stage `s`'s skew entry for `n` replicas:
@@ -1955,9 +2313,7 @@ impl Simulation {
                 } else {
                     0.0
                 };
-                let cpu = (self.profile.cpu_for_utilization(util)
-                    * (1.0 + self.rng.normal() * self.profile.cpu_noise))
-                    .clamp(0.0, 1.0);
+                let cpu = self.cpu_reading(util);
                 let w = &mut self.stages[s].workers[r];
                 w.last_throughput = tput_r;
                 w.last_cpu = cpu;
@@ -2374,6 +2730,90 @@ mod tests {
         assert_advance_quiet_agrees(staged_sim(10_000.0, 2, 21), staged_sim(10_000.0, 2, 21), 600);
         // Staged, near saturation: mixed fast/slow ticks.
         assert_advance_quiet_agrees(staged_sim(60_000.0, 1, 22), staged_sim(60_000.0, 1, 22), 400);
+    }
+
+    /// The tier-2/tier-3 span fast paths must be bitwise-invisible: a
+    /// run with span integration disabled (tier-1 + slow core only) and
+    /// the default run must produce identical histograms, TSDB content
+    /// and conserved masses.
+    fn assert_span_integration_agrees(mut a: Simulation, mut b: Simulation, upto: Timestamp) {
+        a.set_span_integration(false);
+        a.advance_quiet(0, upto + 1);
+        b.advance_quiet(0, upto + 1);
+        assert_eq!(a.ticks_span_integrated(), 0);
+        assert_eq!(a.ticks_span_catchup(), 0);
+        assert_eq!(a.latencies(), b.latencies());
+        assert_eq!(a.tsdb(), b.tsdb());
+        assert_eq!(a.total_consumed().to_bits(), b.total_consumed().to_bits());
+        assert_eq!(a.total_backlog().to_bits(), b.total_backlog().to_bits());
+        assert_eq!(a.worker_seconds().to_bits(), b.worker_seconds().to_bits());
+        assert_eq!(a.rescale_log, b.rescale_log);
+        assert_eq!(a.down_ticks(), b.down_ticks());
+        a.check_invariants();
+        b.check_invariants();
+    }
+
+    fn failure_sim(seed: u64) -> Simulation {
+        let cfg = SimConfig {
+            partitions: 12,
+            initial_replicas: 4,
+            seed,
+            failures: vec![200],
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate: 10_000.0,
+                    duration: 10_000,
+                }),
+            )
+        };
+        Simulation::new(cfg)
+    }
+
+    #[test]
+    fn span_integration_toggle_is_bitwise_invisible() {
+        // Tier 2 (steady underloaded), tier 3 (saturated, queues never
+        // drain) and a zero-noise failure run that mixes the slow core,
+        // tier-3 catch-up and tier-2 steady stretches.
+        assert_span_integration_agrees(sim_with(10_000.0, 4, 9), sim_with(10_000.0, 4, 9), 600);
+        assert_span_integration_agrees(sim_with(18_000.0, 3, 9), sim_with(18_000.0, 3, 9), 400);
+        assert_span_integration_agrees(failure_sim(13), failure_sim(13), 700);
+    }
+
+    #[test]
+    fn quiet_run_is_covered_by_tier2_spans() {
+        // Underloaded constant-rate, no events: one tier-2 span covers
+        // the whole horizon — zero slow-core and zero tier-1 entries.
+        let mut sim = sim_with(10_000.0, 4, 9);
+        sim.advance_quiet(0, 601);
+        assert_eq!(sim.ticks_span_integrated(), 601);
+        assert_eq!(sim.ticks_slow_core(), 0);
+        assert_eq!(sim.ticks_quiet_closed(), 0);
+        assert_eq!(sim.ticks_span_catchup(), 0);
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn failure_run_uses_catchup_then_tier2_spans() {
+        // Failure at t=200: tier 2 up to the failure, slow core through
+        // the restart window, tier-3 catch-up for the drain, tier 2
+        // again once the queues empty. Every tick lands in exactly one
+        // counter, and the slow core is confined to the restart window.
+        let mut sim = failure_sim(13);
+        sim.advance_quiet(0, 701);
+        assert!(sim.ticks_span_integrated() > 0, "no tier-2 span engaged");
+        assert!(sim.ticks_span_catchup() > 0, "no tier-3 catch-up engaged");
+        let slow = sim.ticks_slow_core();
+        assert!(slow > 0 && slow < 100, "slow core ticks: {slow}");
+        assert_eq!(
+            sim.ticks_slow_core()
+                + sim.ticks_quiet_closed()
+                + sim.ticks_span_integrated()
+                + sim.ticks_span_catchup(),
+            701
+        );
+        sim.check_invariants();
     }
 
     fn staged_sim(rate: f64, replicas: usize, seed: u64) -> Simulation {

@@ -349,7 +349,17 @@ impl Experiment {
         };
         let mut t = 0;
         while t < self.duration {
-            sim.step(t);
+            match self.engine_mode {
+                // The per-tick driver IS the reference: always the slow
+                // core, so fast-path bugs can never cancel out of the
+                // mode-agreement comparison.
+                EngineMode::PerTick => sim.step(t),
+                // Decision ticks route through `advance_quiet` as a
+                // single-tick range — bit-identical to `step`, but a
+                // steady decision tick whose decide is a no-op takes the
+                // tier-1 closed form instead of the slow core.
+                EngineMode::EventDriven => sim.advance_quiet(t, t + 1),
+            }
             if let Some(plan) = scaler.decide_plan(&sim.view()) {
                 if scaler.wants_precheckpoint() {
                     sim.checkpoint_now();
@@ -370,15 +380,20 @@ impl Experiment {
             // identical traces.
             if self.engine_mode == EngineMode::EventDriven && sim.ready() && next < self.duration
             {
-                let mut horizon = self
-                    .duration
-                    .min(scaler.next_decision(t))
-                    .min(sim.next_knot(t));
+                let mut horizon = self.duration.min(sim.next_knot(t));
                 if let Some(f) = sim.next_failure_after(t) {
                     horizon = horizon.min(f);
                 }
                 if let Some(f) = sim.next_fault_boundary(t) {
                     horizon = horizon.min(f);
+                }
+                // Decision-spanning no-op skip: bound the span by the
+                // scaler's next possible action only when it cannot prove
+                // its skipped `decide` calls over the span are pure
+                // no-ops ([`Autoscaler::decide_is_noop_over`] —
+                // conservative `false` keeps today's bound).
+                if !scaler.decide_is_noop_over(&sim.view(), horizon) {
+                    horizon = horizon.min(scaler.next_decision(t));
                 }
                 if horizon > next {
                     sim.advance_quiet(next, horizon);

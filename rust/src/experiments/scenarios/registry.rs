@@ -317,16 +317,17 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The curated built-in matrix (26 scenarios): the six paper
+    /// The curated built-in matrix (27 scenarios): the six paper
     /// engine × job cells on their default traces, the three stress shapes
-    /// on several cells, two legacy failure-injection schedules, four
+    /// on several cells, two legacy failure-injection schedules, five
     /// typed-fault chaos cells (`-chaos`, `-grayweek`, `-crashloop3`; see
     /// `dsp::faults`), four staged-engine operator-elasticity cells
     /// (`bottleneck-shift`, `skew-amplify`), two week-scale `diurnal-week`
-    /// cells (staged engine; real days at `--duration 604800`), one
-    /// month-scale `diurnal-month` cell (real days at
-    /// `--duration 2592000`, the event-driven engine's flagship horizon),
-    /// and the Fig-11 Phoebe comparison cell (`flink-ysb-sine`, 18-worker
+    /// cells (staged engine; real days at `--duration 604800`), a
+    /// month-scale `diurnal-month` cell plus its `-chaos` twin (real days
+    /// at `--duration 2592000`, the event-driven engine's flagship
+    /// horizon; the chaos twin is the faults-smoke month drive), and the
+    /// Fig-11 Phoebe comparison cell (`flink-ysb-sine`, 18-worker
     /// ceiling).
     pub fn builtin(duration: Timestamp, seeds: &[u64]) -> Self {
         use EngineKind::{Flink, KStreams};
@@ -386,6 +387,11 @@ impl ScenarioRegistry {
             // with `--duration 2592000` for real days (CI smokes it
             // truncated through the real CLI).
             s(Flink, WordCount, DiurnalMonth, FailurePlan::None),
+            // The month cell's chaos twin: the typed mixed-fault timeline
+            // over the flagship horizon, so failure catch-up (the tier-3
+            // vectorized serve) is exercised at month scale. CI's
+            // faults-smoke job drives it truncated through the real CLI.
+            s(Flink, WordCount, DiurnalMonth, FailurePlan::Chaos),
         ];
         // The paper's Fig-11 Phoebe comparison: YSB on the sine trace,
         // 18-worker ceiling, Phoebe's offline profiling cost accounted
@@ -593,12 +599,16 @@ mod tests {
             "flink-wordcount-bottleneck-shift-chaos",
             "flink-wordcount-sine-crashloop3",
             "flink-wordcount-diurnal-week-grayweek",
+            "flink-wordcount-diurnal-month-chaos",
         ] {
             let sc = reg.get(name).expect(name);
             let exp = sc.to_experiment().unwrap();
             assert!(exp.failures.is_empty(), "{name} mixes legacy failures");
             assert!(!exp.faults.is_empty(), "{name} lost its timeline");
         }
+        // The month chaos twin keeps the flagship cell's staged engine.
+        let mc = reg.get("flink-wordcount-diurnal-month-chaos").unwrap();
+        assert_eq!(mc.stage_model, StageModel::Staged);
         // The staged chaos cell keeps its shape's engine knobs.
         let bs = reg.get("flink-wordcount-bottleneck-shift-chaos").unwrap();
         assert_eq!(bs.stage_model, StageModel::Staged);

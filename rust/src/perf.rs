@@ -33,7 +33,13 @@
 //! engine core ([`crate::dsp::EngineMode`]) follows the same pattern:
 //! `engine_tick_1h_event` integrates a quiet hour in one call and
 //! baselines against `engine_tick_1h_quiet_pertick`, the retained
-//! per-tick loop over the identical deployment.
+//! per-tick loop over the identical deployment. The span integrator
+//! stretches that pair to a month: `engine_tick_1month_quiet_span`
+//! commits 30 noise-free days through the tier-2 span closed form and
+//! baselines against `engine_tick_1month_quiet_pertick` — the same
+//! deployment with the span paths disabled
+//! (`Simulation::set_span_integration(false)`), i.e. the tier-1
+//! per-tick quiet loop.
 //!
 //! `daedalus bench --check <tracked.json>` prints per-entry deltas of the
 //! current run against the tracked trajectory (report-only; CI's
@@ -201,6 +207,34 @@ fn quiet_sim_1h() -> Simulation {
             duration: 3_600,
         }),
     ))
+}
+
+/// 30 simulated days — the horizon of the month-scale bench pair.
+const MONTH_TICKS: u64 = 2_592_000;
+
+/// Underloaded, fully noise-free month deployment: constant rate,
+/// `rate_noise == 0` (the [`SimConfig::base`] default) and `cpu_noise`
+/// zeroed, so [`crate::workload::Workload::noise_free_over`] claims the
+/// whole horizon and tier-2 span integration covers all 2 592 000 ticks.
+/// `engine_tick_1month_quiet_span` measures it against the retained
+/// tier-1 per-tick quiet loop over the identical deployment
+/// (`set_span_integration(false)`).
+fn quiet_sim_month() -> Simulation {
+    let mut profile = EngineProfile::flink();
+    profile.cpu_noise = 0.0;
+    let cfg = SimConfig {
+        partitions: 12,
+        initial_replicas: 4,
+        ..SimConfig::base(
+            profile,
+            JobProfile::wordcount(),
+            Box::new(ConstantWorkload {
+                rate: 10_000.0,
+                duration: MONTH_TICKS,
+            }),
+        )
+    };
+    Simulation::new(cfg)
 }
 
 /// Same deployment on the staged engine (per-operator replica sets,
@@ -416,6 +450,38 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
             let mut sim = quiet_sim_1h();
             sim.step(0);
             sim.advance_quiet(1, 3_600);
+            sim.total_backlog()
+        },
+    );
+
+    // Month-scale span integration: the quiet-hour idea stretched to 30
+    // simulated days with every noise source zeroed, so the whole run is
+    // one noise-free claim. The reference walks all 2 592 000 ticks
+    // through the retained tier-1 per-tick quiet closed form (span paths
+    // disabled); the default engine commits them as tier-2 spans. The
+    // agreement tests pin the toggle bit-invisible, so the pair measures
+    // pure per-tick overhead removed — the month-scale-sweep headline
+    // (`ROADMAP.md`).
+    r.run_ticks(
+        "engine_tick_1month_quiet_pertick",
+        None,
+        2,
+        MONTH_TICKS,
+        || {
+            let mut sim = quiet_sim_month();
+            sim.set_span_integration(false);
+            sim.advance_quiet(0, MONTH_TICKS);
+            sim.total_backlog()
+        },
+    );
+    r.run_ticks(
+        "engine_tick_1month_quiet_span",
+        Some("engine_tick_1month_quiet_pertick"),
+        2,
+        MONTH_TICKS,
+        || {
+            let mut sim = quiet_sim_month();
+            sim.advance_quiet(0, MONTH_TICKS);
             sim.total_backlog()
         },
     );

@@ -209,6 +209,23 @@ pub trait Workload: Send + Sync {
         let _ = t;
         self.duration()
     }
+
+    /// Largest `end` with `from ≤ end ≤ until` such that `rate(u)` returns
+    /// one **bitwise-identical** value for every `u` in `[from, end)`.
+    ///
+    /// This is the span-integration hook: over such a plateau the engine
+    /// may fold a whole quiet span into closed form without re-sampling
+    /// the rate per tick. The claim must be exact at the bit level — the
+    /// EventDriven ≡ PerTick contract (CONTRIBUTING item 4) rides on it —
+    /// so the conservative default claims nothing (`end = from`, an empty
+    /// span), which is always correct and merely forfeits the fast path.
+    /// Shapes that are exactly piecewise-constant (constant, step,
+    /// replayed plateaus) override with their own boundary arithmetic;
+    /// smooth or noise-bearing shapes must keep the default.
+    fn noise_free_over(&self, from: Timestamp, until: Timestamp) -> Timestamp {
+        let _ = until;
+        from
+    }
 }
 
 impl<W: Workload + ?Sized> Workload for Box<W> {
@@ -226,6 +243,10 @@ impl<W: Workload + ?Sized> Workload for Box<W> {
 
     fn next_knot(&self, t: Timestamp) -> Timestamp {
         (**self).next_knot(t)
+    }
+
+    fn noise_free_over(&self, from: Timestamp, until: Timestamp) -> Timestamp {
+        (**self).noise_free_over(from, until)
     }
 }
 
@@ -259,6 +280,12 @@ impl<W: Workload> Workload for ScaledWorkload<W> {
     fn next_knot(&self, t: Timestamp) -> Timestamp {
         // Scaling is time-invariant: the knots are the inner shape's.
         self.inner.next_knot(t)
+    }
+
+    fn noise_free_over(&self, from: Timestamp, until: Timestamp) -> Timestamp {
+        // Multiplying a bitwise-constant plateau by the constant factor
+        // yields a bitwise-constant plateau, so the inner claim carries.
+        self.inner.noise_free_over(from, until)
     }
 }
 
@@ -312,6 +339,24 @@ mod tests {
         let k = w.next_knot(0);
         assert!(k > 0 && k < 21_600);
         assert!(w.rate(k + 1) < 0.2 * w.rate(k.saturating_sub(2)));
+    }
+
+    #[test]
+    fn noise_free_over_forwards_through_box_and_scaling() {
+        let step = StepWorkload {
+            steps: vec![(0, 1.0), (50, 2.0)],
+            duration: 100,
+        };
+        let boxed: Box<dyn Workload> = Box::new(step.clone());
+        assert_eq!(boxed.noise_free_over(10, 100), 50);
+        let scaled = ScaledWorkload {
+            inner: step,
+            factor: 2.0,
+        };
+        assert_eq!(scaled.noise_free_over(10, 100), 50);
+        // Smooth shapes keep the conservative empty-claim default.
+        let sine = SineWorkload::paper_default(10_000.0, 3_600);
+        assert_eq!(sine.noise_free_over(17, 200), 17);
     }
 
     #[test]

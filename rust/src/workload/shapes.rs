@@ -21,6 +21,11 @@ impl Workload for ConstantWorkload {
     fn duration(&self) -> Timestamp {
         self.duration
     }
+
+    fn noise_free_over(&self, from: Timestamp, until: Timestamp) -> Timestamp {
+        // One rate value, everywhere: the whole horizon is a plateau.
+        until.max(from)
+    }
 }
 
 /// Linear ramp from `from` to `to` over the duration — used to sweep the
@@ -76,6 +81,18 @@ impl Workload for StepWorkload {
             .map(|&(start, _)| start)
             .find(|&start| start > t)
             .unwrap_or(self.duration)
+    }
+
+    fn noise_free_over(&self, from: Timestamp, until: Timestamp) -> Timestamp {
+        // The rate is constant between step boundaries (and past the last
+        // one, forever): the plateau runs to the first start after `from`.
+        self.steps
+            .iter()
+            .map(|&(start, _)| start)
+            .find(|&start| start > from)
+            .unwrap_or(until)
+            .min(until)
+            .max(from)
     }
 }
 
@@ -139,6 +156,21 @@ impl Workload for ReplayWorkload {
 
     fn duration(&self) -> Timestamp {
         self.samples.len() as Timestamp
+    }
+
+    fn noise_free_over(&self, from: Timestamp, until: Timestamp) -> Timestamp {
+        // Scan for the first sample whose bit pattern differs from the
+        // plateau value at `from`. This covers recorded plateaus and the
+        // clamped tail past the last sample (where the rate is constant).
+        if from >= until {
+            return from;
+        }
+        let plateau = self.rate(from).to_bits();
+        let mut end = from + 1;
+        while end < until && self.rate(end).to_bits() == plateau {
+            end += 1;
+        }
+        end
     }
 }
 
@@ -226,6 +258,49 @@ mod tests {
         std::fs::write(&path, "").unwrap();
         assert!(ReplayWorkload::from_csv(path.to_str().unwrap()).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn noise_free_over_matches_per_tick_rate_bits() {
+        // The hook's contract: `rate(u)` is one bit pattern on
+        // `[from, end)`. Check each override against a brute-force scan.
+        let constant = ConstantWorkload {
+            rate: 12_345.6,
+            duration: 1_000,
+        };
+        let step = StepWorkload {
+            steps: vec![(0, 10.0), (100, 50.0), (200, 20.0)],
+            duration: 300,
+        };
+        let replay = ReplayWorkload {
+            samples: vec![5.0, 5.0, 5.0, 7.0, 7.0, 3.0],
+        };
+        let shapes: [&dyn Workload; 3] = [&constant, &step, &replay];
+        for w in shapes {
+            for from in 0..400u64 {
+                let until = 400;
+                let end = w.noise_free_over(from, until);
+                assert!((from..=until).contains(&end));
+                let plateau = w.rate(from).to_bits();
+                for u in from..end {
+                    assert_eq!(w.rate(u).to_bits(), plateau, "bits drift at {u}");
+                }
+            }
+        }
+        // Exactness at the interesting boundaries.
+        assert_eq!(constant.noise_free_over(0, 1_000_000), 1_000_000);
+        assert_eq!(step.noise_free_over(0, 400), 100);
+        assert_eq!(step.noise_free_over(150, 400), 200);
+        assert_eq!(step.noise_free_over(250, 400), 400); // past last step
+        assert_eq!(replay.noise_free_over(0, 400), 3);
+        assert_eq!(replay.noise_free_over(5, 400), 400); // clamped tail
+        // Ramp keeps the conservative default: an empty claim.
+        let ramp = RampWorkload {
+            from: 0.0,
+            to: 100.0,
+            duration: 100,
+        };
+        assert_eq!(ramp.noise_free_over(10, 50), 10);
     }
 
     #[test]

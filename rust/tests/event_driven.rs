@@ -111,6 +111,118 @@ fn chaos_cells_stay_in_the_registry_wide_bitwise_pin() {
     }
 }
 
+/// Randomized-horizon fuzz for `advance_quiet`: correctness must never
+/// depend on the caller's horizon choice. Split `[0, duration)` into
+/// random sub-ranges — empty and single-tick ranges included — and
+/// require bitwise agreement with one whole-horizon call and with the
+/// per-tick reference, on a fused and a staged chaos cell (failure +
+/// worker crash + gray-failure window inside the range).
+#[test]
+fn advance_quiet_agrees_for_any_random_horizon_split() {
+    use daedalus::dsp::{
+        EngineProfile, FaultEvent, FaultTimeline, SimConfig, Simulation, StageModel,
+    };
+    use daedalus::jobs::JobProfile;
+    use daedalus::stats::Rng;
+    use daedalus::workload::ConstantWorkload;
+
+    const DURATION: u64 = 900;
+
+    fn chaos_sim(staged: bool) -> Simulation {
+        let cfg = SimConfig {
+            partitions: if staged { 24 } else { 12 },
+            initial_replicas: if staged { 2 } else { 4 },
+            seed: 0xF0,
+            failures: vec![300],
+            faults: FaultTimeline::new(vec![
+                FaultEvent::WorkerCrash { t: 520, k: 1 },
+                FaultEvent::GrayFailure {
+                    from: 700,
+                    to: 760,
+                    worker: 1,
+                    severity: 0.5,
+                },
+            ]),
+            stage_model: if staged {
+                StageModel::Staged
+            } else {
+                StageModel::Fused
+            },
+            ..SimConfig::base(
+                EngineProfile::flink(),
+                JobProfile::wordcount(),
+                Box::new(ConstantWorkload {
+                    rate: 10_000.0,
+                    duration: 10_000,
+                }),
+            )
+        };
+        Simulation::new(cfg)
+    }
+
+    fn assert_sims_bitwise_equal(a: &Simulation, b: &Simulation, unit: &str) {
+        assert_eq!(a.latencies(), b.latencies(), "latency drift: {unit}");
+        assert_eq!(a.tsdb(), b.tsdb(), "tsdb drift: {unit}");
+        assert_eq!(
+            a.total_consumed().to_bits(),
+            b.total_consumed().to_bits(),
+            "consumed drift: {unit}"
+        );
+        assert_eq!(
+            a.total_backlog().to_bits(),
+            b.total_backlog().to_bits(),
+            "backlog drift: {unit}"
+        );
+        assert_eq!(
+            a.worker_seconds().to_bits(),
+            b.worker_seconds().to_bits(),
+            "worker-seconds drift: {unit}"
+        );
+        assert_eq!(a.rescale_log, b.rescale_log, "rescale-log drift: {unit}");
+    }
+
+    for staged in [false, true] {
+        let cell = if staged { "staged-chaos" } else { "fused-chaos" };
+        // Per-tick reference and the whole-horizon event-driven call.
+        let mut reference = chaos_sim(staged);
+        for t in 0..DURATION {
+            reference.step(t);
+        }
+        let mut whole = chaos_sim(staged);
+        whole.advance_quiet(0, DURATION);
+        assert_sims_bitwise_equal(&reference, &whole, &format!("{cell}/whole-horizon"));
+        reference.check_invariants();
+        whole.check_invariants();
+
+        for case in 0..6u64 {
+            let mut rng = Rng::new(0xF022 + case);
+            let mut sim = chaos_sim(staged);
+            let mut splits = Vec::new();
+            let mut t = 0;
+            while t < DURATION {
+                // 0..=36-tick sub-ranges: ~3 % empty, plenty single-tick.
+                let end = (t + rng.below(37)).min(DURATION);
+                splits.push((t, end));
+                sim.advance_quiet(t, end);
+                if end == t {
+                    // An empty range must be a no-op; take one real tick
+                    // so the walk always terminates.
+                    sim.advance_quiet(t, t + 1);
+                    t += 1;
+                } else {
+                    t = end;
+                }
+            }
+            assert_sims_bitwise_equal(
+                &reference,
+                &sim,
+                &format!("{cell}/case-{case} splits {splits:?}"),
+            );
+            sim.check_invariants();
+        }
+    }
+}
+
 /// Truncated week/month-scale runs (real shapes, shortened horizon): the
 /// modes still agree across a rescale-heavy diurnal trace, and the
 /// flagship month cell produces a sane, fully-sampled trace under the
