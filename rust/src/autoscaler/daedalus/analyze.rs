@@ -124,10 +124,11 @@ impl Analyzer {
         };
         // Ledger quarantine: while the anomaly tracker flags a straggler
         // window (a gray-degraded worker drags throughput down with no
-        // restart to observe), the estimate still feeds *this* iteration's
+        // restart to observe) or the manager flags the monitor window as
+        // telemetry-suspect, the estimate still feeds *this* iteration's
         // planning but is not remembered as the capacity of a healthy
         // deployment at scale-out `n`.
-        if !knowledge.straggler_suspect() {
+        if !knowledge.capacity_quarantined() {
             knowledge.seen_capacity.insert(n, current);
             knowledge.capacity_history.push((data.now, n, current));
         }

@@ -28,8 +28,12 @@ const STRAGGLER_MIN_SAMPLES: f64 = 120.0;
 /// Workload/throughput difference at tick `now`, if both series have a
 /// sample at exactly `now` (the engine only records throughput while
 /// serving). Works on any historical tick — the event-driven manager
-/// replays skipped quiet-span ticks through this from the dense TSDB.
-pub fn diff_at(tsdb: &crate::metrics::Tsdb, now: Timestamp) -> Option<f64> {
+/// replays skipped quiet-span ticks through this from the dense TSDB,
+/// with the lens re-anchored at `now`
+/// ([`crate::dsp::telemetry::TelemetryLens::at`]) so a
+/// replayed read is a pure function of `now` regardless of when the
+/// replay happens (bitwise across engine modes).
+pub fn diff_at(tsdb: crate::dsp::telemetry::TelemetryLens<'_>, now: Timestamp) -> Option<f64> {
     let (tw, w) = tsdb.last_at(&SeriesId::global("workload_rate"), now)?;
     let (tt, tp) = tsdb.last_at(&SeriesId::global("throughput"), now)?;
     (tw == now && tt == now).then_some(w - tp)
@@ -38,7 +42,7 @@ pub fn diff_at(tsdb: &crate::metrics::Tsdb, now: Timestamp) -> Option<f64> {
 /// Current workload/throughput difference, if both series have a fresh
 /// sample at `now`.
 fn fresh_diff(view: &SimView<'_>) -> Option<f64> {
-    diff_at(view.tsdb, view.now)
+    diff_at(view.tsdb.at(view.now), view.now)
 }
 
 /// Per-second background tracking of the difference statistics. Runs only
@@ -167,7 +171,7 @@ mod tests {
     fn view_at(db: &Tsdb, now: Timestamp, ready: bool) -> SimView<'_> {
         SimView {
             now,
-            tsdb: db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(db),
             parallelism: 4,
             ready,
             max_replicas: 12,

@@ -3,6 +3,7 @@
 //! linear projection when the previous forecast was poor, and count
 //! consecutive poor forecasts toward a retrain.
 
+use crate::autoscaler::guard;
 use crate::clock::Timestamp;
 use crate::runtime::ComputeBackend;
 use crate::stats::{wape, HoltWinters, LinearRegression};
@@ -59,7 +60,17 @@ pub fn forecast(
         let k = elapsed.min(prev.values.len());
         if k >= MIN_WAPE_OVERLAP && data.history.len() >= k {
             let actual = &data.history[data.history.len() - k..];
-            if let Some(w) = wape(actual, &prev.values[..k]) {
+            // Hardened: corrupted samples (NaN/∞) can linger in the
+            // realized window after a telemetry fault ends; a single one
+            // would poison the WAPE score and, through the streak counter,
+            // the retrain bookkeeping. Refuse the evaluation instead —
+            // "not evaluable", exactly like insufficient overlap.
+            let finite_actual =
+                !cfg.hardened || actual.iter().all(|&v| guard::finite(v).is_some());
+            if let Some(w) = finite_actual
+                .then(|| wape(actual, &prev.values[..k]))
+                .flatten()
+            {
                 knowledge.wape_history.push(w);
                 prev_wape = Some(w);
                 if w > cfg.wape_threshold {

@@ -67,6 +67,13 @@ pub struct Knowledge {
     /// is one window whose capacity observations were kept out of the
     /// ledgers (reports/diagnostics).
     pub quarantined_windows: usize,
+    /// Whether the current monitor window overlaps an active telemetry
+    /// fault (set by the manager each loop, hardened mode only): capacity
+    /// observations are quarantined exactly like straggler windows.
+    telemetry_suspect: bool,
+    /// Rising edges of the telemetry quarantine — each is one degraded
+    /// span whose capacity observations were kept out of the ledgers.
+    pub telemetry_quarantined_windows: usize,
     /// Adaptive anticipated downtimes (§3.4), refined from observations.
     pub downtime_out: f64,
     /// Anticipated scale-in downtime (s), refined from observations.
@@ -100,6 +107,8 @@ impl Knowledge {
             anomaly: Welford::new(),
             straggler_streak: 0,
             quarantined_windows: 0,
+            telemetry_suspect: false,
+            telemetry_quarantined_windows: 0,
             downtime_out,
             downtime_in,
             last_rescale: None,
@@ -148,6 +157,30 @@ impl Knowledge {
     /// estimates — only *persistence* is gated.
     pub fn straggler_suspect(&self) -> bool {
         self.straggler_streak >= super::anomaly::STRAGGLER_STREAK
+    }
+
+    /// Update the telemetry quarantine flag (manager-driven, per loop).
+    /// A rising edge counts one quarantined window for diagnostics.
+    pub fn set_telemetry_suspect(&mut self, suspect: bool) {
+        if suspect && !self.telemetry_suspect {
+            self.telemetry_quarantined_windows += 1;
+        }
+        self.telemetry_suspect = suspect;
+    }
+
+    /// Whether the current monitor window is telemetry-suspect (ISSUE 9):
+    /// a metric fault overlapped the window the capacity observation was
+    /// computed from.
+    pub fn telemetry_suspect(&self) -> bool {
+        self.telemetry_suspect
+    }
+
+    /// Combined capacity-ledger quarantine: straggler-suspect (gray
+    /// failure, PR 7) or telemetry-suspect (corruption/staleness in the
+    /// monitor window). Planning still uses the fresh in-loop estimates —
+    /// only *persistence* into the ledgers is gated.
+    pub fn capacity_quarantined(&self) -> bool {
+        self.straggler_suspect() || self.telemetry_suspect
     }
 }
 

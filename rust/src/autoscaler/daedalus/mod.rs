@@ -37,7 +37,7 @@ pub mod monitor;
 pub mod plan;
 pub mod recovery;
 
-use super::Autoscaler;
+use super::{guard, Autoscaler};
 use crate::dsp::engine::{ScalePlan, SimView};
 use crate::runtime::ComputeBackend;
 
@@ -82,6 +82,14 @@ pub struct DaedalusConfig {
     pub skew_aware: bool,
     /// Consumer-lag scale-in protection (§3.2).
     pub use_lag_guard: bool,
+    /// Degraded-telemetry hardening: hold the last plan while a telemetry
+    /// fault is visible, quarantine capacity observations collected under
+    /// corruption/staleness from the knowledge ledger, refuse non-finite
+    /// history into the forecaster's WAPE gate, and clamp the first
+    /// post-recovery rescale through a [`guard::PlanGuard`] cooldown.
+    /// `false` is the unguarded ablation: the exact pre-hardening manager,
+    /// reading whatever the (possibly faulted) lens serves.
+    pub hardened: bool,
 }
 
 impl Default for DaedalusConfig {
@@ -102,9 +110,16 @@ impl Default for DaedalusConfig {
             use_recovery_constraint: true,
             skew_aware: true,
             use_lag_guard: true,
+            hardened: true,
         }
     }
 }
+
+/// Largest parallelism step the [`guard::PlanGuard`] allows on the first
+/// decision after a degraded-telemetry hold (workers per decision).
+const GUARD_MAX_STEP: usize = 2;
+/// Post-hold cooldown (seconds) during which the step clamp applies.
+const GUARD_COOLDOWN: u64 = 120;
 
 /// The self-adaptive manager.
 pub struct Daedalus {
@@ -114,6 +129,10 @@ pub struct Daedalus {
     knowledge: Knowledge,
     analyzer: Analyzer,
     recovery_monitor: Option<RecoveryMonitor>,
+    /// Post-degradation sanity clamp on plan output (hardened mode only;
+    /// state mutates exclusively at degraded ticks, which the harness
+    /// steps densely — so it is bitwise identical across engine modes).
+    plan_guard: guard::PlanGuard,
     next_loop: u64,
     /// First tick the per-second background threads (anomaly statistics,
     /// recovery monitoring) have *not* yet processed. The event-driven
@@ -135,6 +154,7 @@ impl Daedalus {
             knowledge: Knowledge::new(&meta, cfg.initial_downtime_out, cfg.initial_downtime_in),
             analyzer: Analyzer::new(meta),
             recovery_monitor: None,
+            plan_guard: guard::PlanGuard::new(GUARD_MAX_STEP, GUARD_COOLDOWN),
             next_loop: cfg.warmup,
             tracked_until: 0,
             cfg,
@@ -161,7 +181,17 @@ impl Daedalus {
         // true for every tick but possibly the current one).
         for u in self.tracked_until..=view.now {
             let ready_u = if u == view.now { view.ready } else { true };
-            let diff = anomaly::diff_at(view.tsdb, u);
+            // Re-anchor the lens at the replayed tick so staleness resolves
+            // exactly as it did when `u` was "now"; under hardening a
+            // degraded tick's diff is treated as no observation at all
+            // (the anomaly normal and recovery monitor must not learn from
+            // corrupted or stale samples).
+            let raw = anomaly::diff_at(view.tsdb.at(u), u);
+            let diff = if self.cfg.hardened && view.tsdb.degraded_at(u) {
+                None
+            } else {
+                raw
+            };
             // Straggler detection first (against the *pre-sample* normal),
             // then fold the sample into the difference statistics — unless
             // the window is quarantined: a gray-degraded deployment must
@@ -188,6 +218,16 @@ impl Daedalus {
                 return false;
             }
         }
+        // Quarantine capacity writes whose monitor window overlaps a
+        // telemetry fault: the CPU/throughput moving averages look back
+        // `cpu_window` seconds, so a fault anywhere in that span can poison
+        // the capacity observation even if `now` itself reads clean.
+        self.knowledge.set_telemetry_suspect(
+            self.cfg.hardened
+                && view
+                    .tsdb
+                    .degraded_over(view.now.saturating_sub(self.cfg.cpu_window), view.now + 1),
+        );
         view.ready
     }
 
@@ -254,14 +294,31 @@ impl Daedalus {
 
 impl Autoscaler for Daedalus {
     fn name(&self) -> String {
-        "daedalus".to_string()
+        if self.cfg.hardened {
+            "daedalus".to_string()
+        } else {
+            "daedalus-unguarded".to_string()
+        }
     }
 
     fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
         if !self.loop_gate(view) {
             return None;
         }
-        let decision = self.mape_iteration(view)?;
+        // Safe mode: while telemetry is degraded, hold the last plan and
+        // arm the post-recovery cooldown. The background threads above
+        // still ran; only planning is suspended.
+        if self.cfg.hardened && view.tsdb.degraded() {
+            self.plan_guard.hold(view.now);
+            return None;
+        }
+        let mut decision = self.mape_iteration(view)?;
+        if self.cfg.hardened {
+            // First decisions after a hold are step-clamped: a plan built
+            // on a freshly-recovered metric pipeline should not swing the
+            // deployment in one move.
+            decision = self.plan_guard.vet(view.now, view.parallelism, decision)?;
+        }
         // Execute.
         let scale_out = decision > view.parallelism;
         self.execute_bookkeeping(view.now, scale_out);
@@ -276,6 +333,12 @@ impl Autoscaler for Daedalus {
         // Staged deployment: per-stage monitoring/knowledge/planning,
         // behind the same background threads and loop gates.
         if !self.loop_gate(view) {
+            return None;
+        }
+        // Safe mode (same contract as the fused path): hold under degraded
+        // telemetry, step-clamp the first post-recovery plan per stage.
+        if self.cfg.hardened && view.tsdb.degraded() {
+            self.plan_guard.hold(view.now);
             return None;
         }
 
@@ -295,7 +358,7 @@ impl Autoscaler for Daedalus {
             view.now,
         );
         // Plan: per-stage Algorithm 1.
-        let decision = plan::plan_stage_scale_out(
+        let mut decision = plan::plan_stage_scale_out(
             view.now,
             &self.monitor_buf,
             &forecast,
@@ -303,6 +366,21 @@ impl Autoscaler for Daedalus {
             &self.cfg,
             view.max_replicas,
         )?;
+        if self.cfg.hardened {
+            // Per-stage step clamp during the post-hold cooldown; a stage
+            // whose clamped target collapses to its current parallelism
+            // simply keeps it.
+            for (target, &current) in decision
+                .targets
+                .iter_mut()
+                .zip(view.stage_parallelism.iter())
+            {
+                *target = self
+                    .plan_guard
+                    .vet(view.now, current, *target)
+                    .unwrap_or(current);
+            }
+        }
         if decision.targets == view.stage_parallelism {
             return None;
         }

@@ -135,7 +135,7 @@ mod tests {
         }
         let view = SimView {
             now: 199,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 3,
             ready: true,
             max_replicas: 12,

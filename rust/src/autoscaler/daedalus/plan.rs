@@ -17,6 +17,7 @@
 //! return MaxScaleout
 //! ```
 
+use crate::autoscaler::guard;
 use crate::clock::Timestamp;
 
 use super::analyze::CapacityEstimates;
@@ -147,14 +148,14 @@ pub fn plan_stage_scale_out(
     for snap in &data.stages {
         let n_s = data.stage_parallelism[snap.stage].max(1);
         let busy = snap.busy.clamp(0.05, 1.0);
-        let cap_rep = (snap.throughput / n_s as f64) / busy;
-        if cap_rep.is_nan() || cap_rep <= 0.0 {
-            return None;
-        }
-        // Ledger quarantine (same rule as the fused path): straggler-
-        // suspect windows plan from this fresh estimate but never persist
-        // it as the healthy capacity of `(stage, n_s)`.
-        if !knowledge.straggler_suspect() {
+        // Shared finite/positive gate (guard module): a corrupted
+        // throughput sample (NaN/∞) or an idle stage must read as "no
+        // observation", not as a capacity.
+        let cap_rep = guard::finite_pos((snap.throughput / n_s as f64) / busy)?;
+        // Ledger quarantine (same rule as the fused path): straggler- or
+        // telemetry-suspect windows plan from this fresh estimate but
+        // never persist it as the healthy capacity of `(stage, n_s)`.
+        if !knowledge.capacity_quarantined() {
             knowledge
                 .stage_capacity
                 .insert((snap.stage, n_s), cap_rep * n_s as f64);

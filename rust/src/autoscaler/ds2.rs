@@ -23,7 +23,7 @@
 //! per-operator targets are tight where coarse CPU calibration must be
 //! conservative.
 
-use super::Autoscaler;
+use super::{guard, Autoscaler};
 use crate::clock::Timestamp;
 use crate::dsp::engine::{ScalePlan, SimView};
 use crate::metrics::query::{StageMonitor, StageSnapshot, WorkerMonitor, WorkerSnapshot};
@@ -138,6 +138,11 @@ impl Ds2 {
                 return false;
             }
         }
+        // Degraded telemetry: hold without consuming the decision slot,
+        // so the controller re-evaluates as soon as its senses recover.
+        if view.tsdb.degraded() {
+            return false;
+        }
         self.last_decision = Some(view.now);
         true
     }
@@ -186,12 +191,12 @@ impl Ds2 {
             // (as DS2 instruments operator useful-time), so the true rate
             // needs no CPU-range calibration.
             let busy = snap.busy.clamp(0.02, 1.0);
-            let per_replica_true = (snap.throughput / n_s as f64) / busy;
-            if per_replica_true.is_nan() || per_replica_true <= 0.0 {
-                return None;
-            }
-            let t_s = ((self.cfg.headroom * demand / per_replica_true).ceil() as usize)
-                .clamp(self.cfg.min_replicas, self.cfg.max_replicas);
+            // Shared finite gates (corruption can leave NaN/∞ samples in
+            // the window even after the fault ends): a bad denominator or
+            // a bad quota reads as missing instrumentation → hold.
+            let per_replica_true = guard::finite_pos((snap.throughput / n_s as f64) / busy)?;
+            let quota = guard::finite(self.cfg.headroom * demand / per_replica_true)?;
+            let t_s = (quota.ceil() as usize).clamp(self.cfg.min_replicas, self.cfg.max_replicas);
             targets.push(t_s);
             if s + 1 < n_stages {
                 // Observed selectivity: downstream input over this input.
@@ -241,18 +246,18 @@ impl Autoscaler for Ds2 {
             true_rate_sum += s.throughput / busy;
             tput_sum += s.throughput;
         }
-        let avg_true_rate = true_rate_sum / snaps.len() as f64;
-        if avg_true_rate <= 0.0 {
-            return None;
-        }
+        // Shared finite gate: a NaN sum slips through a plain `<= 0.0`
+        // comparison (NaN compares false) and would poison the target.
+        let avg_true_rate = guard::finite_pos(true_rate_sum / snaps.len() as f64)?;
 
         // Source rate: what arrives, not what is processed — use the
         // workload metric (DS2 instruments source observed rates).
-        let source_rate = view
-            .tsdb
-            .last_at(&crate::metrics::SeriesId::global("workload_rate"), view.now)
-            .map(|(_, v)| v)
-            .unwrap_or(tput_sum);
+        let source_rate = guard::finite(
+            view.tsdb
+                .last_at(&crate::metrics::SeriesId::global("workload_rate"), view.now)
+                .map(|(_, v)| v)
+                .unwrap_or(tput_sum),
+        )?;
 
         let target = ((self.cfg.headroom * source_rate / avg_true_rate).ceil() as usize)
             .clamp(self.cfg.min_replicas, self.cfg.max_replicas);
@@ -323,7 +328,9 @@ impl Autoscaler for Ds2 {
     /// even when no plan results — so the claim never extends past the
     /// next gate-passing tick, and never covers an unready view.
     fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
-        view.ready && until <= self.next_possible(view.now)
+        !view.tsdb.degraded_over(view.now, until)
+            && view.ready
+            && until <= self.next_possible(view.now)
     }
 }
 
@@ -399,7 +406,7 @@ mod tests {
         let db = crate::metrics::Tsdb::new();
         let view = SimView {
             now: 100,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 4,
             ready: false,
             max_replicas: max,
@@ -450,7 +457,7 @@ mod tests {
         let stage_par = [2usize, 2, 2];
         let view = SimView {
             now: 199,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 2,
             ready: true,
             max_replicas: 12,
@@ -468,7 +475,7 @@ mod tests {
         let stage_par = [2usize, 2, 2];
         let view = SimView {
             now: 199,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 2,
             ready: true,
             max_replicas: 12,
@@ -494,7 +501,7 @@ mod tests {
         let drifted = [2usize, 3, 2]; // drifted apart; job level = 3
         let view = SimView {
             now: 199,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 3,
             ready: true,
             max_replicas: 12,
@@ -508,7 +515,7 @@ mod tests {
         let uniform_par = [3usize, 3, 3];
         let view2 = SimView {
             now: 580,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 3,
             ready: true,
             max_replicas: 12,
@@ -525,7 +532,7 @@ mod tests {
         let drifted_up = [2usize, 3, 3]; // stage-2 target rises to 4
         let view3 = SimView {
             now: 199,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 3,
             ready: true,
             max_replicas: 12,

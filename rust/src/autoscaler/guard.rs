@@ -1,0 +1,172 @@
+//! Shared input-hardening layer for every autoscaler (ISSUE 9): finite
+//! validation where policies divide by observed metrics, staleness
+//! detection off the [`TelemetryLens`] visibility bound, and a plan
+//! sanity guard (max scale step + cooldown) that engages only after a
+//! degraded-telemetry hold.
+//!
+//! Determinism contract: everything here is a pure function of the
+//! decision-tick inputs, and [`PlanGuard`] state changes only at ticks
+//! where the lens reports degradation — ticks the event-driven harness
+//! steps densely (the default `decide_is_noop_over` refuses any span a
+//! telemetry fault intersects). On a clean run no guard ever fires, so
+//! hardened and pre-hardening behavior are bit-identical.
+//!
+//! [`TelemetryLens`]: crate::dsp::telemetry::TelemetryLens
+
+use crate::clock::Timestamp;
+use crate::dsp::engine::SimView;
+
+/// `Some(v)` when `v` is finite, else `None` — the NaN/±inf gate for
+/// metrics an autoscaler feeds into arithmetic (a corrupted scrape must
+/// read as *missing*, never as a number).
+pub fn finite(v: f64) -> Option<f64> {
+    v.is_finite().then_some(v)
+}
+
+/// `Some(v)` when `v` is finite and strictly positive — the gate for
+/// observed denominators (capacities, rates, CPU shares). Zero is
+/// rejected too: a policy dividing by it would manufacture an infinite
+/// target from a single bad sample.
+pub fn finite_pos(v: f64) -> Option<f64> {
+    (v.is_finite() && v > 0.0).then_some(v)
+}
+
+/// Whether the newest metrics this view can see are older than
+/// `max_age` seconds — the staleness-detection bound (decision window
+/// older than a bound ⇒ hold the last plan). Reads the lens visibility
+/// frontier, the simulator's stand-in for Prometheus staleness markers;
+/// on a fault-free lens the frontier is `now` and this is never stale.
+pub fn stale(view: &SimView<'_>, max_age: u64) -> bool {
+    view.now.saturating_sub(view.tsdb.visible_hi(view.now)) > max_age
+}
+
+/// Post-degradation plan sanity guard: after a held decision (telemetry
+/// degraded ⇒ the scaler kept its last plan), the first `cooldown`
+/// seconds of recovered decisions are clamped to at most `max_step`
+/// replicas away from the current parallelism. Outside a cooldown the
+/// guard is an exact pass-through, so clean-telemetry runs never see it.
+#[derive(Debug, Clone, Default)]
+pub struct PlanGuard {
+    /// Largest replica-count change allowed per decision while cooling
+    /// down (0 disables the clamp entirely).
+    pub max_step: usize,
+    /// Cooldown length (s) after a degraded-telemetry hold.
+    pub cooldown: u64,
+    cooling_until: Option<Timestamp>,
+}
+
+impl PlanGuard {
+    /// Guard with the given clamp and cooldown; starts fully transparent.
+    pub fn new(max_step: usize, cooldown: u64) -> Self {
+        Self {
+            max_step,
+            cooldown,
+            cooling_until: None,
+        }
+    }
+
+    /// Record a degraded-telemetry hold at `now`: decisions up to
+    /// `now + cooldown` will be step-clamped. Call only when the lens
+    /// reports degradation — those ticks are stepped densely, so guard
+    /// state stays bitwise across engine modes.
+    pub fn hold(&mut self, now: Timestamp) {
+        self.cooling_until = Some(now + self.cooldown);
+    }
+
+    /// Whether `now` is inside a post-hold cooldown window.
+    pub fn cooling(&self, now: Timestamp) -> bool {
+        self.cooling_until.is_some_and(|u| now < u)
+    }
+
+    /// Vet a proposed `target` at `now` given the `current` parallelism:
+    /// pass-through outside a cooldown; inside one, clamp to
+    /// `current ± max_step` and suppress the plan entirely when the clamp
+    /// lands back on `current` (re-requesting the status quo would still
+    /// burn a restart on the staged engine's per-stage paths).
+    pub fn vet(&self, now: Timestamp, current: usize, target: usize) -> Option<usize> {
+        if !self.cooling(now) || self.max_step == 0 {
+            return Some(target);
+        }
+        let clamped = target.clamp(
+            current.saturating_sub(self.max_step),
+            current + self.max_step,
+        );
+        (clamped != current).then_some(clamped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finite_rejects_nan_and_infinities() {
+        assert_eq!(finite(1.5), Some(1.5));
+        assert_eq!(finite(0.0), Some(0.0));
+        assert_eq!(finite(-3.0), Some(-3.0));
+        assert_eq!(finite(f64::NAN), None);
+        assert_eq!(finite(f64::INFINITY), None);
+        assert_eq!(finite(f64::NEG_INFINITY), None);
+    }
+
+    #[test]
+    fn finite_pos_also_rejects_zero_and_negatives() {
+        assert_eq!(finite_pos(2.0), Some(2.0));
+        assert_eq!(finite_pos(f64::MIN_POSITIVE), Some(f64::MIN_POSITIVE));
+        assert_eq!(finite_pos(0.0), None);
+        assert_eq!(finite_pos(-1.0), None);
+        assert_eq!(finite_pos(f64::NAN), None);
+        assert_eq!(finite_pos(f64::INFINITY), None);
+    }
+
+    #[test]
+    fn plan_guard_is_transparent_until_held() {
+        let mut g = PlanGuard::new(2, 120);
+        assert_eq!(g.vet(100, 4, 12), Some(12));
+        assert_eq!(g.vet(100, 4, 1), Some(1));
+        assert!(!g.cooling(100));
+        g.hold(100);
+        assert!(g.cooling(219));
+        // Inside the cooldown: clamped to current ± max_step.
+        assert_eq!(g.vet(150, 4, 12), Some(6));
+        assert_eq!(g.vet(150, 4, 1), Some(2));
+        // Clamp landing on the current parallelism suppresses the plan.
+        assert_eq!(g.vet(150, 4, 4), None);
+        // Cooldown over: transparent again.
+        assert!(!g.cooling(220));
+        assert_eq!(g.vet(220, 4, 12), Some(12));
+    }
+
+    #[test]
+    fn zero_max_step_disables_the_clamp() {
+        let mut g = PlanGuard::new(0, 60);
+        g.hold(10);
+        assert_eq!(g.vet(20, 4, 12), Some(12));
+    }
+
+    #[test]
+    fn stale_reads_the_lens_visibility_frontier() {
+        use crate::dsp::telemetry::{TelemetryFaultEvent, TelemetryFaultTimeline, TelemetryLens};
+        use crate::metrics::Tsdb;
+
+        let db = Tsdb::new();
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricStaleness {
+            from: 100,
+            to: 200,
+            delay: 300,
+        }]);
+        let mk = |now| SimView {
+            now,
+            tsdb: TelemetryLens::new(&db, &tl, now),
+            parallelism: 4,
+            ready: true,
+            max_replicas: 12,
+            stage_parallelism: &[],
+            dropped_rescales: 0,
+        };
+        assert!(!stale(&mk(50), 60), "no fault yet");
+        assert!(stale(&mk(150), 60), "5-minute lag >> 60 s bound");
+        assert!(!stale(&mk(150), 300), "bound equal to the delay holds");
+        assert!(!stale(&mk(250), 60), "window over, frontier back to now");
+    }
+}

@@ -15,7 +15,7 @@
 
 use std::collections::VecDeque;
 
-use super::Autoscaler;
+use super::{guard, Autoscaler};
 use crate::clock::Timestamp;
 use crate::dsp::engine::SimView;
 use crate::metrics::query::{WorkerMonitor, WorkerSnapshot};
@@ -101,7 +101,9 @@ impl Hpa {
         if snaps.is_empty() {
             return None;
         }
-        let avg_cpu = snaps.iter().map(|s| s.cpu).sum::<f64>() / snaps.len() as f64;
+        // Corrupted scrapes (NaN/∞ CPU) may remain visible after the fault
+        // window ends: a non-finite average reads as missing → hold.
+        let avg_cpu = guard::finite(snaps.iter().map(|s| s.cpu).sum::<f64>() / snaps.len() as f64)?;
         let current = view.parallelism;
         let ratio = avg_cpu / self.cfg.target_cpu;
 
@@ -165,6 +167,13 @@ impl Autoscaler for Hpa {
         if !due {
             return None;
         }
+        // Degraded telemetry (scrape gap / staleness marker): hold the
+        // last plan rather than act on blanked or lagging CPU averages.
+        // The sync is not consumed, so the controller re-evaluates as
+        // soon as its senses recover.
+        if view.tsdb.degraded() {
+            return None;
+        }
         self.last_sync = Some(view.now);
         self.evaluate(view)
     }
@@ -205,7 +214,10 @@ impl Autoscaler for Hpa {
     /// (`was_ready` must track every unready tick, which the harness
     /// drives per-tick).
     fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
-        view.ready && self.was_ready && until <= self.next_decision(view.now)
+        !view.tsdb.degraded_over(view.now, until)
+            && view.ready
+            && self.was_ready
+            && until <= self.next_decision(view.now)
     }
 }
 
@@ -228,7 +240,7 @@ mod tests {
     fn view<'a>(db: &'a Tsdb, now: Timestamp, parallelism: usize, ready: bool) -> SimView<'a> {
         SimView {
             now,
-            tsdb: db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(db),
             parallelism,
             ready,
             max_replicas: 18,

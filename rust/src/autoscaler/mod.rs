@@ -13,6 +13,7 @@
 
 pub mod daedalus;
 pub mod ds2;
+pub mod guard;
 pub mod hpa;
 pub mod phoebe;
 pub mod statik;
@@ -83,8 +84,14 @@ pub trait Autoscaler {
     /// answer needs anything not provably constant over the span. The
     /// default delegates to [`Self::next_decision`] — exact for scalers
     /// whose gates are purely time-based, conservative for the rest —
-    /// so behavior without an override is unchanged.
+    /// AND refuses the span whenever a telemetry fault window intersects
+    /// it: degraded reads can flip guard state (safe-mode holds,
+    /// cooldowns) at ticks the gate arithmetic alone would call quiet, so
+    /// the harness must step those ticks densely to keep
+    /// EventDriven ≡ PerTick bitwise. Clean runs are unaffected (the
+    /// predicate is `false`-only-wider, and an empty timeline never
+    /// intersects). Overrides must keep this conjunct.
     fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
-        until <= self.next_decision(view.now)
+        !view.tsdb.degraded_over(view.now, until) && until <= self.next_decision(view.now)
     }
 }

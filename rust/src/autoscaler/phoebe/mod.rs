@@ -21,7 +21,7 @@ pub mod profiler;
 pub use models::QosModels;
 pub use profiler::{profile_job, ProfilingReport};
 
-use super::Autoscaler;
+use super::{guard, Autoscaler};
 use crate::clock::Timestamp;
 use crate::dsp::engine::SimView;
 use crate::metrics::query;
@@ -114,6 +114,12 @@ impl Autoscaler for Phoebe {
         if view.now < self.next_loop || !view.ready {
             return None;
         }
+        // Degraded telemetry: hold the last plan without consuming the
+        // loop slot — the planner re-runs as soon as the metric pipeline
+        // recovers.
+        if view.tsdb.degraded() {
+            return None;
+        }
         self.next_loop = view.now + self.cfg.loop_interval;
         if let Some(last) = self.last_rescale {
             if view.now < last + self.cfg.grace_period {
@@ -134,6 +140,12 @@ impl Autoscaler for Phoebe {
             window,
             &mut self.history,
         );
+        // Shared finite gate on the rate window: corrupted samples (NaN/∞)
+        // can linger in the window after the fault ends, and a poisoned
+        // history would flow straight into the forecaster.
+        if !self.history.iter().all(|&v| guard::finite(v).is_some()) {
+            return None;
+        }
         self.hist32.clear();
         self.hist32.extend(self.history.iter().map(|v| *v as f32));
         let forecast = match self.backend.forecast(&self.hist32) {
@@ -142,6 +154,7 @@ impl Autoscaler for Phoebe {
         };
         let from = view.now.saturating_sub(self.cfg.loop_interval - 1);
         let (w_avg, _) = query::workload_stats(view.tsdb, from, view.now)?;
+        let w_avg = guard::finite(w_avg)?;
 
         let decision = planner::plan(
             &self.models,

@@ -40,7 +40,10 @@ impl Autoscaler for Static {
 
     /// Exact: `decide` reads only `view.parallelism`, which is constant
     /// over a steady span, so once the deployment matches every future
-    /// call is a pure no-op over *any* horizon.
+    /// call is a pure no-op over *any* horizon. The default's
+    /// degraded-telemetry conjunct is deliberately omitted — this scaler
+    /// never touches the metric store and holds no guard state, so a
+    /// telemetry fault cannot flip its answer.
     fn decide_is_noop_over(&self, view: &SimView<'_>, _until: crate::clock::Timestamp) -> bool {
         view.parallelism == self.replicas
     }
@@ -61,7 +64,7 @@ mod tests {
         let mut s = Static::new(12);
         let v = SimView {
             now: 0,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 4,
             ready: true,
             max_replicas: 18,
@@ -71,7 +74,7 @@ mod tests {
         assert_eq!(s.decide(&v), Some(12));
         let v = SimView {
             now: 1,
-            tsdb: &db,
+            tsdb: crate::dsp::telemetry::TelemetryLens::transparent(&db),
             parallelism: 12,
             ready: true,
             max_replicas: 18,

@@ -76,6 +76,7 @@ use super::partition::{Chunk, Partition};
 use super::profile::EngineProfile;
 use super::queue::{QueuePolicy, StageQueue};
 use super::skew::KeyDistribution;
+use super::telemetry::{TelemetryFaultTimeline, TelemetryLens};
 use super::worker::Worker;
 
 /// How the engine maps a job's operator chain onto workers.
@@ -136,6 +137,10 @@ pub struct SimConfig {
     /// Typed fault schedule ([`super::faults`]): injected at the start of
     /// the matching tick, alongside the legacy `failures` entries.
     pub faults: FaultTimeline,
+    /// Typed telemetry fault schedule ([`super::telemetry`]): applied to
+    /// the autoscaler read path ([`Simulation::view`]) and the rescale
+    /// actuator, never to engine bookkeeping.
+    pub telemetry: TelemetryFaultTimeline,
     /// Whether operators run fused on a flat pool (reference) or as
     /// per-operator stages.
     pub stage_model: StageModel,
@@ -177,6 +182,7 @@ impl SimConfig {
             rate_noise: 0.0,
             failures: Vec::new(),
             faults: FaultTimeline::default(),
+            telemetry: TelemetryFaultTimeline::default(),
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,
@@ -206,6 +212,12 @@ impl SimConfig {
     /// Builder: set the typed fault timeline.
     pub fn with_faults(mut self, faults: FaultTimeline) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Builder: set the typed telemetry fault timeline.
+    pub fn with_telemetry(mut self, telemetry: TelemetryFaultTimeline) -> Self {
+        self.telemetry = telemetry;
         self
     }
 }
@@ -353,8 +365,11 @@ pub struct RescaleEvent {
 pub struct SimView<'a> {
     /// Current tick.
     pub now: Timestamp,
-    /// The metric store.
-    pub tsdb: &'a Tsdb,
+    /// The metric store, read through the telemetry fault lens. With an
+    /// empty [`TelemetryFaultTimeline`] the lens is a zero-cost
+    /// pass-through; under faults it is the only degradation the
+    /// autoscaler sees — engine bookkeeping reads the raw store.
+    pub tsdb: TelemetryLens<'a>,
     /// Job parallelism: the fused pool size, or the max stage parallelism
     /// under the staged model (Flink's notion of job parallelism).
     pub parallelism: usize,
@@ -442,6 +457,9 @@ pub struct Simulation {
     /// Typed fault schedule and the index of the next un-injected event.
     faults: FaultTimeline,
     fault_cursor: usize,
+    /// Typed telemetry fault schedule: consulted by [`Simulation::view`]
+    /// (read lens) and the rescale actuator, never by engine bookkeeping.
+    telemetry: TelemetryFaultTimeline,
     /// Flat worker indices to respawn when the in-flight restart completes
     /// (partial-respawn faults); `None` → full respawn.
     pending_respawn: Option<Vec<usize>>,
@@ -570,6 +588,7 @@ impl Simulation {
             cfg.failures
         );
         cfg.faults.validate();
+        cfg.telemetry.validate();
         let mut job = cfg.job;
         if let Some(z) = cfg.zipf_override {
             job.zipf_s = z;
@@ -641,6 +660,7 @@ impl Simulation {
             failures: cfg.failures,
             faults: cfg.faults,
             fault_cursor: 0,
+            telemetry: cfg.telemetry,
             pending_respawn: None,
             gray_saved: Vec::new(),
             crash_loop: None,
@@ -705,7 +725,8 @@ impl Simulation {
         self.workload.duration()
     }
 
-    /// Metric store (autoscalers read through this).
+    /// Raw metric store (engine bookkeeping and evaluation read this;
+    /// autoscalers read through the [`TelemetryLens`] in [`Self::view`]).
     pub fn tsdb(&self) -> &Tsdb {
         &self.tsdb
     }
@@ -845,11 +866,13 @@ impl Simulation {
         }
     }
 
-    /// Autoscaler-facing view at the current tick.
+    /// Autoscaler-facing view at the current tick. Metric reads go through
+    /// the [`TelemetryLens`]; with an empty fault timeline the lens is a
+    /// transparent pass-through.
     pub fn view(&self) -> SimView<'_> {
         SimView {
             now: self.now,
-            tsdb: &self.tsdb,
+            tsdb: TelemetryLens::new(&self.tsdb, &self.telemetry, self.now),
             parallelism: self.cluster.parallelism(),
             ready: self.cluster.ready(),
             max_replicas: self.cluster.max_replicas(),
@@ -933,6 +956,14 @@ impl Simulation {
             return self.request_rescale_stages(&v);
         }
         let from = self.cluster.parallelism();
+        // Actuator fault: a real scale request is refused at the actuator
+        // and surfaces as a dropped rescale (same-target no-ops are not
+        // drops, with or without the fault).
+        if target.clamp(1, self.max_replicas()) != from && self.telemetry.actuator_denied(self.now)
+        {
+            self.dropped_rescales += 1;
+            return None;
+        }
         let base = self.profile.restart_secs(from, target.clamp(1, self.max_replicas()));
         let downtime = base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
         if self.cluster.request_rescale(self.now, target, downtime) {
@@ -978,6 +1009,12 @@ impl Simulation {
         let base = self.profile.restart_secs(from_total, to_total);
         let downtime = base * (1.0 + self.rng.normal().abs() * self.profile.restart_noise);
         if clamped == self.stage_replicas {
+            return None;
+        }
+        // Actuator fault: the plan is refused at the actuator and surfaces
+        // as a dropped rescale (the same-target no-op above is not a drop).
+        if self.telemetry.actuator_denied(self.now) {
+            self.dropped_rescales += 1;
             return None;
         }
         let to_max = clamped.iter().copied().max().unwrap_or(1);
@@ -2368,6 +2405,18 @@ impl Simulation {
     /// The configured typed fault timeline.
     pub fn faults(&self) -> &FaultTimeline {
         &self.faults
+    }
+
+    /// Next tick (> `t`) at which a telemetry fault window opens or closes
+    /// — the [`super::telemetry`] span-bounding hook, advisory exactly like
+    /// [`Self::next_fault_boundary`].
+    pub fn next_telemetry_boundary(&self, t: Timestamp) -> Option<Timestamp> {
+        self.telemetry.next_boundary(t)
+    }
+
+    /// The configured telemetry fault timeline.
+    pub fn telemetry(&self) -> &TelemetryFaultTimeline {
+        &self.telemetry
     }
 
     /// Total backlog: unconsumed source tuples, plus (staged) the bounded

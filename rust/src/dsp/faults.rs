@@ -231,7 +231,10 @@ impl FaultTimeline {
     }
 
     /// Assert ordering and per-event parameter sanity (called on
-    /// construction and again when a `SimConfig` is consumed).
+    /// construction and again when a `SimConfig` is consumed). Windowed
+    /// faults (gray failures per worker) additionally go through the
+    /// shared [`validate_windows`] helper, so degenerate or overlapping
+    /// schedules are rejected here exactly as in the telemetry timeline.
     pub fn validate(&self) {
         for w in self.events.windows(2) {
             assert!(
@@ -244,6 +247,41 @@ impl FaultTimeline {
         for e in &self.events {
             e.validate();
         }
+        validate_windows(
+            self.events
+                .iter()
+                .filter_map(|e| match *e {
+                    FaultEvent::GrayFailure { from, to, worker, .. } => Some((worker, from, to)),
+                    _ => None,
+                })
+                .collect(),
+            "fault timeline (gray failures)",
+        );
+    }
+}
+
+/// Shared window-schedule validator for [`FaultTimeline`] and
+/// [`crate::dsp::TelemetryFaultTimeline`]: every `(target, from, to)`
+/// window must be non-empty (`from < to`) and windows of the *same*
+/// target must not overlap. One implementation for both timelines so a
+/// degenerate generated schedule (the PR-7 Storm-scaling class of bug —
+/// fractional positions collapsing to empty or overlapping windows at
+/// short durations) is rejected identically wherever it appears.
+pub(crate) fn validate_windows<K: Ord + std::fmt::Debug>(
+    mut windows: Vec<(K, Timestamp, Timestamp)>,
+    what: &str,
+) {
+    for (k, from, to) in &windows {
+        assert!(from < to, "{what}: empty window [{from}, {to}) for target {k:?}");
+    }
+    windows.sort();
+    for w in windows.windows(2) {
+        let (ka, _, ta) = &w[0];
+        let (kb, fb, tb) = &w[1];
+        assert!(
+            ka != kb || ta <= fb,
+            "{what}: overlapping windows for target {ka:?}: [.., {ta}) and [{fb}, {tb})"
+        );
     }
 }
 
@@ -325,5 +363,27 @@ mod tests {
     #[should_panic(expected = "fraction")]
     fn invalid_fraction_rejected() {
         FaultTimeline::new(vec![FaultEvent::ZoneOutage { t: 5, fraction: 0.0 }]);
+    }
+
+    /// Adversarial schedules against the shared window validator: two gray
+    /// windows on the same worker may touch but never overlap (the PR-7
+    /// Storm-scaling class of degenerate generated schedules).
+    #[test]
+    fn same_worker_gray_windows_may_touch_but_not_overlap() {
+        let tl = FaultTimeline::new(vec![
+            FaultEvent::GrayFailure { from: 100, to: 200, worker: 0, severity: 0.3 },
+            FaultEvent::GrayFailure { from: 200, to: 300, worker: 0, severity: 0.5 },
+            FaultEvent::GrayFailure { from: 150, to: 250, worker: 1, severity: 0.4 },
+        ]);
+        assert_eq!(tl.events().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping windows")]
+    fn same_worker_gray_overlap_rejected() {
+        FaultTimeline::new(vec![
+            FaultEvent::GrayFailure { from: 100, to: 250, worker: 2, severity: 0.3 },
+            FaultEvent::GrayFailure { from: 249, to: 400, worker: 2, severity: 0.5 },
+        ]);
     }
 }

@@ -25,6 +25,7 @@ pub mod partition;
 pub mod profile;
 pub mod queue;
 pub mod skew;
+pub mod telemetry;
 pub mod worker;
 
 pub use cluster::{Cluster, Phase};
@@ -32,6 +33,9 @@ pub use faults::{FaultEvent, FaultTimeline};
 pub use engine::{
     EngineMode, MergePolicy, RescaleEvent, ScalePlan, SimConfig, Simulation, StageFlow,
     StageModel,
+};
+pub use telemetry::{
+    CorruptionKind, SeriesPattern, TelemetryFaultEvent, TelemetryFaultTimeline, TelemetryLens,
 };
 pub use partition::Partition;
 pub use profile::EngineProfile;

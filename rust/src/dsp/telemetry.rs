@@ -1,0 +1,1039 @@
+//! Faultable telemetry plane: typed control-plane sensor faults applied
+//! through a read-path lens.
+//!
+//! PR 7 made *data-plane* failure typed and injectable
+//! ([`crate::dsp::faults`]); this module does the same for the control
+//! plane's senses. A [`TelemetryFaultTimeline`] is a validated,
+//! time-ordered schedule of [`TelemetryFaultEvent`]s, and a
+//! [`TelemetryLens`] applies it to every autoscaler read: `SimView.tsdb`
+//! carries the lens, not the raw store, so the monitor phase of every
+//! autoscaler sees the degraded telemetry while the engine's own
+//! bookkeeping (conservation invariants, SLO accounting, trace sampling)
+//! keeps reading the raw [`Tsdb`] and cannot move.
+//!
+//! ## Determinism and the engine-mode contract
+//!
+//! The event-driven engine (`EngineMode::EventDriven`) must stay bitwise
+//! identical to the per-tick reference. The lens is designed so that every
+//! transform is a **pure function of sample coordinates** wherever a read
+//! can be replayed at a later query time:
+//!
+//! * [`TelemetryFaultEvent::MetricDropout`] and
+//!   [`TelemetryFaultEvent::MetricCorruption`] decide per *sample
+//!   timestamp* (and, for corruption, a seeded hash of the series
+//!   identity) — a read of sample `(s, t)` resolves identically no matter
+//!   when it is issued.
+//! * [`TelemetryFaultEvent::MetricStaleness`] is inherently query-time
+//!   dependent (the visible upper bound is `now − delay`), so the harness
+//!   treats every read-fault window as non-quiet: it folds
+//!   [`TelemetryFaultTimeline::next_boundary`] into the quiet-span horizon
+//!   and steps per-tick while [`TelemetryFaultTimeline::read_fault_active`]
+//!   holds, and the default `Autoscaler::decide_is_noop_over` refuses to
+//!   certify a span that intersects a read-fault window. Decision ticks —
+//!   and therefore every query-time-dependent read — coincide across
+//!   modes.
+//! * [`TelemetryFaultEvent::ActuatorFault`] denies rescale requests as a
+//!   pure function of the request tick (surfacing through
+//!   `dropped_rescales`), and requests are only issued from decision
+//!   ticks, which coincide across modes.
+//!
+//! Like the data-plane timeline, `next_boundary` is **advisory**: missing
+//! a boundary can only make a span shorter-lived (slow-path fallback),
+//! never change results.
+
+use crate::clock::Timestamp;
+use crate::metrics::tsdb::{SampleIter, SeriesHandle, SeriesId, Tsdb};
+
+use super::faults::validate_windows;
+
+/// Which series a [`TelemetryFaultEvent::MetricCorruption`] event poisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeriesPattern {
+    /// Every series in the store.
+    All,
+    /// Every series with this metric name, regardless of labels.
+    Name(&'static str),
+    /// Per-worker series with this metric name (`worker` label present).
+    WorkerSeries(&'static str),
+    /// Per-stage series with this metric name (`stage` label present).
+    StageSeries(&'static str),
+}
+
+impl SeriesPattern {
+    /// Whether `id` is covered by this pattern.
+    pub fn matches(&self, id: &SeriesId) -> bool {
+        match *self {
+            SeriesPattern::All => true,
+            SeriesPattern::Name(n) => id.name == n,
+            SeriesPattern::WorkerSeries(n) => id.name == n && id.worker.is_some(),
+            SeriesPattern::StageSeries(n) => id.name == n && id.stage.is_some(),
+        }
+    }
+}
+
+/// How a corruption window mangles the samples it covers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CorruptionKind {
+    /// Multiply the sample by `factor` on seeded ticks (~1 in
+    /// [`CORRUPTION_PERIOD`]) — a restart/counter-reset spike.
+    Spike {
+        /// Multiplicative distortion applied on hit ticks.
+        factor: f64,
+    },
+    /// Every covered sample repeats the last raw value before the window
+    /// (a frozen gauge). Samples of a series with no pre-window history
+    /// are dropped instead — a gauge that never reported has nothing to
+    /// freeze to.
+    Freeze,
+    /// The sample becomes `NaN` on seeded ticks (~1 in
+    /// [`CORRUPTION_PERIOD`]) — a broken rate expression.
+    Nan,
+}
+
+/// One in this many in-window samples is hit by a seeded
+/// [`CorruptionKind::Spike`] / [`CorruptionKind::Nan`] injection.
+pub const CORRUPTION_PERIOD: u64 = 8;
+
+/// One typed telemetry fault (see the module docs for the taxonomy and
+/// the determinism obligations of each variant).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TelemetryFaultEvent {
+    /// Whole-scrape gap: every sample with timestamp in `[from, to)` is
+    /// invisible to autoscaler reads, forever (a scrape that never
+    /// happened does not reappear when the window ends).
+    MetricDropout {
+        /// First invisible sample timestamp.
+        from: Timestamp,
+        /// Exclusive end of the gap.
+        to: Timestamp,
+    },
+    /// While `now ∈ [from, to)`, autoscalers see the store as of
+    /// `now − delay` (scrape pipeline lag).
+    MetricStaleness {
+        /// Lag onset tick.
+        from: Timestamp,
+        /// Exclusive end of the lag window.
+        to: Timestamp,
+        /// Visibility lag in seconds.
+        delay: u64,
+    },
+    /// Samples of series matching `pattern` with timestamps in
+    /// `[from, to)` are mangled per `kind`, seeded by `seed` and the
+    /// series identity.
+    MetricCorruption {
+        /// First poisoned sample timestamp.
+        from: Timestamp,
+        /// Exclusive end of the poisoned window.
+        to: Timestamp,
+        /// Which series are poisoned.
+        pattern: SeriesPattern,
+        /// The distortion applied.
+        kind: CorruptionKind,
+        /// Seed for the per-(series, tick) hit hash.
+        seed: u64,
+    },
+    /// Rescale requests issued while `now ∈ [from, to)` are denied and
+    /// counted in `dropped_rescales` (a dead rescale API).
+    ActuatorFault {
+        /// Denial onset tick.
+        from: Timestamp,
+        /// Exclusive end of the denial window.
+        to: Timestamp,
+    },
+}
+
+impl TelemetryFaultEvent {
+    /// The window `[from, to)` this fault is active over.
+    pub fn window(&self) -> (Timestamp, Timestamp) {
+        match *self {
+            TelemetryFaultEvent::MetricDropout { from, to }
+            | TelemetryFaultEvent::MetricStaleness { from, to, .. }
+            | TelemetryFaultEvent::MetricCorruption { from, to, .. }
+            | TelemetryFaultEvent::ActuatorFault { from, to } => (from, to),
+        }
+    }
+
+    /// The tick this fault first acts (window start).
+    pub fn at(&self) -> Timestamp {
+        self.window().0
+    }
+
+    /// Whether this fault degrades the *read* path (dropout, staleness,
+    /// corruption). Actuator faults act on the write path and are not a
+    /// reason to distrust metrics.
+    pub fn is_read_fault(&self) -> bool {
+        !matches!(self, TelemetryFaultEvent::ActuatorFault { .. })
+    }
+
+    /// The next future time (> `t`) at which this fault changes observable
+    /// behavior — the advisory quiet-span bound (window start and end).
+    pub fn next_boundary(&self, t: Timestamp) -> Option<Timestamp> {
+        let (from, to) = self.window();
+        if from > t {
+            Some(from)
+        } else if to > t {
+            Some(to)
+        } else {
+            None
+        }
+    }
+
+    /// Per-event parameter sanity (windows are checked jointly by
+    /// [`TelemetryFaultTimeline::validate`]).
+    fn validate(&self) {
+        match *self {
+            TelemetryFaultEvent::MetricStaleness { delay, .. } => {
+                assert!(delay >= 1, "MetricStaleness needs a positive delay");
+            }
+            TelemetryFaultEvent::MetricCorruption { kind, .. } => {
+                if let CorruptionKind::Spike { factor } = kind {
+                    assert!(
+                        factor.is_finite() && factor > 0.0 && factor != 1.0,
+                        "Spike factor must be finite, positive and ≠ 1, got {factor}"
+                    );
+                }
+            }
+            TelemetryFaultEvent::MetricDropout { .. }
+            | TelemetryFaultEvent::ActuatorFault { .. } => {}
+        }
+    }
+
+    /// Validation-key discriminant: windows may overlap across *different*
+    /// targets (a dropout during a staleness window is fine) but never
+    /// within one (two staleness windows covering the same tick would be
+    /// ambiguous). Corruption events target their series pattern.
+    fn target_key(&self) -> (u8, String) {
+        match *self {
+            TelemetryFaultEvent::MetricDropout { .. } => (0, String::new()),
+            TelemetryFaultEvent::MetricStaleness { .. } => (1, String::new()),
+            TelemetryFaultEvent::MetricCorruption { pattern, .. } => (2, format!("{pattern:?}")),
+            TelemetryFaultEvent::ActuatorFault { .. } => (3, String::new()),
+        }
+    }
+}
+
+/// A declarative, time-ordered telemetry fault schedule for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetryFaultTimeline {
+    events: Vec<TelemetryFaultEvent>,
+}
+
+impl TelemetryFaultTimeline {
+    /// A timeline with no faults — the transparent-lens anchor
+    /// ([`TelemetryLens::transparent`]).
+    pub const EMPTY: TelemetryFaultTimeline = TelemetryFaultTimeline { events: Vec::new() };
+
+    /// Build a timeline from `events`; they are sorted by window start
+    /// (stable) and validated: non-empty windows, sane parameters, and no
+    /// overlap between windows of the same target (shared helper with
+    /// [`crate::dsp::FaultTimeline`]).
+    pub fn new(mut events: Vec<TelemetryFaultEvent>) -> Self {
+        events.sort_by_key(TelemetryFaultEvent::at);
+        let tl = Self { events };
+        tl.validate();
+        tl
+    }
+
+    /// No telemetry faults scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The scheduled events, in window-start order.
+    pub fn events(&self) -> &[TelemetryFaultEvent] {
+        &self.events
+    }
+
+    /// Assert ordering, per-event parameter sanity, and per-target window
+    /// disjointness (called on construction and again when a `SimConfig`
+    /// is consumed).
+    pub fn validate(&self) {
+        for e in &self.events {
+            e.validate();
+        }
+        validate_windows(
+            self.events
+                .iter()
+                .map(|e| {
+                    let (from, to) = e.window();
+                    (e.target_key(), from, to)
+                })
+                .collect(),
+            "telemetry fault timeline",
+        );
+    }
+
+    /// The next future time (> `t`) any scheduled fault changes observable
+    /// behavior — the advisory quiet-span bound (every window edge).
+    pub fn next_boundary(&self, t: Timestamp) -> Option<Timestamp> {
+        self.events.iter().filter_map(|e| e.next_boundary(t)).min()
+    }
+
+    /// Whether any read-degrading fault (dropout, staleness, corruption)
+    /// window contains `t`. The harness steps per-tick while this holds so
+    /// query-time-dependent reads coincide across engine modes.
+    pub fn read_fault_active(&self, t: Timestamp) -> bool {
+        self.events.iter().any(|e| {
+            let (from, to) = e.window();
+            e.is_read_fault() && from <= t && t < to
+        })
+    }
+
+    /// Whether any read-degrading fault window intersects `[from, until)`
+    /// — the conservative `decide_is_noop_over` check.
+    pub fn read_fault_over(&self, from: Timestamp, until: Timestamp) -> bool {
+        self.events.iter().any(|e| {
+            let (f, t) = e.window();
+            e.is_read_fault() && f < until && from < t
+        })
+    }
+
+    /// Whether rescale requests are denied at `t`.
+    pub fn actuator_denied(&self, t: Timestamp) -> bool {
+        self.events.iter().any(|e| {
+            let (from, to) = e.window();
+            matches!(e, TelemetryFaultEvent::ActuatorFault { .. }) && from <= t && t < to
+        })
+    }
+
+    /// The staleness delay in force at `t`, if any (windows of one target
+    /// are disjoint, so at most one applies).
+    pub fn staleness_delay_at(&self, t: Timestamp) -> Option<u64> {
+        self.events.iter().find_map(|e| match *e {
+            TelemetryFaultEvent::MetricStaleness { from, to, delay } if from <= t && t < to => {
+                Some(delay)
+            }
+            _ => None,
+        })
+    }
+}
+
+/// Stable per-series salt for the corruption hit hash: depends only on the
+/// series *identity* (name bytes + labels), never on store layout, so both
+/// engine modes and both read flavours (`SeriesId` and handle) hash alike.
+fn series_salt(id: &SeriesId) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in id.name.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    h = (h ^ id.worker.map_or(u64::MAX, |w| w as u64)).wrapping_mul(0x0100_0000_01b3);
+    h = (h ^ id.stage.map_or(u64::MAX - 1, |s| s as u64)).wrapping_mul(0x0100_0000_01b3);
+    h
+}
+
+/// Seeded hit test for spike/NaN injection: a splitmix-style mix of the
+/// event seed, the series salt, and the sample timestamp.
+fn corruption_hit(seed: u64, salt: u64, t: Timestamp) -> bool {
+    let mut x = seed ^ salt.rotate_left(17) ^ t.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x % CORRUPTION_PERIOD == 0
+}
+
+/// One transform applicable to a (series, query-range) pair, precomputed
+/// by the lens before iterating (freeze values are resolved once).
+#[derive(Debug, Clone, Copy)]
+enum Applied {
+    Drop {
+        from: Timestamp,
+        to: Timestamp,
+    },
+    Spike {
+        from: Timestamp,
+        to: Timestamp,
+        factor: f64,
+        seed: u64,
+        salt: u64,
+    },
+    Nan {
+        from: Timestamp,
+        to: Timestamp,
+        seed: u64,
+        salt: u64,
+    },
+    Freeze {
+        from: Timestamp,
+        to: Timestamp,
+        /// Last raw value before `from`; `None` drops the samples.
+        value: Option<f64>,
+    },
+}
+
+impl Applied {
+    /// Transform sample `(t, v)`; `None` drops it.
+    fn apply(&self, t: Timestamp, v: f64) -> Option<f64> {
+        match *self {
+            Applied::Drop { from, to } => {
+                if from <= t && t < to {
+                    None
+                } else {
+                    Some(v)
+                }
+            }
+            Applied::Spike {
+                from,
+                to,
+                factor,
+                seed,
+                salt,
+            } => {
+                if from <= t && t < to && corruption_hit(seed, salt, t) {
+                    Some(v * factor)
+                } else {
+                    Some(v)
+                }
+            }
+            Applied::Nan {
+                from,
+                to,
+                seed,
+                salt,
+            } => {
+                if from <= t && t < to && corruption_hit(seed, salt, t) {
+                    Some(f64::NAN)
+                } else {
+                    Some(v)
+                }
+            }
+            Applied::Freeze { from, to, value } => {
+                if from <= t && t < to {
+                    value
+                } else {
+                    Some(v)
+                }
+            }
+        }
+    }
+}
+
+/// The faulted read path handed to autoscalers: a raw [`Tsdb`] plus the
+/// telemetry fault schedule, anchored at a query time. Mirrors the store's
+/// read API; when no fault touches a query it delegates straight to the
+/// raw store (zero-cost fast path, the `decide_1h_lens` bench pair pins
+/// the overhead).
+///
+/// `Copy` on purpose: `SimView.tsdb` is a lens by value, so existing
+/// `view.tsdb` call sites read through it unchanged.
+#[derive(Debug, Clone, Copy)]
+pub struct TelemetryLens<'a> {
+    db: &'a Tsdb,
+    faults: &'a TelemetryFaultTimeline,
+    now: Timestamp,
+}
+
+impl<'a> TelemetryLens<'a> {
+    /// Lens over `db` applying `faults`, with reads anchored at `now`.
+    pub fn new(db: &'a Tsdb, faults: &'a TelemetryFaultTimeline, now: Timestamp) -> Self {
+        Self { db, faults, now }
+    }
+
+    /// A fault-free lens (reads delegate to the raw store) — for tests
+    /// and benches that build a `SimView` by hand.
+    pub fn transparent(db: &'a Tsdb) -> Self {
+        Self {
+            db,
+            faults: &TelemetryFaultTimeline::EMPTY,
+            now: Timestamp::MAX,
+        }
+    }
+
+    /// The same lens re-anchored at an earlier query time — the Daedalus
+    /// wake-replay reads tick `u` through `view.tsdb.at(u)` so a replayed
+    /// read is a pure function of `u` (bitwise across engine modes).
+    pub fn at(self, now: Timestamp) -> Self {
+        Self { now, ..self }
+    }
+
+    /// The query anchor time.
+    pub fn now(&self) -> Timestamp {
+        self.now
+    }
+
+    /// The raw store underneath — **bypasses the fault model**; only for
+    /// engine bookkeeping and tests, never for autoscaler decisions.
+    pub fn raw(&self) -> &'a Tsdb {
+        self.db
+    }
+
+    /// The fault schedule this lens applies.
+    pub fn faults(&self) -> &'a TelemetryFaultTimeline {
+        self.faults
+    }
+
+    /// Whether a read-degrading fault window covers the anchor time — the
+    /// scrape pipeline's own health signal (Prometheus `up` / staleness
+    /// markers): real autoscalers *can* observe that their monitoring is
+    /// degraded even when they cannot reconstruct the truth. The hardened
+    /// guard layer keys safe-mode holds off this.
+    pub fn degraded(&self) -> bool {
+        self.faults.read_fault_active(self.now)
+    }
+
+    /// [`TelemetryLens::degraded`] at an arbitrary tick (pure in `t`).
+    pub fn degraded_at(&self, t: Timestamp) -> bool {
+        self.faults.read_fault_active(t)
+    }
+
+    /// Whether any read-degrading fault window intersects `[from, until)`
+    /// — used by `Autoscaler::decide_is_noop_over` to stay conservative.
+    pub fn degraded_over(&self, from: Timestamp, until: Timestamp) -> bool {
+        self.faults.read_fault_over(from, until)
+    }
+
+    /// Visible upper bound for reads anchored at the lens time: `now`
+    /// normally, `now − delay` inside a staleness window.
+    pub fn visible_hi(&self, now: Timestamp) -> Timestamp {
+        match self.faults.staleness_delay_at(now) {
+            Some(d) => now.saturating_sub(d),
+            None => now,
+        }
+    }
+
+    /// Transforms affecting `id` over sample range `[from, to]`, or an
+    /// empty list when the query is untouched (the fast-path test).
+    fn applied_for(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Vec<Applied> {
+        let mut out = Vec::new();
+        if self.faults.is_empty() {
+            return out;
+        }
+        let mut salt = None;
+        for e in self.faults.events() {
+            let (f, t) = e.window();
+            if t <= from || to < f {
+                continue;
+            }
+            match *e {
+                TelemetryFaultEvent::MetricDropout { .. } => {
+                    out.push(Applied::Drop { from: f, to: t });
+                }
+                TelemetryFaultEvent::MetricCorruption {
+                    pattern, kind, seed, ..
+                } => {
+                    if !pattern.matches(id) {
+                        continue;
+                    }
+                    let s = *salt.get_or_insert_with(|| series_salt(id));
+                    out.push(match kind {
+                        CorruptionKind::Spike { factor } => Applied::Spike {
+                            from: f,
+                            to: t,
+                            factor,
+                            seed,
+                            salt: s,
+                        },
+                        CorruptionKind::Nan => Applied::Nan {
+                            from: f,
+                            to: t,
+                            seed,
+                            salt: s,
+                        },
+                        CorruptionKind::Freeze => Applied::Freeze {
+                            from: f,
+                            to: t,
+                            value: f
+                                .checked_sub(1)
+                                .and_then(|pre| self.db.last_at(id, pre))
+                                .map(|(_, v)| v),
+                        },
+                    });
+                }
+                TelemetryFaultEvent::MetricStaleness { .. }
+                | TelemetryFaultEvent::ActuatorFault { .. } => {}
+            }
+        }
+        out
+    }
+
+    // ---- mirrored read API -------------------------------------------
+
+    /// [`Tsdb::lookup`]. Series *identity* is never hidden — a scrape gap
+    /// hides samples, not the fact that a series exists.
+    pub fn lookup(&self, id: &SeriesId) -> Option<SeriesHandle> {
+        self.db.lookup(id)
+    }
+
+    /// [`Tsdb::series_count`] — the raw generation stamp (the incremental
+    /// monitors key handle re-resolution off it).
+    pub fn series_count(&self) -> usize {
+        self.db.series_count()
+    }
+
+    /// [`Tsdb::workers_for`] (series identity, unfiltered).
+    pub fn workers_for(&self, name: &'static str) -> Vec<usize> {
+        self.db.workers_for(name)
+    }
+
+    /// Resolve a handle back to its series identity (corruption patterns
+    /// match identities, so handle reads need the reverse map).
+    fn id_of(&self, h: SeriesHandle) -> &'a SeriesId {
+        self.db.id_of(h)
+    }
+
+    /// [`Tsdb::last_at`] through the fault model: the newest *visible*
+    /// sample at or before `min(t, visible_hi)`. Scans backwards over
+    /// dropout/freeze-dropped gaps (O(#windows)); spike/NaN hits return
+    /// the mangled value.
+    pub fn last_at(&self, id: &SeriesId, t: Timestamp) -> Option<(Timestamp, f64)> {
+        self.last_at_h(self.db.lookup(id)?, t)
+    }
+
+    /// [`TelemetryLens::last_at`] via a pre-resolved handle.
+    pub fn last_at_h(&self, h: SeriesHandle, t: Timestamp) -> Option<(Timestamp, f64)> {
+        let mut hi = t.min(self.visible_hi(self.now));
+        if self.faults.is_empty() {
+            return self.db.last_at_h(h, hi);
+        }
+        let id = self.id_of(h);
+        loop {
+            let (st, v) = self.db.last_at_h(h, hi)?;
+            let applied = self.applied_for(id, st, st);
+            let mut out = Some(v);
+            for a in &applied {
+                out = out.and_then(|v| a.apply(st, v));
+            }
+            match out {
+                Some(v) => return Some((st, v)),
+                // Dropped (scrape gap / freeze with no history): resume
+                // the scan below the earliest window covering the sample.
+                None => {
+                    let floor = applied
+                        .iter()
+                        .filter_map(|a| match *a {
+                            Applied::Drop { from, to } | Applied::Freeze { from, to, value: None }
+                                if from <= st && st < to =>
+                            {
+                                Some(from)
+                            }
+                            _ => None,
+                        })
+                        .min()
+                        .unwrap_or(st);
+                    hi = floor.checked_sub(1)?;
+                }
+            }
+        }
+    }
+
+    /// [`Tsdb::iter_over`] through the fault model.
+    pub fn iter_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> LensIter<'a> {
+        match self.db.lookup(id) {
+            Some(h) => self.iter_over_h(h, from, to),
+            None => LensIter {
+                inner: self.db.iter_over(id, from, to),
+                applied: Vec::new(),
+            },
+        }
+    }
+
+    /// [`TelemetryLens::iter_over`] via a pre-resolved handle.
+    pub fn iter_over_h(&self, h: SeriesHandle, from: Timestamp, to: Timestamp) -> LensIter<'a> {
+        let to = to.min(self.visible_hi(self.now));
+        let applied = if self.faults.is_empty() {
+            Vec::new()
+        } else {
+            self.applied_for(self.id_of(h), from, to)
+        };
+        LensIter {
+            inner: self.db.iter_over_h(h, from, to),
+            applied,
+        }
+    }
+
+    /// [`Tsdb::fold_over`] through the fault model.
+    pub fn fold_over<A>(
+        &self,
+        id: &SeriesId,
+        from: Timestamp,
+        to: Timestamp,
+        init: A,
+        f: impl FnMut(A, Timestamp, f64) -> A,
+    ) -> A {
+        match self.db.lookup(id) {
+            None => init,
+            Some(h) => self.fold_over_h(h, from, to, init, f),
+        }
+    }
+
+    /// [`TelemetryLens::fold_over`] via a pre-resolved handle.
+    pub fn fold_over_h<A>(
+        &self,
+        h: SeriesHandle,
+        from: Timestamp,
+        to: Timestamp,
+        init: A,
+        mut f: impl FnMut(A, Timestamp, f64) -> A,
+    ) -> A {
+        let mut acc = init;
+        for (t, v) in self.iter_over_h(h, from, to) {
+            acc = f(acc, t, v);
+        }
+        acc
+    }
+
+    /// [`Tsdb::range`] through the fault model.
+    pub fn range(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Vec<(Timestamp, f64)> {
+        self.iter_over(id, from, to).collect()
+    }
+
+    /// [`Tsdb::values_over`] through the fault model.
+    pub fn values_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Vec<f64> {
+        self.iter_over(id, from, to).map(|(_, v)| v).collect()
+    }
+
+    /// [`Tsdb::avg_over`] through the fault model (`None` when the whole
+    /// window is blanked — the hold signal the guard layer relies on).
+    pub fn avg_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
+        self.avg_over_h(self.db.lookup(id)?, from, to)
+    }
+
+    /// [`TelemetryLens::avg_over`] via a pre-resolved handle. The faulted
+    /// path sums in time order — the same sequence as the raw dense walk,
+    /// so clean windows are bit-identical either way.
+    pub fn avg_over_h(&self, h: SeriesHandle, from: Timestamp, to: Timestamp) -> Option<f64> {
+        let to = to.min(self.visible_hi(self.now));
+        if self.faults.is_empty() || self.applied_for(self.id_of(h), from, to).is_empty() {
+            return self.db.avg_over_h(h, from, to);
+        }
+        let (sum, n) = self
+            .iter_over_h(h, from, to)
+            .fold((0.0, 0usize), |(s, n), (_, v)| (s + v, n + 1));
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
+    }
+
+    /// [`Tsdb::max_over`] through the fault model.
+    pub fn max_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
+        let to = to.min(self.visible_hi(self.now));
+        if self.faults.is_empty() || self.applied_for(id, from, to).is_empty() {
+            return self.db.max_over(id, from, to);
+        }
+        let (m, n) = self
+            .iter_over(id, from, to)
+            .fold((f64::MIN, 0usize), |(m, n), (_, v)| (m.max(v), n + 1));
+        if n == 0 {
+            None
+        } else {
+            Some(m)
+        }
+    }
+
+    /// [`Tsdb::min_over`] through the fault model.
+    pub fn min_over(&self, id: &SeriesId, from: Timestamp, to: Timestamp) -> Option<f64> {
+        let to = to.min(self.visible_hi(self.now));
+        if self.faults.is_empty() || self.applied_for(id, from, to).is_empty() {
+            return self.db.min_over(id, from, to);
+        }
+        let (m, n) = self
+            .iter_over(id, from, to)
+            .fold((f64::MAX, 0usize), |(m, n), (_, v)| (m.min(v), n + 1));
+        if n == 0 {
+            None
+        } else {
+            Some(m)
+        }
+    }
+
+    /// Number of *visible* samples of a series up to the visibility bound.
+    pub fn len(&self, id: &SeriesId) -> usize {
+        if self.faults.is_empty() {
+            return self.db.len(id);
+        }
+        self.fold_over(id, 0, Timestamp::MAX, 0usize, |n, _, _| n + 1)
+    }
+
+    /// Whether the store holds no series at all (identity-level, like
+    /// [`TelemetryLens::lookup`]).
+    pub fn is_empty(&self) -> bool {
+        self.db.is_empty()
+    }
+}
+
+/// Allocation-light `(time, value)` iterator applying the lens transforms
+/// (empty transform list ⇒ a plain pass-through of the raw iterator).
+pub struct LensIter<'a> {
+    inner: SampleIter<'a>,
+    applied: Vec<Applied>,
+}
+
+impl Iterator for LensIter<'_> {
+    type Item = (Timestamp, f64);
+
+    fn next(&mut self) -> Option<(Timestamp, f64)> {
+        'outer: for (t, v) in self.inner.by_ref() {
+            let mut v = v;
+            for a in &self.applied {
+                match a.apply(t, v) {
+                    Some(nv) => v = nv,
+                    None => continue 'outer,
+                }
+            }
+            return Some((t, v));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db_0_to_99() -> Tsdb {
+        let mut db = Tsdb::new();
+        for t in 0..100u64 {
+            db.record_global("workload_rate", t, 1_000.0 + t as f64);
+            db.record_worker("worker_throughput", 0, t, 500.0);
+        }
+        db
+    }
+
+    #[test]
+    fn transparent_lens_matches_raw_reads_bitwise() {
+        let db = db_0_to_99();
+        let lens = TelemetryLens::transparent(&db);
+        let id = SeriesId::global("workload_rate");
+        assert_eq!(lens.last_at(&id, 50), db.last_at(&id, 50));
+        assert_eq!(
+            lens.avg_over(&id, 10, 70).unwrap().to_bits(),
+            db.avg_over(&id, 10, 70).unwrap().to_bits()
+        );
+        assert_eq!(lens.range(&id, 5, 9), db.range(&id, 5, 9));
+        assert_eq!(lens.max_over(&id, 0, 99), db.max_over(&id, 0, 99));
+        assert_eq!(lens.min_over(&id, 0, 99), db.min_over(&id, 0, 99));
+        assert_eq!(lens.len(&id), db.len(&id));
+        assert!(!lens.degraded());
+    }
+
+    #[test]
+    fn dropout_blanks_samples_and_last_at_skips_backwards() {
+        let db = db_0_to_99();
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricDropout {
+            from: 40,
+            to: 60,
+        }]);
+        let lens = TelemetryLens::new(&db, &tl, 50);
+        let id = SeriesId::global("workload_rate");
+        // In-window reads resolve to the last pre-window sample.
+        assert_eq!(lens.last_at(&id, 50), Some((39, 1_039.0)));
+        // The gap never heals: reads after the window still skip it.
+        let late = TelemetryLens::new(&db, &tl, 90);
+        assert_eq!(late.last_at(&id, 59), Some((39, 1_039.0)));
+        assert_eq!(late.last_at(&id, 80), Some((80, 1_080.0)));
+        // Range queries exclude exactly [40, 60).
+        let times: Vec<Timestamp> = late.iter_over(&id, 35, 65).map(|(t, _)| t).collect();
+        assert_eq!(
+            times,
+            (35..40).chain(60..=65).collect::<Vec<Timestamp>>()
+        );
+        // A window fully inside the gap resolves None — the hold signal.
+        assert_eq!(late.avg_over(&id, 45, 55), None);
+        assert!(lens.degraded() && !late.degraded());
+        assert!(late.degraded_over(30, 45));
+        assert!(!late.degraded_over(60, 99));
+    }
+
+    #[test]
+    fn whole_run_dropout_resolves_reads_to_none() {
+        let db = db_0_to_99();
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricDropout {
+            from: 0,
+            to: 200,
+        }]);
+        let lens = TelemetryLens::new(&db, &tl, 50);
+        let id = SeriesId::global("workload_rate");
+        assert_eq!(lens.last_at(&id, 99), None);
+        assert_eq!(lens.avg_over(&id, 0, 99), None);
+        assert_eq!(lens.len(&id), 0);
+        assert_eq!(lens.iter_over(&id, 0, 99).count(), 0);
+    }
+
+    #[test]
+    fn staleness_clamps_visibility_to_now_minus_delay() {
+        let db = db_0_to_99();
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricStaleness {
+            from: 50,
+            to: 80,
+            delay: 30,
+        }]);
+        let id = SeriesId::global("workload_rate");
+        // Inside the window: the store appears frozen at now − 30.
+        let lens = TelemetryLens::new(&db, &tl, 60);
+        assert_eq!(lens.visible_hi(60), 30);
+        assert_eq!(lens.last_at(&id, 60), Some((30, 1_030.0)));
+        assert_eq!(lens.iter_over(&id, 0, 99).count(), 31);
+        assert_eq!(
+            lens.avg_over(&id, 20, 60).unwrap().to_bits(),
+            db.avg_over(&id, 20, 30).unwrap().to_bits()
+        );
+        // Outside the window: full visibility returns.
+        let after = TelemetryLens::new(&db, &tl, 85);
+        assert_eq!(after.last_at(&id, 85), Some((85, 1_085.0)));
+        // Replay re-anchoring: a read at(u) is pure in u.
+        assert_eq!(after.at(60).last_at(&id, 60), lens.last_at(&id, 60));
+    }
+
+    #[test]
+    fn corruption_is_seeded_selective_and_sample_time_pure() {
+        let db = db_0_to_99();
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricCorruption {
+            from: 20,
+            to: 80,
+            pattern: SeriesPattern::Name("workload_rate"),
+            kind: CorruptionKind::Spike { factor: 50.0 },
+            seed: 7,
+        }]);
+        let id = SeriesId::global("workload_rate");
+        let other = SeriesId::worker("worker_throughput", 0);
+        let lens = TelemetryLens::new(&db, &tl, 60);
+        // Some but not all in-window samples are spiked, deterministically.
+        let spiked: Vec<Timestamp> = lens
+            .iter_over(&id, 20, 59)
+            .filter(|&(t, v)| (v - (1_000.0 + t as f64)).abs() > 1e-9)
+            .map(|(t, _)| t)
+            .collect();
+        assert!(!spiked.is_empty() && spiked.len() < 40, "{spiked:?}");
+        // Query-time independence: the same samples at a later anchor.
+        let late = TelemetryLens::new(&db, &tl, 99);
+        let spiked_late: Vec<Timestamp> = late
+            .iter_over(&id, 20, 59)
+            .filter(|&(t, v)| (v - (1_000.0 + t as f64)).abs() > 1e-9)
+            .map(|(t, _)| t)
+            .collect();
+        assert_eq!(spiked, spiked_late);
+        // Unmatched series pass through untouched.
+        assert_eq!(
+            late.avg_over(&other, 20, 80).unwrap().to_bits(),
+            db.avg_over(&other, 20, 80).unwrap().to_bits()
+        );
+        // Handle-path reads agree with id-path reads.
+        let h = db.lookup(&id).unwrap();
+        let a: Vec<_> = late.iter_over_h(h, 20, 59).collect();
+        let b: Vec<_> = late.iter_over(&id, 20, 59).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn freeze_repeats_pre_window_value_and_drops_unborn_series() {
+        let mut db = Tsdb::new();
+        for t in 10..50u64 {
+            db.record_global("a", t, t as f64);
+        }
+        // Series "b" is born inside the freeze window.
+        for t in 30..50u64 {
+            db.record_global("b", t, t as f64);
+        }
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricCorruption {
+            from: 25,
+            to: 45,
+            pattern: SeriesPattern::All,
+            kind: CorruptionKind::Freeze,
+            seed: 1,
+        }]);
+        let lens = TelemetryLens::new(&db, &tl, 49);
+        // "a" freezes at its t=24 value for the whole window.
+        let vals: Vec<f64> = lens.iter_over(&SeriesId::global("a"), 25, 44).map(|(_, v)| v).collect();
+        assert!(vals.iter().all(|&v| v == 24.0), "{vals:?}");
+        assert_eq!(lens.last_at(&SeriesId::global("a"), 40), Some((40, 24.0)));
+        // "b" has nothing to freeze to: its in-window samples are dropped.
+        assert_eq!(lens.iter_over(&SeriesId::global("b"), 0, 44).count(), 0);
+        assert_eq!(lens.last_at(&SeriesId::global("b"), 44), None);
+        // Both recover after the window.
+        assert_eq!(lens.last_at(&SeriesId::global("a"), 49), Some((49, 49.0)));
+        assert_eq!(lens.last_at(&SeriesId::global("b"), 49), Some((49, 49.0)));
+    }
+
+    #[test]
+    fn nan_corruption_emits_nan_on_hit_ticks() {
+        let db = db_0_to_99();
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricCorruption {
+            from: 0,
+            to: 100,
+            pattern: SeriesPattern::All,
+            kind: CorruptionKind::Nan,
+            seed: 3,
+        }]);
+        let lens = TelemetryLens::new(&db, &tl, 99);
+        let id = SeriesId::global("workload_rate");
+        let nans = lens.iter_over(&id, 0, 99).filter(|(_, v)| v.is_nan()).count();
+        assert!(nans > 0, "seeded NaN injection produced no hits over 100 ticks");
+        assert!(nans < 100, "NaN injection hit every tick");
+    }
+
+    #[test]
+    fn actuator_windows_deny_without_degrading_reads() {
+        let tl = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::ActuatorFault {
+            from: 100,
+            to: 200,
+        }]);
+        assert!(tl.actuator_denied(100) && tl.actuator_denied(199));
+        assert!(!tl.actuator_denied(99) && !tl.actuator_denied(200));
+        assert!(!tl.read_fault_active(150));
+        assert!(!tl.read_fault_over(0, 1_000));
+        let db = db_0_to_99();
+        let lens = TelemetryLens::new(&db, &tl, 150);
+        assert!(!lens.degraded());
+        assert_eq!(
+            lens.avg_over(&SeriesId::global("workload_rate"), 0, 99),
+            db.avg_over(&SeriesId::global("workload_rate"), 0, 99)
+        );
+    }
+
+    #[test]
+    fn next_boundary_walks_every_window_edge() {
+        let tl = TelemetryFaultTimeline::new(vec![
+            TelemetryFaultEvent::MetricDropout { from: 100, to: 200 },
+            TelemetryFaultEvent::ActuatorFault { from: 150, to: 400 },
+        ]);
+        assert_eq!(tl.next_boundary(0), Some(100));
+        assert_eq!(tl.next_boundary(100), Some(150));
+        assert_eq!(tl.next_boundary(150), Some(200));
+        assert_eq!(tl.next_boundary(200), Some(400));
+        assert_eq!(tl.next_boundary(400), None);
+        assert_eq!(TelemetryFaultTimeline::EMPTY.next_boundary(0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty window")]
+    fn degenerate_window_rejected() {
+        TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricDropout { from: 50, to: 50 }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping windows")]
+    fn same_target_overlap_rejected() {
+        TelemetryFaultTimeline::new(vec![
+            TelemetryFaultEvent::MetricStaleness { from: 0, to: 100, delay: 60 },
+            TelemetryFaultEvent::MetricStaleness { from: 50, to: 150, delay: 10 },
+        ]);
+    }
+
+    #[test]
+    fn cross_target_overlap_allowed() {
+        // A dropout during a staleness window, with a corruption window on
+        // a different pattern over all of it: all distinct targets.
+        let tl = TelemetryFaultTimeline::new(vec![
+            TelemetryFaultEvent::MetricStaleness { from: 0, to: 100, delay: 30 },
+            TelemetryFaultEvent::MetricDropout { from: 20, to: 40 },
+            TelemetryFaultEvent::MetricCorruption {
+                from: 0,
+                to: 100,
+                pattern: SeriesPattern::WorkerSeries("worker_cpu"),
+                kind: CorruptionKind::Nan,
+                seed: 9,
+            },
+            TelemetryFaultEvent::MetricCorruption {
+                from: 50,
+                to: 90,
+                pattern: SeriesPattern::Name("workload_rate"),
+                kind: CorruptionKind::Spike { factor: 10.0 },
+                seed: 9,
+            },
+        ]);
+        assert_eq!(tl.events().len(), 4);
+        assert!(tl.read_fault_active(0) && tl.read_fault_active(99));
+        assert!(!tl.read_fault_active(100));
+    }
+}

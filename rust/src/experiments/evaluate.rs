@@ -187,6 +187,27 @@ pub fn paper_sections() -> Vec<SectionSpec> {
             "static-12",
         ),
         s(
+            "telemetry-resilience",
+            "Degraded telemetry (faultable metric plane)",
+            "The `dsp::telemetry` chaos cells: a whole-scrape blackout \
+             through the flash-crowd surge, a 5-minute scrape-pipeline lag \
+             on the week-scale staged cell, and a seeded spike/NaN \
+             corruption storm with a dead-rescale-API window. `daedalus` \
+             holds its last plan, quarantines fault-window capacity \
+             observations, and step-clamps the first post-recovery rescale; \
+             `daedalus-unguarded` is the same controller with the hardening \
+             switched off — the `vs daedalus-unguarded` column prices the \
+             guards.",
+            &[
+                "flink-wordcount-flash-crowd-blackout",
+                "flink-wordcount-diurnal-week-stale5m",
+                "flink-wordcount-sine-spikestorm",
+            ],
+            &["daedalus", "daedalus-unguarded", "hpa-80", "static-12"],
+            "daedalus",
+            "daedalus-unguarded",
+        ),
+        s(
             "stress",
             "Stress shapes beyond the paper",
             "Flash-crowd, diurnal-drift and outage-backfill traces probe \

@@ -19,7 +19,10 @@ use crate::autoscaler::{
     Phoebe, PhoebeConfig, Static,
 };
 use crate::clock::Timestamp;
-use crate::dsp::{EngineMode, EngineProfile, FaultTimeline, SimConfig, Simulation, StageModel};
+use crate::dsp::{
+    EngineMode, EngineProfile, FaultTimeline, SimConfig, Simulation, StageModel,
+    TelemetryFaultTimeline,
+};
 use crate::jobs::{JobProfile, SelectivityDrift};
 use crate::metrics::SeriesId;
 use crate::runtime::ComputeBackend;
@@ -52,6 +55,7 @@ impl Approach {
     /// the inverse of [`Approach::parse`].
     pub fn label(&self) -> String {
         match self {
+            Approach::Daedalus(cfg) if !cfg.hardened => "daedalus-unguarded".into(),
             Approach::Daedalus(_) => "daedalus".into(),
             Approach::Hpa(t) => format!("hpa-{:02.0}", t * 100.0),
             Approach::Static(n) => format!("static-{n}"),
@@ -65,9 +69,12 @@ impl Approach {
     /// `phoebe`, `ds2`, `ds2-job`. The spec/scenario context supplies the
     /// bounds the configurable approaches need.
     pub fn parse(s: &str, max_replicas: usize, recovery_target: f64) -> crate::Result<Approach> {
-        if s == "daedalus" {
+        if s == "daedalus" || s == "daedalus-unguarded" {
             let cfg = DaedalusConfig {
                 recovery_target,
+                // The unguarded ablation switches the degraded-telemetry
+                // hardening off — the exact pre-hardening manager.
+                hardened: s == "daedalus",
                 ..DaedalusConfig::default()
             };
             return Ok(Approach::Daedalus(cfg));
@@ -100,7 +107,8 @@ impl Approach {
             return Ok(Approach::Static(n));
         }
         Err(anyhow!(
-            "unknown approach {s:?} (daedalus|hpa-<pct>|static-<n>|phoebe|ds2|ds2-job)"
+            "unknown approach {s:?} \
+             (daedalus|daedalus-unguarded|hpa-<pct>|static-<n>|phoebe|ds2|ds2-job)"
         ))
     }
 }
@@ -140,6 +148,10 @@ pub struct Experiment {
     /// Typed fault timeline (crashes, zone outages, gray failures, …)
     /// injected alongside the legacy failure schedule.
     pub faults: FaultTimeline,
+    /// Typed telemetry fault timeline (metric dropout/staleness/corruption,
+    /// actuator denial) applied through the [`crate::dsp::TelemetryLens`]
+    /// on the autoscaler read path.
+    pub telemetry: TelemetryFaultTimeline,
     /// Fused flat pool (reference) or per-operator stages.
     pub stage_model: StageModel,
     /// Optional mid-run selectivity drift (`bottleneck-shift`).
@@ -177,6 +189,7 @@ impl Experiment {
             sample_stride: 30,
             failures: vec![],
             faults: FaultTimeline::default(),
+            telemetry: TelemetryFaultTimeline::default(),
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,
@@ -206,6 +219,12 @@ impl Experiment {
     /// Builder: set the typed fault timeline.
     pub fn with_faults(mut self, faults: FaultTimeline) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Builder: set the typed telemetry fault timeline.
+    pub fn with_telemetry(mut self, telemetry: TelemetryFaultTimeline) -> Self {
+        self.telemetry = telemetry;
         self
     }
 
@@ -320,6 +339,7 @@ impl Experiment {
             rate_noise: 0.02,
             failures: self.failures.clone(),
             faults: self.faults.clone(),
+            telemetry: self.telemetry.clone(),
             stage_model: self.stage_model,
             selectivity_drift: self.selectivity_drift,
             zipf_override: self.zipf_override,
@@ -378,13 +398,24 @@ impl Experiment {
             // ticks; observation rows are emitted post-hoc from the same
             // dense series the per-tick loop reads, so both modes produce
             // identical traces.
-            if self.engine_mode == EngineMode::EventDriven && sim.ready() && next < self.duration
+            // Telemetry read faults (staleness in particular) resolve
+            // against the query time, so the harness steps densely while
+            // one is active — quiet spans only open on clean telemetry.
+            if self.engine_mode == EngineMode::EventDriven
+                && sim.ready()
+                && next < self.duration
+                && !sim.telemetry().read_fault_active(t)
             {
                 let mut horizon = self.duration.min(sim.next_knot(t));
                 if let Some(f) = sim.next_failure_after(t) {
                     horizon = horizon.min(f);
                 }
                 if let Some(f) = sim.next_fault_boundary(t) {
+                    horizon = horizon.min(f);
+                }
+                // Advisory bound: spans never cross a telemetry fault
+                // boundary, so fault activity is constant over a span.
+                if let Some(f) = sim.next_telemetry_boundary(t) {
                     horizon = horizon.min(f);
                 }
                 // Decision-spanning no-op skip: bound the span by the
@@ -656,6 +687,7 @@ mod tests {
             sample_stride: 60,
             failures: vec![],
             faults: FaultTimeline::default(),
+            telemetry: TelemetryFaultTimeline::default(),
             stage_model: StageModel::Fused,
             selectivity_drift: None,
             zipf_override: None,

@@ -10,7 +10,10 @@
 
 use crate::clock::Timestamp;
 use crate::config::{EngineKind, JobKind};
-use crate::dsp::{FaultEvent, FaultTimeline, StageModel};
+use crate::dsp::{
+    CorruptionKind, FaultEvent, FaultTimeline, SeriesPattern, StageModel, TelemetryFaultEvent,
+    TelemetryFaultTimeline,
+};
 use crate::experiments::harness::{Approach, Experiment};
 use crate::jobs::SelectivityDrift;
 use crate::runtime::ComputeBackend;
@@ -143,6 +146,81 @@ impl FailurePlan {
     }
 }
 
+/// When (if ever) telemetry faults degrade a scenario's metric plane
+/// (see `dsp::telemetry` for the taxonomy). Like [`FailurePlan`], a plan
+/// is pure data — concrete windows are derived from the run duration, so
+/// the same plan scales from a CI smoke to a week-long horizon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryPlan {
+    /// Clean telemetry — every pre-existing cell.
+    None,
+    /// Whole-scrape metric blackout (dropout) over the middle sixth of
+    /// the run — the autoscalers fly blind through the surge.
+    Blackout,
+    /// A 5-minute scrape-pipeline lag over the middle third of the run.
+    Staleness,
+    /// Seeded corruption storm on the per-worker series (throughput
+    /// spikes + CPU NaNs) plus a dead-rescale-API window after it.
+    SpikeStorm,
+}
+
+impl TelemetryPlan {
+    /// Scrape-pipeline lag of the [`TelemetryPlan::Staleness`] plan (s).
+    pub const STALENESS_DELAY: u64 = 300;
+
+    /// Concrete telemetry fault timeline for a run of `duration` seconds.
+    /// Window ends are clamped past their starts so even degenerate smoke
+    /// durations validate.
+    pub fn timeline(&self, duration: Timestamp) -> TelemetryFaultTimeline {
+        match *self {
+            TelemetryPlan::None => TelemetryFaultTimeline::default(),
+            TelemetryPlan::Blackout => {
+                TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricDropout {
+                    from: duration * 5 / 12,
+                    to: (duration * 7 / 12).max(duration * 5 / 12 + 1),
+                }])
+            }
+            TelemetryPlan::Staleness => {
+                TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricStaleness {
+                    from: duration / 3,
+                    to: (duration * 2 / 3).max(duration / 3 + 1),
+                    delay: Self::STALENESS_DELAY,
+                }])
+            }
+            TelemetryPlan::SpikeStorm => TelemetryFaultTimeline::new(vec![
+                TelemetryFaultEvent::MetricCorruption {
+                    from: duration / 4,
+                    to: (duration / 2).max(duration / 4 + 1),
+                    pattern: SeriesPattern::WorkerSeries("worker_throughput"),
+                    kind: CorruptionKind::Spike { factor: 6.0 },
+                    seed: 0x00C0_FFEE,
+                },
+                TelemetryFaultEvent::MetricCorruption {
+                    from: duration / 4,
+                    to: (duration / 2).max(duration / 4 + 1),
+                    pattern: SeriesPattern::WorkerSeries("worker_cpu"),
+                    kind: CorruptionKind::Nan,
+                    seed: 0x0BAD_CAFE,
+                },
+                TelemetryFaultEvent::ActuatorFault {
+                    from: duration * 7 / 12,
+                    to: (duration * 2 / 3).max(duration * 7 / 12 + 1),
+                },
+            ]),
+        }
+    }
+
+    /// Scenario-name suffix ("" when telemetry is clean).
+    fn suffix(&self) -> &'static str {
+        match *self {
+            TelemetryPlan::None => "",
+            TelemetryPlan::Blackout => "-blackout",
+            TelemetryPlan::Staleness => "-stale5m",
+            TelemetryPlan::SpikeStorm => "-spikestorm",
+        }
+    }
+}
+
 /// One named cell of the scenario matrix.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -156,6 +234,8 @@ pub struct Scenario {
     pub shape: ShapeKind,
     /// Failure-injection schedule.
     pub failures: FailurePlan,
+    /// Telemetry-degradation schedule (clean for every pre-existing cell).
+    pub telemetry: TelemetryPlan,
     /// Simulated run length in seconds.
     pub duration: Timestamp,
     /// One repetition per seed.
@@ -204,6 +284,7 @@ impl Scenario {
             job,
             shape,
             failures,
+            telemetry: TelemetryPlan::None,
             duration,
             seeds,
             approaches: vec![
@@ -287,7 +368,8 @@ impl Scenario {
         )
         .with_seeds(self.seeds.clone())
         .with_failures(self.failures.schedule(self.duration))
-        .with_faults(self.failures.timeline(self.duration));
+        .with_faults(self.failures.timeline(self.duration))
+        .with_telemetry(self.telemetry.timeline(self.duration));
         exp.initial_replicas = self.initial_replicas;
         exp.max_replicas = self.max_replicas;
         exp.partitions = self.partitions;
@@ -317,11 +399,13 @@ pub struct ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The curated built-in matrix (27 scenarios): the six paper
+    /// The curated built-in matrix (30 scenarios): the six paper
     /// engine × job cells on their default traces, the three stress shapes
     /// on several cells, two legacy failure-injection schedules, five
     /// typed-fault chaos cells (`-chaos`, `-grayweek`, `-crashloop3`; see
-    /// `dsp::faults`), four staged-engine operator-elasticity cells
+    /// `dsp::faults`), three telemetry-chaos cells (`-blackout`,
+    /// `-stale5m`, `-spikestorm`; see `dsp::telemetry`), four
+    /// staged-engine operator-elasticity cells
     /// (`bottleneck-shift`, `skew-amplify`), two week-scale `diurnal-week`
     /// cells (staged engine; real days at `--duration 604800`), a
     /// month-scale `diurnal-month` cell plus its `-chaos` twin (real days
@@ -393,6 +477,27 @@ impl ScenarioRegistry {
             // faults-smoke job drives it truncated through the real CLI.
             s(Flink, WordCount, DiurnalMonth, FailurePlan::Chaos),
         ];
+        // Telemetry-chaos cells (dsp::telemetry taxonomy): a metric
+        // blackout through the flash-crowd surge, a 5-minute scrape lag on
+        // the week-scale staged cell, and a seeded corruption storm with a
+        // dead-rescale-API window on the sine trace. Each compares the
+        // hardened Daedalus against its unguarded ablation (the
+        // `telemetry-resilience` report section reads these cells).
+        let tcell = |shape, tplan: TelemetryPlan| {
+            let mut sc = s(Flink, WordCount, shape, FailurePlan::None);
+            sc.telemetry = tplan;
+            sc.name.push_str(tplan.suffix());
+            sc.approaches = vec![
+                "daedalus".into(),
+                "daedalus-unguarded".into(),
+                "hpa-80".into(),
+                "static-12".into(),
+            ];
+            sc
+        };
+        scenarios.push(tcell(FlashCrowd, TelemetryPlan::Blackout));
+        scenarios.push(tcell(DiurnalWeek, TelemetryPlan::Staleness));
+        scenarios.push(tcell(ShapeKind::Sine, TelemetryPlan::SpikeStorm));
         // The paper's Fig-11 Phoebe comparison: YSB on the sine trace,
         // 18-worker ceiling, Phoebe's offline profiling cost accounted
         // against its worker-seconds. The `report` evaluation stack
@@ -613,6 +718,39 @@ mod tests {
         let bs = reg.get("flink-wordcount-bottleneck-shift-chaos").unwrap();
         assert_eq!(bs.stage_model, StageModel::Staged);
         assert!(bs.selectivity_drift.is_some());
+    }
+
+    #[test]
+    fn telemetry_cells_are_registered_and_runnable() {
+        let reg = ScenarioRegistry::builtin(1_200, &[1]);
+        for name in [
+            "flink-wordcount-flash-crowd-blackout",
+            "flink-wordcount-diurnal-week-stale5m",
+            "flink-wordcount-sine-spikestorm",
+        ] {
+            let sc = reg.get(name).expect(name);
+            assert_ne!(sc.telemetry, TelemetryPlan::None, "{name}");
+            // Hardened vs unguarded ablation rides in every telemetry cell.
+            assert!(
+                sc.approaches.contains(&"daedalus-unguarded".to_string()),
+                "{name} lost the ablation arm"
+            );
+            let exp = sc.to_experiment().unwrap();
+            assert!(!exp.telemetry.is_empty(), "{name} lost its timeline");
+        }
+        // Pre-existing cells keep clean telemetry (golden traces pinned).
+        for name in ["flink-wordcount-sine", "flink-wordcount-sine-chaos"] {
+            let sc = reg.get(name).unwrap();
+            assert_eq!(sc.telemetry, TelemetryPlan::None);
+            assert!(sc.to_experiment().unwrap().telemetry.is_empty());
+        }
+        // Plans validate even at degenerate smoke durations (the timeline
+        // constructor panics on an invalid event).
+        for d in [6, 30, 900] {
+            TelemetryPlan::Blackout.timeline(d).validate();
+            TelemetryPlan::Staleness.timeline(d).validate();
+            TelemetryPlan::SpikeStorm.timeline(d).validate();
+        }
     }
 
     #[test]

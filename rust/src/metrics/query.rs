@@ -16,8 +16,9 @@
 
 use std::collections::VecDeque;
 
-use super::tsdb::{SeriesHandle, SeriesId, Tsdb};
+use super::tsdb::{SeriesHandle, SeriesId};
 use crate::clock::Timestamp;
+use crate::dsp::telemetry::TelemetryLens;
 
 /// Point-in-time view of one worker's metrics.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,7 +34,7 @@ pub struct WorkerSnapshot {
 /// Per-worker CPU/throughput snapshots using a trailing moving average of
 /// `window` seconds — the paper monitors CPU as a 1-minute moving average
 /// to reduce noise (§3.6).
-pub fn worker_snapshots(db: &Tsdb, now: Timestamp, window: u64) -> Vec<WorkerSnapshot> {
+pub fn worker_snapshots(db: TelemetryLens<'_>, now: Timestamp, window: u64) -> Vec<WorkerSnapshot> {
     let mut out = Vec::new();
     worker_snapshots_into(db, now, window, &mut out);
     out
@@ -42,7 +43,7 @@ pub fn worker_snapshots(db: &Tsdb, now: Timestamp, window: u64) -> Vec<WorkerSna
 /// [`worker_snapshots`] into a caller-supplied buffer — the MAPE-K monitor
 /// reuses one across iterations to avoid per-loop allocation.
 pub fn worker_snapshots_into(
-    db: &Tsdb,
+    db: TelemetryLens<'_>,
     now: Timestamp,
     window: u64,
     out: &mut Vec<WorkerSnapshot>,
@@ -86,7 +87,7 @@ pub struct StageSnapshot {
 /// per stage `0..n_stages`. Returns fewer entries when a stage has no
 /// samples yet (callers treat a short vector as "not warmed up").
 pub fn stage_snapshots(
-    db: &Tsdb,
+    db: TelemetryLens<'_>,
     now: Timestamp,
     window: u64,
     n_stages: usize,
@@ -98,7 +99,7 @@ pub fn stage_snapshots(
 
 /// [`stage_snapshots`] into a caller-supplied buffer (cleared first).
 pub fn stage_snapshots_into(
-    db: &Tsdb,
+    db: TelemetryLens<'_>,
     now: Timestamp,
     window: u64,
     n_stages: usize,
@@ -155,17 +156,28 @@ impl SeriesWindow {
     ///
     /// Bulk appends are fine under the same clause: the event-driven
     /// engine defers constant bookkeeping series during a quiet span and
-    /// bulk-fills them via [`Tsdb::record_run_h`] *before* any slow-core
+    /// bulk-fills them via [`super::tsdb::Tsdb::record_run_h`] *before*
+    /// any slow-core
     /// tick and before the span-ending autoscaler decision, so every
     /// deferred sample still lands strictly ahead of the first monitor
     /// read that covers it (pinned by
     /// `stage_monitor_tolerates_bulk_run_appends` below).
-    fn advance(&mut self, db: &Tsdb, from: Timestamp, now: Timestamp) -> bool {
+    fn advance(&mut self, db: TelemetryLens<'_>, from: Timestamp, now: Timestamp) -> bool {
         let Some(h) = self.handle else { return false };
+        // A staleness window can pull the visible frontier *below* reads
+        // already pulled (`now − delay` regresses past the cursor at the
+        // window's onset): drop the ring and re-read — correctness over
+        // speed on the degraded path. Dropout/corruption transforms are
+        // pure in sample time, so the cursor stays valid for those.
+        let vis_now = db.visible_hi(now);
+        if vis_now + 1 < self.cursor {
+            self.ring.clear();
+            self.cursor = 0;
+        }
         let lo = self.cursor.max(from);
-        if lo <= now {
-            db.fold_over_h(h, lo, now, (), |(), t, v| self.ring.push_back((t, v)));
-            self.cursor = now + 1;
+        if lo <= vis_now {
+            db.fold_over_h(h, lo, vis_now, (), |(), t, v| self.ring.push_back((t, v)));
+            self.cursor = vis_now + 1;
         }
         while self.ring.front().is_some_and(|&(t, _)| t < from) {
             self.ring.pop_front();
@@ -214,7 +226,7 @@ impl StageMonitor {
 
     /// (Re-)resolve handles for `n_stages` stages. Rings and cursors of
     /// already-resolved stages are untouched — handles are stable.
-    fn rebind(&mut self, db: &Tsdb, n_stages: usize) {
+    fn rebind(&mut self, db: TelemetryLens<'_>, n_stages: usize) {
         self.stages.resize_with(n_stages, StageState::default);
         for (s, st) in self.stages.iter_mut().enumerate() {
             if st.busy.handle.is_none() {
@@ -239,7 +251,7 @@ impl StageMonitor {
     /// autoscaler config); a changed window resets the monitor.
     pub fn snapshots_into(
         &mut self,
-        db: &Tsdb,
+        db: TelemetryLens<'_>,
         now: Timestamp,
         window: u64,
         n_stages: usize,
@@ -297,7 +309,7 @@ impl WorkerMonitor {
         Self::default()
     }
 
-    fn rebind(&mut self, db: &Tsdb) {
+    fn rebind(&mut self, db: TelemetryLens<'_>) {
         self.workers.clear();
         for w in db.workers_for("worker_cpu") {
             let Some(cpu) = db.lookup(&SeriesId::worker("worker_cpu", w)) else {
@@ -313,7 +325,7 @@ impl WorkerMonitor {
     /// output, bit for bit.
     pub fn snapshots_into(
         &mut self,
-        db: &Tsdb,
+        db: TelemetryLens<'_>,
         now: Timestamp,
         window: u64,
         out: &mut Vec<WorkerSnapshot>,
@@ -342,7 +354,7 @@ impl WorkerMonitor {
 /// Workload rate history over `[now − window + 1, now]`, padded on the left
 /// with the earliest sample so the result always has `window` entries — the
 /// fixed-shape input the forecast artifact expects.
-pub fn workload_window(db: &Tsdb, now: Timestamp, window: usize) -> Vec<f64> {
+pub fn workload_window(db: TelemetryLens<'_>, now: Timestamp, window: usize) -> Vec<f64> {
     let mut out = Vec::new();
     workload_window_into(db, now, window, &mut out);
     out
@@ -352,7 +364,12 @@ pub fn workload_window(db: &Tsdb, now: Timestamp, window: usize) -> Vec<f64> {
 /// left pad is written before the forward-fill sweep, so the whole window
 /// is built in O(window) — the old implementation `insert(0, …)`-ed the
 /// pad afterwards, which was O(window²) for young jobs.
-pub fn workload_window_into(db: &Tsdb, now: Timestamp, window: usize, out: &mut Vec<f64>) {
+pub fn workload_window_into(
+    db: TelemetryLens<'_>,
+    now: Timestamp,
+    window: usize,
+    out: &mut Vec<f64>,
+) {
     match db.lookup(&SeriesId::global("workload_rate")) {
         Some(h) => workload_window_into_h(db, h, now, window, out),
         None => {
@@ -368,7 +385,7 @@ pub fn workload_window_into(db: &Tsdb, now: Timestamp, window: usize, out: &mut 
 /// monitor both hold such a cache; the single owner of the
 /// resolve-or-fall-back dance lives here).
 pub fn workload_window_into_cached(
-    db: &Tsdb,
+    db: TelemetryLens<'_>,
     handle: &mut Option<SeriesHandle>,
     now: Timestamp,
     window: usize,
@@ -386,7 +403,7 @@ pub fn workload_window_into_cached(
 /// [`workload_window_into`] through a pre-resolved `workload_rate` handle —
 /// the hot inner path behind [`workload_window_into_cached`].
 pub fn workload_window_into_h(
-    db: &Tsdb,
+    db: TelemetryLens<'_>,
     h: SeriesHandle,
     now: Timestamp,
     window: usize,
@@ -420,19 +437,19 @@ pub fn workload_window_into_h(
 }
 
 /// Total consumer lag at `now` (latest sample).
-pub fn consumer_lag(db: &Tsdb, now: Timestamp) -> f64 {
+pub fn consumer_lag(db: TelemetryLens<'_>, now: Timestamp) -> f64 {
     db.last_at(&SeriesId::global("consumer_lag"), now)
         .map_or(0.0, |(_, v)| v)
 }
 
 /// Current parallelism at `now` (latest sample).
-pub fn parallelism(db: &Tsdb, now: Timestamp) -> Option<usize> {
+pub fn parallelism(db: TelemetryLens<'_>, now: Timestamp) -> Option<usize> {
     db.last_at(&SeriesId::global("parallelism"), now)
         .map(|(_, v)| v as usize)
 }
 
 /// Average / max workload over `[from, to]`.
-pub fn workload_stats(db: &Tsdb, from: Timestamp, to: Timestamp) -> Option<(f64, f64)> {
+pub fn workload_stats(db: TelemetryLens<'_>, from: Timestamp, to: Timestamp) -> Option<(f64, f64)> {
     let id = SeriesId::global("workload_rate");
     Some((db.avg_over(&id, from, to)?, db.max_over(&id, from, to)?))
 }
@@ -440,6 +457,13 @@ pub fn workload_stats(db: &Tsdb, from: Timestamp, to: Timestamp) -> Option<(f64,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::Tsdb;
+
+    /// Fault-free lens: these tests pin the raw read semantics; the
+    /// faulted paths are pinned in [`crate::dsp::telemetry`].
+    fn lens(db: &Tsdb) -> TelemetryLens<'_> {
+        TelemetryLens::transparent(db)
+    }
 
     fn db_with(n: u64) -> Tsdb {
         let mut db = Tsdb::new();
@@ -454,7 +478,7 @@ mod tests {
     #[test]
     fn snapshots_average_over_window() {
         let db = db_with(100);
-        let snaps = worker_snapshots(&db, 99, 60);
+        let snaps = worker_snapshots(lens(&db), 99, 60);
         assert_eq!(snaps.len(), 1);
         crate::assert_close!(snaps[0].cpu, 0.6, atol = 1e-12);
         crate::assert_close!(snaps[0].throughput, 10_000.0, atol = 1e-9);
@@ -463,7 +487,7 @@ mod tests {
     #[test]
     fn workload_window_dense_and_padded() {
         let db = db_with(10);
-        let w = workload_window(&db, 9, 20);
+        let w = workload_window(lens(&db), 9, 20);
         assert_eq!(w.len(), 20);
         // Left-padded with the earliest value (0.0), then 0..=9.
         assert_eq!(w[..10], [0.0; 10]);
@@ -475,7 +499,7 @@ mod tests {
         let mut db = Tsdb::new();
         db.record_global("workload_rate", 0, 5.0);
         db.record_global("workload_rate", 4, 9.0);
-        let w = workload_window(&db, 5, 6);
+        let w = workload_window(lens(&db), 5, 6);
         assert_eq!(w, vec![5.0, 5.0, 5.0, 5.0, 9.0, 9.0]);
     }
 
@@ -483,14 +507,14 @@ mod tests {
     fn window_into_reuses_buffer_across_calls() {
         let db = db_with(10);
         let mut buf = vec![99.0; 3]; // stale content must be cleared
-        workload_window_into(&db, 9, 20, &mut buf);
-        assert_eq!(buf, workload_window(&db, 9, 20));
+        workload_window_into(lens(&db), 9, 20, &mut buf);
+        assert_eq!(buf, workload_window(lens(&db), 9, 20));
         // A second call with a different window reshapes the same buffer.
-        workload_window_into(&db, 9, 4, &mut buf);
+        workload_window_into(lens(&db), 9, 4, &mut buf);
         assert_eq!(buf, vec![6.0, 7.0, 8.0, 9.0]);
         let mut snaps = Vec::new();
-        worker_snapshots_into(&db, 9, 5, &mut snaps);
-        assert_eq!(snaps, worker_snapshots(&db, 9, 5));
+        worker_snapshots_into(lens(&db), 9, 5, &mut snaps);
+        assert_eq!(snaps, worker_snapshots(lens(&db), 9, 5));
     }
 
     #[test]
@@ -505,7 +529,7 @@ mod tests {
             }
         }
         // Stage 2 has no series: snapshot list stops there.
-        let snaps = stage_snapshots(&db, 99, 60, 3);
+        let snaps = stage_snapshots(lens(&db), 99, 60, 3);
         assert_eq!(snaps.len(), 2);
         crate::assert_close!(snaps[0].busy, 0.4, atol = 1e-12);
         crate::assert_close!(snaps[1].throughput, 2_000.0, atol = 1e-9);
@@ -516,9 +540,9 @@ mod tests {
     #[test]
     fn empty_db_gives_zero_window() {
         let db = Tsdb::new();
-        assert_eq!(workload_window(&db, 100, 4), vec![0.0; 4]);
-        assert_eq!(consumer_lag(&db, 100), 0.0);
-        assert!(parallelism(&db, 100).is_none());
+        assert_eq!(workload_window(lens(&db), 100, 4), vec![0.0; 4]);
+        assert_eq!(consumer_lag(lens(&db), 100), 0.0);
+        assert!(parallelism(lens(&db), 100).is_none());
     }
 
     #[test]
@@ -526,17 +550,17 @@ mod tests {
         let db = db_with(10);
         let mut handle = None;
         let mut buf = Vec::new();
-        workload_window_into_cached(&db, &mut handle, 9, 20, &mut buf);
-        assert_eq!(buf, workload_window(&db, 9, 20));
+        workload_window_into_cached(lens(&db), &mut handle, 9, 20, &mut buf);
+        assert_eq!(buf, workload_window(lens(&db), 9, 20));
         assert!(handle.is_some());
         // A second call reuses the resolved handle and agrees again.
-        workload_window_into_cached(&db, &mut handle, 9, 4, &mut buf);
-        assert_eq!(buf, workload_window(&db, 9, 4));
+        workload_window_into_cached(lens(&db), &mut handle, 9, 4, &mut buf);
+        assert_eq!(buf, workload_window(lens(&db), 9, 4));
         // Missing series: zero fill, handle stays unresolved until the
         // series appears.
         let empty = Tsdb::new();
         let mut h2 = None;
-        workload_window_into_cached(&empty, &mut h2, 5, 4, &mut buf);
+        workload_window_into_cached(lens(&empty), &mut h2, 5, 4, &mut buf);
         assert_eq!(buf, vec![0.0; 4]);
         assert!(h2.is_none());
     }
@@ -562,8 +586,8 @@ mod tests {
         // Drive it incrementally — including before the window fills, and
         // across series that appear after the monitor's first call.
         for now in [10u64, 39] {
-            mon.snapshots_into(&db, now, 60, 3, &mut got);
-            assert_eq!(got, stage_snapshots(&db, now, 60, 3), "now={now}");
+            mon.snapshots_into(lens(&db), now, 60, 3, &mut got);
+            assert_eq!(got, stage_snapshots(lens(&db), now, 60, 3), "now={now}");
             assert_eq!(got.len(), 2, "stage 2 has no series yet");
         }
         // Stage 2 appears later: the generation bump re-resolves handles.
@@ -576,8 +600,8 @@ mod tests {
             }
         }
         for now in [40u64, 99, 100, 160, 199] {
-            mon.snapshots_into(&db, now, 60, 3, &mut got);
-            let want = stage_snapshots(&db, now, 60, 3);
+            mon.snapshots_into(lens(&db), now, 60, 3, &mut got);
+            let want = stage_snapshots(lens(&db), now, 60, 3);
             assert_eq!(got, want, "now={now}");
         }
         assert_eq!(got.len(), 3);
@@ -631,9 +655,9 @@ mod tests {
                     tick.record_stage("stage_queue", s, t, queue(seg, s));
                 }
             }
-            mon.snapshots_into(&bulk, now, 60, n_stages, &mut got);
-            assert_eq!(got, stage_snapshots(&bulk, now, 60, n_stages), "now={now}");
-            assert_eq!(got, stage_snapshots(&tick, now, 60, n_stages), "now={now}");
+            mon.snapshots_into(lens(&bulk), now, 60, n_stages, &mut got);
+            assert_eq!(got, stage_snapshots(lens(&bulk), now, 60, n_stages), "now={now}");
+            assert_eq!(got, stage_snapshots(lens(&tick), now, 60, n_stages), "now={now}");
             from = now + 1;
         }
         assert_eq!(got.len(), n_stages);
@@ -653,8 +677,8 @@ mod tests {
         let mut mon = WorkerMonitor::new();
         let mut got = Vec::new();
         for now in [5u64, 30, 49] {
-            mon.snapshots_into(&db, now, 60, &mut got);
-            assert_eq!(got, worker_snapshots(&db, now, 60), "now={now}");
+            mon.snapshots_into(lens(&db), now, 60, &mut got);
+            assert_eq!(got, worker_snapshots(lens(&db), now, 60), "now={now}");
         }
         assert_eq!(got.len(), 1);
         // A new worker appearing later is picked up via the generation.
@@ -664,8 +688,8 @@ mod tests {
                 db.record_worker("worker_throughput", w, t, 4_000.0);
             }
         }
-        mon.snapshots_into(&db, 79, 60, &mut got);
-        assert_eq!(got, worker_snapshots(&db, 79, 60));
+        mon.snapshots_into(lens(&db), 79, 60, &mut got);
+        assert_eq!(got, worker_snapshots(lens(&db), 79, 60));
         assert_eq!(got.len(), 3);
     }
 }

@@ -239,6 +239,10 @@ impl Iterator for SampleIter<'_> {
 pub struct Tsdb {
     series: Vec<Series>,
     index: FastMap<SeriesId, usize>,
+    /// Series identities in handle order — the reverse of `index`, so
+    /// handle-path readers (the telemetry lens matching corruption
+    /// patterns) can recover a series' identity without a scan.
+    ids: Vec<SeriesId>,
 }
 
 impl Tsdb {
@@ -254,8 +258,15 @@ impl Tsdb {
         }
         let i = self.series.len();
         self.series.push(Series::default());
-        self.index.insert(id, i);
+        self.index.insert(id.clone(), i);
+        self.ids.push(id);
         SeriesHandle(i)
+    }
+
+    /// The identity of the series behind `h` (handles are only minted by
+    /// [`Tsdb::handle`], so the slot always exists).
+    pub fn id_of(&self, h: SeriesHandle) -> &SeriesId {
+        &self.ids[h.0]
     }
 
     /// Resolve an existing series to a handle without creating it — the
@@ -605,6 +616,9 @@ mod tests {
         // Read-only lookup resolves the same slots.
         assert_eq!(db.lookup(&SeriesId::global("x")), Some(h));
         assert_eq!(db.lookup(&SeriesId::global("y")), Some(h2));
+        // And handles resolve back to their identities.
+        assert_eq!(db.id_of(h), &SeriesId::global("x"));
+        assert_eq!(db.id_of(h2), &SeriesId::global("y"));
     }
 
     #[test]

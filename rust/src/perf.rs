@@ -70,7 +70,9 @@
 use std::time::{Duration, Instant};
 
 use crate::autoscaler::{Autoscaler, Daedalus, DaedalusConfig, Ds2, Ds2Config};
-use crate::dsp::{EngineProfile, MergePolicy, QueuePolicy, SimConfig, Simulation, StageModel};
+use crate::dsp::{
+    EngineProfile, MergePolicy, QueuePolicy, SimConfig, Simulation, StageModel, TelemetryLens,
+};
 use crate::jobs::JobProfile;
 use crate::metrics::tsdb::FastMap;
 use crate::metrics::{query, SeriesHandle, SeriesId, Tsdb};
@@ -361,6 +363,43 @@ fn columnar_scan_mix(db: &Tsdb, h: &ScanHandles) -> f64 {
     acc
 }
 
+/// The monitor read mix an autoscaler issues over one hour of per-second
+/// decision ticks against the 6 h store: trailing 60 s cpu/throughput
+/// averages for 12 workers, a trailing rate average, and a last-value lag
+/// read — all through pre-resolved handles on the raw store.
+fn decide_1h_direct_mix(db: &Tsdb, h: &ScanHandles) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..3_600u64 {
+        let now = 18_000 + i;
+        let from = now - 59;
+        for (&cpu, &tput) in h.cpu.iter().zip(&h.tput) {
+            acc += db.avg_over_h(cpu, from, now).unwrap_or(0.0);
+            acc += db.avg_over_h(tput, from, now).unwrap_or(0.0);
+        }
+        acc += db.avg_over_h(h.rate, from, now).unwrap_or(0.0);
+        acc += db.last_at_h(h.lag, now).map_or(0.0, |(_, v)| v);
+    }
+    acc
+}
+
+/// The same mix through a transparent [`TelemetryLens`] — prices the
+/// fault-timeline indirection on the clean-telemetry fast path that every
+/// simulation tick pays.
+fn decide_1h_lens_mix(lens: TelemetryLens<'_>, h: &ScanHandles) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..3_600u64 {
+        let now = 18_000 + i;
+        let from = now - 59;
+        for (&cpu, &tput) in h.cpu.iter().zip(&h.tput) {
+            acc += lens.avg_over_h(cpu, from, now).unwrap_or(0.0);
+            acc += lens.avg_over_h(tput, from, now).unwrap_or(0.0);
+        }
+        acc += lens.avg_over_h(h.rate, from, now).unwrap_or(0.0);
+        acc += lens.last_at_h(h.lag, now).map_or(0.0, |(_, v)| v);
+    }
+    acc
+}
+
 /// The old `workload_window` left-pad (`insert(0, …)` per missing entry,
 /// O(window²) for young jobs) — retained here as the bench reference for
 /// `workload_window_young_job`.
@@ -594,6 +633,8 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
             "tsdb_avg_over_60s",
             "tsdb_scan_6h_pairs",
             "tsdb_scan_6h_columnar",
+            "decide_1h_direct",
+            "decide_1h_lens",
         ],
     ) {
         let mut db = Tsdb::new();
@@ -615,9 +656,10 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
         }
         let mut snap_buf = Vec::new();
         r.run("tsdb_monitor_query_mix_6h_store", None, 100, || {
-            query::worker_snapshots_into(&db, 21_599, 60, &mut snap_buf);
-            query::workload_window_into(&db, 21_599, 1_800, &mut window_buf);
-            let lag = query::consumer_lag(&db, 21_599);
+            let lens = TelemetryLens::transparent(&db);
+            query::worker_snapshots_into(lens, 21_599, 60, &mut snap_buf);
+            query::workload_window_into(lens, 21_599, 1_800, &mut window_buf);
+            let lag = query::consumer_lag(lens, 21_599);
             (snap_buf.len(), window_buf.len(), lag)
         });
         r.run("tsdb_avg_over_60s", None, 1_000, || {
@@ -643,6 +685,17 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
         r.run("tsdb_scan_6h_columnar", Some("tsdb_scan_6h_pairs"), 30, || {
             columnar_scan_mix(&db, &handles)
         });
+        // Lens overhead on the clean path: the transparent lens must answer
+        // the decision-tick mix bit-identically to the raw store.
+        let lens = TelemetryLens::transparent(&db);
+        debug_assert_eq!(
+            decide_1h_direct_mix(&db, &handles).to_bits(),
+            decide_1h_lens_mix(lens, &handles).to_bits()
+        );
+        r.run("decide_1h_direct", None, 10, || decide_1h_direct_mix(&db, &handles));
+        r.run("decide_1h_lens", Some("decide_1h_direct"), 10, || {
+            decide_1h_lens_mix(lens, &handles)
+        });
     }
 
     // Young job (59 s of history, 1800-entry window): the left pad
@@ -660,7 +713,12 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
             Some("workload_window_naive_left_pad"),
             200,
             || {
-                query::workload_window_into(&young, 59, 1_800, &mut window_buf);
+                query::workload_window_into(
+                    TelemetryLens::transparent(&young),
+                    59,
+                    1_800,
+                    &mut window_buf,
+                );
                 window_buf.len()
             },
         );
@@ -985,7 +1043,7 @@ mod tests {
         }
         assert_eq!(
             workload_window_naive_ref(&db, 59, 200),
-            query::workload_window(&db, 59, 200)
+            query::workload_window(TelemetryLens::transparent(&db), 59, 200)
         );
     }
 }

@@ -111,6 +111,126 @@ fn chaos_cells_stay_in_the_registry_wide_bitwise_pin() {
     }
 }
 
+/// The telemetry chaos cells must stay in the registry for the same
+/// reason: the registry-wide pin's coverage of the degraded-telemetry
+/// taxonomy (flash-crowd blackout, 5-minute staleness, spike-storm
+/// corruption + actuator denial) — and of the hardened-vs-unguarded
+/// Daedalus ablation those cells carry — rests on their presence.
+#[test]
+fn telemetry_cells_stay_in_the_registry_wide_bitwise_pin() {
+    let reg = ScenarioRegistry::builtin(900, &[3]);
+    for name in [
+        "flink-wordcount-flash-crowd-blackout",
+        "flink-wordcount-diurnal-week-stale5m",
+        "flink-wordcount-sine-spikestorm",
+    ] {
+        let scenario = reg.get(name).unwrap_or_else(|| {
+            panic!("{name} missing: the registry-wide pin lost its telemetry-fault coverage")
+        });
+        let exp = scenario.to_experiment().unwrap();
+        assert!(
+            !exp.telemetry.is_empty(),
+            "{name}: telemetry chaos cell carries no telemetry faults"
+        );
+        assert!(
+            exp.approaches.iter().any(|a| a.label() == "daedalus-unguarded"),
+            "{name}: telemetry chaos cell lost its unguarded ablation arm"
+        );
+    }
+}
+
+/// Every telemetry fault class, with the hardened Daedalus *and* its
+/// unguarded ablation in the loop, on a fused and a staged cell: the
+/// harness folds telemetry boundaries into the quiet-span horizon as
+/// advisory bounds and steps densely while a read fault is active, and
+/// the default `decide_is_noop_over` refuses spans over degraded ranges —
+/// so EventDriven must equal PerTick bitwise even while guards engage,
+/// hold plans, and cool down mid-run.
+#[test]
+fn event_driven_matches_per_tick_under_every_telemetry_fault_class() {
+    use daedalus::autoscaler::DaedalusConfig;
+    use daedalus::dsp::{
+        CorruptionKind, SeriesPattern, TelemetryFaultEvent, TelemetryFaultTimeline,
+    };
+    use daedalus::experiments::Approach;
+
+    let classes: Vec<(&str, TelemetryFaultTimeline)> = vec![
+        (
+            "metric-dropout",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricDropout {
+                from: 250,
+                to: 500,
+            }]),
+        ),
+        (
+            "metric-staleness",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricStaleness {
+                from: 250,
+                to: 500,
+                delay: 120,
+            }]),
+        ),
+        (
+            "metric-corruption",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricCorruption {
+                from: 250,
+                to: 500,
+                pattern: SeriesPattern::WorkerSeries("worker_cpu"),
+                kind: CorruptionKind::Nan,
+                seed: 0x0BAD,
+            }]),
+        ),
+        (
+            "actuator-fault",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::ActuatorFault {
+                from: 250,
+                to: 500,
+            }]),
+        ),
+    ];
+    let approaches = [
+        Approach::Daedalus(DaedalusConfig::default()),
+        Approach::Daedalus(DaedalusConfig {
+            hardened: false,
+            ..DaedalusConfig::default()
+        }),
+    ];
+    let reg = ScenarioRegistry::builtin(900, &[3]);
+    for cell in ["flink-wordcount-sine", "flink-wordcount-bottleneck-shift"] {
+        let scenario = reg.get(cell).expect("pinned cell registered");
+        for (tag, tl) in &classes {
+            for approach in &approaches {
+                let run = |mode: EngineMode| {
+                    let mut exp = scenario.to_experiment().unwrap();
+                    exp.engine_mode = mode;
+                    exp.telemetry = tl.clone();
+                    exp.run_single_traced(approach, 3, scenario.workload(3), 60)
+                };
+                let (ra, ta) = run(EngineMode::PerTick);
+                let (rb, tb) = run(EngineMode::EventDriven);
+                let unit = format!("{cell}/{}/{tag}", approach.label());
+                assert_eq!(ta.digest(), tb.digest(), "trace digest drift for {unit}");
+                assert_eq!(ta.points, tb.points, "trace points drift for {unit}");
+                assert_eq!(
+                    ra.worker_seconds.to_bits(),
+                    rb.worker_seconds.to_bits(),
+                    "worker-seconds drift for {unit}"
+                );
+                assert_eq!(ra.latencies, rb.latencies, "latency ECDF drift for {unit}");
+                assert_eq!(
+                    ra.parallelism_series, rb.parallelism_series,
+                    "parallelism-series drift for {unit}"
+                );
+                assert_eq!(ra.rescales, rb.rescales, "rescale-count drift for {unit}");
+                assert_eq!(
+                    ra.dropped_rescales, rb.dropped_rescales,
+                    "dropped-rescale drift for {unit}"
+                );
+            }
+        }
+    }
+}
+
 /// Randomized-horizon fuzz for `advance_quiet`: correctness must never
 /// depend on the caller's horizon choice. Split `[0, duration)` into
 /// random sub-ranges — empty and single-tick ranges included — and

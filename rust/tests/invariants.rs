@@ -13,8 +13,8 @@
 //! 5. Queue mass equals backlog per partition (`check_invariants`).
 
 use daedalus::dsp::{
-    EngineProfile, FaultEvent, FaultTimeline, MergePolicy, QueuePolicy, SimConfig, Simulation,
-    StageModel,
+    CorruptionKind, EngineProfile, FaultEvent, FaultTimeline, MergePolicy, QueuePolicy,
+    SeriesPattern, SimConfig, Simulation, StageModel, TelemetryFaultEvent, TelemetryFaultTimeline,
 };
 use daedalus::experiments::ScenarioRegistry;
 use daedalus::jobs::{JobProfile, Topology};
@@ -568,6 +568,168 @@ fn conservation_and_mode_agreement_under_every_typed_fault() {
                 assert!(per_tick.down_ticks() > 0, "{what}: no downtime observed");
             } else {
                 assert_eq!(per_tick.restart_retries(), 0, "{what}: spurious retries");
+            }
+            assert!(
+                per_tick.latencies().total_weight() > 0.0,
+                "{what}: no tuples processed"
+            );
+        }
+    }
+}
+
+/// Every telemetry fault class, on both stage models, driven per-tick and
+/// through `advance_quiet`: telemetry faults live entirely on the
+/// autoscaler-facing read path (the [`daedalus::dsp::TelemetryLens`]) and
+/// the rescale API, so the two drivers must stay *bitwise* identical —
+/// engine bookkeeping is untouched by construction — and flow must stay
+/// conserved. A mid-run rescale request inside each fault window
+/// exercises the actuator-denial accounting identically under both
+/// drivers: `ActuatorFault` denies it (counted in `dropped_rescales`,
+/// nothing logged), every read-path class lets it through.
+#[test]
+fn conservation_and_mode_agreement_under_every_telemetry_fault() {
+    let timelines: Vec<(&str, TelemetryFaultTimeline)> = vec![
+        (
+            "metric-dropout",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricDropout {
+                from: 200,
+                to: 400,
+            }]),
+        ),
+        (
+            "metric-staleness",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricStaleness {
+                from: 200,
+                to: 400,
+                delay: 120,
+            }]),
+        ),
+        (
+            "corruption-spike",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricCorruption {
+                from: 200,
+                to: 400,
+                pattern: SeriesPattern::WorkerSeries("worker_throughput"),
+                kind: CorruptionKind::Spike { factor: 6.0 },
+                seed: 0x5EED,
+            }]),
+        ),
+        (
+            "corruption-freeze",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricCorruption {
+                from: 200,
+                to: 400,
+                pattern: SeriesPattern::WorkerSeries("worker_cpu"),
+                kind: CorruptionKind::Freeze,
+                seed: 0x0F0F,
+            }]),
+        ),
+        (
+            "corruption-nan",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricCorruption {
+                from: 200,
+                to: 400,
+                pattern: SeriesPattern::WorkerSeries("worker_cpu"),
+                kind: CorruptionKind::Nan,
+                seed: 0x0BAD,
+            }]),
+        ),
+        (
+            "actuator-fault",
+            TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::ActuatorFault {
+                from: 250,
+                to: 500,
+            }]),
+        ),
+    ];
+    let duration = 900u64;
+    for (tag, tl) in &timelines {
+        for staged in [false, true] {
+            let build = || {
+                Simulation::new(SimConfig {
+                    partitions: 24,
+                    initial_replicas: if staged { 2 } else { 4 },
+                    seed: 43,
+                    rate_noise: 0.02,
+                    telemetry: tl.clone(),
+                    stage_model: if staged {
+                        StageModel::Staged
+                    } else {
+                        StageModel::Fused
+                    },
+                    ..SimConfig::base(
+                        EngineProfile::flink(),
+                        JobProfile::wordcount(),
+                        ShapeKind::Sine.build(12_000.0, duration, 43),
+                    )
+                })
+            };
+            let request = |sim: &mut Simulation| {
+                if staged {
+                    let v = vec![3usize; sim.n_stages()];
+                    sim.request_rescale_stages(&v);
+                } else {
+                    sim.request_rescale(6);
+                }
+            };
+            let mut per_tick = build();
+            let mut event = build();
+            for t in 0..duration {
+                per_tick.step(t);
+                if t == 299 {
+                    request(&mut per_tick);
+                }
+            }
+            event.advance_quiet(0, 300);
+            request(&mut event);
+            event.advance_quiet(300, duration);
+            let what = format!("{tag} staged={staged}");
+            assert_eq!(per_tick.latencies(), event.latencies(), "{what}: latencies");
+            assert!(per_tick.tsdb() == event.tsdb(), "{what}: tsdb diverged");
+            assert_eq!(
+                per_tick.total_consumed().to_bits(),
+                event.total_consumed().to_bits(),
+                "{what}: consumed"
+            );
+            assert_eq!(
+                per_tick.total_backlog().to_bits(),
+                event.total_backlog().to_bits(),
+                "{what}: backlog"
+            );
+            assert_eq!(
+                per_tick.worker_seconds().to_bits(),
+                event.worker_seconds().to_bits(),
+                "{what}: worker-seconds"
+            );
+            assert_eq!(per_tick.rescale_log, event.rescale_log, "{what}: rescale log");
+            assert_eq!(
+                per_tick.dropped_rescales(),
+                event.dropped_rescales(),
+                "{what}: dropped rescales"
+            );
+
+            // Flow conservation with the fault plane active.
+            if staged {
+                let topo = JobProfile::wordcount().topology();
+                assert_operator_conservation(&per_tick, &topo, None);
+            } else {
+                assert_conservation(&per_tick);
+            }
+
+            // Per-class actuation signature: only the dead rescale API
+            // swallows the request.
+            if *tag == "actuator-fault" {
+                assert!(
+                    per_tick.dropped_rescales() >= 1,
+                    "{what}: denial window did not count the request"
+                );
+                assert!(
+                    per_tick.rescale_log.is_empty(),
+                    "{what}: a denied rescale was logged"
+                );
+            } else {
+                assert_eq!(per_tick.dropped_rescales(), 0, "{what}: spurious denial");
+                assert_eq!(per_tick.rescale_log.len(), 1, "{what}: rescale not applied");
             }
             assert!(
                 per_tick.latencies().total_weight() > 0.0,

@@ -278,6 +278,109 @@ fn prop_engine_conservation_under_random_rescales() {
     }
 }
 
+/// Property: every autoscaler fed an empty or all-None metric window — a
+/// fresh store with no samples, or a populated store hidden behind a
+/// whole-horizon dropout lens — holds (returns no plan) at every tick of
+/// a warm-up-clearing sweep, on the fused and the staged view, without
+/// panicking. This is the shared [`daedalus::autoscaler::guard`]
+/// contract: missing inputs degrade to "do nothing", never to a garbage
+/// plan or a crash. The unguarded Daedalus ablation is included: even
+/// without the degraded-telemetry hold, an all-None window must read as
+/// "no workers observed", not as zeros to plan on.
+#[test]
+fn prop_every_autoscaler_holds_on_empty_or_all_none_window() {
+    use daedalus::autoscaler::phoebe::profile_job;
+    use daedalus::autoscaler::{
+        Autoscaler, Daedalus, Ds2, Ds2Config, Hpa, HpaConfig, Phoebe, PhoebeConfig, Static,
+    };
+    use daedalus::dsp::engine::SimView;
+    use daedalus::dsp::{EngineProfile, TelemetryFaultEvent, TelemetryFaultTimeline, TelemetryLens};
+    use daedalus::jobs::JobProfile;
+    use daedalus::metrics::Tsdb;
+    use daedalus::runtime::ComputeBackend;
+
+    let parallelism = 4usize;
+    let max_replicas = 12usize;
+    let stages = [parallelism; 3];
+
+    // A populated store whose every sample sits inside a whole-horizon
+    // dropout window: reads resolve None exactly like the fresh store's.
+    let mut populated = Tsdb::new();
+    for t in 0..600u64 {
+        populated.record_global("workload_rate", t, 15_000.0);
+        populated.record_global("consumer_lag", t, 0.0);
+        for w in 0..parallelism {
+            populated.record_worker("worker_cpu", w, t, 0.7);
+            populated.record_worker("worker_throughput", w, t, 4_000.0);
+        }
+    }
+    let blackout = TelemetryFaultTimeline::new(vec![TelemetryFaultEvent::MetricDropout {
+        from: 0,
+        to: u64::MAX,
+    }]);
+    let clean = TelemetryFaultTimeline::default();
+    let empty = Tsdb::new();
+
+    let build_scalers = || -> Vec<Box<dyn Autoscaler>> {
+        let profiled = profile_job(
+            &EngineProfile::flink(),
+            &JobProfile::wordcount(),
+            &[2, 4, 8],
+            max_replicas,
+            0x9F0E,
+        );
+        vec![
+            Box::new(Daedalus::new(
+                daedalus::autoscaler::DaedalusConfig::default(),
+                ComputeBackend::native(),
+            )),
+            Box::new(Daedalus::new(
+                daedalus::autoscaler::DaedalusConfig {
+                    hardened: false,
+                    ..daedalus::autoscaler::DaedalusConfig::default()
+                },
+                ComputeBackend::native(),
+            )),
+            Box::new(Hpa::new(HpaConfig::at_target(0.8, max_replicas))),
+            Box::new(Ds2::new(Ds2Config::defaults(max_replicas))),
+            Box::new(Ds2::job_level(Ds2Config::defaults(max_replicas))),
+            Box::new(Phoebe::new(
+                PhoebeConfig::default(),
+                profiled.models,
+                ComputeBackend::native(),
+            )),
+            Box::new(Static::new(parallelism)),
+        ]
+    };
+
+    for (label, db, tl) in [
+        ("fresh-store", &empty, &clean),
+        ("dropout-blackout", &populated, &blackout),
+    ] {
+        for staged in [false, true] {
+            for mut scaler in build_scalers() {
+                for now in 0..600u64 {
+                    let view = SimView {
+                        now,
+                        tsdb: TelemetryLens::new(db, tl, now),
+                        parallelism,
+                        ready: true,
+                        max_replicas,
+                        stage_parallelism: if staged { &stages } else { &[] },
+                        dropped_rescales: 0,
+                    };
+                    let plan = scaler.decide_plan(&view);
+                    assert!(
+                        plan.is_none(),
+                        "{label}/staged={staged}/{}/t={now}: planned {plan:?}",
+                        scaler.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Property: Welford fold order-independence (statistics are permutation
 /// invariant up to floating-point tolerance).
 #[test]
