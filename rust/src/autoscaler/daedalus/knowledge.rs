@@ -47,6 +47,17 @@ pub struct Knowledge {
     /// `(stage, replicas) → stage input capacity` (same
     /// observed-over-predicted rule, per operator).
     pub stage_capacity: HashMap<(usize, usize), f64>,
+    /// Config-keyed extension of the per-stage ledger (ISSUE 10):
+    /// `(stage, replicas, config fingerprint) → running capacity stats`.
+    /// The fingerprint is `RuntimeConfig::fingerprint()` — a quantized key,
+    /// so nearby configs share a cell. Written unconditionally (behind the
+    /// same [`Self::capacity_quarantined`] gate as the legacy ledger) but
+    /// only *read* by config-aware planners (`use_config_ledger`), keeping
+    /// scale-out-only Daedalus bit-identical.
+    pub stage_config_capacity: HashMap<(usize, usize, u64), Welford>,
+    /// Fingerprint of the runtime config the current observations are
+    /// running under (updated by the manager; 0 until first set).
+    pub active_config_fingerprint: u64,
     /// Most recent forecast, for the next loop's WAPE check.
     pub last_forecast: Option<IssuedForecast>,
     /// Consecutive poor forecasts (≥ threshold triggers retrain).
@@ -100,6 +111,8 @@ impl Knowledge {
             capacity_state: CapacityState::zeros(meta.max_workers),
             seen_capacity: HashMap::new(),
             stage_capacity: HashMap::new(),
+            stage_config_capacity: HashMap::new(),
+            active_config_fingerprint: 0,
             last_forecast: None,
             bad_forecast_streak: 0,
             retrain_count: 0,
@@ -182,6 +195,30 @@ impl Knowledge {
     pub fn capacity_quarantined(&self) -> bool {
         self.straggler_suspect() || self.telemetry_suspect
     }
+
+    /// Fold a per-stage capacity observation into the config-keyed ledger
+    /// under the active fingerprint. Shares the quarantine gate with the
+    /// legacy `(stage, replicas)` ledger: suspect windows are never
+    /// remembered as the capacity of a healthy deployment under *any*
+    /// config.
+    pub fn observe_config_capacity(&mut self, stage: usize, replicas: usize, capacity: f64) {
+        if self.capacity_quarantined() {
+            return;
+        }
+        self.stage_config_capacity
+            .entry((stage, replicas, self.active_config_fingerprint))
+            .or_default()
+            .push_scalar(capacity);
+    }
+
+    /// Mean observed capacity of `(stage, replicas)` under the active
+    /// config fingerprint, if any observation exists.
+    pub fn config_capacity(&self, stage: usize, replicas: usize) -> Option<f64> {
+        self.stage_config_capacity
+            .get(&(stage, replicas, self.active_config_fingerprint))
+            .filter(|w| w.count >= 1.0)
+            .map(|w| w.mean_x)
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +246,28 @@ mod tests {
         }
         assert!((k.downtime_out - 50.0).abs() < 1.0, "{}", k.downtime_out);
         assert_eq!(k.downtime_in, 15.0); // untouched
+    }
+
+    #[test]
+    fn config_ledger_keys_by_active_fingerprint_and_respects_quarantine() {
+        let mut k = knowledge();
+        k.active_config_fingerprint = 7;
+        k.observe_config_capacity(1, 4, 1000.0);
+        k.observe_config_capacity(1, 4, 1100.0);
+        assert_eq!(k.config_capacity(1, 4), Some(1050.0));
+        // A different active fingerprint sees a different (empty) cell.
+        k.active_config_fingerprint = 9;
+        assert_eq!(k.config_capacity(1, 4), None);
+        // Quarantined windows never reach the ledger.
+        k.set_telemetry_suspect(true);
+        k.observe_config_capacity(1, 4, 9999.0);
+        assert_eq!(k.config_capacity(1, 4), None);
+        k.set_telemetry_suspect(false);
+        k.observe_config_capacity(1, 4, 2000.0);
+        assert_eq!(k.config_capacity(1, 4), Some(2000.0));
+        // The fingerprint-7 cell is untouched throughout.
+        k.active_config_fingerprint = 7;
+        assert_eq!(k.config_capacity(1, 4), Some(1050.0));
     }
 
     #[test]

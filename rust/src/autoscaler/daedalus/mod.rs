@@ -90,6 +90,18 @@ pub struct DaedalusConfig {
     /// `false` is the unguarded ablation: the exact pre-hardening manager,
     /// reading whatever the (possibly faulted) lens serves.
     pub hardened: bool,
+    /// Read capacity from the config-keyed `(stage, replicas, fingerprint)`
+    /// ledger when a cell exists (ISSUE 10). Off for the paper's Daedalus —
+    /// the ledger is still *written* (so a later config-aware planner can
+    /// warm-start from it), but plans stay bit-identical to the
+    /// config-agnostic manager.
+    pub use_config_ledger: bool,
+    /// Checkpoint interval the staged plan phase assumes for the
+    /// replay-backlog worst case. [`plan::CHECKPOINT_INTERVAL`] (the job's
+    /// configured 10 s) for the fixed-config manager; config-aware wrappers
+    /// keep this in sync with the *active* [`crate::dsp::RuntimeConfig`] so
+    /// the recovery constraint prices replay at its true size.
+    pub plan_checkpoint_interval: u64,
 }
 
 impl Default for DaedalusConfig {
@@ -111,6 +123,8 @@ impl Default for DaedalusConfig {
             skew_aware: true,
             use_lag_guard: true,
             hardened: true,
+            use_config_ledger: false,
+            plan_checkpoint_interval: plan::CHECKPOINT_INTERVAL,
         }
     }
 }
@@ -166,6 +180,22 @@ impl Daedalus {
     /// Access to the knowledge base (reports, tests).
     pub fn knowledge(&self) -> &Knowledge {
         &self.knowledge
+    }
+
+    /// Mutable knowledge access for sibling-module unit tests.
+    #[cfg(test)]
+    pub(crate) fn knowledge_mut(&mut self) -> &mut Knowledge {
+        &mut self.knowledge
+    }
+
+    /// Tell the knowledge base which runtime config the deployment is
+    /// currently running under: subsequent capacity observations land in
+    /// (and config-aware reads come from) the matching
+    /// `(stage, replicas, fingerprint)` cells. Called by config-aware
+    /// wrappers (demeter) whenever a reconfigure is applied; the
+    /// fixed-config manager never calls it, leaving the fingerprint at 0.
+    pub fn set_active_config_fingerprint(&mut self, fingerprint: u64) {
+        self.knowledge.active_config_fingerprint = fingerprint;
     }
 
     /// Per-second background threads plus the MAPE-K loop gates, shared by
@@ -365,6 +395,7 @@ impl Autoscaler for Daedalus {
             &mut self.knowledge,
             &self.cfg,
             view.max_replicas,
+            self.cfg.plan_checkpoint_interval,
         )?;
         if self.cfg.hardened {
             // Per-stage step clamp during the post-hold cooldown; a stage

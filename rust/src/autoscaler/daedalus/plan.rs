@@ -28,7 +28,11 @@ use super::recovery::predict_recovery_time;
 use super::DaedalusConfig;
 
 /// Checkpoint interval assumed for replay-backlog worst case (§3.4). The
-/// paper uses the job's configured 10 s interval.
+/// paper uses the job's configured 10 s interval; scale-out-only Daedalus
+/// plans with this constant, while config-aware planners (demeter) pass
+/// their *actual* interval into [`plan_stage_scale_out`] — a shorter
+/// interval genuinely shrinks the replay backlog, so the recovery
+/// constraint binds later and over-provisions less.
 pub const CHECKPOINT_INTERVAL: u64 = 10;
 
 fn max_until(values: &[f64], secs: usize) -> f64 {
@@ -127,6 +131,11 @@ pub struct StagePlanDecision {
 /// consumer-lag guard blocks net scale-ins while the pipeline is behind.
 /// Also folds this iteration's per-stage capacity observations into the
 /// knowledge ledger (the monitor/knowledge half of the staged loop).
+///
+/// `checkpoint_interval` is the interval the replay-backlog worst case is
+/// computed with: pass [`CHECKPOINT_INTERVAL`] for the paper's fixed-config
+/// Daedalus, or the active [`crate::dsp::RuntimeConfig`] interval for
+/// config-aware planners.
 pub fn plan_stage_scale_out(
     _now: Timestamp,
     data: &MonitorData,
@@ -134,6 +143,7 @@ pub fn plan_stage_scale_out(
     knowledge: &mut Knowledge,
     cfg: &DaedalusConfig,
     max_scaleout: usize,
+    checkpoint_interval: u64,
 ) -> Option<StagePlanDecision> {
     let n_stages = data.stages.len();
     if n_stages == 0 || data.stage_parallelism.len() != n_stages {
@@ -160,6 +170,11 @@ pub fn plan_stage_scale_out(
                 .stage_capacity
                 .insert((snap.stage, n_s), cap_rep * n_s as f64);
         }
+        // Config-keyed twin ledger (ISSUE 10): same observation, same
+        // quarantine gate (inside the method), keyed additionally by the
+        // active config fingerprint. Written for every planner; read only
+        // when `use_config_ledger` is set.
+        knowledge.observe_config_capacity(snap.stage, n_s, cap_rep * n_s as f64);
         per_replica.push(cap_rep);
     }
     // Cumulative observed selectivity: stage s's input per source tuple.
@@ -174,6 +189,15 @@ pub fn plan_stage_scale_out(
         cumsel[s] = cumsel[s - 1] * ratio;
     }
     let cap_at = |knowledge: &Knowledge, s: usize, n: usize| -> f64 {
+        // Config-aware planners prefer a capacity observed under the
+        // *active* runtime config over the config-agnostic ledger: the
+        // same `(stage, n)` can serve measurably different throughput
+        // under different queue bounds / checkpoint intervals.
+        if cfg.use_config_ledger {
+            if let Some(c) = knowledge.config_capacity(s, n) {
+                return c;
+            }
+        }
         match knowledge.stage_capacity.get(&(s, n)) {
             Some(c) => *c,
             None => per_replica[s] * n as f64,
@@ -221,7 +245,7 @@ pub fn plan_stage_scale_out(
             let (c_src, bottleneck) = pipeline_cap(knowledge, &targets);
             let tgt_total: usize = targets.iter().sum();
             let downtime = knowledge.anticipated_downtime(cur_total, tgt_total);
-            let rt = predict_recovery_time(c_src, recent, tsf, CHECKPOINT_INTERVAL, downtime);
+            let rt = predict_recovery_time(c_src, recent, tsf, checkpoint_interval, downtime);
             if rt <= cfg.recovery_target || targets[bottleneck] >= max_scaleout {
                 predicted = Some(rt);
                 break;
@@ -236,7 +260,7 @@ pub fn plan_stage_scale_out(
             c_src,
             recent,
             tsf,
-            CHECKPOINT_INTERVAL,
+            checkpoint_interval,
             downtime,
         ));
     }
@@ -461,6 +485,7 @@ mod tests {
             &mut k,
             &DaedalusConfig::default(),
             12,
+            CHECKPOINT_INTERVAL,
         )
         .expect("plan");
         // Stage 0: 20k/replica for 10k → 1. Stage 1: 6.25k/replica for
@@ -486,6 +511,7 @@ mod tests {
             &mut k,
             &DaedalusConfig::default(),
             12,
+            CHECKPOINT_INTERVAL,
         )
         .expect("plan");
         assert_eq!(held.targets, vec![2, 2, 2], "lag guard must hold the current vector");
@@ -501,6 +527,7 @@ mod tests {
             &mut k2,
             &DaedalusConfig::default(),
             12,
+            CHECKPOINT_INTERVAL,
         )
         .expect("plan");
         assert!(
@@ -523,6 +550,7 @@ mod tests {
             &mut k,
             &DaedalusConfig::default(),
             12,
+            CHECKPOINT_INTERVAL,
         )
         .unwrap();
         let tight = plan_stage_scale_out(
@@ -532,6 +560,7 @@ mod tests {
             &mut k,
             &cfg,
             12,
+            CHECKPOINT_INTERVAL,
         )
         .unwrap();
         assert!(
@@ -541,6 +570,171 @@ mod tests {
             relaxed.targets
         );
         assert!(tight.predicted_recovery.unwrap() <= 60.0 || tight.targets.contains(&12));
+    }
+
+    #[test]
+    fn stage_plan_refuses_empty_or_mismatched_stage_data() {
+        // No stage snapshots at all → no plan (the staged loop has nothing
+        // to observe); likewise a parallelism vector that doesn't line up.
+        let mut k = knowledge();
+        let mut d = staged_data(10_000.0, 0.0);
+        d.stages.clear();
+        d.stage_parallelism.clear();
+        assert!(plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k,
+            &DaedalusConfig::default(),
+            12,
+            CHECKPOINT_INTERVAL,
+        )
+        .is_none());
+        let mut d2 = staged_data(10_000.0, 0.0);
+        d2.stage_parallelism.pop();
+        assert!(plan_stage_scale_out(
+            1_000,
+            &d2,
+            &fc(vec![10_000.0; 900]),
+            &mut k,
+            &DaedalusConfig::default(),
+            12,
+            CHECKPOINT_INTERVAL,
+        )
+        .is_none());
+        assert!(k.stage_capacity.is_empty(), "refused plans must not write the ledger");
+    }
+
+    #[test]
+    fn stage_plan_with_empty_ledger_plans_from_fresh_estimates() {
+        // An empty (stage, n) ledger — first loop of a run — must still
+        // produce the minimal vector, purely from the in-loop per-replica
+        // estimates, and must seed the ledger as a side effect.
+        let mut k = knowledge();
+        assert!(k.stage_capacity.is_empty());
+        let d = staged_data(10_000.0, 0.0);
+        let decision = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k,
+            &DaedalusConfig::default(),
+            12,
+            CHECKPOINT_INTERVAL,
+        )
+        .expect("plan");
+        assert_eq!(decision.targets, vec![1, 2, 3]);
+        assert_eq!(k.stage_capacity.len(), 3);
+        assert_eq!(k.stage_config_capacity.len(), 3);
+    }
+
+    #[test]
+    fn stage_plan_with_all_cells_quarantined_never_persists() {
+        // Every (stage, n) observation this window is suspect: planning
+        // still works from the fresh estimates, but both ledgers stay
+        // empty — a degraded window must never be remembered as healthy
+        // capacity under any config.
+        let mut k = knowledge();
+        k.set_telemetry_suspect(true);
+        let d = staged_data(10_000.0, 0.0);
+        let decision = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k,
+            &DaedalusConfig::default(),
+            12,
+            CHECKPOINT_INTERVAL,
+        )
+        .expect("plan");
+        assert_eq!(decision.targets, vec![1, 2, 3], "plan still uses fresh estimates");
+        assert!(k.stage_capacity.is_empty());
+        assert!(k.stage_config_capacity.is_empty());
+        assert_eq!(k.telemetry_quarantined_windows, 1);
+    }
+
+    #[test]
+    fn shorter_checkpoint_interval_relaxes_the_recovery_constraint() {
+        // The demeter economics: with a binding recovery target, a shorter
+        // checkpoint interval means less worst-case replay, so the
+        // constraint stops growing the bottleneck earlier — never more
+        // replicas, and strictly fewer when the constraint binds.
+        let mut cfg = DaedalusConfig::default();
+        cfg.recovery_target = 45.0;
+        let d = staged_data(10_000.0, 0.0);
+        let mut k_long = knowledge();
+        let long = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k_long,
+            &cfg,
+            12,
+            30,
+        )
+        .expect("plan");
+        let mut k_short = knowledge();
+        let short = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut k_short,
+            &cfg,
+            12,
+            5,
+        )
+        .expect("plan");
+        let (n_long, n_short): (usize, usize) =
+            (long.targets.iter().sum(), short.targets.iter().sum());
+        // 30 s of replay vs 5 s of replay at a 45 s target: the binding
+        // constraint needs ~40k/s of spare capacity vs ~23k/s, several
+        // replicas apart.
+        assert!(n_short < n_long, "short {short:?} vs long {long:?}");
+        assert!(short.predicted_recovery.unwrap() <= cfg.recovery_target);
+        assert!(long.predicted_recovery.unwrap() <= cfg.recovery_target);
+    }
+
+    #[test]
+    fn config_ledger_overrides_capacity_when_enabled() {
+        // With `use_config_ledger`, a capacity observed under the active
+        // fingerprint wins over the config-agnostic ledger; without it the
+        // same knowledge plans exactly as before.
+        let mut base = knowledge();
+        let d = staged_data(10_000.0, 0.0);
+        // Seed both ledgers from one clean window.
+        plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut base,
+            &DaedalusConfig::default(),
+            12,
+            CHECKPOINT_INTERVAL,
+        )
+        .expect("plan");
+        // Under a *different* fingerprint, stage 1's capacity at n=2 is
+        // remembered as much higher — enough to cover the demand with 2.
+        base.active_config_fingerprint = 77;
+        base.stage_config_capacity
+            .insert((2, 2, 77), {
+                let mut w = crate::stats::Welford::new();
+                w.push_scalar(40_000.0);
+                w
+            });
+        let mut cfg = DaedalusConfig::default();
+        cfg.use_config_ledger = true;
+        let aware = plan_stage_scale_out(
+            1_000,
+            &d,
+            &fc(vec![10_000.0; 900]),
+            &mut base,
+            &cfg,
+            12,
+            CHECKPOINT_INTERVAL,
+        )
+        .expect("plan");
+        // Stage 2 (demand 30k) is covered by the remembered 40k at n=2.
+        assert_eq!(aware.targets[2], 2, "config cell must override: {aware:?}");
     }
 
     #[test]

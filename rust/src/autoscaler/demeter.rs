@@ -1,0 +1,378 @@
+//! Demeter — Daedalus plus runtime-configuration co-optimization.
+//!
+//! Demeter (arXiv 2403.02129; PAPERS.md) shows that tuning *configurations*
+//! together with parallelism under dynamic load beats scale-out-only
+//! autoscaling. This manager wraps the full Daedalus MAPE-K loop and, on
+//! every planning iteration, additionally proposes a
+//! [`RuntimeConfig`](crate::dsp::RuntimeConfig) for the engine:
+//!
+//! * **Checkpoint interval** — long on stable plateaus (less checkpoint
+//!   overhead and replay risk is low), short ahead of forecast surges (a
+//!   surge is when rescales happen, and replay backlog is one interval of
+//!   tuples). The long interval is capped at the monitor's 15 s lag
+//!   de-sawtooth window: a longer interval would inflate the committed-
+//!   offset lag floor and block legitimate scale-ins.
+//! * **Queue bound** — tightened when the observed p95 latency drifts
+//!   toward the SLO (queued tuples are latency; a tighter bound trades
+//!   source backlog, which is replayable and cheap, for in-pipeline
+//!   residence time).
+//!
+//! The planner half of the co-optimization: the wrapped Daedalus prices the
+//! recovery-time constraint with the *active* checkpoint interval
+//! (`DaedalusConfig::plan_checkpoint_interval`) instead of the fixed 10 s,
+//! so a pre-surge short interval genuinely shrinks worst-case replay and
+//! the constraint stops over-provisioning for it; capacity observations
+//! land in the `(stage, replicas, config-fingerprint)` knowledge ledger
+//! (`DaedalusConfig::use_config_ledger`), so capacities measured under one
+//! config are never mistaken for another's.
+//!
+//! Proposals are handed to the harness via
+//! [`Autoscaler::decide_reconfigure`] and staged with
+//! `Simulation::request_reconfigure`; they take effect at the next
+//! consistent cut. Everything here is a pure function of the dense TSDB
+//! and the wrapped manager's state, both of which are bitwise identical
+//! across engine modes — so demeter keeps the EventDriven ≡ PerTick
+//! contract with no extra machinery beyond the inherited gates.
+
+use crate::clock::Timestamp;
+use crate::dsp::engine::{RuntimeConfig, ScalePlan, SimView};
+use crate::metrics::SeriesId;
+use crate::runtime::ComputeBackend;
+
+use super::daedalus::{Daedalus, DaedalusConfig};
+use super::Autoscaler;
+
+/// Tunables for the configuration half of the co-optimization.
+#[derive(Debug, Clone)]
+pub struct DemeterConfig {
+    /// Checkpoint interval ahead of a forecast surge (s).
+    pub short_interval: u64,
+    /// Checkpoint interval in the indeterminate regime (s) — the engine
+    /// profiles' configured default.
+    pub default_interval: u64,
+    /// Checkpoint interval on a stable plateau (s). Capped at 15: the
+    /// monitor de-sawtooths committed-offset lag with a 15 s min-window,
+    /// so a longer interval would read as permanent backlog.
+    pub long_interval: u64,
+    /// Near-horizon forecast max / current rate above this ⇒ surge.
+    pub surge_ratio: f64,
+    /// Forecast spread (max−min over the plateau window, relative to the
+    /// current rate) below this ⇒ plateau.
+    pub plateau_band: f64,
+    /// Seconds of forecast considered the "near horizon" for surges.
+    pub surge_horizon: usize,
+    /// Seconds of forecast that must be flat for a plateau call.
+    pub plateau_horizon: usize,
+    /// Inter-stage queue bound while p95 drifts toward the SLO (s of
+    /// downstream service time; the engine default is 5.0).
+    pub tight_backpressure_secs: f64,
+    /// p95 above this fraction of the SLO bound ⇒ tighten the bound.
+    pub p95_slo_fraction: f64,
+    /// The cell's p95 SLO bound (ms).
+    pub slo_ms: f64,
+    /// The engine's boot-time runtime config (what the deployment runs
+    /// under until the first reconfigure) — interval from the engine
+    /// profile, default backpressure, no per-stage overrides.
+    pub base: RuntimeConfig,
+}
+
+impl Default for DemeterConfig {
+    fn default() -> Self {
+        Self {
+            short_interval: 5,
+            default_interval: 10,
+            long_interval: 15,
+            surge_ratio: 1.15,
+            plateau_band: 0.05,
+            surge_horizon: 180,
+            plateau_horizon: 300,
+            tight_backpressure_secs: 2.0,
+            p95_slo_fraction: 0.7,
+            slo_ms: crate::experiments::harness::DEFAULT_SLO_MS,
+            base: RuntimeConfig {
+                checkpoint_interval: 10,
+                backpressure_secs: 5.0,
+                queue_bound_secs: Vec::new(),
+            },
+        }
+    }
+}
+
+/// The multi-configuration manager: Daedalus for scale-out, plus a
+/// config proposal per planning iteration.
+pub struct Demeter {
+    inner: Daedalus,
+    dcfg: DemeterConfig,
+    /// The config the deployment is (or is about to be) running under —
+    /// demeter's own bookkeeping mirror of the engine's staged state.
+    active: RuntimeConfig,
+    /// Proposal computed by this tick's `decide_plan`, consumed by the
+    /// same tick's `decide_reconfigure`.
+    proposal: Option<RuntimeConfig>,
+    /// Diagnostics: how many distinct configs were proposed.
+    pub reconfig_count: usize,
+}
+
+impl Demeter {
+    /// Demeter on the given backend. The wrapped Daedalus runs with the
+    /// config-keyed capacity ledger enabled and its plan phase pricing
+    /// replay at the active checkpoint interval.
+    pub fn new(mut cfg: DaedalusConfig, dcfg: DemeterConfig, backend: ComputeBackend) -> Self {
+        cfg.use_config_ledger = true;
+        cfg.plan_checkpoint_interval = dcfg.base.checkpoint_interval;
+        let mut inner = Daedalus::new(cfg, backend);
+        inner.set_active_config_fingerprint(dcfg.base.fingerprint());
+        let active = dcfg.base.clone();
+        Self {
+            inner,
+            dcfg,
+            active,
+            proposal: None,
+            reconfig_count: 0,
+        }
+    }
+
+    /// Access to the wrapped manager (reports, tests).
+    pub fn inner(&self) -> &Daedalus {
+        &self.inner
+    }
+
+    /// The config demeter believes the deployment runs under.
+    pub fn active_config(&self) -> &RuntimeConfig {
+        &self.active
+    }
+
+    /// The configuration heuristics: a pure function of the dense TSDB and
+    /// the last issued forecast (both bitwise identical across engine
+    /// modes). Returns the config the deployment *should* run under.
+    fn desired_config(&self, view: &SimView<'_>) -> RuntimeConfig {
+        let now = view.now;
+        let mut cfg = self.dcfg.base.clone();
+
+        // Current rate: last workload sample (the forecaster's anchor).
+        let rate_id = SeriesId::global("workload_rate");
+        let rate = view
+            .tsdb
+            .last_at(&rate_id, now)
+            .map(|(_, v)| v)
+            .unwrap_or(0.0);
+
+        // Checkpoint interval from the forecast shape.
+        cfg.checkpoint_interval = match &self.inner.knowledge().last_forecast {
+            Some(fc) if rate > 1.0 && !fc.values.is_empty() => {
+                let near = &fc.values[..fc.values.len().min(self.dcfg.surge_horizon)];
+                let near_max = near.iter().copied().fold(0.0, f64::max);
+                let plateau = &fc.values[..fc.values.len().min(self.dcfg.plateau_horizon)];
+                let p_max = plateau.iter().copied().fold(f64::MIN, f64::max);
+                let p_min = plateau.iter().copied().fold(f64::MAX, f64::min);
+                // De-sawtoothed lag, as the monitor reads it: min over the
+                // last committed-offset window.
+                let lag_id = SeriesId::global("consumer_lag");
+                let lag = view
+                    .tsdb
+                    .min_over(&lag_id, now.saturating_sub(15), now)
+                    .unwrap_or(0.0);
+                if near_max > self.dcfg.surge_ratio * rate {
+                    // Surge ahead: checkpoint often, replay little.
+                    self.dcfg.short_interval
+                } else if (p_max - p_min) < self.dcfg.plateau_band * rate && lag < rate {
+                    // Flat forecast and caught up: checkpoint rarely.
+                    self.dcfg.long_interval.min(15)
+                } else {
+                    self.dcfg.default_interval
+                }
+            }
+            _ => self.dcfg.default_interval,
+        };
+
+        // Queue bound from p95 drift toward the SLO (1-min average).
+        let p95_id = SeriesId::global("latency_p95_ms");
+        let p95 = view
+            .tsdb
+            .avg_over(&p95_id, now.saturating_sub(59), now)
+            .unwrap_or(0.0);
+        if p95 > self.dcfg.p95_slo_fraction * self.dcfg.slo_ms {
+            cfg.backpressure_secs = self.dcfg.tight_backpressure_secs;
+        }
+        cfg
+    }
+
+    /// Adopt a proposal as the active config: keep the planner's replay
+    /// pricing and the knowledge ledger's fingerprint in sync. The engine
+    /// applies the config at the next consistent cut (≤ one checkpoint
+    /// interval away) — well inside the 60 s monitor windows the capacity
+    /// observations are computed over, so attributing the transition
+    /// window to the new fingerprint is safe.
+    fn adopt(&mut self, config: RuntimeConfig) {
+        self.inner.cfg.plan_checkpoint_interval = config.checkpoint_interval;
+        self.inner.set_active_config_fingerprint(config.fingerprint());
+        self.active = config;
+        self.reconfig_count += 1;
+    }
+}
+
+impl Autoscaler for Demeter {
+    fn name(&self) -> String {
+        "demeter".to_string()
+    }
+
+    fn decide(&mut self, view: &SimView<'_>) -> Option<usize> {
+        self.inner.decide(view)
+    }
+
+    fn decide_plan(&mut self, view: &SimView<'_>) -> Option<ScalePlan> {
+        // Detect a due loop tick the same way the wrapped gate does:
+        // `next_loop` advances exactly when a loop fires.
+        let before = self.inner.next_decision(view.now);
+        let plan = self.inner.decide_plan(view);
+        let loop_fired = self.inner.next_decision(view.now) != before;
+        // Config proposals ride the planning cadence, and never under
+        // degraded telemetry (the same safe-mode hold as the plan phase:
+        // heuristics must not act on corrupt series).
+        if loop_fired && !(self.inner.cfg.hardened && view.tsdb.degraded()) {
+            let desired = self.desired_config(view);
+            if desired != self.active {
+                self.proposal = Some(desired);
+            }
+        }
+        plan
+    }
+
+    fn wants_precheckpoint(&self) -> bool {
+        self.inner.wants_precheckpoint()
+    }
+
+    fn next_decision(&self, now: Timestamp) -> Timestamp {
+        self.inner.next_decision(now)
+    }
+
+    /// Same gate as Daedalus (loop arithmetic + the mandatory degraded-
+    /// range conjunct), plus: never skip over an unconsumed proposal.
+    /// (`decide_reconfigure` runs in the same harness tick that created
+    /// the proposal, so this conjunct is defensive — but cheap.)
+    fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
+        self.proposal.is_none()
+            && !view.tsdb.degraded_over(view.now, until)
+            && until <= self.next_decision(view.now)
+    }
+
+    fn decide_reconfigure(&mut self, view: &SimView<'_>) -> Option<RuntimeConfig> {
+        let _ = view;
+        let config = self.proposal.take()?;
+        self.adopt(config.clone());
+        Some(config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::telemetry::TelemetryLens;
+    use crate::metrics::Tsdb;
+
+    fn view(db: &Tsdb, now: Timestamp) -> SimView<'_> {
+        SimView {
+            now,
+            tsdb: TelemetryLens::transparent(db),
+            parallelism: 4,
+            ready: true,
+            max_replicas: 12,
+            stage_parallelism: &[],
+            dropped_rescales: 0,
+        }
+    }
+
+    fn db_with(rate: f64, lag: f64, p95: f64, upto: Timestamp) -> Tsdb {
+        let mut db = Tsdb::new();
+        for t in 0..=upto {
+            db.record_global("workload_rate", t, rate);
+            db.record_global("consumer_lag", t, lag);
+            db.record_global("latency_p95_ms", t, p95);
+        }
+        db
+    }
+
+    fn demeter_with_forecast(values: Vec<f64>) -> Demeter {
+        let mut d = Demeter::new(
+            DaedalusConfig::default(),
+            DemeterConfig::default(),
+            ComputeBackend::native(),
+        );
+        d.inner.knowledge_mut().last_forecast =
+            Some(crate::autoscaler::daedalus::knowledge::IssuedForecast {
+                issued_at: 200,
+                values,
+                from_model: true,
+            });
+        d
+    }
+
+    #[test]
+    fn surging_forecast_shortens_the_checkpoint_interval() {
+        let db = db_with(10_000.0, 0.0, 100.0, 200);
+        let d = demeter_with_forecast(vec![15_000.0; 900]);
+        let cfg = d.desired_config(&view(&db, 200));
+        assert_eq!(cfg.checkpoint_interval, d.dcfg.short_interval);
+        // Calm p95 keeps the default bound.
+        crate::assert_close!(cfg.backpressure_secs, 5.0, atol = 1e-12);
+    }
+
+    #[test]
+    fn flat_forecast_with_no_lag_lengthens_the_interval() {
+        let db = db_with(10_000.0, 0.0, 100.0, 200);
+        let d = demeter_with_forecast(vec![10_000.0; 900]);
+        let cfg = d.desired_config(&view(&db, 200));
+        assert_eq!(cfg.checkpoint_interval, d.dcfg.long_interval);
+    }
+
+    #[test]
+    fn flat_forecast_while_lagging_keeps_the_default_interval() {
+        // Caught-up is a plateau precondition: a flat forecast with a
+        // standing backlog is a recovery in progress, not a plateau.
+        let db = db_with(10_000.0, 500_000.0, 100.0, 200);
+        let d = demeter_with_forecast(vec![10_000.0; 900]);
+        let cfg = d.desired_config(&view(&db, 200));
+        assert_eq!(cfg.checkpoint_interval, d.dcfg.default_interval);
+    }
+
+    #[test]
+    fn p95_drift_toward_the_slo_tightens_the_queue_bound() {
+        // p95 at 80 % of the 1000 ms SLO → tighten; interval logic is
+        // independent (no forecast → default interval).
+        let db = db_with(10_000.0, 0.0, 800.0, 200);
+        let d = Demeter::new(
+            DaedalusConfig::default(),
+            DemeterConfig::default(),
+            ComputeBackend::native(),
+        );
+        let cfg = d.desired_config(&view(&db, 200));
+        assert_eq!(cfg.checkpoint_interval, d.dcfg.default_interval);
+        crate::assert_close!(
+            cfg.backpressure_secs,
+            d.dcfg.tight_backpressure_secs,
+            atol = 1e-12
+        );
+    }
+
+    #[test]
+    fn adopting_a_config_syncs_planner_and_ledger() {
+        let mut d = Demeter::new(
+            DaedalusConfig::default(),
+            DemeterConfig::default(),
+            ComputeBackend::native(),
+        );
+        let mut cfg = d.dcfg.base.clone();
+        cfg.checkpoint_interval = 5;
+        let fp = cfg.fingerprint();
+        d.proposal = Some(cfg.clone());
+        let db = db_with(10_000.0, 0.0, 100.0, 10);
+        let out = d.decide_reconfigure(&view(&db, 10));
+        assert_eq!(out, Some(cfg.clone()));
+        assert_eq!(d.active_config(), &cfg);
+        assert_eq!(d.inner().cfg.plan_checkpoint_interval, 5);
+        assert_eq!(d.inner().knowledge().active_config_fingerprint, fp);
+        assert_eq!(d.reconfig_count, 1);
+        // Consumed: a second call is a no-op.
+        assert!(d.decide_reconfigure(&view(&db, 11)).is_none());
+    }
+}

@@ -2,6 +2,8 @@
 //! systems it is evaluated against (§4.3).
 //!
 //! * [`daedalus`] — the self-adaptive MAPE-K manager (§3).
+//! * [`demeter`] — Daedalus plus runtime-config co-optimization
+//!   (Demeter-class multi-configuration tuning, PAPERS.md).
 //! * [`hpa`] — Kubernetes Horizontal Pod Autoscaler semantics (§4.3.2).
 //! * [`ds2`] — DS2-style reactive true-rate scaler (related work, §2).
 //! * [`statik`] — fixed scale-out baseline (§4.3.1).
@@ -12,6 +14,7 @@
 //! stop-the-world restarts.
 
 pub mod daedalus;
+pub mod demeter;
 pub mod ds2;
 pub mod guard;
 pub mod hpa;
@@ -19,13 +22,14 @@ pub mod phoebe;
 pub mod statik;
 
 pub use daedalus::{Daedalus, DaedalusConfig};
+pub use demeter::{Demeter, DemeterConfig};
 pub use ds2::{Ds2, Ds2Config};
 pub use hpa::{Hpa, HpaConfig};
 pub use phoebe::{Phoebe, PhoebeConfig};
 pub use statik::Static;
 
 use crate::clock::Timestamp;
-use crate::dsp::engine::{ScalePlan, SimView};
+use crate::dsp::engine::{RuntimeConfig, ScalePlan, SimView};
 
 /// A horizontal autoscaling policy.
 pub trait Autoscaler {
@@ -93,5 +97,19 @@ pub trait Autoscaler {
     /// intersects). Overrides must keep this conjunct.
     fn decide_is_noop_over(&self, view: &SimView<'_>, until: Timestamp) -> bool {
         !view.tsdb.degraded_over(view.now, until) && until <= self.next_decision(view.now)
+    }
+
+    /// Called once per simulated second immediately after
+    /// [`Self::decide_plan`], in both engine modes at the same ticks.
+    /// Returning `Some(config)` asks the harness to stage a
+    /// [`RuntimeConfig`] via `Simulation::request_reconfigure`; it takes
+    /// effect at the next consistent cut. Scale-out-only policies inherit
+    /// the `None` default and never reconfigure. Scalers that override
+    /// this must also make [`Self::decide_is_noop_over`] refuse any span
+    /// over which a reconfigure proposal could fire, or the event-driven
+    /// harness will skip the tick that was supposed to emit it.
+    fn decide_reconfigure(&mut self, view: &SimView<'_>) -> Option<RuntimeConfig> {
+        let _ = view;
+        None
     }
 }

@@ -104,8 +104,89 @@ pub enum ScalePlan {
 }
 
 /// Seconds of effective stage capacity an inter-stage queue may buffer
-/// before backpressure throttles the upstream stage.
+/// before backpressure throttles the upstream stage — the default for
+/// [`RuntimeConfig::backpressure_secs`].
 const BACKPRESSURE_SECS: f64 = 5.0;
+
+/// First-class runtime configuration of a deployment: the engine
+/// tunables an autoscaler may retune while the job runs, through
+/// [`Simulation::request_reconfigure`]. A requested configuration is
+/// *staged* and becomes active at the next consistent cut (the next
+/// completed checkpoint) — never mid-tick — so both engine drivers
+/// apply it at the identical tick and in-flight data is untouched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeConfig {
+    /// Seconds between completed checkpoints (consistent cuts). Shorter
+    /// intervals shrink the exactly-once replay volume after a restart;
+    /// longer intervals commit less often.
+    pub checkpoint_interval: u64,
+    /// Default inter-stage queue bound: seconds of effective downstream
+    /// capacity a queue may buffer before backpressure throttles the
+    /// upstream stage.
+    pub backpressure_secs: f64,
+    /// Per-stage queue-bound overrides (seconds), indexed by the queue's
+    /// owning (downstream) stage. A missing or non-positive entry falls
+    /// back to `backpressure_secs`; stage 0 reads the source partitions
+    /// and has no inter-stage queue, so its entry is ignored.
+    pub queue_bound_secs: Vec<f64>,
+}
+
+impl RuntimeConfig {
+    /// The configuration a fresh deployment starts with: the profile's
+    /// checkpoint interval and the engine's default backpressure bound.
+    /// Bit-identical to the pre-reconfigure engine behavior.
+    pub fn from_profile(profile: &EngineProfile) -> Self {
+        Self {
+            checkpoint_interval: profile.checkpoint_interval,
+            backpressure_secs: BACKPRESSURE_SECS,
+            queue_bound_secs: Vec::new(),
+        }
+    }
+
+    /// Whether every knob is in its valid domain: a positive checkpoint
+    /// interval, a positive finite backpressure bound, finite per-stage
+    /// overrides. Invalid configurations are refused at the request.
+    pub fn is_valid(&self) -> bool {
+        self.checkpoint_interval >= 1
+            && self.backpressure_secs.is_finite()
+            && self.backpressure_secs > 0.0
+            && self.queue_bound_secs.iter().all(|b| b.is_finite())
+    }
+
+    /// The queue bound (seconds of effective downstream capacity) for the
+    /// inter-stage queue owned by `stage`: the per-stage override when one
+    /// is set and positive, else the default `backpressure_secs`.
+    pub fn bound_secs_for(&self, stage: usize) -> f64 {
+        match self.queue_bound_secs.get(stage) {
+            Some(&b) if b > 0.0 => b,
+            _ => self.backpressure_secs,
+        }
+    }
+
+    /// Quantized fingerprint of this configuration — the `config` key of
+    /// the knowledge ledger's `(stage, replicas, config)` cells. Seconds
+    /// knobs are quantized to 1/10 s (FNV-1a over the quantized values),
+    /// so sub-decisecond jitter maps to the same learning cell while any
+    /// materially different configuration gets its own.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut fold = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        let q = |secs: f64| (secs * 10.0).round() as i64 as u64;
+        fold(self.checkpoint_interval);
+        fold(q(self.backpressure_secs));
+        for &b in &self.queue_bound_secs {
+            fold(q(b));
+        }
+        h
+    }
+}
 
 /// Minimum length for the tier-2/tier-3 span fast paths to engage. Spans
 /// shorter than this are cheaper through the per-tick tier-1 closed form
@@ -361,6 +442,18 @@ pub struct RescaleEvent {
     pub failure: bool,
 }
 
+/// A completed runtime reconfiguration for the experiment log: a staged
+/// [`RuntimeConfig`] became active at the consistent cut taken at `t`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigureEvent {
+    /// The tick whose checkpoint (consistent cut) applied the config.
+    pub t: Timestamp,
+    /// The tick at which the reconfigure was requested.
+    pub requested_at: Timestamp,
+    /// The configuration that became active.
+    pub config: RuntimeConfig,
+}
+
 /// Read-only view handed to autoscalers each tick.
 pub struct SimView<'a> {
     /// Current tick.
@@ -453,6 +546,13 @@ pub struct Simulation {
     latencies: Ecdf,
     /// Every restart (rescale or failure), in time order.
     pub rescale_log: Vec<RescaleEvent>,
+    /// Every applied runtime reconfiguration, in time order.
+    pub reconfigure_log: Vec<ReconfigureEvent>,
+    /// Active runtime configuration (checkpoint interval, queue bounds).
+    config: RuntimeConfig,
+    /// Staged configuration awaiting the next consistent cut, tagged
+    /// with its request tick.
+    pending_config: Option<(Timestamp, RuntimeConfig)>,
     failures: Vec<Timestamp>,
     /// Typed fault schedule and the index of the next un-injected event.
     faults: FaultTimeline,
@@ -638,6 +738,7 @@ impl Simulation {
         };
         let mut tsdb = Tsdb::new();
         let handles = Handles::new(&mut tsdb, cfg.max_replicas, n_stages);
+        let runtime_config = RuntimeConfig::from_profile(&cfg.profile);
         Self {
             cluster: Cluster::new(
                 cfg.initial_replicas.clamp(1, cfg.max_replicas),
@@ -657,6 +758,9 @@ impl Simulation {
             worker_seconds: 0.0,
             latencies: Ecdf::new(),
             rescale_log: Vec::new(),
+            reconfigure_log: Vec::new(),
+            config: runtime_config,
+            pending_config: None,
             failures: cfg.failures,
             faults: cfg.faults,
             fault_cursor: 0,
@@ -901,6 +1005,21 @@ impl Simulation {
             st.snapshot_backlog = st.queue_backlog;
         }
         self.last_checkpoint = t;
+        // A staged runtime configuration becomes active exactly here —
+        // at the consistent cut, in both engine drivers (every
+        // checkpoint-completing path funnels through this method). The
+        // config is cluster metadata like parallelism, not part of the
+        // replayed dataflow state: a later rewind restores the cut's
+        // data but keeps the active config, exactly as it keeps the
+        // replica counts.
+        if let Some((requested_at, config)) = self.pending_config.take() {
+            self.reconfigure_log.push(ReconfigureEvent {
+                t,
+                requested_at,
+                config: config.clone(),
+            });
+            self.config = config;
+        }
     }
 
     /// Exactly-once replay: source partitions rewind to the committed
@@ -944,6 +1063,39 @@ impl Simulation {
         if self.cluster.ready() {
             self.complete_checkpoint(self.now);
         }
+    }
+
+    /// Request a runtime reconfiguration. The configuration is staged and
+    /// becomes active at the next consistent cut (the next completed
+    /// checkpoint, inside [`Self::complete_checkpoint`]) — never mid-tick.
+    /// Queue-bound changes therefore apply to live rings without touching
+    /// in-flight data: a shrink clamps the *allowance* of future intake to
+    /// the remaining free space (floored at zero, which throttles the
+    /// upstream stage) and lets the existing occupancy drain through the
+    /// normal serve path. A new request replaces any previously staged
+    /// configuration. Returns `false` (staging nothing) for an invalid
+    /// configuration or a no-op request (the active config re-requested
+    /// with nothing pending); unlike rescales, reconfiguration is pure
+    /// bookkeeping — no restart, no actuator involvement.
+    pub fn request_reconfigure(&mut self, config: RuntimeConfig) -> bool {
+        if !config.is_valid() {
+            return false;
+        }
+        if config == self.config && self.pending_config.is_none() {
+            return false;
+        }
+        self.pending_config = Some((self.now, config));
+        true
+    }
+
+    /// The active runtime configuration.
+    pub fn runtime_config(&self) -> &RuntimeConfig {
+        &self.config
+    }
+
+    /// The staged configuration awaiting the next consistent cut, if any.
+    pub fn pending_reconfigure(&self) -> Option<&RuntimeConfig> {
+        self.pending_config.as_ref().map(|(_, c)| c)
     }
 
     /// Request a rescale to `target` replicas (stop-the-world; §3.4). On
@@ -1374,7 +1526,7 @@ impl Simulation {
                 StageModel::Staged => self.serve_staged(t, rate),
             }
             // 4. Checkpoints complete only while serving.
-            if t - self.last_checkpoint >= self.profile.checkpoint_interval {
+            if t - self.last_checkpoint >= self.config.checkpoint_interval {
                 self.complete_checkpoint(t);
             }
         } else {
@@ -1544,12 +1696,16 @@ impl Simulation {
     /// `x + … + x` bitwise), checkpoint completion, and noisy CPU draws
     /// in the reference's (tick, worker) order.
     fn try_quiet_span(&mut self, t0: Timestamp, until: Timestamp) -> Option<Timestamp> {
+        // A staged reconfigure refuses the span tiers conservatively (the
+        // per-tick path applies it at the cut identically in both modes);
+        // the pending window lasts at most one checkpoint interval.
         if !self.span_integration
             || self.rate_noise != 0.0
             || self.stage_model != StageModel::Fused
             || self.drift.is_some()
             || self.crash_loop.is_some()
             || self.pending_respawn.is_some()
+            || self.pending_config.is_some()
             || !self.cluster.ready()
             || self.partitions.iter().any(|p| p.queue_len() != 0)
         {
@@ -1634,7 +1790,7 @@ impl Simulation {
                     self.tsdb.record_h(self.handles.worker_cpu[w], u, cpu);
                 }
             }
-            if u - self.last_checkpoint >= self.profile.checkpoint_interval {
+            if u - self.last_checkpoint >= self.config.checkpoint_interval {
                 self.complete_checkpoint(u);
             }
             let lag: f64 = self.partitions.iter().map(|p| p.lag()).sum();
@@ -1687,6 +1843,7 @@ impl Simulation {
             || self.stage_model != StageModel::Fused
             || self.crash_loop.is_some()
             || self.pending_respawn.is_some()
+            || self.pending_config.is_some()
             || !self.cluster.ready()
         {
             return None;
@@ -1711,7 +1868,7 @@ impl Simulation {
                 p.produce(u as f64 + 0.5, rate * w);
             }
             self.serve(u, n, rate);
-            if u - self.last_checkpoint >= self.profile.checkpoint_interval {
+            if u - self.last_checkpoint >= self.config.checkpoint_interval {
                 self.complete_checkpoint(u);
             }
             let lag: f64 = self.partitions.iter().map(|p| p.lag()).sum();
@@ -2011,13 +2168,14 @@ impl Simulation {
     }
 
     /// Stage `s`'s backpressure allowance in input tuples — how much it
-    /// may process before the downstream queue (bounded to
-    /// `BACKPRESSURE_SECS` of its effective capacity) would overflow.
-    /// Mirrors the expression in [`Self::serve_staged`].
+    /// may process before the downstream queue (bounded to the active
+    /// [`RuntimeConfig`]'s seconds of its effective capacity) would
+    /// overflow. Mirrors the expression in [`Self::serve_staged`].
     fn stage_allowance(&self, s: usize, sel: f64, eff: &[f64]) -> f64 {
         if s + 1 < self.stages.len() {
-            let free =
-                (BACKPRESSURE_SECS * eff[s + 1] - self.stages[s + 1].queue_backlog).max(0.0);
+            let free = (self.config.bound_secs_for(s + 1) * eff[s + 1]
+                - self.stages[s + 1].queue_backlog)
+                .max(0.0);
             if sel > 1e-12 {
                 free / sel
             } else {
@@ -2032,7 +2190,7 @@ impl Simulation {
     /// lag series (all queues empty after a quiet tick, but the lag fold
     /// runs the same summation as the reference) and worker-seconds.
     fn finish_quiet_tick(&mut self, t: Timestamp) {
-        if t - self.last_checkpoint >= self.profile.checkpoint_interval {
+        if t - self.last_checkpoint >= self.config.checkpoint_interval {
             self.complete_checkpoint(t);
         }
         let lag: f64 = self.partitions.iter().map(|p| p.lag()).sum();
@@ -2247,10 +2405,11 @@ impl Simulation {
             let skew = self.stage_skew_factor(s, n_s);
             let eff_total = eff[s];
             // Backpressure: how many *input* tuples we may process before
-            // the downstream queue (bounded to BACKPRESSURE_SECS of its
-            // effective capacity) would overflow.
+            // the downstream queue (bounded to the active config's seconds
+            // of its effective capacity) would overflow.
             let allowance = if s + 1 < n_stages {
-                let free = (BACKPRESSURE_SECS * eff[s + 1] - self.stages[s + 1].queue_backlog)
+                let free = (self.config.bound_secs_for(s + 1) * eff[s + 1]
+                    - self.stages[s + 1].queue_backlog)
                     .max(0.0);
                 if sel > 1e-12 {
                     free / sel
@@ -2412,6 +2571,20 @@ impl Simulation {
     /// [`Self::next_fault_boundary`].
     pub fn next_telemetry_boundary(&self, t: Timestamp) -> Option<Timestamp> {
         self.telemetry.next_boundary(t)
+    }
+
+    /// Next tick (> `t`) at which a staged [`RuntimeConfig`] will become
+    /// active — the earliest tick whose checkpoint can complete — if a
+    /// reconfigure is pending. The reconfigure span-bounding hook,
+    /// advisory exactly like [`Self::next_fault_boundary`]: both drivers
+    /// apply the pending config inside the same `complete_checkpoint`
+    /// call, so a missed boundary can only shorten a fast-path span (the
+    /// span tiers refuse while a reconfigure is pending), never change
+    /// behavior.
+    pub fn next_reconfigure_boundary(&self, t: Timestamp) -> Option<Timestamp> {
+        self.pending_config.as_ref().map(|_| {
+            (self.last_checkpoint + self.config.checkpoint_interval).max(t + 1)
+        })
     }
 
     /// The configured telemetry fault timeline.
@@ -3344,6 +3517,161 @@ mod tests {
         };
         assert_advance_quiet_agrees(mk(false), mk(false), 900);
         assert_advance_quiet_agrees(mk(true), mk(true), 900);
+    }
+
+    #[test]
+    fn invalid_or_noop_reconfigure_requests_are_refused() {
+        let mut sim = sim_with(8_000.0, 4, 40);
+        run(&mut sim, 20);
+        let active = sim.runtime_config().clone();
+        // Re-requesting the active config with nothing pending: no-op.
+        assert!(!sim.request_reconfigure(active.clone()));
+        assert!(sim.pending_reconfigure().is_none());
+        // Invalid knobs are refused outright.
+        for bad in [
+            RuntimeConfig { checkpoint_interval: 0, ..active.clone() },
+            RuntimeConfig { backpressure_secs: 0.0, ..active.clone() },
+            RuntimeConfig { backpressure_secs: -1.0, ..active.clone() },
+            RuntimeConfig { backpressure_secs: f64::NAN, ..active.clone() },
+            RuntimeConfig { queue_bound_secs: vec![f64::INFINITY], ..active.clone() },
+        ] {
+            assert!(!sim.request_reconfigure(bad));
+            assert!(sim.pending_reconfigure().is_none());
+        }
+        assert_eq!(sim.runtime_config(), &active);
+        assert!(sim.reconfigure_log.is_empty());
+    }
+
+    #[test]
+    fn reconfigure_applies_at_the_next_consistent_cut() {
+        let mut sim = sim_with(8_000.0, 4, 41);
+        run(&mut sim, 92);
+        assert_eq!(sim.next_reconfigure_boundary(92), None);
+        let cfg = RuntimeConfig {
+            checkpoint_interval: 20,
+            ..sim.runtime_config().clone()
+        };
+        assert!(sim.request_reconfigure(cfg.clone()));
+        assert_eq!(sim.pending_reconfigure(), Some(&cfg));
+        // Last cut was at t=90 (interval 10): the staged config becomes
+        // active at the t=100 cut, not before.
+        assert_eq!(sim.next_reconfigure_boundary(92), Some(100));
+        run(&mut sim, 99);
+        assert_eq!(sim.runtime_config().checkpoint_interval, 10);
+        assert!(sim.pending_reconfigure().is_some());
+        run(&mut sim, 100);
+        assert_eq!(sim.runtime_config(), &cfg);
+        assert!(sim.pending_reconfigure().is_none());
+        assert_eq!(
+            sim.reconfigure_log,
+            vec![ReconfigureEvent { t: 100, requested_at: 92, config: cfg }]
+        );
+        // The new interval governs subsequent cuts: next at t=120.
+        let committed_at_110 = {
+            run(&mut sim, 110);
+            sim.total_committed()
+        };
+        run(&mut sim, 119);
+        assert_eq!(sim.total_committed().to_bits(), committed_at_110.to_bits());
+        run(&mut sim, 120);
+        assert!(sim.total_committed() > committed_at_110);
+        sim.check_invariants();
+    }
+
+    #[test]
+    fn runtime_config_fingerprint_quantizes_at_deciseconds() {
+        let base = RuntimeConfig {
+            checkpoint_interval: 10,
+            backpressure_secs: 5.0,
+            queue_bound_secs: Vec::new(),
+        };
+        let same_cell = RuntimeConfig { backpressure_secs: 4.96, ..base.clone() };
+        let other_cell = RuntimeConfig { backpressure_secs: 5.1, ..base.clone() };
+        let other_interval = RuntimeConfig { checkpoint_interval: 20, ..base.clone() };
+        let with_bound = RuntimeConfig { queue_bound_secs: vec![0.0, 3.0], ..base.clone() };
+        assert_eq!(base.fingerprint(), same_cell.fingerprint());
+        assert_ne!(base.fingerprint(), other_cell.fingerprint());
+        assert_ne!(base.fingerprint(), other_interval.fingerprint());
+        assert_ne!(base.fingerprint(), with_bound.fingerprint());
+        // Per-stage fallback semantics: ≤ 0 or missing → the default.
+        crate::assert_close!(with_bound.bound_secs_for(0), 5.0, atol = 0.0);
+        crate::assert_close!(with_bound.bound_secs_for(1), 3.0, atol = 0.0);
+        crate::assert_close!(with_bound.bound_secs_for(7), 5.0, atol = 0.0);
+    }
+
+    #[test]
+    fn queue_bound_shrink_clamps_allowance_and_preserves_inflight() {
+        // Choked count stage (cf. staged_bottleneck_backpressures_to_the_
+        // source): its input queue sits near the 5 s default bound. A
+        // shrink to 1 s must not truncate the ring — occupancy drains
+        // through the normal serve path while intake is throttled — and
+        // per-stage flow conservation must hold at every tick.
+        let mut sim = staged_sim(20_000.0, 4, 42);
+        sim.request_rescale_stages(&[4, 4, 1, 4]);
+        run(&mut sim, 400);
+        let before = sim.stage_flow(2).queue_backlog;
+        assert!(before > 100_000.0, "bottleneck queue never filled: {before}");
+        let cfg = RuntimeConfig {
+            backpressure_secs: 1.0,
+            ..sim.runtime_config().clone()
+        };
+        assert!(sim.request_reconfigure(cfg));
+        let mut peak_after = 0.0f64;
+        for t in 401..=700 {
+            sim.step(t);
+            peak_after = peak_after.max(sim.stage_flow(2).queue_backlog);
+            sim.check_invariants();
+        }
+        // Nothing was dropped at the shrink (conservation is re-checked
+        // every tick above) and the queue never grew past its pre-shrink
+        // level; by the end it sits near the tighter 1 s bound.
+        assert!(peak_after <= before * 1.05, "queue grew after shrink: {peak_after} vs {before}");
+        let after = sim.stage_flow(2).queue_backlog;
+        assert!(after < 0.4 * before, "queue did not drain toward the tighter bound: {after}");
+        // Backpressure moved the standing mass upstream to the source.
+        assert!(sim.source_backlog() > 1_000_000.0);
+    }
+
+    #[test]
+    fn reconfigure_mode_agreement_mid_run() {
+        // Every reconfigure path (interval change, queue-bound shrink and
+        // per-stage grow, backpressure change) mid-run: the event-driven
+        // driver must stay bitwise equal to per-tick stepping. The big
+        // per-path pin lives in tests/invariants.rs; this is the engine's
+        // own smoke of the same contract.
+        let new_cfg = || RuntimeConfig {
+            checkpoint_interval: 25,
+            backpressure_secs: 2.0,
+            queue_bound_secs: vec![0.0, 3.0],
+        };
+        for staged in [false, true] {
+            let mk = || {
+                if staged {
+                    staged_sim(20_000.0, 2, 43)
+                } else {
+                    sim_with(12_000.0, 3, 43)
+                }
+            };
+            let mut a = mk();
+            for t in 0..400 {
+                a.step(t);
+                if t == 150 {
+                    assert!(a.request_reconfigure(new_cfg()));
+                }
+            }
+            let mut b = mk();
+            b.advance_quiet(0, 151);
+            assert!(b.request_reconfigure(new_cfg()));
+            b.advance_quiet(151, 400);
+            assert_eq!(a.latencies(), b.latencies());
+            assert_eq!(a.tsdb(), b.tsdb());
+            assert_eq!(a.total_consumed().to_bits(), b.total_consumed().to_bits());
+            assert_eq!(a.total_backlog().to_bits(), b.total_backlog().to_bits());
+            assert_eq!(a.worker_seconds().to_bits(), b.worker_seconds().to_bits());
+            assert_eq!(a.reconfigure_log, b.reconfigure_log);
+            a.check_invariants();
+            b.check_invariants();
+        }
     }
 
     #[test]

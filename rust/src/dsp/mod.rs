@@ -31,8 +31,8 @@ pub mod worker;
 pub use cluster::{Cluster, Phase};
 pub use faults::{FaultEvent, FaultTimeline};
 pub use engine::{
-    EngineMode, MergePolicy, RescaleEvent, ScalePlan, SimConfig, Simulation, StageFlow,
-    StageModel,
+    EngineMode, MergePolicy, ReconfigureEvent, RescaleEvent, RuntimeConfig, ScalePlan, SimConfig,
+    Simulation, StageFlow, StageModel,
 };
 pub use telemetry::{
     CorruptionKind, SeriesPattern, TelemetryFaultEvent, TelemetryFaultTimeline, TelemetryLens,

@@ -339,6 +339,18 @@ impl StageQueue {
         self.len() == 0
     }
 
+    /// Free space (tuples) under a bound of `bound_mass` tuples — the
+    /// queue-side arithmetic of a backpressure bound change on a live
+    /// ring. Bounds are *never* stored in the queue: the engine enforces
+    /// them purely through intake allowances
+    /// (`engine::Simulation::stage_allowance`), so shrinking a bound
+    /// below the current occupancy mutates nothing here — this floors at
+    /// zero (intake fully throttled) while the buffered mass drains
+    /// through the normal serve path.
+    pub fn free_under(&self, bound_mass: f64) -> f64 {
+        (bound_mass - self.mass()).max(0.0)
+    }
+
     /// Drop all buffered mass.
     pub fn clear(&mut self) {
         match self {
@@ -480,6 +492,32 @@ mod tests {
             let (a, _) = drain(&mut q, f64::MAX);
             let (b, _) = drain(&mut snap, f64::MAX);
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn bound_changes_on_live_rings_are_pure_arithmetic() {
+        // A queue-bound change (RuntimeConfig reconfigure) never touches the
+        // ring: free_under is derived from mass() alone, shrinks floor at
+        // zero instead of truncating, and the buffered chunks stay intact.
+        for policy in [QueuePolicy::BucketRing, QueuePolicy::Chunked] {
+            let mut q = StageQueue::new(policy);
+            for k in 0..20u64 {
+                q.push(k as f64 + 0.5, 50.0);
+            }
+            let mass_before = q.mass();
+            crate::assert_close!(q.free_under(1500.0), 500.0, atol = 1e-9);
+            // Shrink below occupancy: intake clamps to zero, mass preserved.
+            crate::assert_close!(q.free_under(200.0), 0.0, atol = 1e-12);
+            crate::assert_close!(q.mass(), mass_before, atol = 1e-12);
+            let (out, _) = drain(&mut q, f64::MAX);
+            assert_eq!(out.len(), 20);
+            crate::assert_close!(
+                out.iter().map(|c| c.amount).sum::<f64>(),
+                mass_before,
+                rtol = 1e-12,
+                atol = 1e-9
+            );
         }
     }
 

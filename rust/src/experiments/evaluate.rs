@@ -208,6 +208,24 @@ pub fn paper_sections() -> Vec<SectionSpec> {
             "daedalus-unguarded",
         ),
         s(
+            "multi-config",
+            "Multi-configuration optimization (Demeter-class)",
+            "Daedalus with the runtime-config co-optimizer: `demeter` tunes \
+             the checkpoint interval and queue bounds alongside parallelism \
+             (longer intervals on stable plateaus, shorter ahead of forecast \
+             surges, tighter bounds on p95 drift), applying each change at \
+             the next consistent cut. `daedalus` is the same controller \
+             restricted to scale-out only — the `vs daedalus` column prices \
+             the config dimension; `reconfigs` counts applied changes.",
+            &[
+                "flink-wordcount-bottleneck-shift",
+                "flink-wordcount-diurnal-week",
+            ],
+            &["demeter", "daedalus", "static-12"],
+            "demeter",
+            "daedalus",
+        ),
+        s(
             "stress",
             "Stress shapes beyond the paper",
             "Flash-crowd, diurnal-drift and outage-backfill traces probe \
@@ -429,17 +447,17 @@ impl Evaluation {
         let mut out = String::new();
         out.push_str(&format!("## {}\n\n{}\n\n", sec.spec.title, sec.spec.blurb));
         out.push_str(&format!(
-            "| scenario | approach | mean ms | p95 ms | p99 ms | SLO viol % | avg workers | worker-s | vs {} | rescales | worst rec s | retries | dropped |\n",
+            "| scenario | approach | mean ms | p95 ms | p99 ms | SLO viol % | avg workers | worker-s | vs {} | rescales | reconfigs | worst rec s | retries | dropped |\n",
             sec.spec.baseline
         ));
-        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for row in &sec.rows {
             let vs = match sec.vs_baseline_pct(row) {
                 Some(pct) => format!("{pct:+.1}%"),
                 None => "-".into(),
             };
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
                 row.scenario,
                 row.approach,
                 f(row.avg_latency_ms(), 0),
@@ -450,6 +468,7 @@ impl Evaluation {
                 f(row.worker_seconds, 0),
                 vs,
                 f(row.rescales, 1),
+                f(row.reconfigs, 1),
                 fmt_recovery(row),
                 f(row.restart_retries, 1),
                 f(row.dropped_rescales, 1),
@@ -543,8 +562,8 @@ impl Evaluation {
         let mut out = String::from(
             "section,scenario,approach,seeds,mean_latency_ms,p95_ms,p99_ms,max_ms,\
              slo_violation_frac,avg_workers,worker_seconds,profiling_worker_seconds,\
-             total_worker_seconds,reduction_vs_baseline_pct,rescales,lag_max,recovery_max_s,\
-             restart_retries,dropped_rescales\n",
+             total_worker_seconds,reduction_vs_baseline_pct,rescales,reconfigs,lag_max,\
+             recovery_max_s,restart_retries,dropped_rescales\n",
         );
         for sec in &self.sections {
             for row in &sec.rows {
@@ -561,7 +580,7 @@ impl Evaluation {
                     Some(_) => "inf".into(),
                 };
                 out.push_str(&format!(
-                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                     sec.spec.id,
                     row.scenario,
                     row.approach,
@@ -577,6 +596,7 @@ impl Evaluation {
                     f(row.total_worker_seconds(), 1),
                     reduction,
                     f(row.rescales, 2),
+                    f(row.reconfigs, 2),
                     f(row.lag_max, 1),
                     rec,
                     f(row.restart_retries, 2),
@@ -637,8 +657,9 @@ impl Evaluation {
                      \"slo_violation_frac\":{},\"avg_workers\":{},\
                      \"worker_seconds\":{},\"profiling_worker_seconds\":{},\
                      \"reduction_vs_baseline_pct\":{},\"rescales\":{},\
-                     \"lag_max\":{},\"recovery_max_s\":{},\"recovered_all\":{},\
-                     \"restart_retries\":{},\"dropped_rescales\":{}}}",
+                     \"reconfigs\":{},\"lag_max\":{},\"recovery_max_s\":{},\
+                     \"recovered_all\":{},\"restart_retries\":{},\
+                     \"dropped_rescales\":{}}}",
                     row.scenario,
                     row.approach,
                     row.seeds,
@@ -651,6 +672,7 @@ impl Evaluation {
                     jf(row.profiling_worker_seconds, 1),
                     reduction,
                     jf(row.rescales, 2),
+                    jf(row.reconfigs, 2),
                     jf(row.lag_max, 1),
                     rec,
                     row.recovered_all(),
@@ -739,6 +761,7 @@ mod tests {
             recovery_secs: vec![30.0, 60.0],
             dropped_rescales: 1.5,
             restart_retries: 0.5,
+            reconfigs: 2.5,
         }
     }
 
@@ -845,6 +868,7 @@ mod tests {
         let mut lines = csv.trim().lines();
         let header = lines.next().unwrap();
         assert!(header.contains("reduction_vs_baseline_pct"));
+        assert!(header.contains("reconfigs"));
         assert_eq!(lines.count(), 3);
         assert!(csv.contains("66.667"));
 
@@ -867,6 +891,11 @@ mod tests {
             rtol = 1e-6
         );
         assert!(rows[0].get("recovered_all").unwrap().as_bool().unwrap());
+        crate::assert_close!(
+            rows[0].get("reconfigs").unwrap().as_f64().unwrap(),
+            2.5,
+            rtol = 1e-6
+        );
     }
 
     #[test]

@@ -76,6 +76,9 @@ mod tests {
                 lag_max: 0.0,
                 slo_violation_frac: 0.0,
                 recovery_secs: Vec::new(),
+                dropped_rescales: 0.0,
+                restart_retries: 0.0,
+                reconfigs: 0.0,
             }],
         };
         let tmp = std::env::temp_dir().join("daedalus-test-results");

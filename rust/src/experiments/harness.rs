@@ -15,8 +15,8 @@
 use anyhow::{anyhow, bail};
 
 use crate::autoscaler::{
-    phoebe::profiler, Autoscaler, Daedalus, DaedalusConfig, Ds2, Ds2Config, Hpa, HpaConfig,
-    Phoebe, PhoebeConfig, Static,
+    phoebe::profiler, Autoscaler, Daedalus, DaedalusConfig, Demeter, DemeterConfig, Ds2,
+    Ds2Config, Hpa, HpaConfig, Phoebe, PhoebeConfig, Static,
 };
 use crate::clock::Timestamp;
 use crate::dsp::{
@@ -36,6 +36,9 @@ use super::scenarios::trace::RunTrace;
 pub enum Approach {
     /// The paper's MAPE-K autoscaler.
     Daedalus(DaedalusConfig),
+    /// Daedalus plus runtime-config co-optimization (checkpoint interval,
+    /// queue bounds) via [`Autoscaler::decide_reconfigure`].
+    Demeter(DaedalusConfig),
     /// Kubernetes HPA at the given CPU target (fraction).
     Hpa(f64),
     /// Fixed parallelism (the static baseline).
@@ -57,6 +60,7 @@ impl Approach {
         match self {
             Approach::Daedalus(cfg) if !cfg.hardened => "daedalus-unguarded".into(),
             Approach::Daedalus(_) => "daedalus".into(),
+            Approach::Demeter(_) => "demeter".into(),
             Approach::Hpa(t) => format!("hpa-{:02.0}", t * 100.0),
             Approach::Static(n) => format!("static-{n}"),
             Approach::Phoebe(..) => "phoebe".into(),
@@ -78,6 +82,13 @@ impl Approach {
                 ..DaedalusConfig::default()
             };
             return Ok(Approach::Daedalus(cfg));
+        }
+        if s == "demeter" {
+            let cfg = DaedalusConfig {
+                recovery_target,
+                ..DaedalusConfig::default()
+            };
+            return Ok(Approach::Demeter(cfg));
         }
         if s == "phoebe" {
             let cfg = PhoebeConfig {
@@ -108,7 +119,7 @@ impl Approach {
         }
         Err(anyhow!(
             "unknown approach {s:?} \
-             (daedalus|daedalus-unguarded|hpa-<pct>|static-<n>|phoebe|ds2|ds2-job)"
+             (daedalus|daedalus-unguarded|demeter|hpa-<pct>|static-<n>|phoebe|ds2|ds2-job)"
         ))
     }
 }
@@ -276,6 +287,16 @@ impl Experiment {
                 Box::new(Daedalus::new(cfg.clone(), self.backend.clone())),
                 0.0,
             ),
+            Approach::Demeter(cfg) => {
+                let dcfg = DemeterConfig {
+                    slo_ms: self.slo_ms,
+                    ..DemeterConfig::default()
+                };
+                (
+                    Box::new(Demeter::new(cfg.clone(), dcfg, self.backend.clone())),
+                    0.0,
+                )
+            }
             Approach::Hpa(target) => (
                 Box::new(Hpa::new(HpaConfig::at_target(*target, self.max_replicas))),
                 0.0,
@@ -386,6 +407,13 @@ impl Experiment {
                 }
                 sim.request_rescale_plan(&plan);
             }
+            // Runtime-config co-optimization: the scaler may stage a
+            // reconfigure alongside (or instead of) a rescale; it takes
+            // effect at the engine's next consistent cut. Called at the
+            // same ticks in both engine modes.
+            if let Some(config) = scaler.decide_reconfigure(&sim.view()) {
+                sim.request_reconfigure(config);
+            }
             sample(&sim, t, &mut parallelism_series, &mut trace);
             let mut next = t + 1;
             // Event-driven driver: while the deployment is steady, skip
@@ -418,6 +446,13 @@ impl Experiment {
                 if let Some(f) = sim.next_telemetry_boundary(t) {
                     horizon = horizon.min(f);
                 }
+                // Advisory bound: a staged reconfigure applies at the next
+                // consistent cut — don't span across it (the engine's span
+                // tiers refuse pending configs anyway; this keeps the
+                // harness from asking).
+                if let Some(f) = sim.next_reconfigure_boundary(t) {
+                    horizon = horizon.min(f);
+                }
                 // Decision-spanning no-op skip: bound the span by the
                 // scaler's next possible action only when it cannot prove
                 // its skipped `decide` calls over the span are pure
@@ -438,6 +473,9 @@ impl Experiment {
         }
         for ev in &sim.rescale_log {
             trace.record_rescale(ev);
+        }
+        for ev in &sim.reconfigure_log {
+            trace.record_reconfigure(ev);
         }
         let db = sim.tsdb();
         let lag_max = db
@@ -474,6 +512,7 @@ impl Experiment {
             recovery_secs,
             dropped_rescales: sim.dropped_rescales(),
             restart_retries: sim.restart_retries(),
+            reconfigs: sim.reconfigure_log.len(),
         };
         trace.dropped_rescales = sim.dropped_rescales();
         (result, trace)
@@ -545,6 +584,9 @@ pub struct RunResult {
     /// Restart attempts that failed and were retried under backoff
     /// (crash-loop faults).
     pub restart_retries: u64,
+    /// Runtime-config changes applied at consistent cuts over the run
+    /// (config-aware approaches only; 0 for everything else).
+    pub reconfigs: usize,
 }
 
 /// Results pooled over seeds for one approach.
@@ -575,6 +617,8 @@ pub struct ApproachResult {
     pub dropped_rescales: f64,
     /// Mean count over seeds of crash-loop restart retries.
     pub restart_retries: f64,
+    /// Mean count over seeds of runtime-config changes applied.
+    pub reconfigs: f64,
 }
 
 impl ApproachResult {
@@ -593,6 +637,7 @@ impl ApproachResult {
             recovery_secs: Vec::new(),
             dropped_rescales: 0.0,
             restart_retries: 0.0,
+            reconfigs: 0.0,
         }
     }
 
@@ -613,6 +658,7 @@ impl ApproachResult {
         self.recovery_secs.extend(run.recovery_secs);
         self.dropped_rescales += run.dropped_rescales as f64;
         self.restart_retries += run.restart_retries as f64;
+        self.reconfigs += run.reconfigs as f64;
         if self.parallelism_series.is_empty() {
             self.parallelism_series = run.parallelism_series;
         }
@@ -628,6 +674,7 @@ impl ApproachResult {
         self.slo_violation_frac /= r;
         self.dropped_rescales /= r;
         self.restart_retries /= r;
+        self.reconfigs /= r;
     }
 
     /// Mean end-to-end latency (ms).
@@ -751,6 +798,7 @@ mod tests {
             assert_eq!(a.rescales, b.rescales);
             assert_eq!(a.dropped_rescales, b.dropped_rescales);
             assert_eq!(a.restart_retries, b.restart_retries);
+            assert_eq!(a.reconfigs, b.reconfigs);
         }
     }
 }

@@ -151,6 +151,9 @@ mod tests {
                 lag_max: 0.0,
                 slo_violation_frac: 0.25,
                 recovery_secs: vec![45.0],
+                dropped_rescales: 0.0,
+                restart_retries: 0.0,
+                reconfigs: 0.0,
             }
         };
         ExperimentResult {

@@ -477,6 +477,21 @@ impl ScenarioRegistry {
             // faults-smoke job drives it truncated through the real CLI.
             s(Flink, WordCount, DiurnalMonth, FailurePlan::Chaos),
         ];
+        // Demeter-class multi-config cells: the canonical staged
+        // bottleneck-shift and week-scale diurnal cells also enroll the
+        // runtime-config co-optimizer, so the `multi-config` report
+        // section can price the config dimension against scale-out-only
+        // Daedalus and the registry-wide mode pin covers reconfiguration.
+        for name in [
+            "flink-wordcount-bottleneck-shift",
+            "flink-wordcount-diurnal-week",
+        ] {
+            let sc = scenarios
+                .iter_mut()
+                .find(|s| s.name == name)
+                .expect("demeter cell must exist in the builtin matrix");
+            sc.approaches.push("demeter".into());
+        }
         // Telemetry-chaos cells (dsp::telemetry taxonomy): a metric
         // blackout through the flash-crowd surge, a 5-minute scrape lag on
         // the week-scale staged cell, and a seeded corruption storm with a
@@ -627,6 +642,38 @@ mod tests {
         let exp = bs.to_experiment().unwrap();
         assert_eq!(exp.stage_model, StageModel::Staged);
         assert!(exp.selectivity_drift.is_some());
+    }
+
+    #[test]
+    fn demeter_cells_carry_the_multi_config_arm() {
+        let reg = ScenarioRegistry::builtin(7_200, &[1]);
+        for name in [
+            "flink-wordcount-bottleneck-shift",
+            "flink-wordcount-diurnal-week",
+        ] {
+            let sc = reg.get(name).expect(name);
+            assert!(
+                sc.approaches.contains(&"demeter".to_string()),
+                "{name} lost the multi-config arm"
+            );
+            assert_eq!(sc.stage_model, StageModel::Staged, "{name}");
+        }
+        // The chaos twins and the fused paper cells stay scale-out-only,
+        // so their golden traces are untouched by the demeter enrollment.
+        for name in [
+            "flink-wordcount-bottleneck-shift-chaos",
+            "flink-wordcount-diurnal-week-grayweek",
+            "flink-wordcount-sine",
+        ] {
+            assert!(
+                !reg
+                    .get(name)
+                    .unwrap()
+                    .approaches
+                    .contains(&"demeter".to_string()),
+                "{name} unexpectedly enrolls demeter"
+            );
+        }
     }
 
     #[test]

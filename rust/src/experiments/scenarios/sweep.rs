@@ -145,6 +145,8 @@ pub struct SweepRunResult {
     pub dropped_rescales: u64,
     /// Crash-loop restart attempts that failed and were retried.
     pub restart_retries: u64,
+    /// Runtime-config changes applied at consistent cuts over the run.
+    pub reconfigs: usize,
 }
 
 /// Aggregated sweep output, in deterministic unit order.
@@ -185,6 +187,8 @@ pub struct PooledSummary {
     pub dropped_rescales: f64,
     /// Mean count of crash-loop restart retries.
     pub restart_retries: f64,
+    /// Mean count of runtime-config changes applied.
+    pub reconfigs: f64,
 }
 
 impl PooledSummary {
@@ -260,6 +264,7 @@ pub fn run_unit(
         recovery_secs: run.recovery_secs,
         dropped_rescales: run.dropped_rescales,
         restart_retries: run.restart_retries,
+        reconfigs: run.reconfigs,
     })
 }
 
@@ -320,6 +325,7 @@ impl SweepReport {
                     recovery_secs: Vec::new(),
                     dropped_rescales: 0.0,
                     restart_retries: 0.0,
+                    reconfigs: 0.0,
                 });
             }
             let p = out.last_mut().expect("row pushed above");
@@ -334,6 +340,7 @@ impl SweepReport {
             p.recovery_secs.extend(r.recovery_secs.iter().copied());
             p.dropped_rescales += r.dropped_rescales as f64;
             p.restart_retries += r.restart_retries as f64;
+            p.reconfigs += r.reconfigs as f64;
         }
         for p in &mut out {
             let n = p.seeds.max(1) as f64;
@@ -344,6 +351,7 @@ impl SweepReport {
             p.slo_violation_frac /= n;
             p.dropped_rescales /= n;
             p.restart_retries /= n;
+            p.reconfigs /= n;
         }
         out
     }

@@ -21,7 +21,7 @@
 //!   path) while the in-process double-run check holds everywhere.
 
 use crate::clock::Timestamp;
-use crate::dsp::RescaleEvent;
+use crate::dsp::{ReconfigureEvent, RescaleEvent};
 use crate::util::Fnv64;
 
 /// One sampled tick.
@@ -52,6 +52,21 @@ pub struct TraceEvent {
     pub failure: bool,
 }
 
+/// One runtime-config change applied at a consistent cut (ISSUE 10).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceReconfigure {
+    /// Cut time the config took effect at.
+    pub t: Timestamp,
+    /// Tick the reconfigure was requested at.
+    pub requested_at: Timestamp,
+    /// Applied checkpoint interval (s).
+    pub checkpoint_interval: u64,
+    /// Applied default queue bound (s), quantized to 1/1000.
+    pub backpressure_secs: f64,
+    /// Applied per-stage bound overrides (s), quantized to 1/1000.
+    pub queue_bound_secs: Vec<f64>,
+}
+
 /// The deterministic trace of one `(scenario, approach, seed)` run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunTrace {
@@ -65,6 +80,8 @@ pub struct RunTrace {
     pub points: Vec<TracePoint>,
     /// Rescale/failure events, in log order.
     pub events: Vec<TraceEvent>,
+    /// Runtime-config changes, in application order (part of the digest).
+    pub reconfigures: Vec<TraceReconfigure>,
     /// Rescale plans the engine refused because a restart was in flight
     /// (filled by the harness at the end of the run; part of the digest).
     pub dropped_rescales: u64,
@@ -94,6 +111,7 @@ impl RunTrace {
             seed,
             points: Vec::new(),
             events: Vec::new(),
+            reconfigures: Vec::new(),
             dropped_rescales: 0,
         }
     }
@@ -119,6 +137,17 @@ impl RunTrace {
         });
     }
 
+    /// Record one runtime-config change from the engine log.
+    pub fn record_reconfigure(&mut self, ev: &ReconfigureEvent) {
+        self.reconfigures.push(TraceReconfigure {
+            t: ev.t,
+            requested_at: ev.requested_at,
+            checkpoint_interval: ev.config.checkpoint_interval,
+            backpressure_secs: q3(ev.config.backpressure_secs),
+            queue_bound_secs: ev.config.queue_bound_secs.iter().map(|&b| q3(b)).collect(),
+        });
+    }
+
     /// Stable digest of the whole trace, as 16 lowercase hex chars.
     pub fn digest(&self) -> String {
         let mut h = Fnv64::new();
@@ -141,6 +170,20 @@ impl RunTrace {
             h.write_u64(e.to as u64);
             write_f64(&mut h, e.downtime_secs);
             h.write_u64(e.failure as u64);
+        }
+        // ISSUE 10: the reconfigure section sits between events and
+        // dropped_rescales; its presence (even empty: one length word)
+        // changed the digest layout, so every golden was re-blessed.
+        h.write_u64(self.reconfigures.len() as u64);
+        for r in &self.reconfigures {
+            h.write_u64(r.t);
+            h.write_u64(r.requested_at);
+            h.write_u64(r.checkpoint_interval);
+            write_f64(&mut h, r.backpressure_secs);
+            h.write_u64(r.queue_bound_secs.len() as u64);
+            for &b in &r.queue_bound_secs {
+                write_f64(&mut h, b);
+            }
         }
         h.write_u64(self.dropped_rescales);
         h.hex()
@@ -174,6 +217,22 @@ impl RunTrace {
             out.push_str(&format!(
                 "[{},{},{},{},{}]",
                 e.t, e.from, e.to, e.downtime_secs, e.failure
+            ));
+        }
+        out.push_str("],\"reconfigures\":[");
+        for (i, r) in self.reconfigures.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let bounds = r
+                .queue_bound_secs
+                .iter()
+                .map(|b| b.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                "[{},{},{},{},[{}]]",
+                r.t, r.requested_at, r.checkpoint_interval, r.backpressure_secs, bounds
             ));
         }
         out.push_str(&format!(
@@ -219,6 +278,40 @@ mod tests {
         let mut d = RunTrace::new("scenario-x", "daedalus", 8);
         d.record(0, 4, 0.0, 150.0);
         assert_ne!(a.digest()[..8], d.digest()[..8]);
+    }
+
+    #[test]
+    fn reconfigure_rows_are_part_of_digest_and_json() {
+        use crate::dsp::RuntimeConfig;
+        let base = sample();
+        let mut with = sample();
+        with.record_reconfigure(&ReconfigureEvent {
+            t: 100,
+            requested_at: 92,
+            config: RuntimeConfig {
+                checkpoint_interval: 20,
+                backpressure_secs: 2.0,
+                queue_bound_secs: vec![0.0, 3.0],
+            },
+        });
+        assert_ne!(base.digest(), with.digest());
+        // Sub-milli bound noise is quantized away like every other float.
+        let mut with2 = sample();
+        with2.record_reconfigure(&ReconfigureEvent {
+            t: 100,
+            requested_at: 92,
+            config: RuntimeConfig {
+                checkpoint_interval: 20,
+                backpressure_secs: 2.000_000_1,
+                queue_bound_secs: vec![0.0, 3.000_000_1],
+            },
+        });
+        assert_eq!(with.digest(), with2.digest());
+        let v = crate::util::json::Json::parse(&with.to_json()).unwrap();
+        let rows = v.get("reconfigures").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].as_arr().unwrap()[0].as_usize().unwrap(), 100);
+        assert_eq!(rows[0].as_arr().unwrap()[2].as_usize().unwrap(), 20);
     }
 
     #[test]

@@ -25,9 +25,11 @@ fn usage() -> ! {
            report [--quick] [--sections a,b|all] [--scenarios x,y] [--duration S]\n\
                   [--seeds a,b] [--threads N] [--out DIR]\n\
                run the paper-style comparison (Daedalus vs static/HPA/DS2/\n\
-               Phoebe, fused + staged engines) over the scenario registry and\n\
-               write REPORT.md + report.csv/json (byte-stable for a fixed\n\
-               selection; default --out results/report)\n\
+               Phoebe, plus the demeter multi-config co-optimizer in the\n\
+               multi-config section, fused + staged engines) over the\n\
+               scenario registry and write REPORT.md + report.csv/json\n\
+               (byte-stable for a fixed selection; default --out\n\
+               results/report)\n\
            figure <id|all> [--quick] [--duration S] [--seeds a,b,c] [--backend artifact|native]\n\
                regenerate a paper figure (fig2..fig5 probe the substrate;\n\
                fig7..fig11 are adapters over the report sections)\n\
@@ -46,7 +48,9 @@ fn usage() -> ! {
                run the scenario matrix in parallel (native backend) and print\n\
                pooled QoS/resource summaries plus golden-trace digests; the\n\
                bottleneck-shift / skew-amplify cells run the staged engine\n\
-               (per-operator replica sets; ds2 scales stage vectors)\n\
+               (per-operator replica sets; ds2 scales stage vectors);\n\
+               approaches include demeter, which co-optimizes runtime\n\
+               configs (checkpoint interval, queue bounds) with parallelism\n\
            bench [--out BENCH_micro.json] [--smoke] [--filter substr]\n\
                  [--check tracked.json] [--strict]\n\
                run the micro-bench registry (before/after pairs vs the\n\

@@ -69,7 +69,9 @@
 
 use std::time::{Duration, Instant};
 
-use crate::autoscaler::{Autoscaler, Daedalus, DaedalusConfig, Ds2, Ds2Config};
+use crate::autoscaler::{
+    Autoscaler, Daedalus, DaedalusConfig, Demeter, DemeterConfig, Ds2, Ds2Config,
+};
 use crate::dsp::{
     EngineProfile, MergePolicy, QueuePolicy, SimConfig, Simulation, StageModel, TelemetryLens,
 };
@@ -576,6 +578,43 @@ pub fn run_micro(opts: &BenchOpts) -> Vec<BenchResult> {
             sim.avg_workers()
         },
     );
+
+    // Multi-config planning on the staged engine: scale-out-only Daedalus
+    // vs the demeter co-optimizer, same deployment and cadence. The pair
+    // prices the config-dimension machinery (heuristics, config-keyed
+    // ledger reads, consistent-cut reconfiguration) on top of the
+    // identical MAPE-K loop — demeter is expected close to parity, not
+    // faster; the entry exists so regressions in the reconfigure path
+    // show up in the trajectory.
+    r.run_ticks("plan_1h_daedalus", None, 3, 3_600, || {
+        let mut sim = sim_1h_staged(QueuePolicy::BucketRing);
+        let mut d = Daedalus::new(DaedalusConfig::default(), ComputeBackend::native());
+        for t in 0..3_600 {
+            sim.step(t);
+            if let Some(plan) = d.decide_plan(&sim.view()) {
+                sim.request_rescale_plan(&plan);
+            }
+        }
+        sim.avg_workers()
+    });
+    r.run_ticks("plan_1h_demeter", Some("plan_1h_daedalus"), 3, 3_600, || {
+        let mut sim = sim_1h_staged(QueuePolicy::BucketRing);
+        let mut d = Demeter::new(
+            DaedalusConfig::default(),
+            DemeterConfig::default(),
+            ComputeBackend::native(),
+        );
+        for t in 0..3_600 {
+            sim.step(t);
+            if let Some(plan) = d.decide_plan(&sim.view()) {
+                sim.request_rescale_plan(&plan);
+            }
+            if let Some(config) = d.decide_reconfigure(&sim.view()) {
+                sim.request_reconfigure(config);
+            }
+        }
+        sim.avg_workers()
+    });
 
     // ECDF: pool 1M weighted samples and take the paper's quantiles. The
     // exact sample-retaining implementation is the reference; the

@@ -139,6 +139,30 @@ fn telemetry_cells_stay_in_the_registry_wide_bitwise_pin() {
     }
 }
 
+/// The demeter multi-config cells must stay in the registry for the same
+/// reason: the registry-wide pin's coverage of the reconfiguration path —
+/// runtime-config proposals issued on the planning cadence, staged
+/// through `request_reconfigure`, and applied at consistent cuts under
+/// both engine drivers — rests on these cells carrying the `demeter`
+/// arm.
+#[test]
+fn demeter_cells_stay_in_the_registry_wide_bitwise_pin() {
+    let reg = ScenarioRegistry::builtin(900, &[3]);
+    for name in [
+        "flink-wordcount-bottleneck-shift",
+        "flink-wordcount-diurnal-week",
+    ] {
+        let scenario = reg.get(name).unwrap_or_else(|| {
+            panic!("{name} missing: the registry-wide pin lost its reconfiguration coverage")
+        });
+        let exp = scenario.to_experiment().unwrap();
+        assert!(
+            exp.approaches.iter().any(|a| a.label() == "demeter"),
+            "{name}: cell lost its multi-config arm"
+        );
+    }
+}
+
 /// Every telemetry fault class, with the hardened Daedalus *and* its
 /// unguarded ablation in the loop, on a fused and a staged cell: the
 /// harness folds telemetry boundaries into the quiet-span horizon as

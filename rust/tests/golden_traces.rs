@@ -54,6 +54,25 @@
 //! (`tests/invariants.rs::conservation_and_mode_agreement_under_every_typed_fault`
 //! and the chaos cells in the registry-wide `tests/event_driven.rs` pin).
 //!
+//! ## Goldens re-blessed for the runtime-config subsystem (PR 10)
+//!
+//! The trace digest grew a section: the `reconfigure` event class
+//! (`RunTrace::reconfigures` — runtime-config changes applied at
+//! consistent cuts) is folded into the FNV stream between the event list
+//! and `dropped_rescales`. The section's length word is written even when
+//! empty, so *every* digest changes even where behavior did not — the
+//! same deliberate layout policy as PR 7's `dropped_rescales` field.
+//! Behavior itself is unchanged for every pre-existing approach: no
+//! scale-out-only autoscaler issues reconfigure requests, and the engine
+//! starts from `RuntimeConfig::from_profile`, bit-identical to the
+//! pre-reconfigure knobs. Digest files are not committed (fresh checkouts
+//! self-bless), so the re-bless is this note plus the reconfiguration
+//! mode-agreement pin
+//! (`tests/invariants.rs::conservation_and_mode_agreement_under_reconfiguration`).
+//! The new `demeter-*` goldens pin the multi-config co-optimizer's
+//! observable behavior — parallelism plans *and* applied configs — on its
+//! two canonical cells from its first release.
+//!
 //! ## How the pinning works
 //!
 //! Each test runs its canonical `(scenario, approach, seed)` unit and
@@ -200,4 +219,26 @@ fn golden_trace_staged_phoebe() {
 #[test]
 fn golden_trace_staged_static() {
     check_staged_golden("static-6");
+}
+
+// Demeter goldens on its two canonical multi-config cells: the digests
+// pin the co-optimized runs — parallelism plans plus the `reconfigure`
+// trace section (applied configs, consistent-cut timestamps).
+
+#[test]
+fn golden_trace_demeter_bottleneck_shift() {
+    check_golden_on(
+        "flink-wordcount-bottleneck-shift",
+        "demeter",
+        "demeter-bottleneck-shift",
+    );
+}
+
+#[test]
+fn golden_trace_demeter_diurnal_week() {
+    check_golden_on(
+        "flink-wordcount-diurnal-week",
+        "demeter",
+        "demeter-diurnal-week",
+    );
 }

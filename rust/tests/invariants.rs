@@ -577,6 +577,140 @@ fn conservation_and_mode_agreement_under_every_typed_fault() {
     }
 }
 
+/// Every reconfiguration path — checkpoint-interval change, queue-bound
+/// grow, queue-bound shrink (mid-backlog: clamps to current occupancy and
+/// throttles upstream, never drops in-flight mass), backpressure change —
+/// on both stage models, driven per-tick and through `advance_quiet`:
+/// the two drivers must agree *bitwise* (configs apply at the next
+/// consistent cut, which both drivers reach through `begin_tick`/
+/// `complete_checkpoint`; `next_reconfigure_boundary` is purely
+/// advisory), flow must stay conserved through the applied change, and
+/// every request must land in the `reconfigure_log` exactly once with
+/// the consistent-cut semantics (`t >= requested_at`, applied config
+/// matches the request).
+#[test]
+fn conservation_and_mode_agreement_under_reconfiguration() {
+    use daedalus::dsp::RuntimeConfig;
+
+    let configs: Vec<(&str, RuntimeConfig)> = vec![
+        (
+            "checkpoint-interval",
+            RuntimeConfig {
+                checkpoint_interval: 4,
+                backpressure_secs: 5.0,
+                queue_bound_secs: Vec::new(),
+            },
+        ),
+        (
+            "queue-bound-grow",
+            RuntimeConfig {
+                checkpoint_interval: 10,
+                backpressure_secs: 5.0,
+                queue_bound_secs: vec![0.0, 20.0, 20.0],
+            },
+        ),
+        (
+            "queue-bound-shrink",
+            RuntimeConfig {
+                checkpoint_interval: 10,
+                backpressure_secs: 5.0,
+                queue_bound_secs: vec![0.0, 0.5, 0.5],
+            },
+        ),
+        (
+            "backpressure",
+            RuntimeConfig {
+                checkpoint_interval: 10,
+                backpressure_secs: 1.5,
+                queue_bound_secs: Vec::new(),
+            },
+        ),
+    ];
+    let duration = 900u64;
+    for (tag, config) in &configs {
+        for staged in [false, true] {
+            let build = || {
+                Simulation::new(SimConfig {
+                    partitions: 24,
+                    // Underprovisioned on the staged pipeline so the
+                    // inter-stage queues carry real mass when the shrink
+                    // lands mid-backlog.
+                    initial_replicas: if staged { 2 } else { 4 },
+                    seed: 47,
+                    rate_noise: 0.02,
+                    stage_model: if staged {
+                        StageModel::Staged
+                    } else {
+                        StageModel::Fused
+                    },
+                    ..SimConfig::base(
+                        EngineProfile::flink(),
+                        JobProfile::wordcount(),
+                        ShapeKind::Sine.build(14_000.0, duration, 47),
+                    )
+                })
+            };
+            let mut per_tick = build();
+            let mut event = build();
+            for t in 0..duration {
+                per_tick.step(t);
+                if t == 299 {
+                    assert!(per_tick.request_reconfigure(config.clone()), "{tag}");
+                }
+            }
+            event.advance_quiet(0, 300);
+            assert!(event.request_reconfigure(config.clone()), "{tag}");
+            event.advance_quiet(300, duration);
+            let what = format!("{tag} staged={staged}");
+            assert_eq!(per_tick.latencies(), event.latencies(), "{what}: latencies");
+            assert!(per_tick.tsdb() == event.tsdb(), "{what}: tsdb diverged");
+            assert_eq!(
+                per_tick.total_consumed().to_bits(),
+                event.total_consumed().to_bits(),
+                "{what}: consumed"
+            );
+            assert_eq!(
+                per_tick.total_backlog().to_bits(),
+                event.total_backlog().to_bits(),
+                "{what}: backlog"
+            );
+            assert_eq!(
+                per_tick.worker_seconds().to_bits(),
+                event.worker_seconds().to_bits(),
+                "{what}: worker-seconds"
+            );
+            assert_eq!(
+                per_tick.reconfigure_log, event.reconfigure_log,
+                "{what}: reconfigure log"
+            );
+
+            // Consistent-cut semantics: the request landed exactly once,
+            // at or after the request tick, with the requested config.
+            assert_eq!(per_tick.reconfigure_log.len(), 1, "{what}: applications");
+            let ev = &per_tick.reconfigure_log[0];
+            assert_eq!(ev.requested_at, 299, "{what}: request tick");
+            assert!(ev.t >= 299, "{what}: applied before the request");
+            assert_eq!(&ev.config, config, "{what}: applied config");
+            assert_eq!(per_tick.runtime_config(), config, "{what}: active config");
+            assert!(per_tick.pending_reconfigure().is_none(), "{what}: still pending");
+
+            // Flow conservation with the new configuration active — the
+            // shrink path in particular must not have dropped in-flight
+            // queue mass.
+            if staged {
+                let topo = JobProfile::wordcount().topology();
+                assert_operator_conservation(&per_tick, &topo, None);
+            } else {
+                assert_conservation(&per_tick);
+            }
+            assert!(
+                per_tick.latencies().total_weight() > 0.0,
+                "{what}: no tuples processed"
+            );
+        }
+    }
+}
+
 /// Every telemetry fault class, on both stage models, driven per-tick and
 /// through `advance_quiet`: telemetry faults live entirely on the
 /// autoscaler-facing read path (the [`daedalus::dsp::TelemetryLens`]) and

@@ -278,6 +278,117 @@ fn prop_engine_conservation_under_random_rescales() {
     }
 }
 
+/// Property: any valid sequence of runtime-config actions applied
+/// mid-run — random checkpoint intervals, backpressure bounds, and
+/// per-stage queue-bound overrides (grows and shrinks alike, so bounds
+/// tighten onto live queue mass) — preserves flow conservation on the
+/// fused and the staged engine, with and without a typed fault storm
+/// riding along. `Simulation::check_invariants` pins `upstream emitted
+/// == consumed + queued` for every inter-stage queue, so a reconfigure
+/// that dropped in-flight records would trip it; the reconfigure log is
+/// additionally checked for consistent-cut semantics (each applied
+/// config landed at or after its request, never more applications than
+/// accepted requests).
+#[test]
+fn prop_random_config_sequences_preserve_flow_conservation() {
+    use daedalus::dsp::{
+        EngineProfile, FaultEvent, FaultTimeline, RuntimeConfig, SimConfig, Simulation, StageModel,
+    };
+    use daedalus::jobs::JobProfile;
+    use daedalus::workload::ShapeKind;
+
+    let duration = 1_200u64;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0xC0F6);
+        // Even seeds run under a typed fault storm: a partial crash, a
+        // gray straggler spanning several cuts, and a checkpoint loss
+        // (the replay path) all overlap the random config actions.
+        let faults = if seed % 2 == 0 {
+            FaultTimeline::new(vec![
+                FaultEvent::WorkerCrash { t: 300, k: 2 },
+                FaultEvent::GrayFailure {
+                    from: 500,
+                    to: 800,
+                    worker: 1,
+                    severity: 0.5,
+                },
+                FaultEvent::CheckpointLoss { t: 900 },
+            ])
+        } else {
+            FaultTimeline::default()
+        };
+        for staged in [false, true] {
+            let cfg = SimConfig {
+                partitions: 24,
+                initial_replicas: if staged { 2 } else { 4 },
+                seed,
+                rate_noise: 0.02,
+                faults: faults.clone(),
+                stage_model: if staged {
+                    StageModel::Staged
+                } else {
+                    StageModel::Fused
+                },
+                ..SimConfig::base(
+                    EngineProfile::flink(),
+                    JobProfile::wordcount(),
+                    ShapeKind::Sine.build(14_000.0, duration, seed),
+                )
+            };
+            let mut sim = Simulation::new(cfg);
+            let mut accepted = 0usize;
+            for t in 0..duration {
+                sim.step(t);
+                // ~1 config action / 50 s, always inside the valid
+                // domain; a zero per-stage entry falls back to the
+                // default bound, small entries force mid-backlog shrinks.
+                if rng.below(50) == 0 {
+                    let n_bounds = rng.below(4) as usize;
+                    let config = RuntimeConfig {
+                        checkpoint_interval: 1 + rng.below(30),
+                        backpressure_secs: rng.range(0.5, 12.0),
+                        queue_bound_secs: (0..n_bounds).map(|_| rng.range(0.0, 8.0)).collect(),
+                    };
+                    assert!(config.is_valid(), "generator left the valid domain");
+                    if sim.request_reconfigure(config) {
+                        accepted += 1;
+                    }
+                }
+                if t % 200 == 0 {
+                    sim.check_invariants();
+                }
+            }
+            sim.check_invariants();
+            let what = format!("seed {seed} staged={staged}");
+            // Consistent-cut bookkeeping: a request may be superseded
+            // while pending, but never applied twice or retroactively.
+            let pending = usize::from(sim.pending_reconfigure().is_some());
+            assert!(
+                sim.reconfigure_log.len() + pending <= accepted,
+                "{what}: {} applications + {pending} pending from {accepted} accepted",
+                sim.reconfigure_log.len()
+            );
+            for ev in &sim.reconfigure_log {
+                assert!(ev.t >= ev.requested_at, "{what}: applied before request");
+                assert!(ev.config.is_valid(), "{what}: invalid config applied");
+            }
+            if !staged {
+                let produced = sim.total_produced();
+                let consumed = sim.total_consumed();
+                let backlog = sim.total_backlog();
+                assert!(
+                    (produced - consumed - backlog).abs() < 1e-6 * produced.max(1.0),
+                    "{what}: produced {produced} != consumed {consumed} + backlog {backlog}"
+                );
+            }
+            assert!(
+                sim.latencies().total_weight() > 0.0,
+                "{what}: no tuples processed"
+            );
+        }
+    }
+}
+
 /// Property: every autoscaler fed an empty or all-None metric window — a
 /// fresh store with no samples, or a populated store hidden behind a
 /// whole-horizon dropout lens — holds (returns no plan) at every tick of
@@ -291,7 +402,8 @@ fn prop_engine_conservation_under_random_rescales() {
 fn prop_every_autoscaler_holds_on_empty_or_all_none_window() {
     use daedalus::autoscaler::phoebe::profile_job;
     use daedalus::autoscaler::{
-        Autoscaler, Daedalus, Ds2, Ds2Config, Hpa, HpaConfig, Phoebe, PhoebeConfig, Static,
+        Autoscaler, Daedalus, Demeter, DemeterConfig, Ds2, Ds2Config, Hpa, HpaConfig, Phoebe,
+        PhoebeConfig, Static,
     };
     use daedalus::dsp::engine::SimView;
     use daedalus::dsp::{EngineProfile, TelemetryFaultEvent, TelemetryFaultTimeline, TelemetryLens};
@@ -339,6 +451,11 @@ fn prop_every_autoscaler_holds_on_empty_or_all_none_window() {
                     hardened: false,
                     ..daedalus::autoscaler::DaedalusConfig::default()
                 },
+                ComputeBackend::native(),
+            )),
+            Box::new(Demeter::new(
+                daedalus::autoscaler::DaedalusConfig::default(),
+                DemeterConfig::default(),
                 ComputeBackend::native(),
             )),
             Box::new(Hpa::new(HpaConfig::at_target(0.8, max_replicas))),
